@@ -1,0 +1,76 @@
+//! File-oriented codec walkthrough: synthesize a scene, write it as PNG,
+//! compress it at several qualities and variants, decompress, and report
+//! the rate/distortion table a codec user cares about.
+//!
+//! ```bash
+//! cargo run --release --example compress_cli [out_dir]
+//! ```
+
+use cordic_dct::codec::{self, decoder, encoder};
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::{synthetic, GrayImage};
+use cordic_dct::metrics;
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "/tmp/cordic-dct-demo".to_string());
+    std::fs::create_dir_all(&out_dir)?;
+
+    let img = synthetic::cablecar_like(512, 480, 7);
+    let src_path = format!("{out_dir}/cablecar.png");
+    img.save(&src_path)?;
+    println!("source: {src_path} ({} raw bytes)", img.pixels());
+    println!(
+        "\n{:<10} {:>8} {:>12} {:>9} {:>10} {:>9}",
+        "variant", "quality", "bytes", "ratio", "PSNR(dB)", "SSIM"
+    );
+
+    for variant in [Variant::Dct, Variant::Cordic] {
+        for quality in [10u8, 50, 90] {
+            let pipe = CpuPipeline::new(variant, quality);
+            let out = pipe.compress(&img);
+            let header = codec::Header {
+                width: img.width as u32,
+                height: img.height as u32,
+                padded_width: out.padded_width as u32,
+                padded_height: out.padded_height as u32,
+                quality,
+                variant: codec::variant_tag(variant),
+            };
+            let bytes = encoder::encode(&header, &out.qcoef)?;
+            let cdc_path = format!(
+                "{out_dir}/cablecar_{}_q{quality}.cdc",
+                variant.as_str()
+            );
+            std::fs::write(&cdc_path, &bytes)?;
+
+            // full read-back path, as a downstream decoder would run it
+            let read = std::fs::read(&cdc_path)?;
+            let dec = decoder::decode(&read)?;
+            let rec: GrayImage = pipe.decode_coefficients(
+                &dec.qcoef_planar,
+                dec.header.padded_width as usize,
+                dec.header.padded_height as usize,
+                img.width,
+                img.height,
+            );
+            rec.save(format!(
+                "{out_dir}/cablecar_{}_q{quality}.png",
+                variant.as_str()
+            ))?;
+            println!(
+                "{:<10} {:>8} {:>12} {:>8.1}x {:>10.2} {:>9.4}",
+                variant.as_str(),
+                quality,
+                bytes.len(),
+                metrics::compression_ratio(img.pixels(), bytes.len()),
+                metrics::psnr(&img, &rec),
+                metrics::ssim(&img, &rec),
+            );
+        }
+    }
+    println!("\nwrote sources, .cdc files and reconstructions to {out_dir}");
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! Reproduce the paper's full experimental narrative in one run:
+//!
+//! * Figures 2/7   — the original grayscale test images (stand-ins)
+//! * Figures 3-4/8-9 — CPU-processed and GPU-processed reconstructions
+//! * Tables 1-2    — CPU vs GPU timing sweeps (quick subset by default)
+//! * Tables 3-4    — PSNR: exact DCT vs Cordic-based Loeffler
+//!
+//! Images land in `paper_out/`; tables print to stdout (full-size sweeps
+//! run via `cargo bench` — this example keeps sizes CI-friendly unless
+//! `--full` is passed).
+//!
+//! ```bash
+//! cargo run --release --example paper_pipeline [--full]
+//! ```
+
+use cordic_dct::bench::tables::{
+    self, render_paper_comparison, render_psnr_table, render_speedup_figure,
+    speedup_series,
+};
+use cordic_dct::bench::{render_table, rows_to_json, save_results};
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::synthetic;
+use cordic_dct::metrics;
+use cordic_dct::runtime::{Executor, Runtime};
+use cordic_dct::util::timer::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    if !full {
+        std::env::set_var("CORDIC_DCT_BENCH_QUICK", "1");
+    }
+    let out = std::path::Path::new("paper_out");
+    std::fs::create_dir_all(out)?;
+
+    // --- Figures 2 and 7: the "original" images ------------------------
+    let lena = synthetic::lena_like(512, 512, 0xD_C7);
+    let cable = synthetic::cablecar_like(512, 544, 0xD_C7); // 544x512 (HxW)
+    lena.save(out.join("fig2_lena_original.png"))?;
+    cable.save(out.join("fig7_cablecar_original.png"))?;
+    println!("fig 2/7 originals -> paper_out/");
+
+    // --- Figures 3-4 and 8-9: CPU vs GPU processed ----------------------
+    let cpu_pipe = CpuPipeline::new(Variant::Cordic, 50);
+    let lena_cpu = cpu_pipe.compress(&lena).recon;
+    let cable_cpu = cpu_pipe.compress(&cable).recon;
+    lena_cpu.save(out.join("fig3_lena_cpu.png"))?;
+    cable_cpu.save(out.join("fig8_cablecar_cpu.png"))?;
+    let runtime_available =
+        std::path::Path::new("artifacts/manifest.json").exists();
+    if runtime_available {
+        let rt = std::sync::Arc::new(Runtime::new("artifacts")?);
+        let ex = Executor::new(rt);
+        let lena_gpu = ex.compress(&lena, "cordic")?.recon;
+        let cable_gpu = ex.compress(&cable, "cordic")?.recon;
+        lena_gpu.save(out.join("fig4_lena_gpu.png"))?;
+        cable_gpu.save(out.join("fig9_cablecar_gpu.png"))?;
+        println!(
+            "fig 3/4 lena: CPU PSNR {:.2} dB, GPU PSNR {:.2} dB, \
+             cross-lane {:.1} dB",
+            metrics::psnr(&lena, &lena_cpu),
+            metrics::psnr(&lena, &lena_gpu),
+            metrics::psnr(&lena_cpu, &lena_gpu)
+        );
+        println!(
+            "fig 8/9 cable-car: CPU PSNR {:.2} dB, GPU PSNR {:.2} dB",
+            metrics::psnr(&cable, &cable_cpu),
+            metrics::psnr(&cable, &cable_gpu)
+        );
+    } else {
+        println!("(GPU figures skipped: run `make artifacts`)");
+    }
+
+    // --- Tables 1-2: timing sweeps --------------------------------------
+    let bench = if full {
+        Bench::default()
+    } else {
+        Bench::quick()
+    };
+    for (name, title, scene, sizes, paper) in [
+        (
+            "table1_lena",
+            "Table 1 (Lena, grayscale pipeline timing)",
+            "lena",
+            tables::LENA_SIZES,
+            tables::PAPER_TABLE1,
+        ),
+        (
+            "table2_cablecar",
+            "Table 2 (Cable-car, grayscale pipeline timing)",
+            "cablecar",
+            tables::CABLECAR_SIZES,
+            tables::PAPER_TABLE2,
+        ),
+    ] {
+        let sizes = tables::maybe_trim(sizes);
+        let rows =
+            tables::timing_table(scene, &sizes, Variant::Cordic, bench)?;
+        let mut text = render_table(title, &rows);
+        text += &render_paper_comparison(title, &rows, paper);
+        text += &render_speedup_figure(
+            &format!("{title}: speedup"),
+            &speedup_series(&rows),
+        );
+        println!("{text}");
+        save_results(name, &text, &rows_to_json(name, &rows));
+    }
+
+    // --- Tables 3-4: PSNR ------------------------------------------------
+    for (name, title, scene, sizes) in [
+        (
+            "table3_psnr_lena",
+            "Table 3 (Lena PSNR: DCT vs Cordic-Loeffler)",
+            "lena",
+            tables::LENA_PSNR_SIZES,
+        ),
+        (
+            "table4_psnr_cablecar",
+            "Table 4 (Cable-car PSNR: DCT vs Cordic-Loeffler)",
+            "cablecar",
+            tables::CABLECAR_PSNR_SIZES,
+        ),
+    ] {
+        let sizes = tables::maybe_trim(sizes);
+        let rows = tables::psnr_table(scene, &sizes)?;
+        let text = render_psnr_table(title, &rows);
+        println!("{text}");
+        save_results(name, &text, &rows_to_json(name, &rows));
+    }
+
+    println!("figures in paper_out/, table data in bench_results/");
+    Ok(())
+}

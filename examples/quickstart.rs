@@ -1,0 +1,87 @@
+//! Quickstart: compress one image through the public API, on both lanes.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use cordic_dct::codec::{self, decoder, encoder};
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::synthetic;
+use cordic_dct::metrics;
+use cordic_dct::runtime::{Executor, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A test image (the Lena stand-in; see DESIGN.md on substitution).
+    let img = synthetic::lena_like(512, 512, 42);
+    println!("image: 512x512, mean {:.1}, sd {:.1}", img.mean(), img.stddev());
+
+    // 2. CPU lane: the paper's serial pipeline with the Cordic-Loeffler DCT.
+    let pipe = CpuPipeline::new(Variant::Cordic, 50);
+    let t0 = std::time::Instant::now();
+    let out = pipe.compress(&img);
+    let cpu_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "cpu lane ({}): {:.1} ms, PSNR {:.2} dB",
+        pipe.transform_name(),
+        cpu_ms,
+        metrics::psnr(&img, &out.recon)
+    );
+
+    // 3. Entropy-code to an actual compressed file.
+    let header = codec::Header {
+        width: 512,
+        height: 512,
+        padded_width: out.padded_width as u32,
+        padded_height: out.padded_height as u32,
+        quality: 50,
+        variant: codec::variant_tag(Variant::Cordic),
+    };
+    let bytes = encoder::encode(&header, &out.qcoef)?;
+    println!(
+        "compressed: {} bytes ({:.1}x ratio, {:.2} bpp)",
+        bytes.len(),
+        metrics::compression_ratio(img.pixels(), bytes.len()),
+        metrics::bits_per_pixel(bytes.len(), img.pixels())
+    );
+
+    // 4. Decode the file back and verify.
+    let dec = decoder::decode(&bytes)?;
+    let back = pipe.decode_coefficients(
+        &dec.qcoef_planar,
+        dec.header.padded_width as usize,
+        dec.header.padded_height as usize,
+        512,
+        512,
+    );
+    assert_eq!(back, out.recon, "file round-trip is exact");
+    println!("file round-trip: exact");
+
+    // 5. GPU lane (PJRT artifacts), if built.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = std::sync::Arc::new(Runtime::new("artifacts")?);
+        let ex = Executor::new(rt);
+        let t0 = std::time::Instant::now();
+        let gpu = ex.compress(&img, "cordic")?;
+        let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "gpu lane (PJRT): {:.1} ms total ({:.1} ms execute, first call \
+             includes compile), PSNR {:.2} dB",
+            total_ms,
+            gpu.execute_ms,
+            metrics::psnr(&img, &gpu.recon)
+        );
+        let cross = metrics::psnr(&gpu.recon, &out.recon);
+        println!("lane agreement: {cross:.1} dB (higher = closer)");
+        // warm second call shows the serving cost
+        let t0 = std::time::Instant::now();
+        let _ = ex.compress(&img, "cordic")?;
+        println!(
+            "gpu lane warm: {:.1} ms",
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+    } else {
+        println!("gpu lane skipped: run `make artifacts` first");
+    }
+    Ok(())
+}

@@ -1,0 +1,123 @@
+//! End-to-end serving driver (DESIGN.md E2E mandate): run the coordinator
+//! on a realistic mixed workload — both scenes, several paper sizes, both
+//! transform variants — through the full stack (router -> batcher ->
+//! worker pool -> PJRT/CPU lanes -> entropy codec), and report
+//! throughput, latency percentiles and quality. Results for EXPERIMENTS.md.
+//!
+//! ```bash
+//! cargo run --release --example serve_batch [n_requests]
+//! ```
+
+use cordic_dct::coordinator::{
+    Backpressure, Lane, Service, ServiceConfig,
+};
+use cordic_dct::dct::Variant;
+use cordic_dct::image::synthetic;
+use cordic_dct::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64);
+
+    let cfg = ServiceConfig {
+        queue_capacity: 128,
+        backpressure: Backpressure::Block,
+        ..Default::default()
+    };
+    let svc = Service::start(cfg)?;
+    println!(
+        "coordinator up: gpu lane {}, submitting {n} mixed requests",
+        if svc.has_gpu_lane() { "ON" } else { "OFF (make artifacts)" }
+    );
+
+    // mixed workload: scenes x sizes x variants, weighted toward small
+    // sizes like a real thumbnailing service
+    let sizes = [(200usize, 200usize), (320, 288), (512, 512), (576, 720)];
+    let mut rng = Rng::new(2013);
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::with_capacity(n);
+    let mut submitted_px = 0usize;
+    for i in 0..n {
+        let (w, h) = *rng.choose(&sizes);
+        let scene = if rng.chance(0.5) { "lena" } else { "cablecar" };
+        let variant = if rng.chance(0.5) {
+            Variant::Dct
+        } else {
+            Variant::Cordic
+        };
+        let img = synthetic::by_name(scene, w, h, i as u64).unwrap();
+        submitted_px += img.pixels();
+        handles.push((
+            variant,
+            svc.compress(img, variant, Lane::Auto)?,
+        ));
+    }
+    let submit_s = t0.elapsed().as_secs_f64();
+
+    let mut lat = Vec::with_capacity(n);
+    let mut psnr_by_variant = std::collections::BTreeMap::new();
+    let mut bytes_total = 0usize;
+    let mut lanes = std::collections::BTreeMap::new();
+    for (variant, h) in handles {
+        let resp = h.wait();
+        let out = resp.result?;
+        lat.push(resp.queue_ms + resp.process_ms);
+        *lanes.entry(format!("{:?}", resp.lane)).or_insert(0u32) += 1;
+        bytes_total += out.compressed_bytes.unwrap_or(0);
+        psnr_by_variant
+            .entry(variant.as_str())
+            .or_insert_with(Vec::new)
+            .push(out.psnr_db.unwrap_or(f64::NAN));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lat[((p / 100.0) * (lat.len() - 1) as f64) as usize];
+
+    println!("\n== serve_batch report ==");
+    println!(
+        "requests: {n} ({:.1} MPixel) in {wall:.2}s (submit {submit_s:.2}s)",
+        submitted_px as f64 / 1e6
+    );
+    println!(
+        "throughput: {:.1} req/s, {:.1} MPixel/s",
+        n as f64 / wall,
+        submitted_px as f64 / 1e6 / wall
+    );
+    println!(
+        "latency ms: p50 {:.1}  p95 {:.1}  p99 {:.1}  max {:.1}",
+        pct(50.0),
+        pct(95.0),
+        pct(99.0),
+        lat.last().unwrap()
+    );
+    println!("lanes: {lanes:?}");
+    for (v, ps) in &psnr_by_variant {
+        let mean = ps.iter().sum::<f64>() / ps.len() as f64;
+        println!(
+            "quality [{v}]: mean PSNR {mean:.2} dB over {} jobs",
+            ps.len()
+        );
+    }
+    println!(
+        "compressed: {:.1} KiB total ({:.2} bits/pixel mean)",
+        bytes_total as f64 / 1024.0,
+        bytes_total as f64 * 8.0 / submitted_px as f64
+    );
+    let stats = svc.stats();
+    println!(
+        "service: queue wait mean {:.2} ms / p95 {:.2} ms; \
+         process mean {:.1} ms; {} PJRT executables compiled",
+        stats.queue_wait.1, stats.queue_wait.2, stats.process.1,
+        stats.compiled_executables
+    );
+    // the paper's headline property: the parallel lane must beat serial
+    if let Some(gpu_jobs) = lanes.get("Gpu") {
+        println!(
+            "gpu lane handled {gpu_jobs}/{n} jobs (auto routing active)"
+        );
+    }
+    svc.shutdown();
+    Ok(())
+}

@@ -1,0 +1,178 @@
+"""AOT lowering: jax (L2+L1) -> HLO text artifacts + manifest.json.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage::
+
+    python -m compile.aot --out ../artifacts [--quality 50]
+        [--only compress_dct_512x512] [--skip-large]
+
+Produces one ``<name>.hlo.txt`` per artifact plus ``manifest.json``
+describing shapes/dtypes/semantics for the Rust runtime loader.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The paper's size sweep (H, W), padded to 8-multiples where needed.
+# Table 1 / Figures 5-6 (Lena) + Table 2 / Figures 10-11 (Cable-car).
+# 1024x814 pads to 1024x816 (the Rust block manager replicates edges).
+LENA_SIZES = [
+    (3072, 3072),
+    (2048, 2048),
+    (1600, 1400),
+    (1024, 816),
+    (576, 720),
+    (512, 512),
+    (200, 200),
+]
+CABLECAR_SIZES = [
+    (544, 512),
+    (512, 480),
+    (448, 416),
+    (384, 352),
+    (320, 288),
+]
+ALL_SIZES = sorted(set(LENA_SIZES + CABLECAR_SIZES), reverse=True)
+
+# Shapes above this pixel count are skipped with --skip-large (CI-friendly).
+LARGE_PIXELS = 2048 * 2048
+
+VARIANTS = ("dct", "cordic")
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is load-bearing: the default printer elides
+    # arrays (the DCT matrix, quantization tables) as literal "{...}" which
+    # the 0.5.1 text parser silently turns into garbage values.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_list(quality: int):
+    """Yield (name, fn, input_shapes, meta) for every artifact to emit."""
+    for (h, w) in ALL_SIZES:
+        sz = f"{h}x{w}"
+        for variant in VARIANTS:
+            yield (
+                f"compress_{variant}_{sz}",
+                model.entry("compress", variant=variant, quality=quality),
+                [(h, w)],
+                {"kind": "compress", "variant": variant, "quality": quality,
+                 "height": h, "width": w,
+                 "outputs": ["recon", "qcoef"]},
+            )
+        yield (
+            f"psnr_{sz}",
+            model.entry("psnr"),
+            [(h, w), (h, w)],
+            {"kind": "psnr", "height": h, "width": w, "outputs": ["psnr_db"]},
+        )
+        yield (
+            f"histeq_{sz}",
+            model.entry("histeq"),
+            [(h, w)],
+            {"kind": "histeq", "height": h, "width": w,
+             "outputs": ["equalized"]},
+        )
+    # Unfused ablation pipeline + bare transforms at one reference size.
+    h, w = 512, 512
+    for variant in VARIANTS:
+        yield (
+            f"compress_unfused_{variant}_{h}x{w}",
+            model.entry("compress_unfused", variant=variant, quality=quality),
+            [(h, w)],
+            {"kind": "compress_unfused", "variant": variant,
+             "quality": quality, "height": h, "width": w,
+             "outputs": ["recon", "qcoef"]},
+        )
+        yield (
+            f"dct_{variant}_{h}x{w}",
+            model.entry("dct", variant=variant),
+            [(h, w)],
+            {"kind": "dct", "variant": variant, "height": h, "width": w,
+             "outputs": ["coef"]},
+        )
+
+
+def emit(out_dir: str, quality: int, only=None, skip_large=False,
+         verbose=True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "quality": quality,
+        "dtype": "f32",
+        "artifacts": [],
+    }
+    t_all = time.time()
+    for name, fn, in_shapes, meta in artifact_list(quality):
+        if only and name not in only:
+            continue
+        if skip_large and any(h * w > LARGE_PIXELS for (h, w) in in_shapes):
+            continue
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*[_spec(s) for s in in_shapes])
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry.update({
+            "name": name,
+            "file": fname,
+            "inputs": [{"shape": list(s), "dtype": "f32"} for s in in_shapes],
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "bytes": len(text),
+        })
+        manifest["artifacts"].append(entry)
+        if verbose:
+            print(f"  {name:44s} {len(text):>10d} B  {time.time()-t0:5.1f}s",
+                  flush=True)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if verbose:
+        n = len(manifest["artifacts"])
+        print(f"wrote {n} artifacts + manifest.json in "
+              f"{time.time()-t_all:.1f}s -> {out_dir}")
+    return manifest
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quality", type=int, default=50)
+    ap.add_argument("--only", action="append", default=None,
+                    help="emit only the named artifact(s)")
+    ap.add_argument("--skip-large", action="store_true",
+                    help=f"skip shapes over {LARGE_PIXELS} pixels")
+    args = ap.parse_args(argv)
+    emit(args.out, args.quality, only=args.only, skip_large=args.skip_large)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,198 @@
+"""L1 Pallas kernels: blockwise 8x8 DCT / IDCT and the fused compression
+kernel over row strips.
+
+Hardware mapping (DESIGN.md §Hardware-Adaptation): the paper launches one
+CUDA threadblock per image tile with the tile staged in ``__shared__``
+memory. On the TPU programming model that is a Pallas grid with one step per
+(8, W) strip of horizontally-adjacent 8x8 blocks, the strip staged in VMEM
+by the BlockSpec, and the exact-DCT variant phrased as 8x8 matmuls so the
+MXU does the work. Kernels are lowered ``interpret=True`` (CPU PJRT cannot
+execute Mosaic custom-calls) — correctness is validated through this path
+and real-TPU perf is estimated from the VMEM/MXU model in DESIGN.md.
+
+Array-valued compile-time tables (the 8x8 DCT matrix, the quantization
+table) are passed as kernel *inputs* with a constant index_map — Pallas
+forbids captured array constants — so they stay VMEM-resident across grid
+steps.
+
+Strip height is chosen per shape by ``transform8.pick_strip``: the tallest
+divisor of H (multiple of 8) whose f32 strip buffer stays under a 2 MiB
+VMEM cap — 3-4 live buffers plus lane temporaries stay comfortably inside
+the ~16 MiB/core VMEM with room for double buffering, while grid-step
+count (and with it per-step dispatch overhead, the dominant cost of the
+original 8-row strips — see EXPERIMENTS.md §Perf) drops by up to 16x.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .transform8 import (
+    RotatorSet,
+    cordic_rotators,
+    dct_matrix,
+    exact_rotators,
+    pick_strip,
+    transform_strip,
+    transform_strip_matrix,
+)
+
+
+def _strip_spec(strip: int, w: int):
+    return pl.BlockSpec((strip, w), lambda i: (i, 0))
+
+
+def _const_spec(shape):
+    nd = len(shape)
+    return pl.BlockSpec(shape, lambda i: (0,) * nd)
+
+
+def _rotators(variant: str, iters: int, frac_bits: int) -> RotatorSet:
+    if variant == "cordic":
+        return cordic_rotators(iters, frac_bits)
+    if variant == "loeffler":
+        return exact_rotators()
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+# ---------------------------------------------------------------------------
+# Bare (I)DCT kernels
+# ---------------------------------------------------------------------------
+
+def _dct_matrix_kernel(x_ref, d_ref, o_ref, *, inverse: bool):
+    o_ref[...] = transform_strip_matrix(x_ref[...], d_ref[...],
+                                        inverse=inverse)
+
+
+def _dct_flow_kernel(x_ref, o_ref, *, rs: RotatorSet, inverse: bool):
+    o_ref[...] = transform_strip(x_ref[...], rs, inverse=inverse)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "inverse",
+                                             "cordic_iters",
+                                             "cordic_frac_bits"))
+def dct2d(img, variant: str = "dct", inverse: bool = False,
+          cordic_iters: int = 3, cordic_frac_bits: int = 10):
+    """Blockwise 2-D (I)DCT of an (H, W) f32 image, H and W multiples of 8.
+
+    ``variant``: 'dct' (exact, MXU matmul), 'loeffler' (flow graph, exact
+    rotators), 'cordic' (Cordic-based Loeffler, fixed-point rotators).
+    """
+    h, w = img.shape
+    if h % 8 or w % 8:
+        raise ValueError(f"image shape {img.shape} not a multiple of 8")
+    img = img.astype(jnp.float32)
+    strip = pick_strip(h, w)
+    if variant == "dct":
+        d = jnp.asarray(dct_matrix(np.float32))
+        return pl.pallas_call(
+            functools.partial(_dct_matrix_kernel, inverse=inverse),
+            out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+            grid=(h // strip,),
+            in_specs=[_strip_spec(strip, w), _const_spec((8, 8))],
+            out_specs=_strip_spec(strip, w),
+            interpret=True,
+        )(img, d)
+    rs = _rotators(variant, cordic_iters, cordic_frac_bits)
+    return pl.pallas_call(
+        functools.partial(_dct_flow_kernel, rs=rs, inverse=inverse),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        grid=(h // strip,),
+        in_specs=[_strip_spec(strip, w)],
+        out_specs=_strip_spec(strip, w),
+        interpret=True,
+    )(img)
+
+
+def idct2d(coef, variant: str = "dct", **kw):
+    return dct2d(coef, variant=variant, inverse=True, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Fused compression kernel: one VMEM-resident pass per strip doing
+# level-shift -> DCT -> quantize -> dequantize -> IDCT -> unshift+clip,
+# emitting both the reconstruction and the quantized coefficients (the
+# entropy coder input for the Rust codec).
+# ---------------------------------------------------------------------------
+
+def _compress_matrix_kernel(x_ref, d_ref, q_ref, rec_ref, qc_ref):
+    strip = x_ref[...] - 128.0
+    d = d_ref[...]
+    qt = jnp.tile(q_ref[...], (strip.shape[0] // 8, strip.shape[1] // 8))
+    coef = transform_strip_matrix(strip, d)
+    qc = jnp.round(coef / qt)
+    deq = qc * qt
+    rec = transform_strip_matrix(deq, d, inverse=True)
+    rec_ref[...] = jnp.clip(rec + 128.0, 0.0, 255.0)
+    qc_ref[...] = qc
+
+
+def _compress_flow_kernel(x_ref, d_ref, q_ref, rec_ref, qc_ref,
+                          *, rs: RotatorSet):
+    # Forward: approximate (Cordic-)Loeffler encoder hardware.
+    # Decode: standard matrix IDCT (a standards-compliant decoder), so the
+    # encoder's approximation error is measured, not cancelled — the
+    # deployment behind the paper's Table 3-4 PSNR gap.
+    strip = x_ref[...] - 128.0
+    qt = jnp.tile(q_ref[...], (strip.shape[0] // 8, strip.shape[1] // 8))
+    coef = transform_strip(strip, rs)
+    qc = jnp.round(coef / qt)
+    deq = qc * qt
+    rec = transform_strip_matrix(deq, d_ref[...], inverse=True)
+    rec_ref[...] = jnp.clip(rec + 128.0, 0.0, 255.0)
+    qc_ref[...] = qc
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "quality",
+                                             "cordic_iters",
+                                             "cordic_frac_bits"))
+def compress(img, variant: str = "dct", quality: int = 50,
+             cordic_iters: int = 3, cordic_frac_bits: int = 10
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused full-pipeline compression of an (H, W) f32 image.
+
+    Returns ``(reconstructed, quantized_coefficients)``, both (H, W) f32.
+    The quantization table (JPEG luma at ``quality``, orthonormal-DCT
+    scaled) is a compile-time constant of the artifact, matching the AOT
+    model: one executable per (shape, variant, quality).
+    """
+    from . import ref  # local import: ref depends only on transform8
+
+    h, w = img.shape
+    if h % 8 or w % 8:
+        raise ValueError(f"image shape {img.shape} not a multiple of 8")
+    img = img.astype(jnp.float32)
+    qtable = jnp.asarray(ref.effective_qtable(quality))
+    out_shape = (
+        jax.ShapeDtypeStruct((h, w), jnp.float32),
+        jax.ShapeDtypeStruct((h, w), jnp.float32),
+    )
+    strip = pick_strip(h, w)
+    if variant == "dct":
+        d = jnp.asarray(dct_matrix(np.float32))
+        return pl.pallas_call(
+            _compress_matrix_kernel,
+            out_shape=out_shape,
+            grid=(h // strip,),
+            in_specs=[_strip_spec(strip, w), _const_spec((8, 8)),
+                      _const_spec((8, 8))],
+            out_specs=(_strip_spec(strip, w), _strip_spec(strip, w)),
+            interpret=True,
+        )(img, d, qtable)
+    rs = _rotators(variant, cordic_iters, cordic_frac_bits)
+    d = jnp.asarray(dct_matrix(np.float32))
+    return pl.pallas_call(
+        functools.partial(_compress_flow_kernel, rs=rs),
+        out_shape=out_shape,
+        grid=(h // strip,),
+        in_specs=[_strip_spec(strip, w), _const_spec((8, 8)),
+                  _const_spec((8, 8))],
+        out_specs=(_strip_spec(strip, w), _strip_spec(strip, w)),
+        interpret=True,
+    )(img, d, qtable)

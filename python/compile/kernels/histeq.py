@@ -1,0 +1,89 @@
+"""L1 Pallas kernels: grayscale histogram equalization.
+
+Tables 1-2 of the paper are captioned "time comparisons of grayscale
+histogram/equalization", so the equalization pipeline is reproduced as its
+own pair of kernels alongside the DCT pipeline:
+
+  1. ``_hist_kernel``  — 256-bin histogram, a strip-grid reduction into a
+     revisited (1, 256) accumulator via scatter-add. (On a real TPU one
+     would chunk the strip and use the one-hot-matmul trick to put the
+     accumulation on the MXU; the interpret/CPU path scatter-adds, which
+     lowers to the same HLO scatter the CPU backend runs well.)
+  2. ``_apply_kernel`` — LUT application per strip (gather).
+
+The CDF -> LUT conversion between the two is a 256-element jnp graph.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .transform8 import pick_strip
+
+BINS = 256
+
+
+def _hist_kernel(x_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    px = jnp.clip(x_ref[...], 0.0, 255.0).reshape(-1).astype(jnp.int32)
+    ones = jnp.ones_like(px, dtype=jnp.float32)
+    acc_ref[...] += (
+        jnp.zeros((BINS,), jnp.float32).at[px].add(ones).reshape(1, BINS)
+    )
+
+
+def histogram256(img):
+    """256-bin histogram of a u8-valued (f32-typed) (H, W) image."""
+    h, w = img.shape
+    if h % 8:
+        raise ValueError(f"height {h} not a multiple of 8")
+    s = pick_strip(h, w)
+    acc = pl.pallas_call(
+        _hist_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, BINS), jnp.float32),
+        grid=(h // s,),
+        in_specs=[pl.BlockSpec((s, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, BINS), lambda i: (0, 0)),
+        interpret=True,
+    )(img.astype(jnp.float32))
+    return acc[0]
+
+
+def _apply_kernel(x_ref, lut_ref, o_ref):
+    idx = jnp.clip(x_ref[...], 0.0, 255.0).astype(jnp.int32)
+    o_ref[...] = lut_ref[0][idx]
+
+
+def apply_lut(img, lut):
+    h, w = img.shape
+    s = pick_strip(h, w)
+    return pl.pallas_call(
+        _apply_kernel,
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        grid=(h // s,),
+        in_specs=[
+            pl.BlockSpec((s, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, BINS), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((s, w), lambda i: (i, 0)),
+        interpret=True,
+    )(img.astype(jnp.float32), lut.reshape(1, BINS).astype(jnp.float32))
+
+
+@jax.jit
+def histeq(img):
+    """Full histogram equalization of an (H, W) u8-valued f32 image."""
+    h, w = img.shape
+    hist = histogram256(img)
+    cdf = jnp.cumsum(hist)
+    cdf_min = cdf[jnp.argmax(hist > 0)]
+    denom = jnp.maximum(float(h * w) - cdf_min, 1.0)
+    lut = jnp.clip(jnp.round((cdf - cdf_min) / denom * 255.0), 0.0, 255.0)
+    return apply_lut(img, lut)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: PSNR between two images (paper §4.1, eq. 23-24).
+
+The squared-error reduction runs as a Pallas grid over row strips with a
+revisited (1, 1) accumulator block — the TPU idiom for cross-grid-step
+reductions (initialize on the first step, accumulate on the rest). The final
+log10 conversion happens in the surrounding jnp graph.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PSNR_CAP_DB = 99.0
+
+
+def _sse_kernel(a_ref, b_ref, acc_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    d = a_ref[...] - b_ref[...]
+    acc_ref[0, 0] += jnp.sum(d * d)
+
+
+def sse(a, b):
+    """Sum of squared differences via the strip-reduction kernel."""
+    from .transform8 import pick_strip
+
+    h, w = a.shape
+    if a.shape != b.shape:
+        raise ValueError(f"shape mismatch {a.shape} vs {b.shape}")
+    if h % 8:
+        raise ValueError(f"height {h} not a multiple of 8")
+    s = pick_strip(h, w)
+    strip = pl.BlockSpec((s, w), lambda i: (i, 0))
+    acc = pl.pallas_call(
+        _sse_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        grid=(h // s,),
+        in_specs=[strip, strip],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        interpret=True,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))
+    return acc[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("max_value",))
+def psnr(a, b, max_value: float = 255.0):
+    """PSNR in dB; identical images cap at PSNR_CAP_DB (MSE=0 guard)."""
+    h, w = a.shape
+    m = sse(a, b) / (h * w)
+    p = 20.0 * jnp.log10(max_value) - 10.0 * jnp.log10(jnp.maximum(m, 1e-20))
+    return jnp.minimum(p, PSNR_CAP_DB)

@@ -1,0 +1,60 @@
+"""L1 Pallas kernels: standalone quantize / dequantize over row strips.
+
+The paper runs "the DCT, the quantizer and the IDCT ... on different
+kernels" (§3.2); these are the quantizer kernels for that unfused
+configuration (the fused single-pass kernel lives in dct8x8.compress and is
+what the optimized pipeline uses — the ablation bench compares both).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .transform8 import pick_strip
+
+
+def _quant_kernel(x_ref, q_ref, o_ref, *, dequant: bool):
+    strip = x_ref[...]
+    qt = jnp.tile(q_ref[...], (strip.shape[0] // 8, strip.shape[1] // 8))
+    if dequant:
+        o_ref[...] = strip * qt
+    else:
+        o_ref[...] = jnp.round(strip / qt)
+
+
+def _call(coef, qtable, dequant: bool):
+    h, w = coef.shape
+    if h % 8 or w % 8:
+        raise ValueError(f"shape {coef.shape} not a multiple of 8")
+    kern = functools.partial(_quant_kernel, dequant=dequant)
+    strip = pick_strip(h, w)
+    spec = pl.BlockSpec((strip, w), lambda i: (i, 0))
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        grid=(h // strip,),
+        in_specs=[spec, pl.BlockSpec((8, 8), lambda i: (0, 0))],
+        out_specs=spec,
+        interpret=True,
+    )(coef.astype(jnp.float32), jnp.asarray(qtable))
+
+
+@functools.partial(jax.jit, static_argnames=("quality",))
+def quantize(coef, quality: int = 50):
+    """Round(coef / Q) blockwise, Q = JPEG luma table at ``quality`` scaled
+    for the orthonormal DCT."""
+    from . import ref
+
+    return _call(coef, ref.effective_qtable(quality), dequant=False)
+
+
+@functools.partial(jax.jit, static_argnames=("quality",))
+def dequantize(qcoef, quality: int = 50):
+    """qcoef * Q blockwise — inverse of :func:`quantize` up to rounding."""
+    from . import ref
+
+    return _call(qcoef, ref.effective_qtable(quality), dequant=True)

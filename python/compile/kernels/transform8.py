@@ -1,0 +1,375 @@
+"""8-point 1-D DCT transforms: exact matrix, Loeffler flow graph, and the
+Cordic-based Loeffler variant of Sun/Heyne/Ruan/Goetze (2006) — the
+algorithm the paper evaluates.
+
+All transform functions here operate on a *list of 8 arrays* (the 8 lanes of
+the flow graph) so the same code vectorizes over any trailing shape. They are
+written in pure jnp so they can be used both
+
+  * inside Pallas kernels (L1) — lowered with interpret=True into the same
+    HLO module as the surrounding L2 graph, and
+  * in the pure-jnp reference oracle (ref.py) that pytest checks kernels
+    against.
+
+Flow graph (verified numerically against the orthonormal DCT-II matrix to
+<1e-12, see tests/test_transform8.py)::
+
+    stage 1: butterflies  x0..x7 -> a0..a7
+    stage 2: even butterflies (a0..a3 -> b0..b3)
+             odd rotators   rot(3pi/16) on (a4,a7), rot(pi/16) on (a5,a6)
+    stage 3: even: X0/X4 butterfly, sqrt2*rot(6pi/16) on (b2,b3)
+             odd:  butterflies -> c4..c7
+    stage 4: X1=c4+c7, X7=c7-c4, X3=sqrt2*c5, X5=sqrt2*c6
+    scale:   /sqrt(8)  (orthonormal normalization)
+
+The Cordic variant replaces each plane rotation with a short sequence of
+CORDIC micro-rotations (shift-add in hardware) evaluated in simulated
+fixed-point: every intermediate is rounded to `frac_bits` fractional bits,
+exactly as a shift-add datapath truncates. This injects the real
+approximation loss the paper's Tables 3-4 measure (Cordic-Loeffler PSNR a
+couple of dB under the exact DCT).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+SQRT2 = math.sqrt(2.0)
+INV_SQRT8 = 1.0 / math.sqrt(8.0)
+
+# Rotator angles of the Loeffler graph (radians).
+ANGLE_ODD_A = 3.0 * math.pi / 16.0  # rotator "c3" on (a4, a7)
+ANGLE_ODD_B = 1.0 * math.pi / 16.0  # rotator "c1" on (a5, a6)
+ANGLE_EVEN = 6.0 * math.pi / 16.0   # rotator "sqrt2*c6" on (b2, b3)
+
+
+def dct_matrix(dtype=np.float64) -> np.ndarray:
+    """Orthonormal 8-point DCT-II matrix D, so that y = D @ x."""
+    d = np.zeros((8, 8), dtype=np.float64)
+    for k in range(8):
+        ck = math.sqrt(0.5) if k == 0 else 1.0
+        for n in range(8):
+            d[k, n] = 0.5 * ck * math.cos((2 * n + 1) * k * math.pi / 16.0)
+    return d.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# CORDIC planning (host-side, produces compile-time constants)
+# ---------------------------------------------------------------------------
+
+def cordic_plan(theta: float, iters: int) -> Tuple[List[int], float, float]:
+    """Greedy CORDIC micro-rotation plan for clockwise rotation by ``theta``.
+
+    Returns ``(sigmas, achieved_angle, gain)`` where ``sigmas[i]`` is the
+    direction of micro-rotation ``i`` (angle atan(2^-i)), ``achieved_angle``
+    is the accumulated angle and ``gain`` is the CORDIC magnitude gain
+    ``prod(sqrt(1 + 4^-i))`` that a hardware implementation folds into the
+    quantization stage.
+    """
+    sigmas: List[int] = []
+    phi = 0.0
+    gain = 1.0
+    for i in range(iters):
+        sigma = 1 if phi < theta else -1
+        sigmas.append(sigma)
+        phi += sigma * math.atan(2.0 ** (-i))
+        gain *= math.sqrt(1.0 + 4.0 ** (-i))
+    return sigmas, phi, gain
+
+
+@dataclass(frozen=True)
+class Rotator:
+    """A plane rotation in the Loeffler graph.
+
+    ``mode='exact'`` applies the ideal rotation with float multiplies;
+    ``mode='cordic'`` applies ``iters`` CORDIC micro-rotations with every
+    intermediate rounded to ``frac_bits`` fractional bits (fixed-point
+    hardware simulation). ``scale`` is an extra output gain (sqrt(2) for the
+    even rotator of the graph).
+    """
+
+    theta: float
+    scale: float = 1.0
+    mode: str = "exact"          # 'exact' | 'cordic'
+    iters: int = 4
+    frac_bits: Optional[int] = None
+
+    def plan(self) -> Tuple[List[int], float, float]:
+        return cordic_plan(self.theta, self.iters)
+
+
+def _fxp(v, frac_bits: Optional[int]):
+    """Round ``v`` to ``frac_bits`` fractional bits (fixed-point truncation
+    model). No-op when frac_bits is None."""
+    if frac_bits is None:
+        return v
+    s = float(1 << frac_bits)
+    return jnp.round(v * s) * (1.0 / s)
+
+
+def rotate_cw(x, y, rot: Rotator):
+    """Apply the graph's rotation convention to lanes (x, y)::
+
+        x' = scale * ( x*cos(theta) + y*sin(theta) )
+        y' = scale * (-x*sin(theta) + y*cos(theta) )
+
+    i.e. the matrix [[c, s], [-s, c]] (clockwise in the standard
+    orientation), optionally via fixed-point CORDIC micro-rotations.
+    """
+    if rot.mode == "exact":
+        c = math.cos(rot.theta) * rot.scale
+        s = math.sin(rot.theta) * rot.scale
+        return x * c + y * s, -x * s + y * c
+    if rot.mode != "cordic":
+        raise ValueError(f"unknown rotator mode {rot.mode!r}")
+
+    sigmas, _phi, gain = rot.plan()
+    fb = rot.frac_bits
+    x = _fxp(x, fb)
+    y = _fxp(y, fb)
+    for i, sigma in enumerate(sigmas):
+        shift = 2.0 ** (-i)
+        # Clockwise micro-rotation: accumulated matrix converges to
+        # [[cos, sin], [-sin, cos]] of the achieved angle, scaled by `gain`.
+        xn = x + sigma * y * shift
+        yn = y - sigma * x * shift
+        x = _fxp(xn, fb)
+        y = _fxp(yn, fb)
+    # Gain compensation (hardware folds this into the quantizer; we model it
+    # as one more rounded constant multiply).
+    comp = rot.scale / gain
+    return _fxp(x * comp, fb), _fxp(y * comp, fb)
+
+
+def rotate_ccw(x, y, rot: Rotator):
+    """Inverse of :func:`rotate_cw` up to the rotator's own approximation
+    error: rotation by -theta with matching scale handling (1/scale)."""
+    if rot.mode == "exact":
+        c = math.cos(rot.theta) / rot.scale
+        s = math.sin(rot.theta) / rot.scale
+        return x * c - y * s, x * s + y * c
+    sigmas, _phi, gain = rot.plan()
+    fb = rot.frac_bits
+    x = _fxp(x, fb)
+    y = _fxp(y, fb)
+    for i, sigma in enumerate(sigmas):
+        shift = 2.0 ** (-i)
+        xn = x - sigma * y * shift
+        yn = y + sigma * x * shift
+        x = _fxp(xn, fb)
+        y = _fxp(yn, fb)
+    comp = 1.0 / (rot.scale * gain)
+    return _fxp(x * comp, fb), _fxp(y * comp, fb)
+
+
+@dataclass(frozen=True)
+class RotatorSet:
+    """The three rotators of the Loeffler graph plus the scalar constants,
+    configured either exactly or as fixed-point CORDIC."""
+
+    odd_a: Rotator  # 3pi/16 on (a4, a7)
+    odd_b: Rotator  # pi/16 on (a5, a6)
+    even: Rotator   # 6pi/16 with sqrt(2) gain on (b2, b3)
+    frac_bits: Optional[int] = None
+
+    def const(self, v: float):
+        """A scalar constant, rounded to the set's fixed-point grid."""
+        if self.frac_bits is None:
+            return v
+        s = float(1 << self.frac_bits)
+        return round(v * s) / s
+
+
+def exact_rotators() -> RotatorSet:
+    return RotatorSet(
+        odd_a=Rotator(ANGLE_ODD_A),
+        odd_b=Rotator(ANGLE_ODD_B),
+        even=Rotator(ANGLE_EVEN, scale=SQRT2),
+    )
+
+
+def cordic_rotators(iters: int = 3, frac_bits: int = 10) -> RotatorSet:
+    """Rotator set for the Cordic-based Loeffler DCT (paper Fig. 1).
+
+    Defaults (3 micro-rotations, 10 fractional bits) are calibrated so the
+    pipeline PSNR lands ~2 dB under the exact DCT when decoded with a
+    standard IDCT, matching the gap in the paper's Tables 3-4.
+    """
+    return RotatorSet(
+        odd_a=Rotator(ANGLE_ODD_A, mode="cordic", iters=iters, frac_bits=frac_bits),
+        odd_b=Rotator(ANGLE_ODD_B, mode="cordic", iters=iters, frac_bits=frac_bits),
+        even=Rotator(ANGLE_EVEN, scale=SQRT2, mode="cordic", iters=iters,
+                     frac_bits=frac_bits),
+        frac_bits=frac_bits,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Loeffler forward / inverse flow graphs
+# ---------------------------------------------------------------------------
+
+def loeffler8_fwd(xs: Sequence, rs: RotatorSet) -> List:
+    """Forward 8-point DCT-II via the (Cordic-based) Loeffler flow graph.
+
+    ``xs`` is a sequence of 8 arrays (lane values); returns the 8 transform
+    lanes in natural frequency order, orthonormally scaled.
+    """
+    x0, x1, x2, x3, x4, x5, x6, x7 = xs
+    # stage 1
+    a0 = x0 + x7
+    a1 = x1 + x6
+    a2 = x2 + x5
+    a3 = x3 + x4
+    a7 = x0 - x7
+    a6 = x1 - x6
+    a5 = x2 - x5
+    a4 = x3 - x4
+    # stage 2 even
+    b0 = a0 + a3
+    b1 = a1 + a2
+    b3 = a0 - a3
+    b2 = a1 - a2
+    # stage 2 odd rotators
+    b4, b7 = rotate_cw(a4, a7, rs.odd_a)
+    b5, b6 = rotate_cw(a5, a6, rs.odd_b)
+    # stage 3 even
+    X0 = b0 + b1
+    X4 = b0 - b1
+    X2, X6 = rotate_cw(b2, b3, rs.even)
+    # stage 3 odd
+    c4 = b4 + b6
+    c6 = b4 - b6
+    c7 = b7 + b5
+    c5 = b7 - b5
+    # stage 4
+    X1 = c4 + c7
+    X7 = c7 - c4
+    r2 = rs.const(SQRT2)
+    X3 = c5 * r2
+    X5 = c6 * r2
+    n = rs.const(INV_SQRT8)
+    return [v * n for v in (X0, X1, X2, X3, X4, X5, X6, X7)]
+
+
+def loeffler8_inv(ys: Sequence, rs: RotatorSet) -> List:
+    """Inverse of :func:`loeffler8_fwd`: the transposed flow graph with each
+    stage inverted. For exact rotators this is the exact orthonormal inverse;
+    for CORDIC rotators the fixed-point rounding does not cancel, which is
+    precisely the reconstruction loss the paper's PSNR tables measure."""
+    s8 = rs.const(math.sqrt(8.0))
+    X0, X1, X2, X3, X4, X5, X6, X7 = [v * s8 for v in ys]
+    # stage 4 inverse
+    c4 = (X1 - X7) * 0.5
+    c7 = (X1 + X7) * 0.5
+    ir2 = rs.const(1.0 / SQRT2)
+    c5 = X3 * ir2
+    c6 = X5 * ir2
+    # stage 3 odd inverse
+    b4 = (c4 + c6) * 0.5
+    b6 = (c4 - c6) * 0.5
+    b7 = (c7 + c5) * 0.5
+    b5 = (c7 - c5) * 0.5
+    # stage 3 even inverse
+    b0 = (X0 + X4) * 0.5
+    b1 = (X0 - X4) * 0.5
+    b2, b3 = rotate_ccw(X2, X6, rs.even)
+    # stage 2 odd inverse
+    a4, a7 = rotate_ccw(b4, b7, rs.odd_a)
+    a5, a6 = rotate_ccw(b5, b6, rs.odd_b)
+    # stage 2 even inverse
+    a0 = (b0 + b3) * 0.5
+    a3 = (b0 - b3) * 0.5
+    a1 = (b1 + b2) * 0.5
+    a2 = (b1 - b2) * 0.5
+    # stage 1 inverse
+    x0 = (a0 + a7) * 0.5
+    x7 = (a0 - a7) * 0.5
+    x1 = (a1 + a6) * 0.5
+    x6 = (a1 - a6) * 0.5
+    x2 = (a2 + a5) * 0.5
+    x5 = (a2 - a5) * 0.5
+    x3 = (a3 + a4) * 0.5
+    x4 = (a3 - a4) * 0.5
+    return [x0, x1, x2, x3, x4, x5, x6, x7]
+
+
+# ---------------------------------------------------------------------------
+# Strip-level application (shared by kernels and oracle)
+# ---------------------------------------------------------------------------
+
+# VMEM budget per staged strip buffer (bytes). Governs the strip-height
+# choice: strips are the Pallas grid unit (the CUDA-threadblock analogue),
+# and taller strips amortize per-grid-step overhead — the single biggest
+# performance lever of the §Perf pass (see EXPERIMENTS.md).
+STRIP_BYTES_CAP = 2 * 1024 * 1024
+
+
+def pick_strip(h: int, w: int, cap_bytes: int = STRIP_BYTES_CAP) -> int:
+    """Largest strip height that (a) divides ``h``, (b) is a multiple of 8,
+    and (c) keeps one f32 strip buffer under ``cap_bytes`` of VMEM."""
+    limit = max(8, cap_bytes // (w * 4))
+    best = 8
+    s = 8
+    while s <= min(h, limit):
+        if h % s == 0:
+            best = s
+        s += 8
+    return best
+
+
+def transform_strip(strip, rs: RotatorSet, inverse: bool = False):
+    """Apply the 8x8 blockwise 2-D transform to an ``(S, W)`` strip of
+    blocks (S, W multiples of 8).
+
+    Vertical pass: the 8-point transform down each in-block column, with
+    the lanes being the 8 rows of each block-row group (vectorized over
+    groups x columns). Horizontal pass: the 8-point transform along each
+    block row (lanes are the 8 in-block columns, vectorized over rows x
+    blocks).
+    """
+    f = loeffler8_inv if inverse else loeffler8_fwd
+    s, w = strip.shape
+    g = s // 8
+    nb = w // 8
+
+    def vertical(x):
+        t = x.reshape(g, 8, w)
+        lanes = f([t[:, i, :] for i in range(8)], rs)
+        return jnp.stack(lanes, axis=1).reshape(s, w)
+
+    def horizontal(x):
+        t = x.reshape(s, nb, 8)
+        lanes = f([t[:, :, j] for j in range(8)], rs)
+        return jnp.stack(lanes, axis=-1).reshape(s, w)
+
+    if inverse:
+        # undo the horizontal pass first so fwd/inv compose per-pass
+        return vertical(horizontal(strip))
+    return horizontal(vertical(strip))
+
+
+def transform_strip_matrix(strip, d=None, inverse: bool = False):
+    """Exact 2-D transform on an ``(S, W)`` strip via the DCT matrix — the
+    MXU-friendly formulation used by the exact-DCT Pallas kernel (8x8
+    matmuls per block, batched as einsums over the whole strip). ``d`` is
+    the 8x8 DCT matrix; inside Pallas kernels it must be passed in as a
+    kernel input (Pallas forbids captured array constants)."""
+    if d is None:
+        d = jnp.asarray(dct_matrix(np.float32))
+    s, w = strip.shape
+    g = s // 8
+    nb = w // 8
+    t = strip.reshape(g, 8, w)
+    if inverse:
+        # vertical inverse: D^T @ rows ; horizontal inverse: blocks @ D
+        v = jnp.einsum("ji,gjw->giw", d, t).reshape(s, nb, 8)
+        o = jnp.einsum("rbk,kc->rbc", v, d)
+        return o.reshape(s, w)
+    v = jnp.einsum("ij,gjw->giw", d, t).reshape(s, nb, 8)
+    o = jnp.einsum("rbk,ck->rbc", v, d)
+    return o.reshape(s, w)

@@ -1,0 +1,87 @@
+"""L2: the jitted compute graphs the Rust coordinator executes.
+
+Each public function here is a jax function over statically-shaped f32
+arrays, calling the L1 Pallas kernels, and is what ``aot.py`` lowers to HLO
+text. Python never runs at serving time — these exist only on the compile
+path.
+
+Conventions shared with the Rust side (rust/src/runtime/):
+
+* images are (H, W) f32 row-major, pixel values 0..255 (u8-valued);
+* H and W are multiples of 8 (the Rust block manager pads with edge
+  replication before submission and crops after);
+* every entry point returns a tuple (lowered with return_tuple=True), so
+  the Rust side always unwraps a tuple literal.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from .kernels import dct8x8, histeq as histeq_k, psnr as psnr_k
+
+
+def compress(img, variant: str = "dct", quality: int = 50,
+             cordic_iters: int = 3, cordic_frac_bits: int = 10):
+    """Full compression pipeline (fused kernel): returns
+    ``(reconstructed, quantized_coefficients)``."""
+    rec, qc = dct8x8.compress(img, variant=variant, quality=quality,
+                              cordic_iters=cordic_iters,
+                              cordic_frac_bits=cordic_frac_bits)
+    return rec, qc
+
+
+def compress_unfused(img, variant: str = "dct", quality: int = 50):
+    """The paper's §3.2 configuration: DCT, quantizer and IDCT as separate
+    kernels (ablation baseline for the fused pipeline)."""
+    from .kernels import quantize as quant_k
+
+    x = img.astype(jnp.float32) - 128.0
+    coef = dct8x8.dct2d(x, variant=variant)
+    qc = quant_k.quantize(coef, quality=quality)
+    deq = quant_k.dequantize(qc, quality=quality)
+    rec = dct8x8.idct2d(deq, variant=variant)
+    return jnp.clip(rec + 128.0, 0.0, 255.0), qc
+
+
+def dct_only(img, variant: str = "dct"):
+    """Forward blockwise DCT of a level-shifted image (microbench entry)."""
+    return (dct8x8.dct2d(img.astype(jnp.float32) - 128.0, variant=variant),)
+
+
+def idct_only(coef, variant: str = "dct"):
+    """Inverse blockwise DCT + unshift/clip (microbench entry)."""
+    rec = dct8x8.idct2d(coef, variant=variant)
+    return (jnp.clip(rec + 128.0, 0.0, 255.0),)
+
+
+def psnr(a, b):
+    """PSNR(a, b) in dB as a (1,)-shaped array (scalar outputs keep the
+    tuple-of-arrays convention simple on the Rust side)."""
+    return (psnr_k.psnr(a, b).reshape(1),)
+
+
+def histeq(img):
+    """Grayscale histogram equalization (Tables 1-2 caption workload)."""
+    return (histeq_k.histeq(img),)
+
+
+# Entry-point registry used by aot.py: name -> (fn(shape-args), n_inputs).
+def entry(kind: str, variant: str = "dct", quality: int = 50):
+    """Resolve an artifact kind to a single-signature jax function."""
+    if kind == "compress":
+        return functools.partial(compress, variant=variant, quality=quality)
+    if kind == "compress_unfused":
+        return functools.partial(compress_unfused, variant=variant,
+                                 quality=quality)
+    if kind == "dct":
+        return functools.partial(dct_only, variant=variant)
+    if kind == "idct":
+        return functools.partial(idct_only, variant=variant)
+    if kind == "psnr":
+        return psnr
+    if kind == "histeq":
+        return histeq
+    raise KeyError(f"unknown artifact kind {kind!r}")

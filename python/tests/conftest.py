@@ -1,0 +1,26 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0xC0DEC)
+
+
+def natural_image(rng, h, w):
+    """Synthetic image with a natural-ish (1/f) spectrum: double cumulative
+    sum of white noise, normalized to 0..255 — the python-side stand-in for
+    the Rust plasma generator."""
+    t = np.cumsum(np.cumsum(rng.standard_normal((h, w)), axis=0), axis=1)
+    t = (t - t.min()) / max(t.max() - t.min(), 1e-9) * 255.0
+    return t.astype(np.float32)
+
+
+@pytest.fixture(scope="session")
+def lena_like(rng):
+    return natural_image(rng, 64, 64)

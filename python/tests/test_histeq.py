@@ -1,0 +1,76 @@
+"""Histogram-equalization kernels (the Tables 1-2 caption workload)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import histeq, ref
+
+dims = st.integers(1, 8).map(lambda n: n * 8)
+
+
+def u8_img(seed, h, w):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 256, (h, w)).astype(np.float32)
+
+
+class TestHistogram:
+    def test_matches_bincount(self):
+        img = u8_img(1, 32, 40)
+        got = np.asarray(histeq.histogram256(jnp.asarray(img)))
+        want = np.bincount(img.astype(np.int64).ravel(), minlength=256)
+        np.testing.assert_array_equal(got, want.astype(np.float32))
+
+    def test_total_equals_pixels(self):
+        img = u8_img(2, 16, 24)
+        got = np.asarray(histeq.histogram256(jnp.asarray(img)))
+        assert got.sum() == 16 * 24
+
+    def test_constant_image(self):
+        img = np.full((8, 8), 200.0, np.float32)
+        got = np.asarray(histeq.histogram256(jnp.asarray(img)))
+        assert got[200] == 64 and got.sum() == 64
+
+    @given(h=dims, w=dims, seed=st.integers(0, 2**16))
+    @settings(max_examples=10, deadline=None)
+    def test_hypothesis(self, h, w, seed):
+        img = u8_img(seed, h, w)
+        got = np.asarray(histeq.histogram256(jnp.asarray(img)))
+        want = np.bincount(img.astype(np.int64).ravel(), minlength=256)
+        np.testing.assert_array_equal(got, want.astype(np.float32))
+
+
+class TestHisteq:
+    def test_matches_ref(self):
+        img = u8_img(3, 40, 32)
+        got = np.asarray(histeq.histeq(jnp.asarray(img)))
+        want = np.asarray(ref.histeq(jnp.asarray(img)))
+        np.testing.assert_array_equal(got, want)
+
+    def test_output_range(self):
+        img = u8_img(4, 24, 24) * 0.3 + 100  # low-contrast image
+        out = np.asarray(histeq.histeq(jnp.asarray(img)))
+        assert out.min() >= 0 and out.max() <= 255
+
+    def test_stretches_contrast(self):
+        """Equalization of a low-contrast image must widen the range."""
+        rng = np.random.default_rng(5)
+        img = rng.integers(100, 140, (32, 32)).astype(np.float32)
+        out = np.asarray(histeq.histeq(jnp.asarray(img)))
+        assert out.max() - out.min() > (img.max() - img.min()) * 2
+
+    def test_monotone_mapping(self):
+        """Equalization is a monotone LUT: pixel ordering is preserved."""
+        img = u8_img(6, 16, 16)
+        out = np.asarray(histeq.histeq(jnp.asarray(img)))
+        flat_in, flat_out = img.ravel(), out.ravel()
+        order = np.argsort(flat_in, kind="stable")
+        assert np.all(np.diff(flat_out[order]) >= -1e-6)
+
+    def test_full_range_image_near_identity(self):
+        """An already-uniform ramp stays (approximately) itself."""
+        ramp = np.tile(np.arange(256, dtype=np.float32), (8, 1))
+        out = np.asarray(histeq.histeq(jnp.asarray(ramp)))
+        assert np.abs(out - ramp).max() <= 2.0

@@ -1,0 +1,172 @@
+"""Unit tests for the 8-point transform layer: flow graph vs DCT matrix,
+CORDIC rotation accuracy, forward/inverse round trips."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import transform8 as t8
+
+
+def vec8(seed):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(8)
+
+
+class TestDctMatrix:
+    def test_orthonormal(self):
+        d = t8.dct_matrix()
+        assert np.allclose(d @ d.T, np.eye(8), atol=1e-12)
+
+    def test_dc_row(self):
+        d = t8.dct_matrix()
+        assert np.allclose(d[0], 1.0 / math.sqrt(8.0))
+
+    def test_known_impulse(self):
+        # DCT of a unit impulse at n=0 is the first column of D.
+        d = t8.dct_matrix()
+        x = np.zeros(8)
+        x[0] = 1.0
+        assert np.allclose(d @ x, d[:, 0])
+
+
+class TestLoefflerExact:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_matches_matrix(self, seed):
+        x = vec8(seed)
+        d = t8.dct_matrix()
+        got = np.array(t8.loeffler8_fwd(list(x), t8.exact_rotators()))
+        assert np.allclose(got, d @ x, atol=1e-9)
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_inverse_roundtrip(self, seed):
+        x = vec8(seed)
+        rs = t8.exact_rotators()
+        y = t8.loeffler8_fwd(list(x), rs)
+        back = np.array(t8.loeffler8_inv(y, rs))
+        assert np.allclose(back, x, atol=1e-9)
+
+    @given(st.lists(st.floats(-1e3, 1e3), min_size=8, max_size=8))
+    @settings(max_examples=50, deadline=None)
+    def test_matches_matrix_hypothesis(self, xs):
+        x = np.array(xs)
+        d = t8.dct_matrix()
+        got = np.array(t8.loeffler8_fwd(list(x), t8.exact_rotators()))
+        assert np.allclose(got, d @ x, atol=1e-6 * max(1.0, np.abs(x).max()))
+
+
+class TestCordicPlan:
+    @pytest.mark.parametrize("theta", [t8.ANGLE_ODD_A, t8.ANGLE_ODD_B,
+                                       t8.ANGLE_EVEN])
+    @pytest.mark.parametrize("iters", [2, 3, 4, 6, 10])
+    def test_angle_converges(self, theta, iters):
+        _sig, phi, _gain = t8.cordic_plan(theta, iters)
+        # CORDIC residual angle error is bounded by the last micro-rotation.
+        assert abs(phi - theta) <= math.atan(2.0 ** (-(iters - 1))) + 1e-12
+
+    def test_gain_formula(self):
+        _sig, _phi, gain = t8.cordic_plan(0.5, 5)
+        expect = math.prod(math.sqrt(1 + 4.0 ** (-i)) for i in range(5))
+        assert gain == pytest.approx(expect)
+
+    @pytest.mark.parametrize("iters,frac", [(3, 10), (4, 12), (6, 14)])
+    def test_rotation_accuracy_scales(self, iters, frac):
+        """CORDIC rotation approaches the exact rotation as iters grow."""
+        rng = np.random.default_rng(42)
+        x, y = rng.standard_normal(2)
+        rot_c = t8.Rotator(t8.ANGLE_ODD_A, mode="cordic", iters=iters,
+                           frac_bits=frac)
+        rot_e = t8.Rotator(t8.ANGLE_ODD_A)
+        gx, gy = t8.rotate_cw(np.float64(x), np.float64(y), rot_c)
+        ex, ey = t8.rotate_cw(x, y, rot_e)
+        err = max(abs(float(gx) - ex), abs(float(gy) - ey))
+        bound = math.atan(2.0 ** (-(iters - 1))) * 2.0 + 2.0 ** (-frac) * 8
+        assert err < bound
+
+    def test_rotation_preserves_norm_approximately(self):
+        rot = t8.Rotator(t8.ANGLE_EVEN, scale=t8.SQRT2, mode="cordic",
+                         iters=4, frac_bits=14)
+        x, y = 0.7, -0.3
+        gx, gy = t8.rotate_cw(np.float64(x), np.float64(y), rot)
+        r_in = math.hypot(x, y) * t8.SQRT2
+        r_out = math.hypot(float(gx), float(gy))
+        assert r_out == pytest.approx(r_in, rel=0.05)
+
+    def test_ccw_inverts_cw(self):
+        rot = t8.Rotator(t8.ANGLE_ODD_B, mode="cordic", iters=4,
+                         frac_bits=14)
+        x, y = 0.25, -0.8
+        fx, fy = t8.rotate_cw(np.float64(x), np.float64(y), rot)
+        bx, by = t8.rotate_ccw(fx, fy, rot)
+        assert float(bx) == pytest.approx(x, abs=2e-3)
+        assert float(by) == pytest.approx(y, abs=2e-3)
+
+
+class TestCordicLoeffler:
+    @pytest.mark.parametrize("seed", range(4))
+    def test_close_to_exact_dct(self, seed):
+        """The Cordic variant approximates the DCT within the angle-error
+        budget (this is exactly the approximation the PSNR tables probe)."""
+        x = vec8(seed) * 100.0
+        d = t8.dct_matrix()
+        got = np.array(t8.loeffler8_fwd(list(x), t8.cordic_rotators()))
+        ref = d @ x
+        # Residual angle error of an n-iteration CORDIC rotator is bounded
+        # by atan(2^-(n-1)); a rotation that is off by dtheta moves a vector
+        # by at most 2*sin(dtheta/2)*|v|.
+        import math
+        dtheta = math.atan(2.0 ** (-(t8.cordic_rotators().odd_a.iters - 1)))
+        bound = 2 * math.sin(dtheta / 2) * np.linalg.norm(x) + 1.0
+        assert np.abs(got - ref).max() < bound
+        # but NOT exactly equal — the approximation must be visible,
+        # otherwise the Table 3/4 gap would vanish.
+        assert np.abs(got - ref).max() > 1e-6
+
+    def test_dc_is_exact_mean(self):
+        """Lane 0 (DC) passes through butterflies only — no rotators — so
+        it must match the exact DCT's DC up to fixed-point rounding."""
+        x = np.full(8, 37.0)
+        got = t8.loeffler8_fwd(list(x), t8.cordic_rotators())
+        assert float(got[0]) == pytest.approx(37.0 * math.sqrt(8), abs=0.1)
+        for k in range(1, 8):
+            assert abs(float(got[k])) < 0.1
+
+
+class TestStrip:
+    def test_strip_matches_blockwise_matrix(self):
+        rng = np.random.default_rng(3)
+        strip = rng.standard_normal((8, 40)).astype(np.float32)
+        got = np.asarray(t8.transform_strip_matrix(strip))
+        d = t8.dct_matrix().astype(np.float32)
+        for b in range(5):
+            blk = strip[:, b * 8:(b + 1) * 8]
+            assert np.allclose(got[:, b * 8:(b + 1) * 8], d @ blk @ d.T,
+                               atol=1e-4)
+
+    def test_strip_flow_matches_strip_matrix(self):
+        rng = np.random.default_rng(4)
+        strip = rng.standard_normal((8, 32)).astype(np.float32)
+        a = np.asarray(t8.transform_strip(strip, t8.exact_rotators()))
+        b = np.asarray(t8.transform_strip_matrix(strip))
+        assert np.allclose(a, b, atol=1e-4)
+
+    @pytest.mark.parametrize("inverse", [False, True])
+    def test_strip_matrix_roundtrip(self, inverse):
+        rng = np.random.default_rng(5)
+        strip = rng.standard_normal((8, 64)).astype(np.float32)
+        fwd = np.asarray(t8.transform_strip_matrix(strip, inverse=inverse))
+        back = np.asarray(
+            t8.transform_strip_matrix(fwd, inverse=not inverse))
+        assert np.allclose(back, strip, atol=1e-4)
+
+    def test_strip_flow_roundtrip(self):
+        rng = np.random.default_rng(6)
+        strip = rng.standard_normal((8, 24)).astype(np.float32)
+        rs = t8.exact_rotators()
+        back = np.asarray(
+            t8.transform_strip(t8.transform_strip(strip, rs), rs,
+                               inverse=True))
+        assert np.allclose(back, strip, atol=1e-4)

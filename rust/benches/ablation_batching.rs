@@ -1,0 +1,92 @@
+//! A2 ablation: coordinator batching policy — throughput and latency of
+//! the service under a same-shape burst, sweeping gpu_max_batch and
+//! worker count. Uses the CPU lane fallback when artifacts are missing so
+//! the queue/batcher mechanics are measured either way.
+
+use std::time::Instant;
+
+use cordic_dct::bench::{rows_to_json, save_results, Row};
+use cordic_dct::coordinator::{
+    Backpressure, Lane, Service, ServiceConfig,
+};
+use cordic_dct::coordinator::batcher::BatchPolicy;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::synthetic;
+use cordic_dct::util::timer::Stats;
+
+fn run_once(workers: usize, batch: usize, n: usize, lane: Lane)
+            -> anyhow::Result<(f64, f64)> {
+    let cfg = ServiceConfig {
+        workers,
+        queue_capacity: n.max(4),
+        backpressure: Backpressure::Block,
+        batch: BatchPolicy {
+            gpu_max_batch: batch,
+            cpu_max_batch: batch,
+            linger: std::time::Duration::from_micros(if batch > 1 {
+                200
+            } else {
+                0
+            }),
+        },
+        quality: 50,
+        artifact_dir: Some("artifacts".into()),
+    };
+    let svc = Service::start(cfg)?;
+    let img = synthetic::lena_like(200, 200, 5); // 200x200 has artifacts
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n)
+        .map(|_| svc.compress(img.clone(), Variant::Cordic, lane))
+        .collect::<anyhow::Result<_>>()?;
+    let mut total_lat = 0.0;
+    for h in handles {
+        let r = h.wait();
+        r.result?;
+        total_lat += r.queue_ms + r.process_ms;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    svc.shutdown();
+    Ok((n as f64 / wall, total_lat / n as f64))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("CORDIC_DCT_BENCH_QUICK").is_ok();
+    let n = if quick { 24 } else { 64 };
+    let lane = if std::path::Path::new("artifacts/manifest.json").exists() {
+        Lane::Gpu
+    } else {
+        Lane::Cpu
+    };
+    println!(
+        "== batching ablation: {n} x 200x200 cordic jobs, lane {lane:?} =="
+    );
+    println!(
+        "{:>8} {:>8} {:>14} {:>14}",
+        "workers", "batch", "req/s", "mean lat (ms)"
+    );
+    let mut rows = Vec::new();
+    let workers_sweep: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
+    let batch_sweep: &[usize] = if quick { &[1, 8] } else { &[1, 2, 8, 32] };
+    for &workers in workers_sweep {
+        for &batch in batch_sweep {
+            let (rps, lat) = run_once(workers, batch, n, lane)?;
+            println!("{workers:>8} {batch:>8} {rps:>14.1} {lat:>14.1}");
+            rows.push(Row {
+                label: format!("w{workers}_b{batch}"),
+                cpu: Some(Stats::from_samples_ms(&[lat])),
+                gpu: None,
+                extra: vec![
+                    ("workers".into(), workers.to_string()),
+                    ("batch".into(), batch.to_string()),
+                    ("req_per_s".into(), format!("{rps:.2}")),
+                ],
+            });
+        }
+    }
+    save_results(
+        "ablation_batching",
+        &format!("{rows:#?}"),
+        &rows_to_json("ablation_batching", &rows),
+    );
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! A1 ablation: cost and quality of each 8x8 transform implementation —
+//! naive (paper eq. 6 verbatim), separable matrix, Loeffler (exact
+//! rotators) and Cordic-based Loeffler — plus the fused vs unfused
+//! artifact comparison on the PJRT lane (paper §3.2 runs DCT, quantizer
+//! and IDCT as separate kernels; our fused kernel is the optimization).
+
+use cordic_dct::bench::{bench_config, render_table, rows_to_json,
+                        save_results, Row};
+use cordic_dct::bench::tables::try_runtime;
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::synthetic;
+use cordic_dct::metrics;
+
+fn main() -> anyhow::Result<()> {
+    let bench = bench_config();
+    let img = synthetic::lena_like(512, 512, 1);
+    let mpix = img.pixels() as f64 / 1e6;
+
+    println!("\n== transform variant ablation (512x512 Lena-like) ==");
+    println!(
+        "{:<18} {:>10} {:>10} {:>12} {:>12} {:>10}",
+        "variant", "mult/blk", "add/blk", "ms/image", "ms/MPixel", "PSNR(dB)"
+    );
+    let mut rows = Vec::new();
+    for variant in [
+        Variant::Naive,
+        Variant::Dct,
+        Variant::Loeffler,
+        Variant::Cordic,
+    ] {
+        let t = variant.transform();
+        let (mul, add) = t.ops_per_block();
+        let pipe = CpuPipeline::new(variant, 50);
+        let stats = bench.run(|| pipe.compress(&img));
+        let psnr = metrics::psnr(&img, &pipe.compress(&img).recon);
+        println!(
+            "{:<18} {:>10} {:>10} {:>12.2} {:>12.2} {:>10.2}",
+            t.name(),
+            mul,
+            add,
+            stats.median_ms,
+            stats.median_ms / mpix,
+            psnr
+        );
+        rows.push(Row {
+            label: t.name().into(),
+            cpu: Some(stats),
+            gpu: None,
+            extra: vec![
+                ("mult_per_block".into(), mul.to_string()),
+                ("add_per_block".into(), add.to_string()),
+                ("psnr".into(), format!("{psnr:.3}")),
+            ],
+        });
+    }
+
+    // fused vs unfused PJRT pipelines (512x512 artifacts)
+    if let Some(rt) = try_runtime() {
+        println!("\n== fused vs unfused PJRT pipeline (512x512) ==");
+        let input: Vec<f32> = img.to_f32();
+        let mut fused_rows = Vec::new();
+        for (label, name) in [
+            ("fused dct", "compress_dct_512x512"),
+            ("unfused dct", "compress_unfused_dct_512x512"),
+            ("fused cordic", "compress_cordic_512x512"),
+            ("unfused cordic", "compress_unfused_cordic_512x512"),
+        ] {
+            let exe = rt.executable(name)?;
+            let stats =
+                bench.run(|| exe.run_f32(&[(&input, 512, 512)]).unwrap());
+            println!("{label:<16} {:>10.2} ms", stats.median_ms);
+            fused_rows.push(Row {
+                label: label.into(),
+                cpu: None,
+                gpu: Some(stats),
+                extra: vec![],
+            });
+        }
+        rows.extend(fused_rows);
+    } else {
+        println!("(PJRT fusion ablation skipped: no artifacts)");
+    }
+
+    let text = render_table("ablation: DCT variants", &rows);
+    save_results(
+        "ablation_dct_variants",
+        &text,
+        &rows_to_json("ablation_dct_variants", &rows),
+    );
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! E3/E4: paper Figures 5/6 and 10/11 — the speedup curves derived from
+//! the Table 1/2 sweeps, rendered as ASCII figures and saved as JSON
+//! series for external plotting.
+
+use cordic_dct::bench::tables::{
+    self, render_speedup_figure, speedup_series,
+};
+use cordic_dct::bench::{bench_config, rows_to_json, save_results};
+use cordic_dct::dct::Variant;
+
+fn main() -> anyhow::Result<()> {
+    let bench = bench_config();
+    for (name, title, scene, sizes) in [
+        (
+            "figures_5_6_lena",
+            "Figures 5-6: Lena speedup (CPU/GPU ratio per size)",
+            "lena",
+            tables::LENA_SIZES,
+        ),
+        (
+            "figures_10_11_cablecar",
+            "Figures 10-11: Cable-car speedup",
+            "cablecar",
+            tables::CABLECAR_SIZES,
+        ),
+    ] {
+        let sizes = tables::maybe_trim(sizes);
+        let rows =
+            tables::timing_table(scene, &sizes, Variant::Cordic, bench)?;
+        let series = speedup_series(&rows);
+        let text = render_speedup_figure(title, &series);
+        println!("{text}");
+        if series.is_empty() {
+            println!(
+                "(no GPU lane — run `make artifacts` for speedup figures)"
+            );
+        } else {
+            // the paper's qualitative claim: speedup grows with image size
+            let first = series.last().unwrap().1; // smallest size
+            let peak = series
+                .iter()
+                .map(|(_, v)| *v)
+                .fold(f64::MIN, f64::max);
+            println!(
+                "smallest-size speedup {first:.1}x, peak {peak:.1}x -> \
+                 gap widens with size: {}",
+                peak > first
+            );
+        }
+        save_results(name, &text, &rows_to_json(name, &rows));
+    }
+    Ok(())
+}

@@ -1,0 +1,153 @@
+//! P1: hot-path microbenchmarks for the §Perf pass — per-component cost
+//! so the optimization loop knows where the time goes:
+//!
+//! * block extract/store (layout plumbing)
+//! * each 8x8 forward transform
+//! * quantize/dequantize
+//! * zigzag + RLE symbolization
+//! * Huffman table build + full entropy encode
+//! * PJRT literal marshaling vs execute (GPU-lane overhead split)
+
+use std::time::Instant;
+
+use cordic_dct::bench::{bench_config, rows_to_json, save_results, Row};
+use cordic_dct::bench::tables::try_runtime;
+use cordic_dct::codec::{encoder, variant_tag, Header};
+use cordic_dct::codec::zigzag;
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::{blocks, quant, Variant};
+use cordic_dct::image::synthetic;
+
+fn main() -> anyhow::Result<()> {
+    let bench = bench_config();
+    let img = synthetic::lena_like(512, 512, 1);
+    let padded = blocks::pad_to_blocks(&img);
+    let (gw, gh) = blocks::grid_dims(padded.width, padded.height);
+    let nblocks = (gw * gh) as f64;
+    let mut rows: Vec<Row> = Vec::new();
+    let mut report = |label: &str, stats: cordic_dct::util::timer::Stats,
+                      per: f64, unit: &str| {
+        println!(
+            "{label:<28} {:>10.3} ms   {:>10.1} ns/{unit}",
+            stats.median_ms,
+            stats.median_ms * 1e6 / per
+        );
+        rows.push(Row {
+            label: label.into(),
+            cpu: Some(stats),
+            gpu: None,
+            extra: vec![("unit".into(), unit.into())],
+        });
+    };
+
+    println!("== hot-path microbench (512x512) ==");
+
+    // layout plumbing
+    let mut block = [0.0f32; 64];
+    let s = bench.run(|| {
+        for by in 0..gh {
+            for bx in 0..gw {
+                blocks::extract_block(&padded, bx, by, &mut block);
+                std::hint::black_box(&block);
+            }
+        }
+    });
+    report("extract all blocks", s, nblocks, "block");
+
+    // transforms
+    for variant in [
+        Variant::Naive,
+        Variant::Dct,
+        Variant::Loeffler,
+        Variant::Cordic,
+    ] {
+        let t = variant.transform();
+        let proto: [f32; 64] = std::array::from_fn(|i| (i as f32) - 32.0);
+        let s = bench.run(|| {
+            let mut b = proto;
+            for _ in 0..1024 {
+                t.forward(&mut b);
+                std::hint::black_box(&b);
+            }
+        });
+        report(
+            &format!("fwd8x8 {} x1024", t.name()),
+            s,
+            1024.0,
+            "block",
+        );
+    }
+
+    // quantization
+    let q = quant::effective_qtable(50);
+    let coef: [f32; 64] = std::array::from_fn(|i| (i as f32) * 3.7 - 100.0);
+    let mut qc = [0i16; 64];
+    let s = bench.run(|| {
+        for _ in 0..1024 {
+            quant::quantize_block(&coef, &q, &mut qc);
+            std::hint::black_box(&qc);
+        }
+    });
+    report("quantize x1024", s, 1024.0, "block");
+
+    // zigzag + symbols
+    let s = bench.run(|| {
+        for _ in 0..1024 {
+            let z = zigzag::scan(&qc);
+            std::hint::black_box(
+                cordic_dct::codec::rle::encode_block(&z, 0),
+            );
+        }
+    });
+    report("zigzag+rle x1024", s, 1024.0, "block");
+
+    // full entropy encode
+    let pipe = CpuPipeline::new(Variant::Cordic, 50);
+    let (qcoef, pw, ph) = pipe.analyze(&img);
+    let header = Header {
+        width: 512,
+        height: 512,
+        padded_width: pw as u32,
+        padded_height: ph as u32,
+        quality: 50,
+        variant: variant_tag(Variant::Cordic),
+    };
+    let s = bench.run(|| encoder::encode(&header, &qcoef).unwrap());
+    report("entropy encode image", s, nblocks, "block");
+
+    // full CPU pipeline for scale
+    let s = bench.run(|| pipe.compress(&img));
+    report("full cpu pipeline", s, nblocks, "block");
+
+    // PJRT overhead split
+    if let Some(rt) = try_runtime() {
+        let exe = rt.executable("compress_cordic_512x512")?;
+        let input = img.to_f32();
+        let s = bench.run(|| exe.run_f32(&[(&input, 512, 512)]).unwrap());
+        report("pjrt execute (warm)", s, nblocks, "block");
+        // marshaling only: build + drop the literal
+        let s = bench.run(|| {
+            let t0 = Instant::now();
+            let lit = xla_literal_roundtrip(&input);
+            std::hint::black_box(lit);
+            t0.elapsed()
+        });
+        report("literal marshal 1 MPix", s, 512.0 * 512.0, "pixel");
+    } else {
+        println!("(pjrt rows skipped: no artifacts)");
+    }
+
+    let text = format!("{rows:#?}");
+    save_results(
+        "microbench_hotpath",
+        &text,
+        &rows_to_json("microbench_hotpath", &rows),
+    );
+    Ok(())
+}
+
+fn xla_literal_roundtrip(input: &[f32]) -> usize {
+    let lit = xla::Literal::vec1(input);
+    let lit = lit.reshape(&[512, 512]).unwrap();
+    lit.to_vec::<f32>().map(|v| v.len()).unwrap_or(0)
+}

@@ -1,0 +1,17 @@
+//! E1: paper Table 1 — time comparison of the grayscale DCT-compression
+//! pipeline on Lena across the paper's seven sizes, CPU (serial rust)
+//! vs GPU (PJRT) lane.
+//!
+//! Set CORDIC_DCT_BENCH_QUICK=1 to trim to <=1 MPixel sizes.
+
+use cordic_dct::bench::tables;
+
+fn main() -> anyhow::Result<()> {
+    tables::run_timing_experiment(
+        "table1_lena",
+        "Table 1: Lena pipeline timing (CPU serial vs PJRT)",
+        "lena",
+        tables::LENA_SIZES,
+        tables::PAPER_TABLE1,
+    )
+}

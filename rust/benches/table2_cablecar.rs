@@ -1,0 +1,13 @@
+//! E2: paper Table 2 — Cable-car timing sweep, CPU vs GPU lanes.
+
+use cordic_dct::bench::tables;
+
+fn main() -> anyhow::Result<()> {
+    tables::run_timing_experiment(
+        "table2_cablecar",
+        "Table 2: Cable-car pipeline timing (CPU serial vs PJRT)",
+        "cablecar",
+        tables::CABLECAR_SIZES,
+        tables::PAPER_TABLE2,
+    )
+}

@@ -1,0 +1,13 @@
+//! E5: paper Table 3 — Lena PSNR, exact DCT vs Cordic-based Loeffler,
+//! per size (200^2, 512^2, 2048^2, 3072^2).
+
+use cordic_dct::bench::tables;
+
+fn main() -> anyhow::Result<()> {
+    tables::run_psnr_experiment(
+        "table3_psnr_lena",
+        "Table 3: Lena PSNR (DCT vs Cordic-based Loeffler)",
+        "lena",
+        tables::LENA_PSNR_SIZES,
+    )
+}

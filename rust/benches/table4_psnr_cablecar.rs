@@ -1,0 +1,13 @@
+//! E6: paper Table 4 — Cable-car PSNR, exact DCT vs Cordic-based
+//! Loeffler, across the five Table 2 sizes.
+
+use cordic_dct::bench::tables;
+
+fn main() -> anyhow::Result<()> {
+    tables::run_psnr_experiment(
+        "table4_psnr_cablecar",
+        "Table 4: Cable-car PSNR (DCT vs Cordic-based Loeffler)",
+        "cablecar",
+        tables::CABLECAR_PSNR_SIZES,
+    )
+}

@@ -1,0 +1,178 @@
+//! Benchmark harness: the measurement protocol behind every paper table
+//! (warmup + repeated wall-clock samples + median), plus the table
+//! formatters the `cargo bench` targets print.
+
+pub mod tables;
+
+use crate::util::timer::{Bench, Stats};
+
+/// A single (label, stats) measurement row.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub cpu: Option<Stats>,
+    pub gpu: Option<Stats>,
+    pub extra: Vec<(String, String)>,
+}
+
+impl Row {
+    pub fn speedup(&self) -> Option<f64> {
+        match (&self.cpu, &self.gpu) {
+            (Some(c), Some(g)) if g.median_ms > 0.0 => {
+                Some(c.median_ms / g.median_ms)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Render rows in the paper's table style.
+pub fn render_table(title: &str, rows: &[Row]) -> String {
+    let mut s = format!("\n=== {title} ===\n");
+    s += &format!(
+        "{:<16} {:>12} {:>12} {:>10}\n",
+        "Input image", "CPU(ms)", "GPU(ms)", "Speedup"
+    );
+    for r in rows {
+        let cpu = r
+            .cpu
+            .as_ref()
+            .map(|st| format!("{:.2}", st.median_ms))
+            .unwrap_or_else(|| "-".into());
+        let gpu = r
+            .gpu
+            .as_ref()
+            .map(|st| format!("{:.2}", st.median_ms))
+            .unwrap_or_else(|| "-".into());
+        let sp = r
+            .speedup()
+            .map(|v| format!("{v:.1}x"))
+            .unwrap_or_else(|| "-".into());
+        s += &format!("{:<16} {:>12} {:>12} {:>10}", r.label, cpu, gpu, sp);
+        for (k, v) in &r.extra {
+            s += &format!("  {k}={v}");
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Emit a machine-readable JSON line per row (collected into
+/// bench_results/*.json by the bench targets).
+pub fn rows_to_json(table: &str, rows: &[Row]) -> String {
+    use crate::util::json::Json;
+    let arr: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            let mut pairs: Vec<(&str, Json)> = vec![
+                ("label", Json::str(r.label.clone())),
+            ];
+            if let Some(c) = &r.cpu {
+                pairs.push(("cpu_ms", Json::num(c.median_ms)));
+                pairs.push(("cpu_mean_ms", Json::num(c.mean_ms)));
+            }
+            if let Some(g) = &r.gpu {
+                pairs.push(("gpu_ms", Json::num(g.median_ms)));
+                pairs.push(("gpu_mean_ms", Json::num(g.mean_ms)));
+            }
+            if let Some(s) = r.speedup() {
+                pairs.push(("speedup", Json::num(s)));
+            }
+            for (k, v) in &r.extra {
+                // numbers pass through as numbers when they parse
+                if let Ok(n) = v.parse::<f64>() {
+                    pairs.push((Box::leak(k.clone().into_boxed_str()),
+                                Json::num(n)));
+                } else {
+                    pairs.push((Box::leak(k.clone().into_boxed_str()),
+                                Json::str(v.clone())));
+                }
+            }
+            Json::obj(pairs)
+        })
+        .collect();
+    Json::obj(vec![
+        ("table", Json::str(table)),
+        ("rows", Json::Arr(arr)),
+    ])
+    .to_string()
+}
+
+/// Persist bench output under bench_results/ (created on demand).
+pub fn save_results(name: &str, text: &str, json: &str) {
+    let dir = std::path::Path::new("bench_results");
+    let _ = std::fs::create_dir_all(dir);
+    let _ = std::fs::write(dir.join(format!("{name}.txt")), text);
+    let _ = std::fs::write(dir.join(format!("{name}.json")), json);
+}
+
+/// Bench config from env: CORDIC_DCT_BENCH_QUICK=1 trims iterations (CI).
+pub fn bench_config() -> Bench {
+    if std::env::var("CORDIC_DCT_BENCH_QUICK").is_ok() {
+        Bench {
+            warmup: 1,
+            iters: 3,
+            budget_ms: 2_000.0,
+        }
+    } else {
+        Bench {
+            warmup: 2,
+            iters: 7,
+            budget_ms: 20_000.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::timer::Stats;
+
+    fn stats(ms: f64) -> Stats {
+        Stats::from_samples_ms(&[ms, ms, ms])
+    }
+
+    #[test]
+    fn speedup_computed() {
+        let r = Row {
+            label: "512x512".into(),
+            cpu: Some(stats(100.0)),
+            gpu: Some(stats(4.0)),
+            extra: vec![],
+        };
+        assert_eq!(r.speedup(), Some(25.0));
+    }
+
+    #[test]
+    fn render_contains_rows() {
+        let rows = vec![Row {
+            label: "200x200".into(),
+            cpu: Some(stats(6.88)),
+            gpu: Some(stats(0.24)),
+            extra: vec![("psnr".into(), "31.61".into())],
+        }];
+        let t = render_table("Table 1", &rows);
+        assert!(t.contains("200x200"));
+        assert!(t.contains("6.88"));
+        assert!(t.contains("psnr=31.61"));
+    }
+
+    #[test]
+    fn json_parses_back() {
+        let rows = vec![Row {
+            label: "a".into(),
+            cpu: Some(stats(2.0)),
+            gpu: None,
+            extra: vec![("k".into(), "3.5".into())],
+        }];
+        let j = rows_to_json("t", &rows);
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(
+            parsed.get("table").unwrap().as_str().unwrap(),
+            "t"
+        );
+        let row = &parsed.get("rows").unwrap().as_arr().unwrap()[0];
+        assert_eq!(row.get("cpu_ms").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(row.get("k").unwrap().as_f64().unwrap(), 3.5);
+    }
+}

@@ -1,0 +1,357 @@
+//! Paper-experiment drivers: one function per table/figure, shared by the
+//! `cargo bench` targets and the `paper-tables` CLI subcommand.
+//!
+//! Experiment map (DESIGN.md §5):
+//!   E1 Table 1      — Lena sweep, CPU vs GPU wall ms
+//!   E2 Table 2      — Cable-car sweep
+//!   E3 Fig. 5/6     — speedup series from E1
+//!   E4 Fig. 10/11   — speedup series from E2
+//!   E5 Table 3      — Lena PSNR, DCT vs Cordic-Loeffler
+//!   E6 Table 4      — Cable-car PSNR
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::dct::pipeline::CpuPipeline;
+use crate::dct::Variant;
+use crate::image::{synthetic, GrayImage};
+use crate::metrics;
+use crate::runtime::{Executor, Runtime};
+use crate::util::timer::Bench;
+
+use super::{render_table, rows_to_json, save_results, Row};
+
+/// The paper's size sweeps, (height, width) — matching the artifact
+/// naming (`compress_*_{H}x{W}`) and the labels printed in the tables.
+pub const LENA_SIZES: &[(usize, usize)] = &[
+    (3072, 3072),
+    (2048, 2048),
+    (1600, 1400),
+    (1024, 814),
+    (576, 720),
+    (512, 512),
+    (200, 200),
+];
+
+pub const CABLECAR_SIZES: &[(usize, usize)] = &[
+    (544, 512),
+    (512, 480),
+    (448, 416),
+    (384, 352),
+    (320, 288),
+];
+
+/// PSNR-table subsets (paper Tables 3-4 column sets).
+pub const LENA_PSNR_SIZES: &[(usize, usize)] =
+    &[(200, 200), (512, 512), (2048, 2048), (3072, 3072)];
+pub const CABLECAR_PSNR_SIZES: &[(usize, usize)] = CABLECAR_SIZES;
+
+/// Paper reference numbers for side-by-side printing (CPU ms, GPU ms).
+pub const PAPER_TABLE1: &[(&str, f64, f64)] = &[
+    ("3072x3072", 1020.32, 8.92),
+    ("2048x2048", 266.23, 5.61),
+    ("1600x1400", 116.12, 2.20),
+    ("1024x814", 88.23, 1.24),
+    ("576x720", 48.52, 0.82),
+    ("512x512", 16.42, 0.62),
+    ("200x200", 6.88, 0.24),
+];
+
+pub const PAPER_TABLE2: &[(&str, f64, f64)] = &[
+    ("544x512", 30.32, 0.58),
+    ("512x480", 26.84, 0.41),
+    ("448x416", 21.22, 0.34),
+    ("384x352", 17.28, 0.26),
+    ("320x288", 10.86, 0.19),
+];
+
+/// Build the scene image at a sweep size ((h, w) tuples; GrayImage takes
+/// width first).
+pub fn scene_image(scene: &str, h: usize, w: usize) -> GrayImage {
+    synthetic::by_name(scene, w, h, 0xD_C7)
+        .unwrap_or_else(|| panic!("unknown scene {scene}"))
+}
+
+/// Load the runtime if artifacts are present.
+pub fn try_runtime() -> Option<Arc<Runtime>> {
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Runtime::new(dir).ok().map(Arc::new)
+    } else {
+        None
+    }
+}
+
+/// Cap a size sweep for quick mode (drop > 1 MPixel entries).
+pub fn maybe_trim(sizes: &[(usize, usize)]) -> Vec<(usize, usize)> {
+    if std::env::var("CORDIC_DCT_BENCH_QUICK").is_ok() {
+        sizes
+            .iter()
+            .copied()
+            .filter(|&(h, w)| h * w <= 1024 * 1024)
+            .collect()
+    } else {
+        sizes.to_vec()
+    }
+}
+
+/// E1/E2: timing sweep over one scene. `variant` is the transform both
+/// lanes run (the paper's tables time the full DCT pipeline).
+pub fn timing_table(
+    scene: &str,
+    sizes: &[(usize, usize)],
+    variant: Variant,
+    bench: Bench,
+) -> Result<Vec<Row>> {
+    let runtime = try_runtime();
+    let executor = runtime.map(Executor::new);
+    let cpu_pipe = CpuPipeline::new(variant, 50);
+    let mut rows = Vec::new();
+    for &(h, w) in sizes {
+        let img = scene_image(scene, h, w);
+        let cpu = bench.run(|| cpu_pipe.compress(&img));
+        let gpu = executor.as_ref().map(|ex| {
+            bench.run(|| {
+                ex.compress(&img, variant.as_str())
+                    .expect("gpu lane compress")
+            })
+        });
+        let mut extra = Vec::new();
+        if let Some(ex) = &executor {
+            // per-row PSNR sanity tag
+            let out = ex.compress(&img, variant.as_str())?;
+            extra.push((
+                "psnr".into(),
+                format!("{:.2}", metrics::psnr(&img, &out.recon)),
+            ));
+        }
+        rows.push(Row {
+            label: format!("{h}x{w}"),
+            cpu: Some(cpu),
+            gpu,
+            extra,
+        });
+    }
+    Ok(rows)
+}
+
+/// E5/E6: PSNR table — exact DCT vs Cordic-based Loeffler per size.
+pub fn psnr_table(scene: &str, sizes: &[(usize, usize)])
+                  -> Result<Vec<Row>> {
+    let dct = CpuPipeline::new(Variant::Dct, 50);
+    let cordic = CpuPipeline::new(Variant::Cordic, 50);
+    let mut rows = Vec::new();
+    for &(h, w) in sizes {
+        let img = scene_image(scene, h, w);
+        let p_dct = metrics::psnr(&img, &dct.compress(&img).recon);
+        let p_cor = metrics::psnr(&img, &cordic.compress(&img).recon);
+        rows.push(Row {
+            label: format!("{h}x{w}"),
+            cpu: None,
+            gpu: None,
+            extra: vec![
+                ("dct_psnr".into(), format!("{p_dct:.6}")),
+                ("cordic_psnr".into(), format!("{p_cor:.6}")),
+                ("gap_db".into(), format!("{:.3}", p_dct - p_cor)),
+            ],
+        });
+    }
+    Ok(rows)
+}
+
+/// Speedup series (Figures 5/6/10/11): derived from a timing table.
+pub fn speedup_series(rows: &[Row]) -> Vec<(String, f64)> {
+    rows.iter()
+        .filter_map(|r| r.speedup().map(|s| (r.label.clone(), s)))
+        .collect()
+}
+
+/// Render a PSNR table in the paper's layout (Tables 3-4).
+pub fn render_psnr_table(title: &str, rows: &[Row]) -> String {
+    let mut s = format!("\n=== {title} ===\n");
+    s += &format!("{:<14}", "");
+    for r in rows {
+        s += &format!("{:>14}", r.label);
+    }
+    s.push('\n');
+    for (key, name) in [
+        ("dct_psnr", "DCT"),
+        ("cordic_psnr", "Cordic-Loeffler"),
+        ("gap_db", "gap (dB)"),
+    ] {
+        s += &format!("{name:<14}");
+        for r in rows {
+            let v = r
+                .extra
+                .iter()
+                .find(|(k, _)| k == key)
+                .map(|(_, v)| v.as_str())
+                .unwrap_or("-");
+            s += &format!("{v:>14}");
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Render an ASCII speedup figure (the paper's Figures 5/6/10/11 as a
+/// terminal bar chart).
+pub fn render_speedup_figure(title: &str, series: &[(String, f64)])
+                             -> String {
+    let mut s = format!("\n=== {title} ===\n");
+    let max = series
+        .iter()
+        .map(|(_, v)| *v)
+        .fold(1.0f64, f64::max);
+    for (label, v) in series {
+        let bar_len = ((v / max) * 50.0).round() as usize;
+        s += &format!(
+            "{label:<12} {:>7.1}x |{}\n",
+            v,
+            "#".repeat(bar_len.max(1))
+        );
+    }
+    s
+}
+
+/// Print paper-reference vs measured side by side (shape check).
+pub fn render_paper_comparison(
+    title: &str,
+    rows: &[Row],
+    paper: &[(&str, f64, f64)],
+) -> String {
+    let mut s = format!("\n=== {title}: paper vs measured ===\n");
+    s += &format!(
+        "{:<12} {:>10} {:>10} {:>9} | {:>10} {:>10} {:>9}\n",
+        "size", "paperCPU", "paperGPU", "paperSp", "ourCPU", "ourGPU",
+        "ourSp"
+    );
+    for r in rows {
+        let p = paper.iter().find(|(l, _, _)| *l == r.label);
+        let (pc, pg, ps) = match p {
+            Some((_, c, g)) => {
+                (format!("{c:.2}"), format!("{g:.2}"),
+                 format!("{:.0}x", c / g))
+            }
+            None => ("-".into(), "-".into(), "-".into()),
+        };
+        let oc = r
+            .cpu
+            .as_ref()
+            .map(|v| format!("{:.2}", v.median_ms))
+            .unwrap_or("-".into());
+        let og = r
+            .gpu
+            .as_ref()
+            .map(|v| format!("{:.2}", v.median_ms))
+            .unwrap_or("-".into());
+        let os = r
+            .speedup()
+            .map(|v| format!("{v:.0}x"))
+            .unwrap_or("-".into());
+        s += &format!(
+            "{:<12} {pc:>10} {pg:>10} {ps:>9} | {oc:>10} {og:>10} {os:>9}\n",
+            r.label
+        );
+    }
+    s
+}
+
+/// Run + persist one timing experiment end to end (used by bench mains).
+pub fn run_timing_experiment(
+    name: &str,
+    title: &str,
+    scene: &str,
+    sizes: &[(usize, usize)],
+    paper: &[(&str, f64, f64)],
+) -> Result<()> {
+    let bench = super::bench_config();
+    let sizes = maybe_trim(sizes);
+    let rows = timing_table(scene, &sizes, Variant::Cordic, bench)?;
+    let mut text = render_table(title, &rows);
+    text += &render_paper_comparison(title, &rows, paper);
+    text += &render_speedup_figure(
+        &format!("{title} speedup (figure)"),
+        &speedup_series(&rows),
+    );
+    println!("{text}");
+    save_results(name, &text, &rows_to_json(name, &rows));
+    Ok(())
+}
+
+/// Run + persist one PSNR experiment.
+pub fn run_psnr_experiment(
+    name: &str,
+    title: &str,
+    scene: &str,
+    sizes: &[(usize, usize)],
+) -> Result<()> {
+    let sizes = maybe_trim(sizes);
+    let rows = psnr_table(scene, &sizes)?;
+    let text = render_psnr_table(title, &rows);
+    println!("{text}");
+    save_results(name, &text, &rows_to_json(name, &rows));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::timer::Stats;
+
+    #[test]
+    fn sweeps_match_paper_row_counts() {
+        assert_eq!(LENA_SIZES.len(), 7); // Table 1 has 7 rows
+        assert_eq!(CABLECAR_SIZES.len(), 5); // Table 2 has 5 rows
+        assert_eq!(LENA_PSNR_SIZES.len(), 4); // Table 3 columns
+        assert_eq!(CABLECAR_PSNR_SIZES.len(), 5); // Table 4 columns
+    }
+
+    #[test]
+    fn psnr_table_small() {
+        let rows =
+            psnr_table("lena", &[(64, 64), (128, 128)]).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            let gap: f64 = r
+                .extra
+                .iter()
+                .find(|(k, _)| k == "gap_db")
+                .unwrap()
+                .1
+                .parse()
+                .unwrap();
+            assert!(gap > 0.0, "cordic must trail dct: {gap}");
+        }
+        let rendered = render_psnr_table("t", &rows);
+        assert!(rendered.contains("Cordic-Loeffler"));
+    }
+
+    #[test]
+    fn speedup_series_extracts() {
+        let rows = vec![Row {
+            label: "x".into(),
+            cpu: Some(Stats::from_samples_ms(&[10.0])),
+            gpu: Some(Stats::from_samples_ms(&[2.0])),
+            extra: vec![],
+        }];
+        let s = speedup_series(&rows);
+        assert_eq!(s, vec![("x".to_string(), 5.0)]);
+        let fig = render_speedup_figure("f", &s);
+        assert!(fig.contains("5.0x"));
+    }
+
+    #[test]
+    fn paper_comparison_renders() {
+        let rows = vec![Row {
+            label: "200x200".into(),
+            cpu: Some(Stats::from_samples_ms(&[5.0])),
+            gpu: Some(Stats::from_samples_ms(&[0.5])),
+            extra: vec![],
+        }];
+        let s = render_paper_comparison("T1", &rows, PAPER_TABLE1);
+        assert!(s.contains("6.88"), "paper value shown");
+        assert!(s.contains("10x"), "our speedup shown");
+    }
+}

@@ -1,0 +1,201 @@
+//! Container decoder: header + Huffman tables + entropy-coded blocks back
+//! to planar quantized coefficients. Strictly validating — corrupt input
+//! must produce an `Err`, never a panic or OOM.
+
+use anyhow::{bail, Result};
+
+use crate::dct::blocks::{grid_dims, store_coef_planar};
+use crate::util::bitio::BitReader;
+
+use super::huffman::{HuffmanCode, HuffmanDecoder};
+use super::rle::read_block;
+use super::zigzag::unscan;
+use super::Header;
+
+/// Decoded container: header + planar coefficients (padded layout).
+pub struct Decoded {
+    pub header: Header,
+    pub qcoef_planar: Vec<f32>,
+}
+
+/// Maximum pixel count we will allocate for (DoS guard on corrupt
+/// headers): 64 MPixel covers the paper's 3072x3072 with a wide margin.
+const MAX_PIXELS: u64 = 64 * 1024 * 1024;
+
+pub fn decode(bytes: &[u8]) -> Result<Decoded> {
+    let (header, mut off) = Header::read(bytes)?;
+    let pw = header.padded_width as u64;
+    let ph = header.padded_height as u64;
+    if pw * ph > MAX_PIXELS {
+        bail!("image too large: {pw}x{ph}");
+    }
+    let (dc_code, used) = HuffmanCode::read_table(&bytes[off..])?;
+    off += used;
+    let (ac_code, used) = HuffmanCode::read_table(&bytes[off..])?;
+    off += used;
+    if bytes.len() < off + 4 {
+        bail!("truncated payload length");
+    }
+    let payload_len = u32::from_le_bytes([
+        bytes[off],
+        bytes[off + 1],
+        bytes[off + 2],
+        bytes[off + 3],
+    ]) as usize;
+    off += 4;
+    if bytes.len() < off + payload_len {
+        bail!(
+            "payload truncated: header says {payload_len}, {} available",
+            bytes.len() - off
+        );
+    }
+    let payload = &bytes[off..off + payload_len];
+
+    let dc_dec = HuffmanDecoder::new(&dc_code);
+    let ac_dec = HuffmanDecoder::new(&ac_code);
+    let (gw, gh) = grid_dims(pw as usize, ph as usize);
+    let mut qcoef = vec![0.0f32; (pw * ph) as usize];
+    let mut r = BitReader::new(payload);
+    let mut prev_dc: i16 = 0;
+    for by in 0..gh {
+        for bx in 0..gw {
+            let z = read_block(
+                &mut r,
+                prev_dc,
+                |r| dc_dec.get(r),
+                |r| ac_dec.get(r),
+            )?;
+            prev_dc = z[0];
+            let block = unscan(&z);
+            store_coef_planar(&mut qcoef, pw as usize, bx, by, &block);
+        }
+    }
+    Ok(Decoded {
+        header,
+        qcoef_planar: qcoef,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::{encoder, variant_tag};
+    use crate::dct::pipeline::CpuPipeline;
+    use crate::dct::Variant;
+    use crate::image::synthetic;
+    use crate::metrics::psnr;
+    use crate::util::prng::Rng;
+
+    fn encode_image(
+        w: usize,
+        h: usize,
+        variant: Variant,
+        quality: u8,
+    ) -> (Vec<u8>, Vec<f32>, usize, usize) {
+        let img = synthetic::lena_like(w, h, 7);
+        let pipe = CpuPipeline::new(variant, quality);
+        let (qcoef, pw, ph) = pipe.analyze(&img);
+        let header = Header {
+            width: w as u32,
+            height: h as u32,
+            padded_width: pw as u32,
+            padded_height: ph as u32,
+            quality,
+            variant: variant_tag(variant),
+        };
+        (encoder::encode(&header, &qcoef).unwrap(), qcoef, pw, ph)
+    }
+
+    #[test]
+    fn roundtrip_exact_coefficients() {
+        let (bytes, qcoef, _pw, _ph) =
+            encode_image(64, 48, Variant::Dct, 50);
+        let dec = decode(&bytes).unwrap();
+        assert_eq!(dec.qcoef_planar, qcoef);
+        assert_eq!(dec.header.width, 64);
+        assert_eq!(dec.header.quality, 50);
+    }
+
+    #[test]
+    fn roundtrip_unaligned_size() {
+        let (bytes, qcoef, pw, ph) =
+            encode_image(30, 21, Variant::Cordic, 75);
+        let dec = decode(&bytes).unwrap();
+        assert_eq!((pw, ph), (32, 24));
+        assert_eq!(dec.qcoef_planar, qcoef);
+    }
+
+    #[test]
+    fn full_file_to_image_pipeline() {
+        let img = synthetic::cablecar_like(96, 80, 3);
+        let pipe = CpuPipeline::new(Variant::Dct, 50);
+        let (qcoef, pw, ph) = pipe.analyze(&img);
+        let header = Header {
+            width: 96,
+            height: 80,
+            padded_width: pw as u32,
+            padded_height: ph as u32,
+            quality: 50,
+            variant: variant_tag(Variant::Dct),
+        };
+        let bytes = encoder::encode(&header, &qcoef).unwrap();
+        let dec = decode(&bytes).unwrap();
+        let recon = pipe.decode_coefficients(
+            &dec.qcoef_planar,
+            pw,
+            ph,
+            96,
+            80,
+        );
+        let p = psnr(&img, &recon);
+        assert!(p > 30.0, "file->image PSNR {p}");
+    }
+
+    #[test]
+    fn truncated_file_errors() {
+        let (bytes, ..) = encode_image(32, 32, Variant::Dct, 50);
+        for cut in [3, Header::BYTES - 1, Header::BYTES + 4,
+                    bytes.len() - 5] {
+            assert!(
+                decode(&bytes[..cut]).is_err(),
+                "cut at {cut} should fail"
+            );
+        }
+    }
+
+    #[test]
+    fn bitflip_fuzz_no_panics() {
+        let (bytes, ..) = encode_image(32, 32, Variant::Dct, 50);
+        let mut rng = Rng::new(33);
+        for _ in 0..300 {
+            let mut corrupt = bytes.clone();
+            let n_flips = rng.range_i64(1, 8) as usize;
+            for _ in 0..n_flips {
+                let i = rng.below(corrupt.len() as u64) as usize;
+                corrupt[i] ^= 1 << rng.below(8);
+            }
+            // must not panic; Ok (flip in padding) or Err both fine
+            let _ = decode(&corrupt);
+        }
+    }
+
+    #[test]
+    fn oversized_header_rejected() {
+        let mut buf = Vec::new();
+        Header {
+            width: 60_000,
+            height: 60_000,
+            padded_width: 60_000,
+            padded_height: 60_000,
+            quality: 50,
+            variant: 0,
+        }
+        .write(&mut buf);
+        buf.extend_from_slice(&[0u8; 64]);
+        // rejected either for size or for non-8-aligned padding
+        match decode(&buf) {
+            Ok(_) => panic!("oversized header must be rejected"),
+            Err(err) => assert!(!err.to_string().is_empty()),
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Two-pass entropy encoder: statistics pass builds per-image DC/AC
+//! Huffman tables, coding pass emits the container.
+
+use anyhow::Result;
+
+use crate::dct::blocks::{grid_dims, load_coef_planar, BLOCK};
+use crate::util::bitio::BitWriter;
+
+use super::huffman::HuffmanCode;
+use super::rle::{encode_block, write_block, BlockSymbols};
+use super::zigzag::scan;
+use super::Header;
+
+/// Encode planar quantized coefficients (padded size) into a `.cdc` file.
+pub fn encode(
+    header: &Header,
+    qcoef_planar: &[f32],
+) -> Result<Vec<u8>> {
+    let (pw, ph) = (
+        header.padded_width as usize,
+        header.padded_height as usize,
+    );
+    assert_eq!(qcoef_planar.len(), pw * ph, "coefficient buffer size");
+    let (gw, gh) = grid_dims(pw, ph);
+
+    // pass 1: symbols + statistics
+    let mut dc_freq = [0u64; 256];
+    let mut ac_freq = [0u64; 256];
+    let mut blocks: Vec<BlockSymbols> = Vec::with_capacity(gw * gh);
+    let mut prev_dc: i16 = 0;
+    let mut qc = [0i16; 64];
+    for by in 0..gh {
+        for bx in 0..gw {
+            load_coef_planar(qcoef_planar, pw, bx, by, &mut qc);
+            let z = scan(&qc);
+            let sym = encode_block(&z, prev_dc);
+            prev_dc = z[0];
+            dc_freq[sym.dc.0 as usize] += 1;
+            for &(s, _) in &sym.ac {
+                ac_freq[s as usize] += 1;
+            }
+            blocks.push(sym);
+        }
+    }
+    // Blocks with no AC symbols at all are possible (all-zero AC with the
+    // final block fully coded): ensure the AC alphabet is non-empty so the
+    // table builds.
+    if ac_freq.iter().all(|&f| f == 0) {
+        ac_freq[super::rle::EOB as usize] = 1;
+    }
+
+    let dc_code = HuffmanCode::build(&dc_freq)?;
+    let ac_code = HuffmanCode::build(&ac_freq)?;
+
+    // pass 2: emit container
+    let mut out = Vec::new();
+    header.write(&mut out);
+    dc_code.write_table(&mut out);
+    ac_code.write_table(&mut out);
+    let mut w = BitWriter::new();
+    for sym in &blocks {
+        write_block(
+            &mut w,
+            sym,
+            |w, s| dc_code.put(w, s),
+            |w, s| ac_code.put(w, s),
+        );
+    }
+    let payload = w.finish();
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Entropy-coded size estimate (bits) without building the container —
+/// used by the bitrate ablation.
+pub fn estimate_bits(qcoef_planar: &[f32], pw: usize, ph: usize)
+                     -> Result<u64> {
+    let (gw, gh) = grid_dims(pw, ph);
+    let mut dc_freq = [0u64; 256];
+    let mut ac_freq = [0u64; 256];
+    let mut extra_bits = 0u64;
+    let mut prev_dc: i16 = 0;
+    let mut qc = [0i16; 64];
+    for by in 0..gh {
+        for bx in 0..gw {
+            load_coef_planar(qcoef_planar, pw, bx, by, &mut qc);
+            let z = scan(&qc);
+            let sym = encode_block(&z, prev_dc);
+            prev_dc = z[0];
+            dc_freq[sym.dc.0 as usize] += 1;
+            extra_bits += sym.dc.0 as u64;
+            for &(s, _) in &sym.ac {
+                ac_freq[s as usize] += 1;
+                extra_bits += (s & 0x0F) as u64;
+            }
+        }
+    }
+    if ac_freq.iter().all(|&f| f == 0) {
+        ac_freq[super::rle::EOB as usize] = 1;
+    }
+    let dc_code = HuffmanCode::build(&dc_freq)?;
+    let ac_code = HuffmanCode::build(&ac_freq)?;
+    Ok(dc_code.total_bits(&dc_freq)
+        + ac_code.total_bits(&ac_freq)
+        + extra_bits)
+}
+
+/// Convenience: blocks count of a planar buffer.
+pub fn block_count(pw: usize, ph: usize) -> usize {
+    (pw / BLOCK) * (ph / BLOCK)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::variant_tag;
+    use crate::dct::pipeline::CpuPipeline;
+    use crate::dct::Variant;
+    use crate::image::synthetic;
+
+    fn make_header(w: usize, h: usize, pw: usize, ph: usize) -> Header {
+        Header {
+            width: w as u32,
+            height: h as u32,
+            padded_width: pw as u32,
+            padded_height: ph as u32,
+            quality: 50,
+            variant: variant_tag(Variant::Dct),
+        }
+    }
+
+    #[test]
+    fn encodes_real_image() {
+        let img = synthetic::lena_like(64, 64, 1);
+        let pipe = CpuPipeline::new(Variant::Dct, 50);
+        let (qcoef, pw, ph) = pipe.analyze(&img);
+        let bytes =
+            encode(&make_header(64, 64, pw, ph), &qcoef).unwrap();
+        // compressed should be much smaller than raw
+        assert!(bytes.len() < 64 * 64 / 2, "{} bytes", bytes.len());
+        assert_eq!(&bytes[..4], super::super::MAGIC);
+    }
+
+    #[test]
+    fn all_zero_coefficients_encode() {
+        let qcoef = vec![0.0f32; 16 * 16];
+        let bytes = encode(&make_header(16, 16, 16, 16), &qcoef).unwrap();
+        assert!(bytes.len() < 120);
+    }
+
+    #[test]
+    fn estimate_close_to_actual() {
+        let img = synthetic::cablecar_like(96, 96, 2);
+        let pipe = CpuPipeline::new(Variant::Dct, 50);
+        let (qcoef, pw, ph) = pipe.analyze(&img);
+        let bits = estimate_bits(&qcoef, pw, ph).unwrap();
+        let actual =
+            encode(&make_header(96, 96, pw, ph), &qcoef).unwrap();
+        // actual = header + tables + payload; payload ~ bits/8
+        let payload_bytes = bits as usize / 8;
+        assert!(
+            actual.len() >= payload_bytes,
+            "{} vs {payload_bytes}",
+            actual.len()
+        );
+        assert!(actual.len() < payload_bytes + 700);
+    }
+
+    #[test]
+    fn lower_quality_fewer_bits() {
+        let img = synthetic::lena_like(96, 96, 3);
+        let hi = CpuPipeline::new(Variant::Dct, 90).analyze(&img);
+        let lo = CpuPipeline::new(Variant::Dct, 10).analyze(&img);
+        let bits_hi = estimate_bits(&hi.0, hi.1, hi.2).unwrap();
+        let bits_lo = estimate_bits(&lo.0, lo.1, lo.2).unwrap();
+        assert!(bits_lo < bits_hi, "{bits_lo} vs {bits_hi}");
+    }
+}

@@ -1,0 +1,446 @@
+//! Canonical Huffman coding over byte symbols (0..=255).
+//!
+//! Built per image from symbol frequencies (package-merge-free: standard
+//! heap construction with a JPEG-style 16-bit length cap via length
+//! rebalancing), serialized as canonical descriptors (length counts +
+//! symbols in canonical order) so the decoder reconstructs codes exactly.
+
+use anyhow::{bail, Result};
+
+use crate::util::bitio::{BitReader, BitWriter};
+
+pub const MAX_LEN: usize = 16;
+
+/// A built Huffman code: per-symbol (code, length).
+#[derive(Clone, Debug)]
+pub struct HuffmanCode {
+    code: [u32; 256],
+    len: [u8; 256],
+    /// canonical descriptor: count of codes of each length 1..=16
+    pub counts: [u8; MAX_LEN],
+    /// symbols in canonical order
+    pub symbols: Vec<u8>,
+}
+
+impl HuffmanCode {
+    /// Build from frequencies. Symbols with zero frequency get no code.
+    /// At least one symbol must be present; a single-symbol alphabet gets
+    /// a 1-bit code (JPEG convention).
+    pub fn build(freq: &[u64; 256]) -> Result<HuffmanCode> {
+        let mut lens = assign_lengths(freq)?;
+        cap_lengths(&mut lens, freq);
+        Self::from_lengths(&lens)
+    }
+
+    /// Construct the canonical code from per-symbol lengths.
+    pub fn from_lengths(lens: &[u8; 256]) -> Result<HuffmanCode> {
+        let mut counts = [0u8; MAX_LEN];
+        let mut symbols: Vec<u8> = (0u16..256)
+            .filter(|&s| lens[s as usize] > 0)
+            .map(|s| s as u8)
+            .collect();
+        if symbols.is_empty() {
+            bail!("empty Huffman alphabet");
+        }
+        // canonical order: by length then symbol value
+        symbols.sort_by_key(|&s| (lens[s as usize], s));
+        for &s in &symbols {
+            let l = lens[s as usize] as usize;
+            if l > MAX_LEN {
+                bail!("code length {l} exceeds cap");
+            }
+            counts[l - 1] += 1;
+        }
+        // assign canonical codes
+        let mut code = [0u32; 256];
+        let mut len = [0u8; 256];
+        let mut next: u32 = 0;
+        let mut prev_len = 0usize;
+        for &s in &symbols {
+            let l = lens[s as usize] as usize;
+            next <<= l - prev_len;
+            code[s as usize] = next;
+            len[s as usize] = l as u8;
+            next += 1;
+            prev_len = l;
+        }
+        // Kraft check
+        let kraft: u64 = symbols
+            .iter()
+            .map(|&s| 1u64 << (MAX_LEN - lens[s as usize] as usize))
+            .sum();
+        if kraft > 1 << MAX_LEN {
+            bail!("invalid code: Kraft sum exceeded");
+        }
+        Ok(HuffmanCode {
+            code,
+            len,
+            counts,
+            symbols,
+        })
+    }
+
+    /// Encode one symbol.
+    #[inline]
+    pub fn put(&self, w: &mut BitWriter, sym: u8) {
+        let l = self.len[sym as usize];
+        debug_assert!(l > 0, "symbol {sym} has no code");
+        w.put(self.code[sym as usize] as u64, l as u32);
+    }
+
+    pub fn code_len(&self, sym: u8) -> u8 {
+        self.len[sym as usize]
+    }
+
+    /// Total encoded bits for a frequency table (cost model for tests).
+    pub fn total_bits(&self, freq: &[u64; 256]) -> u64 {
+        freq.iter()
+            .enumerate()
+            .map(|(s, &f)| f * self.len[s] as u64)
+            .sum()
+    }
+
+    /// Serialize the canonical descriptor (17..273 bytes).
+    pub fn write_table(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.counts);
+        out.extend_from_slice(&self.symbols);
+    }
+
+    /// Parse a canonical descriptor; returns (code, bytes consumed).
+    pub fn read_table(bytes: &[u8]) -> Result<(HuffmanCode, usize)> {
+        if bytes.len() < MAX_LEN {
+            bail!("truncated Huffman table");
+        }
+        let mut counts = [0u8; MAX_LEN];
+        counts.copy_from_slice(&bytes[..MAX_LEN]);
+        let nsym: usize = counts.iter().map(|&c| c as usize).sum();
+        if nsym == 0 || bytes.len() < MAX_LEN + nsym {
+            bail!("truncated Huffman symbol list ({nsym} symbols)");
+        }
+        let symbols = bytes[MAX_LEN..MAX_LEN + nsym].to_vec();
+        let mut lens = [0u8; 256];
+        let mut idx = 0usize;
+        for (li, &c) in counts.iter().enumerate() {
+            for _ in 0..c {
+                let s = symbols[idx] as usize;
+                if lens[s] != 0 {
+                    bail!("duplicate symbol {s} in Huffman table");
+                }
+                lens[s] = (li + 1) as u8;
+                idx += 1;
+            }
+        }
+        Ok((Self::from_lengths(&lens)?, MAX_LEN + nsym))
+    }
+}
+
+/// Canonical decoder: length-indexed first-code table (JPEG's MINCODE /
+/// MAXCODE scheme) — O(length) per symbol, no big LUT allocations.
+#[derive(Clone, Debug)]
+pub struct HuffmanDecoder {
+    min_code: [u32; MAX_LEN + 1],
+    max_code: [i64; MAX_LEN + 1], // -1 when no codes of that length
+    val_ptr: [usize; MAX_LEN + 1],
+    symbols: Vec<u8>,
+}
+
+impl HuffmanDecoder {
+    pub fn new(code: &HuffmanCode) -> HuffmanDecoder {
+        let mut min_code = [0u32; MAX_LEN + 1];
+        let mut max_code = [-1i64; MAX_LEN + 1];
+        let mut val_ptr = [0usize; MAX_LEN + 1];
+        let mut next: u32 = 0;
+        let mut idx = 0usize;
+        for l in 1..=MAX_LEN {
+            let c = code.counts[l - 1] as usize;
+            if c > 0 {
+                val_ptr[l] = idx;
+                min_code[l] = next;
+                next += c as u32;
+                max_code[l] = (next - 1) as i64;
+                idx += c;
+            }
+            next <<= 1;
+        }
+        HuffmanDecoder {
+            min_code,
+            max_code,
+            val_ptr,
+            symbols: code.symbols.clone(),
+        }
+    }
+
+    /// Decode one symbol from the reader.
+    #[inline]
+    pub fn get(&self, r: &mut BitReader<'_>) -> Result<u8> {
+        let mut acc: u32 = 0;
+        for l in 1..=MAX_LEN {
+            acc = (acc << 1) | r.get(1)? as u32;
+            if self.max_code[l] >= 0 && (acc as i64) <= self.max_code[l] {
+                let off = (acc - self.min_code[l]) as usize;
+                return Ok(self.symbols[self.val_ptr[l] + off]);
+            }
+        }
+        bail!("invalid Huffman code (>{MAX_LEN} bits)");
+    }
+}
+
+/// Heap-based Huffman length assignment (no cap yet).
+fn assign_lengths(freq: &[u64; 256]) -> Result<[u8; 256]> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    #[derive(PartialEq, Eq, PartialOrd, Ord)]
+    struct Node {
+        weight: u64,
+        id: usize,
+    }
+
+    let mut lens = [0u8; 256];
+    let present: Vec<usize> =
+        (0..256).filter(|&s| freq[s] > 0).collect();
+    match present.len() {
+        0 => bail!("cannot build Huffman code over empty alphabet"),
+        1 => {
+            lens[present[0]] = 1;
+            return Ok(lens);
+        }
+        _ => {}
+    }
+    // nodes: 0..256 leaves, then internal
+    let mut parent = vec![usize::MAX; 512];
+    let mut heap: BinaryHeap<Reverse<Node>> = present
+        .iter()
+        .map(|&s| {
+            Reverse(Node {
+                weight: freq[s],
+                id: s,
+            })
+        })
+        .collect();
+    let mut next_id = 256usize;
+    while heap.len() > 1 {
+        let a = heap.pop().unwrap().0;
+        let b = heap.pop().unwrap().0;
+        parent[a.id] = next_id;
+        parent[b.id] = next_id;
+        heap.push(Reverse(Node {
+            weight: a.weight + b.weight,
+            id: next_id,
+        }));
+        next_id += 1;
+    }
+    for &s in &present {
+        let mut l = 0u32;
+        let mut n = s;
+        while parent[n] != usize::MAX {
+            n = parent[n];
+            l += 1;
+        }
+        lens[s] = l.min(255) as u8;
+    }
+    Ok(lens)
+}
+
+/// Enforce the 16-bit length cap by shortening overlong codes and
+/// rebalancing (the classic JPEG adjust_bits procedure operating on
+/// per-symbol lengths).
+fn cap_lengths(lens: &mut [u8; 256], freq: &[u64; 256]) {
+    let too_long = lens.iter().any(|&l| l as usize > MAX_LEN);
+    if !too_long {
+        return;
+    }
+    // Work on a multiset of lengths; classic algorithm on counts.
+    let mut counts = [0usize; 64];
+    for &l in lens.iter() {
+        if l > 0 {
+            counts[l as usize] += 1;
+        }
+    }
+    let mut i = counts.len() - 1;
+    while i > MAX_LEN {
+        while counts[i] > 0 {
+            // find j < i-1 with codes to pair with
+            let mut j = i - 2;
+            while counts[j] == 0 {
+                j -= 1;
+            }
+            counts[i] -= 2;
+            counts[i - 1] += 1;
+            counts[j + 1] += 2;
+            counts[j] -= 1;
+        }
+        i -= 1;
+    }
+    // reassign lengths canonically: sort present symbols by frequency
+    // (desc) and hand out the shortest lengths first.
+    let mut present: Vec<usize> =
+        (0..256).filter(|&s| lens[s] > 0).collect();
+    present.sort_by_key(|&s| std::cmp::Reverse(freq[s]));
+    let mut new_lens = [0u8; 256];
+    let mut li = 1usize;
+    for &s in &present {
+        while li <= MAX_LEN && counts[li] == 0 {
+            li += 1;
+        }
+        debug_assert!(li <= MAX_LEN, "length redistribution failed");
+        new_lens[s] = li as u8;
+        counts[li] -= 1;
+    }
+    *lens = new_lens;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn roundtrip_symbols(freq: &[u64; 256], stream: &[u8]) {
+        let code = HuffmanCode::build(freq).unwrap();
+        // table serialization roundtrip
+        let mut tbl = Vec::new();
+        code.write_table(&mut tbl);
+        let (code2, used) = HuffmanCode::read_table(&tbl).unwrap();
+        assert_eq!(used, tbl.len());
+        let mut w = BitWriter::new();
+        for &s in stream {
+            code2.put(&mut w, s);
+        }
+        let bytes = w.finish();
+        let dec = HuffmanDecoder::new(&code2);
+        let mut r = BitReader::new(&bytes);
+        for &s in stream {
+            assert_eq!(dec.get(&mut r).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn two_symbol_alphabet() {
+        let mut freq = [0u64; 256];
+        freq[7] = 100;
+        freq[42] = 1;
+        roundtrip_symbols(&freq, &[7, 42, 7, 7, 42, 7]);
+    }
+
+    #[test]
+    fn single_symbol_alphabet() {
+        let mut freq = [0u64; 256];
+        freq[9] = 55;
+        roundtrip_symbols(&freq, &[9, 9, 9]);
+    }
+
+    #[test]
+    fn random_alphabet_roundtrip() {
+        let mut rng = Rng::new(21);
+        let mut freq = [0u64; 256];
+        let mut stream = Vec::new();
+        for _ in 0..5_000 {
+            // zipf-ish distribution
+            let s = (rng.next_f64().powi(3) * 80.0) as usize;
+            freq[s] += 1;
+            stream.push(s as u8);
+        }
+        roundtrip_symbols(&freq, &stream);
+    }
+
+    #[test]
+    fn skewed_frequencies_shorter_codes() {
+        let mut freq = [0u64; 256];
+        freq[0] = 10_000;
+        for s in 1..40 {
+            freq[s] = 1 + s as u64 % 3;
+        }
+        let code = HuffmanCode::build(&freq).unwrap();
+        let common = code.code_len(0);
+        let rare = code.code_len(20);
+        assert!(common < rare, "{common} vs {rare}");
+    }
+
+    #[test]
+    fn near_entropy_on_uniform() {
+        let mut freq = [0u64; 256];
+        for (s, f) in freq.iter_mut().enumerate().take(64) {
+            *f = 100;
+            let _ = s;
+        }
+        let code = HuffmanCode::build(&freq).unwrap();
+        // uniform over 64 symbols -> exactly 6 bits each
+        for s in 0..64u8 {
+            assert_eq!(code.code_len(s), 6);
+        }
+    }
+
+    #[test]
+    fn length_cap_respected_on_pathological_input() {
+        // fibonacci-like frequencies force long codes without the cap
+        let mut freq = [0u64; 256];
+        let mut a = 1u64;
+        let mut b = 1u64;
+        for s in 0..40 {
+            freq[s] = a;
+            let c = a + b;
+            a = b;
+            b = c;
+        }
+        let code = HuffmanCode::build(&freq).unwrap();
+        for s in 0..40u8 {
+            assert!(code.code_len(s) as usize <= MAX_LEN);
+            assert!(code.code_len(s) > 0);
+        }
+        // capped code must still decode
+        let stream: Vec<u8> = (0..40u8).cycle().take(500).collect();
+        let mut w = BitWriter::new();
+        for &s in &stream {
+            code.put(&mut w, s);
+        }
+        let bytes = w.finish();
+        let dec = HuffmanDecoder::new(&code);
+        let mut r = BitReader::new(&bytes);
+        for &s in &stream {
+            assert_eq!(dec.get(&mut r).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn empty_alphabet_errors() {
+        let freq = [0u64; 256];
+        assert!(HuffmanCode::build(&freq).is_err());
+    }
+
+    #[test]
+    fn corrupt_table_errors() {
+        assert!(HuffmanCode::read_table(&[0u8; 5]).is_err());
+        // counts claim 3 symbols but none follow
+        let mut bad = vec![0u8; MAX_LEN];
+        bad[0] = 3;
+        assert!(HuffmanCode::read_table(&bad).is_err());
+        // duplicate symbol
+        let mut dup = vec![0u8; MAX_LEN];
+        dup[1] = 2; // two codes of length 2
+        dup.extend_from_slice(&[5, 5]);
+        assert!(HuffmanCode::read_table(&dup).is_err());
+    }
+
+    #[test]
+    fn invalid_bitstream_errors_not_panics() {
+        let mut freq = [0u64; 256];
+        freq[1] = 5;
+        freq[2] = 5;
+        freq[3] = 5;
+        freq[4] = 5;
+        let code = HuffmanCode::build(&freq).unwrap();
+        let dec = HuffmanDecoder::new(&code);
+        // all-ones bitstream eventually walks off the code table or
+        // exhausts the reader — must be an Err either way
+        let bytes = [0xFFu8; 1];
+        let mut r = BitReader::new(&bytes);
+        let mut saw_err = false;
+        for _ in 0..10 {
+            if dec.get(&mut r).is_err() {
+                saw_err = true;
+                break;
+            }
+        }
+        assert!(saw_err);
+    }
+}

@@ -1,0 +1,178 @@
+//! The entropy codec: what turns quantized DCT coefficients into an actual
+//! compressed file ("image compression", not just a transform demo).
+//!
+//! Format (`.cdc`, for "cordic-dct codec"):
+//!
+//! ```text
+//! magic "CDC1" | header (JSON-free fixed fields) |
+//! Huffman table descriptors (canonical code lengths) |
+//! entropy-coded segment: per 8x8 block in raster order,
+//!   DC as DPCM category+bits, AC as JPEG-style (run, size) + bits,
+//!   EOB after the last nonzero coefficient
+//! ```
+//!
+//! The Huffman tables are built *per image* from symbol statistics (a
+//! two-pass encoder), stored canonically (16 length counts + symbol list,
+//! like JPEG's DHT), so the decoder rebuilds the exact code.
+//!
+//! Pipeline position: [`encoder`] consumes the planar quantized
+//! coefficients that either lane (CPU serial or PJRT) produces;
+//! [`decoder`] reverses to coefficients, which the standard IDCT then
+//! reconstructs. Round-trip is exact (lossless over the quantized data).
+
+pub mod decoder;
+pub mod encoder;
+pub mod huffman;
+pub mod rle;
+pub mod zigzag;
+
+use anyhow::{bail, Result};
+
+pub const MAGIC: &[u8; 4] = b"CDC1";
+
+/// Compressed-image container header.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Header {
+    /// Original (pre-padding) image size.
+    pub width: u32,
+    pub height: u32,
+    /// Padded size the coefficient grid uses (multiples of 8).
+    pub padded_width: u32,
+    pub padded_height: u32,
+    /// IJG quality the quantizer used.
+    pub quality: u8,
+    /// Transform variant tag (dct / loeffler / cordic / naive).
+    pub variant: u8,
+}
+
+impl Header {
+    pub const BYTES: usize = 4 + 4 * 4 + 2;
+
+    pub fn write(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&self.width.to_le_bytes());
+        out.extend_from_slice(&self.height.to_le_bytes());
+        out.extend_from_slice(&self.padded_width.to_le_bytes());
+        out.extend_from_slice(&self.padded_height.to_le_bytes());
+        out.push(self.quality);
+        out.push(self.variant);
+    }
+
+    pub fn read(bytes: &[u8]) -> Result<(Header, usize)> {
+        if bytes.len() < Self::BYTES {
+            bail!("file too short for CDC header");
+        }
+        if &bytes[0..4] != MAGIC {
+            bail!("bad magic: not a CDC file");
+        }
+        let rd = |o: usize| {
+            u32::from_le_bytes([
+                bytes[o],
+                bytes[o + 1],
+                bytes[o + 2],
+                bytes[o + 3],
+            ])
+        };
+        let h = Header {
+            width: rd(4),
+            height: rd(8),
+            padded_width: rd(12),
+            padded_height: rd(16),
+            quality: bytes[20],
+            variant: bytes[21],
+        };
+        if h.width == 0
+            || h.height == 0
+            || h.padded_width % 8 != 0
+            || h.padded_height % 8 != 0
+            || h.padded_width < h.width
+            || h.padded_height < h.height
+        {
+            bail!("inconsistent CDC header {h:?}");
+        }
+        Ok((h, Self::BYTES))
+    }
+}
+
+/// Variant <-> tag mapping for the header byte.
+pub fn variant_tag(v: crate::dct::Variant) -> u8 {
+    match v {
+        crate::dct::Variant::Dct => 0,
+        crate::dct::Variant::Loeffler => 1,
+        crate::dct::Variant::Cordic => 2,
+        crate::dct::Variant::Naive => 3,
+    }
+}
+
+pub fn tag_variant(t: u8) -> Result<crate::dct::Variant> {
+    Ok(match t {
+        0 => crate::dct::Variant::Dct,
+        1 => crate::dct::Variant::Loeffler,
+        2 => crate::dct::Variant::Cordic,
+        3 => crate::dct::Variant::Naive,
+        _ => bail!("unknown variant tag {t}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip() {
+        let h = Header {
+            width: 200,
+            height: 200,
+            padded_width: 200,
+            padded_height: 200,
+            quality: 50,
+            variant: 2,
+        };
+        let mut buf = Vec::new();
+        h.write(&mut buf);
+        let (back, used) = Header::read(&buf).unwrap();
+        assert_eq!(h, back);
+        assert_eq!(used, Header::BYTES);
+    }
+
+    #[test]
+    fn header_rejects_bad_magic() {
+        let mut buf = Vec::new();
+        Header {
+            width: 8,
+            height: 8,
+            padded_width: 8,
+            padded_height: 8,
+            quality: 50,
+            variant: 0,
+        }
+        .write(&mut buf);
+        buf[0] = b'X';
+        assert!(Header::read(&buf).is_err());
+    }
+
+    #[test]
+    fn header_rejects_inconsistent() {
+        let mut buf = Vec::new();
+        Header {
+            width: 100,
+            height: 8,
+            padded_width: 96, // < width
+            padded_height: 8,
+            quality: 50,
+            variant: 0,
+        }
+        .write(&mut buf);
+        assert!(Header::read(&buf).is_err());
+    }
+
+    #[test]
+    fn variant_tags_roundtrip() {
+        use crate::dct::Variant;
+        for v in [Variant::Dct, Variant::Loeffler, Variant::Cordic,
+                  Variant::Naive] {
+            assert_eq!(tag_variant(variant_tag(v)).unwrap(), v);
+        }
+        assert!(tag_variant(9).is_err());
+    }
+}

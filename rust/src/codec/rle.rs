@@ -1,0 +1,282 @@
+//! JPEG-style symbol model for one 8x8 block of quantized coefficients:
+//! DC as DPCM magnitude-category + sign-extended bits, AC as (run, size)
+//! pairs with ZRL (16-zero run) and EOB markers.
+//!
+//! Symbols (what the Huffman coder sees):
+//!   DC: category 0..=11 (number of magnitude bits)
+//!   AC: (run << 4) | size, run 0..=15, size 1..=10; 0x00 = EOB,
+//!       0xF0 = ZRL.
+//! Each symbol is followed by `size` raw magnitude bits in the JPEG
+//! one's-complement convention for negatives.
+
+use anyhow::{bail, Result};
+
+use crate::util::bitio::{BitReader, BitWriter};
+
+pub const EOB: u8 = 0x00;
+pub const ZRL: u8 = 0xF0;
+
+/// Magnitude category: number of bits needed for |v| (0 for v == 0).
+#[inline]
+pub fn category(v: i32) -> u32 {
+    (32 - v.unsigned_abs().leading_zeros()).min(31)
+}
+
+/// JPEG magnitude bits: positive values verbatim; negative values encoded
+/// as v - 1 masked to `size` bits (one's complement).
+#[inline]
+pub fn magnitude_bits(v: i32, size: u32) -> u64 {
+    debug_assert!(size > 0);
+    if v >= 0 {
+        v as u64
+    } else {
+        ((v - 1) & ((1i64 << size) as i32 - 1).max(0)) as u64
+            & ((1u64 << size) - 1)
+    }
+}
+
+/// Decode magnitude bits back to a value.
+#[inline]
+pub fn decode_magnitude(bits: u64, size: u32) -> i32 {
+    debug_assert!(size > 0);
+    let v = bits as i32;
+    if (bits >> (size - 1)) & 1 == 1 {
+        v // positive: MSB set
+    } else {
+        v - ((1i32 << size) - 1) // negative
+    }
+}
+
+/// One block's symbol stream, produced before Huffman coding (also the
+/// statistics pass input).
+#[derive(Debug, Default, Clone)]
+pub struct BlockSymbols {
+    /// (dc_category, magnitude bits)
+    pub dc: (u8, u64),
+    /// AC symbols: (symbol byte, magnitude bits)
+    pub ac: Vec<(u8, u64)>,
+}
+
+/// Encode one zigzag-ordered block against the previous block's DC.
+pub fn encode_block(scan: &[i16; 64], prev_dc: i16) -> BlockSymbols {
+    let diff = scan[0] as i32 - prev_dc as i32;
+    let dc_cat = category(diff);
+    let dc = (
+        dc_cat as u8,
+        if dc_cat == 0 {
+            0
+        } else {
+            magnitude_bits(diff, dc_cat)
+        },
+    );
+
+    let mut ac = Vec::new();
+    let mut run = 0u32;
+    // index of last nonzero AC
+    let last_nz = (1..64).rev().find(|&i| scan[i] != 0);
+    let end = last_nz.map(|i| i + 1).unwrap_or(1);
+    for &c in &scan[1..end] {
+        if c == 0 {
+            run += 1;
+            if run == 16 {
+                ac.push((ZRL, 0));
+                run = 0;
+            }
+            continue;
+        }
+        let v = c as i32;
+        let size = category(v);
+        debug_assert!(size <= 15);
+        ac.push((((run as u8) << 4) | size as u8, magnitude_bits(v, size)));
+        run = 0;
+    }
+    if end < 64 {
+        ac.push((EOB, 0));
+    }
+    BlockSymbols { dc, ac }
+}
+
+/// Append a block's magnitude bits + symbols to the bitstream using
+/// caller-provided symbol writers (Huffman lives a layer up).
+pub fn write_block<FD, FA>(
+    w: &mut BitWriter,
+    sym: &BlockSymbols,
+    mut put_dc: FD,
+    mut put_ac: FA,
+) where
+    FD: FnMut(&mut BitWriter, u8),
+    FA: FnMut(&mut BitWriter, u8),
+{
+    put_dc(w, sym.dc.0);
+    if sym.dc.0 > 0 {
+        w.put(sym.dc.1, sym.dc.0 as u32);
+    }
+    for &(s, bits) in &sym.ac {
+        put_ac(w, s);
+        let size = (s & 0x0F) as u32;
+        if size > 0 {
+            w.put(bits, size);
+        }
+    }
+}
+
+/// Read one block back (zigzag order), given symbol readers.
+pub fn read_block<FD, FA>(
+    r: &mut BitReader<'_>,
+    prev_dc: i16,
+    mut get_dc: FD,
+    mut get_ac: FA,
+) -> Result<[i16; 64]>
+where
+    FD: FnMut(&mut BitReader<'_>) -> Result<u8>,
+    FA: FnMut(&mut BitReader<'_>) -> Result<u8>,
+{
+    let mut scan = [0i16; 64];
+    let dc_cat = get_dc(r)? as u32;
+    let diff = if dc_cat == 0 {
+        0
+    } else {
+        if dc_cat > 15 {
+            bail!("corrupt DC category {dc_cat}");
+        }
+        decode_magnitude(r.get(dc_cat)?, dc_cat)
+    };
+    scan[0] = (prev_dc as i32 + diff)
+        .clamp(i16::MIN as i32, i16::MAX as i32) as i16;
+
+    let mut i = 1usize;
+    while i < 64 {
+        let s = get_ac(r)?;
+        if s == EOB {
+            break;
+        }
+        if s == ZRL {
+            i += 16;
+            continue;
+        }
+        let run = (s >> 4) as usize;
+        let size = (s & 0x0F) as u32;
+        if size == 0 {
+            bail!("corrupt AC symbol {s:#04x} (zero size, not EOB/ZRL)");
+        }
+        i += run;
+        if i >= 64 {
+            bail!("AC run overflows block (i = {i})");
+        }
+        scan[i] = decode_magnitude(r.get(size)?, size)
+            .clamp(i16::MIN as i32, i16::MAX as i32)
+            as i16;
+        i += 1;
+    }
+    Ok(scan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn category_values() {
+        assert_eq!(category(0), 0);
+        assert_eq!(category(1), 1);
+        assert_eq!(category(-1), 1);
+        assert_eq!(category(2), 2);
+        assert_eq!(category(-3), 2);
+        assert_eq!(category(255), 8);
+        assert_eq!(category(-1024), 11);
+    }
+
+    #[test]
+    fn magnitude_roundtrip() {
+        for v in [-1024, -255, -2, -1, 1, 2, 3, 127, 1023] {
+            let s = category(v);
+            let bits = magnitude_bits(v, s);
+            assert_eq!(decode_magnitude(bits, s), v, "v {v}");
+        }
+    }
+
+    fn raw_write_read(scan: &[i16; 64], prev: i16) -> [i16; 64] {
+        // identity "Huffman": write symbols as raw bytes
+        let sym = encode_block(scan, prev);
+        let mut w = BitWriter::new();
+        write_block(
+            &mut w,
+            &sym,
+            |w, s| w.put(s as u64, 8),
+            |w, s| w.put(s as u64, 8),
+        );
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        read_block(
+            &mut r,
+            prev,
+            |r| Ok(r.get(8)? as u8),
+            |r| Ok(r.get(8)? as u8),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn block_roundtrip_sparse() {
+        let mut scan = [0i16; 64];
+        scan[0] = -37;
+        scan[3] = 5;
+        scan[20] = -1;
+        scan[63] = 2;
+        assert_eq!(raw_write_read(&scan, 10), scan);
+    }
+
+    #[test]
+    fn block_roundtrip_zero_block() {
+        let scan = [0i16; 64];
+        assert_eq!(raw_write_read(&scan, -5), scan);
+    }
+
+    #[test]
+    fn block_roundtrip_dense_random() {
+        let mut rng = Rng::new(17);
+        for _ in 0..50 {
+            let mut scan = [0i16; 64];
+            for v in &mut scan {
+                if rng.chance(0.4) {
+                    *v = rng.range_i64(-400, 400) as i16;
+                }
+            }
+            let prev = rng.range_i64(-500, 500) as i16;
+            assert_eq!(raw_write_read(&scan, prev), scan);
+        }
+    }
+
+    #[test]
+    fn long_zero_runs_use_zrl() {
+        let mut scan = [0i16; 64];
+        scan[40] = 7; // 39 zeros -> 2 ZRL + run 7
+        let sym = encode_block(&scan, 0);
+        let zrls = sym.ac.iter().filter(|(s, _)| *s == ZRL).count();
+        assert_eq!(zrls, 2);
+    }
+
+    #[test]
+    fn trailing_zeros_emit_eob() {
+        let mut scan = [0i16; 64];
+        scan[1] = 3;
+        let sym = encode_block(&scan, 0);
+        assert_eq!(sym.ac.last().unwrap().0, EOB);
+        // full block (last coefficient nonzero) has no EOB
+        let mut full = [1i16; 64];
+        full[0] = 9;
+        let sym = encode_block(&full, 0);
+        assert_ne!(sym.ac.last().unwrap().0, EOB);
+    }
+
+    #[test]
+    fn dpcm_uses_previous_dc() {
+        let mut scan = [0i16; 64];
+        scan[0] = 100;
+        let sym_same = encode_block(&scan, 100);
+        assert_eq!(sym_same.dc.0, 0); // zero diff -> category 0
+        let sym_diff = encode_block(&scan, 0);
+        assert_eq!(sym_diff.dc.0 as u32, category(100));
+    }
+}

@@ -1,0 +1,124 @@
+//! Zigzag scan order: maps the 8x8 block to a 1-D sequence ordered by
+//! ascending spatial frequency, so quantized ACs end in long zero runs.
+
+/// zigzag[i] = row-major index of the i-th coefficient in scan order.
+pub const ZIGZAG: [usize; 64] = build_zigzag();
+
+/// inverse: INV_ZIGZAG[row_major] = scan position.
+pub const INV_ZIGZAG: [usize; 64] = invert(&ZIGZAG);
+
+const fn build_zigzag() -> [usize; 64] {
+    let mut out = [0usize; 64];
+    let mut i = 0usize;
+    let mut d = 0usize; // anti-diagonal index r+c
+    while d < 15 {
+        // even diagonals run bottom-left -> top-right, odd the reverse
+        if d % 2 == 0 {
+            let mut r = if d < 8 { d } else { 7 };
+            loop {
+                let c = d - r;
+                if c < 8 {
+                    out[i] = r * 8 + c;
+                    i += 1;
+                }
+                if r == 0 {
+                    break;
+                }
+                r -= 1;
+            }
+        } else {
+            let mut c = if d < 8 { d } else { 7 };
+            loop {
+                let r = d - c;
+                if r < 8 {
+                    out[i] = r * 8 + c;
+                    i += 1;
+                }
+                if c == 0 {
+                    break;
+                }
+                c -= 1;
+            }
+        }
+        d += 1;
+    }
+    out
+}
+
+const fn invert(z: &[usize; 64]) -> [usize; 64] {
+    let mut inv = [0usize; 64];
+    let mut i = 0;
+    while i < 64 {
+        inv[z[i]] = i;
+        i += 1;
+    }
+    inv
+}
+
+/// Scatter a row-major block into scan order.
+pub fn scan(block: &[i16; 64]) -> [i16; 64] {
+    std::array::from_fn(|i| block[ZIGZAG[i]])
+}
+
+/// Gather a scan-ordered sequence back to row-major.
+pub fn unscan(seq: &[i16; 64]) -> [i16; 64] {
+    let mut out = [0i16; 64];
+    for (i, &v) in seq.iter().enumerate() {
+        out[ZIGZAG[i]] = v;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn is_permutation() {
+        let mut seen = [false; 64];
+        for &z in &ZIGZAG {
+            assert!(!seen[z], "duplicate {z}");
+            seen[z] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn matches_jpeg_prefix() {
+        // the canonical JPEG zigzag head: 0, 1, 8, 16, 9, 2, 3, 10 ...
+        assert_eq!(
+            &ZIGZAG[..10],
+            &[0, 1, 8, 16, 9, 2, 3, 10, 17, 24]
+        );
+        // and tail ends at the bottom-right corner
+        assert_eq!(ZIGZAG[63], 63);
+    }
+
+    #[test]
+    fn inverse_consistent() {
+        for i in 0..64 {
+            assert_eq!(INV_ZIGZAG[ZIGZAG[i]], i);
+        }
+    }
+
+    #[test]
+    fn scan_unscan_roundtrip() {
+        let block: [i16; 64] = std::array::from_fn(|i| (i as i16) * 3 - 50);
+        assert_eq!(unscan(&scan(&block)), block);
+    }
+
+    #[test]
+    fn frequency_ordering_property() {
+        // scan position should (weakly) order by r+c: position of any
+        // coefficient on diagonal d is before all on diagonal d+2
+        for i in 0..64 {
+            for j in 0..64 {
+                let (ri, ci) = (ZIGZAG[i] / 8, ZIGZAG[i] % 8);
+                let (rj, cj) = (ZIGZAG[j] / 8, ZIGZAG[j] % 8);
+                if ri + ci + 2 <= rj + cj {
+                    assert!(i < j, "diag order violated: {i} vs {j}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Dynamic batching policy: how many same-key jobs to coalesce per
+//! dispatch and how long to linger for stragglers.
+//!
+//! The queue does the mechanical grouping ([`RequestQueue::pop_batch`]);
+//! this module owns the *policy* (sizes/linger per lane) and the batch
+//! bookkeeping that the ablation bench sweeps.
+
+use std::time::Duration;
+
+use super::request::Lane;
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Max jobs per GPU-lane dispatch group.
+    pub gpu_max_batch: usize,
+    /// Max jobs per CPU-lane group (CPU jobs are independent; grouping
+    /// only amortizes queue locking).
+    pub cpu_max_batch: usize,
+    /// How long to wait for same-key stragglers after the first job.
+    pub linger: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            gpu_max_batch: 8,
+            cpu_max_batch: 1,
+            linger: Duration::from_micros(200),
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// No batching at all (the ablation baseline).
+    pub fn unbatched() -> Self {
+        BatchPolicy {
+            gpu_max_batch: 1,
+            cpu_max_batch: 1,
+            linger: Duration::ZERO,
+        }
+    }
+
+    pub fn max_for(&self, lane: Lane) -> usize {
+        match lane {
+            Lane::Gpu | Lane::Auto => self.gpu_max_batch.max(1),
+            Lane::Cpu => self.cpu_max_batch.max(1),
+        }
+    }
+
+    /// The queue-level pop size: the largest any lane allows (the head
+    /// job's key then constrains the actual group).
+    pub fn pop_max(&self) -> usize {
+        self.gpu_max_batch.max(self.cpu_max_batch).max(1)
+    }
+}
+
+/// Running batch statistics for the service metrics endpoint.
+#[derive(Debug, Default, Clone)]
+pub struct BatchStats {
+    pub batches: u64,
+    pub jobs: u64,
+    pub max_batch_seen: usize,
+}
+
+impl BatchStats {
+    pub fn record(&mut self, batch_len: usize) {
+        self.batches += 1;
+        self.jobs += batch_len as u64;
+        self.max_batch_seen = self.max_batch_seen.max(batch_len);
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.jobs as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_sane() {
+        let p = BatchPolicy::default();
+        assert!(p.gpu_max_batch >= 1);
+        assert_eq!(p.max_for(Lane::Cpu), 1);
+        assert_eq!(p.max_for(Lane::Gpu), p.gpu_max_batch);
+        assert_eq!(p.pop_max(), p.gpu_max_batch);
+    }
+
+    #[test]
+    fn unbatched_is_single() {
+        let p = BatchPolicy::unbatched();
+        assert_eq!(p.pop_max(), 1);
+        assert_eq!(p.linger, Duration::ZERO);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut s = BatchStats::default();
+        s.record(4);
+        s.record(2);
+        s.record(6);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.jobs, 12);
+        assert_eq!(s.mean_batch(), 4.0);
+        assert_eq!(s.max_batch_seen, 6);
+    }
+
+    #[test]
+    fn zero_max_clamped() {
+        let p = BatchPolicy {
+            gpu_max_batch: 0,
+            cpu_max_batch: 0,
+            linger: Duration::ZERO,
+        };
+        assert_eq!(p.max_for(Lane::Gpu), 1);
+        assert_eq!(p.pop_max(), 1);
+    }
+}

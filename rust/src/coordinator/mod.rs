@@ -1,0 +1,35 @@
+//! The serving coordinator: request router + dynamic batcher + worker
+//! pool, dispatching image-compression jobs to the PJRT ("GPU") lane or
+//! the serial Rust ("CPU") lane.
+//!
+//! Shape (vLLM-router-flavored, scaled to this paper's workload):
+//!
+//! ```text
+//!  submit() ──► bounded RequestQueue (backpressure: Block | Reject)
+//!                      │
+//!                 Batcher: drains the queue, groups jobs by
+//!                 (shape, variant, lane) up to max_batch / linger
+//!                      │
+//!              ┌───────┴────────┐
+//!        worker 0 ..      worker N-1     (std threads)
+//!        GPU lane: runtime::Executor (cached PJRT executables)
+//!        CPU lane: dct::pipeline::CpuPipeline (serial scalar)
+//!                      │
+//!              per-job result channel ──► JobHandle::wait()
+//! ```
+//!
+//! Batching matters on the GPU lane for the same reason it does in the
+//! paper's CUDA setting: per-dispatch overhead (executable lookup, literal
+//! marshaling) is amortized across same-shape jobs that reuse one cached
+//! executable; the ablation bench (`ablation_batching`) measures it.
+
+pub mod batcher;
+pub mod request;
+pub mod service;
+pub mod worker;
+
+pub use request::{
+    Backpressure, JobHandle, Lane, Request, RequestKind, RequestQueue,
+    Response,
+};
+pub use service::{Service, ServiceConfig, ServiceStats};

@@ -1,0 +1,371 @@
+//! Request/response types and the bounded request queue (the
+//! backpressure boundary of the service).
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::dct::Variant;
+use crate::image::GrayImage;
+
+/// Which execution lane a request targets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Lane {
+    /// Serial scalar Rust (the paper's "CPU serial code").
+    Cpu,
+    /// AOT PJRT executables (the paper's CUDA lane).
+    Gpu,
+    /// Router decides: GPU when an artifact for the shape exists.
+    Auto,
+}
+
+impl Lane {
+    pub fn parse(s: &str) -> Option<Lane> {
+        match s.to_ascii_lowercase().as_str() {
+            "cpu" => Some(Lane::Cpu),
+            "gpu" | "pjrt" | "xla" => Some(Lane::Gpu),
+            "auto" => Some(Lane::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// What to do with the image.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RequestKind {
+    /// Full pipeline; response carries reconstruction + entropy-coded size.
+    Compress,
+    /// Histogram equalization (the Tables 1-2 caption workload).
+    Histeq,
+}
+
+/// One job submitted to the service.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub kind: RequestKind,
+    pub image: GrayImage,
+    pub variant: Variant,
+    pub lane: Lane,
+}
+
+impl Request {
+    pub fn compress(id: u64, image: GrayImage, variant: Variant,
+                    lane: Lane) -> Request {
+        Request {
+            id,
+            kind: RequestKind::Compress,
+            image,
+            variant,
+            lane,
+        }
+    }
+
+    /// Batching key: jobs with equal keys share an executable.
+    pub fn batch_key(&self) -> (RequestKind, usize, usize, Variant, Lane) {
+        (
+            self.kind,
+            self.image.width,
+            self.image.height,
+            self.variant,
+            self.lane,
+        )
+    }
+}
+
+/// Completed job.
+#[derive(Debug)]
+pub struct Response {
+    pub id: u64,
+    pub result: Result<JobOutput>,
+    /// Queue wait (submit -> worker pickup), ms.
+    pub queue_ms: f64,
+    /// Processing time on the lane, ms.
+    pub process_ms: f64,
+    /// Which lane actually ran it (Auto resolves here).
+    pub lane: Lane,
+}
+
+/// Successful output payload.
+#[derive(Debug)]
+pub struct JobOutput {
+    pub image: GrayImage,
+    /// Entropy-coded size in bytes (Compress only).
+    pub compressed_bytes: Option<usize>,
+    /// PSNR vs the input (Compress only).
+    pub psnr_db: Option<f64>,
+}
+
+/// In-flight job: wait for its response.
+pub struct JobHandle {
+    pub id: u64,
+    rx: mpsc::Receiver<Response>,
+}
+
+impl JobHandle {
+    pub fn wait(self) -> Response {
+        self.rx
+            .recv()
+            .unwrap_or_else(|_| panic!("worker dropped job {}", self.id))
+    }
+
+    pub fn wait_timeout(self, d: Duration) -> Option<Response> {
+        self.rx.recv_timeout(d).ok()
+    }
+}
+
+/// Queue-full policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backpressure {
+    /// submit() blocks until space frees up.
+    Block,
+    /// submit() returns an error immediately.
+    Reject,
+}
+
+pub(crate) struct QueuedJob {
+    pub request: Request,
+    pub enqueued: Instant,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// Bounded MPMC queue with condvar wakeups and close semantics.
+pub struct RequestQueue {
+    inner: Mutex<QueueInner>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+    policy: Backpressure,
+}
+
+struct QueueInner {
+    jobs: VecDeque<QueuedJob>,
+    closed: bool,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize, policy: Backpressure) -> RequestQueue {
+        assert!(capacity >= 1);
+        RequestQueue {
+            inner: Mutex::new(QueueInner {
+                jobs: VecDeque::new(),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+            policy,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Submit a request; returns a handle to await the response.
+    pub fn submit(&self, request: Request) -> Result<JobHandle> {
+        let (tx, rx) = mpsc::channel();
+        let id = request.id;
+        let job = QueuedJob {
+            request,
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            bail!("queue closed");
+        }
+        while inner.jobs.len() >= self.capacity {
+            match self.policy {
+                Backpressure::Reject => {
+                    bail!(
+                        "queue full ({} jobs): backpressure",
+                        self.capacity
+                    )
+                }
+                Backpressure::Block => {
+                    inner = self.not_full.wait(inner).unwrap();
+                    if inner.closed {
+                        bail!("queue closed");
+                    }
+                }
+            }
+        }
+        inner.jobs.push_back(job);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(JobHandle { id, rx })
+    }
+
+    /// Blocking pop of up to `max` jobs sharing one batch key (FIFO head
+    /// defines the key; non-matching jobs stay queued). Waits up to
+    /// `linger` after the first job for more same-key arrivals.
+    /// Returns None when the queue is closed and drained.
+    pub(crate) fn pop_batch(&self, max: usize, linger: Duration)
+                            -> Option<Vec<QueuedJob>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.jobs.is_empty() {
+                break;
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+        let key = inner.jobs.front().unwrap().request.batch_key();
+        let mut batch = vec![inner.jobs.pop_front().unwrap()];
+        let deadline = Instant::now() + linger;
+        loop {
+            // take contiguous same-key jobs from the head
+            while batch.len() < max {
+                match inner.jobs.front() {
+                    Some(j) if j.request.batch_key() == key => {
+                        batch.push(inner.jobs.pop_front().unwrap());
+                    }
+                    _ => break,
+                }
+            }
+            if batch.len() >= max || inner.closed || linger.is_zero() {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            // a non-matching job at the head also ends the batch
+            if !inner.jobs.is_empty() {
+                break;
+            }
+            let (next, timeout) = self
+                .not_empty
+                .wait_timeout(inner, deadline - now)
+                .unwrap();
+            inner = next;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        drop(inner);
+        self.not_full.notify_all();
+        Some(batch)
+    }
+
+    /// Close the queue: submits fail, workers drain then exit.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synthetic;
+
+    fn req(id: u64, w: usize) -> Request {
+        Request::compress(
+            id,
+            synthetic::lena_like(w, 16, id),
+            Variant::Dct,
+            Lane::Cpu,
+        )
+    }
+
+    #[test]
+    fn fifo_order_within_key() {
+        let q = RequestQueue::new(16, Backpressure::Reject);
+        let _h1 = q.submit(req(1, 16)).unwrap();
+        let _h2 = q.submit(req(2, 16)).unwrap();
+        let batch = q.pop_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(
+            batch.iter().map(|j| j.request.id).collect::<Vec<_>>(),
+            vec![1, 2]
+        );
+    }
+
+    #[test]
+    fn batch_splits_on_key_change() {
+        let q = RequestQueue::new(16, Backpressure::Reject);
+        let _hs: Vec<_> = [req(1, 16), req(2, 16), req(3, 24), req(4, 16)]
+            .into_iter()
+            .map(|r| q.submit(r).unwrap())
+            .collect();
+        let b1 = q.pop_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(b1.len(), 2); // ids 1,2 (16-wide)
+        let b2 = q.pop_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(b2.len(), 1); // id 3 (24-wide)
+        let b3 = q.pop_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(b3[0].request.id, 4);
+    }
+
+    #[test]
+    fn max_batch_respected() {
+        let q = RequestQueue::new(32, Backpressure::Reject);
+        for i in 0..10 {
+            let _ = q.submit(req(i, 16)).unwrap();
+        }
+        let b = q.pop_batch(4, Duration::ZERO).unwrap();
+        assert_eq!(b.len(), 4);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn reject_backpressure() {
+        let q = RequestQueue::new(2, Backpressure::Reject);
+        let _a = q.submit(req(1, 16)).unwrap();
+        let _b = q.submit(req(2, 16)).unwrap();
+        assert!(q.submit(req(3, 16)).is_err());
+    }
+
+    #[test]
+    fn block_backpressure_unblocks_on_pop() {
+        use std::sync::Arc;
+        let q = Arc::new(RequestQueue::new(1, Backpressure::Block));
+        let _a = q.submit(req(1, 16)).unwrap();
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || {
+            // blocks until main thread pops
+            q2.submit(req(2, 16)).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.len(), 1, "submitter still blocked");
+        let _ = q.pop_batch(1, Duration::ZERO).unwrap();
+        t.join().unwrap();
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = RequestQueue::new(4, Backpressure::Reject);
+        let _h = q.submit(req(1, 16)).unwrap();
+        q.close();
+        assert!(q.submit(req(2, 16)).is_err());
+        assert!(q.pop_batch(4, Duration::ZERO).is_some());
+        assert!(q.pop_batch(4, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn linger_collects_late_arrivals() {
+        use std::sync::Arc;
+        let q = Arc::new(RequestQueue::new(16, Backpressure::Reject));
+        let _h1 = q.submit(req(1, 16)).unwrap();
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            let _h = q2.submit(req(2, 16)).unwrap();
+            std::mem::forget(_h); // keep channel alive past thread exit
+        });
+        let b = q.pop_batch(8, Duration::from_millis(300)).unwrap();
+        t.join().unwrap();
+        assert_eq!(b.len(), 2, "linger should catch the second job");
+    }
+}

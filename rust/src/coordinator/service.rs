@@ -1,0 +1,261 @@
+//! The service facade: owns the queue, worker threads, optional PJRT
+//! runtime, and metrics; this is what the launcher and examples talk to.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::dct::Variant;
+use crate::image::GrayImage;
+use crate::log_info;
+use crate::metrics::stats::SharedHistogram;
+use crate::runtime::{Executor, Runtime};
+
+use super::batcher::BatchPolicy;
+use super::request::{
+    Backpressure, JobHandle, Lane, Request, RequestKind, RequestQueue,
+};
+use super::worker::{self, WorkerCtx};
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Worker thread count.
+    pub workers: usize,
+    /// Request queue capacity (backpressure boundary).
+    pub queue_capacity: usize,
+    pub backpressure: Backpressure,
+    pub batch: BatchPolicy,
+    /// IJG quality for compression jobs (must match the artifacts').
+    pub quality: u8,
+    /// Artifact directory; None disables the GPU lane.
+    pub artifact_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: crate::util::threadpool::ThreadPool::default_size(),
+            queue_capacity: 256,
+            backpressure: Backpressure::Block,
+            batch: BatchPolicy::default(),
+            quality: 50,
+            artifact_dir: Some(std::path::PathBuf::from("artifacts")),
+        }
+    }
+}
+
+/// Aggregate service statistics snapshot.
+#[derive(Debug, Clone)]
+pub struct ServiceStats {
+    pub submitted: u64,
+    pub queue_depth: usize,
+    pub queue_wait: (u64, f64, f64, f64), // count, mean, p95, max (ms)
+    pub process: (u64, f64, f64, f64),
+    pub compiled_executables: usize,
+}
+
+/// The running service.
+pub struct Service {
+    queue: Arc<RequestQueue>,
+    workers: Vec<JoinHandle<()>>,
+    runtime: Option<Arc<Runtime>>,
+    next_id: AtomicU64,
+    quality: u8,
+    queue_hist: Arc<SharedHistogram>,
+    process_hist: Arc<SharedHistogram>,
+}
+
+impl Service {
+    pub fn start(cfg: ServiceConfig) -> Result<Service> {
+        let runtime = match &cfg.artifact_dir {
+            Some(dir) if dir.join("manifest.json").exists() => Some(
+                Arc::new(Runtime::new(dir).with_context(|| {
+                    format!("loading artifacts from {}", dir.display())
+                })?),
+            ),
+            _ => None,
+        };
+        let queue = Arc::new(RequestQueue::new(
+            cfg.queue_capacity,
+            cfg.backpressure,
+        ));
+        let queue_hist = Arc::new(SharedHistogram::default());
+        let process_hist = Arc::new(SharedHistogram::default());
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for i in 0..cfg.workers.max(1) {
+            let ctx = WorkerCtx {
+                queue: Arc::clone(&queue),
+                executor: runtime
+                    .as_ref()
+                    .map(|rt| Arc::new(Executor::new(Arc::clone(rt)))),
+                policy: cfg.batch,
+                quality: cfg.quality,
+                queue_hist: Arc::clone(&queue_hist),
+                process_hist: Arc::clone(&process_hist),
+            };
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("coordinator-worker-{i}"))
+                    .spawn(move || worker::run(&ctx))
+                    .context("spawning worker")?,
+            );
+        }
+        log_info!(
+            "service",
+            "started: {} workers, queue {}, gpu lane {}",
+            workers.len(),
+            cfg.queue_capacity,
+            if runtime.is_some() { "on" } else { "off" }
+        );
+        Ok(Service {
+            queue,
+            workers,
+            runtime,
+            next_id: AtomicU64::new(1),
+            quality: cfg.quality,
+            queue_hist,
+            process_hist,
+        })
+    }
+
+    pub fn has_gpu_lane(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    pub fn quality(&self) -> u8 {
+        self.quality
+    }
+
+    pub fn runtime(&self) -> Option<&Arc<Runtime>> {
+        self.runtime.as_ref()
+    }
+
+    /// Submit a compression job.
+    pub fn compress(&self, image: GrayImage, variant: Variant, lane: Lane)
+                    -> Result<JobHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.queue
+            .submit(Request::compress(id, image, variant, lane))
+    }
+
+    /// Submit a histogram-equalization job.
+    pub fn histeq(&self, image: GrayImage, lane: Lane) -> Result<JobHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.queue.submit(Request {
+            id,
+            kind: RequestKind::Histeq,
+            image,
+            variant: Variant::Dct,
+            lane,
+        })
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            submitted: self.next_id.load(Ordering::Relaxed) - 1,
+            queue_depth: self.queue.len(),
+            queue_wait: self.queue_hist.snapshot(),
+            process: self.process_hist.snapshot(),
+            compiled_executables: self
+                .runtime
+                .as_ref()
+                .map(|r| r.cached_count())
+                .unwrap_or(0),
+        }
+    }
+
+    /// Drain and stop all workers.
+    pub fn shutdown(mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synthetic;
+
+    fn cpu_only_config(workers: usize) -> ServiceConfig {
+        ServiceConfig {
+            workers,
+            artifact_dir: None,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn end_to_end_cpu_only() {
+        let svc = Service::start(cpu_only_config(2)).unwrap();
+        assert!(!svc.has_gpu_lane());
+        let img = synthetic::lena_like(48, 48, 1);
+        let h = svc
+            .compress(img.clone(), Variant::Dct, Lane::Auto)
+            .unwrap();
+        let resp = h.wait();
+        assert_eq!(resp.lane, Lane::Cpu);
+        let out = resp.result.unwrap();
+        assert!(out.psnr_db.unwrap() > 28.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn many_jobs_all_return_exactly_once() {
+        let svc = Service::start(cpu_only_config(4)).unwrap();
+        let handles: Vec<_> = (0..40)
+            .map(|i| {
+                let img = synthetic::lena_like(16 + (i % 3) * 8, 16, i as u64);
+                svc.compress(img, Variant::Dct, Lane::Cpu).unwrap()
+            })
+            .collect();
+        let mut ids: Vec<u64> =
+            handles.into_iter().map(|h| h.wait().id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 40, "every job returns exactly once");
+        let stats = svc.stats();
+        assert_eq!(stats.submitted, 40);
+        assert_eq!(stats.process.0, 40);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn variant_affects_output() {
+        let svc = Service::start(cpu_only_config(2)).unwrap();
+        let img = synthetic::lena_like(64, 64, 9);
+        let d = svc
+            .compress(img.clone(), Variant::Dct, Lane::Cpu)
+            .unwrap()
+            .wait()
+            .result
+            .unwrap();
+        let c = svc
+            .compress(img, Variant::Cordic, Lane::Cpu)
+            .unwrap()
+            .wait()
+            .result
+            .unwrap();
+        assert!(c.psnr_db.unwrap() < d.psnr_db.unwrap());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_via_drop() {
+        let svc = Service::start(cpu_only_config(1)).unwrap();
+        drop(svc); // close + join without panic
+    }
+}

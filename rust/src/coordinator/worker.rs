@@ -1,0 +1,251 @@
+//! Worker loop: drains batches from the request queue and runs each job
+//! on its lane, replying over the per-job channel.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::codec::{encoder, variant_tag, Header};
+use crate::dct::pipeline::CpuPipeline;
+use crate::dct::Variant;
+use crate::image::{histeq, GrayImage};
+use crate::metrics::{psnr, stats::SharedHistogram};
+use crate::runtime::Executor;
+
+use super::batcher::BatchPolicy;
+use super::request::{
+    JobOutput, Lane, QueuedJob, Request, RequestKind, RequestQueue, Response,
+};
+
+/// Shared worker context.
+pub struct WorkerCtx {
+    pub queue: Arc<RequestQueue>,
+    /// None when running CPU-only (no artifacts available).
+    pub executor: Option<Arc<Executor>>,
+    pub policy: BatchPolicy,
+    pub quality: u8,
+    pub queue_hist: Arc<SharedHistogram>,
+    pub process_hist: Arc<SharedHistogram>,
+}
+
+/// Run the worker loop until the queue closes.
+pub fn run(ctx: &WorkerCtx) {
+    loop {
+        let Some(batch) =
+            ctx.queue.pop_batch(ctx.policy.pop_max(), ctx.policy.linger)
+        else {
+            return;
+        };
+        // One cached-executable resolve serves the whole same-key batch —
+        // the batching win the ablation measures.
+        for job in batch {
+            process_job(ctx, job);
+        }
+    }
+}
+
+fn process_job(ctx: &WorkerCtx, job: QueuedJob) {
+    let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
+    ctx.queue_hist.record_us(queue_ms * 1e3);
+    let t0 = Instant::now();
+    let lane = resolve_lane(ctx, &job.request);
+    let result = run_job(ctx, &job.request, lane);
+    let process_ms = t0.elapsed().as_secs_f64() * 1e3;
+    ctx.process_hist.record_us(process_ms * 1e3);
+    // receiver may have given up (dropped handle): ignore send failure
+    let _ = job.reply.send(Response {
+        id: job.request.id,
+        result,
+        queue_ms,
+        process_ms,
+        lane,
+    });
+}
+
+/// Auto routing: GPU when the executor exists and has an artifact for the
+/// padded shape, else CPU.
+fn resolve_lane(ctx: &WorkerCtx, req: &Request) -> Lane {
+    match req.lane {
+        Lane::Cpu => Lane::Cpu,
+        Lane::Gpu => Lane::Gpu,
+        Lane::Auto => match &ctx.executor {
+            Some(ex) => {
+                let ph = crate::dct::blocks::align8(req.image.height);
+                let pw = crate::dct::blocks::align8(req.image.width);
+                let kind = match req.kind {
+                    RequestKind::Compress => "compress",
+                    RequestKind::Histeq => "histeq",
+                };
+                let variant = match req.kind {
+                    RequestKind::Compress => Some(req.variant.as_str()),
+                    RequestKind::Histeq => None,
+                };
+                if ex.rt.manifest.find(kind, variant, ph, pw).is_some() {
+                    Lane::Gpu
+                } else {
+                    Lane::Cpu
+                }
+            }
+            None => Lane::Cpu,
+        },
+    }
+}
+
+fn run_job(ctx: &WorkerCtx, req: &Request, lane: Lane)
+           -> Result<JobOutput> {
+    match (req.kind, lane) {
+        (RequestKind::Compress, Lane::Gpu) => {
+            let ex = ctx
+                .executor
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("no GPU lane configured"))?;
+            let out = ex.compress(&req.image, req.variant.as_str())?;
+            let bytes = entropy_encode(
+                &req.image,
+                &out.qcoef,
+                out.padded_width,
+                out.padded_height,
+                req.variant,
+                ctx.quality,
+            )?;
+            Ok(JobOutput {
+                psnr_db: Some(psnr(&req.image, &out.recon)),
+                image: out.recon,
+                compressed_bytes: Some(bytes.len()),
+            })
+        }
+        (RequestKind::Compress, _) => {
+            let pipe = CpuPipeline::new(req.variant, ctx.quality);
+            let out = pipe.compress(&req.image);
+            let bytes = entropy_encode(
+                &req.image,
+                &out.qcoef,
+                out.padded_width,
+                out.padded_height,
+                req.variant,
+                ctx.quality,
+            )?;
+            Ok(JobOutput {
+                psnr_db: Some(psnr(&req.image, &out.recon)),
+                image: out.recon,
+                compressed_bytes: Some(bytes.len()),
+            })
+        }
+        (RequestKind::Histeq, Lane::Gpu) => {
+            let ex = ctx
+                .executor
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("no GPU lane configured"))?;
+            let (out, _ms) = ex.histeq(&req.image)?;
+            Ok(JobOutput {
+                image: out,
+                compressed_bytes: None,
+                psnr_db: None,
+            })
+        }
+        (RequestKind::Histeq, _) => Ok(JobOutput {
+            image: histeq::histeq(&req.image),
+            compressed_bytes: None,
+            psnr_db: None,
+        }),
+    }
+}
+
+fn entropy_encode(
+    original: &GrayImage,
+    qcoef: &[f32],
+    pw: usize,
+    ph: usize,
+    variant: Variant,
+    quality: u8,
+) -> Result<Vec<u8>> {
+    let header = Header {
+        width: original.width as u32,
+        height: original.height as u32,
+        padded_width: pw as u32,
+        padded_height: ph as u32,
+        quality,
+        variant: variant_tag(variant),
+    };
+    encoder::encode(&header, qcoef)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::Backpressure;
+    use crate::image::synthetic;
+
+    fn cpu_ctx(capacity: usize) -> WorkerCtx {
+        WorkerCtx {
+            queue: Arc::new(RequestQueue::new(
+                capacity,
+                Backpressure::Block,
+            )),
+            executor: None,
+            policy: BatchPolicy::default(),
+            quality: 50,
+            queue_hist: Arc::new(SharedHistogram::default()),
+            process_hist: Arc::new(SharedHistogram::default()),
+        }
+    }
+
+    #[test]
+    fn cpu_worker_processes_compress() {
+        let ctx = Arc::new(cpu_ctx(8));
+        let img = synthetic::lena_like(32, 32, 1);
+        let handle = ctx
+            .queue
+            .submit(Request::compress(7, img.clone(), Variant::Dct,
+                                      Lane::Cpu))
+            .unwrap();
+        let ctx2 = Arc::clone(&ctx);
+        let t = std::thread::spawn(move || run(&ctx2));
+        let resp = handle.wait();
+        ctx.queue.close();
+        t.join().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.lane, Lane::Cpu);
+        let out = resp.result.unwrap();
+        assert_eq!(out.image.width, 32);
+        assert!(out.psnr_db.unwrap() > 28.0);
+        assert!(out.compressed_bytes.unwrap() > 0);
+    }
+
+    #[test]
+    fn auto_without_executor_routes_cpu() {
+        let ctx = cpu_ctx(4);
+        let req = Request::compress(
+            1,
+            synthetic::lena_like(16, 16, 2),
+            Variant::Dct,
+            Lane::Auto,
+        );
+        assert_eq!(resolve_lane(&ctx, &req), Lane::Cpu);
+    }
+
+    #[test]
+    fn histeq_job_works() {
+        let ctx = Arc::new(cpu_ctx(4));
+        let img = synthetic::cablecar_like(24, 24, 3);
+        let handle = ctx
+            .queue
+            .submit(Request {
+                id: 1,
+                kind: RequestKind::Histeq,
+                image: img.clone(),
+                variant: Variant::Dct,
+                lane: Lane::Cpu,
+            })
+            .unwrap();
+        let ctx2 = Arc::clone(&ctx);
+        let t = std::thread::spawn(move || run(&ctx2));
+        let resp = handle.wait();
+        ctx.queue.close();
+        t.join().unwrap();
+        let out = resp.result.unwrap();
+        assert_eq!(out.image, histeq::histeq(&img));
+        assert!(out.compressed_bytes.is_none());
+    }
+}

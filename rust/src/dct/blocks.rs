@@ -1,0 +1,163 @@
+//! Block management: 8-alignment padding, (de)blockification, level shift.
+//!
+//! The paper's pipeline operates on 8x8 blocks of a level-shifted image;
+//! this module owns the layout plumbing shared by the CPU pipeline, the
+//! entropy codec and the coordinator (which submits padded images to the
+//! PJRT artifacts and crops the results).
+
+use crate::image::GrayImage;
+
+pub const BLOCK: usize = 8;
+pub const LEVEL_SHIFT: f32 = 128.0;
+
+/// Round up to the next multiple of 8.
+pub fn align8(n: usize) -> usize {
+    n.div_ceil(BLOCK) * BLOCK
+}
+
+/// Pad an image to 8-aligned dimensions with edge replication.
+/// Returns the padded image (may be a clone if already aligned).
+pub fn pad_to_blocks(img: &GrayImage) -> GrayImage {
+    let (w, h) = (align8(img.width), align8(img.height));
+    if (w, h) == (img.width, img.height) {
+        img.clone()
+    } else {
+        img.pad_edge(w, h).expect("pad_edge grows")
+    }
+}
+
+/// Block grid dimensions of an aligned image.
+pub fn grid_dims(width: usize, height: usize) -> (usize, usize) {
+    debug_assert!(width % BLOCK == 0 && height % BLOCK == 0);
+    (width / BLOCK, height / BLOCK)
+}
+
+/// Extract block (bx, by) of an aligned image into `out`, applying the
+/// -128 level shift.
+pub fn extract_block(
+    img: &GrayImage,
+    bx: usize,
+    by: usize,
+    out: &mut [f32; 64],
+) {
+    let w = img.width;
+    for r in 0..BLOCK {
+        let src = (by * BLOCK + r) * w + bx * BLOCK;
+        for c in 0..BLOCK {
+            out[r * BLOCK + c] = img.data[src + c] as f32 - LEVEL_SHIFT;
+        }
+    }
+}
+
+/// Write a reconstructed block back (un-shift + clamp to u8).
+pub fn store_block(img: &mut GrayImage, bx: usize, by: usize, block: &[f32; 64]) {
+    let w = img.width;
+    for r in 0..BLOCK {
+        let dst = (by * BLOCK + r) * w + bx * BLOCK;
+        for c in 0..BLOCK {
+            img.data[dst + c] = (block[r * BLOCK + c] + LEVEL_SHIFT)
+                .clamp(0.0, 255.0)
+                .round() as u8;
+        }
+    }
+}
+
+/// Copy a quantized-coefficient block into the planar (image-layout)
+/// coefficient buffer used by the PJRT interchange.
+pub fn store_coef_planar(
+    buf: &mut [f32],
+    width: usize,
+    bx: usize,
+    by: usize,
+    qc: &[i16; 64],
+) {
+    for r in 0..BLOCK {
+        let dst = (by * BLOCK + r) * width + bx * BLOCK;
+        for c in 0..BLOCK {
+            buf[dst + c] = qc[r * BLOCK + c] as f32;
+        }
+    }
+}
+
+/// Gather a block from a planar f32 coefficient buffer (the PJRT output
+/// layout) into block order as i16.
+pub fn load_coef_planar(
+    buf: &[f32],
+    width: usize,
+    bx: usize,
+    by: usize,
+    out: &mut [i16; 64],
+) {
+    for r in 0..BLOCK {
+        let src = (by * BLOCK + r) * width + bx * BLOCK;
+        for c in 0..BLOCK {
+            out[r * BLOCK + c] = buf[src + c].round_ties_even() as i16;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synthetic;
+
+    #[test]
+    fn align8_values() {
+        assert_eq!(align8(0), 0);
+        assert_eq!(align8(1), 8);
+        assert_eq!(align8(8), 8);
+        assert_eq!(align8(814), 816);
+        assert_eq!(align8(200), 200);
+    }
+
+    #[test]
+    fn pad_already_aligned_is_same() {
+        let img = synthetic::lena_like(16, 24, 1);
+        let p = pad_to_blocks(&img);
+        assert_eq!(p, img);
+    }
+
+    #[test]
+    fn pad_unaligned_grows_and_replicates() {
+        let img = synthetic::lena_like(13, 9, 2);
+        let p = pad_to_blocks(&img);
+        assert_eq!((p.width, p.height), (16, 16));
+        assert_eq!(p.get(15, 5), img.get(12, 5));
+        assert_eq!(p.get(4, 15), img.get(4, 8));
+    }
+
+    #[test]
+    fn extract_store_roundtrip() {
+        let img = synthetic::lena_like(24, 16, 3);
+        let mut out = GrayImage::new(24, 16);
+        let mut block = [0.0f32; 64];
+        let (gw, gh) = grid_dims(24, 16);
+        for by in 0..gh {
+            for bx in 0..gw {
+                extract_block(&img, bx, by, &mut block);
+                store_block(&mut out, bx, by, &block);
+            }
+        }
+        assert_eq!(img, out);
+    }
+
+    #[test]
+    fn level_shift_applied() {
+        let img = GrayImage::from_vec(8, 8, vec![128; 64]).unwrap();
+        let mut block = [0.0f32; 64];
+        extract_block(&img, 0, 0, &mut block);
+        assert!(block.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn coef_planar_roundtrip() {
+        let mut buf = vec![0.0f32; 16 * 16];
+        let qc: [i16; 64] = std::array::from_fn(|i| i as i16 - 32);
+        store_coef_planar(&mut buf, 16, 1, 1, &qc);
+        let mut back = [0i16; 64];
+        load_coef_planar(&buf, 16, 1, 1, &mut back);
+        assert_eq!(qc, back);
+        // block (0,0) untouched
+        assert_eq!(buf[0], 0.0);
+    }
+}

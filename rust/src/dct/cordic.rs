@@ -1,0 +1,221 @@
+//! CORDIC rotation engine: micro-rotation planning and fixed-point
+//! application — the arithmetic core of the paper's Cordic-based Loeffler
+//! DCT (Sun/Heyne/Ruan/Goetze 2006).
+//!
+//! This mirrors `python/compile/kernels/transform8.py` bit-for-bit: the
+//! same greedy plan, the same simulated fixed-point grid (`frac_bits`
+//! fractional bits, round-half-even like `jnp.round`), the same gain
+//! compensation, so the Rust CPU lane and the Pallas GPU lane compute the
+//! same transform.
+
+/// A planned CORDIC rotation: micro-rotation directions for a target angle
+/// plus the accumulated magnitude gain.
+#[derive(Clone, Debug)]
+pub struct CordicPlan {
+    pub theta: f64,
+    pub sigmas: Vec<i8>,
+    pub achieved: f64,
+    pub gain: f64,
+}
+
+/// Greedy plan: sigma_i = +-1 choosing whichever direction moves the
+/// accumulated angle toward `theta`; micro-rotation i has angle
+/// atan(2^-i) and gain sqrt(1 + 4^-i).
+pub fn plan(theta: f64, iters: usize) -> CordicPlan {
+    let mut sigmas = Vec::with_capacity(iters);
+    let mut phi = 0.0f64;
+    let mut gain = 1.0f64;
+    for i in 0..iters {
+        let sigma: i8 = if phi < theta { 1 } else { -1 };
+        sigmas.push(sigma);
+        phi += sigma as f64 * (2.0f64.powi(-(i as i32))).atan();
+        gain *= (1.0 + 4.0f64.powi(-(i as i32))).sqrt();
+    }
+    CordicPlan {
+        theta,
+        sigmas,
+        achieved: phi,
+        gain,
+    }
+}
+
+/// Round `v` to `frac_bits` fractional bits, ties to even — the exact
+/// behaviour of `jnp.round(v * s) / s` in the Pallas kernel.
+///
+/// Implemented with the magic-number trick: adding 1.5 * 2^23 to an f32
+/// forces IEEE round-to-nearest-even at integer granularity; subtracting
+/// restores the value. Valid for |v * 2^frac_bits| < 2^22, far above this
+/// pipeline's coefficient range, and ~5x faster than the libm
+/// `round_ties_even` call on baseline x86-64 (see EXPERIMENTS.md §Perf).
+#[inline]
+pub fn fxp(v: f32, frac_bits: u32) -> f32 {
+    const MAGIC: f32 = 1.5 * (1u32 << 23) as f32;
+    let s = (1u32 << frac_bits) as f32;
+    debug_assert!((v * s).abs() < (1u32 << 22) as f32);
+    ((v * s + MAGIC) - MAGIC) / s
+}
+
+/// One fixed-point CORDIC rotator with gain compensation folded in, in the
+/// flow graph's clockwise convention:
+///
+/// ```text
+/// x' =  scale * ( x cos(theta) + y sin(theta) )
+/// y' =  scale * (-x sin(theta) + y cos(theta) )
+/// ```
+#[derive(Clone, Debug)]
+pub struct Rotator {
+    plan: CordicPlan,
+    /// Output gain compensation: scale / cordic_gain.
+    comp: f32,
+    /// Inverse-direction compensation: 1 / (scale * cordic_gain).
+    comp_inv: f32,
+    frac_bits: u32,
+}
+
+impl Rotator {
+    pub fn new(theta: f64, scale: f64, iters: usize, frac_bits: u32) -> Self {
+        let plan = plan(theta, iters);
+        Rotator {
+            comp: (scale / plan.gain) as f32,
+            comp_inv: (1.0 / (scale * plan.gain)) as f32,
+            plan,
+            frac_bits,
+        }
+    }
+
+    /// Residual angle error of the plan (radians).
+    pub fn angle_error(&self) -> f64 {
+        (self.plan.achieved - self.plan.theta).abs()
+    }
+
+    /// Shift-add operation count for the ablation table: 2 adds + 2
+    /// shifts per micro-rotation + 2 compensation multiplies.
+    pub fn ops(&self) -> (usize, usize) {
+        (2, self.plan.sigmas.len() * 2)
+    }
+
+    /// Forward (clockwise) fixed-point rotation.
+    #[inline]
+    pub fn rotate_cw(&self, x: f32, y: f32) -> (f32, f32) {
+        let fb = self.frac_bits;
+        let mut x = fxp(x, fb);
+        let mut y = fxp(y, fb);
+        for (i, &sigma) in self.plan.sigmas.iter().enumerate() {
+            let shift = 2.0f32.powi(-(i as i32));
+            let s = sigma as f32;
+            let xn = x + s * y * shift;
+            let yn = y - s * x * shift;
+            x = fxp(xn, fb);
+            y = fxp(yn, fb);
+        }
+        (fxp(x * self.comp, fb), fxp(y * self.comp, fb))
+    }
+
+    /// Inverse (counterclockwise) fixed-point rotation.
+    #[inline]
+    pub fn rotate_ccw(&self, x: f32, y: f32) -> (f32, f32) {
+        let fb = self.frac_bits;
+        let mut x = fxp(x, fb);
+        let mut y = fxp(y, fb);
+        for (i, &sigma) in self.plan.sigmas.iter().enumerate() {
+            let shift = 2.0f32.powi(-(i as i32));
+            let s = sigma as f32;
+            let xn = x - s * y * shift;
+            let yn = y + s * x * shift;
+            x = fxp(xn, fb);
+            y = fxp(yn, fb);
+        }
+        (fxp(x * self.comp_inv, fb), fxp(y * self.comp_inv, fb))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const A3: f64 = 3.0 * std::f64::consts::PI / 16.0;
+    const A1: f64 = std::f64::consts::PI / 16.0;
+    const A6: f64 = 6.0 * std::f64::consts::PI / 16.0;
+
+    #[test]
+    fn plan_angle_error_bounded() {
+        for theta in [A1, A3, A6] {
+            for iters in [2usize, 3, 4, 8] {
+                let p = plan(theta, iters);
+                let bound =
+                    (2.0f64.powi(-(iters as i32 - 1))).atan() + 1e-12;
+                assert!(
+                    (p.achieved - theta).abs() <= bound,
+                    "theta {theta} iters {iters}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plan_gain_matches_formula() {
+        let p = plan(0.7, 5);
+        let want: f64 = (0..5)
+            .map(|i| (1.0 + 4.0f64.powi(-i)).sqrt())
+            .product();
+        assert!((p.gain - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fxp_round_half_even() {
+        // at frac_bits=1, grid is halves: 0.25 is a tie between 0.0, 0.5
+        assert_eq!(fxp(0.25, 1), 0.0); // ties to even (0.0)
+        assert_eq!(fxp(0.75, 1), 1.0); // ties to even (1.0)
+        assert_eq!(fxp(0.26, 1), 0.5);
+        assert_eq!(fxp(-0.25, 1), -0.0);
+    }
+
+    #[test]
+    fn rotation_approximates_exact() {
+        let r = Rotator::new(A3, 1.0, 4, 14);
+        let (x, y) = (0.7f32, -0.2f32);
+        let (gx, gy) = r.rotate_cw(x, y);
+        let (c, s) = (A3.cos() as f32, A3.sin() as f32);
+        let (ex, ey) = (x * c + y * s, -x * s + y * c);
+        let err = (gx - ex).abs().max((gy - ey).abs());
+        let bound = (2.0f32.powi(-3)).atan() * 1.0 + 0.01;
+        assert!(err < bound, "err {err}");
+    }
+
+    #[test]
+    fn ccw_inverts_cw_approximately() {
+        let r = Rotator::new(A6, std::f64::consts::SQRT_2, 4, 14);
+        let (x, y) = (0.3f32, 0.9f32);
+        let (fx, fy) = r.rotate_cw(x, y);
+        let (bx, by) = r.rotate_ccw(fx, fy);
+        assert!((bx - x).abs() < 5e-3, "{bx} vs {x}");
+        assert!((by - y).abs() < 5e-3, "{by} vs {y}");
+    }
+
+    #[test]
+    fn scale_applied() {
+        let r = Rotator::new(0.0, 2.0, 4, 14);
+        // theta 0 still runs micro-rotations that cancel; net must be
+        // approximately scale * identity
+        let (gx, gy) = r.rotate_cw(0.5, -0.25);
+        assert!((gx - 1.0).abs() < 0.1, "{gx}");
+        assert!((gy + 0.5).abs() < 0.1, "{gy}");
+    }
+
+    #[test]
+    fn coarser_grid_larger_error() {
+        let fine = Rotator::new(A3, 1.0, 6, 14);
+        let coarse = Rotator::new(A3, 1.0, 2, 6);
+        let exact = |x: f32, y: f32| {
+            let (c, s) = (A3.cos() as f32, A3.sin() as f32);
+            (x * c + y * s, -x * s + y * c)
+        };
+        let (x, y) = (0.9f32, 0.4f32);
+        let e = exact(x, y);
+        let f = fine.rotate_cw(x, y);
+        let c = coarse.rotate_cw(x, y);
+        let err_f = (f.0 - e.0).abs() + (f.1 - e.1).abs();
+        let err_c = (c.0 - e.0).abs() + (c.1 - e.1).abs();
+        assert!(err_f < err_c, "fine {err_f} coarse {err_c}");
+    }
+}

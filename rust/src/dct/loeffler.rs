@@ -1,0 +1,331 @@
+//! Loeffler fast DCT: the 4-stage flow graph (paper §2.5.2) with exact
+//! float rotators — 11 multiplies per 1-D transform against 64 for the
+//! direct form. The Cordic variant swaps the rotators; the graph itself
+//! lives here and is shared.
+
+use super::Transform8x8;
+
+pub const SQRT2: f32 = std::f32::consts::SQRT_2;
+const INV_SQRT8: f32 = 0.353_553_39; // 1/sqrt(8)
+const SQRT8: f32 = 2.828_427_1;
+
+/// Rotator angles of the graph.
+pub const ANGLE_ODD_A: f64 = 3.0 * std::f64::consts::PI / 16.0;
+pub const ANGLE_ODD_B: f64 = std::f64::consts::PI / 16.0;
+pub const ANGLE_EVEN: f64 = 6.0 * std::f64::consts::PI / 16.0;
+
+/// The three plane rotations a Loeffler graph needs; implementations are
+/// exact (this file) or CORDIC fixed-point (`cordic_loeffler`).
+pub trait Rotors {
+    /// rot(3pi/16) applied to (a4, a7).
+    fn odd_a(&self, x: f32, y: f32) -> (f32, f32);
+    /// rot(pi/16) applied to (a5, a6).
+    fn odd_b(&self, x: f32, y: f32) -> (f32, f32);
+    /// sqrt(2) * rot(6pi/16) applied to (b2, b3).
+    fn even(&self, x: f32, y: f32) -> (f32, f32);
+    /// Inverses of the above.
+    fn odd_a_inv(&self, x: f32, y: f32) -> (f32, f32);
+    fn odd_b_inv(&self, x: f32, y: f32) -> (f32, f32);
+    fn even_inv(&self, x: f32, y: f32) -> (f32, f32);
+    /// Quantize a value to the implementation's arithmetic grid (identity
+    /// for exact float).
+    fn grid(&self, v: f32) -> f32 {
+        v
+    }
+}
+
+/// Forward 8-point DCT-II via the Loeffler graph (verified against the
+/// DCT matrix in tests; identical structure to
+/// `python/compile/kernels/transform8.py::loeffler8_fwd`).
+pub fn fwd8<R: Rotors>(r: &R, x: &[f32; 8]) -> [f32; 8] {
+    // stage 1
+    let a0 = x[0] + x[7];
+    let a1 = x[1] + x[6];
+    let a2 = x[2] + x[5];
+    let a3 = x[3] + x[4];
+    let a7 = x[0] - x[7];
+    let a6 = x[1] - x[6];
+    let a5 = x[2] - x[5];
+    let a4 = x[3] - x[4];
+    // stage 2
+    let b0 = a0 + a3;
+    let b1 = a1 + a2;
+    let b3 = a0 - a3;
+    let b2 = a1 - a2;
+    let (b4, b7) = r.odd_a(a4, a7);
+    let (b5, b6) = r.odd_b(a5, a6);
+    // stage 3
+    let x0 = b0 + b1;
+    let x4 = b0 - b1;
+    let (x2, x6) = r.even(b2, b3);
+    let c4 = b4 + b6;
+    let c6 = b4 - b6;
+    let c7 = b7 + b5;
+    let c5 = b7 - b5;
+    // stage 4
+    let x1 = c4 + c7;
+    let x7 = c7 - c4;
+    let rt2 = r.grid(SQRT2);
+    let x3 = c5 * rt2;
+    let x5 = c6 * rt2;
+    let n = r.grid(INV_SQRT8);
+    [
+        x0 * n,
+        x1 * n,
+        x2 * n,
+        x3 * n,
+        x4 * n,
+        x5 * n,
+        x6 * n,
+        x7 * n,
+    ]
+}
+
+/// Inverse of [`fwd8`]: transposed graph, each stage inverted.
+pub fn inv8<R: Rotors>(r: &R, y: &[f32; 8]) -> [f32; 8] {
+    let s8 = r.grid(SQRT8);
+    let x0 = y[0] * s8;
+    let x1 = y[1] * s8;
+    let x2 = y[2] * s8;
+    let x3 = y[3] * s8;
+    let x4 = y[4] * s8;
+    let x5 = y[5] * s8;
+    let x6 = y[6] * s8;
+    let x7 = y[7] * s8;
+    // stage 4 inverse
+    let c4 = (x1 - x7) * 0.5;
+    let c7 = (x1 + x7) * 0.5;
+    let ir2 = r.grid(1.0 / SQRT2);
+    let c5 = x3 * ir2;
+    let c6 = x5 * ir2;
+    // stage 3 odd inverse
+    let b4 = (c4 + c6) * 0.5;
+    let b6 = (c4 - c6) * 0.5;
+    let b7 = (c7 + c5) * 0.5;
+    let b5 = (c7 - c5) * 0.5;
+    // stage 3 even inverse
+    let b0 = (x0 + x4) * 0.5;
+    let b1 = (x0 - x4) * 0.5;
+    let (b2, b3) = r.even_inv(x2, x6);
+    // stage 2 odd inverse
+    let (a4, a7) = r.odd_a_inv(b4, b7);
+    let (a5, a6) = r.odd_b_inv(b5, b6);
+    // stage 2 even inverse
+    let a0 = (b0 + b3) * 0.5;
+    let a3 = (b0 - b3) * 0.5;
+    let a1 = (b1 + b2) * 0.5;
+    let a2 = (b1 - b2) * 0.5;
+    // stage 1 inverse
+    [
+        (a0 + a7) * 0.5,
+        (a1 + a6) * 0.5,
+        (a2 + a5) * 0.5,
+        (a3 + a4) * 0.5,
+        (a3 - a4) * 0.5,
+        (a2 - a5) * 0.5,
+        (a1 - a6) * 0.5,
+        (a0 - a7) * 0.5,
+    ]
+}
+
+/// Apply a 1-D transform separably over an 8x8 block.
+pub fn separable_2d<R: Rotors>(
+    r: &R,
+    block: &mut [f32; 64],
+    f: fn(&R, &[f32; 8]) -> [f32; 8],
+) {
+    // columns
+    for j in 0..8 {
+        let col = std::array::from_fn(|i| block[i * 8 + j]);
+        let out = f(r, &col);
+        for i in 0..8 {
+            block[i * 8 + j] = out[i];
+        }
+    }
+    // rows
+    for i in 0..8 {
+        let row = std::array::from_fn(|j| block[i * 8 + j]);
+        let out = f(r, &row);
+        block[i * 8..i * 8 + 8].copy_from_slice(&out);
+    }
+}
+
+/// Exact float rotators.
+pub struct ExactRotors {
+    ca: f32,
+    sa: f32,
+    cb: f32,
+    sb: f32,
+    ce: f32,
+    se: f32,
+}
+
+impl ExactRotors {
+    pub fn new() -> Self {
+        ExactRotors {
+            ca: ANGLE_ODD_A.cos() as f32,
+            sa: ANGLE_ODD_A.sin() as f32,
+            cb: ANGLE_ODD_B.cos() as f32,
+            sb: ANGLE_ODD_B.sin() as f32,
+            ce: (ANGLE_EVEN.cos() * std::f64::consts::SQRT_2) as f32,
+            se: (ANGLE_EVEN.sin() * std::f64::consts::SQRT_2) as f32,
+        }
+    }
+}
+
+impl Default for ExactRotors {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Rotors for ExactRotors {
+    #[inline]
+    fn odd_a(&self, x: f32, y: f32) -> (f32, f32) {
+        (x * self.ca + y * self.sa, -x * self.sa + y * self.ca)
+    }
+    #[inline]
+    fn odd_b(&self, x: f32, y: f32) -> (f32, f32) {
+        (x * self.cb + y * self.sb, -x * self.sb + y * self.cb)
+    }
+    #[inline]
+    fn even(&self, x: f32, y: f32) -> (f32, f32) {
+        (x * self.ce + y * self.se, -x * self.se + y * self.ce)
+    }
+    #[inline]
+    fn odd_a_inv(&self, x: f32, y: f32) -> (f32, f32) {
+        (x * self.ca - y * self.sa, x * self.sa + y * self.ca)
+    }
+    #[inline]
+    fn odd_b_inv(&self, x: f32, y: f32) -> (f32, f32) {
+        (x * self.cb - y * self.sb, x * self.sb + y * self.cb)
+    }
+    #[inline]
+    fn even_inv(&self, x: f32, y: f32) -> (f32, f32) {
+        // inverse of sqrt2 * rot: rot(-theta) / sqrt2; constants already
+        // carry the sqrt2, so divide by 2 (sqrt2^2)
+        (
+            (x * self.ce - y * self.se) * 0.5,
+            (x * self.se + y * self.ce) * 0.5,
+        )
+    }
+}
+
+/// The Loeffler DCT with exact rotators.
+pub struct LoefflerDct {
+    rotors: ExactRotors,
+}
+
+impl LoefflerDct {
+    pub fn new() -> Self {
+        LoefflerDct {
+            rotors: ExactRotors::new(),
+        }
+    }
+}
+
+impl Default for LoefflerDct {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transform8x8 for LoefflerDct {
+    fn name(&self) -> &'static str {
+        "loeffler"
+    }
+
+    fn forward(&self, block: &mut [f32; 64]) {
+        separable_2d(&self.rotors, block, fwd8);
+    }
+
+    fn inverse(&self, block: &mut [f32; 64]) {
+        separable_2d(&self.rotors, block, inv8);
+    }
+
+    fn ops_per_block(&self) -> (usize, usize) {
+        // Loeffler 1-D: 11 multiplies, 29 additions; 16 1-D transforms
+        // per block (+8 normalization multiplies per transform here).
+        (16 * (11 + 8), 16 * 29)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dct::{dct_matrix, matrix::MatrixDct, Transform8x8};
+    use crate::util::prng::Rng;
+
+    fn rand8(seed: u64) -> [f32; 8] {
+        let mut rng = Rng::new(seed);
+        std::array::from_fn(|_| rng.range_f64(-100.0, 100.0) as f32)
+    }
+
+    #[test]
+    fn fwd8_matches_matrix() {
+        let r = ExactRotors::new();
+        let d = dct_matrix();
+        for seed in 0..10 {
+            let x = rand8(seed);
+            let got = fwd8(&r, &x);
+            for k in 0..8 {
+                let want: f32 = (0..8).map(|n| d[k][n] * x[n]).sum();
+                assert!(
+                    (got[k] - want).abs() < 1e-3,
+                    "seed {seed} k {k}: {} vs {want}",
+                    got[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn inv8_roundtrip() {
+        let r = ExactRotors::new();
+        for seed in 0..10 {
+            let x = rand8(seed);
+            let back = inv8(&r, &fwd8(&r, &x));
+            for k in 0..8 {
+                assert!((back[k] - x[k]).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn block_matches_matrix_dct() {
+        let l = LoefflerDct::new();
+        let m = MatrixDct::new();
+        let mut rng = Rng::new(3);
+        let mut a = [0.0f32; 64];
+        for v in &mut a {
+            *v = rng.range_f64(-128.0, 128.0) as f32;
+        }
+        let mut b = a;
+        l.forward(&mut a);
+        m.forward(&mut b);
+        for i in 0..64 {
+            assert!((a[i] - b[i]).abs() < 2e-3, "{i}: {} vs {}", a[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn block_inverse_roundtrip() {
+        let l = LoefflerDct::new();
+        let mut rng = Rng::new(4);
+        let orig: [f32; 64] =
+            std::array::from_fn(|_| rng.range_f64(-128.0, 128.0) as f32);
+        let mut b = orig;
+        l.forward(&mut b);
+        l.inverse(&mut b);
+        for i in 0..64 {
+            assert!((b[i] - orig[i]).abs() < 2e-3);
+        }
+    }
+
+    #[test]
+    fn far_fewer_multiplies_than_naive() {
+        let (m, _) = LoefflerDct::new().ops_per_block();
+        let (mn, _) = crate::dct::naive::NaiveDct::new().ops_per_block();
+        assert!(m * 10 < mn);
+    }
+}

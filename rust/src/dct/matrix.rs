@@ -1,0 +1,159 @@
+//! Separable matrix DCT: two 8x8 matrix products per block
+//! (rows then columns). The fastest *exact* scalar implementation here and
+//! the arithmetic twin of the Pallas `transform_strip_matrix` kernel.
+
+use super::{dct_matrix, Transform8x8};
+
+pub struct MatrixDct {
+    d: [[f32; 8]; 8],
+}
+
+impl MatrixDct {
+    pub fn new() -> Self {
+        MatrixDct { d: dct_matrix() }
+    }
+}
+
+impl Default for MatrixDct {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transform8x8 for MatrixDct {
+    fn name(&self) -> &'static str {
+        "matrix"
+    }
+
+    /// B <- D B D^T, computed as two separable passes.
+    fn forward(&self, block: &mut [f32; 64]) {
+        let d = &self.d;
+        let mut tmp = [0.0f32; 64];
+        // columns: tmp = D * B
+        for k in 0..8 {
+            for j in 0..8 {
+                let mut acc = 0.0f32;
+                for n in 0..8 {
+                    acc += d[k][n] * block[n * 8 + j];
+                }
+                tmp[k * 8 + j] = acc;
+            }
+        }
+        // rows: out = tmp * D^T
+        for k in 0..8 {
+            for l in 0..8 {
+                let mut acc = 0.0f32;
+                for j in 0..8 {
+                    acc += tmp[k * 8 + j] * d[l][j];
+                }
+                block[k * 8 + l] = acc;
+            }
+        }
+    }
+
+    /// B <- D^T B D.
+    fn inverse(&self, block: &mut [f32; 64]) {
+        let d = &self.d;
+        let mut tmp = [0.0f32; 64];
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut acc = 0.0f32;
+                for k in 0..8 {
+                    acc += d[k][i] * block[k * 8 + j];
+                }
+                tmp[i * 8 + j] = acc;
+            }
+        }
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut acc = 0.0f32;
+                for l in 0..8 {
+                    acc += tmp[i * 8 + l] * d[l][j];
+                }
+                block[i * 8 + j] = acc;
+            }
+        }
+    }
+
+    fn ops_per_block(&self) -> (usize, usize) {
+        // two 8x8x8 matmuls
+        (2 * 8 * 8 * 8, 2 * 8 * 8 * 7)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dct::naive::NaiveDct;
+    use crate::util::prng::Rng;
+
+    fn rand_block(seed: u64) -> [f32; 64] {
+        let mut rng = Rng::new(seed);
+        let mut b = [0.0f32; 64];
+        for v in &mut b {
+            *v = rng.range_f64(-128.0, 128.0) as f32;
+        }
+        b
+    }
+
+    #[test]
+    fn matches_naive() {
+        let m = MatrixDct::new();
+        let n = NaiveDct::new();
+        for seed in 0..6 {
+            let mut a = rand_block(seed);
+            let mut b = a;
+            m.forward(&mut a);
+            n.forward(&mut b);
+            for i in 0..64 {
+                assert!((a[i] - b[i]).abs() < 1e-3, "{i}: {} {}", a[i], b[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_matches_naive() {
+        let m = MatrixDct::new();
+        let n = NaiveDct::new();
+        let mut a = rand_block(7);
+        let mut b = a;
+        m.inverse(&mut a);
+        n.inverse(&mut b);
+        for i in 0..64 {
+            assert!((a[i] - b[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = MatrixDct::new();
+        let orig = rand_block(11);
+        let mut b = orig;
+        m.forward(&mut b);
+        m.inverse(&mut b);
+        for i in 0..64 {
+            assert!((b[i] - orig[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn impulse_response_is_basis_row() {
+        let m = MatrixDct::new();
+        let d = dct_matrix();
+        let mut b = [0.0f32; 64];
+        b[0] = 1.0; // impulse at (0,0)
+        m.forward(&mut b);
+        for u in 0..8 {
+            for v in 0..8 {
+                let want = d[u][0] * d[v][0];
+                assert!((b[u * 8 + v] - want).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn cheaper_than_naive() {
+        assert!(MatrixDct::new().ops_per_block().0
+            < NaiveDct::new().ops_per_block().0);
+    }
+}

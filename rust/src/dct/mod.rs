@@ -1,0 +1,144 @@
+//! The transform substrate: four 8x8 DCT implementations (the paper's
+//! algorithm menagerie), JPEG quantization, block management and the
+//! serial CPU compression pipeline.
+//!
+//! These are the paper's "CPU (serial code)" lane: scalar Rust, one thread,
+//! no SIMD intrinsics — the honest baseline the GPU lane is compared
+//! against, exactly as the paper compares serial C against CUDA kernels.
+//!
+//! * [`naive`]   — textbook O(N^4)-per-block direct 2-D DCT (paper eq. 6)
+//! * [`matrix`]  — separable matrix DCT (two 8x8 matmuls per block)
+//! * [`loeffler`] — Loeffler flow graph, exact rotations (11 mult/1-D)
+//! * [`cordic_loeffler`] — the paper's subject: Loeffler with fixed-point
+//!   CORDIC shift-add rotators (paper Fig. 1)
+//!
+//! All implementations produce *orthonormally scaled* coefficients so they
+//! are interchangeable in front of [`quant`] and bit-compatible with the
+//! Pallas kernels in `python/compile/kernels/` (same arithmetic, checked
+//! by the cross-lane integration tests).
+
+pub mod blocks;
+pub mod cordic;
+pub mod cordic_loeffler;
+pub mod loeffler;
+pub mod matrix;
+pub mod naive;
+pub mod pipeline;
+pub mod quant;
+
+/// An 8x8 blockwise 2-D transform. Blocks are row-major `[f32; 64]`.
+pub trait Transform8x8: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// In-place forward 2-D DCT (orthonormal scaling).
+    fn forward(&self, block: &mut [f32; 64]);
+
+    /// In-place inverse 2-D DCT.
+    fn inverse(&self, block: &mut [f32; 64]);
+
+    /// (multiplies, additions) per 8x8 block for the ablation table.
+    fn ops_per_block(&self) -> (usize, usize);
+}
+
+/// Transform variant selector shared with the CLI / manifest naming.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// Exact separable matrix DCT.
+    Dct,
+    /// Loeffler flow graph with exact rotators.
+    Loeffler,
+    /// Cordic-based Loeffler (the paper's proposed algorithm).
+    Cordic,
+    /// Textbook direct 2-D DCT (only used as a baseline/ablation).
+    Naive,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s.to_ascii_lowercase().as_str() {
+            "dct" | "matrix" | "exact" => Some(Variant::Dct),
+            "loeffler" => Some(Variant::Loeffler),
+            "cordic" | "cordic-loeffler" | "cordic_loeffler" => {
+                Some(Variant::Cordic)
+            }
+            "naive" | "direct" => Some(Variant::Naive),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::Dct => "dct",
+            Variant::Loeffler => "loeffler",
+            Variant::Cordic => "cordic",
+            Variant::Naive => "naive",
+        }
+    }
+
+    /// Instantiate the transform with default parameters.
+    pub fn transform(&self) -> Box<dyn Transform8x8> {
+        match self {
+            Variant::Dct => Box::new(matrix::MatrixDct::new()),
+            Variant::Loeffler => Box::new(loeffler::LoefflerDct::new()),
+            Variant::Cordic => {
+                Box::new(cordic_loeffler::CordicLoefflerDct::default())
+            }
+            Variant::Naive => Box::new(naive::NaiveDct::new()),
+        }
+    }
+}
+
+/// The orthonormal 8-point DCT-II matrix, row-major: `y = D x`.
+pub fn dct_matrix() -> [[f32; 8]; 8] {
+    let mut d = [[0.0f32; 8]; 8];
+    for (k, row) in d.iter_mut().enumerate() {
+        let ck = if k == 0 {
+            (0.5f64).sqrt()
+        } else {
+            1.0
+        };
+        for (n, v) in row.iter_mut().enumerate() {
+            *v = (0.5
+                * ck
+                * ((2 * n + 1) as f64 * k as f64 * std::f64::consts::PI
+                    / 16.0)
+                    .cos()) as f32;
+        }
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dct_matrix_orthonormal() {
+        let d = dct_matrix();
+        for i in 0..8 {
+            for j in 0..8 {
+                let dot: f32 =
+                    (0..8).map(|k| d[i][k] * d[j][k]).sum();
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-6, "({i},{j}) dot {dot}");
+            }
+        }
+    }
+
+    #[test]
+    fn variant_parse() {
+        assert_eq!(Variant::parse("DCT"), Some(Variant::Dct));
+        assert_eq!(Variant::parse("cordic-loeffler"), Some(Variant::Cordic));
+        assert_eq!(Variant::parse("x"), None);
+        assert_eq!(Variant::Cordic.as_str(), "cordic");
+    }
+
+    #[test]
+    fn all_variants_instantiate() {
+        for v in [Variant::Dct, Variant::Loeffler, Variant::Cordic,
+                  Variant::Naive] {
+            let t = v.transform();
+            assert!(!t.name().is_empty());
+        }
+    }
+}

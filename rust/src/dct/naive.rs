@@ -1,0 +1,180 @@
+//! Textbook direct 2-D DCT — a scalar transliteration of the paper's
+//! equation (6): every output coefficient is a full double sum over the
+//! 8x8 block. 4096 multiplies per pass; the slowest possible correct
+//! implementation and therefore the reference point of the ablation table
+//! (and the most literal reading of "CPU serial code").
+
+use super::Transform8x8;
+
+pub struct NaiveDct {
+    /// cos[(2n+1) k pi / 16] table, [k][n].
+    cos: [[f32; 8]; 8],
+    /// alpha(k) normalization.
+    alpha: [f32; 8],
+}
+
+impl NaiveDct {
+    pub fn new() -> Self {
+        let mut cos = [[0.0f32; 8]; 8];
+        let mut alpha = [0.0f32; 8];
+        for k in 0..8 {
+            alpha[k] = if k == 0 {
+                (1.0f64 / 2.0f64.sqrt()) as f32
+            } else {
+                1.0
+            };
+            for n in 0..8 {
+                cos[k][n] = (((2 * n + 1) as f64
+                    * k as f64
+                    * std::f64::consts::PI
+                    / 16.0)
+                    .cos()) as f32;
+            }
+        }
+        NaiveDct { cos, alpha }
+    }
+}
+
+impl Default for NaiveDct {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transform8x8 for NaiveDct {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    /// F(u,v) = 1/4 a(u) a(v) sum_i sum_j f(i,j) cos.. cos..  (paper eq. 6,
+    /// orthonormal form for N=M=8).
+    fn forward(&self, block: &mut [f32; 64]) {
+        let mut out = [0.0f32; 64];
+        for u in 0..8 {
+            for v in 0..8 {
+                let mut acc = 0.0f32;
+                for i in 0..8 {
+                    for j in 0..8 {
+                        acc += block[i * 8 + j]
+                            * self.cos[u][i]
+                            * self.cos[v][j];
+                    }
+                }
+                out[u * 8 + v] =
+                    0.25 * self.alpha[u] * self.alpha[v] * acc;
+            }
+        }
+        *block = out;
+    }
+
+    fn inverse(&self, block: &mut [f32; 64]) {
+        let mut out = [0.0f32; 64];
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut acc = 0.0f32;
+                for u in 0..8 {
+                    for v in 0..8 {
+                        acc += self.alpha[u]
+                            * self.alpha[v]
+                            * block[u * 8 + v]
+                            * self.cos[u][i]
+                            * self.cos[v][j];
+                    }
+                }
+                out[i * 8 + j] = 0.25 * acc;
+            }
+        }
+        *block = out;
+    }
+
+    fn ops_per_block(&self) -> (usize, usize) {
+        // 64 outputs x (64 mults for the double sum x2 cos + 3 scale)
+        (64 * (64 * 2 + 3), 64 * 63)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dct::dct_matrix;
+    use crate::util::prng::Rng;
+
+    fn rand_block(seed: u64) -> [f32; 64] {
+        let mut rng = Rng::new(seed);
+        let mut b = [0.0f32; 64];
+        for v in &mut b {
+            *v = rng.range_f64(-128.0, 128.0) as f32;
+        }
+        b
+    }
+
+    /// Matrix-product reference: D B D^T.
+    fn matrix_ref(block: &[f32; 64]) -> [f32; 64] {
+        let d = dct_matrix();
+        let mut tmp = [0.0f64; 64];
+        for k in 0..8 {
+            for j in 0..8 {
+                tmp[k * 8 + j] = (0..8)
+                    .map(|n| d[k][n] as f64 * block[n * 8 + j] as f64)
+                    .sum();
+            }
+        }
+        let mut out = [0.0f32; 64];
+        for k in 0..8 {
+            for l in 0..8 {
+                out[k * 8 + l] = (0..8)
+                    .map(|j| tmp[k * 8 + j] * d[l][j] as f64)
+                    .sum::<f64>() as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn forward_matches_matrix_form() {
+        let t = NaiveDct::new();
+        for seed in 0..4 {
+            let mut b = rand_block(seed);
+            let want = matrix_ref(&b);
+            t.forward(&mut b);
+            for i in 0..64 {
+                assert!((b[i] - want[i]).abs() < 1e-3,
+                        "coef {i}: {} vs {}", b[i], want[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let t = NaiveDct::new();
+        let orig = rand_block(9);
+        let mut b = orig;
+        t.forward(&mut b);
+        t.inverse(&mut b);
+        for i in 0..64 {
+            assert!((b[i] - orig[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn dc_of_constant_block() {
+        let t = NaiveDct::new();
+        let mut b = [10.0f32; 64];
+        t.forward(&mut b);
+        assert!((b[0] - 80.0).abs() < 1e-3); // 8 * 10 (orthonormal 2-D)
+        for v in &b[1..] {
+            assert!(v.abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn energy_preserved() {
+        let t = NaiveDct::new();
+        let orig = rand_block(5);
+        let mut b = orig;
+        t.forward(&mut b);
+        let e_in: f32 = orig.iter().map(|v| v * v).sum();
+        let e_out: f32 = b.iter().map(|v| v * v).sum();
+        assert!((e_in - e_out).abs() / e_in < 1e-4);
+    }
+}

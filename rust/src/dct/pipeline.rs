@@ -1,0 +1,228 @@
+//! The serial CPU compression pipeline — the paper's "CPU (serial code)"
+//! lane: level shift -> blockwise forward transform -> quantize ->
+//! dequantize -> standard IDCT -> unshift/clamp, one block at a time, one
+//! thread.
+//!
+//! The decoder side is always the exact matrix IDCT (a standards-compliant
+//! decoder), matching the Pallas fused kernel, so approximate encoders
+//! (Cordic-Loeffler) show their true reconstruction loss.
+
+use crate::image::GrayImage;
+
+use super::blocks::{
+    self, extract_block, grid_dims, pad_to_blocks, store_block,
+    store_coef_planar,
+};
+use super::matrix::MatrixDct;
+use super::quant::{dequantize_block, effective_qtable, quantize_block};
+use super::{Transform8x8, Variant};
+
+/// Output of a CPU-lane compression run.
+pub struct CpuCompressOutput {
+    /// Reconstructed image at the original (uncropped) size.
+    pub recon: GrayImage,
+    /// Quantized coefficients in planar image layout (padded size), f32 —
+    /// the same interchange layout the PJRT artifacts emit.
+    pub qcoef: Vec<f32>,
+    /// Padded dimensions the coefficients use.
+    pub padded_width: usize,
+    pub padded_height: usize,
+}
+
+/// Serial compression pipeline with a pluggable forward transform.
+pub struct CpuPipeline {
+    transform: Box<dyn Transform8x8>,
+    decoder: MatrixDct,
+    qtable: [f32; 64],
+    pub variant: Variant,
+    pub quality: u8,
+}
+
+impl CpuPipeline {
+    pub fn new(variant: Variant, quality: u8) -> Self {
+        CpuPipeline {
+            transform: variant.transform(),
+            decoder: MatrixDct::new(),
+            qtable: effective_qtable(quality),
+            variant,
+            quality,
+        }
+    }
+
+    pub fn transform_name(&self) -> &'static str {
+        self.transform.name()
+    }
+
+    /// Run the full pipeline over an image (padding internally if needed).
+    pub fn compress(&self, img: &GrayImage) -> CpuCompressOutput {
+        let padded = pad_to_blocks(img);
+        let (gw, gh) = grid_dims(padded.width, padded.height);
+        let mut recon = GrayImage::new(padded.width, padded.height);
+        let mut qcoef = vec![0.0f32; padded.pixels()];
+        let mut block = [0.0f32; 64];
+        let mut qc = [0i16; 64];
+        for by in 0..gh {
+            for bx in 0..gw {
+                extract_block(&padded, bx, by, &mut block);
+                self.transform.forward(&mut block);
+                quantize_block(&block, &self.qtable, &mut qc);
+                store_coef_planar(
+                    &mut qcoef,
+                    padded.width,
+                    bx,
+                    by,
+                    &qc,
+                );
+                dequantize_block(&qc, &self.qtable, &mut block);
+                self.decoder.inverse(&mut block);
+                store_block(&mut recon, bx, by, &block);
+            }
+        }
+        let recon = if (padded.width, padded.height)
+            != (img.width, img.height)
+        {
+            recon.crop(img.width, img.height).expect("crop to original")
+        } else {
+            recon
+        };
+        CpuCompressOutput {
+            recon,
+            qcoef,
+            padded_width: padded.width,
+            padded_height: padded.height,
+        }
+    }
+
+    /// Forward transform + quantization only (what the entropy encoder
+    /// needs); returns planar coefficients at padded size.
+    pub fn analyze(&self, img: &GrayImage) -> (Vec<f32>, usize, usize) {
+        let padded = pad_to_blocks(img);
+        let (gw, gh) = grid_dims(padded.width, padded.height);
+        let mut qcoef = vec![0.0f32; padded.pixels()];
+        let mut block = [0.0f32; 64];
+        let mut qc = [0i16; 64];
+        for by in 0..gh {
+            for bx in 0..gw {
+                extract_block(&padded, bx, by, &mut block);
+                self.transform.forward(&mut block);
+                quantize_block(&block, &self.qtable, &mut qc);
+                store_coef_planar(&mut qcoef, padded.width, bx, by, &qc);
+            }
+        }
+        (qcoef, padded.width, padded.height)
+    }
+
+    /// Decode planar quantized coefficients back to an image (the decoder
+    /// half: dequantize + standard IDCT).
+    pub fn decode_coefficients(
+        &self,
+        qcoef: &[f32],
+        padded_width: usize,
+        padded_height: usize,
+        out_width: usize,
+        out_height: usize,
+    ) -> GrayImage {
+        let (gw, gh) = grid_dims(padded_width, padded_height);
+        let mut recon = GrayImage::new(padded_width, padded_height);
+        let mut qc = [0i16; 64];
+        let mut block = [0.0f32; 64];
+        for by in 0..gh {
+            for bx in 0..gw {
+                blocks::load_coef_planar(
+                    qcoef,
+                    padded_width,
+                    bx,
+                    by,
+                    &mut qc,
+                );
+                dequantize_block(&qc, &self.qtable, &mut block);
+                self.decoder.inverse(&mut block);
+                store_block(&mut recon, bx, by, &block);
+            }
+        }
+        if (padded_width, padded_height) != (out_width, out_height) {
+            recon.crop(out_width, out_height).expect("crop")
+        } else {
+            recon
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synthetic;
+    use crate::metrics::psnr;
+
+    #[test]
+    fn dct_pipeline_reasonable_psnr() {
+        let img = synthetic::lena_like(64, 64, 1);
+        let out = CpuPipeline::new(Variant::Dct, 50).compress(&img);
+        let p = psnr(&img, &out.recon);
+        assert!(p > 30.0, "PSNR {p}");
+        assert_eq!(out.recon.width, 64);
+    }
+
+    #[test]
+    fn cordic_below_dct_psnr() {
+        let img = synthetic::lena_like(96, 96, 2);
+        let p_dct = psnr(
+            &img,
+            &CpuPipeline::new(Variant::Dct, 50).compress(&img).recon,
+        );
+        let p_cor = psnr(
+            &img,
+            &CpuPipeline::new(Variant::Cordic, 50).compress(&img).recon,
+        );
+        assert!(p_cor < p_dct, "cordic {p_cor} vs dct {p_dct}");
+        let gap = p_dct - p_cor;
+        assert!((0.3..8.0).contains(&gap), "gap {gap}");
+    }
+
+    #[test]
+    fn quality_monotone() {
+        let img = synthetic::cablecar_like(64, 64, 3);
+        let p10 = psnr(
+            &img,
+            &CpuPipeline::new(Variant::Dct, 10).compress(&img).recon,
+        );
+        let p50 = psnr(
+            &img,
+            &CpuPipeline::new(Variant::Dct, 50).compress(&img).recon,
+        );
+        let p90 = psnr(
+            &img,
+            &CpuPipeline::new(Variant::Dct, 90).compress(&img).recon,
+        );
+        assert!(p10 < p50 && p50 < p90, "{p10} {p50} {p90}");
+    }
+
+    #[test]
+    fn unaligned_image_pads_and_crops() {
+        let img = synthetic::lena_like(30, 21, 4);
+        let out = CpuPipeline::new(Variant::Dct, 50).compress(&img);
+        assert_eq!((out.recon.width, out.recon.height), (30, 21));
+        assert_eq!((out.padded_width, out.padded_height), (32, 24));
+        assert!(psnr(&img, &out.recon) > 28.0);
+    }
+
+    #[test]
+    fn analyze_then_decode_matches_compress() {
+        let img = synthetic::lena_like(40, 32, 5);
+        let pipe = CpuPipeline::new(Variant::Dct, 50);
+        let full = pipe.compress(&img);
+        let (qcoef, pw, ph) = pipe.analyze(&img);
+        assert_eq!(qcoef, full.qcoef);
+        let recon = pipe.decode_coefficients(&qcoef, pw, ph, 40, 32);
+        assert_eq!(recon, full.recon);
+    }
+
+    #[test]
+    fn loeffler_matches_dct_variant_closely() {
+        let img = synthetic::lena_like(48, 48, 6);
+        let a = CpuPipeline::new(Variant::Dct, 50).compress(&img);
+        let b = CpuPipeline::new(Variant::Loeffler, 50).compress(&img);
+        let p = psnr(&a.recon, &b.recon);
+        assert!(p > 45.0, "exact-rotator loeffler differs: {p}");
+    }
+}

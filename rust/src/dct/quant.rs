@@ -1,0 +1,137 @@
+//! JPEG quantization: the ITU-T T.81 Annex K luma table, IJG quality
+//! scaling, and block quantize/dequantize.
+//!
+//! Tables and scaling mirror `python/compile/kernels/ref.py` exactly
+//! (including the /4 orthonormal-DCT gain fold and round-half-even), so
+//! the CPU lane and the AOT artifacts quantize identically.
+
+/// ITU-T T.81 Annex K luminance table (quality 50).
+pub const JPEG_LUMA_Q50: [u16; 64] = [
+    16, 11, 10, 16, 24, 40, 51, 61, //
+    12, 12, 14, 19, 26, 58, 60, 55, //
+    14, 13, 16, 24, 40, 57, 69, 56, //
+    14, 17, 22, 29, 51, 87, 80, 62, //
+    18, 22, 37, 56, 68, 109, 103, 77, //
+    24, 35, 55, 64, 81, 104, 113, 92, //
+    49, 64, 78, 87, 103, 121, 120, 101, //
+    72, 92, 95, 98, 112, 100, 103, 99,
+];
+
+/// JPEG's conventional FDCT emits coefficients 4x the orthonormal ones
+/// (for N=8); the standard tables assume that scaling, so we fold 1/4 in.
+pub const JPEG_DCT_GAIN: f32 = 4.0;
+
+/// IJG quality -> percent scale.
+pub fn quality_scale(quality: u8) -> f32 {
+    let q = quality.clamp(1, 100) as f32;
+    if q < 50.0 {
+        5000.0 / q
+    } else {
+        200.0 - 2.0 * q
+    }
+}
+
+/// Standard-scaled JPEG luma table at `quality` (values 1..=255).
+pub fn quant_table(quality: u8) -> [f32; 64] {
+    let scale = quality_scale(quality);
+    std::array::from_fn(|i| {
+        let v = ((JPEG_LUMA_Q50[i] as f32 * scale + 50.0) / 100.0).floor();
+        v.clamp(1.0, 255.0)
+    })
+}
+
+/// The table the orthonormal pipeline actually divides by.
+pub fn effective_qtable(quality: u8) -> [f32; 64] {
+    let q = quant_table(quality);
+    std::array::from_fn(|i| q[i] / JPEG_DCT_GAIN)
+}
+
+/// Quantize a coefficient block: `round_half_even(coef / q)` (matches
+/// `jnp.round`). Output fits i16 comfortably for 8-bit imagery.
+pub fn quantize_block(coef: &[f32; 64], q: &[f32; 64], out: &mut [i16; 64]) {
+    for i in 0..64 {
+        out[i] = (coef[i] / q[i]).round_ties_even() as i16;
+    }
+}
+
+/// Dequantize back to coefficient space.
+pub fn dequantize_block(qc: &[i16; 64], q: &[f32; 64], out: &mut [f32; 64]) {
+    for i in 0..64 {
+        out[i] = qc[i] as f32 * q[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q50_is_identity_scale() {
+        assert_eq!(quality_scale(50), 100.0);
+        let t = quant_table(50);
+        for i in 0..64 {
+            assert_eq!(t[i], JPEG_LUMA_Q50[i] as f32);
+        }
+    }
+
+    #[test]
+    fn quality_extremes() {
+        let q1 = quant_table(1);
+        assert!(q1.iter().all(|&v| v == 255.0));
+        let q100 = quant_table(100);
+        assert!(q100.iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn lower_quality_coarser() {
+        let q10 = quant_table(10);
+        let q90 = quant_table(90);
+        for i in 0..64 {
+            assert!(q10[i] >= q90[i]);
+        }
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let q = effective_qtable(50);
+        let mut coef = [0.0f32; 64];
+        let mut rng = crate::util::prng::Rng::new(8);
+        for v in &mut coef {
+            *v = rng.range_f64(-300.0, 300.0) as f32;
+        }
+        let mut qc = [0i16; 64];
+        let mut deq = [0.0f32; 64];
+        quantize_block(&coef, &q, &mut qc);
+        dequantize_block(&qc, &q, &mut deq);
+        for i in 0..64 {
+            assert!(
+                (deq[i] - coef[i]).abs() <= q[i] / 2.0 + 1e-3,
+                "{i}: |{} - {}| > {}",
+                deq[i],
+                coef[i],
+                q[i] / 2.0
+            );
+        }
+    }
+
+    #[test]
+    fn round_half_even_semantics() {
+        let q = [1.0f32; 64];
+        let mut coef = [0.0f32; 64];
+        coef[0] = 0.5;
+        coef[1] = 1.5;
+        coef[2] = -0.5;
+        coef[3] = 2.5;
+        let mut qc = [0i16; 64];
+        quantize_block(&coef, &q, &mut qc);
+        assert_eq!(&qc[0..4], &[0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn matches_python_effective_table_q50() {
+        // python: effective_qtable(50)[0][0] = 16/4 = 4.0
+        let e = effective_qtable(50);
+        assert_eq!(e[0], 4.0);
+        assert_eq!(e[63], 99.0 / 4.0);
+    }
+}

@@ -1,0 +1,178 @@
+//! BMP codec: 8-bit grayscale palette BMPs (what the paper-era Windows
+//! tooling produced) plus 24-bit decode with luma conversion.
+
+use anyhow::{bail, Result};
+
+use super::GrayImage;
+
+fn u16le(b: &[u8], off: usize) -> u32 {
+    u16::from_le_bytes([b[off], b[off + 1]]) as u32
+}
+
+fn u32le(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+fn i32le(b: &[u8], off: usize) -> i32 {
+    i32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// Encode as 8-bit palettized grayscale BMP (bottom-up, 4-byte row pad).
+pub fn encode(img: &GrayImage) -> Vec<u8> {
+    let row = img.width.div_ceil(4) * 4;
+    let palette_len = 256 * 4;
+    let data_off = 14 + 40 + palette_len;
+    let file_len = data_off + row * img.height;
+    let mut out = Vec::with_capacity(file_len);
+    // BITMAPFILEHEADER
+    out.extend_from_slice(b"BM");
+    out.extend_from_slice(&(file_len as u32).to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes());
+    out.extend_from_slice(&(data_off as u32).to_le_bytes());
+    // BITMAPINFOHEADER
+    out.extend_from_slice(&40u32.to_le_bytes());
+    out.extend_from_slice(&(img.width as i32).to_le_bytes());
+    out.extend_from_slice(&(img.height as i32).to_le_bytes());
+    out.extend_from_slice(&1u16.to_le_bytes());
+    out.extend_from_slice(&8u16.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes()); // BI_RGB
+    out.extend_from_slice(&((row * img.height) as u32).to_le_bytes());
+    out.extend_from_slice(&2835u32.to_le_bytes()); // 72 dpi
+    out.extend_from_slice(&2835u32.to_le_bytes());
+    out.extend_from_slice(&256u32.to_le_bytes());
+    out.extend_from_slice(&256u32.to_le_bytes());
+    // grayscale palette
+    for v in 0..=255u8 {
+        out.extend_from_slice(&[v, v, v, 0]);
+    }
+    // pixel rows, bottom-up
+    for y in (0..img.height).rev() {
+        let start = y * img.width;
+        out.extend_from_slice(&img.data[start..start + img.width]);
+        out.resize(out.len() + (row - img.width), 0);
+    }
+    out
+}
+
+/// Decode 8-bit palettized or 24-bit uncompressed BMP to grayscale.
+pub fn decode(bytes: &[u8]) -> Result<GrayImage> {
+    if bytes.len() < 54 || &bytes[0..2] != b"BM" {
+        bail!("not a BMP file");
+    }
+    let data_off = u32le(bytes, 10) as usize;
+    let header_size = u32le(bytes, 14) as usize;
+    if header_size < 40 {
+        bail!("unsupported BMP header size {header_size}");
+    }
+    let width = i32le(bytes, 18);
+    let height_raw = i32le(bytes, 22);
+    let bpp = u16le(bytes, 28);
+    let compression = u32le(bytes, 30);
+    if compression != 0 {
+        bail!("compressed BMP (type {compression}) unsupported");
+    }
+    if width <= 0 || height_raw == 0 {
+        bail!("bad BMP dimensions {width}x{height_raw}");
+    }
+    let width = width as usize;
+    let top_down = height_raw < 0;
+    let height = height_raw.unsigned_abs() as usize;
+
+    let mut img = GrayImage::new(width, height);
+    match bpp {
+        8 => {
+            // palette: 4 bytes per entry, right after the info header
+            let palette_off = 14 + header_size;
+            let ncolors = {
+                let n = u32le(bytes, 46) as usize;
+                if n == 0 { 256 } else { n }
+            };
+            if palette_off + ncolors * 4 > data_off {
+                bail!("BMP palette overruns pixel data");
+            }
+            let mut luma = [0u8; 256];
+            for (i, l) in luma.iter_mut().enumerate().take(ncolors) {
+                let e = palette_off + i * 4;
+                let (b, g, r) = (
+                    bytes[e] as f32,
+                    bytes[e + 1] as f32,
+                    bytes[e + 2] as f32,
+                );
+                *l = (0.299 * r + 0.587 * g + 0.114 * b).round() as u8;
+            }
+            let row = width.div_ceil(4) * 4;
+            if data_off + row * height > bytes.len() {
+                bail!("BMP pixel data truncated");
+            }
+            for dy in 0..height {
+                let sy = if top_down { dy } else { height - 1 - dy };
+                let src = data_off + sy * row;
+                for x in 0..width {
+                    img.data[dy * width + x] = luma[bytes[src + x] as usize];
+                }
+            }
+        }
+        24 => {
+            let row = (width * 3).div_ceil(4) * 4;
+            if data_off + row * height > bytes.len() {
+                bail!("BMP pixel data truncated");
+            }
+            for dy in 0..height {
+                let sy = if top_down { dy } else { height - 1 - dy };
+                let src = data_off + sy * row;
+                for x in 0..width {
+                    let e = src + x * 3;
+                    let (b, g, r) = (
+                        bytes[e] as f32,
+                        bytes[e + 1] as f32,
+                        bytes[e + 2] as f32,
+                    );
+                    img.data[dy * width + x] =
+                        (0.299 * r + 0.587 * g + 0.114 * b).round() as u8;
+                }
+            }
+        }
+        _ => bail!("unsupported BMP bit depth {bpp}"),
+    }
+    Ok(img)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_8bit() {
+        let mut rng = Rng::new(2);
+        // width 30 exercises row padding (30 % 4 != 0)
+        let data: Vec<u8> = (0..30 * 11).map(|_| rng.next_u32() as u8).collect();
+        let img = GrayImage::from_vec(30, 11, data).unwrap();
+        let back = decode(&encode(&img)).unwrap();
+        assert_eq!(img, back);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode(b"not a bmp at all").is_err());
+        assert!(decode(&[]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_pixels() {
+        let img = GrayImage::new(16, 16);
+        let mut bytes = encode(&img);
+        bytes.truncate(bytes.len() - 10);
+        assert!(decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn header_fields() {
+        let img = GrayImage::new(5, 3);
+        let b = encode(&img);
+        assert_eq!(&b[0..2], b"BM");
+        assert_eq!(u16le(&b, 28), 8); // bpp
+        assert_eq!(i32le(&b, 18), 5);
+        assert_eq!(i32le(&b, 22), 3);
+    }
+}

@@ -1,0 +1,114 @@
+//! Serial histogram equalization — the CPU lane of the paper's Tables 1-2
+//! caption workload ("time comparisons of grayscale histogram/equalization
+//! ... CPU and GPU"). The GPU lane is the `histeq_*` PJRT artifact.
+//!
+//! The arithmetic mirrors `python/compile/kernels/histeq.py` exactly
+//! (same LUT normalization) so both lanes produce identical pixels.
+
+use super::GrayImage;
+
+/// 256-bin histogram.
+pub fn histogram(img: &GrayImage) -> [u64; 256] {
+    let mut hist = [0u64; 256];
+    for &v in &img.data {
+        hist[v as usize] += 1;
+    }
+    hist
+}
+
+/// Equalization LUT from a histogram (classic scaled-CDF formulation with
+/// the first occupied bin mapping to 0).
+pub fn equalization_lut(hist: &[u64; 256], npix: u64) -> [u8; 256] {
+    let mut cdf = [0u64; 256];
+    let mut acc = 0u64;
+    for (i, &h) in hist.iter().enumerate() {
+        acc += h;
+        cdf[i] = acc;
+    }
+    let cdf_min = hist
+        .iter()
+        .position(|&h| h > 0)
+        .map(|i| cdf[i])
+        .unwrap_or(0);
+    let denom = (npix.saturating_sub(cdf_min)).max(1) as f64;
+    let mut lut = [0u8; 256];
+    for i in 0..256 {
+        let v = ((cdf[i].saturating_sub(cdf_min)) as f64 / denom * 255.0)
+            .round()
+            .clamp(0.0, 255.0);
+        lut[i] = v as u8;
+    }
+    lut
+}
+
+/// Full serial histogram equalization.
+pub fn histeq(img: &GrayImage) -> GrayImage {
+    let hist = histogram(img);
+    let lut = equalization_lut(&hist, img.pixels() as u64);
+    GrayImage {
+        width: img.width,
+        height: img.height,
+        data: img.data.iter().map(|&v| lut[v as usize]).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synthetic;
+
+    #[test]
+    fn histogram_totals() {
+        let img = synthetic::lena_like(40, 40, 1);
+        let h = histogram(&img);
+        assert_eq!(h.iter().sum::<u64>(), 1600);
+    }
+
+    #[test]
+    fn constant_image_maps_to_zero() {
+        // single occupied bin: cdf - cdf_min == 0 everywhere occupied
+        let img = GrayImage::from_vec(4, 4, vec![99; 16]).unwrap();
+        let out = histeq(&img);
+        assert!(out.data.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn stretches_low_contrast() {
+        let mut img = GrayImage::new(64, 64);
+        let mut rng = crate::util::prng::Rng::new(4);
+        for v in &mut img.data {
+            *v = rng.range_i64(100, 140) as u8;
+        }
+        let out = histeq(&img);
+        let span_in = *img.data.iter().max().unwrap() as i32
+            - *img.data.iter().min().unwrap() as i32;
+        let span_out = *out.data.iter().max().unwrap() as i32
+            - *out.data.iter().min().unwrap() as i32;
+        assert!(span_out > span_in * 3, "{span_in} -> {span_out}");
+    }
+
+    #[test]
+    fn mapping_is_monotone() {
+        let img = synthetic::cablecar_like(64, 64, 2);
+        let hist = histogram(&img);
+        let lut = equalization_lut(&hist, img.pixels() as u64);
+        for i in 1..256 {
+            assert!(lut[i] >= lut[i - 1]);
+        }
+    }
+
+    #[test]
+    fn full_ramp_near_identity() {
+        let mut img = GrayImage::new(256, 8);
+        for y in 0..8 {
+            for x in 0..256 {
+                img.set(x, y, x as u8);
+            }
+        }
+        let out = histeq(&img);
+        for x in 0..256 {
+            let d = (out.get(x, 0) as i32 - x as i32).abs();
+            assert!(d <= 2, "x {x} diff {d}");
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Grayscale image type and I/O.
+//!
+//! The whole pipeline works on 8-bit grayscale (the paper's experiments are
+//! all on grayscale Lena / Cable-car), carried as `GrayImage`: row-major
+//! `u8` with `f32` conversion helpers for the transform layers.
+
+pub mod bmp;
+pub mod histeq;
+pub mod pgm;
+pub mod png;
+pub mod resize;
+pub mod synthetic;
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// 8-bit grayscale image, row-major.
+#[derive(Clone, PartialEq, Eq)]
+pub struct GrayImage {
+    pub width: usize,
+    pub height: usize,
+    pub data: Vec<u8>,
+}
+
+impl std::fmt::Debug for GrayImage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "GrayImage({}x{})", self.width, self.height)
+    }
+}
+
+impl GrayImage {
+    pub fn new(width: usize, height: usize) -> Self {
+        GrayImage {
+            width,
+            height,
+            data: vec![0; width * height],
+        }
+    }
+
+    pub fn from_vec(width: usize, height: usize, data: Vec<u8>) -> Result<Self> {
+        if data.len() != width * height {
+            bail!(
+                "pixel count {} != {}x{}",
+                data.len(),
+                width,
+                height
+            );
+        }
+        Ok(GrayImage {
+            width,
+            height,
+            data,
+        })
+    }
+
+    /// Build from f32 samples (clamped to 0..255, rounded).
+    pub fn from_f32(width: usize, height: usize, data: &[f32]) -> Result<Self> {
+        if data.len() != width * height {
+            bail!("pixel count {} != {}x{}", data.len(), width, height);
+        }
+        Ok(GrayImage {
+            width,
+            height,
+            data: data
+                .iter()
+                .map(|&v| v.clamp(0.0, 255.0).round() as u8)
+                .collect(),
+        })
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> u8 {
+        self.data[y * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: u8) {
+        self.data[y * self.width + x] = v;
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.width * self.height
+    }
+
+    /// Row-major f32 copy (0..255 values).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&v| v as f32).collect()
+    }
+
+    /// Crop to `(w, h)` anchored at the top-left.
+    pub fn crop(&self, w: usize, h: usize) -> Result<GrayImage> {
+        if w > self.width || h > self.height {
+            bail!(
+                "crop {}x{} exceeds image {}x{}",
+                w, h, self.width, self.height
+            );
+        }
+        let mut out = GrayImage::new(w, h);
+        for y in 0..h {
+            let src = &self.data[y * self.width..y * self.width + w];
+            out.data[y * w..(y + 1) * w].copy_from_slice(src);
+        }
+        Ok(out)
+    }
+
+    /// Pad to `(w, h)` >= current size with edge replication (the block
+    /// manager uses this to reach 8-multiples without ringing artifacts).
+    pub fn pad_edge(&self, w: usize, h: usize) -> Result<GrayImage> {
+        if w < self.width || h < self.height {
+            bail!(
+                "pad target {}x{} smaller than image {}x{}",
+                w, h, self.width, self.height
+            );
+        }
+        let mut out = GrayImage::new(w, h);
+        for y in 0..h {
+            let sy = y.min(self.height - 1);
+            for x in 0..w {
+                let sx = x.min(self.width - 1);
+                out.data[y * w + x] = self.get(sx, sy);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Load by extension: .pgm/.ppm, .bmp, .png.
+    pub fn load(path: impl AsRef<Path>) -> Result<GrayImage> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        match ext(path).as_deref() {
+            Some("pgm") | Some("ppm") => pgm::decode(&bytes),
+            Some("bmp") => bmp::decode(&bytes),
+            Some("png") => png::decode(&bytes),
+            _ => bail!("unsupported image extension: {}", path.display()),
+        }
+    }
+
+    /// Save by extension: .pgm, .bmp, .png.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let bytes = match ext(path).as_deref() {
+            Some("pgm") => pgm::encode(self),
+            Some("bmp") => bmp::encode(self),
+            Some("png") => png::encode(self)?,
+            _ => bail!("unsupported image extension: {}", path.display()),
+        };
+        std::fs::write(path, bytes)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Mean pixel value.
+    pub fn mean(&self) -> f64 {
+        self.data.iter().map(|&v| v as f64).sum::<f64>()
+            / self.pixels() as f64
+    }
+
+    /// Pixel standard deviation (contrast proxy).
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let var = self
+            .data
+            .iter()
+            .map(|&v| {
+                let d = v as f64 - m;
+                d * d
+            })
+            .sum::<f64>()
+            / self.pixels() as f64;
+        var.sqrt()
+    }
+}
+
+fn ext(path: &Path) -> Option<String> {
+    path.extension()
+        .and_then(|e| e.to_str())
+        .map(|e| e.to_ascii_lowercase())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(GrayImage::from_vec(4, 4, vec![0; 15]).is_err());
+        assert!(GrayImage::from_vec(4, 4, vec![0; 16]).is_ok());
+    }
+
+    #[test]
+    fn from_f32_clamps_and_rounds() {
+        let img =
+            GrayImage::from_f32(2, 1, &[-5.0, 300.2]).unwrap();
+        assert_eq!(img.data, vec![0, 255]);
+        let img = GrayImage::from_f32(2, 1, &[1.4, 1.6]).unwrap();
+        assert_eq!(img.data, vec![1, 2]);
+    }
+
+    #[test]
+    fn crop_keeps_topleft() {
+        let mut img = GrayImage::new(4, 4);
+        for y in 0..4 {
+            for x in 0..4 {
+                img.set(x, y, (y * 4 + x) as u8);
+            }
+        }
+        let c = img.crop(2, 3).unwrap();
+        assert_eq!(c.width, 2);
+        assert_eq!(c.height, 3);
+        assert_eq!(c.get(1, 2), img.get(1, 2));
+        assert!(img.crop(5, 1).is_err());
+    }
+
+    #[test]
+    fn pad_edge_replicates() {
+        let img = GrayImage::from_vec(2, 2, vec![1, 2, 3, 4]).unwrap();
+        let p = img.pad_edge(4, 3).unwrap();
+        assert_eq!(p.get(3, 0), 2); // right edge of row 0
+        assert_eq!(p.get(0, 2), 3); // bottom edge of col 0
+        assert_eq!(p.get(3, 2), 4); // corner
+        assert!(img.pad_edge(1, 4).is_err());
+    }
+
+    #[test]
+    fn stats() {
+        let img = GrayImage::from_vec(2, 1, vec![0, 200]).unwrap();
+        assert_eq!(img.mean(), 100.0);
+        assert_eq!(img.stddev(), 100.0);
+    }
+}

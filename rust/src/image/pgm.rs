@@ -1,0 +1,193 @@
+//! PGM (P2/P5) and PPM (P3/P6, luma-converted) codec.
+//!
+//! PGM is the interchange format of the classic image-processing test
+//! suites (Marco Schmidt's database, which the paper used, distributes
+//! PGM), so it is the primary on-disk format here.
+
+use anyhow::{bail, Result};
+
+use super::GrayImage;
+
+/// Encode as binary PGM (P5).
+pub fn encode(img: &GrayImage) -> Vec<u8> {
+    let mut out = format!("P5\n{} {}\n255\n", img.width, img.height)
+        .into_bytes();
+    out.extend_from_slice(&img.data);
+    out
+}
+
+/// Decode P2/P5 PGM or P3/P6 PPM (PPM converted to luma via BT.601).
+pub fn decode(bytes: &[u8]) -> Result<GrayImage> {
+    let mut t = Tokenizer { b: bytes, i: 0 };
+    let magic = t.token()?;
+    match magic.as_str() {
+        "P5" | "P2" => {
+            let (w, h) = (t.number()?, t.number()?);
+            let maxval = t.number()?;
+            if maxval == 0 || maxval > 255 {
+                bail!("unsupported PGM maxval {maxval}");
+            }
+            let scale = 255.0 / maxval as f32;
+            let data: Vec<u8> = if magic == "P5" {
+                t.skip_single_whitespace();
+                let need = w * h;
+                let raw = t.rest();
+                if raw.len() < need {
+                    bail!("PGM truncated: {} < {}", raw.len(), need);
+                }
+                raw[..need]
+                    .iter()
+                    .map(|&v| ((v as f32) * scale).round() as u8)
+                    .collect()
+            } else {
+                (0..w * h)
+                    .map(|_| {
+                        t.number()
+                            .map(|v| ((v as f32) * scale).round() as u8)
+                    })
+                    .collect::<Result<_>>()?
+            };
+            GrayImage::from_vec(w, h, data)
+        }
+        "P6" | "P3" => {
+            let (w, h) = (t.number()?, t.number()?);
+            let maxval = t.number()?;
+            if maxval == 0 || maxval > 255 {
+                bail!("unsupported PPM maxval {maxval}");
+            }
+            let scale = 255.0 / maxval as f32;
+            let mut rgb = Vec::with_capacity(w * h * 3);
+            if magic == "P6" {
+                t.skip_single_whitespace();
+                let need = w * h * 3;
+                let raw = t.rest();
+                if raw.len() < need {
+                    bail!("PPM truncated");
+                }
+                rgb.extend_from_slice(&raw[..need]);
+            } else {
+                for _ in 0..w * h * 3 {
+                    rgb.push(t.number()? as u8);
+                }
+            }
+            let data: Vec<u8> = rgb
+                .chunks_exact(3)
+                .map(|p| {
+                    let (r, g, b) = (
+                        p[0] as f32 * scale,
+                        p[1] as f32 * scale,
+                        p[2] as f32 * scale,
+                    );
+                    (0.299 * r + 0.587 * g + 0.114 * b).round().min(255.0)
+                        as u8
+                })
+                .collect();
+            GrayImage::from_vec(w, h, data)
+        }
+        m => bail!("not a PGM/PPM file (magic {m:?})"),
+    }
+}
+
+struct Tokenizer<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Tokenizer<'a> {
+    /// Next whitespace-delimited token, skipping `#` comments.
+    fn token(&mut self) -> Result<String> {
+        loop {
+            while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace()
+            {
+                self.i += 1;
+            }
+            if self.i < self.b.len() && self.b[self.i] == b'#' {
+                while self.i < self.b.len() && self.b[self.i] != b'\n' {
+                    self.i += 1;
+                }
+                continue;
+            }
+            break;
+        }
+        if self.i >= self.b.len() {
+            bail!("unexpected end of PNM header");
+        }
+        let start = self.i;
+        while self.i < self.b.len()
+            && !self.b[self.i].is_ascii_whitespace()
+        {
+            self.i += 1;
+        }
+        Ok(String::from_utf8_lossy(&self.b[start..self.i]).into_owned())
+    }
+
+    fn number(&mut self) -> Result<usize> {
+        let t = self.token()?;
+        t.parse()
+            .map_err(|e| anyhow::anyhow!("bad PNM number {t:?}: {e}"))
+    }
+
+    /// After maxval exactly one whitespace byte precedes binary data.
+    fn skip_single_whitespace(&mut self) {
+        if self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn rest(&self) -> &'a [u8] {
+        &self.b[self.i..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_p5() {
+        let mut rng = Rng::new(1);
+        let data: Vec<u8> = (0..35 * 17).map(|_| rng.next_u32() as u8).collect();
+        let img = GrayImage::from_vec(35, 17, data).unwrap();
+        let back = decode(&encode(&img)).unwrap();
+        assert_eq!(img, back);
+    }
+
+    #[test]
+    fn decode_p2_ascii() {
+        let txt = b"P2\n# comment\n3 2\n255\n0 128 255\n1 2 3\n";
+        let img = decode(txt).unwrap();
+        assert_eq!((img.width, img.height), (3, 2));
+        assert_eq!(img.data, vec![0, 128, 255, 1, 2, 3]);
+    }
+
+    #[test]
+    fn decode_p6_luma() {
+        // one white pixel, one pure red pixel
+        let mut b = b"P6\n2 1\n255\n".to_vec();
+        b.extend_from_slice(&[255, 255, 255, 255, 0, 0]);
+        let img = decode(&b).unwrap();
+        assert_eq!(img.data[0], 255);
+        assert_eq!(img.data[1], 76); // 0.299 * 255
+    }
+
+    #[test]
+    fn maxval_rescaled() {
+        let txt = b"P2\n1 1\n15\n15\n";
+        let img = decode(txt).unwrap();
+        assert_eq!(img.data[0], 255);
+    }
+
+    #[test]
+    fn truncated_errors() {
+        let mut b = b"P5\n4 4\n255\n".to_vec();
+        b.extend_from_slice(&[0u8; 3]); // needs 16
+        assert!(decode(&b).is_err());
+    }
+
+    #[test]
+    fn bad_magic_errors() {
+        assert!(decode(b"P9\n1 1\n255\n\0").is_err());
+        assert!(decode(b"").is_err());
+    }
+}

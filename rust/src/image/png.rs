@@ -1,0 +1,277 @@
+//! PNG codec for 8-bit grayscale: encoder (filter 0/Sub/Up heuristic +
+//! zlib via flate2) and decoder (all five filter types, grayscale and
+//! RGB[A] with luma conversion). CRCs via crc32fast.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+use flate2::read::ZlibDecoder;
+use flate2::write::ZlibEncoder;
+use flate2::Compression;
+
+use super::GrayImage;
+
+const MAGIC: [u8; 8] = [0x89, b'P', b'N', b'G', b'\r', b'\n', 0x1A, b'\n'];
+
+fn chunk(out: &mut Vec<u8>, tag: &[u8; 4], body: &[u8]) {
+    out.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    out.extend_from_slice(tag);
+    out.extend_from_slice(body);
+    let mut h = crc32fast::Hasher::new();
+    h.update(tag);
+    h.update(body);
+    out.extend_from_slice(&h.finalize().to_be_bytes());
+}
+
+/// Encode as 8-bit grayscale PNG. Per-row filter chosen greedily between
+/// None / Sub / Up by minimum absolute residual sum (the libpng heuristic).
+pub fn encode(img: &GrayImage) -> Result<Vec<u8>> {
+    let (w, h) = (img.width, img.height);
+    if w == 0 || h == 0 {
+        bail!("cannot encode empty image");
+    }
+    // raw scanlines with filter byte
+    let mut raw = Vec::with_capacity(h * (w + 1));
+    let zero_row = vec![0u8; w];
+    for y in 0..h {
+        let row = &img.data[y * w..(y + 1) * w];
+        let prev: &[u8] = if y == 0 {
+            &zero_row
+        } else {
+            &img.data[(y - 1) * w..y * w]
+        };
+        // candidate filters
+        let none_cost: u64 =
+            row.iter().map(|&v| (v as i16).unsigned_abs() as u64).sum();
+        let sub_cost: u64 = row
+            .iter()
+            .enumerate()
+            .map(|(x, &v)| {
+                let left = if x == 0 { 0 } else { row[x - 1] };
+                (v.wrapping_sub(left) as i8).unsigned_abs() as u64
+            })
+            .sum();
+        let up_cost: u64 = row
+            .iter()
+            .zip(prev)
+            .map(|(&v, &u)| (v.wrapping_sub(u) as i8).unsigned_abs() as u64)
+            .sum();
+        if sub_cost <= none_cost && sub_cost <= up_cost {
+            raw.push(1u8);
+            for x in 0..w {
+                let left = if x == 0 { 0 } else { row[x - 1] };
+                raw.push(row[x].wrapping_sub(left));
+            }
+        } else if up_cost <= none_cost {
+            raw.push(2u8);
+            for x in 0..w {
+                raw.push(row[x].wrapping_sub(prev[x]));
+            }
+        } else {
+            raw.push(0u8);
+            raw.extend_from_slice(row);
+        }
+    }
+    let mut z = ZlibEncoder::new(Vec::new(), Compression::new(6));
+    z.write_all(&raw)?;
+    let compressed = z.finish()?;
+
+    let mut out = Vec::with_capacity(compressed.len() + 64);
+    out.extend_from_slice(&MAGIC);
+    let mut ihdr = Vec::with_capacity(13);
+    ihdr.extend_from_slice(&(w as u32).to_be_bytes());
+    ihdr.extend_from_slice(&(h as u32).to_be_bytes());
+    ihdr.extend_from_slice(&[8, 0, 0, 0, 0]); // 8-bit gray, no interlace
+    chunk(&mut out, b"IHDR", &ihdr);
+    chunk(&mut out, b"IDAT", &compressed);
+    chunk(&mut out, b"IEND", &[]);
+    Ok(out)
+}
+
+#[inline]
+fn paeth(a: i16, b: i16, c: i16) -> u8 {
+    let p = a + b - c;
+    let (pa, pb, pc) = ((p - a).abs(), (p - b).abs(), (p - c).abs());
+    if pa <= pb && pa <= pc {
+        a as u8
+    } else if pb <= pc {
+        b as u8
+    } else {
+        c as u8
+    }
+}
+
+/// Decode an 8-bit grayscale / RGB / RGBA / gray+alpha PNG (non-interlaced,
+/// non-paletted), converting color to luma.
+pub fn decode(bytes: &[u8]) -> Result<GrayImage> {
+    if bytes.len() < 8 || bytes[..8] != MAGIC {
+        bail!("not a PNG file");
+    }
+    let mut i = 8usize;
+    let mut w = 0usize;
+    let mut h = 0usize;
+    let mut channels = 0usize;
+    let mut idat: Vec<u8> = Vec::new();
+    let mut seen_ihdr = false;
+    while i + 8 <= bytes.len() {
+        let len = u32::from_be_bytes(bytes[i..i + 4].try_into()?) as usize;
+        let tag = &bytes[i + 4..i + 8];
+        let body_start = i + 8;
+        let body_end = body_start + len;
+        if body_end + 4 > bytes.len() {
+            bail!("PNG chunk overruns file");
+        }
+        let body = &bytes[body_start..body_end];
+        // verify CRC
+        let mut hsh = crc32fast::Hasher::new();
+        hsh.update(tag);
+        hsh.update(body);
+        let want =
+            u32::from_be_bytes(bytes[body_end..body_end + 4].try_into()?);
+        if hsh.finalize() != want {
+            bail!("PNG chunk CRC mismatch in {:?}", String::from_utf8_lossy(tag));
+        }
+        match tag {
+            b"IHDR" => {
+                if len != 13 {
+                    bail!("bad IHDR length");
+                }
+                w = u32::from_be_bytes(body[0..4].try_into()?) as usize;
+                h = u32::from_be_bytes(body[4..8].try_into()?) as usize;
+                let bit_depth = body[8];
+                let color_type = body[9];
+                let interlace = body[12];
+                if bit_depth != 8 {
+                    bail!("unsupported PNG bit depth {bit_depth}");
+                }
+                if interlace != 0 {
+                    bail!("interlaced PNG unsupported");
+                }
+                channels = match color_type {
+                    0 => 1,
+                    2 => 3,
+                    4 => 2,
+                    6 => 4,
+                    t => bail!("unsupported PNG color type {t}"),
+                };
+                seen_ihdr = true;
+            }
+            b"IDAT" => idat.extend_from_slice(body),
+            b"IEND" => break,
+            _ => {} // ancillary chunks ignored
+        }
+        i = body_end + 4;
+    }
+    if !seen_ihdr || w == 0 || h == 0 {
+        bail!("PNG missing IHDR / zero dimensions");
+    }
+    let mut raw = Vec::new();
+    ZlibDecoder::new(&idat[..]).read_to_end(&mut raw)?;
+    let stride = w * channels;
+    if raw.len() != h * (stride + 1) {
+        bail!(
+            "PNG data size {} != expected {}",
+            raw.len(),
+            h * (stride + 1)
+        );
+    }
+    // unfilter in place into `pix`
+    let mut pix = vec![0u8; h * stride];
+    for y in 0..h {
+        let ftype = raw[y * (stride + 1)];
+        let src = &raw[y * (stride + 1) + 1..(y + 1) * (stride + 1)];
+        for x in 0..stride {
+            let left = if x >= channels {
+                pix[y * stride + x - channels]
+            } else {
+                0
+            };
+            let up = if y > 0 { pix[(y - 1) * stride + x] } else { 0 };
+            let ul = if y > 0 && x >= channels {
+                pix[(y - 1) * stride + x - channels]
+            } else {
+                0
+            };
+            let rec = match ftype {
+                0 => src[x],
+                1 => src[x].wrapping_add(left),
+                2 => src[x].wrapping_add(up),
+                3 => src[x]
+                    .wrapping_add(((left as u16 + up as u16) / 2) as u8),
+                4 => src[x].wrapping_add(paeth(
+                    left as i16,
+                    up as i16,
+                    ul as i16,
+                )),
+                t => bail!("bad PNG filter type {t}"),
+            };
+            pix[y * stride + x] = rec;
+        }
+    }
+    // to grayscale
+    let data: Vec<u8> = match channels {
+        1 => pix,
+        2 => pix.chunks_exact(2).map(|p| p[0]).collect(),
+        3 | 4 => pix
+            .chunks_exact(channels)
+            .map(|p| {
+                (0.299 * p[0] as f32
+                    + 0.587 * p[1] as f32
+                    + 0.114 * p[2] as f32)
+                    .round() as u8
+            })
+            .collect(),
+        _ => unreachable!(),
+    };
+    GrayImage::from_vec(w, h, data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synthetic;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = Rng::new(3);
+        let data: Vec<u8> = (0..41 * 23).map(|_| rng.next_u32() as u8).collect();
+        let img = GrayImage::from_vec(41, 23, data).unwrap();
+        let back = decode(&encode(&img).unwrap()).unwrap();
+        assert_eq!(img, back);
+    }
+
+    #[test]
+    fn roundtrip_natural() {
+        // natural image exercises Sub/Up filter selection
+        let img = synthetic::lena_like(96, 80, 7);
+        let enc = encode(&img).unwrap();
+        let back = decode(&enc).unwrap();
+        assert_eq!(img, back);
+        // natural content must compress below raw size
+        assert!(enc.len() < img.pixels());
+    }
+
+    #[test]
+    fn crc_checked() {
+        let img = GrayImage::new(8, 8);
+        let mut enc = encode(&img).unwrap();
+        let n = enc.len();
+        enc[n - 8] ^= 0xFF; // corrupt IEND CRC region (or IDAT body end)
+        assert!(decode(&enc).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decode(b"hello world").is_err());
+        assert!(decode(&MAGIC).is_err());
+    }
+
+    #[test]
+    fn constant_image_compresses_hard() {
+        let img = GrayImage::from_vec(64, 64, vec![128; 64 * 64]).unwrap();
+        let enc = encode(&img).unwrap();
+        assert!(enc.len() < 200, "constant image -> tiny PNG, got {}",
+                enc.len());
+    }
+}

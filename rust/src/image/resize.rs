@@ -1,0 +1,127 @@
+//! Image resampling: bilinear and area-average downscale.
+//!
+//! Used to produce the paper's exact size sweep from one master synthetic
+//! image per scene (the paper resized Lena/Cable-car the same way).
+
+use super::GrayImage;
+
+/// Bilinear resample to (w, h).
+pub fn bilinear(img: &GrayImage, w: usize, h: usize) -> GrayImage {
+    assert!(w > 0 && h > 0);
+    let mut out = GrayImage::new(w, h);
+    let sx = img.width as f64 / w as f64;
+    let sy = img.height as f64 / h as f64;
+    for y in 0..h {
+        // sample at pixel centers
+        let fy = ((y as f64 + 0.5) * sy - 0.5)
+            .clamp(0.0, img.height as f64 - 1.0);
+        let y0 = fy.floor() as usize;
+        let y1 = (y0 + 1).min(img.height - 1);
+        let wy = fy - y0 as f64;
+        for x in 0..w {
+            let fx = ((x as f64 + 0.5) * sx - 0.5)
+                .clamp(0.0, img.width as f64 - 1.0);
+            let x0 = fx.floor() as usize;
+            let x1 = (x0 + 1).min(img.width - 1);
+            let wx = fx - x0 as f64;
+            let v00 = img.get(x0, y0) as f64;
+            let v01 = img.get(x1, y0) as f64;
+            let v10 = img.get(x0, y1) as f64;
+            let v11 = img.get(x1, y1) as f64;
+            let v = v00 * (1.0 - wx) * (1.0 - wy)
+                + v01 * wx * (1.0 - wy)
+                + v10 * (1.0 - wx) * wy
+                + v11 * wx * wy;
+            out.set(x, y, v.round().clamp(0.0, 255.0) as u8);
+        }
+    }
+    out
+}
+
+/// Area-average downscale (box filter) — better than bilinear when
+/// shrinking by more than 2x (avoids aliasing in the size sweep).
+pub fn area_downscale(img: &GrayImage, w: usize, h: usize) -> GrayImage {
+    assert!(w > 0 && h > 0);
+    assert!(w <= img.width && h <= img.height);
+    let mut out = GrayImage::new(w, h);
+    let sx = img.width as f64 / w as f64;
+    let sy = img.height as f64 / h as f64;
+    for y in 0..h {
+        let y0 = (y as f64 * sy) as usize;
+        let y1 = (((y + 1) as f64 * sy).ceil() as usize).min(img.height);
+        for x in 0..w {
+            let x0 = (x as f64 * sx) as usize;
+            let x1 = (((x + 1) as f64 * sx).ceil() as usize).min(img.width);
+            let mut sum = 0u64;
+            for yy in y0..y1 {
+                for xx in x0..x1 {
+                    sum += img.get(xx, yy) as u64;
+                }
+            }
+            let n = ((y1 - y0) * (x1 - x0)).max(1) as u64;
+            out.set(x, y, ((sum + n / 2) / n) as u8);
+        }
+    }
+    out
+}
+
+/// Resize choosing the right filter: area when shrinking >=2x in either
+/// axis, bilinear otherwise.
+pub fn resize(img: &GrayImage, w: usize, h: usize) -> GrayImage {
+    if w * 2 <= img.width && h * 2 <= img.height {
+        area_downscale(img, w, h)
+    } else {
+        bilinear(img, w, h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synthetic;
+
+    #[test]
+    fn identity_resize_is_identity() {
+        let img = synthetic::lena_like(32, 24, 1);
+        let r = bilinear(&img, 32, 24);
+        assert_eq!(img, r);
+    }
+
+    #[test]
+    fn constant_image_stays_constant() {
+        let img = GrayImage::from_vec(16, 16, vec![77; 256]).unwrap();
+        for (w, h) in [(8, 8), (32, 32), (5, 11)] {
+            let r = resize(&img, w, h);
+            assert!(r.data.iter().all(|&v| v == 77), "{w}x{h}");
+        }
+    }
+
+    #[test]
+    fn upscale_dimensions() {
+        let img = synthetic::lena_like(20, 20, 2);
+        let r = bilinear(&img, 55, 33);
+        assert_eq!((r.width, r.height), (55, 33));
+    }
+
+    #[test]
+    fn downscale_preserves_mean() {
+        let img = synthetic::lena_like(128, 128, 3);
+        let r = area_downscale(&img, 32, 32);
+        assert!((img.mean() - r.mean()).abs() < 2.0);
+    }
+
+    #[test]
+    fn gradient_preserved_by_bilinear() {
+        // horizontal ramp stays monotone
+        let mut img = GrayImage::new(64, 8);
+        for y in 0..8 {
+            for x in 0..64 {
+                img.set(x, y, (x * 4) as u8);
+            }
+        }
+        let r = bilinear(&img, 32, 8);
+        for x in 1..32 {
+            assert!(r.get(x, 4) >= r.get(x - 1, 4));
+        }
+    }
+}

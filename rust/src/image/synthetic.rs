@@ -1,0 +1,309 @@
+//! Synthetic test images — the stand-ins for the paper's Lena and
+//! Cable-car (Marco Schmidt's test-image database is not redistributable
+//! in this environment; DESIGN.md §Hardware-Adaptation documents the
+//! substitution).
+//!
+//! What the experiments actually need from the content:
+//!
+//! * DCT timing (Tables 1-2) is content-independent — any pixels do;
+//! * PSNR (Tables 3-4) needs a *natural-image spectrum* (energy
+//!   concentrated at low frequencies, ~1/f^2 falloff) so quantization
+//!   behaves as it does on photographs;
+//! * the CPU/GPU processed figures need recognizable structure.
+//!
+//! `lena_like` produces a smooth portrait-spectrum image via diamond-square
+//! plasma noise plus a soft radial subject; `cablecar_like` produces a
+//! scene with hard edges, periodic texture (cables) and gradient sky —
+//! higher high-frequency energy, which is why the paper's Cable-car PSNR
+//! values sit below Lena's at equal size, a shape our stand-ins preserve.
+
+use crate::util::prng::Rng;
+
+use super::GrayImage;
+
+/// Diamond-square ("plasma") fractal noise field in 0..1, at any size.
+fn plasma(width: usize, height: usize, seed: u64, roughness: f64) -> Vec<f64> {
+    // run diamond-square on the smallest 2^n+1 square covering the image,
+    // then crop.
+    let n = width.max(height).max(2);
+    let mut size = 1usize;
+    while size + 1 < n {
+        size <<= 1;
+    }
+    let dim = size + 1;
+    let mut g = vec![0.0f64; dim * dim];
+    let mut rng = Rng::new(seed);
+    let idx = |x: usize, y: usize| y * dim + x;
+    g[idx(0, 0)] = rng.next_f64();
+    g[idx(size, 0)] = rng.next_f64();
+    g[idx(0, size)] = rng.next_f64();
+    g[idx(size, size)] = rng.next_f64();
+    let mut step = size;
+    let mut amp = 1.0f64;
+    while step > 1 {
+        let half = step / 2;
+        // diamond
+        for y in (half..dim).step_by(step) {
+            for x in (half..dim).step_by(step) {
+                let avg = (g[idx(x - half, y - half)]
+                    + g[idx(x + half, y - half)]
+                    + g[idx(x - half, y + half)]
+                    + g[idx(x + half, y + half)])
+                    / 4.0;
+                g[idx(x, y)] = avg + (rng.next_f64() - 0.5) * amp;
+            }
+        }
+        // square
+        for y in (0..dim).step_by(half) {
+            let x0 = if (y / half) % 2 == 0 { half } else { 0 };
+            for x in (x0..dim).step_by(step) {
+                let mut sum = 0.0;
+                let mut cnt = 0.0;
+                if x >= half {
+                    sum += g[idx(x - half, y)];
+                    cnt += 1.0;
+                }
+                if x + half < dim {
+                    sum += g[idx(x + half, y)];
+                    cnt += 1.0;
+                }
+                if y >= half {
+                    sum += g[idx(x, y - half)];
+                    cnt += 1.0;
+                }
+                if y + half < dim {
+                    sum += g[idx(x, y + half)];
+                    cnt += 1.0;
+                }
+                g[idx(x, y)] = sum / cnt + (rng.next_f64() - 0.5) * amp;
+            }
+        }
+        step = half;
+        amp *= roughness;
+    }
+    // crop + normalize to 0..1
+    let mut out = vec![0.0f64; width * height];
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for y in 0..height {
+        for x in 0..width {
+            let v = g[idx(x * size / width.max(1), y * size / height.max(1))];
+            out[y * width + x] = v;
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    let span = (hi - lo).max(1e-12);
+    for v in &mut out {
+        *v = (*v - lo) / span;
+    }
+    out
+}
+
+/// Portrait-spectrum stand-in for Lena: plasma base, a rough "texture"
+/// octave set (hair/feathers in the original have strong mid/high
+/// frequencies — without them quantization error dominates and the
+/// Cordic-vs-DCT gap of Tables 3-4 would vanish), soft radial subject,
+/// gentle vignette, film grain.
+pub fn lena_like(width: usize, height: usize, seed: u64) -> GrayImage {
+    let base = plasma(width, height, seed, 0.55);
+    // high-roughness field: keeps fine scales near full amplitude,
+    // supplying the AC energy a real photograph has
+    let detail = plasma(width, height, seed ^ 0x7E7E, 0.9);
+    let mut rng = Rng::new(seed ^ 0xA11CE);
+    let (cw, ch) = (width as f64 / 2.0, height as f64 / 2.0);
+    let rad = cw.min(ch);
+    let mut data = Vec::with_capacity(width * height);
+    for y in 0..height {
+        for x in 0..width {
+            let p = base[y * width + x];
+            let d = detail[y * width + x] - 0.5;
+            let dx = (x as f64 - cw * 0.92) / rad;
+            let dy = (y as f64 - ch * 1.05) / rad;
+            let r = (dx * dx + dy * dy).sqrt();
+            // soft "subject" bump and vignette falloff
+            let subject = 0.35 * (-(r * 1.8).powi(2)).exp();
+            let vignette = 1.0 - 0.25 * (r / 1.4).clamp(0.0, 1.0).powi(2);
+            // texture is strongest around the subject ring (hair zone)
+            let texture_amp = 0.10 + 0.08 * (-(r - 0.9).powi(2) * 4.0).exp();
+            // oriented mid-frequency "feather/hair" striation: period
+            // ~4.5 px, phase-warped by the detail field. This is the
+            // content that energizes the mid-band DCT coefficients —
+            // locally-linear plasma alone leaves X2/X6 empty and would
+            // erase the paper's Cordic-vs-DCT PSNR gap.
+            let stripe = (std::f64::consts::TAU
+                * (0.16 * x as f64 + 0.13 * y as f64)
+                + 7.0 * d)
+                .sin();
+            let grain = (rng.next_f64() - 0.5) * 0.04;
+            let v = ((0.25 + 0.50 * p + subject + texture_amp * d
+                + 0.09 * stripe * (0.3 + p))
+                * vignette
+                + grain)
+                .clamp(0.0, 1.0);
+            data.push((v * 255.0).round() as u8);
+        }
+    }
+    GrayImage {
+        width,
+        height,
+        data,
+    }
+}
+
+/// Scene-spectrum stand-in for Cable-car: gradient sky, mountain silhouette
+/// (hard edge), periodic cables, boxy car, textured ground.
+pub fn cablecar_like(width: usize, height: usize, seed: u64) -> GrayImage {
+    let tex = plasma(width, height, seed ^ 0xCAB1E, 0.8);
+    let clouds = plasma(width, height, seed ^ 0xC10D, 0.75);
+    let ridge = plasma(width.max(2), 1, seed ^ 0x51DE, 0.5);
+    let mut rng = Rng::new(seed ^ 0xF0_6F);
+    let mut data = Vec::with_capacity(width * height);
+    let fw = width as f64;
+    let fh = height as f64;
+    // cable car body rectangle
+    let car_x0 = (0.42 * fw) as usize;
+    let car_x1 = (0.58 * fw) as usize;
+    let car_y0 = (0.38 * fh) as usize;
+    let car_y1 = (0.55 * fh) as usize;
+    for y in 0..height {
+        for x in 0..width {
+            let xf = x as f64 / fw;
+            let yf = y as f64 / fh;
+            // sky gradient with cloud texture
+            let mut v = 0.85 - 0.35 * yf
+                + 0.12 * (clouds[y * width + x] - 0.5);
+            // mountain silhouette: ridge height per column
+            let ridge_h = 0.55 + 0.30 * ridge[x.min(width - 1)];
+            if yf > ridge_h {
+                // below the ridge: dark rocky slope (high-frequency)
+                v = 0.22 + 0.45 * tex[y * width + x];
+            }
+            // two catenary-ish cables
+            for (k, amp) in [(0.30f64, 0.05f64), (0.34, 0.045)] {
+                let cable_y = k + amp * (xf * 2.0 - 1.0).powi(2);
+                if (yf - cable_y).abs() < 1.2 / fh {
+                    v = 0.05;
+                }
+            }
+            // the car
+            if (car_x0..car_x1).contains(&x) && (car_y0..car_y1).contains(&y)
+            {
+                let frame = x < car_x0 + 2
+                    || x >= car_x1 - 2
+                    || y < car_y0 + 2
+                    || y >= car_y1 - 2;
+                v = if frame { 0.10 } else { 0.55 };
+                // windows
+                let wx = (x - car_x0) * 5 / (car_x1 - car_x0).max(1);
+                if !frame && y < car_y0 + (car_y1 - car_y0) / 2 && wx % 2 == 1
+                {
+                    v = 0.80;
+                }
+            }
+            let grain = (rng.next_f64() - 0.5) * 0.05;
+            data.push((((v + grain).clamp(0.0, 1.0)) * 255.0).round() as u8);
+        }
+    }
+    GrayImage {
+        width,
+        height,
+        data,
+    }
+}
+
+/// Named corpus used by benches/examples: the two paper stand-ins.
+pub fn by_name(name: &str, width: usize, height: usize, seed: u64)
+               -> Option<GrayImage> {
+    match name {
+        "lena" | "lena-like" | "portrait" => {
+            Some(lena_like(width, height, seed))
+        }
+        "cablecar" | "cable-car" | "scene" => {
+            Some(cablecar_like(width, height, seed))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(lena_like(64, 48, 9), lena_like(64, 48, 9));
+        assert_ne!(lena_like(64, 48, 9), lena_like(64, 48, 10));
+    }
+
+    #[test]
+    fn sizes_respected() {
+        for (w, h) in [(200, 200), (97, 31), (8, 8)] {
+            let img = lena_like(w, h, 1);
+            assert_eq!((img.width, img.height), (w, h));
+            let img = cablecar_like(w, h, 1);
+            assert_eq!((img.width, img.height), (w, h));
+        }
+    }
+
+    #[test]
+    fn lena_has_natural_contrast() {
+        let img = lena_like(128, 128, 5);
+        let sd = img.stddev();
+        assert!(sd > 15.0 && sd < 90.0, "stddev {sd}");
+        assert!(img.mean() > 60.0 && img.mean() < 200.0);
+    }
+
+    #[test]
+    fn both_scenes_have_substantial_ac_energy() {
+        // total gradient magnitude as an edge-energy proxy: both stand-ins
+        // must carry real mid/high-frequency content (this is what keeps
+        // the Cordic-vs-DCT PSNR gap of Tables 3-4 visible), but far less
+        // than white noise (~85 for uniform random pixels).
+        let edge_energy = |img: &GrayImage| -> f64 {
+            let mut e = 0.0;
+            for y in 0..img.height {
+                for x in 1..img.width {
+                    e += (img.get(x, y) as f64 - img.get(x - 1, y) as f64)
+                        .abs();
+                }
+            }
+            e / img.pixels() as f64
+        };
+        let l = edge_energy(&lena_like(256, 256, 3));
+        let c = edge_energy(&cablecar_like(256, 256, 3));
+        for (name, e) in [("lena", l), ("cablecar", c)] {
+            assert!(
+                (4.0..60.0).contains(&e),
+                "{name} edge energy {e:.2} outside natural-image band"
+            );
+        }
+    }
+
+    #[test]
+    fn by_name_resolves() {
+        assert!(by_name("lena", 16, 16, 0).is_some());
+        assert!(by_name("cable-car", 16, 16, 0).is_some());
+        assert!(by_name("nonexistent", 16, 16, 0).is_none());
+    }
+
+    #[test]
+    fn plasma_spectrum_is_lowpass() {
+        // column-mean absolute first difference should be much smaller than
+        // pixel stddev for a 1/f field (smoothness check).
+        let img = lena_like(128, 128, 77);
+        let mut diff = 0.0;
+        for y in 1..img.height {
+            for x in 0..img.width {
+                diff +=
+                    (img.get(x, y) as f64 - img.get(x, y - 1) as f64).abs();
+            }
+        }
+        diff /= (img.pixels() - img.width) as f64;
+        assert!(
+            diff < img.stddev() * 0.6,
+            "mean |dy| {diff:.2} vs sd {:.2}",
+            img.stddev()
+        );
+    }
+}

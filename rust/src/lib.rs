@@ -1,0 +1,45 @@
+//! # cordic-dct
+//!
+//! A Rust + JAX/Pallas reproduction of *"CUDA Based Performance Evaluation
+//! of the Computational Efficiency of the DCT Image Compression Technique
+//! on Both the CPU and GPU"* (Modieginyane, Ncube, Gasela, 2013).
+//!
+//! The paper's CUDA/GPU lane is rebuilt as AOT-compiled XLA executables
+//! (JAX + Pallas kernels lowered to HLO text at build time, loaded and run
+//! by the PJRT CPU client at serve time); the paper's serial-CPU lane is
+//! rebuilt as scalar Rust in [`dct`]. The [`coordinator`] is the serving
+//! layer: a request router + dynamic batcher + worker pool dispatching
+//! images to either lane. See DESIGN.md for the full system inventory and
+//! the hardware-adaptation argument.
+//!
+//! ## Layers
+//!
+//! * [`util`] — substrates the offline environment forces us to own: JSON,
+//!   CLI parsing, PRNG, thread pool, bit I/O, timers, a property-test
+//!   harness.
+//! * [`image`] — grayscale image type, PGM/PPM/BMP/PNG codecs, synthetic
+//!   test-image generators (the Lena / Cable-car stand-ins), resize,
+//!   histogram equalization.
+//! * [`dct`] — the transform substrate: naive / matrix / Loeffler /
+//!   Cordic-based-Loeffler 8x8 DCTs, JPEG quantization, block management.
+//! * [`codec`] — a complete entropy codec (zigzag, DC-DPCM + AC-RLE,
+//!   canonical Huffman, bitstream container) turning quantized
+//!   coefficients into a real compressed file format.
+//! * [`metrics`] — MSE / PSNR / SSIM and latency statistics.
+//! * [`runtime`] — the PJRT side: artifact manifest, executable cache,
+//!   literal marshaling.
+//! * [`coordinator`] — router, batcher, worker pool, service facade.
+//! * [`bench`] — the measurement harness and the paper-table formatters
+//!   used by `cargo bench` targets.
+
+pub mod bench;
+pub mod codec;
+pub mod coordinator;
+pub mod dct;
+pub mod image;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,383 @@
+//! cordic-dct launcher: the framework CLI.
+//!
+//! ```text
+//! cordic-dct compress   --input img.png --output out.cdc [--variant cordic]
+//! cordic-dct decompress --input out.cdc --output back.png
+//! cordic-dct serve      --requests 64 --scene lena --lane auto
+//! cordic-dct psnr       --a ref.png --b test.png
+//! cordic-dct histeq     --input img.pgm --output eq.pgm [--lane gpu]
+//! cordic-dct synth      --scene cablecar --width 512 --height 512 --output x.png
+//! cordic-dct paper-tables [--quick]
+//! cordic-dct info
+//! ```
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use cordic_dct::codec::{self, decoder, encoder};
+use cordic_dct::coordinator::{Backpressure, Lane, Service, ServiceConfig};
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::{synthetic, GrayImage};
+use cordic_dct::runtime::Runtime;
+use cordic_dct::util::cli::Command;
+use cordic_dct::util::logging;
+use cordic_dct::{bench, metrics};
+
+fn main() {
+    logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("{e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(sub) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "compress" => cmd_compress(rest),
+        "decompress" => cmd_decompress(rest),
+        "serve" => cmd_serve(rest),
+        "psnr" => cmd_psnr(rest),
+        "histeq" => cmd_histeq(rest),
+        "synth" => cmd_synth(rest),
+        "paper-tables" => cmd_paper_tables(rest),
+        "info" => cmd_info(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'; try `cordic-dct help`"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "cordic-dct — DCT image compression on CPU and (PJRT) GPU lanes\n\
+         \n\
+         SUBCOMMANDS:\n\
+         \x20 compress     compress an image to .cdc\n\
+         \x20 decompress   decode a .cdc back to an image\n\
+         \x20 serve        run the coordinator on a synthetic workload\n\
+         \x20 psnr         PSNR between two images\n\
+         \x20 histeq       histogram equalization\n\
+         \x20 synth        generate a synthetic test image\n\
+         \x20 paper-tables regenerate the paper's tables/figures\n\
+         \x20 info         runtime + artifact inventory\n\
+         \n\
+         Run any subcommand with --help for options."
+    );
+}
+
+fn parse_variant(s: &str) -> Result<Variant> {
+    Variant::parse(s)
+        .with_context(|| format!("unknown variant '{s}' (dct | loeffler | cordic | naive)"))
+}
+
+fn parse_lane(s: &str) -> Result<Lane> {
+    Lane::parse(s).with_context(|| format!("unknown lane '{s}' (cpu | gpu | auto)"))
+}
+
+fn cmd_compress(args: &[String]) -> Result<()> {
+    let m = Command::new("compress", "compress an image to .cdc")
+        .opt_req("input", "input image (.pgm/.ppm/.bmp/.png)")
+        .opt_req("output", "output .cdc path")
+        .opt("variant", "cordic", "transform: dct|loeffler|cordic|naive")
+        .opt("quality", "50", "IJG quality 1..100")
+        .opt("recon", "", "also write the reconstruction here")
+        .flag("verbose", "print timings")
+        .parse(args)?;
+    let img = GrayImage::load(m.get("input"))?;
+    let variant = parse_variant(m.get("variant"))?;
+    let quality = m.get_usize("quality")? as u8;
+    let pipe = CpuPipeline::new(variant, quality);
+    let t0 = Instant::now();
+    let out = pipe.compress(&img);
+    let header = codec::Header {
+        width: img.width as u32,
+        height: img.height as u32,
+        padded_width: out.padded_width as u32,
+        padded_height: out.padded_height as u32,
+        quality,
+        variant: codec::variant_tag(variant),
+    };
+    let bytes = encoder::encode(&header, &out.qcoef)?;
+    let elapsed = t0.elapsed().as_secs_f64() * 1e3;
+    std::fs::write(m.get("output"), &bytes)
+        .with_context(|| format!("writing {}", m.get("output")))?;
+    let p = metrics::psnr(&img, &out.recon);
+    println!(
+        "{} -> {} ({} -> {} bytes, ratio {:.1}x, PSNR {:.2} dB{})",
+        m.get("input"),
+        m.get("output"),
+        img.pixels(),
+        bytes.len(),
+        metrics::compression_ratio(img.pixels(), bytes.len()),
+        p,
+        if m.flag("verbose") {
+            format!(", {elapsed:.1} ms")
+        } else {
+            String::new()
+        }
+    );
+    let recon_path = m.get("recon");
+    if !recon_path.is_empty() {
+        out.recon.save(recon_path)?;
+    }
+    Ok(())
+}
+
+fn cmd_decompress(args: &[String]) -> Result<()> {
+    let m = Command::new("decompress", "decode a .cdc to an image")
+        .opt_req("input", "input .cdc")
+        .opt_req("output", "output image (.pgm/.bmp/.png)")
+        .parse(args)?;
+    let bytes = std::fs::read(m.get("input"))?;
+    let dec = decoder::decode(&bytes)?;
+    let variant = codec::tag_variant(dec.header.variant)?;
+    let pipe = CpuPipeline::new(variant, dec.header.quality);
+    let img = pipe.decode_coefficients(
+        &dec.qcoef_planar,
+        dec.header.padded_width as usize,
+        dec.header.padded_height as usize,
+        dec.header.width as usize,
+        dec.header.height as usize,
+    );
+    img.save(m.get("output"))?;
+    println!(
+        "{} -> {} ({}x{}, q{}, {})",
+        m.get("input"),
+        m.get("output"),
+        img.width,
+        img.height,
+        dec.header.quality,
+        variant.as_str()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let m = Command::new("serve", "run the coordinator on a synthetic load")
+        .opt("requests", "32", "number of requests")
+        .opt("scene", "lena", "scene generator: lena|cablecar")
+        .opt("size", "512", "square image size")
+        .opt("variant", "cordic", "transform variant")
+        .opt("lane", "auto", "cpu|gpu|auto")
+        .opt("workers", "0", "worker threads (0 = machine default)")
+        .opt("queue", "256", "queue capacity")
+        .opt("batch", "8", "gpu max batch")
+        .opt("artifacts", "artifacts", "artifact dir ('' disables GPU lane)")
+        .parse(args)?;
+    let n = m.get_usize("requests")?;
+    let size = m.get_usize("size")?;
+    let lane = parse_lane(m.get("lane"))?;
+    let variant = parse_variant(m.get("variant"))?;
+    let mut cfg = ServiceConfig {
+        queue_capacity: m.get_usize("queue")?,
+        backpressure: Backpressure::Block,
+        ..Default::default()
+    };
+    let workers = m.get_usize("workers")?;
+    if workers > 0 {
+        cfg.workers = workers;
+    }
+    cfg.batch.gpu_max_batch = m.get_usize("batch")?;
+    let adir = m.get("artifacts");
+    cfg.artifact_dir =
+        (!adir.is_empty()).then(|| PathBuf::from(adir));
+    let svc = Service::start(cfg)?;
+    println!(
+        "serving {n} x {size}x{size} '{}' requests on lane {:?} \
+         (gpu lane: {})",
+        m.get("scene"),
+        lane,
+        svc.has_gpu_lane()
+    );
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let img = synthetic::by_name(m.get("scene"), size, size, i as u64)
+                .context("unknown scene")?;
+            svc.compress(img, variant, lane)
+        })
+        .collect::<Result<_>>()?;
+    let mut lanes = std::collections::BTreeMap::new();
+    let mut worst_psnr = f64::INFINITY;
+    let mut bytes_total = 0usize;
+    for h in handles {
+        let resp = h.wait();
+        let out = resp.result?;
+        *lanes.entry(format!("{:?}", resp.lane)).or_insert(0u32) += 1;
+        worst_psnr = worst_psnr.min(out.psnr_db.unwrap_or(f64::NAN));
+        bytes_total += out.compressed_bytes.unwrap_or(0);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = svc.stats();
+    println!(
+        "done: {n} requests in {wall:.2}s = {:.1} req/s; lanes {lanes:?}",
+        n as f64 / wall
+    );
+    println!(
+        "queue wait mean {:.2} ms p95 {:.2} ms; process mean {:.2} ms \
+         p95 {:.2} ms",
+        stats.queue_wait.1, stats.queue_wait.2, stats.process.1,
+        stats.process.2
+    );
+    println!(
+        "worst PSNR {worst_psnr:.2} dB; {:.1} KiB compressed total; \
+         {} executables compiled",
+        bytes_total as f64 / 1024.0,
+        stats.compiled_executables
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_psnr(args: &[String]) -> Result<()> {
+    let m = Command::new("psnr", "PSNR between two images")
+        .opt_req("a", "reference image")
+        .opt_req("b", "test image")
+        .opt("lane", "cpu", "cpu|gpu (gpu uses the PSNR artifact)")
+        .parse(args)?;
+    let a = GrayImage::load(m.get("a"))?;
+    let b = GrayImage::load(m.get("b"))?;
+    let p = match parse_lane(m.get("lane"))? {
+        Lane::Gpu => {
+            let rt = std::sync::Arc::new(Runtime::new("artifacts")?);
+            cordic_dct::runtime::Executor::new(rt).psnr(&a, &b)?
+        }
+        _ => metrics::psnr(&a, &b),
+    };
+    println!("PSNR({}, {}) = {p:.6} dB", m.get("a"), m.get("b"));
+    println!("SSIM = {:.4}", metrics::ssim(&a, &b));
+    Ok(())
+}
+
+fn cmd_histeq(args: &[String]) -> Result<()> {
+    let m = Command::new("histeq", "grayscale histogram equalization")
+        .opt_req("input", "input image")
+        .opt_req("output", "output image")
+        .opt("lane", "cpu", "cpu|gpu")
+        .parse(args)?;
+    let img = GrayImage::load(m.get("input"))?;
+    let t0 = Instant::now();
+    let out = match parse_lane(m.get("lane"))? {
+        Lane::Gpu => {
+            let rt = std::sync::Arc::new(Runtime::new("artifacts")?);
+            cordic_dct::runtime::Executor::new(rt).histeq(&img)?.0
+        }
+        _ => cordic_dct::image::histeq::histeq(&img),
+    };
+    println!(
+        "equalized {}x{} in {:.2} ms",
+        img.width,
+        img.height,
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+    out.save(m.get("output"))
+}
+
+fn cmd_synth(args: &[String]) -> Result<()> {
+    let m = Command::new("synth", "generate a synthetic test image")
+        .opt("scene", "lena", "lena|cablecar")
+        .opt("width", "512", "width")
+        .opt("height", "512", "height")
+        .opt("seed", "3287", "random seed")
+        .opt_req("output", "output image path")
+        .parse(args)?;
+    let img = synthetic::by_name(
+        m.get("scene"),
+        m.get_usize("width")?,
+        m.get_usize("height")?,
+        m.get_u64("seed")?,
+    )
+    .context("unknown scene (lena|cablecar)")?;
+    img.save(m.get("output"))?;
+    println!(
+        "wrote {} ({}x{}, mean {:.1}, sd {:.1})",
+        m.get("output"),
+        img.width,
+        img.height,
+        img.mean(),
+        img.stddev()
+    );
+    Ok(())
+}
+
+fn cmd_paper_tables(args: &[String]) -> Result<()> {
+    let m = Command::new("paper-tables", "regenerate all paper tables")
+        .flag("quick", "trim sizes + iterations (CI)")
+        .parse(args)?;
+    if m.flag("quick") {
+        std::env::set_var("CORDIC_DCT_BENCH_QUICK", "1");
+    }
+    bench::tables::run_timing_experiment(
+        "table1_lena",
+        "Table 1 (Lena timing)",
+        "lena",
+        bench::tables::LENA_SIZES,
+        bench::tables::PAPER_TABLE1,
+    )?;
+    bench::tables::run_timing_experiment(
+        "table2_cablecar",
+        "Table 2 (Cable-car timing)",
+        "cablecar",
+        bench::tables::CABLECAR_SIZES,
+        bench::tables::PAPER_TABLE2,
+    )?;
+    bench::tables::run_psnr_experiment(
+        "table3_psnr_lena",
+        "Table 3 (Lena PSNR)",
+        "lena",
+        bench::tables::LENA_PSNR_SIZES,
+    )?;
+    bench::tables::run_psnr_experiment(
+        "table4_psnr_cablecar",
+        "Table 4 (Cable-car PSNR)",
+        "cablecar",
+        bench::tables::CABLECAR_PSNR_SIZES,
+    )?;
+    Ok(())
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let m = Command::new("info", "runtime + artifact inventory")
+        .opt("artifacts", "artifacts", "artifact dir")
+        .parse(args)?;
+    println!("cordic-dct {}", env!("CARGO_PKG_VERSION"));
+    let dir = PathBuf::from(m.get("artifacts"));
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts: none at {} (run `make artifacts`)", dir.display());
+        return Ok(());
+    }
+    let rt = Runtime::new(&dir)?;
+    println!(
+        "PJRT platform: {} ({} device(s))",
+        rt.platform(),
+        rt.device_count()
+    );
+    println!(
+        "artifacts: {} entries at {} (quality {})",
+        rt.manifest.len(),
+        dir.display(),
+        rt.manifest.quality
+    );
+    for kind in ["compress", "psnr", "histeq", "dct", "compress_unfused"] {
+        let shapes = rt.manifest.shapes(kind);
+        if !shapes.is_empty() {
+            println!("  {kind:<18} {} shapes", shapes.len());
+        }
+    }
+    Ok(())
+}

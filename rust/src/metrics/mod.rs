@@ -1,0 +1,189 @@
+//! Quality and performance metrics: MSE / PSNR (paper §4.1 eq. 23-24),
+//! SSIM, compression ratio, and latency accumulators for the coordinator.
+
+pub mod stats;
+
+use crate::image::GrayImage;
+
+/// PSNR cap for identical images (MSE = 0), matching the python oracle.
+pub const PSNR_CAP_DB: f64 = 99.0;
+
+/// Mean squared error between two same-sized images (paper eq. 24).
+pub fn mse(a: &GrayImage, b: &GrayImage) -> f64 {
+    assert_eq!(
+        (a.width, a.height),
+        (b.width, b.height),
+        "MSE over mismatched sizes"
+    );
+    let sum: f64 = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum();
+    sum / a.pixels() as f64
+}
+
+/// PSNR in dB with MAX = 255 (paper eq. 23). Identical images cap at
+/// [`PSNR_CAP_DB`].
+pub fn psnr(a: &GrayImage, b: &GrayImage) -> f64 {
+    psnr_with_max(a, b, 255.0)
+}
+
+pub fn psnr_with_max(a: &GrayImage, b: &GrayImage, max_value: f64) -> f64 {
+    let m = mse(a, b);
+    if m <= 0.0 {
+        return PSNR_CAP_DB;
+    }
+    (20.0 * max_value.log10() - 10.0 * m.log10()).min(PSNR_CAP_DB)
+}
+
+/// Mean SSIM over 8x8 windows (stride 4), standard constants.
+pub fn ssim(a: &GrayImage, b: &GrayImage) -> f64 {
+    assert_eq!((a.width, a.height), (b.width, b.height));
+    const C1: f64 = 6.5025; // (0.01 * 255)^2
+    const C2: f64 = 58.5225; // (0.03 * 255)^2
+    const WIN: usize = 8;
+    const STRIDE: usize = 4;
+    if a.width < WIN || a.height < WIN {
+        // degenerate: global statistics
+        return ssim_window(a, b, 0, 0, a.width.min(a.height));
+    }
+    let mut total = 0.0;
+    let mut count = 0usize;
+    let mut y = 0;
+    while y + WIN <= a.height {
+        let mut x = 0;
+        while x + WIN <= a.width {
+            total += ssim_window_at(a, b, x, y, WIN, C1, C2);
+            count += 1;
+            x += STRIDE;
+        }
+        y += STRIDE;
+    }
+    total / count.max(1) as f64
+}
+
+fn ssim_window(a: &GrayImage, b: &GrayImage, x: usize, y: usize,
+               win: usize) -> f64 {
+    ssim_window_at(a, b, x, y, win, 6.5025, 58.5225)
+}
+
+fn ssim_window_at(
+    a: &GrayImage,
+    b: &GrayImage,
+    x0: usize,
+    y0: usize,
+    win: usize,
+    c1: f64,
+    c2: f64,
+) -> f64 {
+    let n = (win * win) as f64;
+    let (mut sa, mut sb) = (0.0, 0.0);
+    for y in y0..y0 + win {
+        for x in x0..x0 + win {
+            sa += a.get(x, y) as f64;
+            sb += b.get(x, y) as f64;
+        }
+    }
+    let (ma, mb) = (sa / n, sb / n);
+    let (mut va, mut vb, mut cov) = (0.0, 0.0, 0.0);
+    for y in y0..y0 + win {
+        for x in x0..x0 + win {
+            let da = a.get(x, y) as f64 - ma;
+            let db = b.get(x, y) as f64 - mb;
+            va += da * da;
+            vb += db * db;
+            cov += da * db;
+        }
+    }
+    va /= n - 1.0;
+    vb /= n - 1.0;
+    cov /= n - 1.0;
+    ((2.0 * ma * mb + c1) * (2.0 * cov + c2))
+        / ((ma * ma + mb * mb + c1) * (va + vb + c2))
+}
+
+/// Compression ratio: raw bytes / compressed bytes.
+pub fn compression_ratio(raw_bytes: usize, compressed_bytes: usize) -> f64 {
+    raw_bytes as f64 / compressed_bytes.max(1) as f64
+}
+
+/// Bits per pixel of a compressed representation.
+pub fn bits_per_pixel(compressed_bytes: usize, pixels: usize) -> f64 {
+    compressed_bytes as f64 * 8.0 / pixels.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synthetic;
+
+    #[test]
+    fn identical_images_cap() {
+        let img = synthetic::lena_like(32, 32, 1);
+        assert_eq!(psnr(&img, &img), PSNR_CAP_DB);
+        assert!((ssim(&img, &img) - 1.0).abs() < 1e-9);
+        assert_eq!(mse(&img, &img), 0.0);
+    }
+
+    #[test]
+    fn known_psnr_value() {
+        // uniform difference of 16 -> MSE 256 -> PSNR = 20log10(255/16)
+        let a = GrayImage::from_vec(8, 8, vec![100; 64]).unwrap();
+        let b = GrayImage::from_vec(8, 8, vec![116; 64]).unwrap();
+        let want = 20.0 * (255.0f64 / 16.0).log10();
+        assert!((psnr(&a, &b) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn psnr_symmetric() {
+        let a = synthetic::lena_like(40, 40, 2);
+        let b = synthetic::cablecar_like(40, 40, 2);
+        assert!((psnr(&a, &b) - psnr(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_noise_lower_psnr_and_ssim() {
+        let a = synthetic::lena_like(64, 64, 3);
+        let mut rng = crate::util::prng::Rng::new(5);
+        let mut noisy = |amp: i64| {
+            let mut img = a.clone();
+            let mut r = rng.fork(amp as u64);
+            for v in &mut img.data {
+                let n = r.range_i64(-amp, amp);
+                *v = (*v as i64 + n).clamp(0, 255) as u8;
+            }
+            img
+        };
+        let small = noisy(5);
+        let big = noisy(40);
+        assert!(psnr(&a, &small) > psnr(&a, &big));
+        assert!(ssim(&a, &small) > ssim(&a, &big));
+    }
+
+    #[test]
+    fn ssim_in_unit_range() {
+        let a = synthetic::lena_like(48, 48, 7);
+        let b = synthetic::cablecar_like(48, 48, 7);
+        let s = ssim(&a, &b);
+        assert!((-1.0..=1.0).contains(&s), "ssim {s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched")]
+    fn mse_size_mismatch_panics() {
+        let a = GrayImage::new(8, 8);
+        let b = GrayImage::new(8, 9);
+        mse(&a, &b);
+    }
+
+    #[test]
+    fn ratio_helpers() {
+        assert_eq!(compression_ratio(1000, 100), 10.0);
+        assert_eq!(bits_per_pixel(100, 800), 1.0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Latency/throughput accumulators for the coordinator's service metrics.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Reservoir-free latency histogram with fixed log-spaced buckets
+/// (microseconds to ~100s), plus exact count/sum/min/max.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    bounds_us: Vec<f64>,
+    count: u64,
+    sum_us: f64,
+    min_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        // 1us .. ~100s, 5 buckets per decade
+        let mut bounds = Vec::new();
+        let mut b = 1.0f64;
+        while b < 1e8 {
+            for m in [1.0, 1.6, 2.5, 4.0, 6.3] {
+                bounds.push(b * m);
+            }
+            b *= 10.0;
+        }
+        LatencyHistogram {
+            buckets: vec![0; bounds.len() + 1],
+            bounds_us: bounds,
+            count: 0,
+            sum_us: 0.0,
+            min_us: f64::INFINITY,
+            max_us: 0.0,
+        }
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let idx = self
+            .bounds_us
+            .partition_point(|&b| b < us);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn record_since(&mut self, start: Instant) {
+        self.record_us(start.elapsed().as_secs_f64() * 1e6);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64 / 1e3
+        }
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max_us / 1e3
+        }
+    }
+
+    /// Approximate percentile from the histogram (upper bucket bound).
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (p / 100.0 * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                let bound = if i < self.bounds_us.len() {
+                    self.bounds_us[i]
+                } else {
+                    self.max_us
+                };
+                return bound.min(self.max_us) / 1e3;
+            }
+        }
+        self.max_us / 1e3
+    }
+}
+
+/// Thread-safe wrapper used by the coordinator.
+#[derive(Debug, Default)]
+pub struct SharedHistogram(Mutex<LatencyHistogram>);
+
+impl SharedHistogram {
+    pub fn record_us(&self, us: f64) {
+        self.0.lock().unwrap().record_us(us);
+    }
+
+    pub fn record_since(&self, start: Instant) {
+        self.0.lock().unwrap().record_since(start);
+    }
+
+    pub fn snapshot(&self) -> (u64, f64, f64, f64) {
+        let h = self.0.lock().unwrap();
+        (h.count(), h.mean_ms(), h.percentile_ms(95.0), h.max_ms())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_counts() {
+        let mut h = LatencyHistogram::new();
+        for us in [10.0, 100.0, 1000.0, 10_000.0] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean_ms() - 2.7775).abs() < 1e-6);
+        assert_eq!(h.max_ms(), 10.0);
+    }
+
+    #[test]
+    fn percentile_monotone() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record_us(i as f64 * 10.0);
+        }
+        let p50 = h.percentile_ms(50.0);
+        let p95 = h.percentile_ms(95.0);
+        let p99 = h.percentile_ms(99.0);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        // p50 of uniform 0.01..10ms is ~5ms; log buckets are coarse
+        assert!((2.0..8.0).contains(&p50), "p50 {p50}");
+    }
+
+    #[test]
+    fn empty_histogram_safe() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.mean_ms(), 0.0);
+        assert_eq!(h.percentile_ms(99.0), 0.0);
+    }
+
+    #[test]
+    fn shared_wrapper() {
+        let h = SharedHistogram::default();
+        h.record_us(500.0);
+        let (n, mean, _p95, max) = h.snapshot();
+        assert_eq!(n, 1);
+        assert!((mean - 0.5).abs() < 1e-9);
+        assert!((max - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,221 @@
+//! PJRT client wrapper + compiled-executable cache.
+//!
+//! One `Runtime` per process: holds the PJRT CPU client and lazily
+//! compiles artifacts on first use (HLO text -> HloModuleProto ->
+//! XlaComputation -> PjRtLoadedExecutable), caching by artifact name.
+//! Executables are shared across worker threads via `Arc`.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::log_debug;
+
+use super::manifest::{Artifact, Manifest};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub artifact: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+    /// Wall time spent compiling (ms) — surfaced in `info` output.
+    pub compile_ms: f64,
+}
+
+impl Executable {
+    /// Execute with rank-2 f32 inputs; returns the flat f32 buffers of
+    /// each tuple element.
+    pub fn run_f32(&self, inputs: &[(&[f32], usize, usize)])
+                   -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, h, w) in inputs {
+            anyhow::ensure!(
+                buf.len() == h * w,
+                "input buffer {} != {h}x{w}",
+                buf.len()
+            );
+            literals.push(
+                xla::Literal::vec1(buf)
+                    .reshape(&[*h as i64, *w as i64])
+                    .context("reshaping input literal")?,
+            );
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .context("PJRT execute")?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = result.to_tuple().context("untupling result")?;
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+/// The process-wide runtime: PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT runtime over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Number of executables compiled so far.
+    pub fn cached_count(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Get (compiling if needed) the executable for a named artifact.
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(Arc::clone(e));
+        }
+        let artifact = self
+            .manifest
+            .get(name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))?
+            .clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            artifact
+                .path
+                .to_str()
+                .context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parsing {}", artifact.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        log_debug!("runtime", "compiled {name} in {compile_ms:.1}ms");
+        let e = Arc::new(Executable {
+            artifact,
+            exe,
+            compile_ms,
+        });
+        // racing threads may have compiled concurrently; first in wins
+        Ok(Arc::clone(
+            self.cache
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_insert(e),
+        ))
+    }
+
+    /// Find-and-compile by kind/variant/shape.
+    pub fn executable_for(
+        &self,
+        kind: &str,
+        variant: Option<&str>,
+        height: usize,
+        width: usize,
+    ) -> Result<Arc<Executable>> {
+        let name = self
+            .manifest
+            .find(kind, variant, height, width)
+            .map(|a| a.name.clone())
+            .with_context(|| {
+                format!(
+                    "no artifact kind={kind} variant={variant:?} \
+                     shape={height}x{width}; available shapes: {:?}",
+                    self.manifest.shapes(kind)
+                )
+            })?;
+        self.executable(&name)
+    }
+
+    /// Warm the cache for a set of artifacts (serving cold-start control).
+    pub fn warmup(&self, names: &[&str]) -> Result<f64> {
+        let t0 = Instant::now();
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(t0.elapsed().as_secs_f64() * 1e3)
+    }
+}
+
+// PJRT clients and executables are internally synchronized.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<std::path::PathBuf> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn compile_and_cache() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::new(dir).unwrap();
+        assert_eq!(rt.cached_count(), 0);
+        let e1 = rt.executable("compress_dct_200x200").unwrap();
+        assert_eq!(rt.cached_count(), 1);
+        let e2 = rt.executable("compress_dct_200x200").unwrap();
+        assert!(Arc::ptr_eq(&e1, &e2), "second lookup must hit cache");
+    }
+
+    #[test]
+    fn execute_compress_artifact() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = Runtime::new(dir).unwrap();
+        let exe = rt.executable("compress_dct_200x200").unwrap();
+        let img: Vec<f32> =
+            (0..200 * 200).map(|i| (i % 251) as f32).collect();
+        let outs = exe.run_f32(&[(&img, 200, 200)]).unwrap();
+        assert_eq!(outs.len(), 2, "recon + qcoef");
+        assert_eq!(outs[0].len(), 200 * 200);
+        // reconstruction stays in pixel range
+        assert!(outs[0].iter().all(|&v| (0.0..=255.0).contains(&v)));
+        // quantized coefficients are integers
+        assert!(outs[1].iter().all(|&v| v.fract() == 0.0));
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let rt = Runtime::new(dir).unwrap();
+        assert!(rt.executable("no_such_artifact").is_err());
+        assert!(rt.executable_for("compress", Some("dct"), 7, 7).is_err());
+    }
+}

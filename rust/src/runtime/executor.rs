@@ -1,0 +1,220 @@
+//! Typed executor: the GrayImage-level API over the PJRT runtime.
+//! Owns pad-to-artifact-shape / crop-back and literal marshaling; this is
+//! the boundary the coordinator's GPU lane talks to.
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::dct::blocks::align8;
+use crate::image::GrayImage;
+use crate::metrics::PSNR_CAP_DB;
+
+use super::client::Runtime;
+
+/// Result of a GPU-lane compression.
+pub struct CompressOutcome {
+    /// Reconstruction cropped to the input size.
+    pub recon: GrayImage,
+    /// Planar quantized coefficients at the padded artifact shape.
+    pub qcoef: Vec<f32>,
+    pub padded_width: usize,
+    pub padded_height: usize,
+    /// Pure execute wall time (excludes padding/marshaling), ms.
+    pub execute_ms: f64,
+}
+
+/// GrayImage-level operations over the runtime.
+pub struct Executor {
+    pub rt: Arc<Runtime>,
+}
+
+impl Executor {
+    pub fn new(rt: Arc<Runtime>) -> Executor {
+        Executor { rt }
+    }
+
+    /// Pick the artifact shape for an image: exact padded size.
+    fn padded_shape(&self, img: &GrayImage) -> (usize, usize) {
+        (align8(img.height), align8(img.width))
+    }
+
+    /// Full compression pipeline on the PJRT lane.
+    pub fn compress(&self, img: &GrayImage, variant: &str)
+                    -> Result<CompressOutcome> {
+        let (ph, pw) = self.padded_shape(img);
+        let exe = self
+            .rt
+            .executable_for("compress", Some(variant), ph, pw)?;
+        let padded = if (pw, ph) != (img.width, img.height) {
+            img.pad_edge(pw, ph)?
+        } else {
+            img.clone()
+        };
+        let input = padded.to_f32();
+        let t0 = std::time::Instant::now();
+        let mut outs = exe.run_f32(&[(&input, ph, pw)])?;
+        let execute_ms = t0.elapsed().as_secs_f64() * 1e3;
+        anyhow::ensure!(outs.len() == 2, "compress emits (recon, qcoef)");
+        let qcoef = outs.pop().expect("qcoef output");
+        let recon_padded = GrayImage::from_f32(pw, ph, &outs[0])?;
+        let recon = if (pw, ph) != (img.width, img.height) {
+            recon_padded.crop(img.width, img.height)?
+        } else {
+            recon_padded
+        };
+        Ok(CompressOutcome {
+            recon,
+            qcoef,
+            padded_width: pw,
+            padded_height: ph,
+            execute_ms,
+        })
+    }
+
+    /// PSNR between two same-sized images on the PJRT lane.
+    pub fn psnr(&self, a: &GrayImage, b: &GrayImage) -> Result<f64> {
+        anyhow::ensure!(
+            (a.width, a.height) == (b.width, b.height),
+            "psnr over mismatched sizes"
+        );
+        let (ph, pw) = self.padded_shape(a);
+        let exe = self.rt.executable_for("psnr", None, ph, pw)?;
+        let (pa, pb) = if (pw, ph) != (a.width, a.height) {
+            (a.pad_edge(pw, ph)?, b.pad_edge(pw, ph)?)
+        } else {
+            (a.clone(), b.clone())
+        };
+        let fa = pa.to_f32();
+        let fb = pb.to_f32();
+        let outs = exe.run_f32(&[(&fa, ph, pw), (&fb, ph, pw)])?;
+        let v = *outs
+            .first()
+            .and_then(|o| o.first())
+            .context("psnr output missing")?;
+        Ok((v as f64).min(PSNR_CAP_DB))
+    }
+
+    /// Histogram equalization on the PJRT lane.
+    pub fn histeq(&self, img: &GrayImage) -> Result<(GrayImage, f64)> {
+        let (ph, pw) = self.padded_shape(img);
+        let exe = self.rt.executable_for("histeq", None, ph, pw)?;
+        let padded = if (pw, ph) != (img.width, img.height) {
+            img.pad_edge(pw, ph)?
+        } else {
+            img.clone()
+        };
+        let input = padded.to_f32();
+        let t0 = std::time::Instant::now();
+        let outs = exe.run_f32(&[(&input, ph, pw)])?;
+        let execute_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let out_padded = GrayImage::from_f32(pw, ph, &outs[0])?;
+        let out = if (pw, ph) != (img.width, img.height) {
+            out_padded.crop(img.width, img.height)?
+        } else {
+            out_padded
+        };
+        Ok((out, execute_ms))
+    }
+
+    /// Bare forward DCT (microbench entry; 512x512 artifacts only).
+    pub fn dct_only(&self, img: &GrayImage, variant: &str)
+                    -> Result<Vec<f32>> {
+        let (ph, pw) = self.padded_shape(img);
+        let exe = self.rt.executable_for("dct", Some(variant), ph, pw)?;
+        let input = img.to_f32();
+        let outs = exe.run_f32(&[(&input, ph, pw)])?;
+        Ok(outs.into_iter().next().context("dct output")?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::{histeq as cpu_histeq, synthetic};
+    use crate::metrics;
+
+    fn executor() -> Option<Executor> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Executor::new(Arc::new(Runtime::new(dir).unwrap())))
+    }
+
+    #[test]
+    fn compress_matches_cpu_lane() {
+        let Some(ex) = executor() else { return };
+        let img = synthetic::lena_like(200, 200, 1);
+        let gpu = ex.compress(&img, "dct").unwrap();
+        let cpu = crate::dct::pipeline::CpuPipeline::new(
+            crate::dct::Variant::Dct,
+            50,
+        )
+        .compress(&img);
+        // identical arithmetic up to XLA reduction-order ties
+        let p_cross = metrics::psnr(&gpu.recon, &cpu.recon);
+        assert!(p_cross > 50.0, "lanes disagree: {p_cross} dB");
+        let p_gpu = metrics::psnr(&img, &gpu.recon);
+        let p_cpu = metrics::psnr(&img, &cpu.recon);
+        assert!((p_gpu - p_cpu).abs() < 0.2, "{p_gpu} vs {p_cpu}");
+    }
+
+    #[test]
+    fn cordic_lane_matches_cpu_cordic() {
+        let Some(ex) = executor() else { return };
+        let img = synthetic::lena_like(200, 200, 2);
+        let gpu = ex.compress(&img, "cordic").unwrap();
+        let cpu = crate::dct::pipeline::CpuPipeline::new(
+            crate::dct::Variant::Cordic,
+            50,
+        )
+        .compress(&img);
+        let p_cross = metrics::psnr(&gpu.recon, &cpu.recon);
+        assert!(p_cross > 45.0, "cordic lanes disagree: {p_cross} dB");
+    }
+
+    #[test]
+    fn psnr_lane_matches_cpu_metric() {
+        let Some(ex) = executor() else { return };
+        let a = synthetic::lena_like(200, 200, 3);
+        let b = synthetic::cablecar_like(200, 200, 3);
+        let gpu = ex.psnr(&a, &b).unwrap();
+        let cpu = metrics::psnr(&a, &b);
+        assert!((gpu - cpu).abs() < 0.01, "{gpu} vs {cpu}");
+        let same = ex.psnr(&a, &a).unwrap();
+        assert_eq!(same, crate::metrics::PSNR_CAP_DB);
+    }
+
+    #[test]
+    fn histeq_lane_matches_cpu() {
+        let Some(ex) = executor() else { return };
+        let img = synthetic::cablecar_like(200, 200, 4);
+        let (gpu, _ms) = ex.histeq(&img).unwrap();
+        let cpu = cpu_histeq::histeq(&img);
+        let diff = gpu
+            .data
+            .iter()
+            .zip(&cpu.data)
+            .filter(|(a, b)| a != b)
+            .count();
+        assert!(
+            diff * 1000 < img.pixels(),
+            "{diff} of {} pixels differ",
+            img.pixels()
+        );
+    }
+
+    #[test]
+    fn unpadded_shape_uses_pad_crop() {
+        let Some(ex) = executor() else { return };
+        // 1024x814 -> padded artifact 1024x816
+        let img = synthetic::lena_like(814, 1024, 5);
+        let out = ex.compress(&img, "dct").unwrap();
+        assert_eq!((out.recon.width, out.recon.height), (814, 1024));
+        assert_eq!((out.padded_width, out.padded_height), (816, 1024));
+        assert!(metrics::psnr(&img, &out.recon) > 28.0);
+    }
+}

@@ -1,0 +1,259 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed with the in-crate JSON substrate.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT artifact as described by manifest.json.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    /// Path to the HLO text file (absolute, resolved against the manifest
+    /// directory).
+    pub path: PathBuf,
+    pub kind: String,
+    pub variant: Option<String>,
+    pub quality: Option<u8>,
+    pub height: usize,
+    pub width: usize,
+    /// Input shapes, row-major (H, W).
+    pub inputs: Vec<(usize, usize)>,
+    pub outputs: Vec<String>,
+}
+
+/// Parsed manifest with lookup indices.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub quality: u8,
+    by_name: BTreeMap<String, Artifact>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let quality = j
+            .get("quality")
+            .and_then(Json::as_f64)
+            .unwrap_or(50.0) as u8;
+        let mut by_name = BTreeMap::new();
+        for a in j
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifacts must be an array"))?
+        {
+            let name = a
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact name must be string"))?
+                .to_string();
+            let file = a
+                .req("file")?
+                .as_str()
+                .ok_or_else(|| anyhow!("artifact file must be string"))?;
+            let mut inputs = Vec::new();
+            for inp in a
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs must be array"))?
+            {
+                let shape = inp
+                    .req("shape")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("shape must be array"))?;
+                if shape.len() != 2 {
+                    bail!("artifact {name}: only rank-2 inputs supported");
+                }
+                inputs.push((
+                    shape[0]
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("bad shape dim"))?,
+                    shape[1]
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("bad shape dim"))?,
+                ));
+            }
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .map(|v| {
+                    v.iter()
+                        .filter_map(Json::as_str)
+                        .map(str::to_string)
+                        .collect()
+                })
+                .unwrap_or_default();
+            let art = Artifact {
+                path: dir.join(file),
+                kind: a
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unknown")
+                    .to_string(),
+                variant: a
+                    .get("variant")
+                    .and_then(Json::as_str)
+                    .map(str::to_string),
+                quality: a
+                    .get("quality")
+                    .and_then(Json::as_f64)
+                    .map(|q| q as u8),
+                height: a
+                    .get("height")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(inputs.first().map(|s| s.0).unwrap_or(0)),
+                width: a
+                    .get("width")
+                    .and_then(Json::as_usize)
+                    .unwrap_or(inputs.first().map(|s| s.1).unwrap_or(0)),
+                name: name.clone(),
+                inputs,
+                outputs,
+            };
+            by_name.insert(name, art);
+        }
+        if by_name.is_empty() {
+            bail!("manifest has no artifacts");
+        }
+        Ok(Manifest {
+            dir,
+            quality,
+            by_name,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Artifact> {
+        self.by_name.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(String::as_str)
+    }
+
+    /// Find an artifact by kind/variant for an exact padded shape.
+    pub fn find(
+        &self,
+        kind: &str,
+        variant: Option<&str>,
+        height: usize,
+        width: usize,
+    ) -> Option<&Artifact> {
+        self.by_name.values().find(|a| {
+            a.kind == kind
+                && a.height == height
+                && a.width == width
+                && variant
+                    .map(|v| a.variant.as_deref() == Some(v))
+                    .unwrap_or(true)
+        })
+    }
+
+    /// All supported (height, width) shapes for a kind.
+    pub fn shapes(&self, kind: &str) -> Vec<(usize, usize)> {
+        let mut v: Vec<_> = self
+            .by_name
+            .values()
+            .filter(|a| a.kind == kind)
+            .map(|a| (a.height, a.width))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "quality": 50, "dtype": "f32",
+      "artifacts": [
+        {"name": "compress_dct_512x512", "file": "compress_dct_512x512.hlo.txt",
+         "kind": "compress", "variant": "dct", "quality": 50,
+         "height": 512, "width": 512,
+         "inputs": [{"shape": [512, 512], "dtype": "f32"}],
+         "outputs": ["recon", "qcoef"]},
+        {"name": "psnr_512x512", "file": "psnr_512x512.hlo.txt",
+         "kind": "psnr", "height": 512, "width": 512,
+         "inputs": [{"shape": [512, 512], "dtype": "f32"},
+                     {"shape": [512, 512], "dtype": "f32"}],
+         "outputs": ["psnr_db"]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.quality, 50);
+        let a = m.get("compress_dct_512x512").unwrap();
+        assert_eq!(a.kind, "compress");
+        assert_eq!(a.variant.as_deref(), Some("dct"));
+        assert_eq!(a.inputs, vec![(512, 512)]);
+        assert_eq!(a.path, PathBuf::from("/tmp/a/compress_dct_512x512.hlo.txt"));
+    }
+
+    #[test]
+    fn find_by_kind_variant_shape() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        assert!(m.find("compress", Some("dct"), 512, 512).is_some());
+        assert!(m.find("compress", Some("cordic"), 512, 512).is_none());
+        assert!(m.find("psnr", None, 512, 512).is_some());
+        assert!(m.find("compress", Some("dct"), 256, 256).is_none());
+    }
+
+    #[test]
+    fn shapes_listing() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        assert_eq!(m.shapes("compress"), vec![(512, 512)]);
+        assert!(m.shapes("histeq").is_empty());
+    }
+
+    #[test]
+    fn rejects_empty_and_garbage() {
+        assert!(Manifest::parse("{}", PathBuf::new()).is_err());
+        assert!(Manifest::parse("{\"artifacts\": []}", PathBuf::new())
+            .is_err());
+        assert!(Manifest::parse("not json", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // integration: parse the actual artifacts/manifest.json when built
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.len() >= 40, "expected full artifact set");
+            assert!(m.find("compress", Some("dct"), 200, 200).is_some());
+            assert!(m.find("compress", Some("cordic"), 3072, 3072).is_some());
+            assert!(m.find("histeq", None, 320, 288).is_some());
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! The PJRT runtime: loads AOT-compiled HLO-text artifacts (produced by
+//! `make artifacts` from the JAX/Pallas layers) and executes them on the
+//! XLA CPU client. This is the paper's "GPU lane" — the massively-parallel
+//! kernel path — adapted per DESIGN.md §Hardware-Adaptation.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json`, resolves artifacts
+//!   by kind/variant/shape.
+//! * [`client`] — PJRT client wrapper with a compiled-executable cache
+//!   (compilation is milliseconds-to-seconds; serving amortizes it).
+//! * [`executor`] — typed entry points: compress / psnr / histeq over
+//!   `GrayImage`s, including pad/crop and literal marshaling.
+
+pub mod client;
+pub mod executor;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use executor::{CompressOutcome, Executor};
+pub use manifest::{Artifact, Manifest};

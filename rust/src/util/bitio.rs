@@ -1,0 +1,197 @@
+//! MSB-first bit-level I/O for the entropy codec.
+//!
+//! The writer packs bits big-endian within each byte (JPEG convention);
+//! the reader mirrors it. Both track total bit counts so the codec can
+//! report exact compressed sizes.
+
+use anyhow::{bail, Result};
+
+/// Accumulates bits MSB-first into a byte vector.
+#[derive(Default, Debug)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `value` (n <= 57).
+    #[inline]
+    pub fn put(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 57, "put() supports at most 57 bits");
+        debug_assert!(n == 64 || value < (1u64 << n));
+        self.acc = (self.acc << n) | value;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.nbits -= 8;
+            self.buf.push((self.acc >> self.nbits) as u8);
+        }
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn put_bit(&mut self, bit: bool) {
+        self.put(bit as u64, 1);
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Pad with zero bits to a byte boundary and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            let pad = 8 - self.nbits;
+            self.acc <<= pad;
+            self.buf.push(self.acc as u8);
+            self.nbits = 0;
+        }
+        self.buf
+    }
+}
+
+/// Reads bits MSB-first from a byte slice.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    byte: usize,
+    bit: u32, // bits consumed of current byte (0..8)
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, byte: 0, bit: 0 }
+    }
+
+    /// Bits remaining.
+    pub fn remaining(&self) -> usize {
+        (self.buf.len() - self.byte) * 8 - self.bit as usize
+    }
+
+    /// Read `n` bits (n <= 57) as an unsigned value.
+    #[inline]
+    pub fn get(&mut self, n: u32) -> Result<u64> {
+        if self.remaining() < n as usize {
+            bail!(
+                "bitstream exhausted: wanted {n} bits, {} left",
+                self.remaining()
+            );
+        }
+        let mut out: u64 = 0;
+        let mut need = n;
+        while need > 0 {
+            let avail = 8 - self.bit;
+            let take = need.min(avail);
+            let cur = self.buf[self.byte];
+            let shifted = (cur >> (avail - take)) & ((1u16 << take) - 1) as u8;
+            out = (out << take) | shifted as u64;
+            self.bit += take;
+            if self.bit == 8 {
+                self.bit = 0;
+                self.byte += 1;
+            }
+            need -= take;
+        }
+        Ok(out)
+    }
+
+    /// Read one bit.
+    #[inline]
+    pub fn get_bit(&mut self) -> Result<bool> {
+        Ok(self.get(1)? == 1)
+    }
+
+    /// Skip to the next byte boundary (used after entropy-coded segments).
+    pub fn align(&mut self) {
+        if self.bit != 0 {
+            self.bit = 0;
+            self.byte += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut w = BitWriter::new();
+        w.put(0b101, 3);
+        w.put(0xFF, 8);
+        w.put(0, 1);
+        w.put(0b11_0011, 6);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(3).unwrap(), 0b101);
+        assert_eq!(r.get(8).unwrap(), 0xFF);
+        assert_eq!(r.get(1).unwrap(), 0);
+        assert_eq!(r.get(6).unwrap(), 0b11_0011);
+    }
+
+    #[test]
+    fn roundtrip_random_fields() {
+        let mut rng = Rng::new(99);
+        let fields: Vec<(u64, u32)> = (0..2_000)
+            .map(|_| {
+                let n = rng.range_i64(1, 57) as u32;
+                let v = rng.next_u64() & ((1u64 << n) - 1);
+                (v, n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        for &(v, n) in &fields {
+            w.put(v, n);
+        }
+        let total = w.bit_len();
+        let bytes = w.finish();
+        assert_eq!(bytes.len(), total.div_ceil(8));
+        let mut r = BitReader::new(&bytes);
+        for &(v, n) in &fields {
+            assert_eq!(r.get(n).unwrap(), v, "field of {n} bits");
+        }
+    }
+
+    #[test]
+    fn bit_len_counts() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.put(1, 1);
+        assert_eq!(w.bit_len(), 1);
+        w.put(0x7F, 7);
+        assert_eq!(w.bit_len(), 8);
+        w.put(3, 2);
+        assert_eq!(w.bit_len(), 10);
+    }
+
+    #[test]
+    fn exhaustion_errors() {
+        let bytes = [0xABu8];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(8).unwrap(), 0xAB);
+        assert!(r.get(1).is_err());
+    }
+
+    #[test]
+    fn align_skips_partial_byte() {
+        let bytes = [0b1010_0000u8, 0xCD];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get(3).unwrap(), 0b101);
+        r.align();
+        assert_eq!(r.get(8).unwrap(), 0xCD);
+    }
+
+    #[test]
+    fn padding_is_zero() {
+        let mut w = BitWriter::new();
+        w.put(1, 1);
+        let bytes = w.finish();
+        assert_eq!(bytes, vec![0b1000_0000]);
+    }
+}

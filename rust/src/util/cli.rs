@@ -1,0 +1,288 @@
+//! Declarative command-line parsing — the crate's clap stand-in.
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, positional arguments, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Specification for one option/flag.
+#[derive(Clone, Debug)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// A declarative command spec: options, flags and positionals.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(&'static str, &'static str, bool)>, // name, help, required
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command {
+            name,
+            about,
+            ..Default::default()
+        }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &'static str, default: &str,
+               help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// `--name <value>` required (no default).
+    pub fn opt_req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Positional argument.
+    pub fn pos(mut self, name: &'static str, help: &'static str,
+               required: bool) -> Self {
+        self.positionals.push((name, help, required));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about,
+                            self.name);
+        for (p, _, req) in &self.positionals {
+            if *req {
+                s += &format!(" <{p}>");
+            } else {
+                s += &format!(" [{p}]");
+            }
+        }
+        if !self.opts.is_empty() {
+            s += " [OPTIONS]\n\nOPTIONS:\n";
+            for o in &self.opts {
+                let head = if o.is_flag {
+                    format!("  --{}", o.name)
+                } else if let Some(d) = &o.default {
+                    format!("  --{} <v> (default {})", o.name, d)
+                } else {
+                    format!("  --{} <v> (required)", o.name)
+                };
+                s += &format!("{head:<42} {}\n", o.help);
+            }
+        }
+        for (p, h, _) in &self.positionals {
+            s += &format!("  <{p:<38}> {h}\n");
+        }
+        s
+    }
+
+    /// Parse an argument list (not including argv[0]/subcommand name).
+    pub fn parse(&self, args: &[String]) -> Result<Matches> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: Vec<String> = Vec::new();
+        let mut pos: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| {
+                        anyhow!("unknown option --{key}\n\n{}", self.usage())
+                    })?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        bail!("flag --{key} takes no value");
+                    }
+                    flags.push(key);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .ok_or_else(|| {
+                                    anyhow!("option --{key} needs a value")
+                                })?
+                                .clone()
+                        }
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                pos.push(a.clone());
+            }
+            i += 1;
+        }
+        // defaults + required checks
+        for o in &self.opts {
+            if o.is_flag {
+                continue;
+            }
+            if !values.contains_key(o.name) {
+                match &o.default {
+                    Some(d) => {
+                        values.insert(o.name.to_string(), d.clone());
+                    }
+                    None => bail!("missing required option --{}\n\n{}",
+                                  o.name, self.usage()),
+                }
+            }
+        }
+        let required = self.positionals.iter().filter(|p| p.2).count();
+        if pos.len() < required {
+            bail!("missing positional argument(s)\n\n{}", self.usage());
+        }
+        if pos.len() > self.positionals.len() {
+            bail!("too many positional arguments\n\n{}", self.usage());
+        }
+        Ok(Matches { values, flags, pos })
+    }
+}
+
+/// Parsed arguments.
+#[derive(Debug)]
+pub struct Matches {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pos: Vec<String>,
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.get(name)
+            .parse()
+            .map_err(|e| anyhow!("--{name}: {e}"))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.pos.get(i).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strs(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("compress", "compress an image")
+            .opt("quality", "50", "JPEG quality")
+            .opt("variant", "dct", "transform variant")
+            .opt_req("input", "input file")
+            .flag("verbose", "chatty output")
+            .pos("output", "output path", false)
+    }
+
+    #[test]
+    fn parses_defaults_and_required() {
+        let m = cmd().parse(&strs(&["--input", "a.png"])).unwrap();
+        assert_eq!(m.get("quality"), "50");
+        assert_eq!(m.get("input"), "a.png");
+        assert!(!m.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_eq_syntax_and_flags() {
+        let m = cmd()
+            .parse(&strs(&["--input=x.pgm", "--quality=90", "--verbose",
+                           "out.bin"]))
+            .unwrap();
+        assert_eq!(m.get_usize("quality").unwrap(), 90);
+        assert!(m.flag("verbose"));
+        assert_eq!(m.pos(0), Some("out.bin"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cmd().parse(&strs(&[])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd()
+            .parse(&strs(&["--input", "a", "--bogus", "1"]))
+            .is_err());
+    }
+
+    #[test]
+    fn flag_with_value_errors() {
+        assert!(cmd().parse(&strs(&["--input=a", "--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn too_many_positionals_errors() {
+        assert!(cmd()
+            .parse(&strs(&["--input=a", "one", "two"]))
+            .is_err());
+    }
+
+    #[test]
+    fn help_bails_with_usage() {
+        let err = cmd().parse(&strs(&["--help"])).unwrap_err();
+        assert!(err.to_string().contains("USAGE"));
+        assert!(err.to_string().contains("--quality"));
+    }
+}

@@ -1,0 +1,23 @@
+//! Infrastructure substrates.
+//!
+//! The build environment is fully offline with a fixed vendored crate set
+//! (no serde, clap, criterion, proptest, rayon, tokio), so this module owns
+//! the pieces a framework normally pulls from crates.io:
+//!
+//! * [`json`] — minimal JSON parser/serializer (manifest + results files)
+//! * [`cli`] — declarative argument parser for the launcher binaries
+//! * [`prng`] — splitmix64/xoshiro256** deterministic PRNG
+//! * [`bitio`] — MSB-first bit reader/writer for the entropy codec
+//! * [`timer`] — wall-clock measurement with warmup + robust statistics
+//! * [`threadpool`] — fixed worker pool with panic propagation
+//! * [`proptest`] — seeded generate-and-shrink property-test harness
+//! * [`logging`] — leveled stderr logger for the coordinator
+
+pub mod bitio;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod proptest;
+pub mod threadpool;
+pub mod timer;

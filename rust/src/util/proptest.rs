@@ -1,0 +1,292 @@
+//! Seeded generate-and-shrink property testing — the crate's proptest
+//! stand-in.
+//!
+//! `check(cases, gen, prop)` draws `cases` inputs from `gen`, runs the
+//! property, and on failure greedily shrinks the input via the
+//! [`Shrink`] trait before panicking with the minimal counterexample.
+//! The seed comes from `CORDIC_DCT_PROPTEST_SEED` if set (for replay),
+//! otherwise a fixed default keeps CI deterministic.
+
+use std::fmt::Debug;
+
+use crate::util::prng::Rng;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone {
+    /// Candidate shrinks, roughly largest-step first. Empty when minimal.
+    fn shrinks(&self) -> Vec<Self>;
+}
+
+impl Shrink for i32 {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(0);
+            out.push(self / 2);
+            if *self < 0 {
+                out.push(-self);
+            }
+            if self.abs() > 1 {
+                out.push(self - self.signum());
+            }
+        }
+        out.retain(|v| v != self);
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for i64 {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(0);
+            out.push(self / 2);
+            if *self < 0 {
+                out.push(-self);
+            }
+            if self.abs() > 1 {
+                out.push(self - self.signum());
+            }
+        }
+        out.retain(|v| v != self);
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(0);
+            out.push(self / 2);
+            if *self > 1 {
+                out.push(self - 1);
+            }
+        }
+        out.retain(|v| v != self);
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for f32 {
+    fn shrinks(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            return vec![];
+        }
+        let mut out = vec![0.0, self / 2.0, self.trunc()];
+        out.retain(|v| v != self && v.is_finite());
+        out.dedup();
+        out
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let n = self.len();
+        if n == 0 {
+            return out;
+        }
+        // structural shrinks: drop halves, drop one element
+        out.push(self[..n / 2].to_vec());
+        out.push(self[n / 2..].to_vec());
+        if n > 1 {
+            let mut v = self.clone();
+            v.pop();
+            out.push(v);
+            let mut v = self.clone();
+            v.remove(0);
+            out.push(v);
+        }
+        // elementwise shrinks on a few positions
+        for i in [0, n / 2, n - 1] {
+            for cand in self[i].shrinks().into_iter().take(2) {
+                let mut v = self.clone();
+                v[i] = cand;
+                out.push(v);
+            }
+        }
+        out.retain(|v| v.len() < n || v.iter().zip(self).any(|(a, b)| {
+            // any difference counts; Vec<T: Shrink> lacks PartialEq bound,
+            // so approximate via shrink-produced inequality (best effort)
+            !std::ptr::eq(a as *const T, b as *const T)
+        }));
+        out
+    }
+}
+
+/// Pair generator convenience.
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrinks()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrinks().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+fn seed_from_env() -> u64 {
+    std::env::var("CORDIC_DCT_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xDC7_2013)
+}
+
+/// Run a property over `cases` generated inputs; shrink on failure.
+///
+/// `prop` returns `Err(reason)` (or panics) to signal failure.
+pub fn check<T, G, P>(cases: usize, mut gen: G, prop: P)
+where
+    T: Shrink + Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed_from_env());
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(first_reason) = run_case(&prop, &input) {
+            let (min, reason, steps) = shrink(&prop, input, first_reason);
+            panic!(
+                "property failed (case {case}, after {steps} shrink steps)\n\
+                 minimal input: {min:?}\nreason: {reason}"
+            );
+        }
+    }
+}
+
+fn run_case<T, P>(prop: &P, input: &T) -> Result<(), String>
+where
+    T: Debug,
+    P: Fn(&T) -> Result<(), String>,
+{
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        prop(input)
+    })) {
+        Ok(r) => r,
+        Err(p) => {
+            let msg = p
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "panic".into());
+            Err(format!("panicked: {msg}"))
+        }
+    }
+}
+
+fn shrink<T, P>(prop: &P, mut cur: T, mut reason: String) -> (T, String, usize)
+where
+    T: Shrink + Debug,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut steps = 0;
+    'outer: loop {
+        if steps > 500 {
+            break;
+        }
+        for cand in cur.shrinks() {
+            if let Err(r) = run_case(prop, &cand) {
+                cur = cand;
+                reason = r;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (cur, reason, steps)
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::prng::Rng;
+
+    pub fn vec_i32(rng: &mut Rng, max_len: usize, lo: i32, hi: i32)
+                   -> Vec<i32> {
+        let n = rng.below(max_len as u64 + 1) as usize;
+        (0..n)
+            .map(|_| rng.range_i64(lo as i64, hi as i64) as i32)
+            .collect()
+    }
+
+    pub fn vec_f32(rng: &mut Rng, max_len: usize, lo: f32, hi: f32)
+                   -> Vec<f32> {
+        let n = rng.below(max_len as u64 + 1) as usize;
+        (0..n)
+            .map(|_| rng.range_f64(lo as f64, hi as f64) as f32)
+            .collect()
+    }
+
+    /// Dims that are multiples of 8, up to `max_blocks` blocks.
+    pub fn dim8(rng: &mut Rng, max_blocks: usize) -> usize {
+        (rng.below(max_blocks as u64) as usize + 1) * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        check(50, |r| gen::vec_i32(r, 20, -100, 100), |v| {
+            if v.iter().map(|x| x.abs()).sum::<i32>() >= 0 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let result = std::panic::catch_unwind(|| {
+            check(100, |r| gen::vec_i32(r, 30, 0, 1000), |v| {
+                // property: no vector sums above 900 (false)
+                if v.iter().sum::<i32>() <= 900 {
+                    Ok(())
+                } else {
+                    Err(format!("sum {} > 900", v.iter().sum::<i32>()))
+                }
+            });
+        });
+        let msg = match result {
+            Err(p) => p
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_default(),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("minimal input"), "{msg}");
+    }
+
+    #[test]
+    fn i32_shrink_terminates() {
+        let mut v = 1_000_000i32;
+        let mut steps = 0;
+        while let Some(next) = v.shrinks().first().copied() {
+            v = next;
+            steps += 1;
+            if v == 0 {
+                break;
+            }
+        }
+        assert_eq!(v, 0);
+        assert!(steps < 100);
+    }
+
+    #[test]
+    fn dim8_multiple_of_8() {
+        let mut r = crate::util::prng::Rng::new(1);
+        for _ in 0..100 {
+            assert_eq!(gen::dim8(&mut r, 6) % 8, 0);
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Fixed-size worker pool over std threads — the crate's tokio stand-in
+//! for CPU-bound fan-out (the coordinator's "GPU lane" dispatch and the
+//! parallel parts of the benchmark harness).
+//!
+//! Design: one injector MPSC channel guarded by a mutex on the receiver
+//! (simple work-stealing is unnecessary at our job granularity — each job
+//! is an image tile or a whole image, >100us), plus a `scope`d variant for
+//! borrowed data. Panics in jobs are caught and re-thrown on `join`.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A fixed pool of worker threads consuming jobs from a shared queue.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    panics: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "thread pool needs at least one worker");
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let panics = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                let panics = Arc::clone(&panics);
+                thread::Builder::new()
+                    .name(format!("cordic-dct-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                if catch_unwind(AssertUnwindSafe(job)).is_err()
+                                {
+                                    panics.fetch_add(1, Ordering::SeqCst);
+                                }
+                            }
+                            Err(_) => break, // channel closed
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool {
+            tx: Some(tx),
+            workers,
+            panics,
+        }
+    }
+
+    /// Default pool sized to the machine (at least 2 workers).
+    pub fn default_size() -> usize {
+        thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .max(2)
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        self.tx
+            .as_ref()
+            .expect("pool already joined")
+            .send(Box::new(job))
+            .expect("worker channel closed");
+    }
+
+    /// Number of jobs that panicked so far.
+    pub fn panic_count(&self) -> usize {
+        self.panics.load(Ordering::SeqCst)
+    }
+
+    /// Close the queue and wait for all workers to drain it.
+    /// Panics if any job panicked.
+    pub fn join(mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            w.join().expect("worker thread panicked");
+        }
+        let p = self.panics.load(Ordering::SeqCst);
+        assert!(p == 0, "{p} pool job(s) panicked");
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run `f(i)` for i in 0..n across `workers` scoped threads, collecting
+/// results in order. Uses std scoped threads so `f` may borrow.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(workers >= 1);
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
+    thread::scope(|scope| {
+        for _ in 0..workers.min(n.max(1)) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                let mut guard = slots.lock().unwrap();
+                guard[i] = Some(v);
+            });
+        }
+    });
+    out.into_iter().map(|x| x.expect("slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..1000 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn jobs_run_concurrently() {
+        use std::time::{Duration, Instant};
+        let pool = ThreadPool::new(4);
+        let t0 = Instant::now();
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..4 {
+            let tx = tx.clone();
+            pool.execute(move || {
+                thread::sleep(Duration::from_millis(50));
+                tx.send(()).unwrap();
+            });
+        }
+        for _ in 0..4 {
+            rx.recv().unwrap();
+        }
+        // 4 x 50ms on 4 workers should take well under 200ms serial time.
+        assert!(t0.elapsed() < Duration::from_millis(150));
+        pool.join();
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn join_reports_job_panics() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        pool.join();
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let v = parallel_map(100, 8, |i| i * i);
+        assert_eq!(v.len(), 100);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, i * i);
+        }
+    }
+
+    #[test]
+    fn parallel_map_borrows() {
+        let data: Vec<u64> = (0..50).collect();
+        let v = parallel_map(50, 4, |i| data[i] + 1);
+        assert_eq!(v[49], 50);
+    }
+
+    #[test]
+    fn parallel_map_zero_items() {
+        let v: Vec<u32> = parallel_map(0, 4, |_| unreachable!());
+        assert!(v.is_empty());
+    }
+}

@@ -1,0 +1,170 @@
+//! Wall-clock measurement with warmup and robust statistics — the crate's
+//! criterion stand-in, and the measurement protocol behind every paper
+//! table (§4: "processing speed measured in milliseconds").
+
+use std::time::Instant;
+
+/// Summary statistics over a set of timing samples, in milliseconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean_ms: f64,
+    pub median_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+    pub p95_ms: f64,
+    pub std_ms: f64,
+}
+
+impl Stats {
+    pub fn from_samples_ms(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty());
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        let mean = s.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            s.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+                / (n - 1) as f64
+        } else {
+            0.0
+        };
+        Stats {
+            n,
+            mean_ms: mean,
+            median_ms: percentile(&s, 50.0),
+            min_ms: s[0],
+            max_ms: s[n - 1],
+            p95_ms: percentile(&s, 95.0),
+            std_ms: var.sqrt(),
+        }
+    }
+}
+
+/// Nearest-rank percentile on an already-sorted slice.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (p / 100.0 * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Measurement configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    /// Stop early once this much wall time (ms) has been spent measuring;
+    /// at least 3 iterations always run.
+    pub budget_ms: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: 2,
+            iters: 10,
+            budget_ms: 10_000.0,
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: 1,
+            iters: 5,
+            budget_ms: 3_000.0,
+        }
+    }
+
+    /// Time `f`, returning stats over the measured iterations. The closure
+    /// result is passed to `std::hint::black_box` to keep the optimizer
+    /// honest.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let started = Instant::now();
+        for i in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+            if i >= 2 && started.elapsed().as_secs_f64() * 1e3 > self.budget_ms
+            {
+                break;
+            }
+        }
+        Stats::from_samples_ms(&samples)
+    }
+}
+
+/// One-shot timing helper: `(result, elapsed_ms)`.
+pub fn time_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_constant() {
+        let s = Stats::from_samples_ms(&[5.0, 5.0, 5.0]);
+        assert_eq!(s.mean_ms, 5.0);
+        assert_eq!(s.median_ms, 5.0);
+        assert_eq!(s.std_ms, 0.0);
+    }
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples_ms(&[9.0, 1.0, 5.0, 3.0, 7.0]);
+        assert_eq!(s.min_ms, 1.0);
+        assert_eq!(s.max_ms, 9.0);
+        assert_eq!(s.median_ms, 5.0);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 100.0), 4.0);
+    }
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let b = Bench {
+            warmup: 1,
+            iters: 4,
+            budget_ms: 60_000.0,
+        };
+        let mut count = 0usize;
+        let s = b.run(|| {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 5); // 1 warmup + 4 measured
+        assert_eq!(s.n, 4);
+    }
+
+    #[test]
+    fn budget_stops_early() {
+        let b = Bench {
+            warmup: 0,
+            iters: 1_000_000,
+            budget_ms: 20.0,
+        };
+        let s = b.run(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(s.n >= 3 && s.n < 100, "n = {}", s.n);
+    }
+
+    #[test]
+    fn time_ms_measures() {
+        let (_out, ms) =
+            time_ms(|| std::thread::sleep(std::time::Duration::from_millis(10)));
+        assert!(ms >= 9.0, "{ms}");
+    }
+}

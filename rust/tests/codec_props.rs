@@ -1,0 +1,287 @@
+//! Property tests (in-crate proptest harness) over the codec and
+//! transform invariants DESIGN.md §7 calls out.
+
+use cordic_dct::codec::{decoder, encoder, variant_tag, zigzag, Header};
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::{matrix::MatrixDct, Transform8x8, Variant};
+use cordic_dct::image::GrayImage;
+use cordic_dct::metrics;
+use cordic_dct::util::proptest::{check, gen, Shrink};
+use cordic_dct::util::prng::Rng;
+
+/// A random quantized-coefficient image for codec round-trips.
+#[derive(Clone, Debug)]
+struct CoefImage {
+    gw: usize,
+    gh: usize,
+    data: Vec<i32>, // i16-ranged values
+}
+
+impl Shrink for CoefImage {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.gw > 1 {
+            let gw = self.gw / 2;
+            out.push(CoefImage {
+                gw,
+                gh: self.gh,
+                data: shrink_grid(&self.data, self.gw, self.gh, gw, self.gh),
+            });
+        }
+        if self.gh > 1 {
+            let gh = self.gh / 2;
+            out.push(CoefImage {
+                gw: self.gw,
+                gh,
+                data: shrink_grid(&self.data, self.gw, self.gh, self.gw, gh),
+            });
+        }
+        // zero out the second half of the data
+        let mut z = self.clone();
+        let n = z.data.len();
+        for v in &mut z.data[n / 2..] {
+            *v = 0;
+        }
+        if z.data != self.data {
+            out.push(z);
+        }
+        out
+    }
+}
+
+fn shrink_grid(
+    data: &[i32],
+    gw: usize,
+    _gh: usize,
+    new_gw: usize,
+    new_gh: usize,
+) -> Vec<i32> {
+    let w = gw * 8;
+    let nw = new_gw * 8;
+    let nh = new_gh * 8;
+    let mut out = vec![0i32; nw * nh];
+    for y in 0..nh {
+        for x in 0..nw {
+            out[y * nw + x] = data[y * w + x];
+        }
+    }
+    out
+}
+
+fn gen_coef_image(rng: &mut Rng) -> CoefImage {
+    let gw = rng.range_i64(1, 6) as usize;
+    let gh = rng.range_i64(1, 6) as usize;
+    let n = gw * gh * 64;
+    // sparse, JPEG-like distribution with occasional large DCs
+    let data = (0..n)
+        .map(|_| {
+            if rng.chance(0.7) {
+                0
+            } else if rng.chance(0.9) {
+                rng.range_i64(-30, 30) as i32
+            } else {
+                rng.range_i64(-1000, 1000) as i32
+            }
+        })
+        .collect();
+    CoefImage { gw, gh, data }
+}
+
+#[test]
+fn prop_container_roundtrip_lossless() {
+    check(40, gen_coef_image, |ci| {
+        let pw = ci.gw * 8;
+        let ph = ci.gh * 8;
+        let planar: Vec<f32> =
+            ci.data.iter().map(|&v| v as f32).collect();
+        let header = Header {
+            width: pw as u32,
+            height: ph as u32,
+            padded_width: pw as u32,
+            padded_height: ph as u32,
+            quality: 50,
+            variant: variant_tag(Variant::Dct),
+        };
+        let bytes = encoder::encode(&header, &planar)
+            .map_err(|e| e.to_string())?;
+        let dec = decoder::decode(&bytes).map_err(|e| e.to_string())?;
+        if dec.qcoef_planar != planar {
+            return Err("coefficients not preserved".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zigzag_roundtrip() {
+    check(
+        100,
+        |rng| gen::vec_i32(rng, 64, -2000, 2000),
+        |v| {
+            let mut block = [0i16; 64];
+            for (i, &x) in v.iter().enumerate().take(64) {
+                block[i] = x as i16;
+            }
+            let back = zigzag::unscan(&zigzag::scan(&block));
+            if back == block {
+                Ok(())
+            } else {
+                Err("zigzag not a bijection".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_dct_idct_identity() {
+    check(
+        60,
+        |rng| gen::vec_f32(rng, 64, -128.0, 128.0),
+        |v| {
+            let m = MatrixDct::new();
+            let mut block = [0.0f32; 64];
+            for (i, &x) in v.iter().enumerate().take(64) {
+                block[i] = x;
+            }
+            let orig = block;
+            m.forward(&mut block);
+            m.inverse(&mut block);
+            for i in 0..64 {
+                if (block[i] - orig[i]).abs() > 1e-3 {
+                    return Err(format!(
+                        "idct(dct(x))[{i}] = {} != {}",
+                        block[i], orig[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pipeline_error_bounded_by_quant_step() {
+    // reconstruction error of the exact-DCT pipeline is bounded by the
+    // worst quantization step (q_max/2 per coefficient => per-pixel
+    // bound of q_max/2 * 8 in the worst case; empirically much smaller —
+    // assert the loose analytic bound).
+    #[derive(Clone, Debug)]
+    struct ImgCase {
+        w: usize,
+        h: usize,
+        data: Vec<u8>,
+    }
+    impl Shrink for ImgCase {
+        fn shrinks(&self) -> Vec<Self> {
+            Vec::new() // shape-coupled; skip shrinking
+        }
+    }
+    check(
+        15,
+        |rng| {
+            let w = gen::dim8(rng, 6);
+            let h = gen::dim8(rng, 6);
+            let data = (0..w * h)
+                .map(|_| rng.range_i64(0, 255) as u8)
+                .collect();
+            ImgCase { w, h, data }
+        },
+        |case| {
+            let img =
+                GrayImage::from_vec(case.w, case.h, case.data.clone())
+                    .map_err(|e| e.to_string())?;
+            let out = CpuPipeline::new(Variant::Dct, 50).compress(&img);
+            let q_max = 121.0 / 4.0; // largest effective q at quality 50
+            let bound = q_max / 2.0 * 8.0;
+            for (a, b) in img.data.iter().zip(&out.recon.data) {
+                let d = (*a as f32 - *b as f32).abs();
+                if d > bound {
+                    return Err(format!("pixel error {d} > {bound}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_psnr_scale_invariant_ordering() {
+    // adding more noise never increases PSNR
+    check(
+        30,
+        |rng| {
+            let n = gen::vec_i32(rng, 32, 0, 255);
+            (n, rng.range_i64(1, 20) as i32)
+        },
+        |(vals, amp)| {
+            if vals.len() < 4 {
+                return Ok(());
+            }
+            let w = vals.len();
+            let a = GrayImage::from_vec(
+                w,
+                1,
+                vals.iter().map(|&v| v as u8).collect(),
+            )
+            .unwrap();
+            let mk_noisy = |k: i32| {
+                let data: Vec<u8> = vals
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &v)| {
+                        let sign = if i % 2 == 0 { 1 } else { -1 };
+                        (v + sign * k).clamp(0, 255) as u8
+                    })
+                    .collect();
+                GrayImage::from_vec(w, 1, data).unwrap()
+            };
+            let p_small = metrics::psnr(&a, &mk_noisy(*amp));
+            let p_big = metrics::psnr(&a, &mk_noisy(*amp * 3));
+            if p_big <= p_small + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("psnr not monotone: {p_small} vs {p_big}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_decoder_never_panics_on_mutations() {
+    // hammer the decoder with structured mutations of a valid file
+    let img = cordic_dct::image::synthetic::lena_like(48, 40, 3);
+    let pipe = CpuPipeline::new(Variant::Dct, 50);
+    let (qcoef, pw, ph) = pipe.analyze(&img);
+    let header = Header {
+        width: 48,
+        height: 40,
+        padded_width: pw as u32,
+        padded_height: ph as u32,
+        quality: 50,
+        variant: variant_tag(Variant::Dct),
+    };
+    let valid = encoder::encode(&header, &qcoef).unwrap();
+    check(
+        150,
+        |rng| {
+            let mut v = valid.clone();
+            for _ in 0..rng.range_i64(1, 6) {
+                let i = rng.below(v.len() as u64) as usize;
+                v[i] = rng.next_u32() as u8;
+            }
+            // occasional truncation
+            if rng.chance(0.3) {
+                let keep = rng.below(v.len() as u64) as usize;
+                v.truncate(keep.max(1));
+            }
+            v.into_iter().map(|b| b as i32).collect::<Vec<i32>>()
+        },
+        |bytes| {
+            let raw: Vec<u8> =
+                bytes.iter().map(|&b| b as u8).collect();
+            // Ok or Err both fine — panics are what the harness catches
+            let _ = decoder::decode(&raw);
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,145 @@
+//! Cross-lane integration: the CPU serial lane and the PJRT lane must
+//! compute the same pipeline (same transform arithmetic, same quantizer),
+//! across sizes, scenes and variants. Skips (with a note) when artifacts
+//! have not been built.
+
+use std::sync::Arc;
+
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::synthetic;
+use cordic_dct::metrics;
+use cordic_dct::runtime::{Executor, Runtime};
+
+fn executor() -> Option<Executor> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("cross_lane tests skipped: run `make artifacts`");
+        return None;
+    }
+    Some(Executor::new(Arc::new(Runtime::new("artifacts").unwrap())))
+}
+
+#[test]
+fn lanes_agree_across_sizes_and_variants() {
+    let Some(ex) = executor() else { return };
+    // paper sizes (h, w) that stay fast in CI
+    for &(h, w) in &[(200usize, 200usize), (320, 288), (512, 480)] {
+        for variant in [Variant::Dct, Variant::Cordic] {
+            let img = synthetic::cablecar_like(w, h, 11);
+            let gpu = ex.compress(&img, variant.as_str()).unwrap();
+            let cpu = CpuPipeline::new(variant, 50).compress(&img);
+            let cross = metrics::psnr(&gpu.recon, &cpu.recon);
+            assert!(
+                cross > 45.0,
+                "{w}x{h} {} lanes disagree: {cross} dB",
+                variant.as_str()
+            );
+            // quantized coefficients nearly identical (round ties only)
+            let ndiff = gpu
+                .qcoef
+                .iter()
+                .zip(&cpu.qcoef)
+                .filter(|(a, b)| a != b)
+                .count();
+            assert!(
+                (ndiff as f64) < 0.002 * gpu.qcoef.len() as f64,
+                "{ndiff} coefficient mismatches of {}",
+                gpu.qcoef.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn gpu_coefficients_feed_cpu_entropy_codec() {
+    // the serving path: PJRT produces coefficients, rust entropy-codes
+    // them, a decoder reconstructs — end to end across the lane boundary.
+    let Some(ex) = executor() else { return };
+    let img = synthetic::lena_like(200, 200, 3);
+    let gpu = ex.compress(&img, "cordic").unwrap();
+    let header = cordic_dct::codec::Header {
+        width: 200,
+        height: 200,
+        padded_width: gpu.padded_width as u32,
+        padded_height: gpu.padded_height as u32,
+        quality: 50,
+        variant: cordic_dct::codec::variant_tag(Variant::Cordic),
+    };
+    let bytes =
+        cordic_dct::codec::encoder::encode(&header, &gpu.qcoef).unwrap();
+    assert!(bytes.len() < img.pixels(), "must actually compress");
+    let dec = cordic_dct::codec::decoder::decode(&bytes).unwrap();
+    assert_eq!(dec.qcoef_planar, gpu.qcoef, "entropy codec is lossless");
+    let recon = CpuPipeline::new(Variant::Cordic, 50).decode_coefficients(
+        &dec.qcoef_planar,
+        gpu.padded_width,
+        gpu.padded_height,
+        200,
+        200,
+    );
+    let p = metrics::psnr(&img, &recon);
+    let p_gpu = metrics::psnr(&img, &gpu.recon);
+    assert!(
+        (p - p_gpu).abs() < 0.2,
+        "file-path recon {p} vs direct {p_gpu}"
+    );
+}
+
+#[test]
+fn histeq_lanes_agree() {
+    let Some(ex) = executor() else { return };
+    // artifact histeq_384x352 => height 384, width 352
+    let img = synthetic::cablecar_like(352, 384, 9);
+    let (gpu, _) = ex.histeq(&img).unwrap();
+    let cpu = cordic_dct::image::histeq::histeq(&img);
+    let ndiff = gpu
+        .data
+        .iter()
+        .zip(&cpu.data)
+        .filter(|(a, b)| a != b)
+        .count();
+    assert!(
+        ndiff * 1000 < img.pixels(),
+        "{ndiff}/{} histeq pixels differ",
+        img.pixels()
+    );
+}
+
+#[test]
+fn psnr_artifact_matches_cpu_for_pipeline_outputs() {
+    let Some(ex) = executor() else { return };
+    let img = synthetic::lena_like(200, 200, 5);
+    let rec = ex.compress(&img, "dct").unwrap().recon;
+    let gpu_psnr = ex.psnr(&img, &rec).unwrap();
+    let cpu_psnr = metrics::psnr(&img, &rec);
+    assert!(
+        (gpu_psnr - cpu_psnr).abs() < 0.01,
+        "{gpu_psnr} vs {cpu_psnr}"
+    );
+}
+
+#[test]
+fn paper_psnr_shape_cordic_trails_dct_on_both_scenes() {
+    // Tables 3-4 shape on the GPU lane itself.
+    let Some(ex) = executor() else { return };
+    for scene in ["lena", "cablecar"] {
+        let img = synthetic::by_name(scene, 512, 512, 13).unwrap();
+        let p_dct = metrics::psnr(
+            &img,
+            &ex.compress(&img, "dct").unwrap().recon,
+        );
+        let p_cor = metrics::psnr(
+            &img,
+            &ex.compress(&img, "cordic").unwrap().recon,
+        );
+        assert!(
+            p_cor < p_dct,
+            "{scene}: cordic {p_cor} must trail dct {p_dct}"
+        );
+        assert!(
+            (0.3..8.0).contains(&(p_dct - p_cor)),
+            "{scene}: gap {}",
+            p_dct - p_cor
+        );
+    }
+}

@@ -1,0 +1,195 @@
+//! Whole-service integration: mixed workloads through the coordinator,
+//! conservation invariants, routing, backpressure under load.
+
+use cordic_dct::coordinator::{
+    Backpressure, Lane, Service, ServiceConfig,
+};
+use cordic_dct::coordinator::batcher::BatchPolicy;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::synthetic;
+use cordic_dct::util::prng::Rng;
+
+fn config(workers: usize, gpu: bool) -> ServiceConfig {
+    ServiceConfig {
+        workers,
+        queue_capacity: 64,
+        backpressure: Backpressure::Block,
+        batch: BatchPolicy::default(),
+        quality: 50,
+        artifact_dir: gpu.then(|| "artifacts".into()),
+    }
+}
+
+fn artifacts_present() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn mixed_workload_conservation() {
+    // every submitted job returns exactly once with a sane payload,
+    // across mixed shapes, scenes, variants and kinds.
+    let svc = Service::start(config(4, artifacts_present())).unwrap();
+    let mut rng = Rng::new(99);
+    let mut handles = Vec::new();
+    for i in 0..60u64 {
+        let w = 8 * rng.range_i64(2, 30) as usize;
+        let h = 8 * rng.range_i64(2, 30) as usize;
+        let scene = if rng.chance(0.5) { "lena" } else { "cablecar" };
+        let img = synthetic::by_name(scene, w, h, i).unwrap();
+        let variant = if rng.chance(0.5) {
+            Variant::Dct
+        } else {
+            Variant::Cordic
+        };
+        if rng.chance(0.2) {
+            handles.push(svc.histeq(img, Lane::Cpu).unwrap());
+        } else {
+            handles.push(
+                svc.compress(img, variant, Lane::Auto).unwrap(),
+            );
+        }
+    }
+    let mut ids: Vec<u64> = Vec::new();
+    for h in handles {
+        let resp = h.wait();
+        let out = resp.result.expect("job must succeed");
+        assert!(out.image.pixels() > 0);
+        if let Some(p) = out.psnr_db {
+            assert!(p > 20.0, "PSNR {p}");
+        }
+        ids.push(resp.id);
+    }
+    ids.sort_unstable();
+    let n = ids.len();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "duplicate responses");
+    svc.shutdown();
+}
+
+#[test]
+fn auto_routes_gpu_for_artifact_shapes() {
+    if !artifacts_present() {
+        eprintln!("skipped: no artifacts");
+        return;
+    }
+    let svc = Service::start(config(2, true)).unwrap();
+    assert!(svc.has_gpu_lane());
+    // 200x200 has artifacts -> Gpu; 72x72 does not -> Cpu
+    let on_artifact = svc
+        .compress(
+            synthetic::lena_like(200, 200, 1),
+            Variant::Dct,
+            Lane::Auto,
+        )
+        .unwrap()
+        .wait();
+    assert_eq!(on_artifact.lane, Lane::Gpu);
+    let off_artifact = svc
+        .compress(
+            synthetic::lena_like(72, 72, 1),
+            Variant::Dct,
+            Lane::Auto,
+        )
+        .unwrap()
+        .wait();
+    assert_eq!(off_artifact.lane, Lane::Cpu);
+    on_artifact.result.unwrap();
+    off_artifact.result.unwrap();
+    svc.shutdown();
+}
+
+#[test]
+fn forced_gpu_without_artifact_fails_cleanly() {
+    if !artifacts_present() {
+        return;
+    }
+    let svc = Service::start(config(1, true)).unwrap();
+    let resp = svc
+        .compress(
+            synthetic::lena_like(72, 72, 2),
+            Variant::Dct,
+            Lane::Gpu,
+        )
+        .unwrap()
+        .wait();
+    assert!(resp.result.is_err(), "no artifact for 72x72");
+    svc.shutdown();
+}
+
+#[test]
+fn reject_backpressure_under_burst() {
+    let cfg = ServiceConfig {
+        workers: 1,
+        queue_capacity: 2,
+        backpressure: Backpressure::Reject,
+        artifact_dir: None,
+        ..Default::default()
+    };
+    let svc = Service::start(cfg).unwrap();
+    // burst far beyond capacity: some must be rejected, none lost
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..50u64 {
+        match svc.compress(
+            synthetic::lena_like(128, 128, i),
+            Variant::Dct,
+            Lane::Cpu,
+        ) {
+            Ok(h) => accepted.push(h),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "burst should trip backpressure");
+    for h in accepted {
+        h.wait().result.unwrap();
+    }
+    svc.shutdown();
+}
+
+#[test]
+fn stats_track_throughput() {
+    let svc = Service::start(config(2, false)).unwrap();
+    let handles: Vec<_> = (0..10)
+        .map(|i| {
+            svc.compress(
+                synthetic::lena_like(64, 64, i),
+                Variant::Cordic,
+                Lane::Cpu,
+            )
+            .unwrap()
+        })
+        .collect();
+    for h in handles {
+        h.wait().result.unwrap();
+    }
+    let s = svc.stats();
+    assert_eq!(s.submitted, 10);
+    assert_eq!(s.process.0, 10);
+    assert!(s.process.1 > 0.0, "mean process time recorded");
+    assert_eq!(s.queue_depth, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn concurrent_submitters() {
+    use std::sync::Arc;
+    let svc = Arc::new(Service::start(config(4, false)).unwrap());
+    let mut threads = Vec::new();
+    for t in 0..4u64 {
+        let svc = Arc::clone(&svc);
+        threads.push(std::thread::spawn(move || {
+            for i in 0..8u64 {
+                let img = synthetic::cablecar_like(96, 96, t * 100 + i);
+                let resp = svc
+                    .compress(img, Variant::Dct, Lane::Cpu)
+                    .unwrap()
+                    .wait();
+                resp.result.unwrap();
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(svc.stats().process.0, 32);
+}
