@@ -23,6 +23,7 @@ fn run_once(workers: usize, batch: usize, n: usize, lane: Lane)
         batch: BatchPolicy {
             gpu_max_batch: batch,
             cpu_max_batch: batch,
+            cpu_parallel_max_batch: batch,
             linger: std::time::Duration::from_micros(if batch > 1 {
                 200
             } else {
@@ -30,6 +31,7 @@ fn run_once(workers: usize, batch: usize, n: usize, lane: Lane)
             }),
         },
         quality: 50,
+        cpu_parallel_workers: 0,
         artifact_dir: Some("artifacts".into()),
     };
     let svc = Service::start(cfg)?;
@@ -74,6 +76,7 @@ fn main() -> anyhow::Result<()> {
             rows.push(Row {
                 label: format!("w{workers}_b{batch}"),
                 cpu: Some(Stats::from_samples_ms(&[lat])),
+                cpu_par: None,
                 gpu: None,
                 extra: vec![
                     ("workers".into(), workers.to_string()),

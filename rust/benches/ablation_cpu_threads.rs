@@ -1,0 +1,74 @@
+//! A3 ablation: parallel-CPU-lane scaling — the serial pipeline vs the
+//! block-parallel pipeline at 1/2/4/8 workers on a 512x512 synthetic
+//! image, per transform variant. The acceptance bar for the lane is a
+//! >1.5x speedup at 4 workers on a multi-core host.
+//!
+//! Set CORDIC_DCT_BENCH_QUICK=1 to trim iterations.
+
+use cordic_dct::bench::{bench_config, render_table, rows_to_json,
+                        save_results, Row};
+use cordic_dct::dct::parallel::ParallelCpuPipeline;
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::synthetic;
+
+fn main() -> anyhow::Result<()> {
+    let bench = bench_config();
+    let img = synthetic::lena_like(512, 512, 1);
+    let worker_sweep: &[usize] = &[1, 2, 4, 8];
+
+    println!("== parallel CPU lane: worker sweep (512x512 Lena-like) ==");
+    println!(
+        "{:<12} {:>8} {:>12} {:>12} {:>9}",
+        "variant", "workers", "serial ms", "parallel ms", "speedup"
+    );
+    let mut rows = Vec::new();
+    for variant in [Variant::Dct, Variant::Cordic] {
+        let serial_pipe = CpuPipeline::new(variant, 50);
+        let serial = bench.run(|| serial_pipe.compress(&img));
+        for &workers in worker_sweep {
+            let par_pipe =
+                ParallelCpuPipeline::with_workers(variant, 50, workers);
+            let par = bench.run(|| par_pipe.compress(&img));
+            let speedup = serial.median_ms / par.median_ms.max(1e-9);
+            println!(
+                "{:<12} {:>8} {:>12.2} {:>12.2} {:>8.2}x",
+                variant.as_str(),
+                workers,
+                serial.median_ms,
+                par.median_ms,
+                speedup
+            );
+            rows.push(Row {
+                label: format!("{}_w{workers}", variant.as_str()),
+                cpu: Some(serial.clone()),
+                cpu_par: Some(par),
+                gpu: None,
+                extra: vec![
+                    ("workers".into(), workers.to_string()),
+                    ("variant".into(), variant.as_str().into()),
+                ],
+            });
+        }
+    }
+
+    // parity spot check rides along: the sweep is meaningless if the
+    // parallel lane ever diverges from the serial one
+    let serial = CpuPipeline::new(Variant::Cordic, 50).compress(&img);
+    let par = ParallelCpuPipeline::with_workers(Variant::Cordic, 50, 8)
+        .compress(&img);
+    assert_eq!(
+        serial.qcoef, par.qcoef,
+        "parallel lane diverged from serial"
+    );
+    assert_eq!(serial.recon, par.recon);
+    println!("parity: serial and parallel outputs bit-identical");
+
+    let text = render_table("ablation: CPU thread scaling", &rows);
+    save_results(
+        "ablation_cpu_threads",
+        &text,
+        &rows_to_json("ablation_cpu_threads", &rows),
+    );
+    Ok(())
+}

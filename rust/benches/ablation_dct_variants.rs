@@ -46,6 +46,7 @@ fn main() -> anyhow::Result<()> {
         rows.push(Row {
             label: t.name().into(),
             cpu: Some(stats),
+            cpu_par: None,
             gpu: None,
             extra: vec![
                 ("mult_per_block".into(), mul.to_string()),
@@ -73,6 +74,7 @@ fn main() -> anyhow::Result<()> {
             fused_rows.push(Row {
                 label: label.into(),
                 cpu: None,
+                cpu_par: None,
                 gpu: Some(stats),
                 extra: vec![],
             });

@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
         rows.push(Row {
             label: label.into(),
             cpu: Some(stats),
+            cpu_par: None,
             gpu: None,
             extra: vec![("unit".into(), unit.into())],
         });

@@ -18,6 +18,7 @@ use cordic_dct::bench::tables::{
     speedup_series,
 };
 use cordic_dct::bench::{render_table, rows_to_json, save_results};
+use cordic_dct::dct::parallel::ParallelCpuPipeline;
 use cordic_dct::dct::pipeline::CpuPipeline;
 use cordic_dct::dct::Variant;
 use cordic_dct::image::synthetic;
@@ -69,6 +70,31 @@ fn main() -> anyhow::Result<()> {
         );
     } else {
         println!("(GPU figures skipped: run `make artifacts`)");
+    }
+
+    // --- Serial vs parallel CPU lane ------------------------------------
+    // The paper only had one CPU number (serial); the parallel lane shows
+    // what the same arithmetic does across cores, next to the CPU-vs-GPU
+    // tables below.
+    {
+        let par_pipe = ParallelCpuPipeline::new(Variant::Cordic, 50);
+        let t0 = std::time::Instant::now();
+        let serial_out = cpu_pipe.compress(&lena);
+        let serial_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t0 = std::time::Instant::now();
+        let par_out = par_pipe.compress(&lena);
+        let par_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert_eq!(
+            serial_out.qcoef, par_out.qcoef,
+            "parallel lane must be bit-identical"
+        );
+        println!(
+            "cpu lanes on 512x512 lena: serial {serial_ms:.1} ms vs \
+             parallel {par_ms:.1} ms ({} workers) = {:.2}x speedup, \
+             outputs bit-identical",
+            par_pipe.workers(),
+            serial_ms / par_ms.max(1e-9)
+        );
     }
 
     // --- Tables 1-2: timing sweeps --------------------------------------

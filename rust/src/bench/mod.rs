@@ -6,16 +6,21 @@ pub mod tables;
 
 use crate::util::timer::{Bench, Stats};
 
-/// A single (label, stats) measurement row.
+/// A single (label, stats) measurement row across the three lanes.
 #[derive(Clone, Debug)]
 pub struct Row {
     pub label: String,
+    /// Serial CPU lane.
     pub cpu: Option<Stats>,
+    /// Block-parallel CPU lane.
+    pub cpu_par: Option<Stats>,
+    /// PJRT lane.
     pub gpu: Option<Stats>,
     pub extra: Vec<(String, String)>,
 }
 
 impl Row {
+    /// Serial-CPU / GPU speedup (the paper's headline column).
     pub fn speedup(&self) -> Option<f64> {
         match (&self.cpu, &self.gpu) {
             (Some(c), Some(g)) if g.median_ms > 0.0 => {
@@ -24,31 +29,48 @@ impl Row {
             _ => None,
         }
     }
+
+    /// Serial-CPU / parallel-CPU speedup (the multi-core column).
+    pub fn speedup_parallel(&self) -> Option<f64> {
+        match (&self.cpu, &self.cpu_par) {
+            (Some(c), Some(p)) if p.median_ms > 0.0 => {
+                Some(c.median_ms / p.median_ms)
+            }
+            _ => None,
+        }
+    }
 }
 
-/// Render rows in the paper's table style.
+fn fmt_ms(stats: &Option<Stats>) -> String {
+    stats
+        .as_ref()
+        .map(|st| format!("{:.2}", st.median_ms))
+        .unwrap_or_else(|| "-".into())
+}
+
+fn fmt_speedup(v: Option<f64>) -> String {
+    v.map(|v| format!("{v:.1}x")).unwrap_or_else(|| "-".into())
+}
+
+/// Render rows in the paper's table style, extended with the parallel-CPU
+/// lane columns.
 pub fn render_table(title: &str, rows: &[Row]) -> String {
     let mut s = format!("\n=== {title} ===\n");
     s += &format!(
-        "{:<16} {:>12} {:>12} {:>10}\n",
-        "Input image", "CPU(ms)", "GPU(ms)", "Speedup"
+        "{:<16} {:>12} {:>12} {:>9} {:>12} {:>9}\n",
+        "Input image", "CPU(ms)", "CPUpar(ms)", "ParSp", "GPU(ms)",
+        "Speedup"
     );
     for r in rows {
-        let cpu = r
-            .cpu
-            .as_ref()
-            .map(|st| format!("{:.2}", st.median_ms))
-            .unwrap_or_else(|| "-".into());
-        let gpu = r
-            .gpu
-            .as_ref()
-            .map(|st| format!("{:.2}", st.median_ms))
-            .unwrap_or_else(|| "-".into());
-        let sp = r
-            .speedup()
-            .map(|v| format!("{v:.1}x"))
-            .unwrap_or_else(|| "-".into());
-        s += &format!("{:<16} {:>12} {:>12} {:>10}", r.label, cpu, gpu, sp);
+        s += &format!(
+            "{:<16} {:>12} {:>12} {:>9} {:>12} {:>9}",
+            r.label,
+            fmt_ms(&r.cpu),
+            fmt_ms(&r.cpu_par),
+            fmt_speedup(r.speedup_parallel()),
+            fmt_ms(&r.gpu),
+            fmt_speedup(r.speedup()),
+        );
         for (k, v) in &r.extra {
             s += &format!("  {k}={v}");
         }
@@ -71,12 +93,19 @@ pub fn rows_to_json(table: &str, rows: &[Row]) -> String {
                 pairs.push(("cpu_ms", Json::num(c.median_ms)));
                 pairs.push(("cpu_mean_ms", Json::num(c.mean_ms)));
             }
+            if let Some(p) = &r.cpu_par {
+                pairs.push(("cpu_par_ms", Json::num(p.median_ms)));
+                pairs.push(("cpu_par_mean_ms", Json::num(p.mean_ms)));
+            }
             if let Some(g) = &r.gpu {
                 pairs.push(("gpu_ms", Json::num(g.median_ms)));
                 pairs.push(("gpu_mean_ms", Json::num(g.mean_ms)));
             }
             if let Some(s) = r.speedup() {
                 pairs.push(("speedup", Json::num(s)));
+            }
+            if let Some(s) = r.speedup_parallel() {
+                pairs.push(("speedup_parallel", Json::num(s)));
             }
             for (k, v) in &r.extra {
                 // numbers pass through as numbers when they parse
@@ -137,10 +166,25 @@ mod tests {
         let r = Row {
             label: "512x512".into(),
             cpu: Some(stats(100.0)),
+            cpu_par: Some(stats(25.0)),
             gpu: Some(stats(4.0)),
             extra: vec![],
         };
         assert_eq!(r.speedup(), Some(25.0));
+        assert_eq!(r.speedup_parallel(), Some(4.0));
+    }
+
+    #[test]
+    fn speedups_absent_without_lanes() {
+        let r = Row {
+            label: "x".into(),
+            cpu: Some(stats(10.0)),
+            cpu_par: None,
+            gpu: None,
+            extra: vec![],
+        };
+        assert_eq!(r.speedup(), None);
+        assert_eq!(r.speedup_parallel(), None);
     }
 
     #[test]
@@ -148,12 +192,15 @@ mod tests {
         let rows = vec![Row {
             label: "200x200".into(),
             cpu: Some(stats(6.88)),
+            cpu_par: Some(stats(1.72)),
             gpu: Some(stats(0.24)),
             extra: vec![("psnr".into(), "31.61".into())],
         }];
         let t = render_table("Table 1", &rows);
         assert!(t.contains("200x200"));
         assert!(t.contains("6.88"));
+        assert!(t.contains("1.72"));
+        assert!(t.contains("4.0x"), "parallel speedup column: {t}");
         assert!(t.contains("psnr=31.61"));
     }
 
@@ -162,6 +209,7 @@ mod tests {
         let rows = vec![Row {
             label: "a".into(),
             cpu: Some(stats(2.0)),
+            cpu_par: Some(stats(1.0)),
             gpu: None,
             extra: vec![("k".into(), "3.5".into())],
         }];
@@ -173,6 +221,11 @@ mod tests {
         );
         let row = &parsed.get("rows").unwrap().as_arr().unwrap()[0];
         assert_eq!(row.get("cpu_ms").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(row.get("cpu_par_ms").unwrap().as_f64().unwrap(), 1.0);
+        assert_eq!(
+            row.get("speedup_parallel").unwrap().as_f64().unwrap(),
+            2.0
+        );
         assert_eq!(row.get("k").unwrap().as_f64().unwrap(), 3.5);
     }
 }

@@ -13,6 +13,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::dct::parallel::ParallelCpuPipeline;
 use crate::dct::pipeline::CpuPipeline;
 use crate::dct::Variant;
 use crate::image::{synthetic, GrayImage};
@@ -96,8 +97,9 @@ pub fn maybe_trim(sizes: &[(usize, usize)]) -> Vec<(usize, usize)> {
     }
 }
 
-/// E1/E2: timing sweep over one scene. `variant` is the transform both
-/// lanes run (the paper's tables time the full DCT pipeline).
+/// E1/E2: timing sweep over one scene. `variant` is the transform all
+/// three lanes run (the paper's tables time the full DCT pipeline); the
+/// parallel-CPU column is this reproduction's multi-core extension.
 pub fn timing_table(
     scene: &str,
     sizes: &[(usize, usize)],
@@ -107,10 +109,12 @@ pub fn timing_table(
     let runtime = try_runtime();
     let executor = runtime.map(Executor::new);
     let cpu_pipe = CpuPipeline::new(variant, 50);
+    let par_pipe = ParallelCpuPipeline::new(variant, 50);
     let mut rows = Vec::new();
     for &(h, w) in sizes {
         let img = scene_image(scene, h, w);
         let cpu = bench.run(|| cpu_pipe.compress(&img));
+        let cpu_par = bench.run(|| par_pipe.compress(&img));
         let gpu = executor.as_ref().map(|ex| {
             bench.run(|| {
                 ex.compress(&img, variant.as_str())
@@ -129,6 +133,7 @@ pub fn timing_table(
         rows.push(Row {
             label: format!("{h}x{w}"),
             cpu: Some(cpu),
+            cpu_par: Some(cpu_par),
             gpu,
             extra,
         });
@@ -149,6 +154,7 @@ pub fn psnr_table(scene: &str, sizes: &[(usize, usize)])
         rows.push(Row {
             label: format!("{h}x{w}"),
             cpu: None,
+            cpu_par: None,
             gpu: None,
             extra: vec![
                 ("dct_psnr".into(), format!("{p_dct:.6}")),
@@ -333,6 +339,7 @@ mod tests {
         let rows = vec![Row {
             label: "x".into(),
             cpu: Some(Stats::from_samples_ms(&[10.0])),
+            cpu_par: None,
             gpu: Some(Stats::from_samples_ms(&[2.0])),
             extra: vec![],
         }];
@@ -347,6 +354,7 @@ mod tests {
         let rows = vec![Row {
             label: "200x200".into(),
             cpu: Some(Stats::from_samples_ms(&[5.0])),
+            cpu_par: Some(Stats::from_samples_ms(&[1.0])),
             gpu: Some(Stats::from_samples_ms(&[0.5])),
             extra: vec![],
         }];

@@ -1,9 +1,13 @@
 //! Dynamic batching policy: how many same-key jobs to coalesce per
 //! dispatch and how long to linger for stragglers.
 //!
-//! The queue does the mechanical grouping ([`RequestQueue::pop_batch`]);
-//! this module owns the *policy* (sizes/linger per lane) and the batch
-//! bookkeeping that the ablation bench sweeps.
+//! The queue does the mechanical grouping
+//! ([`RequestQueue::pop_batch_with`](super::request::RequestQueue)); this
+//! module owns the *policy* (sizes/linger per lane) and the batch
+//! bookkeeping that the ablation bench sweeps. The worker passes
+//! [`BatchPolicy::max_for`] into the queue so the cap of the head job's
+//! lane — not a global maximum — bounds each batch; a lane with max 1
+//! (the serial CPU default) bypasses straggler coalescing entirely.
 
 use std::time::Duration;
 
@@ -14,9 +18,13 @@ use super::request::Lane;
 pub struct BatchPolicy {
     /// Max jobs per GPU-lane dispatch group.
     pub gpu_max_batch: usize,
-    /// Max jobs per CPU-lane group (CPU jobs are independent; grouping
-    /// only amortizes queue locking).
+    /// Max jobs per serial-CPU-lane group (CPU jobs are independent;
+    /// grouping only amortizes queue locking).
     pub cpu_max_batch: usize,
+    /// Max jobs per parallel-CPU-lane group. Parallel-lane jobs already
+    /// saturate the cores one at a time, so grouping buys queue-lock
+    /// amortization only; keep it small.
+    pub cpu_parallel_max_batch: usize,
     /// How long to wait for same-key stragglers after the first job.
     pub linger: Duration,
 }
@@ -26,6 +34,7 @@ impl Default for BatchPolicy {
         BatchPolicy {
             gpu_max_batch: 8,
             cpu_max_batch: 1,
+            cpu_parallel_max_batch: 1,
             linger: Duration::from_micros(200),
         }
     }
@@ -37,6 +46,7 @@ impl BatchPolicy {
         BatchPolicy {
             gpu_max_batch: 1,
             cpu_max_batch: 1,
+            cpu_parallel_max_batch: 1,
             linger: Duration::ZERO,
         }
     }
@@ -45,13 +55,17 @@ impl BatchPolicy {
         match lane {
             Lane::Gpu | Lane::Auto => self.gpu_max_batch.max(1),
             Lane::Cpu => self.cpu_max_batch.max(1),
+            Lane::CpuParallel => self.cpu_parallel_max_batch.max(1),
         }
     }
 
     /// The queue-level pop size: the largest any lane allows (the head
     /// job's key then constrains the actual group).
     pub fn pop_max(&self) -> usize {
-        self.gpu_max_batch.max(self.cpu_max_batch).max(1)
+        self.gpu_max_batch
+            .max(self.cpu_max_batch)
+            .max(self.cpu_parallel_max_batch)
+            .max(1)
     }
 }
 
@@ -88,6 +102,7 @@ mod tests {
         let p = BatchPolicy::default();
         assert!(p.gpu_max_batch >= 1);
         assert_eq!(p.max_for(Lane::Cpu), 1);
+        assert_eq!(p.max_for(Lane::CpuParallel), 1);
         assert_eq!(p.max_for(Lane::Gpu), p.gpu_max_batch);
         assert_eq!(p.pop_max(), p.gpu_max_batch);
     }
@@ -116,9 +131,22 @@ mod tests {
         let p = BatchPolicy {
             gpu_max_batch: 0,
             cpu_max_batch: 0,
+            cpu_parallel_max_batch: 0,
             linger: Duration::ZERO,
         };
         assert_eq!(p.max_for(Lane::Gpu), 1);
+        assert_eq!(p.max_for(Lane::CpuParallel), 1);
         assert_eq!(p.pop_max(), 1);
+    }
+
+    #[test]
+    fn parallel_lane_has_its_own_arm() {
+        let p = BatchPolicy {
+            cpu_parallel_max_batch: 3,
+            ..Default::default()
+        };
+        assert_eq!(p.max_for(Lane::CpuParallel), 3);
+        assert_eq!(p.max_for(Lane::Cpu), 1);
+        assert_eq!(p.pop_max(), p.gpu_max_batch.max(3));
     }
 }

@@ -1,6 +1,7 @@
 //! The serving coordinator: request router + dynamic batcher + worker
-//! pool, dispatching image-compression jobs to the PJRT ("GPU") lane or
-//! the serial Rust ("CPU") lane.
+//! pool, dispatching image-compression jobs to one of three lanes — the
+//! PJRT ("GPU") lane, the serial Rust ("CPU") lane, or the block-parallel
+//! Rust ("CPU-parallel") lane.
 //!
 //! Shape (vLLM-router-flavored, scaled to this paper's workload):
 //!
@@ -8,12 +9,15 @@
 //!  submit() ──► bounded RequestQueue (backpressure: Block | Reject)
 //!                      │
 //!                 Batcher: drains the queue, groups jobs by
-//!                 (shape, variant, lane) up to max_batch / linger
+//!                 (shape, variant, lane) up to the head lane's
+//!                 max_batch / linger (max 1 => no coalescing)
 //!                      │
 //!              ┌───────┴────────┐
 //!        worker 0 ..      worker N-1     (std threads)
-//!        GPU lane: runtime::Executor (cached PJRT executables)
-//!        CPU lane: dct::pipeline::CpuPipeline (serial scalar)
+//!        GPU lane:          runtime::Executor (cached PJRT executables)
+//!        CPU lane:          dct::pipeline::CpuPipeline (serial scalar)
+//!        CPU-parallel lane: dct::parallel::ParallelCpuPipeline
+//!                           (row-band tiles over scoped threads)
 //!                      │
 //!              per-job result channel ──► JobHandle::wait()
 //! ```

@@ -16,6 +16,9 @@ use crate::image::GrayImage;
 pub enum Lane {
     /// Serial scalar Rust (the paper's "CPU serial code").
     Cpu,
+    /// Block-parallel Rust over a scoped thread pool
+    /// (`dct::parallel::ParallelCpuPipeline`).
+    CpuParallel,
     /// AOT PJRT executables (the paper's CUDA lane).
     Gpu,
     /// Router decides: GPU when an artifact for the shape exists.
@@ -26,6 +29,9 @@ impl Lane {
     pub fn parse(s: &str) -> Option<Lane> {
         match s.to_ascii_lowercase().as_str() {
             "cpu" => Some(Lane::Cpu),
+            "cpu-parallel" | "cpu_parallel" | "cpupar" | "parallel" => {
+                Some(Lane::CpuParallel)
+            }
             "gpu" | "pjrt" | "xla" => Some(Lane::Gpu),
             "auto" => Some(Lane::Auto),
             _ => None,
@@ -204,12 +210,33 @@ impl RequestQueue {
         Ok(JobHandle { id, rx })
     }
 
-    /// Blocking pop of up to `max` jobs sharing one batch key (FIFO head
-    /// defines the key; non-matching jobs stay queued). Waits up to
-    /// `linger` after the first job for more same-key arrivals.
-    /// Returns None when the queue is closed and drained.
+    /// Blocking pop of up to `max` same-key jobs (FIFO head defines the
+    /// key). Convenience wrapper over [`RequestQueue::pop_batch_with`]
+    /// with a lane-independent cap.
     pub(crate) fn pop_batch(&self, max: usize, linger: Duration)
                             -> Option<Vec<QueuedJob>> {
+        self.pop_batch_with(|_| max, linger)
+    }
+
+    /// Blocking pop of jobs sharing one batch key (FIFO head defines the
+    /// key; non-matching jobs stay queued). The per-batch cap comes from
+    /// `max_for(head_request)` so each lane's policy applies — the worker
+    /// passes `BatchPolicy::max_for(lane)` here.
+    ///
+    /// Edge-case contract (exercised by the batcher tests):
+    /// * `max_for` of 1 bypasses straggler coalescing entirely — the head
+    ///   job returns alone, immediately, even if same-key jobs are queued
+    ///   behind it and a linger is configured.
+    /// * `linger == Duration::ZERO` never sleeps: whatever is contiguously
+    ///   queued is taken, nothing is waited for (and no deadline clock is
+    ///   read).
+    ///
+    /// Returns None when the queue is closed and drained.
+    pub(crate) fn pop_batch_with<F>(&self, max_for: F, linger: Duration)
+                                    -> Option<Vec<QueuedJob>>
+    where
+        F: Fn(&Request) -> usize,
+    {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if !inner.jobs.is_empty() {
@@ -220,37 +247,44 @@ impl RequestQueue {
             }
             inner = self.not_empty.wait(inner).unwrap();
         }
-        let key = inner.jobs.front().unwrap().request.batch_key();
-        let mut batch = vec![inner.jobs.pop_front().unwrap()];
-        let deadline = Instant::now() + linger;
-        loop {
-            // take contiguous same-key jobs from the head
-            while batch.len() < max {
-                match inner.jobs.front() {
-                    Some(j) if j.request.batch_key() == key => {
-                        batch.push(inner.jobs.pop_front().unwrap());
+        let head = inner.jobs.pop_front().unwrap();
+        let key = head.request.batch_key();
+        let max = max_for(&head.request).max(1);
+        let mut batch = vec![head];
+        // max == 1: no coalescing at all — return the head job alone.
+        if max > 1 {
+            // lazily initialized so a zero linger never reads the clock
+            let mut deadline: Option<Instant> = None;
+            loop {
+                // take contiguous same-key jobs from the head
+                while batch.len() < max {
+                    match inner.jobs.front() {
+                        Some(j) if j.request.batch_key() == key => {
+                            batch.push(inner.jobs.pop_front().unwrap());
+                        }
+                        _ => break,
                     }
-                    _ => break,
                 }
-            }
-            if batch.len() >= max || inner.closed || linger.is_zero() {
-                break;
-            }
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            // a non-matching job at the head also ends the batch
-            if !inner.jobs.is_empty() {
-                break;
-            }
-            let (next, timeout) = self
-                .not_empty
-                .wait_timeout(inner, deadline - now)
-                .unwrap();
-            inner = next;
-            if timeout.timed_out() {
-                break;
+                if batch.len() >= max || inner.closed || linger.is_zero() {
+                    break;
+                }
+                // a non-matching job at the head also ends the batch
+                if !inner.jobs.is_empty() {
+                    break;
+                }
+                let now = Instant::now();
+                let dl = *deadline.get_or_insert_with(|| now + linger);
+                if now >= dl {
+                    break;
+                }
+                let (next, timeout) = self
+                    .not_empty
+                    .wait_timeout(inner, dl - now)
+                    .unwrap();
+                inner = next;
+                if timeout.timed_out() {
+                    break;
+                }
             }
         }
         drop(inner);
@@ -351,6 +385,65 @@ mod tests {
         assert!(q.submit(req(2, 16)).is_err());
         assert!(q.pop_batch(4, Duration::ZERO).is_some());
         assert!(q.pop_batch(4, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn zero_linger_never_sleeps() {
+        let q = RequestQueue::new(16, Backpressure::Reject);
+        let _h = q.submit(req(1, 16)).unwrap();
+        let t0 = std::time::Instant::now();
+        let b = q.pop_batch(8, Duration::ZERO).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_millis(50),
+            "zero linger slept {:?}",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn max_one_bypasses_coalescing() {
+        // two same-key jobs queued, a long linger configured: max 1 must
+        // return the head alone, immediately.
+        let q = RequestQueue::new(16, Backpressure::Reject);
+        let _h1 = q.submit(req(1, 16)).unwrap();
+        let _h2 = q.submit(req(2, 16)).unwrap();
+        let t0 = std::time::Instant::now();
+        let b = q.pop_batch(1, Duration::from_secs(5)).unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].request.id, 1);
+        assert!(
+            t0.elapsed() < Duration::from_millis(100),
+            "max=1 lingered {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(q.len(), 1, "second job stays queued");
+    }
+
+    #[test]
+    fn per_request_max_applies_to_head_lane() {
+        // head job's lane decides the cap: Cpu head capped at 1 leaves the
+        // rest queued even though the global pop could take 8.
+        let q = RequestQueue::new(16, Backpressure::Reject);
+        for id in 1..=4 {
+            let _ = q.submit(req(id, 16)).unwrap();
+        }
+        let cap = |r: &Request| match r.lane {
+            Lane::Cpu => 1usize,
+            _ => 8,
+        };
+        let b = q.pop_batch_with(cap, Duration::ZERO).unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn parse_cpu_parallel_lane() {
+        assert_eq!(Lane::parse("cpu-parallel"), Some(Lane::CpuParallel));
+        assert_eq!(Lane::parse("CPU_PARALLEL"), Some(Lane::CpuParallel));
+        assert_eq!(Lane::parse("parallel"), Some(Lane::CpuParallel));
+        assert_eq!(Lane::parse("cpu"), Some(Lane::Cpu));
+        assert_eq!(Lane::parse("bogus"), None);
     }
 
     #[test]

@@ -24,6 +24,11 @@ use super::worker::{self, WorkerCtx};
 pub struct ServiceConfig {
     /// Worker thread count.
     pub workers: usize,
+    /// Threads each `CpuParallel`-lane job fans out over. `0` = machine
+    /// default divided by the worker count, so a fully busy worker pool
+    /// running parallel-lane jobs does not oversubscribe the cores; set
+    /// explicitly (e.g. to the core count) for lone-job deployments.
+    pub cpu_parallel_workers: usize,
     /// Request queue capacity (backpressure boundary).
     pub queue_capacity: usize,
     pub backpressure: Backpressure,
@@ -38,6 +43,7 @@ impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
             workers: crate::util::threadpool::ThreadPool::default_size(),
+            cpu_parallel_workers: 0,
             queue_capacity: 256,
             backpressure: Backpressure::Block,
             batch: BatchPolicy::default(),
@@ -84,6 +90,15 @@ impl Service {
         ));
         let queue_hist = Arc::new(SharedHistogram::default());
         let process_hist = Arc::new(SharedHistogram::default());
+        // resolve the parallel-lane fan-out: divide the machine across the
+        // worker pool unless the config pins an explicit count
+        let parallel_workers = if cfg.cpu_parallel_workers > 0 {
+            cfg.cpu_parallel_workers
+        } else {
+            (crate::util::threadpool::ThreadPool::default_size()
+                / cfg.workers.max(1))
+            .max(1)
+        };
         let mut workers = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers.max(1) {
             let ctx = WorkerCtx {
@@ -93,6 +108,7 @@ impl Service {
                     .map(|rt| Arc::new(Executor::new(Arc::clone(rt)))),
                 policy: cfg.batch,
                 quality: cfg.quality,
+                parallel_workers,
                 queue_hist: Arc::clone(&queue_hist),
                 process_hist: Arc::clone(&process_hist),
             };
@@ -230,6 +246,33 @@ mod tests {
         let stats = svc.stats();
         assert_eq!(stats.submitted, 40);
         assert_eq!(stats.process.0, 40);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn parallel_lane_end_to_end() {
+        let svc = Service::start(ServiceConfig {
+            workers: 2,
+            cpu_parallel_workers: 4,
+            artifact_dir: None,
+            ..Default::default()
+        })
+        .unwrap();
+        let img = synthetic::lena_like(64, 48, 3);
+        let a = svc
+            .compress(img.clone(), Variant::Dct, Lane::Cpu)
+            .unwrap()
+            .wait();
+        let b = svc
+            .compress(img, Variant::Dct, Lane::CpuParallel)
+            .unwrap()
+            .wait();
+        assert_eq!(a.lane, Lane::Cpu);
+        assert_eq!(b.lane, Lane::CpuParallel);
+        let (oa, ob) = (a.result.unwrap(), b.result.unwrap());
+        // three-lane invariant: the parallel lane is bit-identical
+        assert_eq!(oa.image, ob.image);
+        assert_eq!(oa.compressed_bytes, ob.compressed_bytes);
         svc.shutdown();
     }
 

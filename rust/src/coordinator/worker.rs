@@ -7,6 +7,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::codec::{encoder, variant_tag, Header};
+use crate::dct::parallel::ParallelCpuPipeline;
 use crate::dct::pipeline::CpuPipeline;
 use crate::dct::Variant;
 use crate::image::{histeq, GrayImage};
@@ -25,6 +26,9 @@ pub struct WorkerCtx {
     pub executor: Option<Arc<Executor>>,
     pub policy: BatchPolicy,
     pub quality: u8,
+    /// Thread count for each `CpuParallel`-lane job (already resolved by
+    /// the service: explicit config or machine-default / worker-count).
+    pub parallel_workers: usize,
     pub queue_hist: Arc<SharedHistogram>,
     pub process_hist: Arc<SharedHistogram>,
 }
@@ -32,9 +36,12 @@ pub struct WorkerCtx {
 /// Run the worker loop until the queue closes.
 pub fn run(ctx: &WorkerCtx) {
     loop {
-        let Some(batch) =
-            ctx.queue.pop_batch(ctx.policy.pop_max(), ctx.policy.linger)
-        else {
+        // the head job's lane picks the batch cap, so a max-1 lane (serial
+        // CPU by default) never coalesces stragglers
+        let Some(batch) = ctx.queue.pop_batch_with(
+            |r| ctx.policy.max_for(r.lane),
+            ctx.policy.linger,
+        ) else {
             return;
         };
         // One cached-executable resolve serves the whole same-key batch —
@@ -64,10 +71,11 @@ fn process_job(ctx: &WorkerCtx, job: QueuedJob) {
 }
 
 /// Auto routing: GPU when the executor exists and has an artifact for the
-/// padded shape, else CPU.
+/// padded shape, else serial CPU.
 fn resolve_lane(ctx: &WorkerCtx, req: &Request) -> Lane {
     match req.lane {
         Lane::Cpu => Lane::Cpu,
+        Lane::CpuParallel => Lane::CpuParallel,
         Lane::Gpu => Lane::Gpu,
         Lane::Auto => match &ctx.executor {
             Some(ex) => {
@@ -92,6 +100,24 @@ fn resolve_lane(ctx: &WorkerCtx, req: &Request) -> Lane {
     }
 }
 
+/// Entropy-code + package the payload all compress lanes share.
+fn compress_output(
+    original: &GrayImage,
+    recon: GrayImage,
+    qcoef: &[f32],
+    pw: usize,
+    ph: usize,
+    variant: Variant,
+    quality: u8,
+) -> Result<JobOutput> {
+    let bytes = entropy_encode(original, qcoef, pw, ph, variant, quality)?;
+    Ok(JobOutput {
+        psnr_db: Some(psnr(original, &recon)),
+        image: recon,
+        compressed_bytes: Some(bytes.len()),
+    })
+}
+
 fn run_job(ctx: &WorkerCtx, req: &Request, lane: Lane)
            -> Result<JobOutput> {
     match (req.kind, lane) {
@@ -101,36 +127,45 @@ fn run_job(ctx: &WorkerCtx, req: &Request, lane: Lane)
                 .as_ref()
                 .ok_or_else(|| anyhow::anyhow!("no GPU lane configured"))?;
             let out = ex.compress(&req.image, req.variant.as_str())?;
-            let bytes = entropy_encode(
+            compress_output(
                 &req.image,
+                out.recon,
                 &out.qcoef,
                 out.padded_width,
                 out.padded_height,
                 req.variant,
                 ctx.quality,
-            )?;
-            Ok(JobOutput {
-                psnr_db: Some(psnr(&req.image, &out.recon)),
-                image: out.recon,
-                compressed_bytes: Some(bytes.len()),
-            })
+            )
+        }
+        (RequestKind::Compress, Lane::CpuParallel) => {
+            let pipe = ParallelCpuPipeline::with_workers(
+                req.variant,
+                ctx.quality,
+                ctx.parallel_workers,
+            );
+            let out = pipe.compress(&req.image);
+            compress_output(
+                &req.image,
+                out.recon,
+                &out.qcoef,
+                out.padded_width,
+                out.padded_height,
+                req.variant,
+                ctx.quality,
+            )
         }
         (RequestKind::Compress, _) => {
             let pipe = CpuPipeline::new(req.variant, ctx.quality);
             let out = pipe.compress(&req.image);
-            let bytes = entropy_encode(
+            compress_output(
                 &req.image,
+                out.recon,
                 &out.qcoef,
                 out.padded_width,
                 out.padded_height,
                 req.variant,
                 ctx.quality,
-            )?;
-            Ok(JobOutput {
-                psnr_db: Some(psnr(&req.image, &out.recon)),
-                image: out.recon,
-                compressed_bytes: Some(bytes.len()),
-            })
+            )
         }
         (RequestKind::Histeq, Lane::Gpu) => {
             let ex = ctx
@@ -186,6 +221,7 @@ mod tests {
             executor: None,
             policy: BatchPolicy::default(),
             quality: 50,
+            parallel_workers: 2,
             queue_hist: Arc::new(SharedHistogram::default()),
             process_hist: Arc::new(SharedHistogram::default()),
         }
@@ -214,6 +250,35 @@ mod tests {
     }
 
     #[test]
+    fn parallel_lane_matches_serial_lane() {
+        let ctx = Arc::new(cpu_ctx(8));
+        let img = synthetic::lena_like(48, 40, 2);
+        let h_ser = ctx
+            .queue
+            .submit(Request::compress(1, img.clone(), Variant::Cordic,
+                                      Lane::Cpu))
+            .unwrap();
+        let h_par = ctx
+            .queue
+            .submit(Request::compress(2, img.clone(), Variant::Cordic,
+                                      Lane::CpuParallel))
+            .unwrap();
+        let ctx2 = Arc::clone(&ctx);
+        let t = std::thread::spawn(move || run(&ctx2));
+        let r_ser = h_ser.wait();
+        let r_par = h_par.wait();
+        ctx.queue.close();
+        t.join().unwrap();
+        assert_eq!(r_par.lane, Lane::CpuParallel);
+        let o_ser = r_ser.result.unwrap();
+        let o_par = r_par.result.unwrap();
+        // bit-identical pipeline => identical reconstruction and size
+        assert_eq!(o_par.image, o_ser.image);
+        assert_eq!(o_par.compressed_bytes, o_ser.compressed_bytes);
+        assert_eq!(o_par.psnr_db, o_ser.psnr_db);
+    }
+
+    #[test]
     fn auto_without_executor_routes_cpu() {
         let ctx = cpu_ctx(4);
         let req = Request::compress(
@@ -223,6 +288,13 @@ mod tests {
             Lane::Auto,
         );
         assert_eq!(resolve_lane(&ctx, &req), Lane::Cpu);
+        let par = Request::compress(
+            2,
+            synthetic::lena_like(16, 16, 2),
+            Variant::Dct,
+            Lane::CpuParallel,
+        );
+        assert_eq!(resolve_lane(&ctx, &par), Lane::CpuParallel);
     }
 
     #[test]

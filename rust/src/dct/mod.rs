@@ -12,6 +12,10 @@
 //! * [`cordic_loeffler`] — the paper's subject: Loeffler with fixed-point
 //!   CORDIC shift-add rotators (paper Fig. 1)
 //!
+//! [`pipeline`] is the serial one-thread lane exactly as the paper ran it;
+//! [`parallel`] fans the same arithmetic over row-band tiles and worker
+//! threads (bit-identical output — the coordinator's `CpuParallel` lane).
+//!
 //! All implementations produce *orthonormally scaled* coefficients so they
 //! are interchangeable in front of [`quant`] and bit-compatible with the
 //! Pallas kernels in `python/compile/kernels/` (same arithmetic, checked
@@ -23,6 +27,7 @@ pub mod cordic_loeffler;
 pub mod loeffler;
 pub mod matrix;
 pub mod naive;
+pub mod parallel;
 pub mod pipeline;
 pub mod quant;
 

@@ -1,0 +1,247 @@
+//! Block-parallel CPU compression pipeline — the third lane.
+//!
+//! The paper compares *serial* CPU code against CUDA; a fair modern-CPU
+//! baseline also needs the multi-core number (the parallel-vs-sequential
+//! methodology of Haque et al., arXiv:1404.0774). This pipeline partitions
+//! the padded block grid into row-band tiles (one band = one row of 8x8
+//! blocks) and fans the bands out over scoped worker threads
+//! ([`crate::util::threadpool::parallel_map`], which may borrow the image).
+//!
+//! Bit-exactness: every block runs the exact same code path as the serial
+//! [`CpuPipeline`] — same `extract_block` / `forward` / `quantize` /
+//! `dequantize` / `inverse` / `store_block` calls on the same `f32`
+//! values — and blocks are independent, so `qcoef` and the reconstruction
+//! are bit-identical to the serial lane for every [`Variant`] and quality
+//! (asserted by `tests/parallel_parity.rs`).
+
+use crate::image::GrayImage;
+
+use super::blocks::{
+    self, extract_block, grid_dims, load_coef_planar, pad_to_blocks,
+    store_block, store_coef_planar,
+};
+use super::matrix::MatrixDct;
+use super::pipeline::CpuCompressOutput;
+use super::quant::{dequantize_block, effective_qtable, quantize_block};
+use super::{Transform8x8, Variant};
+use crate::util::threadpool::{parallel_map, ThreadPool};
+
+/// Block-parallel compression pipeline: serial arithmetic, parallel grid.
+pub struct ParallelCpuPipeline {
+    transform: Box<dyn Transform8x8>,
+    decoder: MatrixDct,
+    qtable: [f32; 64],
+    pub variant: Variant,
+    pub quality: u8,
+    workers: usize,
+}
+
+impl ParallelCpuPipeline {
+    /// Pipeline with the machine-default worker count.
+    pub fn new(variant: Variant, quality: u8) -> Self {
+        Self::with_workers(variant, quality, 0)
+    }
+
+    /// Pipeline with an explicit worker count (`0` = machine default).
+    pub fn with_workers(variant: Variant, quality: u8, workers: usize) -> Self {
+        let workers = if workers == 0 {
+            ThreadPool::default_size()
+        } else {
+            workers
+        };
+        ParallelCpuPipeline {
+            transform: variant.transform(),
+            decoder: MatrixDct::new(),
+            qtable: effective_qtable(quality),
+            variant,
+            quality,
+            workers,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn transform_name(&self) -> &'static str {
+        self.transform.name()
+    }
+
+    /// One row-band of blocks: forward transform + quantize (+ optionally
+    /// decode) into band-local buffers. Runs on a worker thread.
+    fn process_band(
+        &self,
+        padded: &GrayImage,
+        by: usize,
+        gw: usize,
+        decode: bool,
+    ) -> (Vec<f32>, Option<GrayImage>) {
+        let w = padded.width;
+        let mut qrow = vec![0.0f32; w * blocks::BLOCK];
+        let mut band = decode.then(|| GrayImage::new(w, blocks::BLOCK));
+        let mut block = [0.0f32; 64];
+        let mut qc = [0i16; 64];
+        for bx in 0..gw {
+            extract_block(padded, bx, by, &mut block);
+            self.transform.forward(&mut block);
+            quantize_block(&block, &self.qtable, &mut qc);
+            // band-local planar layout: same helper, block-row 0
+            store_coef_planar(&mut qrow, w, bx, 0, &qc);
+            if let Some(band) = band.as_mut() {
+                dequantize_block(&qc, &self.qtable, &mut block);
+                self.decoder.inverse(&mut block);
+                store_block(band, bx, 0, &block);
+            }
+        }
+        (qrow, band)
+    }
+
+    /// Full pipeline over an image; bit-identical to
+    /// [`CpuPipeline::compress`](super::pipeline::CpuPipeline::compress).
+    pub fn compress(&self, img: &GrayImage) -> CpuCompressOutput {
+        let padded = pad_to_blocks(img);
+        let (gw, gh) = grid_dims(padded.width, padded.height);
+        let bands = parallel_map(gh, self.workers, |by| {
+            self.process_band(&padded, by, gw, true)
+        });
+        let mut qcoef = Vec::with_capacity(padded.pixels());
+        let mut pixels = Vec::with_capacity(padded.pixels());
+        for (qrow, band) in bands {
+            qcoef.extend_from_slice(&qrow);
+            pixels.extend_from_slice(&band.expect("decoded band").data);
+        }
+        let recon = GrayImage {
+            width: padded.width,
+            height: padded.height,
+            data: pixels,
+        };
+        let recon = if (padded.width, padded.height)
+            != (img.width, img.height)
+        {
+            recon.crop(img.width, img.height).expect("crop to original")
+        } else {
+            recon
+        };
+        CpuCompressOutput {
+            recon,
+            qcoef,
+            padded_width: padded.width,
+            padded_height: padded.height,
+        }
+    }
+
+    /// Forward transform + quantization only; bit-identical to
+    /// [`CpuPipeline::analyze`](super::pipeline::CpuPipeline::analyze).
+    pub fn analyze(&self, img: &GrayImage) -> (Vec<f32>, usize, usize) {
+        let padded = pad_to_blocks(img);
+        let (gw, gh) = grid_dims(padded.width, padded.height);
+        let bands = parallel_map(gh, self.workers, |by| {
+            self.process_band(&padded, by, gw, false).0
+        });
+        let mut qcoef = Vec::with_capacity(padded.pixels());
+        for qrow in bands {
+            qcoef.extend_from_slice(&qrow);
+        }
+        (qcoef, padded.width, padded.height)
+    }
+
+    /// Decode planar quantized coefficients back to an image, band-parallel.
+    pub fn decode_coefficients(
+        &self,
+        qcoef: &[f32],
+        padded_width: usize,
+        padded_height: usize,
+        out_width: usize,
+        out_height: usize,
+    ) -> GrayImage {
+        let (gw, gh) = grid_dims(padded_width, padded_height);
+        let bands = parallel_map(gh, self.workers, |by| {
+            let mut band = GrayImage::new(padded_width, blocks::BLOCK);
+            let mut qc = [0i16; 64];
+            let mut block = [0.0f32; 64];
+            for bx in 0..gw {
+                load_coef_planar(qcoef, padded_width, bx, by, &mut qc);
+                dequantize_block(&qc, &self.qtable, &mut block);
+                self.decoder.inverse(&mut block);
+                store_block(&mut band, bx, 0, &block);
+            }
+            band.data
+        });
+        let mut pixels = Vec::with_capacity(padded_width * padded_height);
+        for band in bands {
+            pixels.extend_from_slice(&band);
+        }
+        let recon = GrayImage {
+            width: padded_width,
+            height: padded_height,
+            data: pixels,
+        };
+        if (padded_width, padded_height) != (out_width, out_height) {
+            recon.crop(out_width, out_height).expect("crop")
+        } else {
+            recon
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dct::pipeline::CpuPipeline;
+    use crate::image::synthetic;
+    use crate::metrics::psnr;
+
+    #[test]
+    fn matches_serial_on_aligned_image() {
+        let img = synthetic::lena_like(64, 64, 1);
+        let serial = CpuPipeline::new(Variant::Dct, 50).compress(&img);
+        let par = ParallelCpuPipeline::with_workers(Variant::Dct, 50, 4)
+            .compress(&img);
+        assert_eq!(par.qcoef, serial.qcoef);
+        assert_eq!(par.recon, serial.recon);
+        assert_eq!(
+            (par.padded_width, par.padded_height),
+            (serial.padded_width, serial.padded_height)
+        );
+    }
+
+    #[test]
+    fn matches_serial_on_unaligned_image() {
+        let img = synthetic::cablecar_like(30, 21, 4);
+        let serial = CpuPipeline::new(Variant::Cordic, 50).compress(&img);
+        let par = ParallelCpuPipeline::with_workers(Variant::Cordic, 50, 3)
+            .compress(&img);
+        assert_eq!(par.qcoef, serial.qcoef);
+        assert_eq!(par.recon, serial.recon);
+        assert_eq!((par.recon.width, par.recon.height), (30, 21));
+    }
+
+    #[test]
+    fn analyze_matches_compress() {
+        let img = synthetic::lena_like(40, 32, 5);
+        let pipe = ParallelCpuPipeline::with_workers(Variant::Dct, 50, 2);
+        let full = pipe.compress(&img);
+        let (qcoef, pw, ph) = pipe.analyze(&img);
+        assert_eq!(qcoef, full.qcoef);
+        let recon = pipe.decode_coefficients(&qcoef, pw, ph, 40, 32);
+        assert_eq!(recon, full.recon);
+    }
+
+    #[test]
+    fn single_worker_is_fine() {
+        let img = synthetic::lena_like(24, 24, 2);
+        let serial = CpuPipeline::new(Variant::Loeffler, 75).compress(&img);
+        let par =
+            ParallelCpuPipeline::with_workers(Variant::Loeffler, 75, 1)
+                .compress(&img);
+        assert_eq!(par.qcoef, serial.qcoef);
+        assert!(psnr(&img, &par.recon) > 28.0);
+    }
+
+    #[test]
+    fn default_workers_at_least_one() {
+        let p = ParallelCpuPipeline::new(Variant::Dct, 50);
+        assert!(p.workers() >= 1);
+        assert_eq!(p.transform_name(), "matrix");
+    }
+}

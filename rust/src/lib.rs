@@ -9,8 +9,22 @@
 //! by the PJRT CPU client at serve time); the paper's serial-CPU lane is
 //! rebuilt as scalar Rust in [`dct`]. The [`coordinator`] is the serving
 //! layer: a request router + dynamic batcher + worker pool dispatching
-//! images to either lane. See DESIGN.md for the full system inventory and
-//! the hardware-adaptation argument.
+//! images across three lanes. See DESIGN.md for the full system inventory
+//! and the hardware-adaptation argument.
+//!
+//! ## The three lanes
+//!
+//! | lane          | implementation                          | role |
+//! |---------------|-----------------------------------------|------|
+//! | `Cpu`         | [`dct::pipeline::CpuPipeline`], one thread | the paper's "CPU serial code" baseline |
+//! | `CpuParallel` | [`dct::parallel::ParallelCpuPipeline`], row-band tiles over scoped threads | the fair multi-core CPU number; bit-identical to `Cpu` |
+//! | `Gpu`         | [`runtime::Executor`] over cached PJRT executables | the paper's CUDA lane |
+//!
+//! The parallel lane exists because comparing CUDA against one core
+//! flatters the GPU; it runs the *same arithmetic* as the serial lane
+//! (asserted bit-exact by `tests/parallel_parity.rs`) so the three-way
+//! comparison isolates scheduling from numerics. `Lane::Auto` routes to
+//! `Gpu` when an artifact covers the padded shape, else `Cpu`.
 //!
 //! ## Layers
 //!
@@ -21,16 +35,18 @@
 //!   test-image generators (the Lena / Cable-car stand-ins), resize,
 //!   histogram equalization.
 //! * [`dct`] — the transform substrate: naive / matrix / Loeffler /
-//!   Cordic-based-Loeffler 8x8 DCTs, JPEG quantization, block management.
+//!   Cordic-based-Loeffler 8x8 DCTs, JPEG quantization, block management,
+//!   and the serial + block-parallel CPU pipelines.
 //! * [`codec`] — a complete entropy codec (zigzag, DC-DPCM + AC-RLE,
 //!   canonical Huffman, bitstream container) turning quantized
 //!   coefficients into a real compressed file format.
 //! * [`metrics`] — MSE / PSNR / SSIM and latency statistics.
 //! * [`runtime`] — the PJRT side: artifact manifest, executable cache,
 //!   literal marshaling.
-//! * [`coordinator`] — router, batcher, worker pool, service facade.
+//! * [`coordinator`] — router, per-lane batcher, worker pool, service
+//!   facade over all three lanes.
 //! * [`bench`] — the measurement harness and the paper-table formatters
-//!   used by `cargo bench` targets.
+//!   used by `cargo bench` targets (now with serial/parallel/GPU columns).
 
 pub mod bench;
 pub mod codec;

@@ -86,7 +86,9 @@ fn parse_variant(s: &str) -> Result<Variant> {
 }
 
 fn parse_lane(s: &str) -> Result<Lane> {
-    Lane::parse(s).with_context(|| format!("unknown lane '{s}' (cpu | gpu | auto)"))
+    Lane::parse(s).with_context(|| {
+        format!("unknown lane '{s}' (cpu | cpu-parallel | gpu | auto)")
+    })
 }
 
 fn cmd_compress(args: &[String]) -> Result<()> {
@@ -173,8 +175,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("scene", "lena", "scene generator: lena|cablecar")
         .opt("size", "512", "square image size")
         .opt("variant", "cordic", "transform variant")
-        .opt("lane", "auto", "cpu|gpu|auto")
+        .opt("lane", "auto", "cpu|cpu-parallel|gpu|auto")
         .opt("workers", "0", "worker threads (0 = machine default)")
+        .opt("par-workers", "0",
+             "threads per cpu-parallel job (0 = machine default)")
         .opt("queue", "256", "queue capacity")
         .opt("batch", "8", "gpu max batch")
         .opt("artifacts", "artifacts", "artifact dir ('' disables GPU lane)")
@@ -192,6 +196,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     if workers > 0 {
         cfg.workers = workers;
     }
+    cfg.cpu_parallel_workers = m.get_usize("par-workers")?;
     cfg.batch.gpu_max_batch = m.get_usize("batch")?;
     let adir = m.get("artifacts");
     cfg.artifact_dir =

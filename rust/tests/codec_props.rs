@@ -1,11 +1,13 @@
 //! Property tests (in-crate proptest harness) over the codec and
 //! transform invariants DESIGN.md §7 calls out.
 
-use cordic_dct::codec::{decoder, encoder, variant_tag, zigzag, Header};
+use cordic_dct::codec::huffman::{HuffmanCode, HuffmanDecoder};
+use cordic_dct::codec::{decoder, encoder, rle, variant_tag, zigzag, Header};
 use cordic_dct::dct::pipeline::CpuPipeline;
 use cordic_dct::dct::{matrix::MatrixDct, Transform8x8, Variant};
 use cordic_dct::image::GrayImage;
 use cordic_dct::metrics;
+use cordic_dct::util::bitio::{BitReader, BitWriter};
 use cordic_dct::util::proptest::{check, gen, Shrink};
 use cordic_dct::util::prng::Rng;
 
@@ -110,6 +112,173 @@ fn prop_container_roundtrip_lossless() {
         }
         Ok(())
     });
+}
+
+/// Full single-block path the container uses, with *real* per-block
+/// Huffman tables: zigzag -> RLE symbols -> canonical Huffman -> bitstream
+/// -> decode -> unscan must be lossless.
+fn block_roundtrip_via_huffman(block: &[i16; 64], prev_dc: i16) -> [i16; 64] {
+    let scan = zigzag::scan(block);
+    let sym = rle::encode_block(&scan, prev_dc);
+    // build tables from this block's own statistics (as the two-pass
+    // encoder does per image)
+    let mut dc_freq = [0u64; 256];
+    let mut ac_freq = [0u64; 256];
+    dc_freq[sym.dc.0 as usize] += 1;
+    for &(s, _) in &sym.ac {
+        ac_freq[s as usize] += 1;
+    }
+    if ac_freq.iter().all(|&f| f == 0) {
+        ac_freq[rle::EOB as usize] = 1;
+    }
+    let dc_code = HuffmanCode::build(&dc_freq).unwrap();
+    let ac_code = HuffmanCode::build(&ac_freq).unwrap();
+    let mut w = BitWriter::new();
+    rle::write_block(
+        &mut w,
+        &sym,
+        |w, s| dc_code.put(w, s),
+        |w, s| ac_code.put(w, s),
+    );
+    let bytes = w.finish();
+    let dc_dec = HuffmanDecoder::new(&dc_code);
+    let ac_dec = HuffmanDecoder::new(&ac_code);
+    let mut r = BitReader::new(&bytes);
+    let back = rle::read_block(
+        &mut r,
+        prev_dc,
+        |r| dc_dec.get(r),
+        |r| ac_dec.get(r),
+    )
+    .unwrap();
+    zigzag::unscan(&back)
+}
+
+#[test]
+fn prop_block_symbol_stream_lossless() {
+    // random quantized blocks across the sparsity spectrum, plus random
+    // DPCM predecessors
+    check(
+        120,
+        |rng| {
+            let density = rng.range_f64(0.0, 1.0);
+            let mut v = vec![0i32; 65];
+            for slot in v.iter_mut().take(64) {
+                if rng.chance(density) {
+                    *slot = rng.range_i64(-1500, 1500) as i32;
+                }
+            }
+            v[64] = rng.range_i64(-1500, 1500) as i32; // prev_dc
+            v
+        },
+        |v| {
+            if v.len() != 65 {
+                return Ok(()); // shrunk vectors lose the shape; skip
+            }
+            let mut block = [0i16; 64];
+            for i in 0..64 {
+                block[i] = v[i] as i16;
+            }
+            let prev_dc = v[64] as i16;
+            let back = block_roundtrip_via_huffman(&block, prev_dc);
+            if back == block {
+                Ok(())
+            } else {
+                Err("block not preserved through symbol stream".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn block_roundtrip_all_zero() {
+    let block = [0i16; 64];
+    for prev_dc in [0i16, -37, 1000] {
+        assert_eq!(block_roundtrip_via_huffman(&block, prev_dc), block);
+    }
+}
+
+#[test]
+fn block_roundtrip_single_dc() {
+    for dc in [1i16, -1, 512, -1024] {
+        let mut block = [0i16; 64];
+        block[0] = dc;
+        assert_eq!(block_roundtrip_via_huffman(&block, 0), block);
+        assert_eq!(block_roundtrip_via_huffman(&block, dc), block);
+    }
+}
+
+#[test]
+fn block_roundtrip_dense_and_tail() {
+    // fully dense block (no EOB) and a lone last-coefficient block (long
+    // ZRL run) — the two structural extremes of the AC model
+    let dense: [i16; 64] = std::array::from_fn(|i| (i as i16 % 7) - 3 + 1);
+    assert_eq!(block_roundtrip_via_huffman(&dense, 5), dense);
+    let mut tail = [0i16; 64];
+    tail[63] = -2;
+    assert_eq!(block_roundtrip_via_huffman(&tail, 0), tail);
+}
+
+#[test]
+fn prop_container_roundtrip_includes_degenerate_blocks() {
+    // whole-container property again, but biased to degenerate content:
+    // all-zero grids and single-DC grids must also be lossless
+    check(
+        25,
+        |rng| {
+            let gw = rng.range_i64(1, 4) as usize;
+            let gh = rng.range_i64(1, 4) as usize;
+            let mode = rng.range_i64(0, 2); // 0 zero, 1 dc-only, 2 mixed
+            let mut data = vec![0i32; gw * gh * 64 + 2];
+            data[0] = gw as i32;
+            data[1] = gh as i32;
+            if mode > 0 {
+                let w = gw * 8;
+                for by in 0..gh {
+                    for bx in 0..gw {
+                        let dc = rng.range_i64(-900, 900) as i32;
+                        data[2 + (by * 8) * w + bx * 8] = dc;
+                        if mode == 2 && rng.chance(0.5) {
+                            data[2 + (by * 8 + 3) * w + bx * 8 + 2] =
+                                rng.range_i64(-40, 40) as i32;
+                        }
+                    }
+                }
+            }
+            data
+        },
+        |data| {
+            if data.len() < 2 {
+                return Ok(());
+            }
+            let (gw, gh) = (data[0], data[1]);
+            if !(1..=8).contains(&gw) || !(1..=8).contains(&gh) {
+                return Ok(()); // shrunk shapes; skip
+            }
+            let (gw, gh) = (gw as usize, gh as usize);
+            if data.len() != gw * gh * 64 + 2 {
+                return Ok(());
+            }
+            let (pw, ph) = (gw * 8, gh * 8);
+            let planar: Vec<f32> =
+                data[2..].iter().map(|&v| v as f32).collect();
+            let header = Header {
+                width: pw as u32,
+                height: ph as u32,
+                padded_width: pw as u32,
+                padded_height: ph as u32,
+                quality: 50,
+                variant: variant_tag(Variant::Dct),
+            };
+            let bytes = encoder::encode(&header, &planar)
+                .map_err(|e| e.to_string())?;
+            let dec = decoder::decode(&bytes).map_err(|e| e.to_string())?;
+            if dec.qcoef_planar != planar {
+                return Err("degenerate grid not preserved".into());
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

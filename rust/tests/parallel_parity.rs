@@ -1,0 +1,164 @@
+//! Conformance suite for the parallel CPU lane: the block-parallel
+//! pipeline must be *bit-identical* to the serial reference for every
+//! variant, quality and image shape (the precision-validation approach of
+//! Ben Saad et al., arXiv:1606.02424, applied to threading instead of
+//! arithmetic), plus thread-pool failure-propagation coverage.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use cordic_dct::dct::parallel::ParallelCpuPipeline;
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::synthetic;
+use cordic_dct::metrics::psnr;
+use cordic_dct::util::threadpool::{parallel_map, ThreadPool};
+
+const ALL_VARIANTS: [Variant; 4] = [
+    Variant::Dct,
+    Variant::Loeffler,
+    Variant::Cordic,
+    Variant::Naive,
+];
+
+/// The acceptance-criteria matrix: every variant at qualities {10, 50, 90}
+/// produces bit-identical coefficients and reconstruction.
+#[test]
+fn bit_identical_across_variants_and_qualities() {
+    let img = synthetic::lena_like(48, 40, 7);
+    for variant in ALL_VARIANTS {
+        for quality in [10u8, 50, 90] {
+            let serial = CpuPipeline::new(variant, quality).compress(&img);
+            let par =
+                ParallelCpuPipeline::with_workers(variant, quality, 4)
+                    .compress(&img);
+            assert_eq!(
+                par.qcoef,
+                serial.qcoef,
+                "qcoef diverged: {} q{quality}",
+                variant.as_str()
+            );
+            assert_eq!(
+                par.recon,
+                serial.recon,
+                "recon diverged: {} q{quality}",
+                variant.as_str()
+            );
+            // bit-identical recon implies equal PSNR, but assert the
+            // metric the paper reports explicitly
+            let p_ser = psnr(&img, &serial.recon);
+            let p_par = psnr(&img, &par.recon);
+            assert_eq!(p_ser, p_par);
+        }
+    }
+}
+
+/// Odd (non-8-aligned) sizes exercise the pad/crop path under threading.
+#[test]
+fn bit_identical_on_odd_image_sizes() {
+    for (w, h) in [(1usize, 1usize), (7, 31), (30, 21), (57, 9), (64, 1)] {
+        let img = synthetic::cablecar_like(w, h, (w * 100 + h) as u64);
+        let serial = CpuPipeline::new(Variant::Cordic, 50).compress(&img);
+        let par = ParallelCpuPipeline::with_workers(Variant::Cordic, 50, 3)
+            .compress(&img);
+        assert_eq!(par.qcoef, serial.qcoef, "{w}x{h}");
+        assert_eq!(par.recon, serial.recon, "{w}x{h}");
+        assert_eq!((par.recon.width, par.recon.height), (w, h));
+        assert_eq!(
+            (par.padded_width, par.padded_height),
+            (serial.padded_width, serial.padded_height)
+        );
+    }
+}
+
+/// Worker count must never change the answer (1..=8 including counts
+/// larger than the band count).
+#[test]
+fn worker_count_never_changes_output() {
+    let img = synthetic::lena_like(40, 24, 3); // 3 bands
+    let reference = CpuPipeline::new(Variant::Dct, 50).compress(&img);
+    for workers in 1..=8 {
+        let par =
+            ParallelCpuPipeline::with_workers(Variant::Dct, 50, workers)
+                .compress(&img);
+        assert_eq!(par.qcoef, reference.qcoef, "workers={workers}");
+        assert_eq!(par.recon, reference.recon, "workers={workers}");
+    }
+}
+
+/// analyze() and decode_coefficients() agree with the serial lane too —
+/// the halves the coordinator and codec actually use.
+#[test]
+fn analyze_and_decode_match_serial() {
+    let img = synthetic::cablecar_like(50, 34, 11);
+    for variant in [Variant::Dct, Variant::Cordic] {
+        let serial = CpuPipeline::new(variant, 75);
+        let par = ParallelCpuPipeline::with_workers(variant, 75, 4);
+        let (qs, pws, phs) = serial.analyze(&img);
+        let (qp, pwp, php) = par.analyze(&img);
+        assert_eq!((pws, phs), (pwp, php));
+        assert_eq!(qs, qp, "{}", variant.as_str());
+        let rs = serial.decode_coefficients(&qs, pws, phs, 50, 34);
+        let rp = par.decode_coefficients(&qp, pwp, php, 50, 34);
+        assert_eq!(rs, rp);
+    }
+}
+
+/// Cross-pipeline mix-and-match: parallel analyze feeding the serial
+/// decoder (and vice versa) reconstructs identically.
+#[test]
+fn lanes_interchange_through_coefficients() {
+    let img = synthetic::lena_like(33, 26, 5);
+    let serial = CpuPipeline::new(Variant::Loeffler, 50);
+    let par = ParallelCpuPipeline::with_workers(Variant::Loeffler, 50, 2);
+    let (qcoef, pw, ph) = par.analyze(&img);
+    let via_serial = serial.decode_coefficients(&qcoef, pw, ph, 33, 26);
+    let via_par = par.decode_coefficients(&qcoef, pw, ph, 33, 26);
+    assert_eq!(via_serial, via_par);
+    assert_eq!(via_serial, serial.compress(&img).recon);
+}
+
+/// ThreadPool: a panicking job must surface as a panic on join().
+#[test]
+fn threadpool_propagates_job_panic_on_join() {
+    let pool = ThreadPool::new(2);
+    pool.execute(|| panic!("boom in worker"));
+    // drain: panic count becomes visible once the job ran
+    while pool.panic_count() == 0 {
+        std::thread::yield_now();
+    }
+    assert_eq!(pool.panic_count(), 1);
+    let joined = catch_unwind(AssertUnwindSafe(move || pool.join()));
+    assert!(joined.is_err(), "join() must re-throw job panics");
+}
+
+/// ThreadPool: healthy jobs join cleanly (no false positives).
+#[test]
+fn threadpool_join_clean_when_no_panics() {
+    let pool = ThreadPool::new(3);
+    for i in 0..30 {
+        pool.execute(move || {
+            let _ = i * i;
+        });
+    }
+    assert_eq!(pool.panic_count(), 0);
+    pool.join(); // must not panic
+}
+
+/// Scoped parallel_map: a panic in any band propagates to the caller
+/// (std::thread::scope re-throws on scope exit), so a poisoned parallel
+/// compress can never silently return partial output.
+#[test]
+fn parallel_map_propagates_panics() {
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        parallel_map(8, 4, |i| {
+            if i == 5 {
+                panic!("band failure");
+            }
+            i
+        })
+    }));
+    assert!(result.is_err(), "panicking band must propagate");
+    // and a healthy map still works afterwards
+    let v = parallel_map(8, 4, |i| i * 2);
+    assert_eq!(v, vec![0, 2, 4, 6, 8, 10, 12, 14]);
+}

@@ -12,6 +12,7 @@ use cordic_dct::util::prng::Rng;
 fn config(workers: usize, gpu: bool) -> ServiceConfig {
     ServiceConfig {
         workers,
+        cpu_parallel_workers: 0,
         queue_capacity: 64,
         backpressure: Backpressure::Block,
         batch: BatchPolicy::default(),
@@ -44,9 +45,13 @@ fn mixed_workload_conservation() {
         if rng.chance(0.2) {
             handles.push(svc.histeq(img, Lane::Cpu).unwrap());
         } else {
-            handles.push(
-                svc.compress(img, variant, Lane::Auto).unwrap(),
-            );
+            // mix all three CPU-side routes through the coordinator
+            let lane = if rng.chance(0.3) {
+                Lane::CpuParallel
+            } else {
+                Lane::Auto
+            };
+            handles.push(svc.compress(img, variant, lane).unwrap());
         }
     }
     let mut ids: Vec<u64> = Vec::new();

@@ -1,0 +1,86 @@
+//! Offline stand-in for `crc32fast`: the standard reflected CRC-32
+//! (IEEE 802.3, polynomial 0xEDB88320) with a compile-time lookup table.
+//! Same `Hasher` API, no SIMD.
+
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut n = 0usize;
+    while n < 256 {
+        let mut c = n as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 {
+                0xEDB8_8320 ^ (c >> 1)
+            } else {
+                c >> 1
+            };
+            k += 1;
+        }
+        table[n] = c;
+        n += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = make_table();
+
+/// Streaming CRC-32 hasher.
+#[derive(Clone, Debug, Default)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Hasher {
+    pub fn new() -> Hasher {
+        Hasher { state: 0 }
+    }
+
+    /// Resume from a previous `finalize` value.
+    pub fn new_with_initial(init: u32) -> Hasher {
+        Hasher { state: init }
+    }
+
+    pub fn update(&mut self, buf: &[u8]) {
+        let mut c = !self.state;
+        for &b in buf {
+            c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = !c;
+    }
+
+    pub fn finalize(self) -> u32 {
+        self.state
+    }
+
+    pub fn reset(&mut self) {
+        self.state = 0;
+    }
+}
+
+/// One-shot convenience.
+pub fn hash(buf: &[u8]) -> u32 {
+    let mut h = Hasher::new();
+    h.update(buf);
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // canonical CRC-32 check value
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b""), 0);
+        assert_eq!(hash(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn incremental_matches_oneshot() {
+        let mut h = Hasher::new();
+        h.update(b"hello ");
+        h.update(b"world");
+        assert_eq!(h.finalize(), hash(b"hello world"));
+    }
+}

@@ -1,0 +1,997 @@
+//! Offline stand-in for `flate2`: the `read::ZlibDecoder` /
+//! `write::ZlibEncoder` API over a pure-Rust DEFLATE implementation.
+//!
+//! * Compressor: greedy LZ77 (32 KiB window, hash chains) emitted as one
+//!   final block, fixed or dynamic Huffman by computed cost — real
+//!   compression, standards-compliant output any inflater can read.
+//! * Decompressor: full RFC 1951 inflate (stored, fixed and dynamic
+//!   blocks), modeled on Mark Adler's `puff.c`, plus RFC 1950 zlib
+//!   framing with adler32 verification. Corrupt input yields
+//!   `io::Error`, never a panic.
+
+use std::io::{self, Read, Write};
+
+/// Compression level knob (accepted for API compatibility; the encoder
+/// always runs the same LZ77 + fixed/dynamic-Huffman pipeline).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Compression(u32);
+
+impl Compression {
+    pub fn new(level: u32) -> Compression {
+        Compression(level)
+    }
+    pub fn none() -> Compression {
+        Compression(0)
+    }
+    pub fn fast() -> Compression {
+        Compression(1)
+    }
+    pub fn best() -> Compression {
+        Compression(9)
+    }
+    pub fn level(&self) -> u32 {
+        self.0
+    }
+}
+
+impl Default for Compression {
+    fn default() -> Compression {
+        Compression(6)
+    }
+}
+
+fn corrupt(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, format!("zlib: {msg}"))
+}
+
+// ---------------------------------------------------------------------------
+// adler32 (RFC 1950)
+// ---------------------------------------------------------------------------
+
+fn adler32(data: &[u8]) -> u32 {
+    const MOD: u32 = 65_521;
+    let (mut a, mut b) = (1u32, 0u32);
+    // 5552 is the largest n with n*(n+1)/2*255 + (n+1)*(MOD-1) < 2^32
+    for chunk in data.chunks(5552) {
+        for &byte in chunk {
+            a += byte as u32;
+            b += a;
+        }
+        a %= MOD;
+        b %= MOD;
+    }
+    (b << 16) | a
+}
+
+// ---------------------------------------------------------------------------
+// Shared length/distance symbol tables (RFC 1951 §3.2.5)
+// ---------------------------------------------------------------------------
+
+const LEN_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51,
+    59, 67, 83, 99, 115, 131, 163, 195, 227, 258,
+];
+const LEN_EXTRA: [u8; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4,
+    4, 5, 5, 5, 5, 0,
+];
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385,
+    513, 769, 1025, 1537, 2049, 3073, 4097, 6145, 8193, 12289, 16385,
+    24577,
+];
+const DIST_EXTRA: [u8; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10,
+    10, 11, 11, 12, 12, 13, 13,
+];
+
+// ---------------------------------------------------------------------------
+// Deflate (compressor)
+// ---------------------------------------------------------------------------
+
+/// LSB-first bit accumulator (DEFLATE bit order).
+struct BitWriter {
+    out: Vec<u8>,
+    acc: u64,
+    n: u32,
+}
+
+impl BitWriter {
+    fn new() -> BitWriter {
+        BitWriter {
+            out: Vec::new(),
+            acc: 0,
+            n: 0,
+        }
+    }
+
+    /// Write `n` bits of `value`, LSB first (plain integer fields).
+    fn bits(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 32);
+        self.acc |= value << self.n;
+        self.n += n;
+        while self.n >= 8 {
+            self.out.push(self.acc as u8);
+            self.acc >>= 8;
+            self.n -= 8;
+        }
+    }
+
+    /// Write a Huffman code (codes are packed MSB first in DEFLATE).
+    fn huff(&mut self, code: u32, len: u32) {
+        let mut rev = 0u32;
+        for k in 0..len {
+            rev = (rev << 1) | ((code >> k) & 1);
+        }
+        self.bits(rev as u64, len);
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.n > 0 {
+            self.out.push(self.acc as u8);
+        }
+        self.out
+    }
+}
+
+/// Fixed litlen code for symbol 0..=287: (code, bits). RFC 1951 §3.2.6.
+fn fixed_lit_code(sym: usize) -> (u32, u32) {
+    match sym {
+        0..=143 => (0x30 + sym as u32, 8),
+        144..=255 => (0x190 + (sym as u32 - 144), 9),
+        256..=279 => (sym as u32 - 256, 7),
+        _ => (0xC0 + (sym as u32 - 280), 8),
+    }
+}
+
+fn length_symbol(len: usize) -> (usize, u32, u32) {
+    debug_assert!((3..=258).contains(&len));
+    let mut idx = 28;
+    while LEN_BASE[idx] as usize > len {
+        idx -= 1;
+    }
+    (
+        257 + idx,
+        LEN_EXTRA[idx] as u32,
+        (len - LEN_BASE[idx] as usize) as u32,
+    )
+}
+
+fn dist_symbol(dist: usize) -> (usize, u32, u32) {
+    debug_assert!((1..=32768).contains(&dist));
+    let mut idx = 29;
+    while DIST_BASE[idx] as usize > dist {
+        idx -= 1;
+    }
+    (
+        idx,
+        DIST_EXTRA[idx] as u32,
+        (dist - DIST_BASE[idx] as usize) as u32,
+    )
+}
+
+/// LZ77 token stream element.
+enum Token {
+    Lit(u8),
+    Match { len: u16, dist: u16 },
+}
+
+/// Greedy LZ77 with hash chains: 32 KiB window, 3..258 match lengths.
+fn lz77(data: &[u8]) -> Vec<Token> {
+    const WINDOW: usize = 32 * 1024;
+    const MIN_MATCH: usize = 3;
+    const MAX_MATCH: usize = 258;
+    const HASH_BITS: u32 = 15;
+    const HASH_SIZE: usize = 1 << HASH_BITS;
+    const MAX_CHAIN: usize = 64;
+    const NONE: u32 = u32::MAX;
+
+    let n = data.len();
+    let mut tokens = Vec::new();
+    let mut head = vec![NONE; HASH_SIZE];
+    let mut prev = vec![NONE; n];
+    let hash_at = |i: usize| -> usize {
+        let h = ((data[i] as u32) << 16)
+            ^ ((data[i + 1] as u32) << 8)
+            ^ (data[i + 2] as u32);
+        (h.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+    };
+
+    let mut i = 0usize;
+    while i < n {
+        let mut best_len = 0usize;
+        let mut best_dist = 0usize;
+        if i + MIN_MATCH <= n {
+            let h = hash_at(i);
+            let mut cand = head[h];
+            let mut steps = 0usize;
+            let max = MAX_MATCH.min(n - i);
+            while cand != NONE && steps < MAX_CHAIN {
+                let c = cand as usize;
+                let dist = i - c;
+                if dist > WINDOW {
+                    break;
+                }
+                let mut l = 0usize;
+                while l < max && data[c + l] == data[i + l] {
+                    l += 1;
+                }
+                if l > best_len {
+                    best_len = l;
+                    best_dist = dist;
+                    if l >= max {
+                        break;
+                    }
+                }
+                cand = prev[c];
+                steps += 1;
+            }
+            prev[i] = head[h];
+            head[h] = i as u32;
+        }
+        if best_len >= MIN_MATCH {
+            tokens.push(Token::Match {
+                len: best_len as u16,
+                dist: best_dist as u16,
+            });
+            // index the skipped positions so later matches can see them
+            for j in i + 1..i + best_len {
+                if j + MIN_MATCH <= n {
+                    let h = hash_at(j);
+                    prev[j] = head[h];
+                    head[h] = j as u32;
+                }
+            }
+            i += best_len;
+        } else {
+            tokens.push(Token::Lit(data[i]));
+            i += 1;
+        }
+    }
+    tokens
+}
+
+/// Length-limited Huffman code lengths from frequencies (heap build +
+/// JPEG-style length rebalancing to `cap`). Zero-frequency symbols get no
+/// code; a single-symbol alphabet gets a 1-bit code.
+fn limited_lengths(freq: &[u64], cap: usize) -> Vec<u8> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    let n = freq.len();
+    let mut lens = vec![0u8; n];
+    let present: Vec<usize> = (0..n).filter(|&s| freq[s] > 0).collect();
+    match present.len() {
+        0 => return lens,
+        1 => {
+            lens[present[0]] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+    let mut parent = vec![usize::MAX; 2 * n];
+    let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+        present.iter().map(|&s| Reverse((freq[s], s))).collect();
+    let mut next_id = n;
+    while heap.len() > 1 {
+        let Reverse((wa, a)) = heap.pop().unwrap();
+        let Reverse((wb, b)) = heap.pop().unwrap();
+        parent[a] = next_id;
+        parent[b] = next_id;
+        heap.push(Reverse((wa + wb, next_id)));
+        next_id += 1;
+    }
+    for &s in &present {
+        let mut l = 0u32;
+        let mut node = s;
+        while parent[node] != usize::MAX {
+            node = parent[node];
+            l += 1;
+        }
+        lens[s] = l.min(255) as u8;
+    }
+    if lens.iter().all(|&l| (l as usize) <= cap) {
+        return lens;
+    }
+    // rebalance the length multiset under the cap (classic adjust_bits)
+    let mut counts = vec![0usize; 256];
+    for &l in &lens {
+        if l > 0 {
+            counts[l as usize] += 1;
+        }
+    }
+    let mut i = counts.len() - 1;
+    while i > cap {
+        while counts[i] > 0 {
+            let mut j = i - 2;
+            while counts[j] == 0 {
+                j -= 1;
+            }
+            counts[i] -= 2;
+            counts[i - 1] += 1;
+            counts[j + 1] += 2;
+            counts[j] -= 1;
+        }
+        i -= 1;
+    }
+    // reassign: most frequent symbols take the shortest lengths
+    let mut by_freq = present;
+    by_freq.sort_by_key(|&s| Reverse(freq[s]));
+    let mut new_lens = vec![0u8; n];
+    let mut li = 1usize;
+    for &s in &by_freq {
+        while li <= cap && counts[li] == 0 {
+            li += 1;
+        }
+        new_lens[s] = li as u8;
+        counts[li] -= 1;
+    }
+    new_lens
+}
+
+/// Canonical codes from lengths (RFC 1951 §3.2.2).
+fn codes_from_lengths(lens: &[u8]) -> Vec<u32> {
+    let max_len = lens.iter().copied().max().unwrap_or(0) as usize;
+    let mut bl_count = vec![0u32; max_len + 1];
+    for &l in lens {
+        if l > 0 {
+            bl_count[l as usize] += 1;
+        }
+    }
+    let mut next_code = vec![0u32; max_len + 1];
+    let mut code = 0u32;
+    for bits in 1..=max_len {
+        code = (code + bl_count[bits - 1]) << 1;
+        next_code[bits] = code;
+    }
+    let mut codes = vec![0u32; lens.len()];
+    for (s, &l) in lens.iter().enumerate() {
+        if l > 0 {
+            codes[s] = next_code[l as usize];
+            next_code[l as usize] += 1;
+        }
+    }
+    codes
+}
+
+/// Order of code-length code lengths in the dynamic header (RFC 1951).
+const CLEN_ORDER: [usize; 19] = [
+    16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15,
+];
+
+/// Emit the token stream with the given litlen/dist coders.
+fn emit_tokens<L, D>(w: &mut BitWriter, tokens: &[Token], lit: L, dst: D)
+where
+    L: Fn(usize) -> (u32, u32),
+    D: Fn(usize) -> (u32, u32),
+{
+    for t in tokens {
+        match *t {
+            Token::Lit(b) => {
+                let (code, clen) = lit(b as usize);
+                w.huff(code, clen);
+            }
+            Token::Match { len, dist } => {
+                let (lsym, lbits, lval) = length_symbol(len as usize);
+                let (code, clen) = lit(lsym);
+                w.huff(code, clen);
+                w.bits(lval as u64, lbits);
+                let (dsym, dbits, dval) = dist_symbol(dist as usize);
+                let (code, clen) = dst(dsym);
+                w.huff(code, clen);
+                w.bits(dval as u64, dbits);
+            }
+        }
+    }
+    let (code, clen) = lit(256); // end of block
+    w.huff(code, clen);
+}
+
+/// Raw DEFLATE stream: one final block over the whole input, choosing
+/// fixed or dynamic Huffman by computed cost.
+fn deflate(data: &[u8]) -> Vec<u8> {
+    let tokens = lz77(data);
+
+    // symbol statistics
+    let mut lit_freq = [0u64; 286];
+    let mut dist_freq = [0u64; 30];
+    for t in &tokens {
+        match *t {
+            Token::Lit(b) => lit_freq[b as usize] += 1,
+            Token::Match { len, dist } => {
+                lit_freq[length_symbol(len as usize).0] += 1;
+                dist_freq[dist_symbol(dist as usize).0] += 1;
+            }
+        }
+    }
+    lit_freq[256] += 1;
+
+    let lit_lens = limited_lengths(&lit_freq, 15);
+    let dist_lens = limited_lengths(&dist_freq, 15);
+
+    // dynamic header layout (no 16/17/18 run symbols: every length is a
+    // direct clen symbol — simpler, still standards-valid)
+    let hlit = lit_lens
+        .iter()
+        .rposition(|&l| l > 0)
+        .map(|p| p + 1)
+        .unwrap_or(257)
+        .max(257);
+    let hdist = dist_lens
+        .iter()
+        .rposition(|&l| l > 0)
+        .map(|p| p + 1)
+        .unwrap_or(1)
+        .max(1);
+    let entries: Vec<u8> = lit_lens[..hlit]
+        .iter()
+        .chain(dist_lens[..hdist].iter())
+        .copied()
+        .collect();
+    let mut clen_freq = [0u64; 19];
+    for &e in &entries {
+        clen_freq[e as usize] += 1;
+    }
+    let clen_lens = limited_lengths(&clen_freq, 7);
+    let clen_codes = codes_from_lengths(&clen_lens);
+    let hclen = (4..=19)
+        .rev()
+        .find(|&k| clen_lens[CLEN_ORDER[k - 1]] > 0)
+        .unwrap_or(4);
+
+    // cost comparison (extra bits are identical on both sides)
+    let fixed_cost: u64 = lit_freq
+        .iter()
+        .enumerate()
+        .map(|(s, &f)| f * fixed_lit_code(s).1 as u64)
+        .sum::<u64>()
+        + dist_freq.iter().sum::<u64>() * 5;
+    let header_cost: u64 = 14
+        + 3 * hclen as u64
+        + entries
+            .iter()
+            .map(|&e| clen_lens[e as usize] as u64)
+            .sum::<u64>();
+    let dyn_cost: u64 = header_cost
+        + lit_freq
+            .iter()
+            .zip(&lit_lens)
+            .map(|(&f, &l)| f * l as u64)
+            .sum::<u64>()
+        + dist_freq
+            .iter()
+            .zip(&dist_lens)
+            .map(|(&f, &l)| f * l as u64)
+            .sum::<u64>();
+
+    let mut w = BitWriter::new();
+    w.bits(1, 1); // BFINAL
+    if dyn_cost < fixed_cost {
+        w.bits(2, 2); // BTYPE = 10 (dynamic)
+        w.bits(hlit as u64 - 257, 5);
+        w.bits(hdist as u64 - 1, 5);
+        w.bits(hclen as u64 - 4, 4);
+        for &pos in CLEN_ORDER.iter().take(hclen) {
+            w.bits(clen_lens[pos] as u64, 3);
+        }
+        for &e in &entries {
+            w.huff(clen_codes[e as usize], clen_lens[e as usize] as u32);
+        }
+        let lit_codes = codes_from_lengths(&lit_lens);
+        let dist_codes = codes_from_lengths(&dist_lens);
+        emit_tokens(
+            &mut w,
+            &tokens,
+            |s| (lit_codes[s], lit_lens[s] as u32),
+            |d| (dist_codes[d], dist_lens[d] as u32),
+        );
+    } else {
+        w.bits(1, 2); // BTYPE = 01 (fixed)
+        emit_tokens(&mut w, &tokens, fixed_lit_code, |d| (d as u32, 5));
+    }
+    w.finish()
+}
+
+// ---------------------------------------------------------------------------
+// Inflate (decompressor)
+// ---------------------------------------------------------------------------
+
+/// LSB-first bit reader over a byte slice.
+struct BitReader<'a> {
+    data: &'a [u8],
+    byte: usize,
+    bit: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(data: &'a [u8]) -> BitReader<'a> {
+        BitReader { data, byte: 0, bit: 0 }
+    }
+
+    fn bits(&mut self, n: u32) -> io::Result<u32> {
+        let mut out = 0u32;
+        for k in 0..n {
+            if self.byte >= self.data.len() {
+                return Err(corrupt("bitstream exhausted"));
+            }
+            let bit = (self.data[self.byte] >> self.bit) & 1;
+            out |= (bit as u32) << k;
+            self.bit += 1;
+            if self.bit == 8 {
+                self.bit = 0;
+                self.byte += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    fn align_byte(&mut self) {
+        if self.bit != 0 {
+            self.bit = 0;
+            self.byte += 1;
+        }
+    }
+
+    fn take_bytes(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        debug_assert_eq!(self.bit, 0);
+        if self.byte + n > self.data.len() {
+            return Err(corrupt("stored block truncated"));
+        }
+        let out = &self.data[self.byte..self.byte + n];
+        self.byte += n;
+        Ok(out)
+    }
+}
+
+const MAX_CODE_BITS: usize = 15;
+
+/// Canonical Huffman decoder (puff.c count/offset scheme).
+struct Huffman {
+    count: [u16; MAX_CODE_BITS + 1],
+    symbol: Vec<u16>,
+}
+
+impl Huffman {
+    fn build(lengths: &[u8]) -> io::Result<Huffman> {
+        let mut count = [0u16; MAX_CODE_BITS + 1];
+        for &l in lengths {
+            if l as usize > MAX_CODE_BITS {
+                return Err(corrupt("code length exceeds 15"));
+            }
+            count[l as usize] += 1;
+        }
+        count[0] = 0;
+        // over-subscription check
+        let mut left = 1i32;
+        for len in 1..=MAX_CODE_BITS {
+            left <<= 1;
+            left -= count[len] as i32;
+            if left < 0 {
+                return Err(corrupt("over-subscribed Huffman code"));
+            }
+        }
+        let mut offs = [0usize; MAX_CODE_BITS + 2];
+        for len in 1..=MAX_CODE_BITS {
+            offs[len + 1] = offs[len] + count[len] as usize;
+        }
+        let nsym: usize = count[1..].iter().map(|&c| c as usize).sum();
+        let mut symbol = vec![0u16; nsym];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l != 0 {
+                symbol[offs[l as usize]] = sym as u16;
+                offs[l as usize] += 1;
+            }
+        }
+        Ok(Huffman { count, symbol })
+    }
+
+    fn decode(&self, r: &mut BitReader<'_>) -> io::Result<u16> {
+        let mut code = 0i32;
+        let mut first = 0i32;
+        let mut index = 0i32;
+        for len in 1..=MAX_CODE_BITS {
+            code |= r.bits(1)? as i32;
+            let count = self.count[len] as i32;
+            if code - count < first {
+                return Ok(self.symbol[(index + (code - first)) as usize]);
+            }
+            index += count;
+            first += count;
+            first <<= 1;
+            code <<= 1;
+        }
+        Err(corrupt("invalid Huffman code"))
+    }
+}
+
+fn inflate_block(
+    r: &mut BitReader<'_>,
+    out: &mut Vec<u8>,
+    litlen: &Huffman,
+    dist: &Huffman,
+) -> io::Result<()> {
+    loop {
+        let sym = litlen.decode(r)? as usize;
+        if sym < 256 {
+            out.push(sym as u8);
+        } else if sym == 256 {
+            return Ok(());
+        } else {
+            if sym > 285 {
+                return Err(corrupt("invalid length symbol"));
+            }
+            let idx = sym - 257;
+            let length = LEN_BASE[idx] as usize
+                + r.bits(LEN_EXTRA[idx] as u32)? as usize;
+            let dsym = dist.decode(r)? as usize;
+            if dsym > 29 {
+                return Err(corrupt("invalid distance symbol"));
+            }
+            let distance = DIST_BASE[dsym] as usize
+                + r.bits(DIST_EXTRA[dsym] as u32)? as usize;
+            if distance > out.len() {
+                return Err(corrupt("distance beyond output start"));
+            }
+            for _ in 0..length {
+                let b = out[out.len() - distance];
+                out.push(b);
+            }
+        }
+    }
+}
+
+/// Raw DEFLATE decode from `r`; `r` ends positioned after the final block.
+fn inflate(r: &mut BitReader<'_>) -> io::Result<Vec<u8>> {
+    let mut out = Vec::new();
+    loop {
+        let bfinal = r.bits(1)?;
+        let btype = r.bits(2)?;
+        match btype {
+            0 => {
+                r.align_byte();
+                let hdr = r.take_bytes(4)?;
+                let len = u16::from_le_bytes([hdr[0], hdr[1]]) as usize;
+                let nlen = u16::from_le_bytes([hdr[2], hdr[3]]);
+                if nlen != !(len as u16) {
+                    return Err(corrupt("stored block LEN/NLEN mismatch"));
+                }
+                out.extend_from_slice(r.take_bytes(len)?);
+            }
+            1 => {
+                let mut litlen_lens = [0u8; 288];
+                for (s, l) in litlen_lens.iter_mut().enumerate() {
+                    *l = match s {
+                        0..=143 => 8,
+                        144..=255 => 9,
+                        256..=279 => 7,
+                        _ => 8,
+                    };
+                }
+                let litlen = Huffman::build(&litlen_lens)?;
+                let dist = Huffman::build(&[5u8; 30])?;
+                inflate_block(r, &mut out, &litlen, &dist)?;
+            }
+            2 => {
+                let hlit = r.bits(5)? as usize + 257;
+                let hdist = r.bits(5)? as usize + 1;
+                let hclen = r.bits(4)? as usize + 4;
+                if hlit > 286 || hdist > 30 {
+                    return Err(corrupt("bad dynamic header counts"));
+                }
+                const ORDER: [usize; 19] = [
+                    16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2,
+                    14, 1, 15,
+                ];
+                let mut clen_lens = [0u8; 19];
+                for &pos in ORDER.iter().take(hclen) {
+                    clen_lens[pos] = r.bits(3)? as u8;
+                }
+                let clen = Huffman::build(&clen_lens)?;
+                let mut lens = vec![0u8; hlit + hdist];
+                let mut i = 0usize;
+                while i < lens.len() {
+                    let sym = clen.decode(r)?;
+                    match sym {
+                        0..=15 => {
+                            lens[i] = sym as u8;
+                            i += 1;
+                        }
+                        16 => {
+                            if i == 0 {
+                                return Err(corrupt("repeat with no prior"));
+                            }
+                            let prev = lens[i - 1];
+                            let rep = 3 + r.bits(2)? as usize;
+                            if i + rep > lens.len() {
+                                return Err(corrupt("repeat overruns"));
+                            }
+                            for _ in 0..rep {
+                                lens[i] = prev;
+                                i += 1;
+                            }
+                        }
+                        17 => {
+                            let rep = 3 + r.bits(3)? as usize;
+                            if i + rep > lens.len() {
+                                return Err(corrupt("zero-run overruns"));
+                            }
+                            i += rep;
+                        }
+                        18 => {
+                            let rep = 11 + r.bits(7)? as usize;
+                            if i + rep > lens.len() {
+                                return Err(corrupt("zero-run overruns"));
+                            }
+                            i += rep;
+                        }
+                        _ => return Err(corrupt("bad code-length symbol")),
+                    }
+                }
+                let litlen = Huffman::build(&lens[..hlit])?;
+                let dist = Huffman::build(&lens[hlit..])?;
+                inflate_block(r, &mut out, &litlen, &dist)?;
+            }
+            _ => return Err(corrupt("reserved block type")),
+        }
+        if bfinal == 1 {
+            return Ok(out);
+        }
+    }
+}
+
+/// Decode a full zlib stream (RFC 1950 framing + adler32 check).
+fn zlib_decode(data: &[u8]) -> io::Result<Vec<u8>> {
+    if data.len() < 6 {
+        return Err(corrupt("stream too short"));
+    }
+    let cmf = data[0];
+    let flg = data[1];
+    if cmf & 0x0F != 8 {
+        return Err(corrupt("not a deflate stream"));
+    }
+    if flg & 0x20 != 0 {
+        return Err(corrupt("preset dictionary unsupported"));
+    }
+    if (cmf as u32 * 256 + flg as u32) % 31 != 0 {
+        return Err(corrupt("bad header check"));
+    }
+    let mut r = BitReader::new(&data[2..]);
+    let out = inflate(&mut r)?;
+    r.align_byte();
+    let trailer = r.take_bytes(4)?;
+    let want = u32::from_be_bytes([trailer[0], trailer[1], trailer[2], trailer[3]]);
+    if adler32(&out) != want {
+        return Err(corrupt("adler32 mismatch"));
+    }
+    Ok(out)
+}
+
+/// Encode a full zlib stream.
+fn zlib_encode(data: &[u8]) -> Vec<u8> {
+    let body = deflate(data);
+    let mut out = Vec::with_capacity(body.len() + 6);
+    out.push(0x78); // CM=8, CINFO=7 (32 KiB window)
+    out.push(0x9C); // FLEVEL=2, FCHECK makes the pair divisible by 31
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&adler32(data).to_be_bytes());
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Public reader/writer wrappers
+// ---------------------------------------------------------------------------
+
+pub mod write {
+    use super::*;
+
+    /// Buffering zlib compressor: collects all input, compresses on
+    /// `finish()`, writes the stream into the inner writer.
+    pub struct ZlibEncoder<W: Write> {
+        inner: Option<W>,
+        buf: Vec<u8>,
+        _level: Compression,
+    }
+
+    impl<W: Write> ZlibEncoder<W> {
+        pub fn new(inner: W, level: Compression) -> ZlibEncoder<W> {
+            ZlibEncoder {
+                inner: Some(inner),
+                buf: Vec::new(),
+                _level: level,
+            }
+        }
+
+        /// Compress everything written so far and return the inner writer.
+        pub fn finish(mut self) -> io::Result<W> {
+            let mut w = self
+                .inner
+                .take()
+                .ok_or_else(|| corrupt("encoder already finished"))?;
+            w.write_all(&zlib_encode(&self.buf))?;
+            w.flush()?;
+            Ok(w)
+        }
+    }
+
+    impl<W: Write> Write for ZlibEncoder<W> {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    impl<W: Write> Drop for ZlibEncoder<W> {
+        /// Match real flate2: finish the stream on drop (best effort) so
+        /// callers that never call `finish()` don't silently lose data.
+        fn drop(&mut self) {
+            if let Some(mut w) = self.inner.take() {
+                let _ = w.write_all(&zlib_encode(&self.buf));
+                let _ = w.flush();
+            }
+        }
+    }
+}
+
+pub mod read {
+    use super::*;
+
+    /// Zlib decompressor over any reader: decodes the whole stream on
+    /// first read, then serves it out. A failed decode is sticky — later
+    /// reads keep erroring instead of reporting a clean EOF.
+    pub struct ZlibDecoder<R: Read> {
+        src: Option<R>,
+        out: Vec<u8>,
+        pos: usize,
+        failed: bool,
+    }
+
+    impl<R: Read> ZlibDecoder<R> {
+        pub fn new(src: R) -> ZlibDecoder<R> {
+            ZlibDecoder {
+                src: Some(src),
+                out: Vec::new(),
+                pos: 0,
+                failed: false,
+            }
+        }
+    }
+
+    impl<R: Read> Read for ZlibDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if self.failed {
+                return Err(corrupt("previous decode failed"));
+            }
+            if let Some(mut src) = self.src.take() {
+                let decoded = (|| {
+                    let mut raw = Vec::new();
+                    src.read_to_end(&mut raw)?;
+                    zlib_decode(&raw)
+                })();
+                match decoded {
+                    Ok(out) => {
+                        self.out = out;
+                        self.pos = 0;
+                    }
+                    Err(e) => {
+                        self.failed = true;
+                        return Err(e);
+                    }
+                }
+            }
+            let n = buf.len().min(self.out.len() - self.pos);
+            buf[..n].copy_from_slice(&self.out[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        let mut enc =
+            write::ZlibEncoder::new(Vec::new(), Compression::new(6));
+        enc.write_all(data).unwrap();
+        let compressed = enc.finish().unwrap();
+        let mut out = Vec::new();
+        read::ZlibDecoder::new(&compressed[..])
+            .read_to_end(&mut out)
+            .unwrap();
+        out
+    }
+
+    #[test]
+    fn roundtrip_empty_and_small() {
+        assert_eq!(roundtrip(b""), b"");
+        assert_eq!(roundtrip(b"a"), b"a");
+        assert_eq!(roundtrip(b"hello world hello world"), b"hello world hello world");
+    }
+
+    #[test]
+    fn roundtrip_repetitive_compresses() {
+        let data = vec![42u8; 100_000];
+        let mut enc =
+            write::ZlibEncoder::new(Vec::new(), Compression::default());
+        enc.write_all(&data).unwrap();
+        let compressed = enc.finish().unwrap();
+        assert!(compressed.len() < 1000, "{} bytes", compressed.len());
+        let mut out = Vec::new();
+        read::ZlibDecoder::new(&compressed[..])
+            .read_to_end(&mut out)
+            .unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn roundtrip_pseudorandom() {
+        // xorshift-ish deterministic bytes: mostly incompressible
+        let mut x = 0x1234_5678_u32;
+        let data: Vec<u8> = (0..50_000)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                x as u8
+            })
+            .collect();
+        assert_eq!(roundtrip(&data), data);
+    }
+
+    #[test]
+    fn roundtrip_structured() {
+        let data: Vec<u8> = (0..30_000u32)
+            .map(|i| ((i / 7) % 251) as u8)
+            .collect();
+        assert_eq!(roundtrip(&data), data);
+    }
+
+    #[test]
+    fn corrupt_streams_error_not_panic() {
+        let mut enc =
+            write::ZlibEncoder::new(Vec::new(), Compression::default());
+        enc.write_all(b"some payload data to mangle, repeated a bit, \
+                        some payload data to mangle")
+            .unwrap();
+        let good = enc.finish().unwrap();
+        for i in 0..good.len() {
+            let mut bad = good.clone();
+            bad[i] ^= 0xFF;
+            let mut out = Vec::new();
+            // Err or (extremely unlikely) Ok, but never a panic
+            let _ = read::ZlibDecoder::new(&bad[..]).read_to_end(&mut out);
+        }
+        for cut in 0..good.len().min(16) {
+            let mut out = Vec::new();
+            assert!(read::ZlibDecoder::new(&good[..cut])
+                .read_to_end(&mut out)
+                .is_err());
+        }
+    }
+
+    #[test]
+    fn adler_known_value() {
+        // adler32("Wikipedia") = 0x11E60398
+        assert_eq!(adler32(b"Wikipedia"), 0x11E6_0398);
+    }
+
+    #[test]
+    fn known_stored_block_decodes() {
+        // hand-built zlib stream: stored block "hi"
+        let payload = b"hi";
+        let mut raw = vec![0x78, 0x01];
+        raw.push(0x01); // BFINAL=1, BTYPE=00
+        raw.extend_from_slice(&2u16.to_le_bytes());
+        raw.extend_from_slice(&(!2u16).to_le_bytes());
+        raw.extend_from_slice(payload);
+        raw.extend_from_slice(&adler32(payload).to_be_bytes());
+        let mut out = Vec::new();
+        read::ZlibDecoder::new(&raw[..]).read_to_end(&mut out).unwrap();
+        assert_eq!(out, payload);
+    }
+}

@@ -1,0 +1,50 @@
+//! Offline stand-in for `once_cell`: just `sync::Lazy`, backed by
+//! `std::sync::OnceLock`. The initializer is a plain `fn() -> T` pointer —
+//! non-capturing closures coerce to it, which covers every use here.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access.
+    pub struct Lazy<T> {
+        cell: OnceLock<T>,
+        init: fn() -> T,
+    }
+
+    impl<T> Lazy<T> {
+        pub const fn new(init: fn() -> T) -> Lazy<T> {
+            Lazy {
+                cell: OnceLock::new(),
+                init,
+            }
+        }
+
+        pub fn force(this: &Lazy<T>) -> &T {
+            this.cell.get_or_init(this.init)
+        }
+    }
+
+    impl<T> Deref for Lazy<T> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+
+    static COUNTER: Lazy<u32> = Lazy::new(|| 41 + 1);
+
+    #[test]
+    fn initializes_once_and_derefs() {
+        assert_eq!(*COUNTER, 42);
+        assert_eq!(*COUNTER, 42);
+        let local: Lazy<String> = Lazy::new(|| "hi".to_string());
+        assert_eq!(local.len(), 2);
+    }
+}
