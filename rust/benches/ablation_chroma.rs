@@ -1,0 +1,174 @@
+//! Chroma ablation: the color (YCbCr) workload against the grayscale
+//! baseline.
+//!
+//! Part A — color-vs-gray throughput: one gray compress vs one color
+//! compress (3 planes, 4:2:0) at the same pixel count, serial and
+//! parallel CPU lanes. The color job processes ~1.5x the samples of the
+//! gray job under 4:2:0, so its wall time should land in that
+//! neighborhood — far below the 3x a naive per-channel RGB codec pays.
+//!
+//! Part B — subsampling sweep: 4:4:4 / 4:2:2 / 4:2:0 across qualities,
+//! recording weighted + per-plane PSNR and encoded bytes. Luma PSNR must
+//! be mode-invariant (chroma decimation never touches Y).
+//!
+//! Set CORDIC_DCT_BENCH_QUICK=1 to trim sizes + iterations (CI).
+
+use cordic_dct::bench::{bench_config, render_table, rows_to_json,
+                        save_results, Row};
+use cordic_dct::codec::{self, color as color_codec};
+use cordic_dct::dct::color::{ColorPipeline, PlaneCoef};
+use cordic_dct::dct::parallel::ParallelCpuPipeline;
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::synthetic;
+use cordic_dct::image::ycbcr::{rgb_to_ycbcr, Subsampling};
+use cordic_dct::metrics;
+use cordic_dct::metrics::color::psnr_color;
+
+/// Container size of already-computed plane coefficients (no second
+/// forward transform — `compress` just produced these planes).
+fn container_bytes(
+    pipe: &ColorPipeline,
+    w: usize,
+    h: usize,
+    planes: &[PlaneCoef; 3],
+) -> anyhow::Result<usize> {
+    let header = color_codec::ColorHeader {
+        width: w as u32,
+        height: h as u32,
+        quality: pipe.quality,
+        variant: codec::variant_tag(pipe.variant),
+        subsampling: color_codec::subsampling_tag(pipe.subsampling),
+    };
+    Ok(color_codec::encode(&header, planes)?.len())
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = bench_config();
+    let quick = std::env::var("CORDIC_DCT_BENCH_QUICK").is_ok();
+    let size = if quick { 256 } else { 512 };
+    let variant = Variant::Cordic;
+    let gray = synthetic::lena_like(size, size, 1);
+    let rgb = synthetic::lena_like_rgb(size, size, 1);
+    let mut rows = Vec::new();
+
+    // Part A: color-vs-gray throughput, serial + parallel lanes
+    println!("== color vs gray throughput ({size}x{size}, 4:2:0) ==");
+    let ser_gray_pipe = CpuPipeline::new(variant, 50);
+    let par_gray_pipe = ParallelCpuPipeline::new(variant, 50);
+    let ser_color_pipe =
+        ColorPipeline::new(variant, 50, Subsampling::S420);
+    let par_color_pipe =
+        ColorPipeline::parallel(variant, 50, Subsampling::S420, 0);
+    let gray_ser = bench.run(|| ser_gray_pipe.compress(&gray));
+    let gray_par = bench.run(|| par_gray_pipe.compress(&gray));
+    let color_ser = bench.run(|| ser_color_pipe.compress(&rgb));
+    let color_par = bench.run(|| par_color_pipe.compress(&rgb));
+    println!(
+        "{:<12} {:>12} {:>12}",
+        "workload", "serial ms", "parallel ms"
+    );
+    println!(
+        "{:<12} {:>12.2} {:>12.2}",
+        "gray", gray_ser.median_ms, gray_par.median_ms
+    );
+    println!(
+        "{:<12} {:>12.2} {:>12.2} ({:.2}x the gray serial cost)",
+        "color_420",
+        color_ser.median_ms,
+        color_par.median_ms,
+        color_ser.median_ms / gray_ser.median_ms.max(1e-9)
+    );
+    rows.push(Row {
+        label: "gray".into(),
+        cpu: Some(gray_ser.clone()),
+        cpu_par: Some(gray_par),
+        gpu: None,
+        extra: vec![("workload".into(), "gray".into())],
+    });
+    rows.push(Row {
+        label: "color_420".into(),
+        cpu: Some(color_ser.clone()),
+        cpu_par: Some(color_par),
+        gpu: None,
+        extra: vec![
+            ("workload".into(), "color".into()),
+            (
+                "color_over_gray".into(),
+                format!(
+                    "{:.3}",
+                    color_ser.median_ms / gray_ser.median_ms.max(1e-9)
+                ),
+            ),
+        ],
+    });
+
+    // Part B: subsampling sweep across qualities
+    println!("\n== chroma subsampling sweep ({size}x{size}) ==");
+    println!(
+        "{:<10} {:>8} {:>9} {:>9} {:>9} {:>10}",
+        "mode", "quality", "Y(dB)", "wtd(dB)", "bytes", "ms"
+    );
+    let (y_src, _, _) = rgb_to_ycbcr(&rgb);
+    let mut luma_by_quality: Vec<(u8, f64)> = Vec::new();
+    for &quality in &[10u8, 50, 90] {
+        for mode in Subsampling::ALL {
+            let pipe = ColorPipeline::new(variant, quality, mode);
+            let out = pipe.compress(&rgb);
+            let p = psnr_color(&rgb, &out.recon);
+            // plane-level luma PSNR: exactly mode-invariant (the Y path
+            // never sees the chroma decimation)
+            let psnr_y = metrics::psnr(&y_src, &out.recon_y);
+            let bytes = container_bytes(
+                &pipe,
+                rgb.width,
+                rgb.height,
+                &out.planes,
+            )?;
+            let t = bench.run(|| pipe.compress(&rgb));
+            println!(
+                "{:<10} {:>8} {:>9.2} {:>9.2} {:>9} {:>10.2}",
+                mode.as_str(),
+                quality,
+                psnr_y,
+                p.weighted,
+                bytes,
+                t.median_ms
+            );
+            // luma invariance across modes at one quality
+            match luma_by_quality.iter().find(|(q, _)| *q == quality) {
+                Some(&(_, y0)) => assert!(
+                    (psnr_y - y0).abs() < 1e-9,
+                    "luma PSNR varies with chroma mode: {y0} vs \
+                     {psnr_y}"
+                ),
+                None => luma_by_quality.push((quality, psnr_y)),
+            }
+            rows.push(Row {
+                label: format!("{}_q{quality}", mode.tag()),
+                cpu: Some(t),
+                cpu_par: None,
+                gpu: None,
+                extra: vec![
+                    ("mode".into(), mode.as_str().into()),
+                    ("quality".into(), quality.to_string()),
+                    ("psnr_y".into(), format!("{psnr_y:.4}")),
+                    (
+                        "psnr_weighted".into(),
+                        format!("{:.4}", p.weighted),
+                    ),
+                    ("bytes".into(), bytes.to_string()),
+                ],
+            });
+        }
+    }
+    println!("luma invariance: plane-level Y PSNR identical across modes");
+
+    let text = render_table("ablation: chroma subsampling", &rows);
+    save_results(
+        "ablation_chroma",
+        &text,
+        &rows_to_json("ablation_chroma", &rows),
+    );
+    Ok(())
+}

@@ -4,20 +4,41 @@
 //!
 //! ```bash
 //! cargo run --release --example compress_cli [out_dir]
+//! cargo run --release --example compress_cli -- --color [out_dir]
 //! ```
+//!
+//! `--color` runs the color (YCbCr) path instead: a synthetic RGB image
+//! compressed under 4:4:4 / 4:2:2 / 4:2:0 chroma subsampling, with
+//! per-channel PSNR per mode and a luma-parity check against the
+//! grayscale pipeline (the color pipeline's Y plane must match it to
+//! within 0.1 dB — it is bit-identical by construction).
 
-use cordic_dct::codec::{self, decoder, encoder};
+use cordic_dct::codec::{self, color as color_codec, decoder, encoder};
+use cordic_dct::dct::color::ColorPipeline;
 use cordic_dct::dct::pipeline::CpuPipeline;
 use cordic_dct::dct::Variant;
+use cordic_dct::image::ycbcr::{rgb_to_ycbcr, Subsampling};
 use cordic_dct::image::{synthetic, GrayImage};
 use cordic_dct::metrics;
+use cordic_dct::metrics::color::psnr_color;
 
 fn main() -> anyhow::Result<()> {
-    let out_dir = std::env::args()
-        .nth(1)
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let color = args.iter().any(|a| a == "--color");
+    let out_dir = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
         .unwrap_or_else(|| "/tmp/cordic-dct-demo".to_string());
     std::fs::create_dir_all(&out_dir)?;
+    if color {
+        color_demo(&out_dir)
+    } else {
+        gray_demo(&out_dir)
+    }
+}
 
+fn gray_demo(out_dir: &str) -> anyhow::Result<()> {
     let img = synthetic::cablecar_like(512, 480, 7);
     let src_path = format!("{out_dir}/cablecar.png");
     img.save(&src_path)?;
@@ -72,5 +93,75 @@ fn main() -> anyhow::Result<()> {
         }
     }
     println!("\nwrote sources, .cdc files and reconstructions to {out_dir}");
+    Ok(())
+}
+
+fn color_demo(out_dir: &str) -> anyhow::Result<()> {
+    let quality = 50u8;
+    let variant = Variant::Cordic;
+    let img = synthetic::cablecar_like_rgb(512, 480, 7);
+    let src_path = format!("{out_dir}/cablecar_rgb.png");
+    img.save(&src_path)?;
+    println!("source: {src_path} ({} raw RGB bytes)", img.bytes());
+
+    // grayscale baseline on the image's own luma plane: the parity
+    // reference the color pipeline must match
+    let (y_plane, _, _) = rgb_to_ycbcr(&img);
+    let gray_recon =
+        CpuPipeline::new(variant, quality).compress(&y_plane).recon;
+    let gray_luma_psnr = metrics::psnr(&y_plane, &gray_recon);
+
+    println!(
+        "\n{:<8} {:>10} {:>8} {:>8} {:>8} {:>8} {:>8} {:>9} {:>9}",
+        "mode", "bytes", "R(dB)", "G(dB)", "B(dB)", "Y(dB)", "wtd",
+        "ratio", "dY(gray)"
+    );
+    for mode in Subsampling::ALL {
+        let pipe = ColorPipeline::new(variant, quality, mode);
+        let out = pipe.compress(&img);
+        let header = color_codec::ColorHeader {
+            width: img.width as u32,
+            height: img.height as u32,
+            quality,
+            variant: codec::variant_tag(variant),
+            subsampling: color_codec::subsampling_tag(mode),
+        };
+        let bytes = color_codec::encode(&header, &out.planes)?;
+        std::fs::write(
+            format!("{out_dir}/cablecar_{}_q{quality}.cdc", mode.tag()),
+            &bytes,
+        )?;
+        out.recon.save(format!(
+            "{out_dir}/cablecar_{}_q{quality}.png",
+            mode.tag()
+        ))?;
+        let p = psnr_color(&img, &out.recon);
+        let luma_psnr = metrics::psnr(&y_plane, &out.recon_y);
+        let delta = (luma_psnr - gray_luma_psnr).abs();
+        println!(
+            "{:<8} {:>10} {:>8.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2} \
+             {:>8.1}x {:>9.4}",
+            mode.as_str(),
+            bytes.len(),
+            p.r,
+            p.g,
+            p.b,
+            p.y,
+            p.weighted,
+            metrics::compression_ratio(img.bytes(), bytes.len()),
+            delta,
+        );
+        assert!(
+            delta < 0.1,
+            "{} luma PSNR {luma_psnr:.4} drifted from grayscale \
+             pipeline {gray_luma_psnr:.4}",
+            mode.as_str()
+        );
+    }
+    println!(
+        "\nluma parity holds: every mode's Y plane matches the \
+         grayscale pipeline ({gray_luma_psnr:.2} dB) within 0.1 dB"
+    );
+    println!("wrote color sources, .cdc files and reconstructions to {out_dir}");
     Ok(())
 }

@@ -127,9 +127,13 @@ pub fn rows_to_json(table: &str, rows: &[Row]) -> String {
     .to_string()
 }
 
-/// Persist bench output under bench_results/ (created on demand).
+/// Persist bench output under `bench_results/` — or the directory named
+/// by `CORDIC_DCT_BENCH_OUT` (the CI bench-smoke job points this at
+/// `bench-out/` and uploads it as a workflow artifact).
 pub fn save_results(name: &str, text: &str, json: &str) {
-    let dir = std::path::Path::new("bench_results");
+    let dir = std::env::var("CORDIC_DCT_BENCH_OUT")
+        .unwrap_or_else(|_| "bench_results".to_string());
+    let dir = std::path::Path::new(&dir);
     let _ = std::fs::create_dir_all(dir);
     let _ = std::fs::write(dir.join(format!("{name}.txt")), text);
     let _ = std::fs::write(dir.join(format!("{name}.json")), json);

@@ -1,0 +1,346 @@
+//! Color container (`CDC3`): a color header followed by three complete
+//! `CDC1` plane streams in Y/Cb/Cr order.
+//!
+//! ```text
+//! magic "CDC3" | width | height | quality | variant | subsampling |
+//! 3 x ( u32 stream length | CDC1 plane stream )
+//! ```
+//!
+//! Each plane stream is exactly what [`super::encoder::encode`] emits for
+//! a grayscale image — its own header (plane dimensions) and its own
+//! per-plane Huffman tables — so the color decoder is three calls into
+//! the existing grayscale decoder plus consistency checks. Chroma planes
+//! carry their subsampled dimensions; the color header's `subsampling`
+//! tag tells the decoder how to upsample.
+
+use anyhow::{bail, Context, Result};
+
+use crate::dct::color::PlaneCoef;
+use crate::image::ycbcr::Subsampling;
+
+use super::{decoder, encoder, Header};
+
+pub const COLOR_MAGIC: &[u8; 4] = b"CDC3";
+
+/// Subsampling <-> tag mapping for the header byte.
+pub fn subsampling_tag(s: Subsampling) -> u8 {
+    match s {
+        Subsampling::S444 => 0,
+        Subsampling::S422 => 1,
+        Subsampling::S420 => 2,
+    }
+}
+
+pub fn tag_subsampling(t: u8) -> Result<Subsampling> {
+    Ok(match t {
+        0 => Subsampling::S444,
+        1 => Subsampling::S422,
+        2 => Subsampling::S420,
+        _ => bail!("unknown subsampling tag {t}"),
+    })
+}
+
+/// Compressed color-image container header.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ColorHeader {
+    /// Original RGB image size.
+    pub width: u32,
+    pub height: u32,
+    /// IJG quality the quantizers used (luma + chroma tables).
+    pub quality: u8,
+    /// Transform variant tag (shared with the gray container).
+    pub variant: u8,
+    /// Chroma subsampling tag (see [`subsampling_tag`]).
+    pub subsampling: u8,
+}
+
+impl ColorHeader {
+    pub const BYTES: usize = 4 + 4 * 2 + 3;
+
+    pub fn write(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(COLOR_MAGIC);
+        out.extend_from_slice(&self.width.to_le_bytes());
+        out.extend_from_slice(&self.height.to_le_bytes());
+        out.push(self.quality);
+        out.push(self.variant);
+        out.push(self.subsampling);
+    }
+
+    pub fn read(bytes: &[u8]) -> Result<(ColorHeader, usize)> {
+        if bytes.len() < Self::BYTES {
+            bail!("file too short for CDC3 header");
+        }
+        if &bytes[0..4] != COLOR_MAGIC {
+            bail!("bad magic: not a CDC3 color file");
+        }
+        let rd = |o: usize| {
+            u32::from_le_bytes([
+                bytes[o],
+                bytes[o + 1],
+                bytes[o + 2],
+                bytes[o + 3],
+            ])
+        };
+        let h = ColorHeader {
+            width: rd(4),
+            height: rd(8),
+            quality: bytes[12],
+            variant: bytes[13],
+            subsampling: bytes[14],
+        };
+        if h.width == 0 || h.height == 0 {
+            bail!("inconsistent CDC3 header {h:?}");
+        }
+        tag_subsampling(h.subsampling)?;
+        Ok((h, Self::BYTES))
+    }
+}
+
+/// Is this byte stream a color (`CDC3`) container? Used by readers that
+/// accept either format.
+pub fn is_color_container(bytes: &[u8]) -> bool {
+    bytes.len() >= 4 && &bytes[0..4] == COLOR_MAGIC
+}
+
+/// Encode three quantized planes (Y/Cb/Cr order, as
+/// [`crate::dct::color::ColorPipeline::analyze`] emits them) into one
+/// color container.
+pub fn encode(
+    header: &ColorHeader,
+    planes: &[PlaneCoef; 3],
+) -> Result<Vec<u8>> {
+    let sub = tag_subsampling(header.subsampling)?;
+    let (w, h) = (header.width as usize, header.height as usize);
+    let (cw, ch) = sub.chroma_dims(w, h);
+    let want = [(w, h), (cw, ch), (cw, ch)];
+    let mut out = Vec::new();
+    header.write(&mut out);
+    for (i, plane) in planes.iter().enumerate() {
+        if (plane.width, plane.height) != want[i] {
+            bail!(
+                "plane {i} is {}x{}, expected {}x{} for {} at {w}x{h}",
+                plane.width,
+                plane.height,
+                want[i].0,
+                want[i].1,
+                sub.as_str()
+            );
+        }
+        let ph = Header {
+            width: plane.width as u32,
+            height: plane.height as u32,
+            padded_width: plane.padded_width as u32,
+            padded_height: plane.padded_height as u32,
+            quality: header.quality,
+            variant: header.variant,
+        };
+        let stream = encoder::encode(&ph, &plane.qcoef)
+            .with_context(|| format!("encoding plane {i}"))?;
+        out.extend_from_slice(&(stream.len() as u32).to_le_bytes());
+        out.extend_from_slice(&stream);
+    }
+    Ok(out)
+}
+
+/// Decoded color container: header + per-plane coefficients.
+pub struct ColorDecoded {
+    pub header: ColorHeader,
+    pub planes: [PlaneCoef; 3],
+}
+
+/// Decode a `CDC3` container back to plane coefficients. Strictly
+/// validating, like the grayscale decoder: corrupt input errors, never
+/// panics.
+pub fn decode(bytes: &[u8]) -> Result<ColorDecoded> {
+    let (header, mut off) = ColorHeader::read(bytes)?;
+    let sub = tag_subsampling(header.subsampling)?;
+    let (w, h) = (header.width as usize, header.height as usize);
+    let (cw, ch) = sub.chroma_dims(w, h);
+    let want = [(w, h), (cw, ch), (cw, ch)];
+    let mut planes = Vec::with_capacity(3);
+    for (i, &(ew, eh)) in want.iter().enumerate() {
+        if bytes.len() < off + 4 {
+            bail!("truncated plane {i} length");
+        }
+        let len = u32::from_le_bytes([
+            bytes[off],
+            bytes[off + 1],
+            bytes[off + 2],
+            bytes[off + 3],
+        ]) as usize;
+        off += 4;
+        if bytes.len() < off + len {
+            bail!(
+                "plane {i} truncated: header says {len}, {} available",
+                bytes.len() - off
+            );
+        }
+        let dec = decoder::decode(&bytes[off..off + len])
+            .with_context(|| format!("decoding plane {i}"))?;
+        off += len;
+        let ph = &dec.header;
+        if (ph.width as usize, ph.height as usize) != (ew, eh) {
+            bail!(
+                "plane {i} is {}x{}, expected {ew}x{eh}",
+                ph.width,
+                ph.height
+            );
+        }
+        if ph.quality != header.quality
+            || ph.variant != header.variant
+        {
+            bail!(
+                "plane {i} quality/variant ({}, {}) disagrees with \
+                 container ({}, {})",
+                ph.quality,
+                ph.variant,
+                header.quality,
+                header.variant
+            );
+        }
+        planes.push(PlaneCoef {
+            qcoef: dec.qcoef_planar,
+            width: ew,
+            height: eh,
+            padded_width: ph.padded_width as usize,
+            padded_height: ph.padded_height as usize,
+        });
+    }
+    let planes: [PlaneCoef; 3] = match planes.try_into() {
+        Ok(p) => p,
+        Err(_) => unreachable!("exactly three planes pushed"),
+    };
+    Ok(ColorDecoded { header, planes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::variant_tag;
+    use crate::dct::color::ColorPipeline;
+    use crate::dct::Variant;
+    use crate::image::synthetic;
+    use crate::metrics::color::psnr_color;
+    use crate::util::prng::Rng;
+
+    fn make(
+        w: usize,
+        h: usize,
+        sub: Subsampling,
+        quality: u8,
+    ) -> (ColorHeader, [PlaneCoef; 3], ColorPipeline) {
+        let img = synthetic::lena_like_rgb(w, h, 5);
+        let pipe = ColorPipeline::new(Variant::Dct, quality, sub);
+        let planes = pipe.analyze(&img);
+        let header = ColorHeader {
+            width: w as u32,
+            height: h as u32,
+            quality,
+            variant: variant_tag(Variant::Dct),
+            subsampling: subsampling_tag(sub),
+        };
+        (header, planes, pipe)
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let h = ColorHeader {
+            width: 640,
+            height: 480,
+            quality: 75,
+            variant: 2,
+            subsampling: 2,
+        };
+        let mut buf = Vec::new();
+        h.write(&mut buf);
+        let (back, used) = ColorHeader::read(&buf).unwrap();
+        assert_eq!(h, back);
+        assert_eq!(used, ColorHeader::BYTES);
+        assert!(is_color_container(&buf));
+        assert!(!is_color_container(b"CDC1"));
+    }
+
+    #[test]
+    fn subsampling_tags_roundtrip() {
+        for s in Subsampling::ALL {
+            assert_eq!(tag_subsampling(subsampling_tag(s)).unwrap(), s);
+        }
+        assert!(tag_subsampling(9).is_err());
+    }
+
+    #[test]
+    fn roundtrip_exact_coefficients() {
+        for sub in Subsampling::ALL {
+            let (header, planes, _) = make(64, 48, sub, 50);
+            let bytes = encode(&header, &planes).unwrap();
+            let dec = decode(&bytes).unwrap();
+            assert_eq!(dec.header, header);
+            assert_eq!(dec.planes, planes, "{}", sub.as_str());
+        }
+    }
+
+    #[test]
+    fn roundtrip_odd_size() {
+        let (header, planes, pipe) =
+            make(30, 21, Subsampling::S420, 75);
+        let bytes = encode(&header, &planes).unwrap();
+        let dec = decode(&bytes).unwrap();
+        assert_eq!(dec.planes[1].width, 15);
+        assert_eq!(dec.planes[1].padded_width, 16);
+        // full file -> image path
+        let img = synthetic::lena_like_rgb(30, 21, 5);
+        let recon = pipe.decode_coefficients(&dec.planes);
+        assert!(psnr_color(&img, &recon).weighted > 25.0);
+    }
+
+    #[test]
+    fn color_beats_gray_times_three() {
+        // the whole point of 4:2:0: three planes must cost far less than
+        // three luma planes
+        let img = synthetic::lena_like_rgb(96, 96, 2);
+        let (header, planes, _) = make(96, 96, Subsampling::S420, 50);
+        let bytes = encode(&header, &planes).unwrap();
+        assert!(
+            bytes.len() * 2 < img.bytes(),
+            "{} vs raw {}",
+            bytes.len(),
+            img.bytes()
+        );
+    }
+
+    #[test]
+    fn wrong_plane_dims_rejected_on_encode() {
+        let (header, mut planes, _) =
+            make(64, 48, Subsampling::S420, 50);
+        planes.swap(0, 1); // luma slot now has chroma dims
+        assert!(encode(&header, &planes).is_err());
+    }
+
+    #[test]
+    fn truncated_and_corrupt_error_not_panic() {
+        let (header, planes, _) = make(32, 32, Subsampling::S422, 50);
+        let bytes = encode(&header, &planes).unwrap();
+        for cut in
+            [3, ColorHeader::BYTES - 1, ColorHeader::BYTES + 2,
+             bytes.len() - 5]
+        {
+            assert!(decode(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        let mut rng = Rng::new(17);
+        for _ in 0..200 {
+            let mut corrupt = bytes.clone();
+            for _ in 0..rng.range_i64(1, 6) {
+                let i = rng.below(corrupt.len() as u64) as usize;
+                corrupt[i] ^= 1 << rng.below(8);
+            }
+            let _ = decode(&corrupt); // Ok or Err, never panic
+        }
+    }
+
+    #[test]
+    fn gray_decoder_rejects_color_container() {
+        let (header, planes, _) = make(16, 16, Subsampling::S444, 50);
+        let bytes = encode(&header, &planes).unwrap();
+        assert!(crate::codec::decoder::decode(&bytes).is_err());
+    }
+}

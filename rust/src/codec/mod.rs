@@ -19,7 +19,11 @@
 //! coefficients that either lane (CPU serial or PJRT) produces;
 //! [`decoder`] reverses to coefficients, which the standard IDCT then
 //! reconstructs. Round-trip is exact (lossless over the quantized data).
+//!
+//! Color images use the [`color`] container (`CDC3`): a color header
+//! followed by three of these grayscale streams, one per YCbCr plane.
 
+pub mod color;
 pub mod decoder;
 pub mod encoder;
 pub mod huffman;

@@ -9,6 +9,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::dct::Variant;
+use crate::image::color::ColorImage;
+use crate::image::ycbcr::Subsampling;
 use crate::image::GrayImage;
 
 /// Which execution lane a request targets.
@@ -48,14 +50,44 @@ pub enum RequestKind {
     Histeq,
 }
 
+/// Pixel payload of a request: the grayscale paper workload or the color
+/// (YCbCr) extension.
+#[derive(Clone, Debug)]
+pub enum JobImage {
+    Gray(GrayImage),
+    Color(ColorImage),
+}
+
+impl JobImage {
+    pub fn width(&self) -> usize {
+        match self {
+            JobImage::Gray(g) => g.width,
+            JobImage::Color(c) => c.width,
+        }
+    }
+
+    pub fn height(&self) -> usize {
+        match self {
+            JobImage::Gray(g) => g.height,
+            JobImage::Color(c) => c.height,
+        }
+    }
+
+    pub fn is_color(&self) -> bool {
+        matches!(self, JobImage::Color(_))
+    }
+}
+
 /// One job submitted to the service.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
     pub kind: RequestKind,
-    pub image: GrayImage,
+    pub image: JobImage,
     pub variant: Variant,
     pub lane: Lane,
+    /// Chroma subsampling for color jobs (ignored for grayscale).
+    pub subsampling: Subsampling,
 }
 
 impl Request {
@@ -64,20 +96,45 @@ impl Request {
         Request {
             id,
             kind: RequestKind::Compress,
-            image,
+            image: JobImage::Gray(image),
             variant,
             lane,
+            subsampling: Subsampling::S420,
+        }
+    }
+
+    /// A color compression job (the `color: true` request shape; runs on
+    /// the CPU lanes).
+    pub fn compress_color(
+        id: u64,
+        image: ColorImage,
+        variant: Variant,
+        lane: Lane,
+        subsampling: Subsampling,
+    ) -> Request {
+        Request {
+            id,
+            kind: RequestKind::Compress,
+            image: JobImage::Color(image),
+            variant,
+            lane,
+            subsampling,
         }
     }
 
     /// Batching key: jobs with equal keys share an executable.
-    pub fn batch_key(&self) -> (RequestKind, usize, usize, Variant, Lane) {
+    #[allow(clippy::type_complexity)]
+    pub fn batch_key(
+        &self,
+    ) -> (RequestKind, usize, usize, Variant, Lane, bool, Subsampling) {
         (
             self.kind,
-            self.image.width,
-            self.image.height,
+            self.image.width(),
+            self.image.height(),
             self.variant,
             self.lane,
+            self.image.is_color(),
+            self.subsampling,
         )
     }
 }
@@ -98,10 +155,14 @@ pub struct Response {
 /// Successful output payload.
 #[derive(Debug)]
 pub struct JobOutput {
+    /// Grayscale result; for color jobs this is the reconstructed
+    /// full-resolution luma plane.
     pub image: GrayImage,
+    /// Reconstructed RGB image (color Compress only).
+    pub color_image: Option<ColorImage>,
     /// Entropy-coded size in bytes (Compress only).
     pub compressed_bytes: Option<usize>,
-    /// PSNR vs the input (Compress only).
+    /// PSNR vs the input (Compress only; luma-weighted for color).
     pub psnr_db: Option<f64>,
 }
 
@@ -435,6 +496,32 @@ mod tests {
         let b = q.pop_batch_with(cap, Duration::ZERO).unwrap();
         assert_eq!(b.len(), 1);
         assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn color_jobs_batch_separately() {
+        let gray = req(1, 16);
+        let rgb = ColorImage::from_gray(&synthetic::lena_like(
+            16, 16, 1,
+        ));
+        let color = Request::compress_color(
+            2,
+            rgb.clone(),
+            Variant::Dct,
+            Lane::Cpu,
+            Subsampling::S420,
+        );
+        assert_ne!(gray.batch_key(), color.batch_key());
+        let color444 = Request::compress_color(
+            3,
+            rgb,
+            Variant::Dct,
+            Lane::Cpu,
+            Subsampling::S444,
+        );
+        assert_ne!(color.batch_key(), color444.batch_key());
+        assert!(color.image.is_color());
+        assert_eq!(color.image.width(), 16);
     }
 
     #[test]

@@ -8,6 +8,8 @@ use std::thread::JoinHandle;
 use anyhow::{Context, Result};
 
 use crate::dct::Variant;
+use crate::image::color::ColorImage;
+use crate::image::ycbcr::Subsampling;
 use crate::image::GrayImage;
 use crate::log_info;
 use crate::metrics::stats::SharedHistogram;
@@ -149,12 +151,31 @@ impl Service {
         self.runtime.as_ref()
     }
 
-    /// Submit a compression job.
+    /// Submit a grayscale compression job.
     pub fn compress(&self, image: GrayImage, variant: Variant, lane: Lane)
                     -> Result<JobHandle> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.queue
             .submit(Request::compress(id, image, variant, lane))
+    }
+
+    /// Submit a color (YCbCr) compression job — the `color: true`
+    /// request shape, served by either CPU lane.
+    pub fn compress_color(
+        &self,
+        image: ColorImage,
+        variant: Variant,
+        lane: Lane,
+        subsampling: Subsampling,
+    ) -> Result<JobHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.queue.submit(Request::compress_color(
+            id,
+            image,
+            variant,
+            lane,
+            subsampling,
+        ))
     }
 
     /// Submit a histogram-equalization job.
@@ -163,9 +184,10 @@ impl Service {
         self.queue.submit(Request {
             id,
             kind: RequestKind::Histeq,
-            image,
+            image: super::request::JobImage::Gray(image),
             variant: Variant::Dct,
             lane,
+            subsampling: Subsampling::S420,
         })
     }
 
@@ -300,5 +322,42 @@ mod tests {
     fn shutdown_is_idempotent_via_drop() {
         let svc = Service::start(cpu_only_config(1)).unwrap();
         drop(svc); // close + join without panic
+    }
+
+    #[test]
+    fn color_end_to_end_both_lanes() {
+        let svc = Service::start(ServiceConfig {
+            workers: 2,
+            cpu_parallel_workers: 2,
+            artifact_dir: None,
+            ..Default::default()
+        })
+        .unwrap();
+        let img = synthetic::cablecar_like_rgb(48, 40, 6);
+        let a = svc
+            .compress_color(
+                img.clone(),
+                Variant::Cordic,
+                Lane::Cpu,
+                Subsampling::S420,
+            )
+            .unwrap()
+            .wait();
+        let b = svc
+            .compress_color(
+                img,
+                Variant::Cordic,
+                Lane::CpuParallel,
+                Subsampling::S420,
+            )
+            .unwrap()
+            .wait();
+        assert_eq!(a.lane, Lane::Cpu);
+        assert_eq!(b.lane, Lane::CpuParallel);
+        let (oa, ob) = (a.result.unwrap(), b.result.unwrap());
+        assert_eq!(oa.color_image, ob.color_image);
+        assert_eq!(oa.compressed_bytes, ob.compressed_bytes);
+        assert!(oa.psnr_db.unwrap() > 25.0);
+        svc.shutdown();
     }
 }

@@ -4,19 +4,22 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::codec::{encoder, variant_tag, Header};
+use crate::codec::{color as color_codec, encoder, variant_tag, Header};
+use crate::dct::color::ColorPipeline;
 use crate::dct::parallel::ParallelCpuPipeline;
 use crate::dct::pipeline::CpuPipeline;
 use crate::dct::Variant;
+use crate::image::color::ColorImage;
 use crate::image::{histeq, GrayImage};
-use crate::metrics::{psnr, stats::SharedHistogram};
+use crate::metrics::{color::psnr_color, psnr, stats::SharedHistogram};
 use crate::runtime::Executor;
 
 use super::batcher::BatchPolicy;
 use super::request::{
-    JobOutput, Lane, QueuedJob, Request, RequestKind, RequestQueue, Response,
+    JobImage, JobOutput, Lane, QueuedJob, Request, RequestKind,
+    RequestQueue, Response,
 };
 
 /// Shared worker context.
@@ -71,16 +74,18 @@ fn process_job(ctx: &WorkerCtx, job: QueuedJob) {
 }
 
 /// Auto routing: GPU when the executor exists and has an artifact for the
-/// padded shape, else serial CPU.
+/// padded shape, else serial CPU. Color jobs always resolve to a CPU lane
+/// (no planar-batch artifacts exist yet).
 fn resolve_lane(ctx: &WorkerCtx, req: &Request) -> Lane {
     match req.lane {
         Lane::Cpu => Lane::Cpu,
         Lane::CpuParallel => Lane::CpuParallel,
         Lane::Gpu => Lane::Gpu,
+        Lane::Auto if req.image.is_color() => Lane::Cpu,
         Lane::Auto => match &ctx.executor {
             Some(ex) => {
-                let ph = crate::dct::blocks::align8(req.image.height);
-                let pw = crate::dct::blocks::align8(req.image.width);
+                let ph = crate::dct::blocks::align8(req.image.height());
+                let pw = crate::dct::blocks::align8(req.image.width());
                 let kind = match req.kind {
                     RequestKind::Compress => "compress",
                     RequestKind::Histeq => "histeq",
@@ -100,7 +105,7 @@ fn resolve_lane(ctx: &WorkerCtx, req: &Request) -> Lane {
     }
 }
 
-/// Entropy-code + package the payload all compress lanes share.
+/// Entropy-code + package the payload all gray compress lanes share.
 fn compress_output(
     original: &GrayImage,
     recon: GrayImage,
@@ -114,21 +119,80 @@ fn compress_output(
     Ok(JobOutput {
         psnr_db: Some(psnr(original, &recon)),
         image: recon,
+        color_image: None,
         compressed_bytes: Some(bytes.len()),
     })
 }
 
 fn run_job(ctx: &WorkerCtx, req: &Request, lane: Lane)
            -> Result<JobOutput> {
+    match &req.image {
+        JobImage::Gray(img) => run_gray_job(ctx, req, img, lane),
+        JobImage::Color(img) => run_color_job(ctx, req, img, lane),
+    }
+}
+
+/// Color jobs: the `color: true` request path. Both CPU lanes run the
+/// per-plane [`ColorPipeline`]; the GPU lane has no planar-batch
+/// artifacts yet and reports so.
+fn run_color_job(
+    ctx: &WorkerCtx,
+    req: &Request,
+    img: &ColorImage,
+    lane: Lane,
+) -> Result<JobOutput> {
+    if req.kind != RequestKind::Compress {
+        bail!("histeq is a grayscale workload");
+    }
+    let pipe = match lane {
+        Lane::Gpu => bail!(
+            "color compression has no GPU artifacts yet; \
+             use a CPU lane"
+        ),
+        Lane::CpuParallel => ColorPipeline::parallel(
+            req.variant,
+            ctx.quality,
+            req.subsampling,
+            ctx.parallel_workers,
+        ),
+        _ => ColorPipeline::new(
+            req.variant,
+            ctx.quality,
+            req.subsampling,
+        ),
+    };
+    let out = pipe.compress(img);
+    let header = color_codec::ColorHeader {
+        width: img.width as u32,
+        height: img.height as u32,
+        quality: ctx.quality,
+        variant: variant_tag(req.variant),
+        subsampling: color_codec::subsampling_tag(req.subsampling),
+    };
+    let bytes = color_codec::encode(&header, &out.planes)?;
+    Ok(JobOutput {
+        psnr_db: Some(psnr_color(img, &out.recon).weighted),
+        image: out.recon_y,
+        color_image: Some(out.recon),
+        compressed_bytes: Some(bytes.len()),
+    })
+}
+
+fn run_gray_job(
+    ctx: &WorkerCtx,
+    req: &Request,
+    img: &GrayImage,
+    lane: Lane,
+) -> Result<JobOutput> {
     match (req.kind, lane) {
         (RequestKind::Compress, Lane::Gpu) => {
             let ex = ctx
                 .executor
                 .as_ref()
                 .ok_or_else(|| anyhow::anyhow!("no GPU lane configured"))?;
-            let out = ex.compress(&req.image, req.variant.as_str())?;
+            let out = ex.compress(img, req.variant.as_str())?;
             compress_output(
-                &req.image,
+                img,
                 out.recon,
                 &out.qcoef,
                 out.padded_width,
@@ -143,9 +207,9 @@ fn run_job(ctx: &WorkerCtx, req: &Request, lane: Lane)
                 ctx.quality,
                 ctx.parallel_workers,
             );
-            let out = pipe.compress(&req.image);
+            let out = pipe.compress(img);
             compress_output(
-                &req.image,
+                img,
                 out.recon,
                 &out.qcoef,
                 out.padded_width,
@@ -156,9 +220,9 @@ fn run_job(ctx: &WorkerCtx, req: &Request, lane: Lane)
         }
         (RequestKind::Compress, _) => {
             let pipe = CpuPipeline::new(req.variant, ctx.quality);
-            let out = pipe.compress(&req.image);
+            let out = pipe.compress(img);
             compress_output(
-                &req.image,
+                img,
                 out.recon,
                 &out.qcoef,
                 out.padded_width,
@@ -172,15 +236,17 @@ fn run_job(ctx: &WorkerCtx, req: &Request, lane: Lane)
                 .executor
                 .as_ref()
                 .ok_or_else(|| anyhow::anyhow!("no GPU lane configured"))?;
-            let (out, _ms) = ex.histeq(&req.image)?;
+            let (out, _ms) = ex.histeq(img)?;
             Ok(JobOutput {
                 image: out,
+                color_image: None,
                 compressed_bytes: None,
                 psnr_db: None,
             })
         }
         (RequestKind::Histeq, _) => Ok(JobOutput {
-            image: histeq::histeq(&req.image),
+            image: histeq::histeq(img),
+            color_image: None,
             compressed_bytes: None,
             psnr_db: None,
         }),
@@ -306,9 +372,10 @@ mod tests {
             .submit(Request {
                 id: 1,
                 kind: RequestKind::Histeq,
-                image: img.clone(),
+                image: JobImage::Gray(img.clone()),
                 variant: Variant::Dct,
                 lane: Lane::Cpu,
+                subsampling: crate::image::ycbcr::Subsampling::S420,
             })
             .unwrap();
         let ctx2 = Arc::clone(&ctx);
@@ -319,5 +386,71 @@ mod tests {
         let out = resp.result.unwrap();
         assert_eq!(out.image, histeq::histeq(&img));
         assert!(out.compressed_bytes.is_none());
+    }
+
+    #[test]
+    fn color_job_runs_on_both_cpu_lanes() {
+        use crate::image::ycbcr::Subsampling;
+        let ctx = Arc::new(cpu_ctx(8));
+        let img = synthetic::lena_like_rgb(40, 32, 4);
+        let h_ser = ctx
+            .queue
+            .submit(Request::compress_color(
+                1,
+                img.clone(),
+                Variant::Dct,
+                Lane::Cpu,
+                Subsampling::S420,
+            ))
+            .unwrap();
+        let h_par = ctx
+            .queue
+            .submit(Request::compress_color(
+                2,
+                img.clone(),
+                Variant::Dct,
+                Lane::CpuParallel,
+                Subsampling::S420,
+            ))
+            .unwrap();
+        let ctx2 = Arc::clone(&ctx);
+        let t = std::thread::spawn(move || run(&ctx2));
+        let r_ser = h_ser.wait();
+        let r_par = h_par.wait();
+        ctx.queue.close();
+        t.join().unwrap();
+        let o_ser = r_ser.result.unwrap();
+        let o_par = r_par.result.unwrap();
+        // per-plane pipelines are bit-identical across CPU lanes
+        let ser_rgb = o_ser.color_image.as_ref().unwrap();
+        let par_rgb = o_par.color_image.as_ref().unwrap();
+        assert_eq!(ser_rgb, par_rgb);
+        assert_eq!(o_ser.image, o_par.image); // luma plane
+        assert_eq!(o_ser.compressed_bytes, o_par.compressed_bytes);
+        assert!(o_ser.psnr_db.unwrap() > 25.0);
+        assert_eq!((ser_rgb.width, ser_rgb.height), (40, 32));
+    }
+
+    #[test]
+    fn color_auto_routes_to_cpu_and_gpu_rejected() {
+        use crate::image::ycbcr::Subsampling;
+        let ctx = cpu_ctx(4);
+        let img = synthetic::lena_like_rgb(16, 16, 1);
+        let auto = Request::compress_color(
+            1,
+            img.clone(),
+            Variant::Dct,
+            Lane::Auto,
+            Subsampling::S444,
+        );
+        assert_eq!(resolve_lane(&ctx, &auto), Lane::Cpu);
+        let gpu = Request::compress_color(
+            2,
+            img,
+            Variant::Dct,
+            Lane::Gpu,
+            Subsampling::S444,
+        );
+        assert!(run_job(&ctx, &gpu, Lane::Gpu).is_err());
     }
 }

@@ -1,0 +1,365 @@
+//! The color (YCbCr) compression pipeline: a thin orchestration layer
+//! that runs the existing grayscale pipeline once per plane.
+//!
+//! Flow (`compress`):
+//!
+//! ```text
+//! RGB ──► BT.601 Y/Cb/Cr ──► chroma downsample (4:4:4/4:2:2/4:2:0)
+//!     Y  ──► gray pipeline with the *luma*   quant table ─┐
+//!     Cb ──► gray pipeline with the *chroma* quant table ─┼─► recon
+//!     Cr ──► gray pipeline with the *chroma* quant table ─┘   planes
+//! chroma upsample ──► YCbCr → RGB reconstruction
+//! ```
+//!
+//! Every plane runs the exact serial or block-parallel grayscale code
+//! path, so the luma plane of a color job is bit-identical to a grayscale
+//! job on the same plane (asserted by `tests/color_parity.rs`) and all
+//! four transform variants work unchanged. The plane decomposition is
+//! also the planar-batch shape the future GPU lane consumes (1 plane for
+//! gray, 3 for color).
+
+use crate::image::color::ColorImage;
+use crate::image::ycbcr::{self, Subsampling};
+use crate::image::GrayImage;
+
+use super::parallel::ParallelCpuPipeline;
+use super::pipeline::{CpuCompressOutput, CpuPipeline};
+use super::quant::{effective_qtable, effective_qtable_chroma};
+use super::Variant;
+
+/// Quantized coefficients of one plane (planar layout, padded size).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PlaneCoef {
+    pub qcoef: Vec<f32>,
+    /// Pre-padding plane size.
+    pub width: usize,
+    pub height: usize,
+    /// Padded (8-aligned) size the coefficient grid uses.
+    pub padded_width: usize,
+    pub padded_height: usize,
+}
+
+impl PlaneCoef {
+    fn from_output(out: &CpuCompressOutput, w: usize, h: usize)
+                   -> PlaneCoef {
+        PlaneCoef {
+            qcoef: out.qcoef.clone(),
+            width: w,
+            height: h,
+            padded_width: out.padded_width,
+            padded_height: out.padded_height,
+        }
+    }
+}
+
+/// Output of a color compression run.
+pub struct ColorCompressOutput {
+    /// Reconstructed RGB image at the original size.
+    pub recon: ColorImage,
+    /// Full-resolution reconstructed luma plane — bit-identical to the
+    /// grayscale pipeline's reconstruction of the Y plane.
+    pub recon_y: GrayImage,
+    /// Reconstructed chroma planes at their subsampled resolution.
+    pub recon_cb: GrayImage,
+    pub recon_cr: GrayImage,
+    /// Quantized coefficients per plane, in Y/Cb/Cr order.
+    pub planes: [PlaneCoef; 3],
+}
+
+/// Per-plane executors: the serial or parallel grayscale pipeline, one
+/// instance quantizing with the luma table and one with chroma.
+enum PlanePipes {
+    Serial {
+        luma: CpuPipeline,
+        chroma: CpuPipeline,
+    },
+    Parallel {
+        luma: ParallelCpuPipeline,
+        chroma: ParallelCpuPipeline,
+    },
+}
+
+/// Color compression pipeline over the CPU lanes.
+pub struct ColorPipeline {
+    pipes: PlanePipes,
+    pub variant: Variant,
+    pub quality: u8,
+    pub subsampling: Subsampling,
+}
+
+impl ColorPipeline {
+    /// Serial-lane color pipeline.
+    pub fn new(
+        variant: Variant,
+        quality: u8,
+        subsampling: Subsampling,
+    ) -> Self {
+        ColorPipeline {
+            pipes: PlanePipes::Serial {
+                luma: CpuPipeline::with_qtable(
+                    variant,
+                    quality,
+                    effective_qtable(quality),
+                ),
+                chroma: CpuPipeline::with_qtable(
+                    variant,
+                    quality,
+                    effective_qtable_chroma(quality),
+                ),
+            },
+            variant,
+            quality,
+            subsampling,
+        }
+    }
+
+    /// Parallel-lane color pipeline (`workers == 0` = machine default).
+    pub fn parallel(
+        variant: Variant,
+        quality: u8,
+        subsampling: Subsampling,
+        workers: usize,
+    ) -> Self {
+        ColorPipeline {
+            pipes: PlanePipes::Parallel {
+                luma: ParallelCpuPipeline::with_qtable(
+                    variant,
+                    quality,
+                    workers,
+                    effective_qtable(quality),
+                ),
+                chroma: ParallelCpuPipeline::with_qtable(
+                    variant,
+                    quality,
+                    workers,
+                    effective_qtable_chroma(quality),
+                ),
+            },
+            variant,
+            quality,
+            subsampling,
+        }
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        matches!(self.pipes, PlanePipes::Parallel { .. })
+    }
+
+    fn compress_plane(&self, plane: &GrayImage, chroma: bool)
+                      -> CpuCompressOutput {
+        match &self.pipes {
+            PlanePipes::Serial { luma, chroma: c } => {
+                let pipe = if chroma { c } else { luma };
+                pipe.compress(plane)
+            }
+            PlanePipes::Parallel { luma, chroma: c } => {
+                let pipe = if chroma { c } else { luma };
+                pipe.compress(plane)
+            }
+        }
+    }
+
+    fn analyze_plane(&self, plane: &GrayImage, chroma: bool)
+                     -> (Vec<f32>, usize, usize) {
+        match &self.pipes {
+            PlanePipes::Serial { luma, chroma: c } => {
+                let pipe = if chroma { c } else { luma };
+                pipe.analyze(plane)
+            }
+            PlanePipes::Parallel { luma, chroma: c } => {
+                let pipe = if chroma { c } else { luma };
+                pipe.analyze(plane)
+            }
+        }
+    }
+
+    fn decode_plane(&self, p: &PlaneCoef, chroma: bool) -> GrayImage {
+        match &self.pipes {
+            PlanePipes::Serial { luma, chroma: c } => {
+                let pipe = if chroma { c } else { luma };
+                pipe.decode_coefficients(
+                    &p.qcoef,
+                    p.padded_width,
+                    p.padded_height,
+                    p.width,
+                    p.height,
+                )
+            }
+            PlanePipes::Parallel { luma, chroma: c } => {
+                let pipe = if chroma { c } else { luma };
+                pipe.decode_coefficients(
+                    &p.qcoef,
+                    p.padded_width,
+                    p.padded_height,
+                    p.width,
+                    p.height,
+                )
+            }
+        }
+    }
+
+    /// Split an RGB image into the three planes the pipeline compresses:
+    /// full-resolution Y plus subsampled Cb/Cr.
+    pub fn split_planes(&self, img: &ColorImage)
+                        -> (GrayImage, GrayImage, GrayImage) {
+        let (y, cb, cr) = ycbcr::rgb_to_ycbcr(img);
+        (
+            y,
+            ycbcr::downsample(&cb, self.subsampling),
+            ycbcr::downsample(&cr, self.subsampling),
+        )
+    }
+
+    /// Full pipeline: convert, subsample, compress each plane, upsample
+    /// and reassemble the RGB reconstruction.
+    pub fn compress(&self, img: &ColorImage) -> ColorCompressOutput {
+        let (y, cb, cr) = self.split_planes(img);
+        let oy = self.compress_plane(&y, false);
+        let ocb = self.compress_plane(&cb, true);
+        let ocr = self.compress_plane(&cr, true);
+        let cb_full = ycbcr::upsample(
+            &ocb.recon,
+            self.subsampling,
+            img.width,
+            img.height,
+        );
+        let cr_full = ycbcr::upsample(
+            &ocr.recon,
+            self.subsampling,
+            img.width,
+            img.height,
+        );
+        let recon = ycbcr::ycbcr_to_rgb(&oy.recon, &cb_full, &cr_full)
+            .expect("planes upsampled to matching size");
+        ColorCompressOutput {
+            recon,
+            planes: [
+                PlaneCoef::from_output(&oy, y.width, y.height),
+                PlaneCoef::from_output(&ocb, cb.width, cb.height),
+                PlaneCoef::from_output(&ocr, cr.width, cr.height),
+            ],
+            recon_y: oy.recon,
+            recon_cb: ocb.recon,
+            recon_cr: ocr.recon,
+        }
+    }
+
+    /// Forward transform + quantization only (what the entropy encoder
+    /// needs), per plane in Y/Cb/Cr order.
+    pub fn analyze(&self, img: &ColorImage) -> [PlaneCoef; 3] {
+        let (y, cb, cr) = self.split_planes(img);
+        let plane = |img: &GrayImage, chroma: bool| {
+            let (qcoef, pw, ph) = self.analyze_plane(img, chroma);
+            PlaneCoef {
+                qcoef,
+                width: img.width,
+                height: img.height,
+                padded_width: pw,
+                padded_height: ph,
+            }
+        };
+        [plane(&y, false), plane(&cb, true), plane(&cr, true)]
+    }
+
+    /// Decode quantized plane coefficients back to an RGB image (the
+    /// decoder half: dequantize + IDCT per plane, upsample, convert).
+    pub fn decode_coefficients(&self, planes: &[PlaneCoef; 3])
+                               -> ColorImage {
+        let y = self.decode_plane(&planes[0], false);
+        let cb = self.decode_plane(&planes[1], true);
+        let cr = self.decode_plane(&planes[2], true);
+        let cb_full =
+            ycbcr::upsample(&cb, self.subsampling, y.width, y.height);
+        let cr_full =
+            ycbcr::upsample(&cr, self.subsampling, y.width, y.height);
+        ycbcr::ycbcr_to_rgb(&y, &cb_full, &cr_full)
+            .expect("planes upsampled to matching size")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synthetic;
+    use crate::metrics::color::psnr_color;
+
+    #[test]
+    fn color_pipeline_reasonable_psnr() {
+        let img = synthetic::lena_like_rgb(64, 64, 1);
+        for mode in Subsampling::ALL {
+            let out = ColorPipeline::new(Variant::Dct, 50, mode)
+                .compress(&img);
+            let p = psnr_color(&img, &out.recon);
+            assert!(p.weighted > 28.0, "{} -> {:.2}", mode.as_str(),
+                    p.weighted);
+            assert_eq!(
+                (out.recon.width, out.recon.height),
+                (64, 64)
+            );
+        }
+    }
+
+    #[test]
+    fn subsampling_shrinks_chroma_planes() {
+        let img = synthetic::cablecar_like_rgb(30, 21, 2);
+        let out =
+            ColorPipeline::new(Variant::Dct, 50, Subsampling::S420)
+                .compress(&img);
+        assert_eq!((out.planes[0].width, out.planes[0].height), (30, 21));
+        assert_eq!((out.planes[1].width, out.planes[1].height), (15, 11));
+        assert_eq!(out.planes[1].padded_width, 16);
+        assert_eq!((out.recon.width, out.recon.height), (30, 21));
+    }
+
+    #[test]
+    fn luma_untouched_by_chroma_decimation() {
+        let img = synthetic::lena_like_rgb(96, 96, 3);
+        let out444 =
+            ColorPipeline::new(Variant::Dct, 50, Subsampling::S444)
+                .compress(&img);
+        let out420 =
+            ColorPipeline::new(Variant::Dct, 50, Subsampling::S420)
+                .compress(&img);
+        // the luma path never sees the chroma decimation: plane output
+        // is bit-identical
+        assert_eq!(out444.recon_y, out420.recon_y);
+        assert_eq!(out444.planes[0], out420.planes[0]);
+        // full-resolution chroma should not lose to decimated chroma by
+        // more than conversion-rounding noise
+        let p444 = psnr_color(&img, &out444.recon);
+        let p420 = psnr_color(&img, &out420.recon);
+        assert!(
+            p444.weighted >= p420.weighted - 0.75,
+            "{} vs {}",
+            p444.weighted,
+            p420.weighted
+        );
+    }
+
+    #[test]
+    fn analyze_matches_compress() {
+        let img = synthetic::lena_like_rgb(40, 32, 5);
+        let pipe =
+            ColorPipeline::new(Variant::Cordic, 50, Subsampling::S420);
+        let out = pipe.compress(&img);
+        let planes = pipe.analyze(&img);
+        assert_eq!(planes, out.planes);
+        let recon = pipe.decode_coefficients(&planes);
+        assert_eq!(recon, out.recon);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let img = synthetic::cablecar_like_rgb(48, 40, 7);
+        for mode in Subsampling::ALL {
+            let ser = ColorPipeline::new(Variant::Cordic, 50, mode)
+                .compress(&img);
+            let par =
+                ColorPipeline::parallel(Variant::Cordic, 50, mode, 3)
+                    .compress(&img);
+            assert_eq!(ser.planes, par.planes, "{}", mode.as_str());
+            assert_eq!(ser.recon, par.recon);
+            assert_eq!(ser.recon_y, par.recon_y);
+        }
+    }
+}

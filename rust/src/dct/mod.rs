@@ -14,7 +14,10 @@
 //!
 //! [`pipeline`] is the serial one-thread lane exactly as the paper ran it;
 //! [`parallel`] fans the same arithmetic over row-band tiles and worker
-//! threads (bit-identical output — the coordinator's `CpuParallel` lane).
+//! threads (bit-identical output — the coordinator's `CpuParallel` lane);
+//! [`color`] orchestrates either lane once per YCbCr plane (luma/chroma
+//! quantization tables, 4:4:4/4:2:2/4:2:0 chroma subsampling) for the
+//! color workload.
 //!
 //! All implementations produce *orthonormally scaled* coefficients so they
 //! are interchangeable in front of [`quant`] and bit-compatible with the
@@ -22,6 +25,7 @@
 //! by the cross-lane integration tests).
 
 pub mod blocks;
+pub mod color;
 pub mod cordic;
 pub mod cordic_loeffler;
 pub mod loeffler;

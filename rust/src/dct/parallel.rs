@@ -44,6 +44,22 @@ impl ParallelCpuPipeline {
 
     /// Pipeline with an explicit worker count (`0` = machine default).
     pub fn with_workers(variant: Variant, quality: u8, workers: usize) -> Self {
+        Self::with_qtable(
+            variant,
+            quality,
+            workers,
+            effective_qtable(quality),
+        )
+    }
+
+    /// Pipeline with an explicit worker count and effective quantization
+    /// table (the color path passes the chroma table for Cb/Cr planes).
+    pub fn with_qtable(
+        variant: Variant,
+        quality: u8,
+        workers: usize,
+        qtable: [f32; 64],
+    ) -> Self {
         let workers = if workers == 0 {
             ThreadPool::default_size()
         } else {
@@ -52,7 +68,7 @@ impl ParallelCpuPipeline {
         ParallelCpuPipeline {
             transform: variant.transform(),
             decoder: MatrixDct::new(),
-            qtable: effective_qtable(quality),
+            qtable,
             variant,
             quality,
             workers,

@@ -40,10 +40,20 @@ pub struct CpuPipeline {
 
 impl CpuPipeline {
     pub fn new(variant: Variant, quality: u8) -> Self {
+        Self::with_qtable(variant, quality, effective_qtable(quality))
+    }
+
+    /// Pipeline dividing by an explicit effective table — the color path
+    /// passes the chroma table here; [`CpuPipeline::new`] uses luma.
+    pub fn with_qtable(
+        variant: Variant,
+        quality: u8,
+        qtable: [f32; 64],
+    ) -> Self {
         CpuPipeline {
             transform: variant.transform(),
             decoder: MatrixDct::new(),
-            qtable: effective_qtable(quality),
+            qtable,
             variant,
             quality,
         }

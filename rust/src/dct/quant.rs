@@ -1,9 +1,10 @@
-//! JPEG quantization: the ITU-T T.81 Annex K luma table, IJG quality
-//! scaling, and block quantize/dequantize.
+//! JPEG quantization: the ITU-T T.81 Annex K luma and chroma tables, IJG
+//! quality scaling, and block quantize/dequantize.
 //!
 //! Tables and scaling mirror `python/compile/kernels/ref.py` exactly
 //! (including the /4 orthonormal-DCT gain fold and round-half-even), so
-//! the CPU lane and the AOT artifacts quantize identically.
+//! the CPU lane and the AOT artifacts quantize identically. The chroma
+//! table serves the color (YCbCr) pipeline's Cb/Cr planes.
 
 /// ITU-T T.81 Annex K luminance table (quality 50).
 pub const JPEG_LUMA_Q50: [u16; 64] = [
@@ -15,6 +16,18 @@ pub const JPEG_LUMA_Q50: [u16; 64] = [
     24, 35, 55, 64, 81, 104, 113, 92, //
     49, 64, 78, 87, 103, 121, 120, 101, //
     72, 92, 95, 98, 112, 100, 103, 99,
+];
+
+/// ITU-T T.81 Annex K chrominance table (quality 50).
+pub const JPEG_CHROMA_Q50: [u16; 64] = [
+    17, 18, 24, 47, 99, 99, 99, 99, //
+    18, 21, 26, 66, 99, 99, 99, 99, //
+    24, 26, 56, 99, 99, 99, 99, 99, //
+    47, 66, 99, 99, 99, 99, 99, 99, //
+    99, 99, 99, 99, 99, 99, 99, 99, //
+    99, 99, 99, 99, 99, 99, 99, 99, //
+    99, 99, 99, 99, 99, 99, 99, 99, //
+    99, 99, 99, 99, 99, 99, 99, 99,
 ];
 
 /// JPEG's conventional FDCT emits coefficients 4x the orthonormal ones
@@ -31,18 +44,34 @@ pub fn quality_scale(quality: u8) -> f32 {
     }
 }
 
-/// Standard-scaled JPEG luma table at `quality` (values 1..=255).
-pub fn quant_table(quality: u8) -> [f32; 64] {
+/// IJG quality scaling of an Annex K base table (values 1..=255).
+fn scaled_table(base: &[u16; 64], quality: u8) -> [f32; 64] {
     let scale = quality_scale(quality);
     std::array::from_fn(|i| {
-        let v = ((JPEG_LUMA_Q50[i] as f32 * scale + 50.0) / 100.0).floor();
+        let v = ((base[i] as f32 * scale + 50.0) / 100.0).floor();
         v.clamp(1.0, 255.0)
     })
 }
 
-/// The table the orthonormal pipeline actually divides by.
+/// Standard-scaled JPEG luma table at `quality` (values 1..=255).
+pub fn quant_table(quality: u8) -> [f32; 64] {
+    scaled_table(&JPEG_LUMA_Q50, quality)
+}
+
+/// Standard-scaled JPEG chroma table at `quality` (values 1..=255).
+pub fn quant_table_chroma(quality: u8) -> [f32; 64] {
+    scaled_table(&JPEG_CHROMA_Q50, quality)
+}
+
+/// The luma table the orthonormal pipeline actually divides by.
 pub fn effective_qtable(quality: u8) -> [f32; 64] {
     let q = quant_table(quality);
+    std::array::from_fn(|i| q[i] / JPEG_DCT_GAIN)
+}
+
+/// The chroma table the orthonormal color pipeline divides Cb/Cr by.
+pub fn effective_qtable_chroma(quality: u8) -> [f32; 64] {
+    let q = quant_table_chroma(quality);
     std::array::from_fn(|i| q[i] / JPEG_DCT_GAIN)
 }
 
@@ -133,5 +162,34 @@ mod tests {
         let e = effective_qtable(50);
         assert_eq!(e[0], 4.0);
         assert_eq!(e[63], 99.0 / 4.0);
+    }
+
+    #[test]
+    fn chroma_q50_is_annex_k() {
+        let t = quant_table_chroma(50);
+        for i in 0..64 {
+            assert_eq!(t[i], JPEG_CHROMA_Q50[i] as f32);
+        }
+        let e = effective_qtable_chroma(50);
+        assert_eq!(e[0], 17.0 / 4.0);
+        assert_eq!(e[63], 99.0 / 4.0);
+    }
+
+    #[test]
+    fn chroma_coarser_than_luma_in_high_bands() {
+        // Annex K quantizes chroma high frequencies much harder — that
+        // asymmetry is what the color pipeline banks on.
+        let luma = quant_table(50);
+        let chroma = quant_table_chroma(50);
+        assert!(chroma[63] > luma[63] * 0.9);
+        let luma_sum: f32 = luma.iter().sum();
+        let chroma_sum: f32 = chroma.iter().sum();
+        assert!(chroma_sum > luma_sum, "{chroma_sum} vs {luma_sum}");
+    }
+
+    #[test]
+    fn chroma_quality_extremes() {
+        assert!(quant_table_chroma(1).iter().all(|&v| v == 255.0));
+        assert!(quant_table_chroma(100).iter().all(|&v| v == 1.0));
     }
 }

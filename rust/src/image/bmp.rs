@@ -1,8 +1,10 @@
 //! BMP codec: 8-bit grayscale palette BMPs (what the paper-era Windows
-//! tooling produced) plus 24-bit decode with luma conversion.
+//! tooling produced), 24-bit decode with luma conversion, and 24-bit
+//! color encode/decode for the color pipeline.
 
 use anyhow::{bail, Result};
 
+use super::color::ColorImage;
 use super::GrayImage;
 
 fn u16le(b: &[u8], off: usize) -> u32 {
@@ -54,8 +56,99 @@ pub fn encode(img: &GrayImage) -> Vec<u8> {
     out
 }
 
-/// Decode 8-bit palettized or 24-bit uncompressed BMP to grayscale.
-pub fn decode(bytes: &[u8]) -> Result<GrayImage> {
+/// Encode as 24-bit uncompressed BMP (bottom-up, BGR, 4-byte row pad).
+pub fn encode_rgb(img: &ColorImage) -> Vec<u8> {
+    let row = (img.width * 3).div_ceil(4) * 4;
+    let data_off = 14 + 40;
+    let file_len = data_off + row * img.height;
+    let mut out = Vec::with_capacity(file_len);
+    // BITMAPFILEHEADER
+    out.extend_from_slice(b"BM");
+    out.extend_from_slice(&(file_len as u32).to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes());
+    out.extend_from_slice(&(data_off as u32).to_le_bytes());
+    // BITMAPINFOHEADER
+    out.extend_from_slice(&40u32.to_le_bytes());
+    out.extend_from_slice(&(img.width as i32).to_le_bytes());
+    out.extend_from_slice(&(img.height as i32).to_le_bytes());
+    out.extend_from_slice(&1u16.to_le_bytes());
+    out.extend_from_slice(&24u16.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes()); // BI_RGB
+    out.extend_from_slice(&((row * img.height) as u32).to_le_bytes());
+    out.extend_from_slice(&2835u32.to_le_bytes()); // 72 dpi
+    out.extend_from_slice(&2835u32.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes());
+    out.extend_from_slice(&0u32.to_le_bytes());
+    // pixel rows, bottom-up, BGR order
+    for y in (0..img.height).rev() {
+        for x in 0..img.width {
+            let [r, g, b] = img.get(x, y);
+            out.extend_from_slice(&[b, g, r]);
+        }
+        out.resize(out.len() + (row - img.width * 3), 0);
+    }
+    out
+}
+
+/// Decode 24-bit (kept in color) or 8-bit palettized (palette colors
+/// preserved) uncompressed BMP to RGB.
+pub fn decode_rgb(bytes: &[u8]) -> Result<ColorImage> {
+    let h = parse_header(bytes)?;
+    let mut img = ColorImage::new(h.width, h.height);
+    match h.bpp {
+        8 => {
+            let (palette, row) = palette_and_row(bytes, &h)?;
+            for dy in 0..h.height {
+                let sy = h.src_row(dy);
+                let src = h.data_off + sy * row;
+                for x in 0..h.width {
+                    img.set(x, dy, palette[bytes[src + x] as usize]);
+                }
+            }
+        }
+        24 => {
+            let row = rgb24_row(bytes, &h)?;
+            for dy in 0..h.height {
+                let sy = h.src_row(dy);
+                let src = h.data_off + sy * row;
+                for x in 0..h.width {
+                    let e = src + x * 3;
+                    img.set(
+                        x,
+                        dy,
+                        [bytes[e + 2], bytes[e + 1], bytes[e]],
+                    );
+                }
+            }
+        }
+        bpp => bail!("unsupported BMP bit depth {bpp}"),
+    }
+    Ok(img)
+}
+
+/// Parsed BMP header fields shared by the gray and color decoders.
+struct BmpHeader {
+    width: usize,
+    height: usize,
+    bpp: u32,
+    data_off: usize,
+    header_size: usize,
+    top_down: bool,
+}
+
+impl BmpHeader {
+    /// Source row index for destination row `dy` (BMPs are usually
+    /// bottom-up).
+    fn src_row(&self, dy: usize) -> usize {
+        if self.top_down {
+            dy
+        } else {
+            self.height - 1 - dy
+        }
+    }
+}
+
+fn parse_header(bytes: &[u8]) -> Result<BmpHeader> {
     if bytes.len() < 54 || &bytes[0..2] != b"BM" {
         bail!("not a BMP file");
     }
@@ -74,65 +167,90 @@ pub fn decode(bytes: &[u8]) -> Result<GrayImage> {
     if width <= 0 || height_raw == 0 {
         bail!("bad BMP dimensions {width}x{height_raw}");
     }
-    let width = width as usize;
-    let top_down = height_raw < 0;
-    let height = height_raw.unsigned_abs() as usize;
+    Ok(BmpHeader {
+        width: width as usize,
+        height: height_raw.unsigned_abs() as usize,
+        bpp,
+        data_off,
+        header_size,
+        top_down: height_raw < 0,
+    })
+}
 
-    let mut img = GrayImage::new(width, height);
-    match bpp {
+/// Read the 8-bit palette (as RGB triples) and validate the row stride.
+fn palette_and_row(
+    bytes: &[u8],
+    h: &BmpHeader,
+) -> Result<([[u8; 3]; 256], usize)> {
+    let palette_off = 14 + h.header_size;
+    let ncolors = {
+        let n = u32le(bytes, 46) as usize;
+        if n == 0 {
+            256
+        } else {
+            n
+        }
+    };
+    if palette_off + ncolors * 4 > h.data_off {
+        bail!("BMP palette overruns pixel data");
+    }
+    let mut palette = [[0u8; 3]; 256];
+    for (i, p) in palette.iter_mut().enumerate().take(ncolors) {
+        let e = palette_off + i * 4;
+        *p = [bytes[e + 2], bytes[e + 1], bytes[e]];
+    }
+    let row = h.width.div_ceil(4) * 4;
+    if h.data_off + row * h.height > bytes.len() {
+        bail!("BMP pixel data truncated");
+    }
+    Ok((palette, row))
+}
+
+/// Validate the 24-bit row stride against the file size.
+fn rgb24_row(bytes: &[u8], h: &BmpHeader) -> Result<usize> {
+    let row = (h.width * 3).div_ceil(4) * 4;
+    if h.data_off + row * h.height > bytes.len() {
+        bail!("BMP pixel data truncated");
+    }
+    Ok(row)
+}
+
+/// Decode 8-bit palettized or 24-bit uncompressed BMP to grayscale.
+pub fn decode(bytes: &[u8]) -> Result<GrayImage> {
+    let h = parse_header(bytes)?;
+    let mut img = GrayImage::new(h.width, h.height);
+    let luma = |r: u8, g: u8, b: u8| {
+        super::luma_f32(r as f32, g as f32, b as f32)
+    };
+    match h.bpp {
         8 => {
-            // palette: 4 bytes per entry, right after the info header
-            let palette_off = 14 + header_size;
-            let ncolors = {
-                let n = u32le(bytes, 46) as usize;
-                if n == 0 { 256 } else { n }
-            };
-            if palette_off + ncolors * 4 > data_off {
-                bail!("BMP palette overruns pixel data");
+            let (palette, row) = palette_and_row(bytes, &h)?;
+            let mut lut = [0u8; 256];
+            for (l, p) in lut.iter_mut().zip(palette.iter()) {
+                *l = luma(p[0], p[1], p[2]);
             }
-            let mut luma = [0u8; 256];
-            for (i, l) in luma.iter_mut().enumerate().take(ncolors) {
-                let e = palette_off + i * 4;
-                let (b, g, r) = (
-                    bytes[e] as f32,
-                    bytes[e + 1] as f32,
-                    bytes[e + 2] as f32,
-                );
-                *l = (0.299 * r + 0.587 * g + 0.114 * b).round() as u8;
-            }
-            let row = width.div_ceil(4) * 4;
-            if data_off + row * height > bytes.len() {
-                bail!("BMP pixel data truncated");
-            }
-            for dy in 0..height {
-                let sy = if top_down { dy } else { height - 1 - dy };
-                let src = data_off + sy * row;
-                for x in 0..width {
-                    img.data[dy * width + x] = luma[bytes[src + x] as usize];
+            for dy in 0..h.height {
+                let sy = h.src_row(dy);
+                let src = h.data_off + sy * row;
+                for x in 0..h.width {
+                    img.data[dy * h.width + x] =
+                        lut[bytes[src + x] as usize];
                 }
             }
         }
         24 => {
-            let row = (width * 3).div_ceil(4) * 4;
-            if data_off + row * height > bytes.len() {
-                bail!("BMP pixel data truncated");
-            }
-            for dy in 0..height {
-                let sy = if top_down { dy } else { height - 1 - dy };
-                let src = data_off + sy * row;
-                for x in 0..width {
+            let row = rgb24_row(bytes, &h)?;
+            for dy in 0..h.height {
+                let sy = h.src_row(dy);
+                let src = h.data_off + sy * row;
+                for x in 0..h.width {
                     let e = src + x * 3;
-                    let (b, g, r) = (
-                        bytes[e] as f32,
-                        bytes[e + 1] as f32,
-                        bytes[e + 2] as f32,
-                    );
-                    img.data[dy * width + x] =
-                        (0.299 * r + 0.587 * g + 0.114 * b).round() as u8;
+                    img.data[dy * h.width + x] =
+                        luma(bytes[e + 2], bytes[e + 1], bytes[e]);
                 }
             }
         }
-        _ => bail!("unsupported BMP bit depth {bpp}"),
+        bpp => bail!("unsupported BMP bit depth {bpp}"),
     }
     Ok(img)
 }
@@ -174,5 +292,41 @@ mod tests {
         assert_eq!(u16le(&b, 28), 8); // bpp
         assert_eq!(i32le(&b, 18), 5);
         assert_eq!(i32le(&b, 22), 3);
+    }
+
+    #[test]
+    fn roundtrip_24bit_color() {
+        let mut rng = Rng::new(11);
+        // width 7 exercises 24-bit row padding (21 % 4 != 0)
+        let data: Vec<u8> =
+            (0..7 * 5 * 3).map(|_| rng.next_u32() as u8).collect();
+        let img = ColorImage::from_vec(7, 5, data).unwrap();
+        let back = decode_rgb(&encode_rgb(&img)).unwrap();
+        assert_eq!(img, back);
+        assert_eq!(u16le(&encode_rgb(&img), 28), 24);
+    }
+
+    #[test]
+    fn color_decode_of_gray_bmp_replicates_palette() {
+        let img = GrayImage::from_vec(2, 2, vec![0, 80, 160, 255]).unwrap();
+        let c = decode_rgb(&encode(&img)).unwrap();
+        assert_eq!(c.to_gray(), img);
+        assert_eq!(c.get(1, 0), [80, 80, 80]);
+    }
+
+    #[test]
+    fn gray_decode_of_color_bmp_is_luma() {
+        let img = ColorImage::from_vec(1, 1, vec![255, 0, 0]).unwrap();
+        let g = decode(&encode_rgb(&img)).unwrap();
+        assert_eq!(g.data[0], 76); // 0.299 * 255
+    }
+
+    #[test]
+    fn decode_rgb_rejects_truncated() {
+        let img = ColorImage::new(8, 8);
+        let mut bytes = encode_rgb(&img);
+        bytes.truncate(bytes.len() - 10);
+        assert!(decode_rgb(&bytes).is_err());
+        assert!(decode_rgb(b"junk").is_err());
     }
 }

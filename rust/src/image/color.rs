@@ -1,0 +1,190 @@
+//! Interleaved RGB8 color image type and I/O.
+//!
+//! The color workload decomposes into YCbCr planes (see [`super::ycbcr`])
+//! so every transform/quantize/entropy stage still runs on the grayscale
+//! [`GrayImage`] plane type; `ColorImage` only exists at the boundary —
+//! file I/O, conversion, and final reassembly.
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use super::{bmp, pgm, png, GrayImage};
+
+/// 8-bit RGB image, row-major, channels interleaved (R, G, B).
+#[derive(Clone, PartialEq, Eq)]
+pub struct ColorImage {
+    pub width: usize,
+    pub height: usize,
+    /// `width * height * 3` bytes, `[r, g, b, r, g, b, ...]` per row.
+    pub data: Vec<u8>,
+}
+
+impl std::fmt::Debug for ColorImage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ColorImage({}x{})", self.width, self.height)
+    }
+}
+
+impl ColorImage {
+    pub fn new(width: usize, height: usize) -> Self {
+        ColorImage {
+            width,
+            height,
+            data: vec![0; width * height * 3],
+        }
+    }
+
+    pub fn from_vec(width: usize, height: usize, data: Vec<u8>) -> Result<Self> {
+        if data.len() != width * height * 3 {
+            bail!(
+                "RGB byte count {} != {}x{}x3",
+                data.len(),
+                width,
+                height
+            );
+        }
+        Ok(ColorImage {
+            width,
+            height,
+            data,
+        })
+    }
+
+    /// Replicate a grayscale image into all three channels (R = G = B).
+    pub fn from_gray(img: &GrayImage) -> Self {
+        let mut data = Vec::with_capacity(img.pixels() * 3);
+        for &v in &img.data {
+            data.extend_from_slice(&[v, v, v]);
+        }
+        ColorImage {
+            width: img.width,
+            height: img.height,
+            data,
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> [u8; 3] {
+        let i = (y * self.width + x) * 3;
+        [self.data[i], self.data[i + 1], self.data[i + 2]]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, rgb: [u8; 3]) {
+        let i = (y * self.width + x) * 3;
+        self.data[i..i + 3].copy_from_slice(&rgb);
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.width * self.height
+    }
+
+    /// Raw byte size of the uncompressed representation.
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Extract one channel (0 = R, 1 = G, 2 = B) as a grayscale plane.
+    pub fn channel(&self, c: usize) -> GrayImage {
+        assert!(c < 3, "channel index {c}");
+        GrayImage {
+            width: self.width,
+            height: self.height,
+            data: self.data.iter().skip(c).step_by(3).copied().collect(),
+        }
+    }
+
+    /// Collapse to grayscale via BT.601 luma (matches the gray decoders).
+    pub fn to_gray(&self) -> GrayImage {
+        GrayImage {
+            width: self.width,
+            height: self.height,
+            data: self
+                .data
+                .chunks_exact(3)
+                .map(|p| {
+                    super::luma_f32(
+                        p[0] as f32,
+                        p[1] as f32,
+                        p[2] as f32,
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    /// Load by extension: .ppm, .bmp, .png (kept in color).
+    pub fn load(path: impl AsRef<Path>) -> Result<ColorImage> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        match super::ext(path).as_deref() {
+            Some("ppm") => pgm::decode_rgb(&bytes),
+            Some("bmp") => bmp::decode_rgb(&bytes),
+            Some("png") => png::decode_rgb(&bytes),
+            _ => bail!(
+                "unsupported color image extension: {}",
+                path.display()
+            ),
+        }
+    }
+
+    /// Save by extension: .ppm, .bmp, .png.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let bytes = match super::ext(path).as_deref() {
+            Some("ppm") => pgm::encode_rgb(self),
+            Some("bmp") => bmp::encode_rgb(self),
+            Some("png") => png::encode_rgb(self)?,
+            _ => bail!(
+                "unsupported color image extension: {}",
+                path.display()
+            ),
+        };
+        std::fs::write(path, bytes)
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_validates() {
+        assert!(ColorImage::from_vec(2, 2, vec![0; 11]).is_err());
+        assert!(ColorImage::from_vec(2, 2, vec![0; 12]).is_ok());
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut img = ColorImage::new(3, 2);
+        img.set(2, 1, [10, 20, 30]);
+        assert_eq!(img.get(2, 1), [10, 20, 30]);
+        assert_eq!(img.get(0, 0), [0, 0, 0]);
+    }
+
+    #[test]
+    fn channels_extract() {
+        let img =
+            ColorImage::from_vec(2, 1, vec![1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(img.channel(0).data, vec![1, 4]);
+        assert_eq!(img.channel(1).data, vec![2, 5]);
+        assert_eq!(img.channel(2).data, vec![3, 6]);
+    }
+
+    #[test]
+    fn from_gray_replicates() {
+        let g = GrayImage::from_vec(2, 1, vec![7, 9]).unwrap();
+        let c = ColorImage::from_gray(&g);
+        assert_eq!(c.data, vec![7, 7, 7, 9, 9, 9]);
+        assert_eq!(c.to_gray(), g);
+    }
+
+    #[test]
+    fn to_gray_is_luma() {
+        let img =
+            ColorImage::from_vec(1, 1, vec![255, 0, 0]).unwrap();
+        assert_eq!(img.to_gray().data[0], 76); // 0.299 * 255
+    }
+}

@@ -1,15 +1,22 @@
-//! Grayscale image type and I/O.
+//! Image types and I/O.
 //!
-//! The whole pipeline works on 8-bit grayscale (the paper's experiments are
-//! all on grayscale Lena / Cable-car), carried as `GrayImage`: row-major
-//! `u8` with `f32` conversion helpers for the transform layers.
+//! The paper's experiments are all on 8-bit grayscale (Lena / Cable-car),
+//! carried as `GrayImage`: row-major `u8` with `f32` conversion helpers
+//! for the transform layers. The color workload rides on top: [`color`]
+//! holds the interleaved-RGB [`ColorImage`] boundary type and [`ycbcr`]
+//! decomposes it into Y/Cb/Cr `GrayImage` planes (with 4:4:4 / 4:2:2 /
+//! 4:2:0 chroma subsampling) so every transform stage stays grayscale.
 
 pub mod bmp;
+pub mod color;
 pub mod histeq;
 pub mod pgm;
 pub mod png;
 pub mod resize;
 pub mod synthetic;
+pub mod ycbcr;
+
+pub use color::ColorImage;
 
 use anyhow::{bail, Context, Result};
 use std::path::Path;
@@ -136,11 +143,15 @@ impl GrayImage {
         }
     }
 
-    /// Save by extension: .pgm, .bmp, .png.
+    /// Save by extension: .pgm, .ppm (P6, channels replicated), .bmp,
+    /// .png.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         let bytes = match ext(path).as_deref() {
             Some("pgm") => pgm::encode(self),
+            Some("ppm") => {
+                pgm::encode_rgb(&ColorImage::from_gray(self))
+            }
             Some("bmp") => bmp::encode(self),
             Some("png") => png::encode(self)?,
             _ => bail!("unsupported image extension: {}", path.display()),
@@ -175,6 +186,14 @@ fn ext(path: &Path) -> Option<String> {
     path.extension()
         .and_then(|e| e.to_str())
         .map(|e| e.to_ascii_lowercase())
+}
+
+/// BT.601 luma of an RGB triple (already-scaled f32 channels) — the one
+/// formula every color-to-gray conversion in this module shares.
+pub(crate) fn luma_f32(r: f32, g: f32, b: f32) -> u8 {
+    (0.299 * r + 0.587 * g + 0.114 * b)
+        .round()
+        .clamp(0.0, 255.0) as u8
 }
 
 #[cfg(test)]

@@ -6,6 +6,7 @@
 
 use anyhow::{bail, Result};
 
+use super::color::ColorImage;
 use super::GrayImage;
 
 /// Encode as binary PGM (P5).
@@ -73,18 +74,63 @@ pub fn decode(bytes: &[u8]) -> Result<GrayImage> {
             let data: Vec<u8> = rgb
                 .chunks_exact(3)
                 .map(|p| {
-                    let (r, g, b) = (
+                    super::luma_f32(
                         p[0] as f32 * scale,
                         p[1] as f32 * scale,
                         p[2] as f32 * scale,
-                    );
-                    (0.299 * r + 0.587 * g + 0.114 * b).round().min(255.0)
-                        as u8
+                    )
                 })
                 .collect();
             GrayImage::from_vec(w, h, data)
         }
         m => bail!("not a PGM/PPM file (magic {m:?})"),
+    }
+}
+
+/// Encode interleaved RGB as binary PPM (P6).
+pub fn encode_rgb(img: &ColorImage) -> Vec<u8> {
+    let mut out = format!("P6\n{} {}\n255\n", img.width, img.height)
+        .into_bytes();
+    out.extend_from_slice(&img.data);
+    out
+}
+
+/// Decode P3/P6 PPM keeping color; P2/P5 PGM is replicated into RGB.
+pub fn decode_rgb(bytes: &[u8]) -> Result<ColorImage> {
+    let mut t = Tokenizer { b: bytes, i: 0 };
+    let magic = t.token()?;
+    match magic.as_str() {
+        "P6" | "P3" => {
+            let (w, h) = (t.number()?, t.number()?);
+            let maxval = t.number()?;
+            if maxval == 0 || maxval > 255 {
+                bail!("unsupported PPM maxval {maxval}");
+            }
+            let scale = 255.0 / maxval as f32;
+            let need = w * h * 3;
+            let mut rgb = Vec::with_capacity(need);
+            if magic == "P6" {
+                t.skip_single_whitespace();
+                let raw = t.rest();
+                if raw.len() < need {
+                    bail!("PPM truncated");
+                }
+                rgb.extend(
+                    raw[..need]
+                        .iter()
+                        .map(|&v| ((v as f32) * scale).round() as u8),
+                );
+            } else {
+                for _ in 0..need {
+                    rgb.push(
+                        ((t.number()? as f32) * scale).round() as u8
+                    );
+                }
+            }
+            ColorImage::from_vec(w, h, rgb)
+        }
+        "P5" | "P2" => Ok(ColorImage::from_gray(&decode(bytes)?)),
+        m => bail!("not a PPM/PGM file (magic {m:?})"),
     }
 }
 
@@ -189,5 +235,29 @@ mod tests {
     fn bad_magic_errors() {
         assert!(decode(b"P9\n1 1\n255\n\0").is_err());
         assert!(decode(b"").is_err());
+    }
+
+    #[test]
+    fn roundtrip_p6_color() {
+        let mut rng = Rng::new(9);
+        let data: Vec<u8> =
+            (0..7 * 5 * 3).map(|_| rng.next_u32() as u8).collect();
+        let img = ColorImage::from_vec(7, 5, data).unwrap();
+        let back = decode_rgb(&encode_rgb(&img)).unwrap();
+        assert_eq!(img, back);
+    }
+
+    #[test]
+    fn decode_rgb_from_gray_pgm_replicates() {
+        let img = GrayImage::from_vec(2, 1, vec![3, 200]).unwrap();
+        let c = decode_rgb(&encode(&img)).unwrap();
+        assert_eq!(c.data, vec![3, 3, 3, 200, 200, 200]);
+    }
+
+    #[test]
+    fn decode_rgb_truncated_errors() {
+        let mut b = b"P6\n4 4\n255\n".to_vec();
+        b.extend_from_slice(&[0u8; 10]); // needs 48
+        assert!(decode_rgb(&b).is_err());
     }
 }

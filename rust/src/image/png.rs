@@ -1,6 +1,7 @@
-//! PNG codec for 8-bit grayscale: encoder (filter 0/Sub/Up heuristic +
-//! zlib via flate2) and decoder (all five filter types, grayscale and
-//! RGB[A] with luma conversion). CRCs via crc32fast.
+//! PNG codec for 8-bit grayscale and RGB: encoders (filter 0/Sub/Up
+//! heuristic + zlib via flate2) and decoders (all five filter types;
+//! grayscale decode converts color to luma, color decode keeps RGB).
+//! CRCs via crc32fast.
 
 use std::io::{Read, Write};
 
@@ -9,6 +10,7 @@ use flate2::read::ZlibDecoder;
 use flate2::write::ZlibEncoder;
 use flate2::Compression;
 
+use super::color::ColorImage;
 use super::GrayImage;
 
 const MAGIC: [u8; 8] = [0x89, b'P', b'N', b'G', b'\r', b'\n', 0x1A, b'\n'];
@@ -23,22 +25,23 @@ fn chunk(out: &mut Vec<u8>, tag: &[u8; 4], body: &[u8]) {
     out.extend_from_slice(&h.finalize().to_be_bytes());
 }
 
-/// Encode as 8-bit grayscale PNG. Per-row filter chosen greedily between
-/// None / Sub / Up by minimum absolute residual sum (the libpng heuristic).
-pub fn encode(img: &GrayImage) -> Result<Vec<u8>> {
-    let (w, h) = (img.width, img.height);
-    if w == 0 || h == 0 {
-        bail!("cannot encode empty image");
-    }
-    // raw scanlines with filter byte
-    let mut raw = Vec::with_capacity(h * (w + 1));
-    let zero_row = vec![0u8; w];
+/// Per-row filter selection (None / Sub / Up by minimum absolute residual
+/// sum, the libpng heuristic) over `h` rows of `stride` bytes with
+/// `bpp`-byte pixels; returns filter-byte-prefixed scanlines.
+fn filter_scanlines(
+    data: &[u8],
+    stride: usize,
+    h: usize,
+    bpp: usize,
+) -> Vec<u8> {
+    let mut raw = Vec::with_capacity(h * (stride + 1));
+    let zero_row = vec![0u8; stride];
     for y in 0..h {
-        let row = &img.data[y * w..(y + 1) * w];
+        let row = &data[y * stride..(y + 1) * stride];
         let prev: &[u8] = if y == 0 {
             &zero_row
         } else {
-            &img.data[(y - 1) * w..y * w]
+            &data[(y - 1) * stride..y * stride]
         };
         // candidate filters
         let none_cost: u64 =
@@ -47,7 +50,7 @@ pub fn encode(img: &GrayImage) -> Result<Vec<u8>> {
             .iter()
             .enumerate()
             .map(|(x, &v)| {
-                let left = if x == 0 { 0 } else { row[x - 1] };
+                let left = if x < bpp { 0 } else { row[x - bpp] };
                 (v.wrapping_sub(left) as i8).unsigned_abs() as u64
             })
             .sum();
@@ -58,13 +61,13 @@ pub fn encode(img: &GrayImage) -> Result<Vec<u8>> {
             .sum();
         if sub_cost <= none_cost && sub_cost <= up_cost {
             raw.push(1u8);
-            for x in 0..w {
-                let left = if x == 0 { 0 } else { row[x - 1] };
+            for x in 0..stride {
+                let left = if x < bpp { 0 } else { row[x - bpp] };
                 raw.push(row[x].wrapping_sub(left));
             }
         } else if up_cost <= none_cost {
             raw.push(2u8);
-            for x in 0..w {
+            for x in 0..stride {
                 raw.push(row[x].wrapping_sub(prev[x]));
             }
         } else {
@@ -72,8 +75,18 @@ pub fn encode(img: &GrayImage) -> Result<Vec<u8>> {
             raw.extend_from_slice(row);
         }
     }
+    raw
+}
+
+/// Assemble the PNG container around filtered scanlines.
+fn write_container(
+    w: usize,
+    h: usize,
+    color_type: u8,
+    raw: &[u8],
+) -> Result<Vec<u8>> {
     let mut z = ZlibEncoder::new(Vec::new(), Compression::new(6));
-    z.write_all(&raw)?;
+    z.write_all(raw)?;
     let compressed = z.finish()?;
 
     let mut out = Vec::with_capacity(compressed.len() + 64);
@@ -81,11 +94,31 @@ pub fn encode(img: &GrayImage) -> Result<Vec<u8>> {
     let mut ihdr = Vec::with_capacity(13);
     ihdr.extend_from_slice(&(w as u32).to_be_bytes());
     ihdr.extend_from_slice(&(h as u32).to_be_bytes());
-    ihdr.extend_from_slice(&[8, 0, 0, 0, 0]); // 8-bit gray, no interlace
+    ihdr.extend_from_slice(&[8, color_type, 0, 0, 0]); // no interlace
     chunk(&mut out, b"IHDR", &ihdr);
     chunk(&mut out, b"IDAT", &compressed);
     chunk(&mut out, b"IEND", &[]);
     Ok(out)
+}
+
+/// Encode as 8-bit grayscale PNG.
+pub fn encode(img: &GrayImage) -> Result<Vec<u8>> {
+    let (w, h) = (img.width, img.height);
+    if w == 0 || h == 0 {
+        bail!("cannot encode empty image");
+    }
+    let raw = filter_scanlines(&img.data, w, h, 1);
+    write_container(w, h, 0, &raw)
+}
+
+/// Encode as 8-bit RGB (color type 2) PNG.
+pub fn encode_rgb(img: &ColorImage) -> Result<Vec<u8>> {
+    let (w, h) = (img.width, img.height);
+    if w == 0 || h == 0 {
+        bail!("cannot encode empty image");
+    }
+    let raw = filter_scanlines(&img.data, w * 3, h, 3);
+    write_container(w, h, 2, &raw)
 }
 
 #[inline]
@@ -101,9 +134,51 @@ fn paeth(a: i16, b: i16, c: i16) -> u8 {
     }
 }
 
-/// Decode an 8-bit grayscale / RGB / RGBA / gray+alpha PNG (non-interlaced,
-/// non-paletted), converting color to luma.
+/// Unfiltered pixel data of a decoded PNG, channels interleaved.
+struct RawPng {
+    w: usize,
+    h: usize,
+    channels: usize,
+    pix: Vec<u8>,
+}
+
+/// Decode an 8-bit grayscale / RGB / RGBA / gray+alpha PNG
+/// (non-interlaced, non-paletted), converting color to luma.
 pub fn decode(bytes: &[u8]) -> Result<GrayImage> {
+    let raw = decode_raw(bytes)?;
+    let data: Vec<u8> = match raw.channels {
+        1 => raw.pix,
+        2 => raw.pix.chunks_exact(2).map(|p| p[0]).collect(),
+        n => raw
+            .pix
+            .chunks_exact(n)
+            .map(|p| {
+                super::luma_f32(
+                    p[0] as f32,
+                    p[1] as f32,
+                    p[2] as f32,
+                )
+            })
+            .collect(),
+    };
+    GrayImage::from_vec(raw.w, raw.h, data)
+}
+
+/// Decode a PNG keeping color: RGB[A] stays RGB (alpha dropped),
+/// grayscale[+alpha] is replicated into all three channels.
+pub fn decode_rgb(bytes: &[u8]) -> Result<ColorImage> {
+    let raw = decode_raw(bytes)?;
+    let mut data = Vec::with_capacity(raw.w * raw.h * 3);
+    for p in raw.pix.chunks_exact(raw.channels) {
+        match raw.channels {
+            1 | 2 => data.extend_from_slice(&[p[0], p[0], p[0]]),
+            _ => data.extend_from_slice(&p[0..3]),
+        }
+    }
+    ColorImage::from_vec(raw.w, raw.h, data)
+}
+
+fn decode_raw(bytes: &[u8]) -> Result<RawPng> {
     if bytes.len() < 8 || bytes[..8] != MAGIC {
         bail!("not a PNG file");
     }
@@ -208,22 +283,12 @@ pub fn decode(bytes: &[u8]) -> Result<GrayImage> {
             pix[y * stride + x] = rec;
         }
     }
-    // to grayscale
-    let data: Vec<u8> = match channels {
-        1 => pix,
-        2 => pix.chunks_exact(2).map(|p| p[0]).collect(),
-        3 | 4 => pix
-            .chunks_exact(channels)
-            .map(|p| {
-                (0.299 * p[0] as f32
-                    + 0.587 * p[1] as f32
-                    + 0.114 * p[2] as f32)
-                    .round() as u8
-            })
-            .collect(),
-        _ => unreachable!(),
-    };
-    GrayImage::from_vec(w, h, data)
+    Ok(RawPng {
+        w,
+        h,
+        channels,
+        pix,
+    })
 }
 
 #[cfg(test)]
@@ -273,5 +338,38 @@ mod tests {
         let enc = encode(&img).unwrap();
         assert!(enc.len() < 200, "constant image -> tiny PNG, got {}",
                 enc.len());
+    }
+
+    #[test]
+    fn roundtrip_rgb() {
+        let mut rng = Rng::new(21);
+        let data: Vec<u8> =
+            (0..33 * 14 * 3).map(|_| rng.next_u32() as u8).collect();
+        let img = ColorImage::from_vec(33, 14, data).unwrap();
+        let back = decode_rgb(&encode_rgb(&img).unwrap()).unwrap();
+        assert_eq!(img, back);
+    }
+
+    #[test]
+    fn rgb_png_decodes_to_luma_gray() {
+        let img = ColorImage::from_vec(1, 1, vec![0, 255, 0]).unwrap();
+        let g = decode(&encode_rgb(&img).unwrap()).unwrap();
+        assert_eq!(g.data[0], 150); // 0.587 * 255
+    }
+
+    #[test]
+    fn gray_png_decodes_to_replicated_rgb() {
+        let img = GrayImage::from_vec(2, 1, vec![9, 250]).unwrap();
+        let c = decode_rgb(&encode(&img).unwrap()).unwrap();
+        assert_eq!(c.data, vec![9, 9, 9, 250, 250, 250]);
+    }
+
+    #[test]
+    fn natural_rgb_filters_and_compresses() {
+        let img = synthetic::lena_like_rgb(64, 48, 3);
+        let enc = encode_rgb(&img).unwrap();
+        let back = decode_rgb(&enc).unwrap();
+        assert_eq!(img, back);
+        assert!(enc.len() < img.bytes());
     }
 }

@@ -212,6 +212,47 @@ pub fn cablecar_like(width: usize, height: usize, seed: u64) -> GrayImage {
     }
 }
 
+/// Colorize a grayscale scene: the gray image becomes the luma plane and
+/// two low-roughness plasma fields become smooth chroma. Natural images
+/// carry far less chroma bandwidth than luma — exactly the property that
+/// makes 4:2:0 subsampling nearly free, which the chroma ablation
+/// measures — so the chroma fields are deliberately smoother than the
+/// luma content.
+pub fn colorize(gray: &GrayImage, seed: u64) -> super::ColorImage {
+    let (w, h) = (gray.width, gray.height);
+    let cb_f = plasma(w, h, seed ^ 0xCB_CB, 0.45);
+    let cr_f = plasma(w, h, seed ^ 0xC6_C6, 0.45);
+    let chroma_plane = |f: &[f64]| GrayImage {
+        width: w,
+        height: h,
+        data: f
+            .iter()
+            .map(|&v| {
+                (128.0 + 96.0 * (v - 0.5)).clamp(0.0, 255.0).round()
+                    as u8
+            })
+            .collect(),
+    };
+    super::ycbcr::ycbcr_to_rgb(
+        gray,
+        &chroma_plane(&cb_f),
+        &chroma_plane(&cr_f),
+    )
+    .expect("same-size planes")
+}
+
+/// Color variant of [`lena_like`].
+pub fn lena_like_rgb(width: usize, height: usize, seed: u64)
+                     -> super::ColorImage {
+    colorize(&lena_like(width, height, seed), seed ^ 0xC0_10)
+}
+
+/// Color variant of [`cablecar_like`].
+pub fn cablecar_like_rgb(width: usize, height: usize, seed: u64)
+                         -> super::ColorImage {
+    colorize(&cablecar_like(width, height, seed), seed ^ 0xC0_11)
+}
+
 /// Named corpus used by benches/examples: the two paper stand-ins.
 pub fn by_name(name: &str, width: usize, height: usize, seed: u64)
                -> Option<GrayImage> {
@@ -221,6 +262,20 @@ pub fn by_name(name: &str, width: usize, height: usize, seed: u64)
         }
         "cablecar" | "cable-car" | "scene" => {
             Some(cablecar_like(width, height, seed))
+        }
+        _ => None,
+    }
+}
+
+/// Color counterpart of [`by_name`].
+pub fn color_by_name(name: &str, width: usize, height: usize, seed: u64)
+                     -> Option<super::ColorImage> {
+    match name {
+        "lena" | "lena-like" | "portrait" => {
+            Some(lena_like_rgb(width, height, seed))
+        }
+        "cablecar" | "cable-car" | "scene" => {
+            Some(cablecar_like_rgb(width, height, seed))
         }
         _ => None,
     }
@@ -285,6 +340,46 @@ mod tests {
         assert!(by_name("lena", 16, 16, 0).is_some());
         assert!(by_name("cable-car", 16, 16, 0).is_some());
         assert!(by_name("nonexistent", 16, 16, 0).is_none());
+        assert!(color_by_name("lena", 16, 16, 0).is_some());
+        assert!(color_by_name("nonexistent", 16, 16, 0).is_none());
+    }
+
+    #[test]
+    fn color_scenes_are_actually_colored() {
+        let img = lena_like_rgb(64, 64, 5);
+        assert_eq!((img.width, img.height), (64, 64));
+        // channels must differ somewhere (non-gray) ...
+        let differs = img
+            .data
+            .chunks_exact(3)
+            .any(|p| p[0] != p[1] || p[1] != p[2]);
+        assert!(differs, "colorized image is gray");
+        // ... but the luma plane stays close to the gray source (the
+        // chroma fields mostly perturb Cb/Cr; RGB clamping near black /
+        // white can shift individual luma samples)
+        let (y, _, _) =
+            crate::image::ycbcr::rgb_to_ycbcr(&img);
+        let gray = lena_like(64, 64, 5);
+        let mean_d = y
+            .data
+            .iter()
+            .zip(&gray.data)
+            .map(|(a, b)| (*a as i16 - *b as i16).unsigned_abs() as f64)
+            .sum::<f64>()
+            / y.pixels() as f64;
+        assert!(mean_d < 2.0, "mean luma drift {mean_d}");
+    }
+
+    #[test]
+    fn color_scenes_deterministic() {
+        assert_eq!(
+            cablecar_like_rgb(32, 24, 7),
+            cablecar_like_rgb(32, 24, 7)
+        );
+        assert_ne!(
+            cablecar_like_rgb(32, 24, 7),
+            cablecar_like_rgb(32, 24, 8)
+        );
     }
 
     #[test]

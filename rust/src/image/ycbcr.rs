@@ -1,0 +1,267 @@
+//! BT.601 full-range RGB ↔ YCbCr conversion and chroma subsampling —
+//! the JPEG color model the color pipeline runs on.
+//!
+//! Conversion uses the ITU-R BT.601 luma weights at full (0..255) range,
+//! exactly the JFIF convention, so the Y plane of an `R = G = B` image is
+//! the grayscale image itself (the color-parity tests rely on this).
+//! Chroma decimation is a box average whose window replicates the last
+//! row/column at odd edges; interpolation back up is replication, so both
+//! directions are well-defined on any image size.
+
+use anyhow::{bail, Result};
+
+use super::color::ColorImage;
+use super::GrayImage;
+
+/// Chroma subsampling mode (JPEG naming).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Subsampling {
+    /// Full-resolution chroma.
+    S444,
+    /// Chroma halved horizontally.
+    S422,
+    /// Chroma halved horizontally and vertically.
+    S420,
+}
+
+impl Subsampling {
+    pub const ALL: [Subsampling; 3] =
+        [Subsampling::S444, Subsampling::S422, Subsampling::S420];
+
+    pub fn parse(s: &str) -> Option<Subsampling> {
+        match s.trim() {
+            "444" | "4:4:4" => Some(Subsampling::S444),
+            "422" | "4:2:2" => Some(Subsampling::S422),
+            "420" | "4:2:0" => Some(Subsampling::S420),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Subsampling::S444 => "4:4:4",
+            Subsampling::S422 => "4:2:2",
+            Subsampling::S420 => "4:2:0",
+        }
+    }
+
+    /// File-name-safe tag ("444" / "422" / "420").
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Subsampling::S444 => "444",
+            Subsampling::S422 => "422",
+            Subsampling::S420 => "420",
+        }
+    }
+
+    /// (horizontal, vertical) chroma decimation factors.
+    pub fn factors(&self) -> (usize, usize) {
+        match self {
+            Subsampling::S444 => (1, 1),
+            Subsampling::S422 => (2, 1),
+            Subsampling::S420 => (2, 2),
+        }
+    }
+
+    /// Chroma plane dimensions for a `w x h` luma plane (ceiling
+    /// division: odd sizes keep their partial edge sample).
+    pub fn chroma_dims(&self, w: usize, h: usize) -> (usize, usize) {
+        let (fx, fy) = self.factors();
+        (w.div_ceil(fx), h.div_ceil(fy))
+    }
+}
+
+#[inline]
+fn clamp_u8(v: f32) -> u8 {
+    v.clamp(0.0, 255.0).round() as u8
+}
+
+/// Split an RGB image into full-resolution Y/Cb/Cr planes (BT.601
+/// full-range, the JFIF convention). For `R = G = B` inputs the Y plane
+/// equals the input channel and Cb = Cr = 128 exactly.
+pub fn rgb_to_ycbcr(
+    img: &ColorImage,
+) -> (GrayImage, GrayImage, GrayImage) {
+    let n = img.pixels();
+    let mut y = Vec::with_capacity(n);
+    let mut cb = Vec::with_capacity(n);
+    let mut cr = Vec::with_capacity(n);
+    for p in img.data.chunks_exact(3) {
+        let (r, g, b) = (p[0] as f32, p[1] as f32, p[2] as f32);
+        y.push(clamp_u8(0.299 * r + 0.587 * g + 0.114 * b));
+        cb.push(clamp_u8(
+            128.0 - 0.168_736 * r - 0.331_264 * g + 0.5 * b,
+        ));
+        cr.push(clamp_u8(
+            128.0 + 0.5 * r - 0.418_688 * g - 0.081_312 * b,
+        ));
+    }
+    let plane = |data| GrayImage {
+        width: img.width,
+        height: img.height,
+        data,
+    };
+    (plane(y), plane(cb), plane(cr))
+}
+
+/// Merge full-resolution Y/Cb/Cr planes back into an RGB image.
+pub fn ycbcr_to_rgb(
+    y: &GrayImage,
+    cb: &GrayImage,
+    cr: &GrayImage,
+) -> Result<ColorImage> {
+    if (y.width, y.height) != (cb.width, cb.height)
+        || (y.width, y.height) != (cr.width, cr.height)
+    {
+        bail!(
+            "YCbCr plane sizes differ: Y {}x{}, Cb {}x{}, Cr {}x{}",
+            y.width,
+            y.height,
+            cb.width,
+            cb.height,
+            cr.width,
+            cr.height
+        );
+    }
+    let mut data = Vec::with_capacity(y.pixels() * 3);
+    for i in 0..y.pixels() {
+        let yy = y.data[i] as f32;
+        let u = cb.data[i] as f32 - 128.0;
+        let v = cr.data[i] as f32 - 128.0;
+        data.push(clamp_u8(yy + 1.402 * v));
+        data.push(clamp_u8(yy - 0.344_136 * u - 0.714_136 * v));
+        data.push(clamp_u8(yy + 1.772 * u));
+    }
+    ColorImage::from_vec(y.width, y.height, data)
+}
+
+/// Box-average decimation by the mode's factors. Windows that overhang an
+/// odd edge replicate the last row/column, so every output pixel averages
+/// a full `fx x fy` window and constant planes stay exactly constant.
+pub fn downsample(plane: &GrayImage, mode: Subsampling) -> GrayImage {
+    let (fx, fy) = mode.factors();
+    if fx == 1 && fy == 1 {
+        return plane.clone();
+    }
+    let (cw, ch) = mode.chroma_dims(plane.width, plane.height);
+    let window = (fx * fy) as u32;
+    let mut out = GrayImage::new(cw, ch);
+    for oy in 0..ch {
+        for ox in 0..cw {
+            let mut sum = 0u32;
+            for dy in 0..fy {
+                let sy = (oy * fy + dy).min(plane.height - 1);
+                for dx in 0..fx {
+                    let sx = (ox * fx + dx).min(plane.width - 1);
+                    sum += plane.get(sx, sy) as u32;
+                }
+            }
+            out.set(ox, oy, ((sum + window / 2) / window) as u8);
+        }
+    }
+    out
+}
+
+/// Replicate a decimated chroma plane back up to `w x h` luma resolution
+/// (nearest-neighbor; edge samples replicate, mirroring [`downsample`]).
+pub fn upsample(
+    plane: &GrayImage,
+    mode: Subsampling,
+    w: usize,
+    h: usize,
+) -> GrayImage {
+    let (fx, fy) = mode.factors();
+    let mut out = GrayImage::new(w, h);
+    for y in 0..h {
+        let sy = (y / fy).min(plane.height - 1);
+        for x in 0..w {
+            let sx = (x / fx).min(plane.width - 1);
+            out.set(x, y, plane.get(sx, sy));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn subsampling_parse_and_dims() {
+        assert_eq!(Subsampling::parse("4:2:0"), Some(Subsampling::S420));
+        assert_eq!(Subsampling::parse("422"), Some(Subsampling::S422));
+        assert_eq!(Subsampling::parse("x"), None);
+        assert_eq!(Subsampling::S420.chroma_dims(33, 21), (17, 11));
+        assert_eq!(Subsampling::S422.chroma_dims(33, 21), (17, 21));
+        assert_eq!(Subsampling::S444.chroma_dims(33, 21), (33, 21));
+    }
+
+    #[test]
+    fn gray_input_maps_to_neutral_chroma() {
+        let g = GrayImage::from_vec(2, 1, vec![0, 201]).unwrap();
+        let (y, cb, cr) = rgb_to_ycbcr(&ColorImage::from_gray(&g));
+        assert_eq!(y.data, g.data);
+        assert!(cb.data.iter().all(|&v| v == 128), "{:?}", cb.data);
+        assert!(cr.data.iter().all(|&v| v == 128), "{:?}", cr.data);
+    }
+
+    #[test]
+    fn primary_colors_roundtrip_closely() {
+        let img = ColorImage::from_vec(
+            4,
+            1,
+            vec![255, 0, 0, 0, 255, 0, 0, 0, 255, 17, 130, 244],
+        )
+        .unwrap();
+        let (y, cb, cr) = rgb_to_ycbcr(&img);
+        let back = ycbcr_to_rgb(&y, &cb, &cr).unwrap();
+        for (a, b) in img.data.iter().zip(&back.data) {
+            assert!(
+                (*a as i16 - *b as i16).abs() <= 2,
+                "channel {a} -> {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn plane_size_mismatch_rejected() {
+        let a = GrayImage::new(4, 4);
+        let b = GrayImage::new(2, 2);
+        assert!(ycbcr_to_rgb(&a, &b, &a).is_err());
+    }
+
+    #[test]
+    fn downsample_constant_is_exact() {
+        let p = GrayImage::from_vec(5, 3, vec![77; 15]).unwrap();
+        for mode in Subsampling::ALL {
+            let d = downsample(&p, mode);
+            let (cw, ch) = mode.chroma_dims(5, 3);
+            assert_eq!((d.width, d.height), (cw, ch));
+            assert!(d.data.iter().all(|&v| v == 77));
+            let u = upsample(&d, mode, 5, 3);
+            assert_eq!(u, p);
+        }
+    }
+
+    #[test]
+    fn downsample_averages_box() {
+        let p =
+            GrayImage::from_vec(2, 2, vec![10, 20, 30, 40]).unwrap();
+        let d = downsample(&p, Subsampling::S420);
+        assert_eq!((d.width, d.height), (1, 1));
+        assert_eq!(d.data[0], 25);
+        let d = downsample(&p, Subsampling::S422);
+        assert_eq!((d.width, d.height), (1, 2));
+        assert_eq!(d.data, vec![15, 35]);
+    }
+
+    #[test]
+    fn odd_edge_replicates() {
+        // 3 wide: last 4:2:0 window covers column 2 twice
+        let p = GrayImage::from_vec(3, 1, vec![0, 100, 50]).unwrap();
+        let d = downsample(&p, Subsampling::S422);
+        assert_eq!(d.data.len(), 2);
+        assert_eq!(d.data[0], 50); // (0 + 100 + 1) / 2
+        assert_eq!(d.data[1], 50); // (50 + 50 + 1) / 2
+    }
+}

@@ -26,25 +26,45 @@
 //! comparison isolates scheduling from numerics. `Lane::Auto` routes to
 //! `Gpu` when an artifact covers the padded shape, else `Cpu`.
 //!
+//! ## The color workload
+//!
+//! | path    | implementation                                   | role |
+//! |---------|--------------------------------------------------|------|
+//! | color   | [`dct::color::ColorPipeline`] over [`image::ycbcr`] planes | YCbCr 4:4:4 / 4:2:2 / 4:2:0 compression on either CPU lane |
+//!
+//! The paper evaluates grayscale only; the color path extends the same
+//! Cordic-Loeffler pipeline to RGB by splitting into BT.601 YCbCr planes
+//! (luma + optionally subsampled chroma), running the *unchanged*
+//! grayscale pipeline per plane with the Annex K luma/chroma quantization
+//! tables, and entropy-coding the three planes into one `CDC3` container
+//! ([`codec::color`]). On an `R = G = B` input at 4:4:4 the luma path is
+//! bit-identical to the grayscale pipeline (`tests/color_parity.rs`);
+//! the planar decomposition is the batch shape a future GPU lane can
+//! consume uniformly (1 or 3 planes).
+//!
 //! ## Layers
 //!
 //! * [`util`] — substrates the offline environment forces us to own: JSON,
 //!   CLI parsing, PRNG, thread pool, bit I/O, timers, a property-test
 //!   harness.
-//! * [`image`] — grayscale image type, PGM/PPM/BMP/PNG codecs, synthetic
-//!   test-image generators (the Lena / Cable-car stand-ins), resize,
-//!   histogram equalization.
+//! * [`image`] — grayscale + interleaved-RGB image types, PGM/PPM/BMP/PNG
+//!   codecs (gray and color), BT.601 YCbCr conversion with chroma
+//!   subsampling, synthetic test-image generators (the Lena / Cable-car
+//!   stand-ins, gray and colorized), resize, histogram equalization.
 //! * [`dct`] — the transform substrate: naive / matrix / Loeffler /
-//!   Cordic-based-Loeffler 8x8 DCTs, JPEG quantization, block management,
-//!   and the serial + block-parallel CPU pipelines.
+//!   Cordic-based-Loeffler 8x8 DCTs, JPEG quantization (luma + chroma
+//!   tables), block management, the serial + block-parallel CPU pipelines
+//!   and the per-plane color pipeline.
 //! * [`codec`] — a complete entropy codec (zigzag, DC-DPCM + AC-RLE,
 //!   canonical Huffman, bitstream container) turning quantized
-//!   coefficients into a real compressed file format.
-//! * [`metrics`] — MSE / PSNR / SSIM and latency statistics.
+//!   coefficients into a real compressed file format; `CDC1` grayscale
+//!   and `CDC3` color containers.
+//! * [`metrics`] — MSE / PSNR / SSIM, per-channel + luma-weighted color
+//!   metrics, and latency statistics.
 //! * [`runtime`] — the PJRT side: artifact manifest, executable cache,
 //!   literal marshaling.
 //! * [`coordinator`] — router, per-lane batcher, worker pool, service
-//!   facade over all three lanes.
+//!   facade over all three lanes (gray and color compress requests).
 //! * [`bench`] — the measurement harness and the paper-table formatters
 //!   used by `cargo bench` targets (now with serial/parallel/GPU columns).
 

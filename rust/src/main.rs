@@ -2,8 +2,9 @@
 //!
 //! ```text
 //! cordic-dct compress   --input img.png --output out.cdc [--variant cordic]
+//!                       [--color --chroma 420]
 //! cordic-dct decompress --input out.cdc --output back.png
-//! cordic-dct serve      --requests 64 --scene lena --lane auto
+//! cordic-dct serve      --requests 64 --scene lena --lane auto [--color]
 //! cordic-dct psnr       --a ref.png --b test.png
 //! cordic-dct histeq     --input img.pgm --output eq.pgm [--lane gpu]
 //! cordic-dct synth      --scene cablecar --width 512 --height 512 --output x.png
@@ -16,11 +17,14 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use cordic_dct::codec::{self, decoder, encoder};
+use cordic_dct::codec::{self, color as color_codec, decoder, encoder};
 use cordic_dct::coordinator::{Backpressure, Lane, Service, ServiceConfig};
+use cordic_dct::dct::color::ColorPipeline;
 use cordic_dct::dct::pipeline::CpuPipeline;
 use cordic_dct::dct::Variant;
-use cordic_dct::image::{synthetic, GrayImage};
+use cordic_dct::image::ycbcr::Subsampling;
+use cordic_dct::image::{synthetic, ColorImage, GrayImage};
+use cordic_dct::metrics::color::psnr_color;
 use cordic_dct::runtime::Runtime;
 use cordic_dct::util::cli::Command;
 use cordic_dct::util::logging;
@@ -67,8 +71,8 @@ fn print_usage() {
         "cordic-dct — DCT image compression on CPU and (PJRT) GPU lanes\n\
          \n\
          SUBCOMMANDS:\n\
-         \x20 compress     compress an image to .cdc\n\
-         \x20 decompress   decode a .cdc back to an image\n\
+         \x20 compress     compress an image to .cdc (--color for RGB/YCbCr)\n\
+         \x20 decompress   decode a .cdc (gray or color) back to an image\n\
          \x20 serve        run the coordinator on a synthetic workload\n\
          \x20 psnr         PSNR between two images\n\
          \x20 histeq       histogram equalization\n\
@@ -91,6 +95,12 @@ fn parse_lane(s: &str) -> Result<Lane> {
     })
 }
 
+fn parse_chroma(s: &str) -> Result<Subsampling> {
+    Subsampling::parse(s).with_context(|| {
+        format!("unknown chroma mode '{s}' (444 | 422 | 420)")
+    })
+}
+
 fn cmd_compress(args: &[String]) -> Result<()> {
     let m = Command::new("compress", "compress an image to .cdc")
         .opt_req("input", "input image (.pgm/.ppm/.bmp/.png)")
@@ -98,11 +108,16 @@ fn cmd_compress(args: &[String]) -> Result<()> {
         .opt("variant", "cordic", "transform: dct|loeffler|cordic|naive")
         .opt("quality", "50", "IJG quality 1..100")
         .opt("recon", "", "also write the reconstruction here")
+        .flag("color", "keep RGB and write a CDC3 color container")
+        .opt("chroma", "420", "chroma subsampling for --color: 444|422|420")
         .flag("verbose", "print timings")
         .parse(args)?;
-    let img = GrayImage::load(m.get("input"))?;
     let variant = parse_variant(m.get("variant"))?;
     let quality = m.get_usize("quality")? as u8;
+    if m.flag("color") {
+        return compress_color_file(&m, variant, quality);
+    }
+    let img = GrayImage::load(m.get("input"))?;
     let pipe = CpuPipeline::new(variant, quality);
     let t0 = Instant::now();
     let out = pipe.compress(&img);
@@ -140,12 +155,82 @@ fn cmd_compress(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn compress_color_file(
+    m: &cordic_dct::util::cli::Matches,
+    variant: Variant,
+    quality: u8,
+) -> Result<()> {
+    let img = ColorImage::load(m.get("input"))?;
+    let chroma = parse_chroma(m.get("chroma"))?;
+    let pipe = ColorPipeline::new(variant, quality, chroma);
+    let t0 = Instant::now();
+    let out = pipe.compress(&img);
+    let header = color_codec::ColorHeader {
+        width: img.width as u32,
+        height: img.height as u32,
+        quality,
+        variant: codec::variant_tag(variant),
+        subsampling: color_codec::subsampling_tag(chroma),
+    };
+    let bytes = color_codec::encode(&header, &out.planes)?;
+    let elapsed = t0.elapsed().as_secs_f64() * 1e3;
+    std::fs::write(m.get("output"), &bytes)
+        .with_context(|| format!("writing {}", m.get("output")))?;
+    let p = psnr_color(&img, &out.recon);
+    println!(
+        "{} -> {} ({} {} -> {} bytes, ratio {:.1}x, PSNR R {:.2} \
+         G {:.2} B {:.2} Y {:.2} weighted {:.2} dB{})",
+        m.get("input"),
+        m.get("output"),
+        chroma.as_str(),
+        img.bytes(),
+        bytes.len(),
+        metrics::compression_ratio(img.bytes(), bytes.len()),
+        p.r,
+        p.g,
+        p.b,
+        p.y,
+        p.weighted,
+        if m.flag("verbose") {
+            format!(", {elapsed:.1} ms")
+        } else {
+            String::new()
+        }
+    );
+    let recon_path = m.get("recon");
+    if !recon_path.is_empty() {
+        out.recon.save(recon_path)?;
+    }
+    Ok(())
+}
+
 fn cmd_decompress(args: &[String]) -> Result<()> {
     let m = Command::new("decompress", "decode a .cdc to an image")
-        .opt_req("input", "input .cdc")
-        .opt_req("output", "output image (.pgm/.bmp/.png)")
+        .opt_req("input", "input .cdc (gray CDC1 or color CDC3)")
+        .opt_req("output", "output image (.pgm/.ppm/.bmp/.png)")
         .parse(args)?;
     let bytes = std::fs::read(m.get("input"))?;
+    if color_codec::is_color_container(&bytes) {
+        let dec = color_codec::decode(&bytes)?;
+        let variant = codec::tag_variant(dec.header.variant)?;
+        let chroma =
+            color_codec::tag_subsampling(dec.header.subsampling)?;
+        let pipe =
+            ColorPipeline::new(variant, dec.header.quality, chroma);
+        let img = pipe.decode_coefficients(&dec.planes);
+        img.save(m.get("output"))?;
+        println!(
+            "{} -> {} ({}x{} RGB {}, q{}, {})",
+            m.get("input"),
+            m.get("output"),
+            img.width,
+            img.height,
+            chroma.as_str(),
+            dec.header.quality,
+            variant.as_str()
+        );
+        return Ok(());
+    }
     let dec = decoder::decode(&bytes)?;
     let variant = codec::tag_variant(dec.header.variant)?;
     let pipe = CpuPipeline::new(variant, dec.header.quality);
@@ -176,6 +261,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("size", "512", "square image size")
         .opt("variant", "cordic", "transform variant")
         .opt("lane", "auto", "cpu|cpu-parallel|gpu|auto")
+        .flag("color", "submit color (YCbCr) jobs instead of grayscale")
+        .opt("chroma", "420", "chroma subsampling for --color: 444|422|420")
         .opt("workers", "0", "worker threads (0 = machine default)")
         .opt("par-workers", "0",
              "threads per cpu-parallel job (0 = machine default)")
@@ -187,6 +274,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let size = m.get_usize("size")?;
     let lane = parse_lane(m.get("lane"))?;
     let variant = parse_variant(m.get("variant"))?;
+    let color = m.flag("color");
+    let chroma = parse_chroma(m.get("chroma"))?;
     let mut cfg = ServiceConfig {
         queue_capacity: m.get_usize("queue")?,
         backpressure: Backpressure::Block,
@@ -203,18 +292,35 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         (!adir.is_empty()).then(|| PathBuf::from(adir));
     let svc = Service::start(cfg)?;
     println!(
-        "serving {n} x {size}x{size} '{}' requests on lane {:?} \
+        "serving {n} x {size}x{size} '{}' {} requests on lane {:?} \
          (gpu lane: {})",
         m.get("scene"),
+        if color {
+            format!("color/{}", chroma.as_str())
+        } else {
+            "gray".to_string()
+        },
         lane,
         svc.has_gpu_lane()
     );
     let t0 = Instant::now();
     let handles: Vec<_> = (0..n)
         .map(|i| {
-            let img = synthetic::by_name(m.get("scene"), size, size, i as u64)
+            if color {
+                let img = synthetic::color_by_name(
+                    m.get("scene"),
+                    size,
+                    size,
+                    i as u64,
+                )
                 .context("unknown scene")?;
-            svc.compress(img, variant, lane)
+                svc.compress_color(img, variant, lane, chroma)
+            } else {
+                let img =
+                    synthetic::by_name(m.get("scene"), size, size, i as u64)
+                        .context("unknown scene")?;
+                svc.compress(img, variant, lane)
+            }
         })
         .collect::<Result<_>>()?;
     let mut lanes = std::collections::BTreeMap::new();
@@ -299,15 +405,25 @@ fn cmd_synth(args: &[String]) -> Result<()> {
         .opt("width", "512", "width")
         .opt("height", "512", "height")
         .opt("seed", "3287", "random seed")
+        .flag("color", "generate an RGB image (.ppm/.bmp/.png output)")
         .opt_req("output", "output image path")
         .parse(args)?;
-    let img = synthetic::by_name(
-        m.get("scene"),
-        m.get_usize("width")?,
-        m.get_usize("height")?,
-        m.get_u64("seed")?,
-    )
-    .context("unknown scene (lena|cablecar)")?;
+    let (w, h) = (m.get_usize("width")?, m.get_usize("height")?);
+    let seed = m.get_u64("seed")?;
+    if m.flag("color") {
+        let img = synthetic::color_by_name(m.get("scene"), w, h, seed)
+            .context("unknown scene (lena|cablecar)")?;
+        img.save(m.get("output"))?;
+        println!(
+            "wrote {} ({}x{} RGB)",
+            m.get("output"),
+            img.width,
+            img.height
+        );
+        return Ok(());
+    }
+    let img = synthetic::by_name(m.get("scene"), w, h, seed)
+        .context("unknown scene (lena|cablecar)")?;
     img.save(m.get("output"))?;
     println!(
         "wrote {} ({}x{}, mean {:.1}, sd {:.1})",

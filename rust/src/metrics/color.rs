@@ -1,0 +1,134 @@
+//! Color quality metrics: per-channel RGB PSNR/SSIM plus the
+//! luma-weighted color PSNR the paper-style color tables report.
+//!
+//! The weighted figure uses the conventional 6:1:1 Y/Cb/Cr MSE weighting
+//! (luma dominates perceived quality, which is also why 4:2:0 works), so
+//! chroma subsampling shows up honestly but does not swamp the score.
+
+use crate::image::color::ColorImage;
+use crate::image::ycbcr::rgb_to_ycbcr;
+
+use super::{mse, psnr_from_mse, ssim};
+
+/// PSNR breakdown of a color image pair (all dB).
+#[derive(Clone, Copy, Debug)]
+pub struct ColorPsnr {
+    pub r: f64,
+    pub g: f64,
+    pub b: f64,
+    /// Full-resolution luma-plane PSNR.
+    pub y: f64,
+    /// PSNR of the 6:1:1-weighted Y/Cb/Cr MSE.
+    pub weighted: f64,
+}
+
+/// SSIM breakdown of a color image pair.
+#[derive(Clone, Copy, Debug)]
+pub struct ColorSsim {
+    pub r: f64,
+    pub g: f64,
+    pub b: f64,
+    /// Full-resolution luma-plane SSIM.
+    pub y: f64,
+}
+
+/// Per-channel and luma-weighted PSNR between two same-sized RGB images.
+pub fn psnr_color(a: &ColorImage, b: &ColorImage) -> ColorPsnr {
+    assert_eq!(
+        (a.width, a.height),
+        (b.width, b.height),
+        "color PSNR over mismatched sizes"
+    );
+    let channel_mse = |c: usize| mse(&a.channel(c), &b.channel(c));
+    let (ya, cba, cra) = rgb_to_ycbcr(a);
+    let (yb, cbb, crb) = rgb_to_ycbcr(b);
+    let my = mse(&ya, &yb);
+    let weighted = (6.0 * my + mse(&cba, &cbb) + mse(&cra, &crb)) / 8.0;
+    ColorPsnr {
+        r: psnr_from_mse(channel_mse(0), 255.0),
+        g: psnr_from_mse(channel_mse(1), 255.0),
+        b: psnr_from_mse(channel_mse(2), 255.0),
+        y: psnr_from_mse(my, 255.0),
+        weighted: psnr_from_mse(weighted, 255.0),
+    }
+}
+
+/// Per-channel and luma SSIM between two same-sized RGB images.
+pub fn ssim_color(a: &ColorImage, b: &ColorImage) -> ColorSsim {
+    assert_eq!((a.width, a.height), (b.width, b.height));
+    let (ya, _, _) = rgb_to_ycbcr(a);
+    let (yb, _, _) = rgb_to_ycbcr(b);
+    ColorSsim {
+        r: ssim(&a.channel(0), &b.channel(0)),
+        g: ssim(&a.channel(1), &b.channel(1)),
+        b: ssim(&a.channel(2), &b.channel(2)),
+        y: ssim(&ya, &yb),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synthetic;
+    use crate::metrics::PSNR_CAP_DB;
+
+    #[test]
+    fn identical_images_cap() {
+        let img = synthetic::lena_like_rgb(32, 32, 1);
+        let p = psnr_color(&img, &img);
+        assert_eq!(p.r, PSNR_CAP_DB);
+        assert_eq!(p.g, PSNR_CAP_DB);
+        assert_eq!(p.b, PSNR_CAP_DB);
+        assert_eq!(p.y, PSNR_CAP_DB);
+        assert_eq!(p.weighted, PSNR_CAP_DB);
+        let s = ssim_color(&img, &img);
+        assert!((s.y - 1.0).abs() < 1e-9);
+        assert!((s.r - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_channel_error_isolates() {
+        let a = synthetic::lena_like_rgb(32, 32, 2);
+        let mut b = a.clone();
+        // perturb only the red channel
+        for p in b.data.chunks_exact_mut(3) {
+            p[0] = p[0].wrapping_add(16);
+        }
+        let p = psnr_color(&a, &b);
+        assert!(p.r < 30.0, "r {:.1}", p.r);
+        assert_eq!(p.g, PSNR_CAP_DB);
+        assert_eq!(p.b, PSNR_CAP_DB);
+        // luma picks up 0.299 of the red error
+        assert!(p.y < PSNR_CAP_DB);
+        assert!(p.y > p.r);
+    }
+
+    #[test]
+    fn chroma_error_discounted_by_weighting() {
+        let a = synthetic::lena_like_rgb(48, 48, 3);
+        // equal-magnitude perturbations: one luma-directed, one
+        // chroma-directed (blue-yellow) — weighting must punish the luma
+        // one harder
+        let mut luma_err = a.clone();
+        for p in luma_err.data.chunks_exact_mut(3) {
+            for c in p.iter_mut() {
+                *c = c.saturating_add(10);
+            }
+        }
+        let mut chroma_err = a.clone();
+        for p in chroma_err.data.chunks_exact_mut(3) {
+            p[2] = p[2].saturating_add(30);
+        }
+        let pl = psnr_color(&a, &luma_err);
+        let pc = psnr_color(&a, &chroma_err);
+        assert!(pc.y > pl.y, "{} vs {}", pc.y, pl.y);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatched")]
+    fn size_mismatch_panics() {
+        let a = ColorImage::new(8, 8);
+        let b = ColorImage::new(8, 9);
+        psnr_color(&a, &b);
+    }
+}

@@ -1,6 +1,8 @@
 //! Quality and performance metrics: MSE / PSNR (paper §4.1 eq. 23-24),
-//! SSIM, compression ratio, and latency accumulators for the coordinator.
+//! SSIM, compression ratio, per-channel color metrics ([`color`]), and
+//! latency accumulators for the coordinator.
 
+pub mod color;
 pub mod stats;
 
 use crate::image::GrayImage;
@@ -34,11 +36,15 @@ pub fn psnr(a: &GrayImage, b: &GrayImage) -> f64 {
 }
 
 pub fn psnr_with_max(a: &GrayImage, b: &GrayImage, max_value: f64) -> f64 {
-    let m = mse(a, b);
-    if m <= 0.0 {
+    psnr_from_mse(mse(a, b), max_value)
+}
+
+/// PSNR in dB from a precomputed MSE (capped like [`psnr`]).
+pub fn psnr_from_mse(mse: f64, max_value: f64) -> f64 {
+    if mse <= 0.0 {
         return PSNR_CAP_DB;
     }
-    (20.0 * max_value.log10() - 10.0 * m.log10()).min(PSNR_CAP_DB)
+    (20.0 * max_value.log10() - 10.0 * mse.log10()).min(PSNR_CAP_DB)
 }
 
 /// Mean SSIM over 8x8 windows (stride 4), standard constants.

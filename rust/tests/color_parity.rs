@@ -1,0 +1,167 @@
+//! Color ↔ grayscale conformance: the color pipeline is a per-plane
+//! orchestration of the grayscale pipeline, so on an `R = G = B` image at
+//! 4:4:4 its luma path must reproduce the grayscale pipeline's output
+//! bit-identically — for both CPU lanes, every variant, several
+//! qualities and odd shapes. Plus container round-trips and the
+//! luma-invariance guarantee under chroma subsampling.
+
+use cordic_dct::codec::{color as color_codec, variant_tag};
+use cordic_dct::dct::color::ColorPipeline;
+use cordic_dct::dct::parallel::ParallelCpuPipeline;
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::color::ColorImage;
+use cordic_dct::image::synthetic;
+use cordic_dct::image::ycbcr::Subsampling;
+use cordic_dct::metrics;
+
+const VARIANTS: [Variant; 4] = [
+    Variant::Dct,
+    Variant::Loeffler,
+    Variant::Cordic,
+    Variant::Naive,
+];
+
+#[test]
+fn gray_input_444_matches_grayscale_pipeline_serial() {
+    for variant in VARIANTS {
+        for quality in [10u8, 50, 90] {
+            let gray = synthetic::lena_like(40, 24, 3);
+            let rgb = ColorImage::from_gray(&gray);
+            let gray_out =
+                CpuPipeline::new(variant, quality).compress(&gray);
+            let color_out = ColorPipeline::new(
+                variant,
+                quality,
+                Subsampling::S444,
+            )
+            .compress(&rgb);
+            // luma plane: bit-identical coefficients + reconstruction
+            assert_eq!(
+                color_out.planes[0].qcoef, gray_out.qcoef,
+                "{} q{quality}",
+                variant.as_str()
+            );
+            assert_eq!(color_out.recon_y, gray_out.recon);
+            // neutral chroma survives the chroma pipeline exactly, so
+            // the RGB reconstruction replicates the gray one
+            assert_eq!(
+                color_out.recon,
+                ColorImage::from_gray(&gray_out.recon)
+            );
+        }
+    }
+}
+
+#[test]
+fn gray_input_444_matches_grayscale_pipeline_parallel() {
+    for variant in [Variant::Dct, Variant::Cordic] {
+        for quality in [10u8, 50, 90] {
+            // odd size exercises pad + crop through both lanes
+            let gray = synthetic::cablecar_like(30, 21, 5);
+            let rgb = ColorImage::from_gray(&gray);
+            let gray_out =
+                ParallelCpuPipeline::with_workers(variant, quality, 3)
+                    .compress(&gray);
+            let color_out = ColorPipeline::parallel(
+                variant,
+                quality,
+                Subsampling::S444,
+                3,
+            )
+            .compress(&rgb);
+            assert_eq!(
+                color_out.planes[0].qcoef, gray_out.qcoef,
+                "{} q{quality}",
+                variant.as_str()
+            );
+            assert_eq!(color_out.recon_y, gray_out.recon);
+            assert_eq!(
+                color_out.recon,
+                ColorImage::from_gray(&gray_out.recon)
+            );
+        }
+    }
+}
+
+#[test]
+fn luma_plane_invariant_under_chroma_subsampling() {
+    // the Y plane never touches the chroma path: all three modes must
+    // produce the same luma reconstruction on a real color image
+    let rgb = synthetic::lena_like_rgb(48, 33, 9);
+    let base =
+        ColorPipeline::new(Variant::Cordic, 50, Subsampling::S444)
+            .compress(&rgb);
+    for mode in [Subsampling::S422, Subsampling::S420] {
+        let out = ColorPipeline::new(Variant::Cordic, 50, mode)
+            .compress(&rgb);
+        assert_eq!(out.recon_y, base.recon_y, "{}", mode.as_str());
+        assert_eq!(out.planes[0], base.planes[0]);
+    }
+}
+
+#[test]
+fn luma_psnr_within_tenth_db_of_grayscale_at_420() {
+    // the acceptance bar: 4:2:0 color luma PSNR vs the grayscale
+    // pipeline at the same quality (bit-identical planes => delta 0)
+    let rgb = synthetic::cablecar_like_rgb(64, 48, 11);
+    let (y_plane, _, _) =
+        cordic_dct::image::ycbcr::rgb_to_ycbcr(&rgb);
+    for quality in [10u8, 50, 90] {
+        let gray_recon = CpuPipeline::new(Variant::Cordic, quality)
+            .compress(&y_plane)
+            .recon;
+        let color_out = ColorPipeline::new(
+            Variant::Cordic,
+            quality,
+            Subsampling::S420,
+        )
+        .compress(&rgb);
+        let p_gray = metrics::psnr(&y_plane, &gray_recon);
+        let p_color = metrics::psnr(&y_plane, &color_out.recon_y);
+        assert!(
+            (p_gray - p_color).abs() < 0.1,
+            "q{quality}: gray {p_gray:.4} vs color {p_color:.4}"
+        );
+    }
+}
+
+#[test]
+fn color_container_roundtrips_through_codec() {
+    for mode in Subsampling::ALL {
+        let rgb = synthetic::lena_like_rgb(30, 21, 4);
+        let pipe = ColorPipeline::new(Variant::Cordic, 75, mode);
+        let out = pipe.compress(&rgb);
+        let header = color_codec::ColorHeader {
+            width: rgb.width as u32,
+            height: rgb.height as u32,
+            quality: 75,
+            variant: variant_tag(Variant::Cordic),
+            subsampling: color_codec::subsampling_tag(mode),
+        };
+        let bytes = color_codec::encode(&header, &out.planes).unwrap();
+        let dec = color_codec::decode(&bytes).unwrap();
+        assert_eq!(dec.planes, out.planes, "{}", mode.as_str());
+        let recon = pipe.decode_coefficients(&dec.planes);
+        assert_eq!(recon, out.recon);
+    }
+}
+
+#[test]
+fn worker_count_invariance_for_color() {
+    let rgb = synthetic::lena_like_rgb(40, 40, 8);
+    let base =
+        ColorPipeline::parallel(Variant::Dct, 50, Subsampling::S420, 1)
+            .compress(&rgb);
+    for workers in [2usize, 4, 7] {
+        let out = ColorPipeline::parallel(
+            Variant::Dct,
+            50,
+            Subsampling::S420,
+            workers,
+        )
+        .compress(&rgb);
+        assert_eq!(out.recon, base.recon, "workers={workers}");
+        assert_eq!(out.planes, base.planes);
+    }
+}

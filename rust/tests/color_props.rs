@@ -1,0 +1,228 @@
+//! Property tests for the color substrate: RGB↔YCbCr round-trip error
+//! bounds and chroma subsample/upsample invariants, on the crate's
+//! seeded generate-and-shrink harness (`util::proptest`).
+
+use cordic_dct::image::color::ColorImage;
+use cordic_dct::image::ycbcr::{
+    downsample, rgb_to_ycbcr, upsample, ycbcr_to_rgb, Subsampling,
+};
+use cordic_dct::image::GrayImage;
+use cordic_dct::util::prng::Rng;
+use cordic_dct::util::proptest::{check, gen};
+
+/// Build an RGB image of the given dims by cycling generated samples
+/// (deterministic filler when the generated vector is empty).
+fn rgb_from(w: usize, h: usize, samples: &[i32]) -> ColorImage {
+    let n = w * h * 3;
+    let data: Vec<u8> = (0..n)
+        .map(|i| {
+            if samples.is_empty() {
+                (i * 37 % 256) as u8
+            } else {
+                samples[i % samples.len()] as u8
+            }
+        })
+        .collect();
+    ColorImage::from_vec(w, h, data).expect("sized to w*h*3")
+}
+
+/// Deterministic gray plane keyed on its dimensions.
+fn plane_from(w: usize, h: usize) -> GrayImage {
+    let mut rng = Rng::new((w * 4099 + h) as u64);
+    let data: Vec<u8> =
+        (0..w * h).map(|_| rng.next_u32() as u8).collect();
+    GrayImage::from_vec(w, h, data).expect("sized to w*h")
+}
+
+#[test]
+fn rgb_ycbcr_roundtrip_error_at_most_2() {
+    check(
+        60,
+        |r| {
+            let w = r.below(24) as usize + 1;
+            let h = r.below(24) as usize + 1;
+            ((w, h), gen::vec_i32(r, 96, 0, 255))
+        },
+        |input| {
+            let ((w, h), samples) = input;
+            let img = rgb_from(*w, *h, samples);
+            let (y, cb, cr) = rgb_to_ycbcr(&img);
+            let back =
+                ycbcr_to_rgb(&y, &cb, &cr).map_err(|e| e.to_string())?;
+            for (i, (a, b)) in
+                img.data.iter().zip(&back.data).enumerate()
+            {
+                let d = (*a as i16 - *b as i16).abs();
+                if d > 2 {
+                    return Err(format!(
+                        "byte {i}: {a} -> {b} (err {d} > 2)"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn saturated_corners_roundtrip_error_at_most_2() {
+    // the clamp-heavy extremes, exhaustively
+    let corners: Vec<u8> = vec![0, 1, 127, 128, 254, 255];
+    let mut data = Vec::new();
+    for &r in &corners {
+        for &g in &corners {
+            for &b in &corners {
+                data.extend_from_slice(&[r, g, b]);
+            }
+        }
+    }
+    let n = data.len() / 3;
+    let img = ColorImage::from_vec(n, 1, data).unwrap();
+    let (y, cb, cr) = rgb_to_ycbcr(&img);
+    let back = ycbcr_to_rgb(&y, &cb, &cr).unwrap();
+    for (a, b) in img.data.iter().zip(&back.data) {
+        assert!(
+            (*a as i16 - *b as i16).abs() <= 2,
+            "{a} -> {b}"
+        );
+    }
+}
+
+#[test]
+fn subsample_upsample_shape_invariants() {
+    check(
+        80,
+        |r| {
+            // odd sizes included by construction
+            (r.below(33) as usize + 1, r.below(33) as usize + 1)
+        },
+        |&(w, h)| {
+            let plane = plane_from(w, h);
+            for mode in Subsampling::ALL {
+                let d = downsample(&plane, mode);
+                let (cw, ch) = mode.chroma_dims(w, h);
+                if (d.width, d.height) != (cw, ch) {
+                    return Err(format!(
+                        "{} of {w}x{h}: got {}x{}, want {cw}x{ch}",
+                        mode.as_str(),
+                        d.width,
+                        d.height
+                    ));
+                }
+                let u = upsample(&d, mode, w, h);
+                if (u.width, u.height) != (w, h) {
+                    return Err(format!(
+                        "upsample {} lost shape: {}x{}",
+                        mode.as_str(),
+                        u.width,
+                        u.height
+                    ));
+                }
+                if mode == Subsampling::S444
+                    && (d != plane || u != plane)
+                {
+                    return Err("4:4:4 must be identity".to_string());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn downsample_stays_within_window_bounds() {
+    check(
+        60,
+        |r| (r.below(25) as usize + 1, r.below(25) as usize + 1),
+        |&(w, h)| {
+            let plane = plane_from(w, h);
+            for mode in [Subsampling::S422, Subsampling::S420] {
+                let (fx, fy) = mode.factors();
+                let d = downsample(&plane, mode);
+                for oy in 0..d.height {
+                    for ox in 0..d.width {
+                        let mut lo = 255u8;
+                        let mut hi = 0u8;
+                        for dy in 0..fy {
+                            let sy = (oy * fy + dy).min(h - 1);
+                            for dx in 0..fx {
+                                let sx = (ox * fx + dx).min(w - 1);
+                                let v = plane.get(sx, sy);
+                                lo = lo.min(v);
+                                hi = hi.max(v);
+                            }
+                        }
+                        let v = d.get(ox, oy);
+                        if v < lo || v > hi {
+                            return Err(format!(
+                                "{} ({ox},{oy}): {v} outside \
+                                 [{lo},{hi}]",
+                                mode.as_str()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn constant_plane_roundtrips_exactly() {
+    check(
+        40,
+        |r| {
+            (
+                (r.below(20) as usize + 1, r.below(20) as usize + 1),
+                r.below(256) as i32,
+            )
+        },
+        |input| {
+            let ((w, h), v) = *input;
+            let plane = GrayImage::from_vec(
+                w,
+                h,
+                vec![v as u8; w * h],
+            )
+            .map_err(|e| e.to_string())?;
+            for mode in Subsampling::ALL {
+                let u = upsample(
+                    &downsample(&plane, mode),
+                    mode,
+                    w,
+                    h,
+                );
+                if u != plane {
+                    return Err(format!(
+                        "constant {v} not preserved under {}",
+                        mode.as_str()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn odd_edge_uses_replicated_column_and_row() {
+    // 5x3, last column/row distinct: the overhanging 4:2:0 windows must
+    // average the replicated edge samples, nothing else
+    let mut plane = GrayImage::new(5, 3);
+    for y in 0..3 {
+        for x in 0..5 {
+            plane.set(x, y, (10 * (y * 5 + x)) as u8);
+        }
+    }
+    let d = downsample(&plane, Subsampling::S420);
+    assert_eq!((d.width, d.height), (3, 2));
+    // last column, first row: window x=4,5→4 / y=0,1
+    let want = ((plane.get(4, 0) as u32 * 2
+        + plane.get(4, 1) as u32 * 2
+        + 2)
+        / 4) as u8;
+    assert_eq!(d.get(2, 0), want);
+    // bottom-right corner: only pixel (4,2), replicated 4x
+    assert_eq!(d.get(2, 1), plane.get(4, 2));
+}
