@@ -2,46 +2,77 @@
 //! so the optimization loop knows where the time goes:
 //!
 //! * block extract/store (layout plumbing)
-//! * each 8x8 forward transform
-//! * quantize/dequantize
-//! * zigzag + RLE symbolization
-//! * Huffman table build + full entropy encode
+//! * each 8x8 forward transform, scalar path vs the 8-wide batched
+//!   lane-major engine (`dct::batch`), with blocks/s + MB/s columns and
+//!   the batched/scalar speedup recorded per variant
+//! * quantize: scalar, batched, and fused batched quantize→zigzag
+//! * Huffman: full entropy encode and decode (64-bit accumulator writer,
+//!   LUT decoder)
 //! * PJRT literal marshaling vs execute (GPU-lane overhead split)
+//!
+//! With `CORDIC_DCT_PERF_SANITY=1` the process exits non-zero if the
+//! batched engine is slower than the scalar path on the transform stage
+//! (the CI perf-sanity gate; gated on the paper's Cordic variant).
 
 use std::time::Instant;
 
-use cordic_dct::bench::{bench_config, rows_to_json, save_results, Row};
 use cordic_dct::bench::tables::try_runtime;
-use cordic_dct::codec::{encoder, variant_tag, Header};
+use cordic_dct::bench::{bench_config, rows_to_json, save_results, Row};
 use cordic_dct::codec::zigzag;
+use cordic_dct::codec::{decoder, encoder, variant_tag, Header};
+use cordic_dct::dct::batch::{
+    gather, quantize_batch, quantize_zigzag_batch, BatchTransform,
+    BlockBatch8, QBatch8, LANES,
+};
 use cordic_dct::dct::pipeline::CpuPipeline;
 use cordic_dct::dct::{blocks, quant, Variant};
 use cordic_dct::image::synthetic;
 
+const W: usize = 512;
+const H: usize = 512;
+
 fn main() -> anyhow::Result<()> {
     let bench = bench_config();
-    let img = synthetic::lena_like(512, 512, 1);
+    let img = synthetic::lena_like(W, H, 1);
     let padded = blocks::pad_to_blocks(&img);
     let (gw, gh) = blocks::grid_dims(padded.width, padded.height);
     let nblocks = (gw * gh) as f64;
+    let mb = (W * H) as f64 / 1e6; // 8-bit pixels -> MB per image pass
     let mut rows: Vec<Row> = Vec::new();
-    let mut report = |label: &str, stats: cordic_dct::util::timer::Stats,
-                      per: f64, unit: &str| {
+    let mut report = |label: &str,
+                      stats: cordic_dct::util::timer::Stats,
+                      per: f64,
+                      unit: &str,
+                      extra: Vec<(String, String)>| {
         println!(
             "{label:<28} {:>10.3} ms   {:>10.1} ns/{unit}",
             stats.median_ms,
             stats.median_ms * 1e6 / per
         );
+        let mut e = vec![("unit".into(), unit.into())];
+        e.extend(extra);
         rows.push(Row {
             label: label.into(),
             cpu: Some(stats),
             cpu_par: None,
             gpu: None,
-            extra: vec![("unit".into(), unit.into())],
+            extra: e,
         });
     };
+    // throughput columns for the bench JSON: blocks/s and MB/s of image
+    // data per pass at the stage's median
+    let throughput = |median_ms: f64| -> Vec<(String, String)> {
+        let secs = median_ms / 1e3;
+        vec![
+            (
+                "blocks_per_s".into(),
+                format!("{:.0}", nblocks / secs),
+            ),
+            ("mb_per_s".into(), format!("{:.2}", mb / secs)),
+        ]
+    };
 
-    println!("== hot-path microbench (512x512) ==");
+    println!("== hot-path microbench ({W}x{H}) ==");
 
     // layout plumbing
     let mut block = [0.0f32; 64];
@@ -53,33 +84,68 @@ fn main() -> anyhow::Result<()> {
             }
         }
     });
-    report("extract all blocks", s, nblocks, "block");
+    let e = throughput(s.median_ms);
+    report("extract all blocks", s, nblocks, "block", e);
 
-    // transforms
-    for variant in [
-        Variant::Naive,
-        Variant::Dct,
-        Variant::Loeffler,
-        Variant::Cordic,
-    ] {
+    // transforms: scalar one-block-at-a-time vs the 8-wide batched
+    // engine, whole-grid passes of the same 4096 blocks
+    let mut sanity: Vec<(Variant, f64, f64)> = Vec::new();
+    for variant in [Variant::Dct, Variant::Loeffler, Variant::Cordic] {
         let t = variant.transform();
-        let proto: [f32; 64] = std::array::from_fn(|i| (i as f32) - 32.0);
-        let s = bench.run(|| {
-            let mut b = proto;
-            for _ in 0..1024 {
-                t.forward(&mut b);
-                std::hint::black_box(&b);
+        let s_scalar = bench.run(|| {
+            for by in 0..gh {
+                for bx in 0..gw {
+                    blocks::extract_block(&padded, bx, by, &mut block);
+                    t.forward(&mut block);
+                    std::hint::black_box(&block);
+                }
             }
         });
+        let e = throughput(s_scalar.median_ms);
         report(
-            &format!("fwd8x8 {} x1024", t.name()),
-            s,
-            1024.0,
+            &format!("fwd {} scalar", t.name()),
+            s_scalar.clone(),
+            nblocks,
             "block",
+            e,
         );
+
+        let bt = BatchTransform::new(variant);
+        let mut batch = BlockBatch8::zeroed();
+        let s_batched = bench.run(|| {
+            for by in 0..gh {
+                let mut bx = 0;
+                while bx + LANES <= gw {
+                    gather(&mut batch, &padded, bx, by, LANES);
+                    bt.forward_batch(&mut batch);
+                    std::hint::black_box(&batch);
+                    bx += LANES;
+                }
+                while bx < gw {
+                    blocks::extract_block(&padded, bx, by, &mut block);
+                    bt.forward_scalar(&mut block);
+                    std::hint::black_box(&block);
+                    bx += 1;
+                }
+            }
+        });
+        let speedup = s_scalar.median_ms / s_batched.median_ms;
+        let mut e = throughput(s_batched.median_ms);
+        e.push((
+            "speedup_vs_scalar".into(),
+            format!("{speedup:.2}"),
+        ));
+        report(
+            &format!("fwd {} batched", bt.name()),
+            s_batched.clone(),
+            nblocks,
+            "block",
+            e,
+        );
+        sanity.push((variant, s_scalar.median_ms, s_batched.median_ms));
     }
 
-    // quantization
+    // quantization: scalar, batched, fused batched quantize->zigzag
     let q = quant::effective_qtable(50);
     let coef: [f32; 64] = std::array::from_fn(|i| (i as f32) * 3.7 - 100.0);
     let mut qc = [0i16; 64];
@@ -89,7 +155,27 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(&qc);
         }
     });
-    report("quantize x1024", s, 1024.0, "block");
+    report("quantize scalar x1024", s, 1024.0, "block", vec![]);
+
+    let mut qbatch = BlockBatch8::zeroed();
+    for l in 0..LANES {
+        qbatch.insert_lane(l, &coef);
+    }
+    let mut qout = QBatch8::zeroed();
+    let s = bench.run(|| {
+        for _ in 0..128 {
+            quantize_batch(&qbatch, &q, &mut qout);
+            std::hint::black_box(&qout);
+        }
+    });
+    report("quantize batched x1024", s, 1024.0, "block", vec![]);
+    let s = bench.run(|| {
+        for _ in 0..128 {
+            quantize_zigzag_batch(&qbatch, &q, &mut qout);
+            std::hint::black_box(&qout);
+        }
+    });
+    report("quantize+zigzag batched", s, 1024.0, "block", vec![]);
 
     // zigzag + symbols
     let s = bench.run(|| {
@@ -100,32 +186,38 @@ fn main() -> anyhow::Result<()> {
             );
         }
     });
-    report("zigzag+rle x1024", s, 1024.0, "block");
+    report("zigzag+rle x1024", s, 1024.0, "block", vec![]);
 
-    // full entropy encode
+    // full entropy encode + decode (Huffman fast paths)
     let pipe = CpuPipeline::new(Variant::Cordic, 50);
     let (qcoef, pw, ph) = pipe.analyze(&img);
     let header = Header {
-        width: 512,
-        height: 512,
+        width: W as u32,
+        height: H as u32,
         padded_width: pw as u32,
         padded_height: ph as u32,
         quality: 50,
         variant: variant_tag(Variant::Cordic),
     };
     let s = bench.run(|| encoder::encode(&header, &qcoef).unwrap());
-    report("entropy encode image", s, nblocks, "block");
+    let e = throughput(s.median_ms);
+    report("entropy encode image", s, nblocks, "block", e);
+    let bytes = encoder::encode(&header, &qcoef)?;
+    let s = bench.run(|| decoder::decode(&bytes).unwrap());
+    let e = throughput(s.median_ms);
+    report("entropy decode image", s, nblocks, "block", e);
 
     // full CPU pipeline for scale
     let s = bench.run(|| pipe.compress(&img));
-    report("full cpu pipeline", s, nblocks, "block");
+    let e = throughput(s.median_ms);
+    report("full cpu pipeline", s, nblocks, "block", e);
 
     // PJRT overhead split
     if let Some(rt) = try_runtime() {
         let exe = rt.executable("compress_cordic_512x512")?;
         let input = img.to_f32();
         let s = bench.run(|| exe.run_f32(&[(&input, 512, 512)]).unwrap());
-        report("pjrt execute (warm)", s, nblocks, "block");
+        report("pjrt execute (warm)", s, nblocks, "block", vec![]);
         // marshaling only: build + drop the literal
         let s = bench.run(|| {
             let t0 = Instant::now();
@@ -133,7 +225,7 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(lit);
             t0.elapsed()
         });
-        report("literal marshal 1 MPix", s, 512.0 * 512.0, "pixel");
+        report("literal marshal 1 MPix", s, 512.0 * 512.0, "pixel", vec![]);
     } else {
         println!("(pjrt rows skipped: no artifacts)");
     }
@@ -144,6 +236,32 @@ fn main() -> anyhow::Result<()> {
         &text,
         &rows_to_json("microbench_hotpath", &rows),
     );
+
+    // CI perf-sanity gate: the batched engine must not lose to the
+    // scalar path on the transform stage (checked on the paper's Cordic
+    // variant, where the lane-major win is structural, not noise-bound)
+    if std::env::var("CORDIC_DCT_PERF_SANITY").is_ok() {
+        let (_, scalar_ms, batched_ms) = sanity
+            .iter()
+            .find(|(v, _, _)| *v == Variant::Cordic)
+            .copied()
+            .expect("cordic transform stage measured");
+        let speedup = scalar_ms / batched_ms;
+        println!(
+            "perf-sanity: cordic transform scalar {scalar_ms:.3} ms vs \
+             batched {batched_ms:.3} ms ({speedup:.2}x)"
+        );
+        // 10% tolerance so shared-runner noise can't fail an unrelated
+        // PR; a real regression (batched losing its structural win)
+        // still lands far below 0.9x
+        if batched_ms > scalar_ms * 1.10 {
+            eprintln!(
+                "perf-sanity FAILED: batched cordic transform is slower \
+                 than scalar ({batched_ms:.3} ms > {scalar_ms:.3} ms)"
+            );
+            std::process::exit(1);
+        }
+    }
     Ok(())
 }
 

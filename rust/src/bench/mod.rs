@@ -81,6 +81,13 @@ pub fn render_table(title: &str, rows: &[Row]) -> String {
 
 /// Emit a machine-readable JSON line per row (collected into
 /// bench_results/*.json by the bench targets).
+///
+/// Schema: `label` plus per-lane medians/means (`cpu_ms`, `cpu_par_ms`,
+/// `gpu_ms`, `*_mean_ms`) and derived `speedup` / `speedup_parallel`.
+/// `extra` pairs pass through (numeric strings as numbers) — the
+/// microbench stage rows use this for the throughput columns
+/// `blocks_per_s` and `mb_per_s` and for `speedup_vs_scalar` on the
+/// batched transform stages.
 pub fn rows_to_json(table: &str, rows: &[Row]) -> String {
     use crate::util::json::Json;
     let arr: Vec<Json> = rows

@@ -134,10 +134,21 @@ impl HuffmanCode {
     }
 }
 
-/// Canonical decoder: length-indexed first-code table (JPEG's MINCODE /
-/// MAXCODE scheme) — O(length) per symbol, no big LUT allocations.
+/// Bit width of the decoder's first-level lookup table. Real DC/AC
+/// symbol distributions put the overwhelming majority of decoded symbols
+/// at <= 8 bits, so almost every symbol resolves in one table probe.
+const LUT_BITS: u32 = 8;
+
+/// Canonical decoder: a first-level `2^LUT_BITS`-entry lookup table
+/// resolves all codes of <= `LUT_BITS` bits in a single peek+consume;
+/// longer codes fall back to the length-indexed first-code walk (JPEG's
+/// MINCODE / MAXCODE scheme). The 256-entry table is 512 bytes — built
+/// once per table, no per-symbol bit loop on the hot path.
 #[derive(Clone, Debug)]
 pub struct HuffmanDecoder {
+    /// `lut[prefix] = (symbol, code_len)`; `code_len == 0` marks a prefix
+    /// whose code is longer than `LUT_BITS` (take the slow path).
+    lut: [(u8, u8); 1 << LUT_BITS],
     min_code: [u32; MAX_LEN + 1],
     max_code: [i64; MAX_LEN + 1], // -1 when no codes of that length
     val_ptr: [usize; MAX_LEN + 1],
@@ -146,6 +157,7 @@ pub struct HuffmanDecoder {
 
 impl HuffmanDecoder {
     pub fn new(code: &HuffmanCode) -> HuffmanDecoder {
+        let mut lut = [(0u8, 0u8); 1 << LUT_BITS];
         let mut min_code = [0u32; MAX_LEN + 1];
         let mut max_code = [-1i64; MAX_LEN + 1];
         let mut val_ptr = [0usize; MAX_LEN + 1];
@@ -156,6 +168,19 @@ impl HuffmanDecoder {
             if c > 0 {
                 val_ptr[l] = idx;
                 min_code[l] = next;
+                // canonical codes of length l are consecutive: fill every
+                // LUT entry whose top l bits equal one of them
+                if l as u32 <= LUT_BITS {
+                    let fill = 1usize << (LUT_BITS - l as u32);
+                    for k in 0..c {
+                        let sym = code.symbols[idx + k];
+                        let base =
+                            ((next + k as u32) as usize) << (LUT_BITS - l as u32);
+                        for e in lut[base..base + fill].iter_mut() {
+                            *e = (sym, l as u8);
+                        }
+                    }
+                }
                 next += c as u32;
                 max_code[l] = (next - 1) as i64;
                 idx += c;
@@ -163,6 +188,7 @@ impl HuffmanDecoder {
             next <<= 1;
         }
         HuffmanDecoder {
+            lut,
             min_code,
             max_code,
             val_ptr,
@@ -173,6 +199,17 @@ impl HuffmanDecoder {
     /// Decode one symbol from the reader.
     #[inline]
     pub fn get(&self, r: &mut BitReader<'_>) -> Result<u8> {
+        let prefix = r.peek(LUT_BITS) as usize;
+        let (sym, len) = self.lut[prefix];
+        if len != 0 {
+            // bounds-checked advance (errors on exhaustion) without
+            // re-extracting the bits we already peeked
+            r.consume(len as u32)?;
+            return Ok(sym);
+        }
+        // slow path: codes longer than LUT_BITS bits (every length
+        // <= LUT_BITS would have hit the table, so the walk only
+        // terminates at a longer length or errors)
         let mut acc: u32 = 0;
         for l in 1..=MAX_LEN {
             acc = (acc << 1) | r.get(1)? as u32;
@@ -389,6 +426,54 @@ mod tests {
         }
         // capped code must still decode
         let stream: Vec<u8> = (0..40u8).cycle().take(500).collect();
+        let mut w = BitWriter::new();
+        for &s in &stream {
+            code.put(&mut w, s);
+        }
+        let bytes = w.finish();
+        let dec = HuffmanDecoder::new(&code);
+        let mut r = BitReader::new(&bytes);
+        for &s in &stream {
+            assert_eq!(dec.get(&mut r).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn short_code_at_stream_end_decodes() {
+        // the LUT peeks 8 bits even when fewer remain; a 1-bit code in
+        // the final partial byte must still decode (zero padding is never
+        // consumed)
+        let mut freq = [0u64; 256];
+        freq[3] = 100;
+        freq[9] = 1;
+        let code = HuffmanCode::build(&freq).unwrap();
+        let stream = [3u8, 9, 3, 3, 3, 3, 3, 3, 3];
+        let mut w = BitWriter::new();
+        for &s in &stream {
+            code.put(&mut w, s);
+        }
+        let bytes = w.finish();
+        let dec = HuffmanDecoder::new(&code);
+        let mut r = BitReader::new(&bytes);
+        for &s in &stream {
+            assert_eq!(dec.get(&mut r).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn codes_longer_than_lut_take_slow_path() {
+        // wide alphabet with extreme skew: rare symbols get codes longer
+        // than the 8-bit LUT and must decode via the canonical walk
+        let mut freq = [0u64; 256];
+        freq[0] = 1 << 20;
+        for s in 1..200usize {
+            freq[s] = 1;
+        }
+        let code = HuffmanCode::build(&freq).unwrap();
+        let max_len = (0..200).map(|s| code.code_len(s as u8)).max();
+        assert!(max_len.unwrap() > 8, "alphabet too tame: {max_len:?}");
+        let stream: Vec<u8> =
+            (0..200u8).chain([0, 0, 199, 0, 150]).collect();
         let mut w = BitWriter::new();
         for &s in &stream {
             code.put(&mut w, s);

@@ -1,6 +1,12 @@
 //! Worker loop: drains batches from the request queue and runs each job
 //! on its lane, replying over the per-job channel.
+//!
+//! Each worker keeps a [`PipelineCache`] across jobs: CPU-lane pipelines
+//! (and with them their batch-engine scratch arenas) are built once per
+//! construction key and reused for every subsequent request, instead of
+//! re-allocating transform tables and block scratch per job.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -12,6 +18,7 @@ use crate::dct::parallel::ParallelCpuPipeline;
 use crate::dct::pipeline::CpuPipeline;
 use crate::dct::Variant;
 use crate::image::color::ColorImage;
+use crate::image::ycbcr::Subsampling;
 use crate::image::{histeq, GrayImage};
 use crate::metrics::{color::psnr_color, psnr, stats::SharedHistogram};
 use crate::runtime::Executor;
@@ -36,8 +43,71 @@ pub struct WorkerCtx {
     pub process_hist: Arc<SharedHistogram>,
 }
 
+/// Per-worker cache of CPU-lane pipelines, keyed by everything that
+/// feeds their construction (quality and worker count are fixed per
+/// service today, but they are part of the key so a cache hit can never
+/// return a pipeline built with different parameters). Reusing the
+/// pipeline reuses its transform tables *and* its batch engine's
+/// `BlockScratch` arena across jobs.
+#[derive(Default)]
+pub struct PipelineCache {
+    serial: HashMap<(Variant, u8), CpuPipeline>,
+    parallel: HashMap<(Variant, u8, usize), ParallelCpuPipeline>,
+    /// Color pipelines keyed by (variant, subsampling, parallel?,
+    /// quality, workers).
+    color: HashMap<(Variant, Subsampling, bool, u8, usize), ColorPipeline>,
+}
+
+impl PipelineCache {
+    pub fn new() -> PipelineCache {
+        PipelineCache::default()
+    }
+
+    fn serial(&mut self, variant: Variant, quality: u8) -> &CpuPipeline {
+        self.serial
+            .entry((variant, quality))
+            .or_insert_with(|| CpuPipeline::new(variant, quality))
+    }
+
+    fn parallel(
+        &mut self,
+        variant: Variant,
+        quality: u8,
+        workers: usize,
+    ) -> &ParallelCpuPipeline {
+        self.parallel.entry((variant, quality, workers)).or_insert_with(
+            || ParallelCpuPipeline::with_workers(variant, quality, workers),
+        )
+    }
+
+    fn color(
+        &mut self,
+        variant: Variant,
+        quality: u8,
+        subsampling: Subsampling,
+        parallel: bool,
+        workers: usize,
+    ) -> &ColorPipeline {
+        self.color
+            .entry((variant, subsampling, parallel, quality, workers))
+            .or_insert_with(|| {
+                if parallel {
+                    ColorPipeline::parallel(
+                        variant,
+                        quality,
+                        subsampling,
+                        workers,
+                    )
+                } else {
+                    ColorPipeline::new(variant, quality, subsampling)
+                }
+            })
+    }
+}
+
 /// Run the worker loop until the queue closes.
 pub fn run(ctx: &WorkerCtx) {
+    let mut cache = PipelineCache::new();
     loop {
         // the head job's lane picks the batch cap, so a max-1 lane (serial
         // CPU by default) never coalesces stragglers
@@ -50,17 +120,17 @@ pub fn run(ctx: &WorkerCtx) {
         // One cached-executable resolve serves the whole same-key batch —
         // the batching win the ablation measures.
         for job in batch {
-            process_job(ctx, job);
+            process_job(ctx, &mut cache, job);
         }
     }
 }
 
-fn process_job(ctx: &WorkerCtx, job: QueuedJob) {
+fn process_job(ctx: &WorkerCtx, cache: &mut PipelineCache, job: QueuedJob) {
     let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
     ctx.queue_hist.record_us(queue_ms * 1e3);
     let t0 = Instant::now();
     let lane = resolve_lane(ctx, &job.request);
-    let result = run_job(ctx, &job.request, lane);
+    let result = run_job(ctx, cache, &job.request, lane);
     let process_ms = t0.elapsed().as_secs_f64() * 1e3;
     ctx.process_hist.record_us(process_ms * 1e3);
     // receiver may have given up (dropped handle): ignore send failure
@@ -124,11 +194,15 @@ fn compress_output(
     })
 }
 
-fn run_job(ctx: &WorkerCtx, req: &Request, lane: Lane)
-           -> Result<JobOutput> {
+fn run_job(
+    ctx: &WorkerCtx,
+    cache: &mut PipelineCache,
+    req: &Request,
+    lane: Lane,
+) -> Result<JobOutput> {
     match &req.image {
-        JobImage::Gray(img) => run_gray_job(ctx, req, img, lane),
-        JobImage::Color(img) => run_color_job(ctx, req, img, lane),
+        JobImage::Gray(img) => run_gray_job(ctx, cache, req, img, lane),
+        JobImage::Color(img) => run_color_job(ctx, cache, req, img, lane),
     }
 }
 
@@ -137,6 +211,7 @@ fn run_job(ctx: &WorkerCtx, req: &Request, lane: Lane)
 /// artifacts yet and reports so.
 fn run_color_job(
     ctx: &WorkerCtx,
+    cache: &mut PipelineCache,
     req: &Request,
     img: &ColorImage,
     lane: Lane,
@@ -149,16 +224,19 @@ fn run_color_job(
             "color compression has no GPU artifacts yet; \
              use a CPU lane"
         ),
-        Lane::CpuParallel => ColorPipeline::parallel(
+        Lane::CpuParallel => cache.color(
             req.variant,
             ctx.quality,
             req.subsampling,
+            true,
             ctx.parallel_workers,
         ),
-        _ => ColorPipeline::new(
+        _ => cache.color(
             req.variant,
             ctx.quality,
             req.subsampling,
+            false,
+            ctx.parallel_workers,
         ),
     };
     let out = pipe.compress(img);
@@ -180,6 +258,7 @@ fn run_color_job(
 
 fn run_gray_job(
     ctx: &WorkerCtx,
+    cache: &mut PipelineCache,
     req: &Request,
     img: &GrayImage,
     lane: Lane,
@@ -202,7 +281,7 @@ fn run_gray_job(
             )
         }
         (RequestKind::Compress, Lane::CpuParallel) => {
-            let pipe = ParallelCpuPipeline::with_workers(
+            let pipe = cache.parallel(
                 req.variant,
                 ctx.quality,
                 ctx.parallel_workers,
@@ -219,7 +298,7 @@ fn run_gray_job(
             )
         }
         (RequestKind::Compress, _) => {
-            let pipe = CpuPipeline::new(req.variant, ctx.quality);
+            let pipe = cache.serial(req.variant, ctx.quality);
             let out = pipe.compress(img);
             compress_output(
                 img,
@@ -291,6 +370,27 @@ mod tests {
             queue_hist: Arc::new(SharedHistogram::default()),
             process_hist: Arc::new(SharedHistogram::default()),
         }
+    }
+
+    #[test]
+    fn pipeline_cache_builds_one_pipeline_per_key() {
+        let mut cache = PipelineCache::new();
+        cache.serial(Variant::Dct, 50);
+        cache.serial(Variant::Dct, 50);
+        cache.serial(Variant::Cordic, 50);
+        cache.parallel(Variant::Dct, 50, 2);
+        cache.parallel(Variant::Dct, 50, 2);
+        cache.color(Variant::Dct, 50, Subsampling::S420, false, 2);
+        cache.color(Variant::Dct, 50, Subsampling::S420, true, 2);
+        cache.color(Variant::Dct, 50, Subsampling::S420, true, 2);
+        assert_eq!(cache.serial.len(), 2);
+        assert_eq!(cache.parallel.len(), 1);
+        assert_eq!(cache.color.len(), 2);
+        // construction parameters are part of the key: a different
+        // quality must never reuse a cached pipeline
+        cache.serial(Variant::Dct, 90);
+        assert_eq!(cache.serial.len(), 3);
+        assert_eq!(cache.serial(Variant::Dct, 90).quality, 90);
     }
 
     #[test]
@@ -451,6 +551,7 @@ mod tests {
             Lane::Gpu,
             Subsampling::S444,
         );
-        assert!(run_job(&ctx, &gpu, Lane::Gpu).is_err());
+        let mut cache = PipelineCache::new();
+        assert!(run_job(&ctx, &mut cache, &gpu, Lane::Gpu).is_err());
     }
 }

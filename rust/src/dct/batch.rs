@@ -1,0 +1,1116 @@
+//! Batched 8-wide SIMD-style block engine — the CPU lanes' answer to the
+//! GPU's thread-per-block mapping.
+//!
+//! The scalar pipelines walk the block grid one 8x8 block at a time
+//! through a `Box<dyn Transform8x8>` virtual call, which stops the
+//! autovectorizer at the hottest loop in the crate. This module
+//! restructures the loop into a *lane-major structure-of-arrays* batch:
+//! eight neighbouring blocks ride together, one block per SIMD lane, and
+//! every transform step is expressed as an `[f32; 8]`-element operation
+//! the compiler can map directly onto vector instructions.
+//!
+//! ```text
+//!            scalar layout (AoS)              lane-major SoA (BlockBatch8)
+//!   block 0: [e0 e1 e2 ... e63]        data[0]  = [e0 of blocks 0..8]
+//!   block 1: [e0 e1 e2 ... e63]   ==>  data[1]  = [e1 of blocks 0..8]
+//!   ...                                ...
+//!   block 7: [e0 e1 e2 ... e63]        data[63] = [e63 of blocks 0..8]
+//! ```
+//!
+//! `data[i]` holds element `i` (row-major position within the 8x8 block)
+//! of all eight blocks, so one [`Lanes`] add/mul advances the same
+//! flow-graph edge of eight independent blocks at once.
+//!
+//! **Bit-exactness.** Every lane performs *exactly* the scalar op
+//! sequence of the serial pipeline — same IEEE f32 adds/muls/divides in
+//! the same order, per block — because (a) the Loeffler/matrix lane code
+//! is a line-for-line mirror of the scalar flow graph with each `f32`
+//! widened to [`Lanes`], (b) the exact rotators delegate per lane to the
+//! scalar [`Rotors`] methods, and (c) the CORDIC rotators run the same
+//! fixed-point grid (`fxp`) per lane. Elementwise IEEE arithmetic is
+//! deterministic, so `qcoef` and the reconstruction are bit-identical to
+//! the scalar path (locked by `tests/batch_parity.rs`).
+//!
+//! [`BatchEngine`] is the monomorphized pipeline core both
+//! [`CpuPipeline`](super::pipeline::CpuPipeline) and
+//! [`ParallelCpuPipeline`](super::parallel::ParallelCpuPipeline) (and
+//! through them the per-plane color pipeline) run on: it walks each block
+//! row in batches of [`LANES`], falls back to the scalar path for the
+//! `grid_width % 8` tail, and reuses [`BlockScratch`] buffers from a
+//! per-pipeline [`ScratchPool`] arena instead of allocating per call.
+
+use std::sync::Mutex;
+
+use crate::codec::zigzag::ZIGZAG;
+use crate::image::GrayImage;
+
+use super::blocks::{
+    extract_block, load_coef_planar, store_block, store_coef_planar, BLOCK,
+    LEVEL_SHIFT,
+};
+use super::cordic::fxp;
+use super::cordic_loeffler::{CordicLoefflerDct, CordicRotors};
+use super::loeffler::{
+    ExactRotors, LoefflerDct, Rotors, INV_SQRT8, SQRT2, SQRT8,
+};
+use super::matrix::MatrixDct;
+use super::naive::NaiveDct;
+use super::quant::{dequantize_block, quantize_block};
+use super::{Transform8x8, Variant};
+
+/// Number of blocks per batch — one block per SIMD lane.
+pub const LANES: usize = 8;
+
+/// An 8-wide lane vector: one `f32` per block in the batch. All
+/// arithmetic is elementwise, so lane `l` sees exactly the scalar op
+/// sequence of block `l`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Lanes(pub [f32; LANES]);
+
+impl Lanes {
+    pub const ZERO: Lanes = Lanes([0.0; LANES]);
+
+    /// Broadcast a scalar constant to all lanes.
+    #[inline]
+    pub fn splat(v: f32) -> Lanes {
+        Lanes([v; LANES])
+    }
+}
+
+impl std::ops::Add for Lanes {
+    type Output = Lanes;
+    #[inline]
+    fn add(self, rhs: Lanes) -> Lanes {
+        let mut out = [0.0f32; LANES];
+        for l in 0..LANES {
+            out[l] = self.0[l] + rhs.0[l];
+        }
+        Lanes(out)
+    }
+}
+
+impl std::ops::Sub for Lanes {
+    type Output = Lanes;
+    #[inline]
+    fn sub(self, rhs: Lanes) -> Lanes {
+        let mut out = [0.0f32; LANES];
+        for l in 0..LANES {
+            out[l] = self.0[l] - rhs.0[l];
+        }
+        Lanes(out)
+    }
+}
+
+/// Scale every lane by the same scalar (mirrors `x * c` in scalar code —
+/// the only multiply shape the lane kernels need; elementwise
+/// `Lanes * Lanes` is deliberately absent until a kernel requires it).
+impl std::ops::Mul<f32> for Lanes {
+    type Output = Lanes;
+    #[inline]
+    fn mul(self, rhs: f32) -> Lanes {
+        let mut out = [0.0f32; LANES];
+        for l in 0..LANES {
+            out[l] = self.0[l] * rhs;
+        }
+        Lanes(out)
+    }
+}
+
+/// Lane-major SoA batch: element `i` of all [`LANES`] blocks lives in
+/// `data[i]` (see the module-level layout diagram).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockBatch8 {
+    pub data: [Lanes; 64],
+}
+
+impl BlockBatch8 {
+    pub fn zeroed() -> BlockBatch8 {
+        BlockBatch8 {
+            data: [Lanes::ZERO; 64],
+        }
+    }
+
+    /// Copy lane `l` out as a scalar row-major block.
+    #[inline]
+    pub fn extract_lane(&self, l: usize) -> [f32; 64] {
+        std::array::from_fn(|i| self.data[i].0[l])
+    }
+
+    /// Overwrite lane `l` from a scalar row-major block.
+    #[inline]
+    pub fn insert_lane(&mut self, l: usize, block: &[f32; 64]) {
+        for i in 0..64 {
+            self.data[i].0[l] = block[i];
+        }
+    }
+}
+
+impl Default for BlockBatch8 {
+    fn default() -> Self {
+        Self::zeroed()
+    }
+}
+
+/// Quantized-coefficient batch in the same lane-major layout
+/// (`data[i][l]` = coefficient `i` of block `l`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QBatch8 {
+    pub data: [[i16; LANES]; 64],
+}
+
+impl QBatch8 {
+    pub fn zeroed() -> QBatch8 {
+        QBatch8 {
+            data: [[0i16; LANES]; 64],
+        }
+    }
+}
+
+impl Default for QBatch8 {
+    fn default() -> Self {
+        Self::zeroed()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Gather / scatter between planar images and the lane-major batch
+// ---------------------------------------------------------------------------
+
+/// Gather blocks `(bx0..bx0+n, by)` of an 8-aligned image into the batch,
+/// applying the -128 level shift (lane `l` = block `bx0 + l`). Inactive
+/// lanes (`l >= n`) are zeroed so tail batches stay deterministic.
+pub fn gather(
+    batch: &mut BlockBatch8,
+    img: &GrayImage,
+    bx0: usize,
+    by: usize,
+    n: usize,
+) {
+    debug_assert!((1..=LANES).contains(&n));
+    let w = img.width;
+    for l in 0..n {
+        for r in 0..BLOCK {
+            let src = (by * BLOCK + r) * w + (bx0 + l) * BLOCK;
+            for c in 0..BLOCK {
+                batch.data[r * BLOCK + c].0[l] =
+                    img.data[src + c] as f32 - LEVEL_SHIFT;
+            }
+        }
+    }
+    for e in batch.data.iter_mut() {
+        for v in e.0.iter_mut().skip(n) {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Scatter the first `n` lanes back into the image as reconstructed
+/// pixels (un-shift, clamp, round — the exact scalar `store_block` math).
+pub fn scatter_blocks(
+    batch: &BlockBatch8,
+    img: &mut GrayImage,
+    bx0: usize,
+    by: usize,
+    n: usize,
+) {
+    debug_assert!((1..=LANES).contains(&n));
+    let w = img.width;
+    for l in 0..n {
+        for r in 0..BLOCK {
+            let dst = (by * BLOCK + r) * w + (bx0 + l) * BLOCK;
+            for c in 0..BLOCK {
+                img.data[dst + c] = (batch.data[r * BLOCK + c].0[l]
+                    + LEVEL_SHIFT)
+                    .clamp(0.0, 255.0)
+                    .round() as u8;
+            }
+        }
+    }
+}
+
+/// Scatter the first `n` quantized lanes into a planar f32 coefficient
+/// buffer (the PJRT interchange layout), blocks `(bx0..bx0+n, by)`.
+pub fn scatter_coef(
+    qb: &QBatch8,
+    buf: &mut [f32],
+    width: usize,
+    bx0: usize,
+    by: usize,
+    n: usize,
+) {
+    debug_assert!((1..=LANES).contains(&n));
+    for l in 0..n {
+        for r in 0..BLOCK {
+            let dst = (by * BLOCK + r) * width + (bx0 + l) * BLOCK;
+            for c in 0..BLOCK {
+                buf[dst + c] = qb.data[r * BLOCK + c][l] as f32;
+            }
+        }
+    }
+}
+
+/// Gather `n` blocks of a planar f32 coefficient buffer into the
+/// quantized batch (inverse of [`scatter_coef`]); inactive lanes zeroed.
+pub fn gather_coef(
+    buf: &[f32],
+    width: usize,
+    bx0: usize,
+    by: usize,
+    n: usize,
+    qb: &mut QBatch8,
+) {
+    debug_assert!((1..=LANES).contains(&n));
+    for l in 0..n {
+        for r in 0..BLOCK {
+            let src = (by * BLOCK + r) * width + (bx0 + l) * BLOCK;
+            for c in 0..BLOCK {
+                qb.data[r * BLOCK + c][l] =
+                    buf[src + c].round_ties_even() as i16;
+            }
+        }
+    }
+    for e in qb.data.iter_mut() {
+        for v in e.iter_mut().skip(n) {
+            *v = 0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lane-wide quantization
+// ---------------------------------------------------------------------------
+
+/// Lane-wide quantize: `round_half_even(coef / q)` per lane — the exact
+/// scalar [`quantize_block`] math, eight blocks at a time.
+pub fn quantize_batch(batch: &BlockBatch8, q: &[f32; 64], out: &mut QBatch8) {
+    for i in 0..64 {
+        let qi = q[i];
+        let lanes = &batch.data[i].0;
+        for l in 0..LANES {
+            out.data[i][l] = (lanes[l] / qi).round_ties_even() as i16;
+        }
+    }
+}
+
+/// Fused quantize→zigzag: quantize the batch and emit each lane's
+/// coefficients already in zigzag scan order (`out.data[k][l]` is scan
+/// position `k` of block `l`) — the symbolization front half without the
+/// intermediate row-major store. Values are bit-identical to
+/// `quantize_block` followed by `zigzag::scan` per block.
+pub fn quantize_zigzag_batch(
+    batch: &BlockBatch8,
+    q: &[f32; 64],
+    out: &mut QBatch8,
+) {
+    for (k, &i) in ZIGZAG.iter().enumerate() {
+        let qi = q[i];
+        let lanes = &batch.data[i].0;
+        for l in 0..LANES {
+            out.data[k][l] = (lanes[l] / qi).round_ties_even() as i16;
+        }
+    }
+}
+
+/// Lane-wide dequantize back to coefficient space (exact scalar
+/// [`dequantize_block`] math).
+pub fn dequantize_batch(qb: &QBatch8, q: &[f32; 64], out: &mut BlockBatch8) {
+    for i in 0..64 {
+        let qi = q[i];
+        for l in 0..LANES {
+            out.data[i].0[l] = qb.data[i][l] as f32 * qi;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lane-wide transforms
+// ---------------------------------------------------------------------------
+
+/// Lane-wide plane rotations of the Loeffler graph — the `[f32; 8]`
+/// counterpart of [`Rotors`], one block per lane.
+pub trait LaneRotors: Send + Sync {
+    fn odd_a8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes);
+    fn odd_b8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes);
+    fn even8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes);
+    fn odd_a_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes);
+    fn odd_b_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes);
+    fn even_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes);
+    /// Quantize a scalar constant to the implementation's arithmetic grid
+    /// (identity for exact float) — constants are per-graph, not per-lane.
+    fn grid(&self, v: f32) -> f32 {
+        v
+    }
+}
+
+/// Apply a scalar rotator to each lane (bit-identical by construction).
+#[inline]
+fn lanewise(
+    f: impl Fn(f32, f32) -> (f32, f32),
+    x: Lanes,
+    y: Lanes,
+) -> (Lanes, Lanes) {
+    let mut ox = [0.0f32; LANES];
+    let mut oy = [0.0f32; LANES];
+    for l in 0..LANES {
+        let (a, b) = f(x.0[l], y.0[l]);
+        ox[l] = a;
+        oy[l] = b;
+    }
+    (Lanes(ox), Lanes(oy))
+}
+
+impl LaneRotors for ExactRotors {
+    #[inline]
+    fn odd_a8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+        lanewise(|a, b| Rotors::odd_a(self, a, b), x, y)
+    }
+    #[inline]
+    fn odd_b8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+        lanewise(|a, b| Rotors::odd_b(self, a, b), x, y)
+    }
+    #[inline]
+    fn even8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+        lanewise(|a, b| Rotors::even(self, a, b), x, y)
+    }
+    #[inline]
+    fn odd_a_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+        lanewise(|a, b| Rotors::odd_a_inv(self, a, b), x, y)
+    }
+    #[inline]
+    fn odd_b_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+        lanewise(|a, b| Rotors::odd_b_inv(self, a, b), x, y)
+    }
+    #[inline]
+    fn even_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+        lanewise(|a, b| Rotors::even_inv(self, a, b), x, y)
+    }
+}
+
+impl LaneRotors for CordicRotors {
+    #[inline]
+    fn odd_a8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+        let (mut a, mut b) = (x.0, y.0);
+        self.ra().rotate_cw8(&mut a, &mut b);
+        (Lanes(a), Lanes(b))
+    }
+    #[inline]
+    fn odd_b8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+        let (mut a, mut b) = (x.0, y.0);
+        self.rb().rotate_cw8(&mut a, &mut b);
+        (Lanes(a), Lanes(b))
+    }
+    #[inline]
+    fn even8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+        let (mut a, mut b) = (x.0, y.0);
+        self.re().rotate_cw8(&mut a, &mut b);
+        (Lanes(a), Lanes(b))
+    }
+    #[inline]
+    fn odd_a_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+        let (mut a, mut b) = (x.0, y.0);
+        self.ra().rotate_ccw8(&mut a, &mut b);
+        (Lanes(a), Lanes(b))
+    }
+    #[inline]
+    fn odd_b_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+        let (mut a, mut b) = (x.0, y.0);
+        self.rb().rotate_ccw8(&mut a, &mut b);
+        (Lanes(a), Lanes(b))
+    }
+    #[inline]
+    fn even_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+        let (mut a, mut b) = (x.0, y.0);
+        self.re().rotate_ccw8(&mut a, &mut b);
+        (Lanes(a), Lanes(b))
+    }
+    #[inline]
+    fn grid(&self, v: f32) -> f32 {
+        fxp(v, self.frac_bits())
+    }
+}
+
+/// Lane-wide forward 8-point DCT-II — a line-for-line mirror of
+/// `loeffler::fwd8` with every `f32` widened to
+/// [`Lanes`], so each lane runs the exact scalar flow graph.
+pub fn fwd8_lanes<R: LaneRotors>(r: &R, x: &[Lanes; 8]) -> [Lanes; 8] {
+    // stage 1
+    let a0 = x[0] + x[7];
+    let a1 = x[1] + x[6];
+    let a2 = x[2] + x[5];
+    let a3 = x[3] + x[4];
+    let a7 = x[0] - x[7];
+    let a6 = x[1] - x[6];
+    let a5 = x[2] - x[5];
+    let a4 = x[3] - x[4];
+    // stage 2
+    let b0 = a0 + a3;
+    let b1 = a1 + a2;
+    let b3 = a0 - a3;
+    let b2 = a1 - a2;
+    let (b4, b7) = r.odd_a8(a4, a7);
+    let (b5, b6) = r.odd_b8(a5, a6);
+    // stage 3
+    let x0 = b0 + b1;
+    let x4 = b0 - b1;
+    let (x2, x6) = r.even8(b2, b3);
+    let c4 = b4 + b6;
+    let c6 = b4 - b6;
+    let c7 = b7 + b5;
+    let c5 = b7 - b5;
+    // stage 4
+    let x1 = c4 + c7;
+    let x7 = c7 - c4;
+    let rt2 = r.grid(SQRT2);
+    let x3 = c5 * rt2;
+    let x5 = c6 * rt2;
+    let n = r.grid(INV_SQRT8);
+    [
+        x0 * n,
+        x1 * n,
+        x2 * n,
+        x3 * n,
+        x4 * n,
+        x5 * n,
+        x6 * n,
+        x7 * n,
+    ]
+}
+
+/// Lane-wide inverse of [`fwd8_lanes`] (mirror of `loeffler::inv8`).
+pub fn inv8_lanes<R: LaneRotors>(r: &R, y: &[Lanes; 8]) -> [Lanes; 8] {
+    let s8 = r.grid(SQRT8);
+    let x0 = y[0] * s8;
+    let x1 = y[1] * s8;
+    let x2 = y[2] * s8;
+    let x3 = y[3] * s8;
+    let x4 = y[4] * s8;
+    let x5 = y[5] * s8;
+    let x6 = y[6] * s8;
+    let x7 = y[7] * s8;
+    // stage 4 inverse
+    let c4 = (x1 - x7) * 0.5;
+    let c7 = (x1 + x7) * 0.5;
+    let ir2 = r.grid(1.0 / SQRT2);
+    let c5 = x3 * ir2;
+    let c6 = x5 * ir2;
+    // stage 3 odd inverse
+    let b4 = (c4 + c6) * 0.5;
+    let b6 = (c4 - c6) * 0.5;
+    let b7 = (c7 + c5) * 0.5;
+    let b5 = (c7 - c5) * 0.5;
+    // stage 3 even inverse
+    let b0 = (x0 + x4) * 0.5;
+    let b1 = (x0 - x4) * 0.5;
+    let (b2, b3) = r.even_inv8(x2, x6);
+    // stage 2 odd inverse
+    let (a4, a7) = r.odd_a_inv8(b4, b7);
+    let (a5, a6) = r.odd_b_inv8(b5, b6);
+    // stage 2 even inverse
+    let a0 = (b0 + b3) * 0.5;
+    let a3 = (b0 - b3) * 0.5;
+    let a1 = (b1 + b2) * 0.5;
+    let a2 = (b1 - b2) * 0.5;
+    // stage 1 inverse
+    [
+        (a0 + a7) * 0.5,
+        (a1 + a6) * 0.5,
+        (a2 + a5) * 0.5,
+        (a3 + a4) * 0.5,
+        (a3 - a4) * 0.5,
+        (a2 - a5) * 0.5,
+        (a1 - a6) * 0.5,
+        (a0 - a7) * 0.5,
+    ]
+}
+
+/// Apply a lane-wide 1-D transform separably over the batch (columns then
+/// rows within each lane's 8x8 block — mirror of `loeffler::separable_2d`).
+pub fn separable_2d_lanes<R: LaneRotors>(
+    r: &R,
+    batch: &mut BlockBatch8,
+    f: fn(&R, &[Lanes; 8]) -> [Lanes; 8],
+) {
+    // columns
+    for j in 0..8 {
+        let col: [Lanes; 8] = std::array::from_fn(|i| batch.data[i * 8 + j]);
+        let out = f(r, &col);
+        for i in 0..8 {
+            batch.data[i * 8 + j] = out[i];
+        }
+    }
+    // rows
+    for i in 0..8 {
+        let row: [Lanes; 8] = std::array::from_fn(|j| batch.data[i * 8 + j]);
+        let out = f(r, &row);
+        for j in 0..8 {
+            batch.data[i * 8 + j] = out[j];
+        }
+    }
+}
+
+/// Lane-wide separable matrix DCT forward (`B <- D B D^T`), mirroring the
+/// scalar `MatrixDct::forward` accumulation order per lane.
+pub fn matrix_forward_lanes(d: &[[f32; 8]; 8], batch: &mut BlockBatch8) {
+    let mut tmp = [Lanes::ZERO; 64];
+    // columns: tmp = D * B
+    for k in 0..8 {
+        for j in 0..8 {
+            let mut acc = Lanes::ZERO;
+            for n in 0..8 {
+                acc = acc + batch.data[n * 8 + j] * d[k][n];
+            }
+            tmp[k * 8 + j] = acc;
+        }
+    }
+    // rows: out = tmp * D^T
+    for k in 0..8 {
+        for l in 0..8 {
+            let mut acc = Lanes::ZERO;
+            for j in 0..8 {
+                acc = acc + tmp[k * 8 + j] * d[l][j];
+            }
+            batch.data[k * 8 + l] = acc;
+        }
+    }
+}
+
+/// Lane-wide matrix IDCT (`B <- D^T B D`), mirroring the scalar
+/// `MatrixDct::inverse` accumulation order per lane.
+pub fn matrix_inverse_lanes(d: &[[f32; 8]; 8], batch: &mut BlockBatch8) {
+    let mut tmp = [Lanes::ZERO; 64];
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut acc = Lanes::ZERO;
+            for k in 0..8 {
+                acc = acc + batch.data[k * 8 + j] * d[k][i];
+            }
+            tmp[i * 8 + j] = acc;
+        }
+    }
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut acc = Lanes::ZERO;
+            for l in 0..8 {
+                acc = acc + tmp[i * 8 + l] * d[l][j];
+            }
+            batch.data[i * 8 + j] = acc;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Monomorphized transform dispatch
+// ---------------------------------------------------------------------------
+
+/// Statically dispatched transform: the batched replacement for the
+/// `Box<dyn Transform8x8>` virtual call. Each arm owns the scalar
+/// implementation (used for tail blocks) and drives the matching
+/// lane-wide kernel for full batches.
+pub enum BatchTransform {
+    /// Boxed: the 2x 8x8 f32 matrices would otherwise dominate the enum
+    /// size carried by every engine.
+    Matrix(Box<MatrixDct>),
+    Loeffler(LoefflerDct),
+    Cordic(CordicLoefflerDct),
+    /// The textbook baseline has no lane kernel; full batches run the
+    /// scalar transform once per lane (still bit-identical, never hot).
+    Naive(NaiveDct),
+}
+
+impl BatchTransform {
+    pub fn new(variant: Variant) -> BatchTransform {
+        match variant {
+            Variant::Dct => {
+                BatchTransform::Matrix(Box::new(MatrixDct::new()))
+            }
+            Variant::Loeffler => {
+                BatchTransform::Loeffler(LoefflerDct::new())
+            }
+            Variant::Cordic => {
+                BatchTransform::Cordic(CordicLoefflerDct::default())
+            }
+            Variant::Naive => BatchTransform::Naive(NaiveDct::new()),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatchTransform::Matrix(t) => t.name(),
+            BatchTransform::Loeffler(t) => t.name(),
+            BatchTransform::Cordic(t) => t.name(),
+            BatchTransform::Naive(t) => t.name(),
+        }
+    }
+
+    /// Scalar forward for tail blocks (static dispatch per arm).
+    #[inline]
+    pub fn forward_scalar(&self, block: &mut [f32; 64]) {
+        match self {
+            BatchTransform::Matrix(t) => t.forward(block),
+            BatchTransform::Loeffler(t) => t.forward(block),
+            BatchTransform::Cordic(t) => t.forward(block),
+            BatchTransform::Naive(t) => t.forward(block),
+        }
+    }
+
+    /// Scalar inverse for tail blocks.
+    #[inline]
+    pub fn inverse_scalar(&self, block: &mut [f32; 64]) {
+        match self {
+            BatchTransform::Matrix(t) => t.inverse(block),
+            BatchTransform::Loeffler(t) => t.inverse(block),
+            BatchTransform::Cordic(t) => t.inverse(block),
+            BatchTransform::Naive(t) => t.inverse(block),
+        }
+    }
+
+    /// Lane-wide forward over a full batch.
+    pub fn forward_batch(&self, batch: &mut BlockBatch8) {
+        match self {
+            BatchTransform::Matrix(t) => {
+                matrix_forward_lanes(t.coeffs(), batch)
+            }
+            BatchTransform::Loeffler(t) => {
+                separable_2d_lanes(t.rotors(), batch, fwd8_lanes)
+            }
+            BatchTransform::Cordic(t) => {
+                separable_2d_lanes(t.rotors(), batch, fwd8_lanes)
+            }
+            BatchTransform::Naive(t) => {
+                for l in 0..LANES {
+                    let mut blk = batch.extract_lane(l);
+                    t.forward(&mut blk);
+                    batch.insert_lane(l, &blk);
+                }
+            }
+        }
+    }
+
+    /// Lane-wide inverse over a full batch.
+    pub fn inverse_batch(&self, batch: &mut BlockBatch8) {
+        match self {
+            BatchTransform::Matrix(t) => {
+                matrix_inverse_lanes(t.coeffs(), batch)
+            }
+            BatchTransform::Loeffler(t) => {
+                separable_2d_lanes(t.rotors(), batch, inv8_lanes)
+            }
+            BatchTransform::Cordic(t) => {
+                separable_2d_lanes(t.rotors(), batch, inv8_lanes)
+            }
+            BatchTransform::Naive(t) => {
+                for l in 0..LANES {
+                    let mut blk = batch.extract_lane(l);
+                    t.inverse(&mut blk);
+                    batch.insert_lane(l, &blk);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scratch arena
+// ---------------------------------------------------------------------------
+
+/// Per-call working set of the batch engine (~5 KiB): two lane-major
+/// batches, a quantized batch and the scalar-tail buffers. Held in a
+/// [`ScratchPool`] so repeated compress/decode calls (and the coordinator
+/// worker across jobs) never re-allocate it.
+pub struct BlockScratch {
+    coef: BlockBatch8,
+    recon: BlockBatch8,
+    qc: QBatch8,
+    block: [f32; 64],
+    qblock: [i16; 64],
+}
+
+impl BlockScratch {
+    pub fn new() -> BlockScratch {
+        BlockScratch {
+            coef: BlockBatch8::zeroed(),
+            recon: BlockBatch8::zeroed(),
+            qc: QBatch8::zeroed(),
+            block: [0.0; 64],
+            qblock: [0; 64],
+        }
+    }
+}
+
+impl Default for BlockScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A small arena of [`BlockScratch`] buffers. Serial callers check out
+/// one buffer per image; the parallel lane's band workers each check out
+/// their own, so the pool grows to the high-water worker count and is
+/// reused for every subsequent call.
+#[derive(Default)]
+pub struct ScratchPool {
+    pool: Mutex<Vec<Box<BlockScratch>>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> ScratchPool {
+        ScratchPool::default()
+    }
+
+    /// Run `f` with a pooled scratch buffer, returning it afterwards.
+    pub fn with<T>(&self, f: impl FnOnce(&mut BlockScratch) -> T) -> T {
+        let mut s = self
+            .pool
+            .lock()
+            .expect("scratch pool poisoned")
+            .pop()
+            .unwrap_or_default();
+        let out = f(&mut s);
+        self.pool.lock().expect("scratch pool poisoned").push(s);
+        out
+    }
+
+    /// Buffers currently parked in the pool (for tests).
+    pub fn parked(&self) -> usize {
+        self.pool.lock().expect("scratch pool poisoned").len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The engine
+// ---------------------------------------------------------------------------
+
+/// The batched pipeline core shared by both CPU lanes: walks each block
+/// row in batches of [`LANES`] (scalar tail for `grid_width % 8`
+/// remainders), quantizing with one table and decoding with the exact
+/// matrix IDCT — the same stages, in the same arithmetic order, as the
+/// scalar pipelines it replaced.
+pub struct BatchEngine {
+    transform: BatchTransform,
+    decoder: MatrixDct,
+    qtable: [f32; 64],
+    scratch: ScratchPool,
+}
+
+impl BatchEngine {
+    pub fn new(variant: Variant, qtable: [f32; 64]) -> BatchEngine {
+        BatchEngine {
+            transform: BatchTransform::new(variant),
+            decoder: MatrixDct::new(),
+            qtable,
+            scratch: ScratchPool::new(),
+        }
+    }
+
+    pub fn transform_name(&self) -> &'static str {
+        self.transform.name()
+    }
+
+    pub fn qtable(&self) -> &[f32; 64] {
+        &self.qtable
+    }
+
+    /// Run `f` with a scratch buffer from this engine's arena.
+    pub fn with_scratch<T>(
+        &self,
+        f: impl FnOnce(&mut BlockScratch) -> T,
+    ) -> T {
+        self.scratch.with(f)
+    }
+
+    /// Forward-transform + quantize one block row: read blocks
+    /// `(0.., src_by)` of the 8-aligned `padded` image, write quantized
+    /// coefficients into block row `dst_by` of the planar `qcoef` buffer
+    /// and, when `recon` is given, the decoded pixels into block row
+    /// `recon.1` of `recon.0` (dequantize + exact matrix IDCT).
+    pub fn forward_quant_row(
+        &self,
+        s: &mut BlockScratch,
+        padded: &GrayImage,
+        src_by: usize,
+        qcoef: &mut [f32],
+        dst_by: usize,
+        mut recon: Option<(&mut GrayImage, usize)>,
+    ) {
+        let w = padded.width;
+        debug_assert!(w % BLOCK == 0);
+        let gw = w / BLOCK;
+        let mut bx = 0;
+        while bx + LANES <= gw {
+            gather(&mut s.coef, padded, bx, src_by, LANES);
+            self.transform.forward_batch(&mut s.coef);
+            quantize_batch(&s.coef, &self.qtable, &mut s.qc);
+            scatter_coef(&s.qc, qcoef, w, bx, dst_by, LANES);
+            if let Some((img, rby)) = recon.as_mut() {
+                dequantize_batch(&s.qc, &self.qtable, &mut s.recon);
+                matrix_inverse_lanes(self.decoder.coeffs(), &mut s.recon);
+                scatter_blocks(&s.recon, img, bx, *rby, LANES);
+            }
+            bx += LANES;
+        }
+        // scalar tail: the exact seed-path per-block sequence
+        while bx < gw {
+            extract_block(padded, bx, src_by, &mut s.block);
+            self.transform.forward_scalar(&mut s.block);
+            quantize_block(&s.block, &self.qtable, &mut s.qblock);
+            store_coef_planar(qcoef, w, bx, dst_by, &s.qblock);
+            if let Some((img, rby)) = recon.as_mut() {
+                dequantize_block(&s.qblock, &self.qtable, &mut s.block);
+                self.decoder.inverse(&mut s.block);
+                store_block(img, bx, *rby, &s.block);
+            }
+            bx += 1;
+        }
+    }
+
+    /// Decode one block row of a planar coefficient buffer (dequantize +
+    /// exact matrix IDCT) into block row `dst_by` of `img`.
+    pub fn decode_row(
+        &self,
+        s: &mut BlockScratch,
+        qcoef: &[f32],
+        width: usize,
+        src_by: usize,
+        img: &mut GrayImage,
+        dst_by: usize,
+    ) {
+        debug_assert!(width % BLOCK == 0);
+        let gw = width / BLOCK;
+        let mut bx = 0;
+        while bx + LANES <= gw {
+            gather_coef(qcoef, width, bx, src_by, LANES, &mut s.qc);
+            dequantize_batch(&s.qc, &self.qtable, &mut s.recon);
+            matrix_inverse_lanes(self.decoder.coeffs(), &mut s.recon);
+            scatter_blocks(&s.recon, img, bx, dst_by, LANES);
+            bx += LANES;
+        }
+        while bx < gw {
+            load_coef_planar(qcoef, width, bx, src_by, &mut s.qblock);
+            dequantize_block(&s.qblock, &self.qtable, &mut s.block);
+            self.decoder.inverse(&mut s.block);
+            store_block(img, bx, dst_by, &s.block);
+            bx += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::zigzag;
+    use crate::dct::quant::effective_qtable;
+    use crate::image::synthetic;
+    use crate::util::prng::Rng;
+
+    fn rand_batch(seed: u64) -> BlockBatch8 {
+        let mut rng = Rng::new(seed);
+        let mut b = BlockBatch8::zeroed();
+        for e in b.data.iter_mut() {
+            for v in e.0.iter_mut() {
+                *v = rng.range_f64(-128.0, 128.0) as f32;
+            }
+        }
+        b
+    }
+
+    #[test]
+    fn lane_extract_insert_roundtrip() {
+        let b = rand_batch(1);
+        let mut c = BlockBatch8::zeroed();
+        for l in 0..LANES {
+            let blk = b.extract_lane(l);
+            c.insert_lane(l, &blk);
+        }
+        assert_eq!(b, c);
+    }
+
+    #[test]
+    fn forward_batch_matches_scalar_per_lane() {
+        for variant in [
+            Variant::Dct,
+            Variant::Loeffler,
+            Variant::Cordic,
+            Variant::Naive,
+        ] {
+            let bt = BatchTransform::new(variant);
+            let scalar = variant.transform();
+            let mut batch = rand_batch(7);
+            let blocks: Vec<[f32; 64]> =
+                (0..LANES).map(|l| batch.extract_lane(l)).collect();
+            bt.forward_batch(&mut batch);
+            for (l, blk) in blocks.iter().enumerate() {
+                let mut want = *blk;
+                scalar.forward(&mut want);
+                let got = batch.extract_lane(l);
+                assert_eq!(
+                    got[..],
+                    want[..],
+                    "{} lane {l} diverged",
+                    bt.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_batch_matches_scalar_per_lane() {
+        for variant in [
+            Variant::Dct,
+            Variant::Loeffler,
+            Variant::Cordic,
+            Variant::Naive,
+        ] {
+            let bt = BatchTransform::new(variant);
+            let scalar = variant.transform();
+            let mut batch = rand_batch(11);
+            let blocks: Vec<[f32; 64]> =
+                (0..LANES).map(|l| batch.extract_lane(l)).collect();
+            bt.inverse_batch(&mut batch);
+            for (l, blk) in blocks.iter().enumerate() {
+                let mut want = *blk;
+                scalar.inverse(&mut want);
+                let got = batch.extract_lane(l);
+                assert_eq!(got[..], want[..], "{} lane {l}", bt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_batch_matches_scalar() {
+        let q = effective_qtable(35);
+        let batch = rand_batch(3);
+        let mut qb = QBatch8::zeroed();
+        quantize_batch(&batch, &q, &mut qb);
+        let mut deq = BlockBatch8::zeroed();
+        dequantize_batch(&qb, &q, &mut deq);
+        for l in 0..LANES {
+            let blk = batch.extract_lane(l);
+            let mut want = [0i16; 64];
+            quantize_block(&blk, &q, &mut want);
+            for i in 0..64 {
+                assert_eq!(qb.data[i][l], want[i], "lane {l} coef {i}");
+            }
+            let mut wantd = [0.0f32; 64];
+            dequantize_block(&want, &q, &mut wantd);
+            assert_eq!(deq.extract_lane(l)[..], wantd[..]);
+        }
+    }
+
+    #[test]
+    fn fused_zigzag_matches_quantize_then_scan() {
+        let q = effective_qtable(50);
+        let batch = rand_batch(4);
+        let mut fused = QBatch8::zeroed();
+        quantize_zigzag_batch(&batch, &q, &mut fused);
+        for l in 0..LANES {
+            let blk = batch.extract_lane(l);
+            let mut qc = [0i16; 64];
+            quantize_block(&blk, &q, &mut qc);
+            let z = zigzag::scan(&qc);
+            for k in 0..64 {
+                assert_eq!(fused.data[k][l], z[k], "lane {l} scan {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_matches_extract_block_and_zeroes_tail() {
+        let img = synthetic::lena_like(48, 16, 5);
+        let mut batch = rand_batch(9); // dirty start: gather must overwrite
+        gather(&mut batch, &img, 0, 1, 3);
+        let mut want = [0.0f32; 64];
+        for l in 0..3 {
+            extract_block(&img, l, 1, &mut want);
+            assert_eq!(batch.extract_lane(l)[..], want[..]);
+        }
+        for l in 3..LANES {
+            assert!(batch.extract_lane(l).iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn scatter_blocks_matches_store_block() {
+        let img = synthetic::lena_like(64, 8, 6);
+        let mut batch = BlockBatch8::zeroed();
+        gather(&mut batch, &img, 0, 0, LANES);
+        let mut via_batch = GrayImage::new(64, 8);
+        scatter_blocks(&batch, &mut via_batch, 0, 0, LANES);
+        let mut via_scalar = GrayImage::new(64, 8);
+        let mut blk = [0.0f32; 64];
+        for bx in 0..LANES {
+            extract_block(&img, bx, 0, &mut blk);
+            store_block(&mut via_scalar, bx, 0, &blk);
+        }
+        assert_eq!(via_batch, via_scalar);
+        assert_eq!(via_batch, img);
+    }
+
+    #[test]
+    fn coef_gather_scatter_roundtrip_with_tail() {
+        let width = 40; // 5 blocks: one tail-sized batch
+        let mut rng = Rng::new(12);
+        let mut qb = QBatch8::zeroed();
+        for e in qb.data.iter_mut() {
+            for v in e.iter_mut().take(5) {
+                *v = rng.range_i64(-512, 512) as i16;
+            }
+        }
+        let mut buf = vec![0.0f32; width * 8];
+        scatter_coef(&qb, &mut buf, width, 0, 0, 5);
+        let mut back = QBatch8::zeroed();
+        gather_coef(&buf, width, 0, 0, 5, &mut back);
+        assert_eq!(qb, back);
+    }
+
+    #[test]
+    fn scratch_pool_reuses_buffers() {
+        let pool = ScratchPool::new();
+        pool.with(|s| s.block[0] = 1.0);
+        assert_eq!(pool.parked(), 1);
+        pool.with(|s| assert_eq!(s.block[0], 1.0));
+        assert_eq!(pool.parked(), 1);
+    }
+
+    #[test]
+    fn engine_row_matches_seed_scalar_sequence() {
+        let img = synthetic::cablecar_like(72, 8, 8); // 9 blocks: tail of 1
+        let q = effective_qtable(50);
+        let engine = BatchEngine::new(Variant::Cordic, q);
+        let mut qcoef = vec![0.0f32; 72 * 8];
+        let mut recon = GrayImage::new(72, 8);
+        engine.with_scratch(|s| {
+            engine.forward_quant_row(
+                s,
+                &img,
+                0,
+                &mut qcoef,
+                0,
+                Some((&mut recon, 0)),
+            );
+        });
+        // seed-path reference
+        let t = Variant::Cordic.transform();
+        let dec = MatrixDct::new();
+        let mut want_q = vec![0.0f32; 72 * 8];
+        let mut want_r = GrayImage::new(72, 8);
+        let mut blk = [0.0f32; 64];
+        let mut qc = [0i16; 64];
+        for bx in 0..9 {
+            extract_block(&img, bx, 0, &mut blk);
+            t.forward(&mut blk);
+            quantize_block(&blk, &q, &mut qc);
+            store_coef_planar(&mut want_q, 72, bx, 0, &qc);
+            dequantize_block(&qc, &q, &mut blk);
+            dec.inverse(&mut blk);
+            store_block(&mut want_r, bx, 0, &blk);
+        }
+        assert_eq!(qcoef, want_q);
+        assert_eq!(recon, want_r);
+        // decode side reproduces the same reconstruction
+        let mut decoded = GrayImage::new(72, 8);
+        engine.with_scratch(|s| {
+            engine.decode_row(s, &qcoef, 72, 0, &mut decoded, 0);
+        });
+        assert_eq!(decoded, want_r);
+    }
+}

@@ -11,6 +11,7 @@ pub const BLOCK: usize = 8;
 pub const LEVEL_SHIFT: f32 = 128.0;
 
 /// Round up to the next multiple of 8.
+#[inline]
 pub fn align8(n: usize) -> usize {
     n.div_ceil(BLOCK) * BLOCK
 }
@@ -27,6 +28,7 @@ pub fn pad_to_blocks(img: &GrayImage) -> GrayImage {
 }
 
 /// Block grid dimensions of an aligned image.
+#[inline]
 pub fn grid_dims(width: usize, height: usize) -> (usize, usize) {
     debug_assert!(width % BLOCK == 0 && height % BLOCK == 0);
     (width / BLOCK, height / BLOCK)
@@ -34,6 +36,7 @@ pub fn grid_dims(width: usize, height: usize) -> (usize, usize) {
 
 /// Extract block (bx, by) of an aligned image into `out`, applying the
 /// -128 level shift.
+#[inline]
 pub fn extract_block(
     img: &GrayImage,
     bx: usize,
@@ -50,6 +53,7 @@ pub fn extract_block(
 }
 
 /// Write a reconstructed block back (un-shift + clamp to u8).
+#[inline]
 pub fn store_block(img: &mut GrayImage, bx: usize, by: usize, block: &[f32; 64]) {
     let w = img.width;
     for r in 0..BLOCK {
@@ -64,6 +68,7 @@ pub fn store_block(img: &mut GrayImage, bx: usize, by: usize, block: &[f32; 64])
 
 /// Copy a quantized-coefficient block into the planar (image-layout)
 /// coefficient buffer used by the PJRT interchange.
+#[inline]
 pub fn store_coef_planar(
     buf: &mut [f32],
     width: usize,
@@ -81,6 +86,7 @@ pub fn store_coef_planar(
 
 /// Gather a block from a planar f32 coefficient buffer (the PJRT output
 /// layout) into block order as i16.
+#[inline]
 pub fn load_coef_planar(
     buf: &[f32],
     width: usize,

@@ -12,11 +12,13 @@
 //! ```
 //!
 //! Every plane runs the exact serial or block-parallel grayscale code
-//! path, so the luma plane of a color job is bit-identical to a grayscale
-//! job on the same plane (asserted by `tests/color_parity.rs`) and all
-//! four transform variants work unchanged. The plane decomposition is
-//! also the planar-batch shape the future GPU lane consumes (1 plane for
-//! gray, 3 for color).
+//! path — and therefore the 8-wide batched block engine
+//! ([`dct::batch`](super::batch)) those lanes are built on — so the luma
+//! plane of a color job is bit-identical to a grayscale job on the same
+//! plane (asserted by `tests/color_parity.rs` and the color half of
+//! `tests/batch_parity.rs`) and all four transform variants work
+//! unchanged. The plane decomposition is also the planar-batch shape the
+//! future GPU lane consumes (1 plane for gray, 3 for color).
 
 use crate::image::color::ColorImage;
 use crate::image::ycbcr::{self, Subsampling};

@@ -55,6 +55,16 @@ pub fn fxp(v: f32, frac_bits: u32) -> f32 {
     ((v * s + MAGIC) - MAGIC) / s
 }
 
+/// [`fxp`] applied elementwise to an 8-lane vector — the grid step of the
+/// batched block engine. Pure adds/muls, so the autovectorizer maps it to
+/// vector instructions; per lane it is exactly the scalar `fxp`.
+#[inline]
+pub fn fxp8(v: &mut [f32; 8], frac_bits: u32) {
+    for x in v.iter_mut() {
+        *x = fxp(*x, frac_bits);
+    }
+}
+
 /// One fixed-point CORDIC rotator with gain compensation folded in, in the
 /// flow graph's clockwise convention:
 ///
@@ -109,6 +119,58 @@ impl Rotator {
             y = fxp(yn, fb);
         }
         (fxp(x * self.comp, fb), fxp(y * self.comp, fb))
+    }
+
+    /// Lane-wide forward rotation: [`Rotator::rotate_cw`] applied to
+    /// eight independent (x, y) pairs at once, micro-rotation-outer /
+    /// lane-inner so every step is an 8-wide add/mul the compiler can
+    /// vectorize. Each lane performs the exact scalar op sequence.
+    #[inline]
+    pub fn rotate_cw8(&self, x: &mut [f32; 8], y: &mut [f32; 8]) {
+        let fb = self.frac_bits;
+        fxp8(x, fb);
+        fxp8(y, fb);
+        for (i, &sigma) in self.plan.sigmas.iter().enumerate() {
+            let shift = 2.0f32.powi(-(i as i32));
+            let s = sigma as f32;
+            for l in 0..8 {
+                let xn = x[l] + s * y[l] * shift;
+                let yn = y[l] - s * x[l] * shift;
+                x[l] = xn;
+                y[l] = yn;
+            }
+            fxp8(x, fb);
+            fxp8(y, fb);
+        }
+        for l in 0..8 {
+            x[l] = fxp(x[l] * self.comp, fb);
+            y[l] = fxp(y[l] * self.comp, fb);
+        }
+    }
+
+    /// Lane-wide inverse rotation ([`Rotator::rotate_ccw`] across eight
+    /// lanes, same layout as [`Rotator::rotate_cw8`]).
+    #[inline]
+    pub fn rotate_ccw8(&self, x: &mut [f32; 8], y: &mut [f32; 8]) {
+        let fb = self.frac_bits;
+        fxp8(x, fb);
+        fxp8(y, fb);
+        for (i, &sigma) in self.plan.sigmas.iter().enumerate() {
+            let shift = 2.0f32.powi(-(i as i32));
+            let s = sigma as f32;
+            for l in 0..8 {
+                let xn = x[l] - s * y[l] * shift;
+                let yn = y[l] + s * x[l] * shift;
+                x[l] = xn;
+                y[l] = yn;
+            }
+            fxp8(x, fb);
+            fxp8(y, fb);
+        }
+        for l in 0..8 {
+            x[l] = fxp(x[l] * self.comp_inv, fb);
+            y[l] = fxp(y[l] * self.comp_inv, fb);
+        }
     }
 
     /// Inverse (counterclockwise) fixed-point rotation.
@@ -200,6 +262,44 @@ mod tests {
         let (gx, gy) = r.rotate_cw(0.5, -0.25);
         assert!((gx - 1.0).abs() < 0.1, "{gx}");
         assert!((gy + 0.5).abs() < 0.1, "{gy}");
+    }
+
+    #[test]
+    fn lane_wide_rotation_matches_scalar_bitwise() {
+        for (theta, scale) in
+            [(A1, 1.0), (A3, 1.0), (A6, std::f64::consts::SQRT_2)]
+        {
+            let r = Rotator::new(theta, scale, 3, 10);
+            let mut x: [f32; 8] =
+                std::array::from_fn(|l| 0.11 * l as f32 - 0.4);
+            let mut y: [f32; 8] =
+                std::array::from_fn(|l| -0.07 * l as f32 + 0.3);
+            let (sx, sy) = (x, y);
+            r.rotate_cw8(&mut x, &mut y);
+            for l in 0..8 {
+                let (ex, ey) = r.rotate_cw(sx[l], sy[l]);
+                assert_eq!((x[l], y[l]), (ex, ey), "cw lane {l}");
+            }
+            let (sx, sy) = (x, y);
+            let mut bx = x;
+            let mut by = y;
+            r.rotate_ccw8(&mut bx, &mut by);
+            for l in 0..8 {
+                let (ex, ey) = r.rotate_ccw(sx[l], sy[l]);
+                assert_eq!((bx[l], by[l]), (ex, ey), "ccw lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn fxp8_matches_fxp() {
+        let mut v: [f32; 8] =
+            std::array::from_fn(|l| 0.123 * l as f32 - 0.345);
+        let orig = v;
+        fxp8(&mut v, 10);
+        for l in 0..8 {
+            assert_eq!(v[l], fxp(orig[l], 10));
+        }
     }
 
     #[test]

@@ -24,6 +24,20 @@ pub struct CordicRotors {
 }
 
 impl CordicRotors {
+    /// Accessors for the lane-wide batch kernels (`dct::batch`).
+    pub(crate) fn ra(&self) -> &Rotator {
+        &self.ra
+    }
+    pub(crate) fn rb(&self) -> &Rotator {
+        &self.rb
+    }
+    pub(crate) fn re(&self) -> &Rotator {
+        &self.re
+    }
+    pub(crate) fn frac_bits(&self) -> u32 {
+        self.frac_bits
+    }
+
     pub fn new(iters: usize, frac_bits: u32) -> Self {
         CordicRotors {
             ra: Rotator::new(ANGLE_ODD_A, 1.0, iters, frac_bits),
@@ -75,6 +89,11 @@ impl CordicLoefflerDct {
             rotors: CordicRotors::new(iters, frac_bits),
             iters,
         }
+    }
+
+    /// The CORDIC rotators, for the lane-wide batch kernels.
+    pub(crate) fn rotors(&self) -> &CordicRotors {
+        &self.rotors
     }
 }
 

@@ -6,8 +6,8 @@
 use super::Transform8x8;
 
 pub const SQRT2: f32 = std::f32::consts::SQRT_2;
-const INV_SQRT8: f32 = 0.353_553_39; // 1/sqrt(8)
-const SQRT8: f32 = 2.828_427_1;
+pub(crate) const INV_SQRT8: f32 = 0.353_553_39; // 1/sqrt(8)
+pub(crate) const SQRT8: f32 = 2.828_427_1;
 
 /// Rotator angles of the graph.
 pub const ANGLE_ODD_A: f64 = 3.0 * std::f64::consts::PI / 16.0;
@@ -221,6 +221,11 @@ impl LoefflerDct {
         LoefflerDct {
             rotors: ExactRotors::new(),
         }
+    }
+
+    /// The exact rotators, for the lane-wide batch kernels.
+    pub(crate) fn rotors(&self) -> &ExactRotors {
+        &self.rotors
     }
 }
 

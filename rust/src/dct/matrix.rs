@@ -6,11 +6,25 @@ use super::{dct_matrix, Transform8x8};
 
 pub struct MatrixDct {
     d: [[f32; 8]; 8],
+    /// Transpose of `d`, so the row pass reads contiguous rows.
+    dt: [[f32; 8]; 8],
 }
 
 impl MatrixDct {
     pub fn new() -> Self {
-        MatrixDct { d: dct_matrix() }
+        let d = dct_matrix();
+        let mut dt = [[0.0f32; 8]; 8];
+        for k in 0..8 {
+            for n in 0..8 {
+                dt[n][k] = d[k][n];
+            }
+        }
+        MatrixDct { d, dt }
+    }
+
+    /// The orthonormal DCT matrix, for the lane-wide batch kernels.
+    pub(crate) fn coeffs(&self) -> &[[f32; 8]; 8] {
+        &self.d
     }
 }
 
@@ -26,52 +40,67 @@ impl Transform8x8 for MatrixDct {
     }
 
     /// B <- D B D^T, computed as two separable passes.
+    ///
+    /// Row-major unrolled form: each pass accumulates whole 8-wide rows
+    /// (`acc[j] += d * row[j]`) so the autovectorizer maps the inner loop
+    /// onto vector adds/muls. The per-element accumulation order is
+    /// unchanged from the textbook triple loop (ascending `n`/`j`), so
+    /// the output stays bit-identical.
     fn forward(&self, block: &mut [f32; 64]) {
         let d = &self.d;
+        let dt = &self.dt;
         let mut tmp = [0.0f32; 64];
-        // columns: tmp = D * B
+        // columns: tmp = D * B — row k of tmp accumulates rows of B
         for k in 0..8 {
-            for j in 0..8 {
-                let mut acc = 0.0f32;
-                for n in 0..8 {
-                    acc += d[k][n] * block[n * 8 + j];
-                }
-                tmp[k * 8 + j] = acc;
-            }
-        }
-        // rows: out = tmp * D^T
-        for k in 0..8 {
-            for l in 0..8 {
-                let mut acc = 0.0f32;
+            let mut acc = [0.0f32; 8];
+            for n in 0..8 {
+                let dkn = d[k][n];
+                let row = &block[n * 8..n * 8 + 8];
                 for j in 0..8 {
-                    acc += tmp[k * 8 + j] * d[l][j];
+                    acc[j] += dkn * row[j];
                 }
-                block[k * 8 + l] = acc;
             }
+            tmp[k * 8..k * 8 + 8].copy_from_slice(&acc);
+        }
+        // rows: out = tmp * D^T — out row k accumulates rows of D^T
+        for k in 0..8 {
+            let mut acc = [0.0f32; 8];
+            for j in 0..8 {
+                let tkj = tmp[k * 8 + j];
+                let row = &dt[j];
+                for l in 0..8 {
+                    acc[l] += tkj * row[l];
+                }
+            }
+            block[k * 8..k * 8 + 8].copy_from_slice(&acc);
         }
     }
 
-    /// B <- D^T B D.
+    /// B <- D^T B D (same row-major unrolled form as `forward`).
     fn inverse(&self, block: &mut [f32; 64]) {
         let d = &self.d;
         let mut tmp = [0.0f32; 64];
         for i in 0..8 {
-            for j in 0..8 {
-                let mut acc = 0.0f32;
-                for k in 0..8 {
-                    acc += d[k][i] * block[k * 8 + j];
+            let mut acc = [0.0f32; 8];
+            for k in 0..8 {
+                let dki = d[k][i];
+                let row = &block[k * 8..k * 8 + 8];
+                for j in 0..8 {
+                    acc[j] += dki * row[j];
                 }
-                tmp[i * 8 + j] = acc;
             }
+            tmp[i * 8..i * 8 + 8].copy_from_slice(&acc);
         }
         for i in 0..8 {
-            for j in 0..8 {
-                let mut acc = 0.0f32;
-                for l in 0..8 {
-                    acc += tmp[i * 8 + l] * d[l][j];
+            let mut acc = [0.0f32; 8];
+            for l in 0..8 {
+                let til = tmp[i * 8 + l];
+                let row = &d[l];
+                for j in 0..8 {
+                    acc[j] += til * row[j];
                 }
-                block[i * 8 + j] = acc;
             }
+            block[i * 8..i * 8 + 8].copy_from_slice(&acc);
         }
     }
 

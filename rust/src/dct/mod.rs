@@ -17,13 +17,17 @@
 //! threads (bit-identical output — the coordinator's `CpuParallel` lane);
 //! [`color`] orchestrates either lane once per YCbCr plane (luma/chroma
 //! quantization tables, 4:4:4/4:2:2/4:2:0 chroma subsampling) for the
-//! color workload.
+//! color workload. Both CPU lanes execute their block loops on
+//! [`batch`] — the 8-wide lane-major SoA engine (one block per SIMD
+//! lane, bit-identical to the scalar sequence; the CPU mirror of the
+//! GPU's thread-per-block mapping).
 //!
 //! All implementations produce *orthonormally scaled* coefficients so they
 //! are interchangeable in front of [`quant`] and bit-compatible with the
 //! Pallas kernels in `python/compile/kernels/` (same arithmetic, checked
 //! by the cross-lane integration tests).
 
+pub mod batch;
 pub mod blocks;
 pub mod color;
 pub mod cordic;

@@ -7,30 +7,31 @@
 //! blocks) and fans the bands out over scoped worker threads
 //! ([`crate::util::threadpool::parallel_map`], which may borrow the image).
 //!
-//! Bit-exactness: every block runs the exact same code path as the serial
-//! [`CpuPipeline`] — same `extract_block` / `forward` / `quantize` /
-//! `dequantize` / `inverse` / `store_block` calls on the same `f32`
-//! values — and blocks are independent, so `qcoef` and the reconstruction
-//! are bit-identical to the serial lane for every [`Variant`] and quality
-//! (asserted by `tests/parallel_parity.rs`).
+//! Within each band the blocks run on the same 8-wide
+//! [`BatchEngine`](super::batch::BatchEngine) as the serial lane, each
+//! band worker checking a [`BlockScratch`](super::batch::BlockScratch)
+//! buffer out of the shared per-pipeline arena.
+//!
+//! Bit-exactness: every block runs the exact same arithmetic as the
+//! serial [`CpuPipeline`](super::pipeline::CpuPipeline) — the batched
+//! engine is lane-for-lane the
+//! scalar op sequence — and blocks are independent, so `qcoef` and the
+//! reconstruction are bit-identical to the serial lane for every
+//! [`Variant`] and quality (asserted by `tests/parallel_parity.rs` and
+//! `tests/batch_parity.rs`).
 
 use crate::image::GrayImage;
 
-use super::blocks::{
-    self, extract_block, grid_dims, load_coef_planar, pad_to_blocks,
-    store_block, store_coef_planar,
-};
-use super::matrix::MatrixDct;
+use super::batch::BatchEngine;
+use super::blocks::{self, grid_dims, pad_to_blocks};
 use super::pipeline::CpuCompressOutput;
-use super::quant::{dequantize_block, effective_qtable, quantize_block};
-use super::{Transform8x8, Variant};
+use super::quant::effective_qtable;
+use super::Variant;
 use crate::util::threadpool::{parallel_map, ThreadPool};
 
 /// Block-parallel compression pipeline: serial arithmetic, parallel grid.
 pub struct ParallelCpuPipeline {
-    transform: Box<dyn Transform8x8>,
-    decoder: MatrixDct,
-    qtable: [f32; 64],
+    engine: BatchEngine,
     pub variant: Variant,
     pub quality: u8,
     workers: usize,
@@ -66,9 +67,7 @@ impl ParallelCpuPipeline {
             workers
         };
         ParallelCpuPipeline {
-            transform: variant.transform(),
-            decoder: MatrixDct::new(),
-            qtable,
+            engine: BatchEngine::new(variant, qtable),
             variant,
             quality,
             workers,
@@ -80,35 +79,26 @@ impl ParallelCpuPipeline {
     }
 
     pub fn transform_name(&self) -> &'static str {
-        self.transform.name()
+        self.engine.transform_name()
     }
 
     /// One row-band of blocks: forward transform + quantize (+ optionally
-    /// decode) into band-local buffers. Runs on a worker thread.
+    /// decode) into band-local buffers. Runs on a worker thread with a
+    /// scratch buffer from the pipeline's arena.
     fn process_band(
         &self,
         padded: &GrayImage,
         by: usize,
-        gw: usize,
         decode: bool,
     ) -> (Vec<f32>, Option<GrayImage>) {
         let w = padded.width;
         let mut qrow = vec![0.0f32; w * blocks::BLOCK];
         let mut band = decode.then(|| GrayImage::new(w, blocks::BLOCK));
-        let mut block = [0.0f32; 64];
-        let mut qc = [0i16; 64];
-        for bx in 0..gw {
-            extract_block(padded, bx, by, &mut block);
-            self.transform.forward(&mut block);
-            quantize_block(&block, &self.qtable, &mut qc);
-            // band-local planar layout: same helper, block-row 0
-            store_coef_planar(&mut qrow, w, bx, 0, &qc);
-            if let Some(band) = band.as_mut() {
-                dequantize_block(&qc, &self.qtable, &mut block);
-                self.decoder.inverse(&mut block);
-                store_block(band, bx, 0, &block);
-            }
-        }
+        self.engine.with_scratch(|s| {
+            let recon = band.as_mut().map(|img| (img, 0));
+            self.engine
+                .forward_quant_row(s, padded, by, &mut qrow, 0, recon);
+        });
         (qrow, band)
     }
 
@@ -116,9 +106,9 @@ impl ParallelCpuPipeline {
     /// [`CpuPipeline::compress`](super::pipeline::CpuPipeline::compress).
     pub fn compress(&self, img: &GrayImage) -> CpuCompressOutput {
         let padded = pad_to_blocks(img);
-        let (gw, gh) = grid_dims(padded.width, padded.height);
+        let (_, gh) = grid_dims(padded.width, padded.height);
         let bands = parallel_map(gh, self.workers, |by| {
-            self.process_band(&padded, by, gw, true)
+            self.process_band(&padded, by, true)
         });
         let mut qcoef = Vec::with_capacity(padded.pixels());
         let mut pixels = Vec::with_capacity(padded.pixels());
@@ -150,9 +140,9 @@ impl ParallelCpuPipeline {
     /// [`CpuPipeline::analyze`](super::pipeline::CpuPipeline::analyze).
     pub fn analyze(&self, img: &GrayImage) -> (Vec<f32>, usize, usize) {
         let padded = pad_to_blocks(img);
-        let (gw, gh) = grid_dims(padded.width, padded.height);
+        let (_, gh) = grid_dims(padded.width, padded.height);
         let bands = parallel_map(gh, self.workers, |by| {
-            self.process_band(&padded, by, gw, false).0
+            self.process_band(&padded, by, false).0
         });
         let mut qcoef = Vec::with_capacity(padded.pixels());
         for qrow in bands {
@@ -170,17 +160,19 @@ impl ParallelCpuPipeline {
         out_width: usize,
         out_height: usize,
     ) -> GrayImage {
-        let (gw, gh) = grid_dims(padded_width, padded_height);
+        let (_, gh) = grid_dims(padded_width, padded_height);
         let bands = parallel_map(gh, self.workers, |by| {
             let mut band = GrayImage::new(padded_width, blocks::BLOCK);
-            let mut qc = [0i16; 64];
-            let mut block = [0.0f32; 64];
-            for bx in 0..gw {
-                load_coef_planar(qcoef, padded_width, bx, by, &mut qc);
-                dequantize_block(&qc, &self.qtable, &mut block);
-                self.decoder.inverse(&mut block);
-                store_block(&mut band, bx, 0, &block);
-            }
+            self.engine.with_scratch(|s| {
+                self.engine.decode_row(
+                    s,
+                    qcoef,
+                    padded_width,
+                    by,
+                    &mut band,
+                    0,
+                );
+            });
             band.data
         });
         let mut pixels = Vec::with_capacity(padded_width * padded_height);

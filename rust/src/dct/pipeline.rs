@@ -1,7 +1,13 @@
 //! The serial CPU compression pipeline — the paper's "CPU (serial code)"
 //! lane: level shift -> blockwise forward transform -> quantize ->
-//! dequantize -> standard IDCT -> unshift/clamp, one block at a time, one
-//! thread.
+//! dequantize -> standard IDCT -> unshift/clamp, one thread.
+//!
+//! Since the batched-engine rework the block loop runs on
+//! [`BatchEngine`](super::batch::BatchEngine): eight blocks per
+//! lane-major SoA batch (scalar tail for non-multiple-of-8 grid widths),
+//! with scratch buffers reused from a per-pipeline arena. The arithmetic
+//! per block is unchanged — outputs are bit-identical to the historical
+//! one-block-at-a-time loop (`tests/batch_parity.rs`).
 //!
 //! The decoder side is always the exact matrix IDCT (a standards-compliant
 //! decoder), matching the Pallas fused kernel, so approximate encoders
@@ -9,13 +15,10 @@
 
 use crate::image::GrayImage;
 
-use super::blocks::{
-    self, extract_block, grid_dims, pad_to_blocks, store_block,
-    store_coef_planar,
-};
-use super::matrix::MatrixDct;
-use super::quant::{dequantize_block, effective_qtable, quantize_block};
-use super::{Transform8x8, Variant};
+use super::batch::BatchEngine;
+use super::blocks::{grid_dims, pad_to_blocks};
+use super::quant::effective_qtable;
+use super::Variant;
 
 /// Output of a CPU-lane compression run.
 pub struct CpuCompressOutput {
@@ -31,9 +34,7 @@ pub struct CpuCompressOutput {
 
 /// Serial compression pipeline with a pluggable forward transform.
 pub struct CpuPipeline {
-    transform: Box<dyn Transform8x8>,
-    decoder: MatrixDct,
-    qtable: [f32; 64],
+    engine: BatchEngine,
     pub variant: Variant,
     pub quality: u8,
 }
@@ -51,43 +52,34 @@ impl CpuPipeline {
         qtable: [f32; 64],
     ) -> Self {
         CpuPipeline {
-            transform: variant.transform(),
-            decoder: MatrixDct::new(),
-            qtable,
+            engine: BatchEngine::new(variant, qtable),
             variant,
             quality,
         }
     }
 
     pub fn transform_name(&self) -> &'static str {
-        self.transform.name()
+        self.engine.transform_name()
     }
 
     /// Run the full pipeline over an image (padding internally if needed).
     pub fn compress(&self, img: &GrayImage) -> CpuCompressOutput {
         let padded = pad_to_blocks(img);
-        let (gw, gh) = grid_dims(padded.width, padded.height);
+        let (_, gh) = grid_dims(padded.width, padded.height);
         let mut recon = GrayImage::new(padded.width, padded.height);
         let mut qcoef = vec![0.0f32; padded.pixels()];
-        let mut block = [0.0f32; 64];
-        let mut qc = [0i16; 64];
-        for by in 0..gh {
-            for bx in 0..gw {
-                extract_block(&padded, bx, by, &mut block);
-                self.transform.forward(&mut block);
-                quantize_block(&block, &self.qtable, &mut qc);
-                store_coef_planar(
-                    &mut qcoef,
-                    padded.width,
-                    bx,
+        self.engine.with_scratch(|s| {
+            for by in 0..gh {
+                self.engine.forward_quant_row(
+                    s,
+                    &padded,
                     by,
-                    &qc,
+                    &mut qcoef,
+                    by,
+                    Some((&mut recon, by)),
                 );
-                dequantize_block(&qc, &self.qtable, &mut block);
-                self.decoder.inverse(&mut block);
-                store_block(&mut recon, bx, by, &block);
             }
-        }
+        });
         let recon = if (padded.width, padded.height)
             != (img.width, img.height)
         {
@@ -107,18 +99,15 @@ impl CpuPipeline {
     /// needs); returns planar coefficients at padded size.
     pub fn analyze(&self, img: &GrayImage) -> (Vec<f32>, usize, usize) {
         let padded = pad_to_blocks(img);
-        let (gw, gh) = grid_dims(padded.width, padded.height);
+        let (_, gh) = grid_dims(padded.width, padded.height);
         let mut qcoef = vec![0.0f32; padded.pixels()];
-        let mut block = [0.0f32; 64];
-        let mut qc = [0i16; 64];
-        for by in 0..gh {
-            for bx in 0..gw {
-                extract_block(&padded, bx, by, &mut block);
-                self.transform.forward(&mut block);
-                quantize_block(&block, &self.qtable, &mut qc);
-                store_coef_planar(&mut qcoef, padded.width, bx, by, &qc);
+        self.engine.with_scratch(|s| {
+            for by in 0..gh {
+                self.engine.forward_quant_row(
+                    s, &padded, by, &mut qcoef, by, None,
+                );
             }
-        }
+        });
         (qcoef, padded.width, padded.height)
     }
 
@@ -132,24 +121,20 @@ impl CpuPipeline {
         out_width: usize,
         out_height: usize,
     ) -> GrayImage {
-        let (gw, gh) = grid_dims(padded_width, padded_height);
+        let (_, gh) = grid_dims(padded_width, padded_height);
         let mut recon = GrayImage::new(padded_width, padded_height);
-        let mut qc = [0i16; 64];
-        let mut block = [0.0f32; 64];
-        for by in 0..gh {
-            for bx in 0..gw {
-                blocks::load_coef_planar(
+        self.engine.with_scratch(|s| {
+            for by in 0..gh {
+                self.engine.decode_row(
+                    s,
                     qcoef,
                     padded_width,
-                    bx,
                     by,
-                    &mut qc,
+                    &mut recon,
+                    by,
                 );
-                dequantize_block(&qc, &self.qtable, &mut block);
-                self.decoder.inverse(&mut block);
-                store_block(&mut recon, bx, by, &block);
             }
-        }
+        });
         if (padded_width, padded_height) != (out_width, out_height) {
             recon.crop(out_width, out_height).expect("crop")
         } else {

@@ -54,7 +54,9 @@
 //! * [`dct`] — the transform substrate: naive / matrix / Loeffler /
 //!   Cordic-based-Loeffler 8x8 DCTs, JPEG quantization (luma + chroma
 //!   tables), block management, the serial + block-parallel CPU pipelines
-//!   and the per-plane color pipeline.
+//!   and the per-plane color pipeline. Both CPU lanes run their block
+//!   loops on [`dct::batch`], the 8-wide lane-major SoA engine
+//!   (bit-identical to the scalar sequence, one block per SIMD lane).
 //! * [`codec`] — a complete entropy codec (zigzag, DC-DPCM + AC-RLE,
 //!   canonical Huffman, bitstream container) turning quantized
 //!   coefficients into a real compressed file format; `CDC1` grayscale

@@ -7,10 +7,17 @@
 use anyhow::{bail, Result};
 
 /// Accumulates bits MSB-first into a byte vector.
+///
+/// Bits collect left-aligned in a 64-bit accumulator and flush as whole
+/// 32-bit big-endian words, so the hot Huffman encode loop touches the
+/// output vector once per ~4 symbols instead of once per byte. The
+/// emitted byte stream is identical to the historical per-byte flush.
 #[derive(Default, Debug)]
 pub struct BitWriter {
     buf: Vec<u8>,
+    /// Pending bits, left-aligned (bit 63 is the next bit to emit).
     acc: u64,
+    /// Number of pending bits in `acc` (always < 32 between calls).
     nbits: u32,
 }
 
@@ -24,11 +31,28 @@ impl BitWriter {
     pub fn put(&mut self, value: u64, n: u32) {
         debug_assert!(n <= 57, "put() supports at most 57 bits");
         debug_assert!(n == 64 || value < (1u64 << n));
-        self.acc = (self.acc << n) | value;
+        if n > 32 {
+            self.put_word((value >> 32) as u32, n - 32);
+            self.put_word(value as u32, 32);
+        } else {
+            self.put_word(value as u32, n);
+        }
+    }
+
+    /// Append up to 32 bits to the accumulator, flushing one whole
+    /// big-endian word when 32+ bits are pending.
+    #[inline]
+    fn put_word(&mut self, value: u32, n: u32) {
+        if n == 0 {
+            return;
+        }
+        self.acc |= (value as u64) << (64 - self.nbits - n);
         self.nbits += n;
-        while self.nbits >= 8 {
-            self.nbits -= 8;
-            self.buf.push((self.acc >> self.nbits) as u8);
+        if self.nbits >= 32 {
+            self.buf
+                .extend_from_slice(&((self.acc >> 32) as u32).to_be_bytes());
+            self.acc <<= 32;
+            self.nbits -= 32;
         }
     }
 
@@ -45,11 +69,12 @@ impl BitWriter {
 
     /// Pad with zero bits to a byte boundary and return the buffer.
     pub fn finish(mut self) -> Vec<u8> {
-        if self.nbits > 0 {
-            let pad = 8 - self.nbits;
-            self.acc <<= pad;
-            self.buf.push(self.acc as u8);
-            self.nbits = 0;
+        let mut acc = self.acc;
+        let mut nbits = self.nbits;
+        while nbits > 0 {
+            self.buf.push((acc >> 56) as u8);
+            acc <<= 8;
+            nbits = nbits.saturating_sub(8);
         }
         self.buf
     }
@@ -104,6 +129,57 @@ impl<'a> BitReader<'a> {
     #[inline]
     pub fn get_bit(&mut self) -> Result<bool> {
         Ok(self.get(1)? == 1)
+    }
+
+    /// Peek the next `n` bits (n <= 32) without consuming them; bits past
+    /// the end of the buffer read as zero. Used by the Huffman decoder's
+    /// first-level lookup table, which must inspect a fixed-width prefix
+    /// even when fewer bits remain (prefix-freeness makes the zero
+    /// padding harmless: only genuinely present bits are ever consumed).
+    #[inline]
+    pub fn peek(&self, n: u32) -> u64 {
+        debug_assert!(n <= 32);
+        let mut out: u64 = 0;
+        let mut need = n;
+        let mut byte = self.byte;
+        let mut bit = self.bit;
+        while need > 0 {
+            let cur = if byte < self.buf.len() {
+                self.buf[byte]
+            } else {
+                0
+            };
+            let avail = 8 - bit;
+            let take = need.min(avail);
+            let shifted =
+                (cur >> (avail - take)) & ((1u16 << take) - 1) as u8;
+            out = (out << take) | shifted as u64;
+            bit += take;
+            if bit == 8 {
+                bit = 0;
+                byte += 1;
+            }
+            need -= take;
+        }
+        out
+    }
+
+    /// Advance past `n` bits that were already inspected via [`peek`]
+    /// (bounds-checked, no re-extraction of the bit values).
+    ///
+    /// [`peek`]: BitReader::peek
+    #[inline]
+    pub fn consume(&mut self, n: u32) -> Result<()> {
+        if self.remaining() < n as usize {
+            bail!(
+                "bitstream exhausted: wanted {n} bits, {} left",
+                self.remaining()
+            );
+        }
+        let total = self.bit + n;
+        self.byte += (total / 8) as usize;
+        self.bit = total % 8;
+        Ok(())
     }
 
     /// Skip to the next byte boundary (used after entropy-coded segments).
@@ -185,6 +261,70 @@ mod tests {
         assert_eq!(r.get(3).unwrap(), 0b101);
         r.align();
         assert_eq!(r.get(8).unwrap(), 0xCD);
+    }
+
+    #[test]
+    fn peek_does_not_consume_and_zero_pads() {
+        let bytes = [0b1011_0110u8, 0b1100_0001];
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.peek(8), 0b1011_0110);
+        assert_eq!(r.peek(8), 0b1011_0110); // still not consumed
+        assert_eq!(r.get(3).unwrap(), 0b101);
+        assert_eq!(r.peek(8), 0b1011_0110);
+        assert_eq!(r.get(13).unwrap(), 0b1_0110_1100_0001);
+        // exhausted: peeks read as zero, get errors
+        assert_eq!(r.peek(8), 0);
+        assert!(r.get(1).is_err());
+    }
+
+    #[test]
+    fn consume_advances_like_get() {
+        let bytes = [0xA5u8, 0x3C, 0x7E];
+        let mut a = BitReader::new(&bytes);
+        let mut b = BitReader::new(&bytes);
+        for n in [3u32, 5, 7, 9] {
+            a.get(n).unwrap();
+            b.consume(n).unwrap();
+            assert_eq!(a.remaining(), b.remaining());
+            assert_eq!(a.peek(8), b.peek(8));
+        }
+        // exhaustion errors exactly like get
+        assert!(b.consume(1).is_err());
+        assert_eq!(b.remaining(), 0);
+    }
+
+    #[test]
+    fn word_flush_matches_per_byte_reference() {
+        // cross-check the word-flushing writer against a simple per-bit
+        // reference over an irregular field mix
+        let mut rng = Rng::new(7);
+        let fields: Vec<(u64, u32)> = (0..500)
+            .map(|_| {
+                let n = rng.range_i64(0, 57) as u32;
+                let v = if n == 0 {
+                    0
+                } else {
+                    rng.next_u64() & ((1u64 << n) - 1)
+                };
+                (v, n)
+            })
+            .collect();
+        let mut w = BitWriter::new();
+        let mut bits: Vec<bool> = Vec::new();
+        for &(v, n) in &fields {
+            w.put(v, n);
+            for i in (0..n).rev() {
+                bits.push((v >> i) & 1 == 1);
+            }
+        }
+        let got = w.finish();
+        let mut want = vec![0u8; bits.len().div_ceil(8)];
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                want[i / 8] |= 1 << (7 - i % 8);
+            }
+        }
+        assert_eq!(got, want);
     }
 
     #[test]

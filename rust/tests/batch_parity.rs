@@ -1,0 +1,308 @@
+//! Batched-engine parity suite: the 8-wide lane-major SoA engine behind
+//! both CPU lanes must be *bit-identical* — `qcoef` and reconstruction —
+//! to the seed one-block-at-a-time scalar path, for every transform
+//! variant, quality, odd/non-multiple-of-8 size, gray and color.
+//!
+//! The reference below is a transliteration of the pre-batch pipeline:
+//! `extract_block -> Box<dyn Transform8x8>::forward -> quantize_block ->
+//! store_coef_planar -> dequantize_block -> MatrixDct::inverse ->
+//! store_block`, one block at a time.
+
+use cordic_dct::dct::batch::{
+    gather, gather_coef, scatter_blocks, scatter_coef, BlockBatch8, QBatch8,
+    LANES,
+};
+use cordic_dct::dct::blocks::{
+    extract_block, grid_dims, pad_to_blocks, store_block, store_coef_planar,
+};
+use cordic_dct::dct::color::ColorPipeline;
+use cordic_dct::dct::matrix::MatrixDct;
+use cordic_dct::dct::parallel::ParallelCpuPipeline;
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::quant::{
+    dequantize_block, effective_qtable, effective_qtable_chroma,
+    quantize_block,
+};
+use cordic_dct::dct::{Transform8x8, Variant};
+use cordic_dct::image::ycbcr::{self, Subsampling};
+use cordic_dct::image::{synthetic, GrayImage};
+use cordic_dct::util::proptest::{check, gen};
+
+const VARIANTS: [Variant; 3] =
+    [Variant::Dct, Variant::Loeffler, Variant::Cordic];
+const QUALITIES: [u8; 3] = [10, 50, 90];
+
+/// Sizes exercising aligned, odd, tiny and tail-heavy block grids
+/// (grid widths 8, 4, 3, 1, 9, 13 — full batches, pure tails, and
+/// full-batch + tail mixes).
+const SIZES: [(usize, usize); 6] =
+    [(64, 64), (30, 21), (17, 9), (8, 8), (72, 16), (100, 24)];
+
+/// Seed-path reference compression: one block at a time through the
+/// virtual-dispatch transform, exactly as the pre-batch pipeline ran.
+fn reference_compress(
+    variant: Variant,
+    qtable: &[f32; 64],
+    img: &GrayImage,
+) -> (Vec<f32>, GrayImage, usize, usize) {
+    let transform = variant.transform();
+    let decoder = MatrixDct::new();
+    let padded = pad_to_blocks(img);
+    let (gw, gh) = grid_dims(padded.width, padded.height);
+    let mut recon = GrayImage::new(padded.width, padded.height);
+    let mut qcoef = vec![0.0f32; padded.pixels()];
+    let mut block = [0.0f32; 64];
+    let mut qc = [0i16; 64];
+    for by in 0..gh {
+        for bx in 0..gw {
+            extract_block(&padded, bx, by, &mut block);
+            transform.forward(&mut block);
+            quantize_block(&block, qtable, &mut qc);
+            store_coef_planar(&mut qcoef, padded.width, bx, by, &qc);
+            dequantize_block(&qc, qtable, &mut block);
+            decoder.inverse(&mut block);
+            store_block(&mut recon, bx, by, &block);
+        }
+    }
+    let recon = if (padded.width, padded.height) != (img.width, img.height)
+    {
+        recon.crop(img.width, img.height).unwrap()
+    } else {
+        recon
+    };
+    (qcoef, recon, padded.width, padded.height)
+}
+
+#[test]
+fn gray_bit_identical_on_both_lanes() {
+    for variant in VARIANTS {
+        for quality in QUALITIES {
+            for (i, &(w, h)) in SIZES.iter().enumerate() {
+                let img = synthetic::lena_like(w, h, i as u64 + 1);
+                let qt = effective_qtable(quality);
+                let (ref_q, ref_r, pw, ph) =
+                    reference_compress(variant, &qt, &img);
+
+                let label = format!(
+                    "{} q{quality} {w}x{h}",
+                    variant.as_str()
+                );
+                let serial =
+                    CpuPipeline::new(variant, quality).compress(&img);
+                assert_eq!(serial.qcoef, ref_q, "serial qcoef {label}");
+                assert_eq!(serial.recon, ref_r, "serial recon {label}");
+                assert_eq!(
+                    (serial.padded_width, serial.padded_height),
+                    (pw, ph)
+                );
+
+                let par = ParallelCpuPipeline::with_workers(
+                    variant, quality, 3,
+                )
+                .compress(&img);
+                assert_eq!(par.qcoef, ref_q, "parallel qcoef {label}");
+                assert_eq!(par.recon, ref_r, "parallel recon {label}");
+            }
+        }
+    }
+}
+
+#[test]
+fn gray_decode_bit_identical_on_both_lanes() {
+    // decode half alone: batched dequantize + lane IDCT vs seed scalar
+    let img = synthetic::cablecar_like(100, 24, 5);
+    for variant in VARIANTS {
+        let qt = effective_qtable(50);
+        let (ref_q, ref_r, pw, ph) = reference_compress(variant, &qt, &img);
+        let serial = CpuPipeline::new(variant, 50).decode_coefficients(
+            &ref_q, pw, ph, 100, 24,
+        );
+        assert_eq!(serial, ref_r, "serial decode {}", variant.as_str());
+        let par = ParallelCpuPipeline::with_workers(variant, 50, 2)
+            .decode_coefficients(&ref_q, pw, ph, 100, 24);
+        assert_eq!(par, ref_r, "parallel decode {}", variant.as_str());
+    }
+}
+
+#[test]
+fn color_bit_identical_on_both_lanes() {
+    for variant in VARIANTS {
+        for quality in QUALITIES {
+            for (w, h) in [(48, 40), (30, 21)] {
+                let img = synthetic::lena_like_rgb(w, h, 9);
+                for (lane, pipe) in [
+                    (
+                        "serial",
+                        ColorPipeline::new(
+                            variant,
+                            quality,
+                            Subsampling::S420,
+                        ),
+                    ),
+                    (
+                        "parallel",
+                        ColorPipeline::parallel(
+                            variant,
+                            quality,
+                            Subsampling::S420,
+                            3,
+                        ),
+                    ),
+                ] {
+                    let label = format!(
+                        "{lane} {} q{quality} {w}x{h}",
+                        variant.as_str()
+                    );
+                    let out = pipe.compress(&img);
+                    // per-plane reference: luma table on Y, chroma on
+                    // Cb/Cr, each through the seed scalar path
+                    let (y, cb, cr) = pipe.split_planes(&img);
+                    let lq = effective_qtable(quality);
+                    let cq = effective_qtable_chroma(quality);
+                    let (qy, ry, _, _) =
+                        reference_compress(variant, &lq, &y);
+                    let (qcb, rcb, _, _) =
+                        reference_compress(variant, &cq, &cb);
+                    let (qcr, rcr, _, _) =
+                        reference_compress(variant, &cq, &cr);
+                    assert_eq!(out.planes[0].qcoef, qy, "Y {label}");
+                    assert_eq!(out.planes[1].qcoef, qcb, "Cb {label}");
+                    assert_eq!(out.planes[2].qcoef, qcr, "Cr {label}");
+                    assert_eq!(out.recon_y, ry, "recon Y {label}");
+                    assert_eq!(out.recon_cb, rcb, "recon Cb {label}");
+                    assert_eq!(out.recon_cr, rcr, "recon Cr {label}");
+                    // and the assembled RGB (upsample + BT.601 back)
+                    let cb_full = ycbcr::upsample(
+                        &rcb,
+                        Subsampling::S420,
+                        w,
+                        h,
+                    );
+                    let cr_full = ycbcr::upsample(
+                        &rcr,
+                        Subsampling::S420,
+                        w,
+                        h,
+                    );
+                    let rgb =
+                        ycbcr::ycbcr_to_rgb(&ry, &cb_full, &cr_full)
+                            .unwrap();
+                    assert_eq!(out.recon, rgb, "recon RGB {label}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn gather_scatter_roundtrip_proptest() {
+    // pixel gather -> scatter is the identity on u8 images, including
+    // tail batches (n < LANES), and never bleeds across lanes
+    check(
+        40,
+        |rng| {
+            (
+                (gen::dim8(rng, 6), gen::dim8(rng, 3)),
+                rng.below(1000) as usize,
+            )
+        },
+        |&((w, h), seed)| {
+            let img = synthetic::lena_like(w, h, seed as u64);
+            let (gw, gh) = grid_dims(w, h);
+            let mut out = GrayImage::new(w, h);
+            let mut batch = BlockBatch8::zeroed();
+            for by in 0..gh {
+                let mut bx = 0;
+                while bx < gw {
+                    let n = LANES.min(gw - bx);
+                    gather(&mut batch, &img, bx, by, n);
+                    scatter_blocks(&batch, &mut out, bx, by, n);
+                    bx += n;
+                }
+            }
+            if out == img {
+                Ok(())
+            } else {
+                Err(format!("pixel roundtrip diverged at {w}x{h}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn coef_gather_scatter_roundtrip_proptest() {
+    // planar coefficient scatter -> gather is the identity on i16
+    // coefficient grids, including tail batches
+    check(
+        40,
+        |rng| {
+            (
+                (gen::dim8(rng, 6), gen::dim8(rng, 3)),
+                rng.below(1 << 31) as usize,
+            )
+        },
+        |&((w, h), seed)| {
+            let (gw, gh) = grid_dims(w, h);
+            let mut rng =
+                cordic_dct::util::prng::Rng::new(seed as u64);
+            let mut qb = QBatch8::zeroed();
+            let mut buf = vec![0.0f32; w * h];
+            let mut want: Vec<Vec<i16>> = Vec::new();
+            for by in 0..gh {
+                let mut bx = 0;
+                while bx < gw {
+                    let n = LANES.min(gw - bx);
+                    for e in qb.data.iter_mut() {
+                        for v in e.iter_mut().take(n) {
+                            *v = rng.range_i64(-1024, 1024) as i16;
+                        }
+                    }
+                    scatter_coef(&qb, &mut buf, w, bx, by, n);
+                    let mut lanes = Vec::with_capacity(n * 64);
+                    for l in 0..n {
+                        for e in qb.data.iter() {
+                            lanes.push(e[l]);
+                        }
+                    }
+                    want.push(lanes);
+                    bx += n;
+                }
+            }
+            // re-gather every batch and compare lane-for-lane
+            let mut got: Vec<Vec<i16>> = Vec::new();
+            for by in 0..gh {
+                let mut bx = 0;
+                while bx < gw {
+                    let n = LANES.min(gw - bx);
+                    gather_coef(&buf, w, bx, by, n, &mut qb);
+                    let mut lanes = Vec::with_capacity(n * 64);
+                    for l in 0..n {
+                        for e in qb.data.iter() {
+                            lanes.push(e[l]);
+                        }
+                    }
+                    got.push(lanes);
+                    bx += n;
+                }
+            }
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("coef roundtrip diverged at {w}x{h}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn naive_variant_also_bit_identical() {
+    // the textbook baseline takes the per-lane scalar fallback inside the
+    // engine; it must still match the seed path exactly
+    let img = synthetic::lena_like(40, 24, 3);
+    let qt = effective_qtable(50);
+    let (ref_q, ref_r, _, _) =
+        reference_compress(Variant::Naive, &qt, &img);
+    let out = CpuPipeline::new(Variant::Naive, 50).compress(&img);
+    assert_eq!(out.qcoef, ref_q);
+    assert_eq!(out.recon, ref_r);
+}
