@@ -33,6 +33,7 @@ fn run_once(workers: usize, batch: usize, n: usize, lane: Lane)
         quality: 50,
         cpu_parallel_workers: 0,
         artifact_dir: Some("artifacts".into()),
+        stub_gpu: false,
     };
     let svc = Service::start(cfg)?;
     let img = synthetic::lena_like(200, 200, 5); // 200x200 has artifacts

@@ -11,7 +11,15 @@
 //! recording weighted + per-plane PSNR and encoded bytes. Luma PSNR must
 //! be mode-invariant (chroma decimation never touches Y).
 //!
+//! Part A also times the GPU lane (the planar-batch executor — PJRT when
+//! artifacts exist, else the stub backend) on the same gray and color
+//! jobs, filling the `gpu_ms` column and adding `gpu_backend` /
+//! `gpu_psnr_weighted` to the color row; on the stub backend the GPU
+//! reconstruction is asserted bit-identical to the serial CPU lane.
+//!
 //! Set CORDIC_DCT_BENCH_QUICK=1 to trim sizes + iterations (CI).
+
+use std::sync::Arc;
 
 use cordic_dct::bench::{bench_config, render_table, rows_to_json,
                         save_results, Row};
@@ -24,6 +32,7 @@ use cordic_dct::image::synthetic;
 use cordic_dct::image::ycbcr::{rgb_to_ycbcr, Subsampling};
 use cordic_dct::metrics;
 use cordic_dct::metrics::color::psnr_color;
+use cordic_dct::runtime::{Executor, Runtime};
 
 /// Container size of already-computed plane coefficients (no second
 /// forward transform — `compress` just produced these planes).
@@ -60,39 +69,83 @@ fn main() -> anyhow::Result<()> {
         ColorPipeline::new(variant, 50, Subsampling::S420);
     let par_color_pipe =
         ColorPipeline::parallel(variant, 50, Subsampling::S420, 0);
+    // GPU lane: the planar-batch executor — PJRT when it loads and its
+    // artifacts cover both bench workloads at this size, else the stub
+    // backend (bit-identical to the CPU lanes)
+    let mut gpu_ex =
+        Executor::new(Arc::new(Runtime::new_or_stub("artifacts", 50)));
+    if !gpu_ex.rt.is_stub()
+        && !(gpu_ex.supports_gray(size, size, variant.as_str())
+            && gpu_ex.supports_color(
+                size,
+                size,
+                variant.as_str(),
+                Subsampling::S420,
+            ))
+    {
+        gpu_ex = Executor::new(Arc::new(Runtime::stub(50)));
+    }
+    let gpu_backend = if gpu_ex.rt.is_stub() { "stub" } else { "pjrt" };
+    let gray_gpu =
+        bench.run(|| gpu_ex.compress(&gray, variant.as_str()).unwrap());
+    let color_gpu = bench.run(|| {
+        gpu_ex
+            .compress_color(&rgb, variant, Subsampling::S420)
+            .unwrap()
+    });
+    let gpu_color_out = gpu_ex
+        .compress_color(&rgb, variant, Subsampling::S420)?;
+    let gpu_color_psnr = psnr_color(&rgb, &gpu_color_out.recon);
     let gray_ser = bench.run(|| ser_gray_pipe.compress(&gray));
     let gray_par = bench.run(|| par_gray_pipe.compress(&gray));
     let color_ser = bench.run(|| ser_color_pipe.compress(&rgb));
     let color_par = bench.run(|| par_color_pipe.compress(&rgb));
+    if gpu_backend == "stub" {
+        // the stub GPU lane must be bit-identical to the serial CPU lane
+        let cpu_out = ser_color_pipe.compress(&rgb);
+        assert_eq!(gpu_color_out.recon, cpu_out.recon);
+        assert_eq!(gpu_color_out.scanned, cpu_out.scanned);
+    }
     println!(
-        "{:<12} {:>12} {:>12}",
-        "workload", "serial ms", "parallel ms"
+        "{:<12} {:>12} {:>12} {:>12}",
+        "workload", "serial ms", "parallel ms", "gpu ms"
     );
     println!(
-        "{:<12} {:>12.2} {:>12.2}",
-        "gray", gray_ser.median_ms, gray_par.median_ms
+        "{:<12} {:>12.2} {:>12.2} {:>12.2}",
+        "gray", gray_ser.median_ms, gray_par.median_ms,
+        gray_gpu.median_ms
     );
     println!(
-        "{:<12} {:>12.2} {:>12.2} ({:.2}x the gray serial cost)",
+        "{:<12} {:>12.2} {:>12.2} {:>12.2} ({:.2}x the gray serial \
+         cost; gpu={gpu_backend})",
         "color_420",
         color_ser.median_ms,
         color_par.median_ms,
+        color_gpu.median_ms,
         color_ser.median_ms / gray_ser.median_ms.max(1e-9)
     );
     rows.push(Row {
         label: "gray".into(),
         cpu: Some(gray_ser.clone()),
         cpu_par: Some(gray_par),
-        gpu: None,
-        extra: vec![("workload".into(), "gray".into())],
+        gpu: Some(gray_gpu),
+        extra: vec![
+            ("workload".into(), "gray".into()),
+            ("gpu_backend".into(), gpu_backend.into()),
+        ],
     });
     rows.push(Row {
         label: "color_420".into(),
         cpu: Some(color_ser.clone()),
         cpu_par: Some(color_par),
-        gpu: None,
+        gpu: Some(color_gpu),
         extra: vec![
             ("workload".into(), "color".into()),
+            ("gpu_backend".into(), gpu_backend.into()),
+            (
+                "gpu_psnr_weighted".into(),
+                format!("{:.4}", gpu_color_psnr.weighted),
+            ),
             (
                 "color_over_gray".into(),
                 format!(

@@ -87,7 +87,10 @@ pub fn render_table(title: &str, rows: &[Row]) -> String {
 /// `extra` pairs pass through (numeric strings as numbers) — the
 /// microbench stage rows use this for the throughput columns
 /// `blocks_per_s` and `mb_per_s` and for `speedup_vs_scalar` on the
-/// batched transform stages.
+/// batched transform stages; the chroma-ablation workload rows use it
+/// for `gpu_backend` (`"stub"` or `"pjrt"` — which backend filled
+/// `gpu_ms`) and `gpu_psnr_weighted` (the GPU lane's 6:1:1 luma-weighted
+/// color PSNR).
 pub fn rows_to_json(table: &str, rows: &[Row]) -> String {
     use crate::util::json::Json;
     let arr: Vec<Json> = rows

@@ -18,7 +18,31 @@ use anyhow::{bail, Context, Result};
 use crate::dct::color::PlaneCoef;
 use crate::image::ycbcr::Subsampling;
 
+use super::encoder::ScanCoefs;
 use super::{decoder, encoder, Header};
+
+/// Validate plane dimensions against the container geometry.
+fn check_plane_dims(
+    header: &ColorHeader,
+    i: usize,
+    dims: (usize, usize),
+) -> Result<()> {
+    let sub = tag_subsampling(header.subsampling)?;
+    let (w, h) = (header.width as usize, header.height as usize);
+    let (cw, ch) = sub.chroma_dims(w, h);
+    let want = [(w, h), (cw, ch), (cw, ch)];
+    if dims != want[i] {
+        bail!(
+            "plane {i} is {}x{}, expected {}x{} for {} at {w}x{h}",
+            dims.0,
+            dims.1,
+            want[i].0,
+            want[i].1,
+            sub.as_str()
+        );
+    }
+    Ok(())
+}
 
 pub const COLOR_MAGIC: &[u8; 4] = b"CDC3";
 
@@ -109,23 +133,10 @@ pub fn encode(
     header: &ColorHeader,
     planes: &[PlaneCoef; 3],
 ) -> Result<Vec<u8>> {
-    let sub = tag_subsampling(header.subsampling)?;
-    let (w, h) = (header.width as usize, header.height as usize);
-    let (cw, ch) = sub.chroma_dims(w, h);
-    let want = [(w, h), (cw, ch), (cw, ch)];
     let mut out = Vec::new();
     header.write(&mut out);
     for (i, plane) in planes.iter().enumerate() {
-        if (plane.width, plane.height) != want[i] {
-            bail!(
-                "plane {i} is {}x{}, expected {}x{} for {} at {w}x{h}",
-                plane.width,
-                plane.height,
-                want[i].0,
-                want[i].1,
-                sub.as_str()
-            );
-        }
+        check_plane_dims(header, i, (plane.width, plane.height))?;
         let ph = Header {
             width: plane.width as u32,
             height: plane.height as u32,
@@ -135,6 +146,34 @@ pub fn encode(
             variant: header.variant,
         };
         let stream = encoder::encode(&ph, &plane.qcoef)
+            .with_context(|| format!("encoding plane {i}"))?;
+        out.extend_from_slice(&(stream.len() as u32).to_le_bytes());
+        out.extend_from_slice(&stream);
+    }
+    Ok(out)
+}
+
+/// Encode three planes of already-zigzag-ordered coefficients (the fused
+/// `quantize_zigzag_batch` output, as `ColorCompressOutput::scanned`
+/// carries them) into one color container. Byte-identical to [`encode`]
+/// over the equivalent planar buffers.
+pub fn encode_scanned(
+    header: &ColorHeader,
+    planes: &[ScanCoefs; 3],
+) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    header.write(&mut out);
+    for (i, plane) in planes.iter().enumerate() {
+        check_plane_dims(header, i, (plane.width, plane.height))?;
+        let ph = Header {
+            width: plane.width as u32,
+            height: plane.height as u32,
+            padded_width: plane.padded_width as u32,
+            padded_height: plane.padded_height as u32,
+            quality: header.quality,
+            variant: header.variant,
+        };
+        let stream = encoder::encode_scanned(&ph, plane)
             .with_context(|| format!("encoding plane {i}"))?;
         out.extend_from_slice(&(stream.len() as u32).to_le_bytes());
         out.extend_from_slice(&stream);
@@ -291,6 +330,29 @@ mod tests {
         let img = synthetic::lena_like_rgb(30, 21, 5);
         let recon = pipe.decode_coefficients(&dec.planes);
         assert!(psnr_color(&img, &recon).weighted > 25.0);
+    }
+
+    #[test]
+    fn scanned_container_byte_identical() {
+        // the fused-output color front door emits the same container
+        let img = synthetic::lena_like_rgb(40, 21, 8);
+        let pipe =
+            ColorPipeline::new(Variant::Cordic, 50, Subsampling::S420);
+        let out = pipe.compress(&img);
+        let header = ColorHeader {
+            width: 40,
+            height: 21,
+            quality: 50,
+            variant: variant_tag(Variant::Cordic),
+            subsampling: subsampling_tag(Subsampling::S420),
+        };
+        let via_planar = encode(&header, &out.planes).unwrap();
+        let via_scanned = encode_scanned(&header, &out.scanned).unwrap();
+        assert_eq!(via_planar, via_scanned);
+        // wrong plane dims still rejected on the scanned path
+        let mut swapped = out.scanned.clone();
+        swapped.swap(0, 1);
+        assert!(encode_scanned(&header, &swapped).is_err());
     }
 
     #[test]

@@ -1,5 +1,16 @@
 //! Two-pass entropy encoder: statistics pass builds per-image DC/AC
 //! Huffman tables, coding pass emits the container.
+//!
+//! Two front doors feed the same coding core:
+//!
+//! * [`encode`] — the planar-f32 interchange path (what the PJRT
+//!   artifacts emit): gathers each block out of the image-layout buffer
+//!   and zigzag-scans it.
+//! * [`encode_scanned`] — the fused path: consumes [`ScanCoefs`], the
+//!   already-zigzag-ordered `i16` output of
+//!   `dct::batch::quantize_zigzag_batch`, skipping the f32 planar
+//!   round-trip entirely. Byte-identical output to [`encode`] on the
+//!   same coefficients.
 
 use anyhow::Result;
 
@@ -10,6 +21,74 @@ use super::huffman::HuffmanCode;
 use super::rle::{encode_block, write_block, BlockSymbols};
 use super::zigzag::scan;
 use super::Header;
+
+/// Quantized coefficients in entropy-coding order: one 64-entry zigzag
+/// scan per 8x8 block, blocks in raster order over the padded grid —
+/// exactly what `dct::batch::quantize_zigzag_batch` emits, so the encoder
+/// can consume the quantizer output without the f32 planar interchange
+/// round-trip.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ScanCoefs {
+    /// Pre-padding image (or plane) size.
+    pub width: usize,
+    pub height: usize,
+    /// Padded (8-aligned) size the block grid uses.
+    pub padded_width: usize,
+    pub padded_height: usize,
+    /// `grid_w * grid_h * 64` coefficients, zigzag order within a block.
+    pub data: Vec<i16>,
+}
+
+impl ScanCoefs {
+    /// Empty buffer for a plane of the given pre-padding size.
+    pub fn zeroed(width: usize, height: usize, pw: usize, ph: usize)
+                  -> ScanCoefs {
+        debug_assert!(pw % BLOCK == 0 && ph % BLOCK == 0);
+        ScanCoefs {
+            width,
+            height,
+            padded_width: pw,
+            padded_height: ph,
+            data: vec![0i16; pw * ph],
+        }
+    }
+
+    /// Number of 8x8 blocks.
+    pub fn blocks(&self) -> usize {
+        self.data.len() / 64
+    }
+
+    /// The zigzag scan of block index `b` (raster order).
+    #[inline]
+    pub fn block(&self, b: usize) -> &[i16] {
+        &self.data[b * 64..(b + 1) * 64]
+    }
+
+    /// Convert from the planar-f32 interchange layout (the PJRT artifact
+    /// output) — the compatibility shim for backends that do not emit
+    /// fused zigzag coefficients.
+    pub fn from_planar(
+        qcoef_planar: &[f32],
+        pw: usize,
+        ph: usize,
+        width: usize,
+        height: usize,
+    ) -> ScanCoefs {
+        assert_eq!(qcoef_planar.len(), pw * ph, "coefficient buffer size");
+        let (gw, gh) = grid_dims(pw, ph);
+        let mut out = ScanCoefs::zeroed(width, height, pw, ph);
+        let mut qc = [0i16; 64];
+        for by in 0..gh {
+            for bx in 0..gw {
+                load_coef_planar(qcoef_planar, pw, bx, by, &mut qc);
+                let z = scan(&qc);
+                let base = (by * gw + bx) * 64;
+                out.data[base..base + 64].copy_from_slice(&z);
+            }
+        }
+        out
+    }
+}
 
 /// Encode planar quantized coefficients (padded size) into a `.cdc` file.
 pub fn encode(
@@ -22,25 +101,60 @@ pub fn encode(
     );
     assert_eq!(qcoef_planar.len(), pw * ph, "coefficient buffer size");
     let (gw, gh) = grid_dims(pw, ph);
+    let mut qc = [0i16; 64];
+    encode_scans(
+        header,
+        gw * gh,
+        (0..gh).flat_map(|by| (0..gw).map(move |bx| (bx, by))),
+        |(bx, by)| {
+            load_coef_planar(qcoef_planar, pw, bx, by, &mut qc);
+            scan(&qc)
+        },
+    )
+}
 
+/// Encode already-zigzag-ordered coefficients (the fused
+/// `quantize_zigzag_batch` output) into a `.cdc` file. Byte-identical to
+/// [`encode`] over the equivalent planar buffer — same symbols, same
+/// per-image Huffman tables, same bitstream.
+pub fn encode_scanned(header: &Header, scans: &ScanCoefs) -> Result<Vec<u8>> {
+    let (pw, ph) = (
+        header.padded_width as usize,
+        header.padded_height as usize,
+    );
+    assert_eq!(
+        (scans.padded_width, scans.padded_height),
+        (pw, ph),
+        "scanned buffer padded size disagrees with header"
+    );
+    assert_eq!(scans.data.len(), pw * ph, "scanned buffer size");
+    encode_scans(header, scans.blocks(), 0..scans.blocks(), |b| {
+        scans.block(b).try_into().expect("64-coefficient block")
+    })
+}
+
+/// The shared coding core: statistics pass over block scans, per-image
+/// Huffman tables, then the container emit pass.
+fn encode_scans<T>(
+    header: &Header,
+    nblocks: usize,
+    order: impl Iterator<Item = T>,
+    mut scan_of: impl FnMut(T) -> [i16; 64],
+) -> Result<Vec<u8>> {
     // pass 1: symbols + statistics
     let mut dc_freq = [0u64; 256];
     let mut ac_freq = [0u64; 256];
-    let mut blocks: Vec<BlockSymbols> = Vec::with_capacity(gw * gh);
+    let mut blocks: Vec<BlockSymbols> = Vec::with_capacity(nblocks);
     let mut prev_dc: i16 = 0;
-    let mut qc = [0i16; 64];
-    for by in 0..gh {
-        for bx in 0..gw {
-            load_coef_planar(qcoef_planar, pw, bx, by, &mut qc);
-            let z = scan(&qc);
-            let sym = encode_block(&z, prev_dc);
-            prev_dc = z[0];
-            dc_freq[sym.dc.0 as usize] += 1;
-            for &(s, _) in &sym.ac {
-                ac_freq[s as usize] += 1;
-            }
-            blocks.push(sym);
+    for item in order {
+        let z = scan_of(item);
+        let sym = encode_block(&z, prev_dc);
+        prev_dc = z[0];
+        dc_freq[sym.dc.0 as usize] += 1;
+        for &(s, _) in &sym.ac {
+            ac_freq[s as usize] += 1;
         }
+        blocks.push(sym);
     }
     // Blocks with no AC symbols at all are possible (all-zero AC with the
     // final block fully coded): ensure the AC alphabet is non-empty so the
@@ -165,6 +279,29 @@ mod tests {
             actual.len()
         );
         assert!(actual.len() < payload_bytes + 700);
+    }
+
+    #[test]
+    fn scanned_path_byte_identical_to_planar_path() {
+        // the fused-output front door must emit the exact same container
+        for (w, h) in [(64, 64), (40, 21), (72, 8)] {
+            let img = synthetic::lena_like(w, h, 9);
+            let pipe = CpuPipeline::new(Variant::Cordic, 50);
+            let (qcoef, pw, ph) = pipe.analyze(&img);
+            let header = make_header(w, h, pw, ph);
+            let via_planar = encode(&header, &qcoef).unwrap();
+            let scans = ScanCoefs::from_planar(&qcoef, pw, ph, w, h);
+            let via_scanned = encode_scanned(&header, &scans).unwrap();
+            assert_eq!(via_planar, via_scanned, "{w}x{h}");
+        }
+    }
+
+    #[test]
+    fn scan_coefs_shape_helpers() {
+        let s = ScanCoefs::zeroed(30, 21, 32, 24);
+        assert_eq!(s.blocks(), 4 * 3);
+        assert_eq!(s.block(11).len(), 64);
+        assert_eq!(s.data.len(), 32 * 24);
     }
 
     #[test]

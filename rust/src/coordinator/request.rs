@@ -21,9 +21,13 @@ pub enum Lane {
     /// Block-parallel Rust over a scoped thread pool
     /// (`dct::parallel::ParallelCpuPipeline`).
     CpuParallel,
-    /// AOT PJRT executables (the paper's CUDA lane).
+    /// The runtime backend (the paper's CUDA lane): AOT PJRT
+    /// executables, or the host-side stub backend when configured.
+    /// Accepts gray and — since the planar-batch rework — color jobs.
     Gpu,
-    /// Router decides: GPU when an artifact for the shape exists.
+    /// Router decides: GPU when the backend covers the job — for gray,
+    /// the artifact (or stub kind) at the padded shape; for color, all
+    /// three padded plane shapes — else serial CPU.
     Auto,
 }
 
@@ -103,8 +107,8 @@ impl Request {
         }
     }
 
-    /// A color compression job (the `color: true` request shape; runs on
-    /// the CPU lanes).
+    /// A color compression job (the `color: true` request shape; served
+    /// by every lane — the GPU lane consumes it as a planar batch).
     pub fn compress_color(
         id: u64,
         image: ColorImage,

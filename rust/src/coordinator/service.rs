@@ -39,6 +39,12 @@ pub struct ServiceConfig {
     pub quality: u8,
     /// Artifact directory; None disables the GPU lane.
     pub artifact_dir: Option<std::path::PathBuf>,
+    /// Serve the GPU lane with the host-side stub backend
+    /// ([`Runtime::stub`]) when no artifact manifest is found. The stub
+    /// computes every artifact kind bit-identically to the CPU lanes, so
+    /// the whole GPU-lane path (planar batches, plane-parallel color,
+    /// fused entropy feed) exercises end-to-end in offline builds and CI.
+    pub stub_gpu: bool,
 }
 
 impl Default for ServiceConfig {
@@ -51,6 +57,7 @@ impl Default for ServiceConfig {
             batch: BatchPolicy::default(),
             quality: 50,
             artifact_dir: Some(std::path::PathBuf::from("artifacts")),
+            stub_gpu: false,
         }
     }
 }
@@ -79,11 +86,33 @@ pub struct Service {
 impl Service {
     pub fn start(cfg: ServiceConfig) -> Result<Service> {
         let runtime = match &cfg.artifact_dir {
-            Some(dir) if dir.join("manifest.json").exists() => Some(
-                Arc::new(Runtime::new(dir).with_context(|| {
-                    format!("loading artifacts from {}", dir.display())
-                })?),
-            ),
+            Some(dir) if dir.join("manifest.json").exists() => {
+                match Runtime::new(dir) {
+                    Ok(rt) => Some(Arc::new(rt)),
+                    // stub_gpu means "serve the GPU lane no matter
+                    // what": a manifest without a working PJRT client
+                    // (the vendored offline build) falls back too
+                    Err(e) if cfg.stub_gpu => {
+                        log_info!(
+                            "service",
+                            "PJRT unavailable ({e:#}); serving the GPU \
+                             lane with the stub backend"
+                        );
+                        Some(Arc::new(Runtime::stub(cfg.quality)))
+                    }
+                    Err(e) => {
+                        return Err(e).with_context(|| {
+                            format!(
+                                "loading artifacts from {}",
+                                dir.display()
+                            )
+                        })
+                    }
+                }
+            }
+            _ if cfg.stub_gpu => {
+                Some(Arc::new(Runtime::stub(cfg.quality)))
+            }
             _ => None,
         };
         let queue = Arc::new(RequestQueue::new(
@@ -160,7 +189,38 @@ impl Service {
     }
 
     /// Submit a color (YCbCr) compression job — the `color: true`
-    /// request shape, served by either CPU lane.
+    /// request shape, served by either CPU lane or (since the
+    /// planar-batch rework) the GPU lane.
+    ///
+    /// # Examples
+    ///
+    /// Serve one 4:2:0 color job on the stub-backed GPU lane:
+    ///
+    /// ```
+    /// use cordic_dct::coordinator::{Lane, Service, ServiceConfig};
+    /// use cordic_dct::dct::Variant;
+    /// use cordic_dct::image::synthetic;
+    /// use cordic_dct::image::ycbcr::Subsampling;
+    ///
+    /// let svc = Service::start(ServiceConfig {
+    ///     workers: 1,
+    ///     artifact_dir: None,
+    ///     stub_gpu: true, // GPU lane served host-side, bit-identical
+    ///     ..Default::default()
+    /// })
+    /// .unwrap();
+    /// let img = synthetic::lena_like_rgb(32, 24, 1);
+    /// let resp = svc
+    ///     .compress_color(img, Variant::Cordic, Lane::Gpu,
+    ///                     Subsampling::S420)
+    ///     .unwrap()
+    ///     .wait();
+    /// assert_eq!(resp.lane, Lane::Gpu);
+    /// let out = resp.result.unwrap();
+    /// assert!(out.psnr_db.unwrap() > 25.0);
+    /// assert!(out.color_image.unwrap().width == 32);
+    /// svc.shutdown();
+    /// ```
     pub fn compress_color(
         &self,
         image: ColorImage,
@@ -315,6 +375,42 @@ mod tests {
             .result
             .unwrap();
         assert!(c.psnr_db.unwrap() < d.psnr_db.unwrap());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn stub_gpu_lane_serves_gray_and_color() {
+        use crate::coordinator::request::Lane;
+        let svc = Service::start(ServiceConfig {
+            workers: 2,
+            artifact_dir: None,
+            stub_gpu: true,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(svc.has_gpu_lane());
+        let gray = synthetic::lena_like(30, 21, 4);
+        let g = svc
+            .compress(gray, Variant::Cordic, Lane::Gpu)
+            .unwrap()
+            .wait();
+        assert_eq!(g.lane, Lane::Gpu);
+        assert!(g.result.unwrap().psnr_db.unwrap() > 25.0);
+        // Auto now routes color to the stub-backed GPU lane
+        let rgb = synthetic::lena_like_rgb(30, 21, 4);
+        let c = svc
+            .compress_color(
+                rgb,
+                Variant::Cordic,
+                Lane::Auto,
+                Subsampling::S420,
+            )
+            .unwrap()
+            .wait();
+        assert_eq!(c.lane, Lane::Gpu);
+        let out = c.result.unwrap();
+        assert!(out.psnr_db.unwrap() > 25.0);
+        assert_eq!(out.color_image.unwrap().height, 21);
         svc.shutdown();
     }
 

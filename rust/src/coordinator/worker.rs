@@ -12,6 +12,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::codec::encoder::ScanCoefs;
 use crate::codec::{color as color_codec, encoder, variant_tag, Header};
 use crate::dct::color::ColorPipeline;
 use crate::dct::parallel::ParallelCpuPipeline;
@@ -143,15 +144,29 @@ fn process_job(ctx: &WorkerCtx, cache: &mut PipelineCache, job: QueuedJob) {
     });
 }
 
-/// Auto routing: GPU when the executor exists and has an artifact for the
-/// padded shape, else serial CPU. Color jobs always resolve to a CPU lane
-/// (no planar-batch artifacts exist yet).
+/// Auto routing: GPU when the executor exists and its backend covers the
+/// job — for gray jobs an artifact (or stub kind) at the padded shape,
+/// for color jobs coverage of all three padded plane shapes (the
+/// planar-batch path) — else serial CPU.
 fn resolve_lane(ctx: &WorkerCtx, req: &Request) -> Lane {
     match req.lane {
         Lane::Cpu => Lane::Cpu,
         Lane::CpuParallel => Lane::CpuParallel,
         Lane::Gpu => Lane::Gpu,
-        Lane::Auto if req.image.is_color() => Lane::Cpu,
+        Lane::Auto if req.image.is_color() => match &ctx.executor {
+            Some(ex)
+                if req.kind == RequestKind::Compress
+                    && ex.supports_color(
+                        req.image.width(),
+                        req.image.height(),
+                        req.variant.as_str(),
+                        req.subsampling,
+                    ) =>
+            {
+                Lane::Gpu
+            }
+            _ => Lane::Cpu,
+        },
         Lane::Auto => match &ctx.executor {
             Some(ex) => {
                 let ph = crate::dct::blocks::align8(req.image.height());
@@ -164,7 +179,7 @@ fn resolve_lane(ctx: &WorkerCtx, req: &Request) -> Lane {
                     RequestKind::Compress => Some(req.variant.as_str()),
                     RequestKind::Histeq => None,
                 };
-                if ex.rt.manifest.find(kind, variant, ph, pw).is_some() {
+                if ex.rt.supports(kind, variant, ph, pw) {
                     Lane::Gpu
                 } else {
                     Lane::Cpu
@@ -175,17 +190,16 @@ fn resolve_lane(ctx: &WorkerCtx, req: &Request) -> Lane {
     }
 }
 
-/// Entropy-code + package the payload all gray compress lanes share.
+/// Entropy-code + package the payload all gray compress lanes share —
+/// fed straight from the fused zigzag output, no planar round-trip.
 fn compress_output(
     original: &GrayImage,
     recon: GrayImage,
-    qcoef: &[f32],
-    pw: usize,
-    ph: usize,
+    scanned: &ScanCoefs,
     variant: Variant,
     quality: u8,
 ) -> Result<JobOutput> {
-    let bytes = entropy_encode(original, qcoef, pw, ph, variant, quality)?;
+    let bytes = entropy_encode(original, scanned, variant, quality)?;
     Ok(JobOutput {
         psnr_db: Some(psnr(original, &recon)),
         image: recon,
@@ -207,8 +221,8 @@ fn run_job(
 }
 
 /// Color jobs: the `color: true` request path. Both CPU lanes run the
-/// per-plane [`ColorPipeline`]; the GPU lane has no planar-batch
-/// artifacts yet and reports so.
+/// per-plane [`ColorPipeline`]; the GPU lane consumes the same job as a
+/// planar batch (Y/Cb/Cr planes in parallel) through the executor.
 fn run_color_job(
     ctx: &WorkerCtx,
     cache: &mut PipelineCache,
@@ -219,11 +233,36 @@ fn run_color_job(
     if req.kind != RequestKind::Compress {
         bail!("histeq is a grayscale workload");
     }
+    // the container header must record the quality the lane actually
+    // quantized at: the GPU backend's own quality (the PJRT manifest's;
+    // the stub is built at ctx.quality, so they agree there)
+    let quality = match (lane, &ctx.executor) {
+        (Lane::Gpu, Some(ex)) => ex.rt.quality(),
+        _ => ctx.quality,
+    };
+    let header = color_codec::ColorHeader {
+        width: img.width as u32,
+        height: img.height as u32,
+        quality,
+        variant: variant_tag(req.variant),
+        subsampling: color_codec::subsampling_tag(req.subsampling),
+    };
+    if lane == Lane::Gpu {
+        let ex = ctx
+            .executor
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no GPU lane configured"))?;
+        let out =
+            ex.compress_color(img, req.variant, req.subsampling)?;
+        let bytes = color_codec::encode_scanned(&header, &out.scanned)?;
+        return Ok(JobOutput {
+            psnr_db: Some(psnr_color(img, &out.recon).weighted),
+            image: out.recon_y,
+            color_image: Some(out.recon),
+            compressed_bytes: Some(bytes.len()),
+        });
+    }
     let pipe = match lane {
-        Lane::Gpu => bail!(
-            "color compression has no GPU artifacts yet; \
-             use a CPU lane"
-        ),
         Lane::CpuParallel => cache.color(
             req.variant,
             ctx.quality,
@@ -240,14 +279,7 @@ fn run_color_job(
         ),
     };
     let out = pipe.compress(img);
-    let header = color_codec::ColorHeader {
-        width: img.width as u32,
-        height: img.height as u32,
-        quality: ctx.quality,
-        variant: variant_tag(req.variant),
-        subsampling: color_codec::subsampling_tag(req.subsampling),
-    };
-    let bytes = color_codec::encode(&header, &out.planes)?;
+    let bytes = color_codec::encode_scanned(&header, &out.scanned)?;
     Ok(JobOutput {
         psnr_db: Some(psnr_color(img, &out.recon).weighted),
         image: out.recon_y,
@@ -270,14 +302,14 @@ fn run_gray_job(
                 .as_ref()
                 .ok_or_else(|| anyhow::anyhow!("no GPU lane configured"))?;
             let out = ex.compress(img, req.variant.as_str())?;
+            // header records the backend's quantization quality, which
+            // on PJRT is the manifest's, not necessarily ctx.quality
             compress_output(
                 img,
                 out.recon,
-                &out.qcoef,
-                out.padded_width,
-                out.padded_height,
+                &out.scanned,
                 req.variant,
-                ctx.quality,
+                ex.rt.quality(),
             )
         }
         (RequestKind::Compress, Lane::CpuParallel) => {
@@ -290,9 +322,7 @@ fn run_gray_job(
             compress_output(
                 img,
                 out.recon,
-                &out.qcoef,
-                out.padded_width,
-                out.padded_height,
+                &out.scanned,
                 req.variant,
                 ctx.quality,
             )
@@ -303,9 +333,7 @@ fn run_gray_job(
             compress_output(
                 img,
                 out.recon,
-                &out.qcoef,
-                out.padded_width,
-                out.padded_height,
+                &out.scanned,
                 req.variant,
                 ctx.quality,
             )
@@ -334,21 +362,19 @@ fn run_gray_job(
 
 fn entropy_encode(
     original: &GrayImage,
-    qcoef: &[f32],
-    pw: usize,
-    ph: usize,
+    scanned: &ScanCoefs,
     variant: Variant,
     quality: u8,
 ) -> Result<Vec<u8>> {
     let header = Header {
         width: original.width as u32,
         height: original.height as u32,
-        padded_width: pw as u32,
-        padded_height: ph as u32,
+        padded_width: scanned.padded_width as u32,
+        padded_height: scanned.padded_height as u32,
         quality,
         variant: variant_tag(variant),
     };
-    encoder::encode(&header, qcoef)
+    encoder::encode_scanned(&header, scanned)
 }
 
 #[cfg(test)]

@@ -17,6 +17,9 @@
 //!   block 7: [e0 e1 e2 ... e63]        data[63] = [e63 of blocks 0..8]
 //! ```
 //!
+//! (This layout diagram is promoted into `ARCHITECTURE.md` — keep the
+//! two copies in sync.)
+//!
 //! `data[i]` holds element `i` (row-major position within the 8x8 block)
 //! of all eight blocks, so one [`Lanes`] add/mul advances the same
 //! flow-graph edge of eight independent blocks at once.
@@ -41,7 +44,7 @@
 
 use std::sync::Mutex;
 
-use crate::codec::zigzag::ZIGZAG;
+use crate::codec::zigzag::{scan as zigzag_scan, INV_ZIGZAG, ZIGZAG};
 use crate::image::GrayImage;
 
 use super::blocks::{
@@ -245,6 +248,68 @@ pub fn scatter_coef(
             for c in 0..BLOCK {
                 buf[dst + c] = qb.data[r * BLOCK + c][l] as f32;
             }
+        }
+    }
+}
+
+/// Scatter the first `n` lanes of a *scan-ordered* quantized batch (the
+/// [`quantize_zigzag_batch`] output) into a planar f32 coefficient
+/// buffer. Same values as [`scatter_coef`] over the row-major batch —
+/// only the source indexing differs.
+pub fn scatter_coef_scan(
+    qb: &QBatch8,
+    buf: &mut [f32],
+    width: usize,
+    bx0: usize,
+    by: usize,
+    n: usize,
+) {
+    debug_assert!((1..=LANES).contains(&n));
+    for l in 0..n {
+        for r in 0..BLOCK {
+            let dst = (by * BLOCK + r) * width + (bx0 + l) * BLOCK;
+            for c in 0..BLOCK {
+                buf[dst + c] =
+                    qb.data[INV_ZIGZAG[r * BLOCK + c]][l] as f32;
+            }
+        }
+    }
+}
+
+/// Scatter the first `n` lanes of a scan-ordered quantized batch into a
+/// contiguous entropy-coding buffer: block `(bx0 + l, by)` lands at
+/// `((by * grid_w + bx0 + l) * 64)..+64`, already in zigzag order — the
+/// layout [`crate::codec::encoder::ScanCoefs`] carries straight into the
+/// entropy encoder.
+pub fn scatter_scan(
+    qb: &QBatch8,
+    scanned: &mut [i16],
+    grid_w: usize,
+    bx0: usize,
+    by: usize,
+    n: usize,
+) {
+    debug_assert!((1..=LANES).contains(&n));
+    for l in 0..n {
+        let base = (by * grid_w + bx0 + l) * 64;
+        for k in 0..64 {
+            scanned[base + k] = qb.data[k][l];
+        }
+    }
+}
+
+/// Lane-wide dequantize of a *scan-ordered* quantized batch back to a
+/// row-major coefficient batch — the exact scalar [`dequantize_block`]
+/// multiplies (elementwise, so storage order cannot change the values).
+pub fn dequantize_scan_batch(
+    qb: &QBatch8,
+    q: &[f32; 64],
+    out: &mut BlockBatch8,
+) {
+    for (k, &i) in ZIGZAG.iter().enumerate() {
+        let qi = q[i];
+        for l in 0..LANES {
+            out.data[i].0[l] = qb.data[k][l] as f32 * qi;
         }
     }
 }
@@ -780,11 +845,39 @@ impl ScratchPool {
 // The engine
 // ---------------------------------------------------------------------------
 
-/// The batched pipeline core shared by both CPU lanes: walks each block
-/// row in batches of [`LANES`] (scalar tail for `grid_width % 8`
-/// remainders), quantizing with one table and decoding with the exact
-/// matrix IDCT — the same stages, in the same arithmetic order, as the
-/// scalar pipelines it replaced.
+/// The batched pipeline core shared by both CPU lanes (and, through the
+/// stub backend, the GPU lane): walks each block row in batches of
+/// [`LANES`] (scalar tail for `grid_width % 8` remainders), quantizing
+/// with one table and decoding with the exact matrix IDCT — the same
+/// stages, in the same arithmetic order, as the scalar pipelines it
+/// replaced.
+///
+/// # Examples
+///
+/// Transform + quantize one block row of an 8-aligned image, collecting
+/// the planar interchange buffer, the fused zigzag stream, and the
+/// reconstruction in a single pass:
+///
+/// ```
+/// use cordic_dct::dct::batch::BatchEngine;
+/// use cordic_dct::dct::quant::effective_qtable;
+/// use cordic_dct::dct::Variant;
+/// use cordic_dct::image::synthetic;
+///
+/// let img = synthetic::lena_like(32, 8, 1); // 4 blocks, one row
+/// let engine = BatchEngine::new(Variant::Cordic, effective_qtable(50));
+/// let mut qcoef = vec![0.0f32; 32 * 8];
+/// let mut scanned = vec![0i16; 32 * 8];
+/// let mut recon = cordic_dct::image::GrayImage::new(32, 8);
+/// engine.with_scratch(|s| {
+///     engine.forward_quant_row(
+///         s, &img, 0, Some(&mut qcoef), 0,
+///         Some(&mut scanned), Some((&mut recon, 0)),
+///     );
+/// });
+/// // scan position 0 of block 0 is the quantized DC coefficient
+/// assert_eq!(scanned[0] as f32, qcoef[0]);
+/// ```
 pub struct BatchEngine {
     transform: BatchTransform,
     decoder: MatrixDct,
@@ -819,17 +912,29 @@ impl BatchEngine {
     }
 
     /// Forward-transform + quantize one block row: read blocks
-    /// `(0.., src_by)` of the 8-aligned `padded` image, write quantized
-    /// coefficients into block row `dst_by` of the planar `qcoef` buffer
-    /// and, when `recon` is given, the decoded pixels into block row
-    /// `recon.1` of `recon.0` (dequantize + exact matrix IDCT).
+    /// `(0.., src_by)` of the 8-aligned `padded` image and, for each
+    /// output that is given, write quantized coefficients into block
+    /// row `dst_by` of the planar `qcoef` buffer, zigzag-ordered
+    /// coefficients into block row `dst_by` of the contiguous `scanned`
+    /// buffer (the fused [`quantize_zigzag_batch`] output the entropy
+    /// encoder consumes directly), and the decoded pixels into block
+    /// row `recon.1` of `recon.0` (dequantize + exact matrix IDCT).
+    /// Passing `qcoef: None` skips the planar interchange buffer
+    /// entirely (the fused analyze path).
+    ///
+    /// Quantization runs once per block, fused with the zigzag reorder;
+    /// the planar buffer and the reconstruction are derived from the
+    /// scan-ordered batch through the inverse scan map, so all outputs
+    /// stay bit-identical to the historical quantize-then-scatter path.
+    #[allow(clippy::too_many_arguments)]
     pub fn forward_quant_row(
         &self,
         s: &mut BlockScratch,
         padded: &GrayImage,
         src_by: usize,
-        qcoef: &mut [f32],
+        mut qcoef: Option<&mut [f32]>,
         dst_by: usize,
+        mut scanned: Option<&mut [i16]>,
         mut recon: Option<(&mut GrayImage, usize)>,
     ) {
         let w = padded.width;
@@ -839,10 +944,15 @@ impl BatchEngine {
         while bx + LANES <= gw {
             gather(&mut s.coef, padded, bx, src_by, LANES);
             self.transform.forward_batch(&mut s.coef);
-            quantize_batch(&s.coef, &self.qtable, &mut s.qc);
-            scatter_coef(&s.qc, qcoef, w, bx, dst_by, LANES);
+            quantize_zigzag_batch(&s.coef, &self.qtable, &mut s.qc);
+            if let Some(out) = qcoef.as_mut() {
+                scatter_coef_scan(&s.qc, out, w, bx, dst_by, LANES);
+            }
+            if let Some(out) = scanned.as_mut() {
+                scatter_scan(&s.qc, out, gw, bx, dst_by, LANES);
+            }
             if let Some((img, rby)) = recon.as_mut() {
-                dequantize_batch(&s.qc, &self.qtable, &mut s.recon);
+                dequantize_scan_batch(&s.qc, &self.qtable, &mut s.recon);
                 matrix_inverse_lanes(self.decoder.coeffs(), &mut s.recon);
                 scatter_blocks(&s.recon, img, bx, *rby, LANES);
             }
@@ -853,7 +963,14 @@ impl BatchEngine {
             extract_block(padded, bx, src_by, &mut s.block);
             self.transform.forward_scalar(&mut s.block);
             quantize_block(&s.block, &self.qtable, &mut s.qblock);
-            store_coef_planar(qcoef, w, bx, dst_by, &s.qblock);
+            if let Some(out) = qcoef.as_mut() {
+                store_coef_planar(out, w, bx, dst_by, &s.qblock);
+            }
+            if let Some(out) = scanned.as_mut() {
+                let base = (dst_by * gw + bx) * 64;
+                out[base..base + 64]
+                    .copy_from_slice(&zigzag_scan(&s.qblock));
+            }
             if let Some((img, rby)) = recon.as_mut() {
                 dequantize_block(&s.qblock, &self.qtable, &mut s.block);
                 self.decoder.inverse(&mut s.block);
@@ -1014,6 +1131,36 @@ mod tests {
     }
 
     #[test]
+    fn scan_order_scatters_match_row_major() {
+        let q = effective_qtable(50);
+        let batch = rand_batch(21);
+        let mut qb_row = QBatch8::zeroed();
+        let mut qb_scan = QBatch8::zeroed();
+        quantize_batch(&batch, &q, &mut qb_row);
+        quantize_zigzag_batch(&batch, &q, &mut qb_scan);
+        // planar scatter from the scan-ordered batch == row-major scatter
+        let mut via_row = vec![0.0f32; 64 * 8];
+        let mut via_scan = vec![0.0f32; 64 * 8];
+        scatter_coef(&qb_row, &mut via_row, 64, 0, 0, LANES);
+        scatter_coef_scan(&qb_scan, &mut via_scan, 64, 0, 0, LANES);
+        assert_eq!(via_row, via_scan);
+        // dequantize from scan order == dequantize from row-major
+        let mut deq_row = BlockBatch8::zeroed();
+        let mut deq_scan = BlockBatch8::zeroed();
+        dequantize_batch(&qb_row, &q, &mut deq_row);
+        dequantize_scan_batch(&qb_scan, &q, &mut deq_scan);
+        assert_eq!(deq_row, deq_scan);
+        // the contiguous scan buffer carries each lane's zigzag sequence
+        let mut scanned = vec![0i16; 64 * LANES];
+        scatter_scan(&qb_scan, &mut scanned, LANES, 0, 0, LANES);
+        for l in 0..LANES {
+            for k in 0..64 {
+                assert_eq!(scanned[l * 64 + k], qb_scan.data[k][l]);
+            }
+        }
+    }
+
+    #[test]
     fn gather_matches_extract_block_and_zeroes_tail() {
         let img = synthetic::lena_like(48, 16, 5);
         let mut batch = rand_batch(9); // dirty start: gather must overwrite
@@ -1077,14 +1224,16 @@ mod tests {
         let q = effective_qtable(50);
         let engine = BatchEngine::new(Variant::Cordic, q);
         let mut qcoef = vec![0.0f32; 72 * 8];
+        let mut scanned = vec![0i16; 72 * 8];
         let mut recon = GrayImage::new(72, 8);
         engine.with_scratch(|s| {
             engine.forward_quant_row(
                 s,
                 &img,
                 0,
-                &mut qcoef,
+                Some(&mut qcoef),
                 0,
+                Some(&mut scanned),
                 Some((&mut recon, 0)),
             );
         });
@@ -1092,6 +1241,7 @@ mod tests {
         let t = Variant::Cordic.transform();
         let dec = MatrixDct::new();
         let mut want_q = vec![0.0f32; 72 * 8];
+        let mut want_s = vec![0i16; 72 * 8];
         let mut want_r = GrayImage::new(72, 8);
         let mut blk = [0.0f32; 64];
         let mut qc = [0i16; 64];
@@ -1100,11 +1250,14 @@ mod tests {
             t.forward(&mut blk);
             quantize_block(&blk, &q, &mut qc);
             store_coef_planar(&mut want_q, 72, bx, 0, &qc);
+            want_s[bx * 64..(bx + 1) * 64]
+                .copy_from_slice(&zigzag::scan(&qc));
             dequantize_block(&qc, &q, &mut blk);
             dec.inverse(&mut blk);
             store_block(&mut want_r, bx, 0, &blk);
         }
         assert_eq!(qcoef, want_q);
+        assert_eq!(scanned, want_s);
         assert_eq!(recon, want_r);
         // decode side reproduces the same reconstruction
         let mut decoded = GrayImage::new(72, 8);

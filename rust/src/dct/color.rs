@@ -20,11 +20,13 @@
 //! unchanged. The plane decomposition is also the planar-batch shape the
 //! future GPU lane consumes (1 plane for gray, 3 for color).
 
+use crate::codec::encoder::ScanCoefs;
 use crate::image::color::ColorImage;
 use crate::image::ycbcr::{self, Subsampling};
 use crate::image::GrayImage;
 
 use super::parallel::ParallelCpuPipeline;
+use super::planar::split_ycbcr;
 use super::pipeline::{CpuCompressOutput, CpuPipeline};
 use super::quant::{effective_qtable, effective_qtable_chroma};
 use super::Variant;
@@ -66,6 +68,10 @@ pub struct ColorCompressOutput {
     pub recon_cr: GrayImage,
     /// Quantized coefficients per plane, in Y/Cb/Cr order.
     pub planes: [PlaneCoef; 3],
+    /// The same coefficients in entropy-coding order per plane (the
+    /// fused `quantize_zigzag_batch` output the color encoder consumes
+    /// directly), Y/Cb/Cr order.
+    pub scanned: [ScanCoefs; 3],
 }
 
 /// Per-plane executors: the serial or parallel grayscale pipeline, one
@@ -82,6 +88,28 @@ enum PlanePipes {
 }
 
 /// Color compression pipeline over the CPU lanes.
+///
+/// # Examples
+///
+/// Compress a synthetic RGB image at 4:2:0 and check the luma-weighted
+/// reconstruction quality:
+///
+/// ```
+/// use cordic_dct::dct::color::ColorPipeline;
+/// use cordic_dct::dct::Variant;
+/// use cordic_dct::image::synthetic;
+/// use cordic_dct::image::ycbcr::Subsampling;
+/// use cordic_dct::metrics::color::psnr_color;
+///
+/// let img = synthetic::lena_like_rgb(32, 32, 7);
+/// let pipe = ColorPipeline::new(Variant::Cordic, 50, Subsampling::S420);
+/// let out = pipe.compress(&img);
+/// assert_eq!((out.recon.width, out.recon.height), (32, 32));
+/// assert!(psnr_color(&img, &out.recon).weighted > 25.0);
+/// // three planes of fused zigzag coefficients, Y/Cb/Cr order
+/// assert_eq!(out.scanned[0].width, 32);
+/// assert_eq!(out.scanned[1].width, 16); // 4:2:0 chroma
+/// ```
 pub struct ColorPipeline {
     pipes: PlanePipes,
     pub variant: Variant,
@@ -201,15 +229,14 @@ impl ColorPipeline {
     }
 
     /// Split an RGB image into the three planes the pipeline compresses:
-    /// full-resolution Y plus subsampled Cb/Cr.
+    /// full-resolution Y plus subsampled Cb/Cr. Delegates to
+    /// [`split_ycbcr`](super::planar::split_ycbcr), the shared
+    /// decomposition the GPU lane's
+    /// [`PlanarBatch`](super::planar::PlanarBatch) is built from — so
+    /// every lane starts a color job from bit-identical planes.
     pub fn split_planes(&self, img: &ColorImage)
                         -> (GrayImage, GrayImage, GrayImage) {
-        let (y, cb, cr) = ycbcr::rgb_to_ycbcr(img);
-        (
-            y,
-            ycbcr::downsample(&cb, self.subsampling),
-            ycbcr::downsample(&cr, self.subsampling),
-        )
+        split_ycbcr(img, self.subsampling)
     }
 
     /// Full pipeline: convert, subsample, compress each plane, upsample
@@ -240,6 +267,7 @@ impl ColorPipeline {
                 PlaneCoef::from_output(&ocb, cb.width, cb.height),
                 PlaneCoef::from_output(&ocr, cr.width, cr.height),
             ],
+            scanned: [oy.scanned, ocb.scanned, ocr.scanned],
             recon_y: oy.recon,
             recon_cb: ocb.recon,
             recon_cr: ocr.recon,
@@ -360,6 +388,7 @@ mod tests {
                 ColorPipeline::parallel(Variant::Cordic, 50, mode, 3)
                     .compress(&img);
             assert_eq!(ser.planes, par.planes, "{}", mode.as_str());
+            assert_eq!(ser.scanned, par.scanned);
             assert_eq!(ser.recon, par.recon);
             assert_eq!(ser.recon_y, par.recon_y);
         }

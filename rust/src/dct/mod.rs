@@ -37,6 +37,7 @@ pub mod matrix;
 pub mod naive;
 pub mod parallel;
 pub mod pipeline;
+pub mod planar;
 pub mod quant;
 
 /// An 8x8 blockwise 2-D transform. Blocks are row-major `[f32; 64]`.

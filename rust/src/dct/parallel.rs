@@ -20,6 +20,7 @@
 //! [`Variant`] and quality (asserted by `tests/parallel_parity.rs` and
 //! `tests/batch_parity.rs`).
 
+use crate::codec::encoder::ScanCoefs;
 use crate::image::GrayImage;
 
 use super::batch::BatchEngine;
@@ -82,24 +83,35 @@ impl ParallelCpuPipeline {
         self.engine.transform_name()
     }
 
-    /// One row-band of blocks: forward transform + quantize (+ optionally
-    /// decode) into band-local buffers. Runs on a worker thread with a
-    /// scratch buffer from the pipeline's arena.
+    /// One row-band of blocks: forward transform + quantize (+ the
+    /// outputs requested) into band-local buffers (planar row, fused
+    /// zigzag row, decoded pixels). Runs on a worker thread with a
+    /// scratch buffer from the pipeline's arena. Band buffers
+    /// concatenate in block-row order into the whole-image layouts.
     fn process_band(
         &self,
         padded: &GrayImage,
         by: usize,
+        scan: bool,
         decode: bool,
-    ) -> (Vec<f32>, Option<GrayImage>) {
+    ) -> (Vec<f32>, Option<Vec<i16>>, Option<GrayImage>) {
         let w = padded.width;
         let mut qrow = vec![0.0f32; w * blocks::BLOCK];
+        let mut srow = scan.then(|| vec![0i16; w * blocks::BLOCK]);
         let mut band = decode.then(|| GrayImage::new(w, blocks::BLOCK));
         self.engine.with_scratch(|s| {
             let recon = band.as_mut().map(|img| (img, 0));
-            self.engine
-                .forward_quant_row(s, padded, by, &mut qrow, 0, recon);
+            self.engine.forward_quant_row(
+                s,
+                padded,
+                by,
+                Some(&mut qrow),
+                0,
+                srow.as_deref_mut(),
+                recon,
+            );
         });
-        (qrow, band)
+        (qrow, srow, band)
     }
 
     /// Full pipeline over an image; bit-identical to
@@ -108,12 +120,14 @@ impl ParallelCpuPipeline {
         let padded = pad_to_blocks(img);
         let (_, gh) = grid_dims(padded.width, padded.height);
         let bands = parallel_map(gh, self.workers, |by| {
-            self.process_band(&padded, by, true)
+            self.process_band(&padded, by, true, true)
         });
         let mut qcoef = Vec::with_capacity(padded.pixels());
+        let mut scanned = Vec::with_capacity(padded.pixels());
         let mut pixels = Vec::with_capacity(padded.pixels());
-        for (qrow, band) in bands {
+        for (qrow, srow, band) in bands {
             qcoef.extend_from_slice(&qrow);
+            scanned.extend_from_slice(&srow.expect("scanned band"));
             pixels.extend_from_slice(&band.expect("decoded band").data);
         }
         let recon = GrayImage {
@@ -131,6 +145,13 @@ impl ParallelCpuPipeline {
         CpuCompressOutput {
             recon,
             qcoef,
+            scanned: ScanCoefs {
+                width: img.width,
+                height: img.height,
+                padded_width: padded.width,
+                padded_height: padded.height,
+                data: scanned,
+            },
             padded_width: padded.width,
             padded_height: padded.height,
         }
@@ -142,7 +163,7 @@ impl ParallelCpuPipeline {
         let padded = pad_to_blocks(img);
         let (_, gh) = grid_dims(padded.width, padded.height);
         let bands = parallel_map(gh, self.workers, |by| {
-            self.process_band(&padded, by, false).0
+            self.process_band(&padded, by, false, false).0
         });
         let mut qcoef = Vec::with_capacity(padded.pixels());
         for qrow in bands {
@@ -206,6 +227,7 @@ mod tests {
         let par = ParallelCpuPipeline::with_workers(Variant::Dct, 50, 4)
             .compress(&img);
         assert_eq!(par.qcoef, serial.qcoef);
+        assert_eq!(par.scanned, serial.scanned);
         assert_eq!(par.recon, serial.recon);
         assert_eq!(
             (par.padded_width, par.padded_height),
@@ -220,6 +242,7 @@ mod tests {
         let par = ParallelCpuPipeline::with_workers(Variant::Cordic, 50, 3)
             .compress(&img);
         assert_eq!(par.qcoef, serial.qcoef);
+        assert_eq!(par.scanned, serial.scanned);
         assert_eq!(par.recon, serial.recon);
         assert_eq!((par.recon.width, par.recon.height), (30, 21));
     }

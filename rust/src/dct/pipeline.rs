@@ -13,6 +13,7 @@
 //! decoder), matching the Pallas fused kernel, so approximate encoders
 //! (Cordic-Loeffler) show their true reconstruction loss.
 
+use crate::codec::encoder::ScanCoefs;
 use crate::image::GrayImage;
 
 use super::batch::BatchEngine;
@@ -27,6 +28,10 @@ pub struct CpuCompressOutput {
     /// Quantized coefficients in planar image layout (padded size), f32 —
     /// the same interchange layout the PJRT artifacts emit.
     pub qcoef: Vec<f32>,
+    /// The same coefficients in entropy-coding order (zigzag per block),
+    /// from the fused `quantize_zigzag_batch` path — what the encoder
+    /// consumes directly, skipping the planar round-trip.
+    pub scanned: ScanCoefs,
     /// Padded dimensions the coefficients use.
     pub padded_width: usize,
     pub padded_height: usize,
@@ -68,14 +73,21 @@ impl CpuPipeline {
         let (_, gh) = grid_dims(padded.width, padded.height);
         let mut recon = GrayImage::new(padded.width, padded.height);
         let mut qcoef = vec![0.0f32; padded.pixels()];
+        let mut scanned = ScanCoefs::zeroed(
+            img.width,
+            img.height,
+            padded.width,
+            padded.height,
+        );
         self.engine.with_scratch(|s| {
             for by in 0..gh {
                 self.engine.forward_quant_row(
                     s,
                     &padded,
                     by,
-                    &mut qcoef,
+                    Some(&mut qcoef),
                     by,
+                    Some(&mut scanned.data),
                     Some((&mut recon, by)),
                 );
             }
@@ -90,6 +102,7 @@ impl CpuPipeline {
         CpuCompressOutput {
             recon,
             qcoef,
+            scanned,
             padded_width: padded.width,
             padded_height: padded.height,
         }
@@ -104,11 +117,45 @@ impl CpuPipeline {
         self.engine.with_scratch(|s| {
             for by in 0..gh {
                 self.engine.forward_quant_row(
-                    s, &padded, by, &mut qcoef, by, None,
+                    s,
+                    &padded,
+                    by,
+                    Some(&mut qcoef),
+                    by,
+                    None,
+                    None,
                 );
             }
         });
         (qcoef, padded.width, padded.height)
+    }
+
+    /// Forward transform + quantization straight to entropy-coding order
+    /// — the fused front half; no planar f32 interchange buffer is
+    /// allocated or written at all.
+    pub fn analyze_scanned(&self, img: &GrayImage) -> ScanCoefs {
+        let padded = pad_to_blocks(img);
+        let (_, gh) = grid_dims(padded.width, padded.height);
+        let mut scanned = ScanCoefs::zeroed(
+            img.width,
+            img.height,
+            padded.width,
+            padded.height,
+        );
+        self.engine.with_scratch(|s| {
+            for by in 0..gh {
+                self.engine.forward_quant_row(
+                    s,
+                    &padded,
+                    by,
+                    None,
+                    by,
+                    Some(&mut scanned.data),
+                    None,
+                );
+            }
+        });
+        scanned
     }
 
     /// Decode planar quantized coefficients back to an image (the decoder
@@ -210,6 +257,26 @@ mod tests {
         assert_eq!(qcoef, full.qcoef);
         let recon = pipe.decode_coefficients(&qcoef, pw, ph, 40, 32);
         assert_eq!(recon, full.recon);
+    }
+
+    #[test]
+    fn scanned_output_matches_planar_rescan() {
+        use crate::codec::encoder::ScanCoefs;
+        // the fused zigzag stream is exactly the planar buffer re-scanned
+        for (w, h) in [(40, 32), (30, 21)] {
+            let img = synthetic::lena_like(w, h, 6);
+            let pipe = CpuPipeline::new(Variant::Cordic, 50);
+            let full = pipe.compress(&img);
+            let want = ScanCoefs::from_planar(
+                &full.qcoef,
+                full.padded_width,
+                full.padded_height,
+                w,
+                h,
+            );
+            assert_eq!(full.scanned, want);
+            assert_eq!(pipe.analyze_scanned(&img), want);
+        }
     }
 
     #[test]

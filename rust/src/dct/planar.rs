@@ -1,0 +1,270 @@
+//! Planar-batch job representation: the uniform shape every lane
+//! consumes, one plane for grayscale and three (Y/Cb/Cr) for color.
+//!
+//! ```text
+//!                 gray job                      color job
+//!            ┌───────────────┐       ┌─────┐ ┌────┐ ┌────┐
+//!            │   Y (w x h)   │       │  Y  │ │ Cb │ │ Cr │   N ∈ {1, 3}
+//!            └───────────────┘       │ wxh │ │cwxch│ │cwxch│  planes
+//!                                    └─────┘ └────┘ └────┘
+//!                  │                        │
+//!                  ▼ pad_to_blocks (8-aligned, edge replication)
+//!            ┌────────────────────────────────────────────┐
+//!            │ per plane: block grid gw x gh, walked in   │
+//!            │ BlockBatch8 gathers (8 blocks per batch,   │
+//!            │ lane-major SoA — see dct::batch)           │
+//!            └────────────────────────────────────────────┘
+//! ```
+//!
+//! (This layout diagram is promoted into `ARCHITECTURE.md` — keep the
+//! two copies in sync.)
+//!
+//! [`PlanarBatch`] is what `runtime::Executor` accepts: the CPU lanes'
+//! [`ColorPipeline`](super::color::ColorPipeline) produces the identical
+//! plane decomposition through [`split_ycbcr`], so a GPU-lane job and a
+//! CPU-lane job start from bit-identical planes. Each plane carries its
+//! quantization role ([`PlaneRole`]) — luma planes divide by the Annex K
+//! luma table, chroma planes by the chroma table — and the planes are
+//! independent until reassembly ([`PlanarBatch::reassemble_color`]), so
+//! the executor may run them in parallel.
+
+use anyhow::Result;
+
+use crate::image::color::ColorImage;
+use crate::image::ycbcr::{self, Subsampling};
+use crate::image::GrayImage;
+
+use super::blocks::{align8, grid_dims, pad_to_blocks};
+
+/// Which quantization table a plane runs under.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlaneRole {
+    /// Full-resolution luminance (also the single plane of a gray job).
+    Luma,
+    /// Subsampled Cb/Cr chrominance.
+    Chroma,
+}
+
+/// One plane of a planar batch at its natural (pre-padding) resolution.
+/// The 8-aligned padded form (edge replication — the exact
+/// `pad_to_blocks` the CPU pipelines apply, so padded pixels match
+/// across lanes) is computed on demand by [`Plane::padded`]: the stub
+/// backend pads inside the CPU pipeline, so only the PJRT path
+/// materializes it.
+#[derive(Clone, Debug)]
+pub struct Plane {
+    /// The plane at its natural (pre-padding) resolution.
+    pub image: GrayImage,
+    pub role: PlaneRole,
+}
+
+impl Plane {
+    pub fn new(image: GrayImage, role: PlaneRole) -> Plane {
+        Plane { image, role }
+    }
+
+    /// 8-aligned padded plane the block grid runs over (edge
+    /// replication), materialized on demand.
+    pub fn padded(&self) -> GrayImage {
+        pad_to_blocks(&self.image)
+    }
+
+    /// Block-grid dimensions of the padded plane.
+    pub fn grid(&self) -> (usize, usize) {
+        let (pw, ph) = self.padded_dims();
+        grid_dims(pw, ph)
+    }
+
+    /// Padded (8-aligned) plane size.
+    pub fn padded_dims(&self) -> (usize, usize) {
+        (align8(self.image.width), align8(self.image.height))
+    }
+}
+
+/// Split an RGB image into the three planes every lane compresses:
+/// full-resolution Y plus subsampled Cb/Cr (BT.601, box downsample).
+/// This is THE plane decomposition — the CPU color pipeline and the
+/// GPU-lane planar batch both call it, so parity starts at the input.
+pub fn split_ycbcr(
+    img: &ColorImage,
+    subsampling: Subsampling,
+) -> (GrayImage, GrayImage, GrayImage) {
+    let (y, cb, cr) = ycbcr::rgb_to_ycbcr(img);
+    (
+        y,
+        ycbcr::downsample(&cb, subsampling),
+        ycbcr::downsample(&cr, subsampling),
+    )
+}
+
+/// A batch of 1 (gray) or 3 (YCbCr) planes — the uniform job shape the
+/// runtime executor consumes, built on `dct::batch::BlockBatch8` as the
+/// block-gather unit (every plane's block grid is walked in 8-wide
+/// lane-major batches by whichever backend runs it).
+#[derive(Clone, Debug)]
+pub struct PlanarBatch {
+    planes: Vec<Plane>,
+    /// Original image size (the size reconstruction crops back to).
+    pub width: usize,
+    pub height: usize,
+    /// Chroma subsampling of a color batch; `None` for gray.
+    pub subsampling: Option<Subsampling>,
+}
+
+impl PlanarBatch {
+    /// Single-plane batch from a grayscale image.
+    pub fn from_gray(img: &GrayImage) -> PlanarBatch {
+        PlanarBatch {
+            width: img.width,
+            height: img.height,
+            subsampling: None,
+            planes: vec![Plane::new(img.clone(), PlaneRole::Luma)],
+        }
+    }
+
+    /// Three-plane batch from an RGB image: BT.601 split + chroma
+    /// subsampling, identical to the CPU color pipeline's decomposition.
+    pub fn from_color(
+        img: &ColorImage,
+        subsampling: Subsampling,
+    ) -> PlanarBatch {
+        let (y, cb, cr) = split_ycbcr(img, subsampling);
+        PlanarBatch {
+            width: img.width,
+            height: img.height,
+            subsampling: Some(subsampling),
+            planes: vec![
+                Plane::new(y, PlaneRole::Luma),
+                Plane::new(cb, PlaneRole::Chroma),
+                Plane::new(cr, PlaneRole::Chroma),
+            ],
+        }
+    }
+
+    pub fn planes(&self) -> &[Plane] {
+        &self.planes
+    }
+
+    pub fn len(&self) -> usize {
+        self.planes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.planes.is_empty()
+    }
+
+    pub fn is_color(&self) -> bool {
+        self.planes.len() == 3
+    }
+
+    /// Padded shapes (h, w) per plane — what artifact lookup keys on.
+    pub fn padded_shapes(&self) -> Vec<(usize, usize)> {
+        self.planes
+            .iter()
+            .map(|p| {
+                let (pw, ph) = p.padded_dims();
+                (ph, pw)
+            })
+            .collect()
+    }
+
+    /// Reassemble reconstructed planes (Y full-res, Cb/Cr at their
+    /// subsampled size) back into an RGB image — the exact upsample +
+    /// BT.601 conversion the CPU color pipeline performs.
+    pub fn reassemble_color(
+        &self,
+        recon_y: &GrayImage,
+        recon_cb: &GrayImage,
+        recon_cr: &GrayImage,
+    ) -> Result<ColorImage> {
+        let sub = self
+            .subsampling
+            .ok_or_else(|| anyhow::anyhow!("gray batch has no RGB form"))?;
+        let cb_full =
+            ycbcr::upsample(recon_cb, sub, self.width, self.height);
+        let cr_full =
+            ycbcr::upsample(recon_cr, sub, self.width, self.height);
+        ycbcr::ycbcr_to_rgb(recon_y, &cb_full, &cr_full)
+    }
+
+    /// Expected padded plane shapes for a color image of `w x h` under a
+    /// subsampling mode (used for artifact-coverage checks without
+    /// building the batch).
+    pub fn color_padded_shapes(
+        w: usize,
+        h: usize,
+        subsampling: Subsampling,
+    ) -> [(usize, usize); 3] {
+        let (cw, ch) = subsampling.chroma_dims(w, h);
+        [
+            (align8(h), align8(w)),
+            (align8(ch), align8(cw)),
+            (align8(ch), align8(cw)),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synthetic;
+
+    #[test]
+    fn gray_batch_is_one_luma_plane() {
+        let img = synthetic::lena_like(30, 21, 1);
+        let b = PlanarBatch::from_gray(&img);
+        assert_eq!(b.len(), 1);
+        assert!(!b.is_color());
+        assert_eq!(b.planes()[0].role, PlaneRole::Luma);
+        assert_eq!(b.planes()[0].image, img);
+        assert_eq!(b.planes()[0].padded_dims(), (32, 24));
+        assert_eq!(b.planes()[0].grid(), (4, 3));
+        assert_eq!(b.padded_shapes(), vec![(24, 32)]);
+    }
+
+    #[test]
+    fn color_batch_matches_color_pipeline_split() {
+        use crate::dct::color::ColorPipeline;
+        use crate::dct::Variant;
+        let img = synthetic::lena_like_rgb(30, 21, 2);
+        let b = PlanarBatch::from_color(&img, Subsampling::S420);
+        assert_eq!(b.len(), 3);
+        assert!(b.is_color());
+        let pipe =
+            ColorPipeline::new(Variant::Dct, 50, Subsampling::S420);
+        let (y, cb, cr) = pipe.split_planes(&img);
+        assert_eq!(b.planes()[0].image, y);
+        assert_eq!(b.planes()[1].image, cb);
+        assert_eq!(b.planes()[2].image, cr);
+        assert_eq!(b.planes()[1].role, PlaneRole::Chroma);
+        assert_eq!(
+            b.padded_shapes(),
+            PlanarBatch::color_padded_shapes(30, 21, Subsampling::S420)
+                .to_vec()
+        );
+    }
+
+    #[test]
+    fn reassemble_matches_pipeline_reassembly() {
+        let img = synthetic::cablecar_like_rgb(30, 21, 3);
+        let b = PlanarBatch::from_color(&img, Subsampling::S420);
+        // identity "reconstruction": reassembling the split planes is the
+        // same RGB round-trip the color pipeline performs
+        let rgb = b
+            .reassemble_color(
+                &b.planes()[0].image,
+                &b.planes()[1].image,
+                &b.planes()[2].image,
+            )
+            .unwrap();
+        assert_eq!((rgb.width, rgb.height), (30, 21));
+        let gray = PlanarBatch::from_gray(&synthetic::lena_like(8, 8, 1));
+        assert!(gray
+            .reassemble_color(
+                &gray.planes()[0].image,
+                &gray.planes()[0].image,
+                &gray.planes()[0].image,
+            )
+            .is_err());
+    }
+}

@@ -14,33 +14,37 @@
 //!
 //! ## The three lanes
 //!
-//! | lane          | implementation                          | role |
-//! |---------------|-----------------------------------------|------|
-//! | `Cpu`         | [`dct::pipeline::CpuPipeline`], one thread | the paper's "CPU serial code" baseline |
-//! | `CpuParallel` | [`dct::parallel::ParallelCpuPipeline`], row-band tiles over scoped threads | the fair multi-core CPU number; bit-identical to `Cpu` |
-//! | `Gpu`         | [`runtime::Executor`] over cached PJRT executables | the paper's CUDA lane |
+//! | lane          | gray                                    | color |
+//! |---------------|-----------------------------------------|-------|
+//! | `Cpu`         | [`dct::pipeline::CpuPipeline`], one thread — the paper's "CPU serial code" baseline | [`dct::color::ColorPipeline`] over serial plane pipelines |
+//! | `CpuParallel` | [`dct::parallel::ParallelCpuPipeline`], row-band tiles over scoped threads; bit-identical to `Cpu` | `ColorPipeline` over parallel plane pipelines |
+//! | `Gpu`         | [`runtime::Executor`] over the backend's artifact surface (planar batch of 1) | `Executor::compress_color` (planar batch of 3, planes in parallel) |
 //!
 //! The parallel lane exists because comparing CUDA against one core
 //! flatters the GPU; it runs the *same arithmetic* as the serial lane
 //! (asserted bit-exact by `tests/parallel_parity.rs`) so the three-way
 //! comparison isolates scheduling from numerics. `Lane::Auto` routes to
-//! `Gpu` when an artifact covers the padded shape, else `Cpu`.
+//! `Gpu` when the backend covers the job — for gray, the artifact (or
+//! stub kind) at the padded shape; for color, all three padded plane
+//! shapes — else `Cpu`. See `ARCHITECTURE.md` for the full data-flow
+//! and batch-layout diagrams, and `docs/api/` for generated per-module
+//! API references (`cargo xtask doc-md`).
 //!
 //! ## The color workload
 //!
-//! | path    | implementation                                   | role |
-//! |---------|--------------------------------------------------|------|
-//! | color   | [`dct::color::ColorPipeline`] over [`image::ycbcr`] planes | YCbCr 4:4:4 / 4:2:2 / 4:2:0 compression on either CPU lane |
-//!
 //! The paper evaluates grayscale only; the color path extends the same
 //! Cordic-Loeffler pipeline to RGB by splitting into BT.601 YCbCr planes
-//! (luma + optionally subsampled chroma), running the *unchanged*
-//! grayscale pipeline per plane with the Annex K luma/chroma quantization
-//! tables, and entropy-coding the three planes into one `CDC3` container
-//! ([`codec::color`]). On an `R = G = B` input at 4:4:4 the luma path is
-//! bit-identical to the grayscale pipeline (`tests/color_parity.rs`);
-//! the planar decomposition is the batch shape a future GPU lane can
-//! consume uniformly (1 or 3 planes).
+//! (luma + optionally subsampled chroma) — the shared
+//! [`dct::planar::split_ycbcr`] decomposition every lane starts from —
+//! running the *unchanged* grayscale pipeline per plane with the Annex K
+//! luma/chroma quantization tables, and entropy-coding the three planes
+//! into one `CDC3` container ([`codec::color`]), fed from the fused
+//! zigzag output ([`codec::encoder::ScanCoefs`]). On an `R = G = B`
+//! input at 4:4:4 the luma path is bit-identical to the grayscale
+//! pipeline (`tests/color_parity.rs`); [`dct::planar::PlanarBatch`] (1
+//! or 3 planes) is the uniform job shape the GPU lane consumes, with
+//! stub-backend output bit-identical to the CPU lanes
+//! (`tests/gpu_color_parity.rs`).
 //!
 //! ## Layers
 //!
@@ -63,8 +67,9 @@
 //!   and `CDC3` color containers.
 //! * [`metrics`] — MSE / PSNR / SSIM, per-channel + luma-weighted color
 //!   metrics, and latency statistics.
-//! * [`runtime`] — the PJRT side: artifact manifest, executable cache,
-//!   literal marshaling.
+//! * [`runtime`] — the GPU lane: artifact manifest, PJRT executable
+//!   cache, the bit-exact stub backend, and the planar-batch executor
+//!   (gray + color, plane-parallel).
 //! * [`coordinator`] — router, per-lane batcher, worker pool, service
 //!   facade over all three lanes (gray and color compress requests).
 //! * [`bench`] — the measurement harness and the paper-table formatters

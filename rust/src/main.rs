@@ -2,15 +2,23 @@
 //!
 //! ```text
 //! cordic-dct compress   --input img.png --output out.cdc [--variant cordic]
-//!                       [--color --chroma 420]
+//!                       [--color --chroma 420] [--lane gpu]
 //! cordic-dct decompress --input out.cdc --output back.png
 //! cordic-dct serve      --requests 64 --scene lena --lane auto [--color]
-//! cordic-dct psnr       --a ref.png --b test.png
+//!                       [--stub-gpu]
+//! cordic-dct psnr       --a ref.png --b test.png [--color] [--lane gpu]
+//!                       [--json psnr.json]
 //! cordic-dct histeq     --input img.pgm --output eq.pgm [--lane gpu]
 //! cordic-dct synth      --scene cablecar --width 512 --height 512 --output x.png
 //! cordic-dct paper-tables [--quick]
 //! cordic-dct info
 //! ```
+//!
+//! `--lane gpu` on `compress`/`psnr`/`histeq` uses the PJRT artifacts
+//! when `artifacts/manifest.json` exists and otherwise falls back to the
+//! stub backend (host-side, bit-identical to the CPU lanes), so the
+//! GPU-lane paths — including `--lane gpu --color` — run in offline
+//! builds and CI.
 
 use std::path::PathBuf;
 use std::time::Instant;
@@ -101,12 +109,45 @@ fn parse_chroma(s: &str) -> Result<Subsampling> {
     })
 }
 
+/// Executor for the CLI's `--lane gpu` paths: the PJRT runtime when the
+/// artifact manifest loads, else the host-side stub backend (which
+/// computes every kind bit-identically to the CPU lanes, so offline
+/// builds and CI can drive the GPU-lane code end-to-end).
+fn gpu_executor(quality: u8) -> Result<cordic_dct::runtime::Executor> {
+    let rt = Runtime::new_or_stub("artifacts", quality);
+    if rt.is_stub() {
+        eprintln!(
+            "note: PJRT artifacts unavailable — GPU lane served by the \
+             stub backend"
+        );
+    }
+    Ok(cordic_dct::runtime::Executor::new(std::sync::Arc::new(rt)))
+}
+
+/// Build the `--lane gpu` executor and resolve the quality the backend
+/// actually quantizes at (the PJRT manifest's may override `--quality`;
+/// the container header must record the effective one).
+fn gpu_lane(quality: u8)
+            -> Result<(cordic_dct::runtime::Executor, u8)> {
+    let ex = gpu_executor(quality)?;
+    let backend_quality = ex.rt.quality();
+    if backend_quality != quality {
+        eprintln!(
+            "note: GPU backend quantizes at quality {backend_quality}; \
+             ignoring --quality {quality}"
+        );
+    }
+    Ok((ex, backend_quality))
+}
+
 fn cmd_compress(args: &[String]) -> Result<()> {
     let m = Command::new("compress", "compress an image to .cdc")
         .opt_req("input", "input image (.pgm/.ppm/.bmp/.png)")
         .opt_req("output", "output .cdc path")
         .opt("variant", "cordic", "transform: dct|loeffler|cordic|naive")
         .opt("quality", "50", "IJG quality 1..100")
+        .opt("lane", "cpu", "cpu|gpu (gpu falls back to the stub backend \
+                             without artifacts)")
         .opt("recon", "", "also write the reconstruction here")
         .flag("color", "keep RGB and write a CDC3 color container")
         .opt("chroma", "420", "chroma subsampling for --color: 444|422|420")
@@ -114,26 +155,43 @@ fn cmd_compress(args: &[String]) -> Result<()> {
         .parse(args)?;
     let variant = parse_variant(m.get("variant"))?;
     let quality = m.get_usize("quality")? as u8;
+    let lane = parse_lane(m.get("lane"))?;
+    anyhow::ensure!(
+        matches!(lane, Lane::Cpu | Lane::Gpu),
+        "compress supports --lane cpu|gpu; use `serve` for the \
+         cpu-parallel and auto lanes"
+    );
     if m.flag("color") {
-        return compress_color_file(&m, variant, quality);
+        return compress_color_file(&m, variant, quality, lane);
     }
     let img = GrayImage::load(m.get("input"))?;
-    let pipe = CpuPipeline::new(variant, quality);
     let t0 = Instant::now();
-    let out = pipe.compress(&img);
+    // both lanes hand the encoder the fused zigzag output directly; the
+    // header records the quality the lane actually quantized at
+    let (recon, scanned, quality) = match lane {
+        Lane::Gpu => {
+            let (ex, quality) = gpu_lane(quality)?;
+            let out = ex.compress(&img, variant.as_str())?;
+            (out.recon, out.scanned, quality)
+        }
+        _ => {
+            let out = CpuPipeline::new(variant, quality).compress(&img);
+            (out.recon, out.scanned, quality)
+        }
+    };
     let header = codec::Header {
         width: img.width as u32,
         height: img.height as u32,
-        padded_width: out.padded_width as u32,
-        padded_height: out.padded_height as u32,
+        padded_width: scanned.padded_width as u32,
+        padded_height: scanned.padded_height as u32,
         quality,
         variant: codec::variant_tag(variant),
     };
-    let bytes = encoder::encode(&header, &out.qcoef)?;
+    let bytes = encoder::encode_scanned(&header, &scanned)?;
     let elapsed = t0.elapsed().as_secs_f64() * 1e3;
     std::fs::write(m.get("output"), &bytes)
         .with_context(|| format!("writing {}", m.get("output")))?;
-    let p = metrics::psnr(&img, &out.recon);
+    let p = metrics::psnr(&img, &recon);
     println!(
         "{} -> {} ({} -> {} bytes, ratio {:.1}x, PSNR {:.2} dB{})",
         m.get("input"),
@@ -150,7 +208,7 @@ fn cmd_compress(args: &[String]) -> Result<()> {
     );
     let recon_path = m.get("recon");
     if !recon_path.is_empty() {
-        out.recon.save(recon_path)?;
+        recon.save(recon_path)?;
     }
     Ok(())
 }
@@ -159,12 +217,25 @@ fn compress_color_file(
     m: &cordic_dct::util::cli::Matches,
     variant: Variant,
     quality: u8,
+    lane: Lane,
 ) -> Result<()> {
     let img = ColorImage::load(m.get("input"))?;
     let chroma = parse_chroma(m.get("chroma"))?;
-    let pipe = ColorPipeline::new(variant, quality, chroma);
     let t0 = Instant::now();
-    let out = pipe.compress(&img);
+    // every lane feeds the color container from the fused zigzag
+    // planes; the header records the quality the lane quantized at
+    let (recon, scanned, quality) = match lane {
+        Lane::Gpu => {
+            let (ex, quality) = gpu_lane(quality)?;
+            let out = ex.compress_color(&img, variant, chroma)?;
+            (out.recon, out.scanned, quality)
+        }
+        _ => {
+            let out =
+                ColorPipeline::new(variant, quality, chroma).compress(&img);
+            (out.recon, out.scanned, quality)
+        }
+    };
     let header = color_codec::ColorHeader {
         width: img.width as u32,
         height: img.height as u32,
@@ -172,11 +243,11 @@ fn compress_color_file(
         variant: codec::variant_tag(variant),
         subsampling: color_codec::subsampling_tag(chroma),
     };
-    let bytes = color_codec::encode(&header, &out.planes)?;
+    let bytes = color_codec::encode_scanned(&header, &scanned)?;
     let elapsed = t0.elapsed().as_secs_f64() * 1e3;
     std::fs::write(m.get("output"), &bytes)
         .with_context(|| format!("writing {}", m.get("output")))?;
-    let p = psnr_color(&img, &out.recon);
+    let p = psnr_color(&img, &recon);
     println!(
         "{} -> {} ({} {} -> {} bytes, ratio {:.1}x, PSNR R {:.2} \
          G {:.2} B {:.2} Y {:.2} weighted {:.2} dB{})",
@@ -199,7 +270,7 @@ fn compress_color_file(
     );
     let recon_path = m.get("recon");
     if !recon_path.is_empty() {
-        out.recon.save(recon_path)?;
+        recon.save(recon_path)?;
     }
     Ok(())
 }
@@ -269,6 +340,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("queue", "256", "queue capacity")
         .opt("batch", "8", "gpu max batch")
         .opt("artifacts", "artifacts", "artifact dir ('' disables GPU lane)")
+        .flag("stub-gpu",
+              "serve the GPU lane with the host-side stub backend when \
+               no artifact manifest exists")
         .parse(args)?;
     let n = m.get_usize("requests")?;
     let size = m.get_usize("size")?;
@@ -290,6 +364,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let adir = m.get("artifacts");
     cfg.artifact_dir =
         (!adir.is_empty()).then(|| PathBuf::from(adir));
+    cfg.stub_gpu = m.flag("stub-gpu");
     let svc = Service::start(cfg)?;
     println!(
         "serving {n} x {size}x{size} '{}' {} requests on lane {:?} \
@@ -359,19 +434,80 @@ fn cmd_psnr(args: &[String]) -> Result<()> {
     let m = Command::new("psnr", "PSNR between two images")
         .opt_req("a", "reference image")
         .opt_req("b", "test image")
-        .opt("lane", "cpu", "cpu|gpu (gpu uses the PSNR artifact)")
+        .opt("lane", "cpu",
+             "cpu|gpu (gpu uses the PSNR artifact, or the stub backend \
+              without artifacts)")
+        .flag("color", "compare as RGB: per-channel + luma-weighted PSNR")
+        .opt("json", "", "also write the figures as a JSON artifact here")
         .parse(args)?;
+    let lane = parse_lane(m.get("lane"))?;
+    let lane_str = if lane == Lane::Gpu { "gpu" } else { "cpu" };
+    if m.flag("color") {
+        let a = ColorImage::load(m.get("a"))?;
+        let b = ColorImage::load(m.get("b"))?;
+        let p = match lane {
+            Lane::Gpu => gpu_executor(50)?.psnr_color(&a, &b)?,
+            _ => psnr_color(&a, &b),
+        };
+        println!(
+            "PSNR({}, {}) = R {:.2} G {:.2} B {:.2} Y {:.2} \
+             weighted {:.2} dB [{lane_str}]",
+            m.get("a"),
+            m.get("b"),
+            p.r,
+            p.g,
+            p.b,
+            p.y,
+            p.weighted
+        );
+        write_psnr_json(&m, lane_str, true, &[
+            ("psnr_r", p.r),
+            ("psnr_g", p.g),
+            ("psnr_b", p.b),
+            ("psnr_y", p.y),
+            ("psnr_weighted", p.weighted),
+        ])?;
+        return Ok(());
+    }
     let a = GrayImage::load(m.get("a"))?;
     let b = GrayImage::load(m.get("b"))?;
-    let p = match parse_lane(m.get("lane"))? {
-        Lane::Gpu => {
-            let rt = std::sync::Arc::new(Runtime::new("artifacts")?);
-            cordic_dct::runtime::Executor::new(rt).psnr(&a, &b)?
-        }
+    let p = match lane {
+        Lane::Gpu => gpu_executor(50)?.psnr(&a, &b)?,
         _ => metrics::psnr(&a, &b),
     };
+    let s = metrics::ssim(&a, &b);
     println!("PSNR({}, {}) = {p:.6} dB", m.get("a"), m.get("b"));
-    println!("SSIM = {:.4}", metrics::ssim(&a, &b));
+    println!("SSIM = {s:.4}");
+    write_psnr_json(&m, lane_str, false, &[("psnr", p), ("ssim", s)])?;
+    Ok(())
+}
+
+/// Emit the `psnr` subcommand's figures as a JSON artifact (the CI
+/// bench-smoke job uploads the GPU-lane color one next to the bench
+/// JSON) when `--json <path>` was given.
+fn write_psnr_json(
+    m: &cordic_dct::util::cli::Matches,
+    lane: &str,
+    color: bool,
+    figures: &[(&str, f64)],
+) -> Result<()> {
+    use cordic_dct::util::json::Json;
+    let path = m.get("json");
+    if path.is_empty() {
+        return Ok(());
+    }
+    let mut pairs = vec![
+        ("a", Json::str(m.get("a"))),
+        ("b", Json::str(m.get("b"))),
+        ("lane", Json::str(lane)),
+        ("color", Json::Bool(color)),
+    ];
+    for &(k, v) in figures {
+        pairs.push((k, Json::num(v)));
+    }
+    std::fs::write(path, Json::obj(pairs).to_string())
+        .with_context(|| format!("writing {path}"))?;
+    println!("wrote {path}");
     Ok(())
 }
 
@@ -384,10 +520,7 @@ fn cmd_histeq(args: &[String]) -> Result<()> {
     let img = GrayImage::load(m.get("input"))?;
     let t0 = Instant::now();
     let out = match parse_lane(m.get("lane"))? {
-        Lane::Gpu => {
-            let rt = std::sync::Arc::new(Runtime::new("artifacts")?);
-            cordic_dct::runtime::Executor::new(rt).histeq(&img)?.0
-        }
+        Lane::Gpu => gpu_executor(50)?.histeq(&img)?.0,
         _ => cordic_dct::image::histeq::histeq(&img),
     };
     println!(
@@ -479,7 +612,11 @@ fn cmd_info(args: &[String]) -> Result<()> {
     println!("cordic-dct {}", env!("CARGO_PKG_VERSION"));
     let dir = PathBuf::from(m.get("artifacts"));
     if !dir.join("manifest.json").exists() {
-        println!("artifacts: none at {} (run `make artifacts`)", dir.display());
+        println!(
+            "artifacts: none at {} (run `make artifacts`); GPU-lane CLI \
+             paths fall back to the stub backend",
+            dir.display()
+        );
         return Ok(());
     }
     let rt = Runtime::new(&dir)?;
@@ -488,14 +625,15 @@ fn cmd_info(args: &[String]) -> Result<()> {
         rt.platform(),
         rt.device_count()
     );
+    let manifest = rt.manifest().expect("PJRT runtime has a manifest");
     println!(
         "artifacts: {} entries at {} (quality {})",
-        rt.manifest.len(),
+        manifest.len(),
         dir.display(),
-        rt.manifest.quality
+        manifest.quality
     );
     for kind in ["compress", "psnr", "histeq", "dct", "compress_unfused"] {
-        let shapes = rt.manifest.shapes(kind);
+        let shapes = manifest.shapes(kind);
         if !shapes.is_empty() {
             println!("  {kind:<18} {} shapes", shapes.len());
         }

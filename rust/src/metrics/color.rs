@@ -32,6 +32,15 @@ pub struct ColorSsim {
     pub y: f64,
 }
 
+/// Combine per-plane MSEs with the 6:1:1 Y/Cb/Cr weighting — the one
+/// place the weighting constants live, shared by [`psnr_color`] and the
+/// GPU lane's `Executor::psnr_color` (whose per-plane figures run on
+/// the backend but whose weighted figure must use the exact same
+/// weighting as the CPU metric).
+pub fn weighted_ycbcr_mse(y_mse: f64, cb_mse: f64, cr_mse: f64) -> f64 {
+    (6.0 * y_mse + cb_mse + cr_mse) / 8.0
+}
+
 /// Per-channel and luma-weighted PSNR between two same-sized RGB images.
 pub fn psnr_color(a: &ColorImage, b: &ColorImage) -> ColorPsnr {
     assert_eq!(
@@ -43,7 +52,8 @@ pub fn psnr_color(a: &ColorImage, b: &ColorImage) -> ColorPsnr {
     let (ya, cba, cra) = rgb_to_ycbcr(a);
     let (yb, cbb, crb) = rgb_to_ycbcr(b);
     let my = mse(&ya, &yb);
-    let weighted = (6.0 * my + mse(&cba, &cbb) + mse(&cra, &crb)) / 8.0;
+    let weighted =
+        weighted_ycbcr_mse(my, mse(&cba, &cbb), mse(&cra, &crb));
     ColorPsnr {
         r: psnr_from_mse(channel_mse(0), 255.0),
         g: psnr_from_mse(channel_mse(1), 255.0),

@@ -1,19 +1,29 @@
-//! PJRT client wrapper + compiled-executable cache.
+//! PJRT client wrapper + compiled-executable cache, behind a backend
+//! switch.
 //!
-//! One `Runtime` per process: holds the PJRT CPU client and lazily
-//! compiles artifacts on first use (HLO text -> HloModuleProto ->
-//! XlaComputation -> PjRtLoadedExecutable), caching by artifact name.
-//! Executables are shared across worker threads via `Arc`.
+//! One `Runtime` per process. Two backends present the same artifact
+//! surface (`run_f32` over named kinds):
+//!
+//! * **PJRT** ([`Runtime::new`]) — holds the PJRT CPU client and lazily
+//!   compiles artifacts on first use (HLO text -> HloModuleProto ->
+//!   XlaComputation -> PjRtLoadedExecutable), caching by artifact name.
+//!   Executables are shared across worker threads via `Arc`.
+//! * **Stub** ([`Runtime::stub`]) — the host-side
+//!   [`StubBackend`](super::stub::StubBackend): every kind computed with
+//!   the CPU lanes' batched engine, bit-identical to the CPU pipelines.
+//!   This is what serves the GPU lane when no artifacts exist (offline
+//!   builds, CI) and what the parity suite locks against.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::log_debug;
 
 use super::manifest::{Artifact, Manifest};
+use super::stub::StubBackend;
 
 /// A compiled artifact ready to execute.
 pub struct Executable {
@@ -56,45 +66,158 @@ impl Executable {
     }
 }
 
-/// The process-wide runtime: PJRT client + executable cache.
-pub struct Runtime {
+/// PJRT half of the runtime: client + manifest + executable cache.
+struct PjrtBackend {
     client: xla::PjRtClient,
-    pub manifest: Manifest,
+    manifest: Manifest,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
 }
 
+enum Backend {
+    Pjrt(PjrtBackend),
+    Stub(StubBackend),
+}
+
+/// The process-wide runtime: artifact surface over one of two backends.
+pub struct Runtime {
+    backend: Backend,
+}
+
 impl Runtime {
-    /// Create a CPU PJRT runtime over an artifact directory.
+    /// Create a PJRT runtime over an artifact directory (requires the
+    /// real PJRT bindings and `make artifacts` output).
     pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
         let manifest = Manifest::load(artifact_dir)?;
         let client =
             xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime {
-            client,
-            manifest,
-            cache: Mutex::new(HashMap::new()),
+            backend: Backend::Pjrt(PjrtBackend {
+                client,
+                manifest,
+                cache: Mutex::new(HashMap::new()),
+            }),
         })
     }
 
+    /// Create the host-side stub runtime: no artifacts needed, every
+    /// kind computed bit-identically to the CPU lanes at the given IJG
+    /// quality. This is the offline stand-in for the GPU lane.
+    pub fn stub(quality: u8) -> Runtime {
+        Runtime {
+            backend: Backend::Stub(StubBackend::new(quality)),
+        }
+    }
+
+    /// The PJRT runtime when `artifact_dir` holds a loadable manifest,
+    /// else the stub backend at `quality` — the shared fallback the
+    /// CLI's `--lane gpu` paths and the benches use (the coordinator's
+    /// `ServiceConfig::stub_gpu` applies its own flag-gated policy).
+    pub fn new_or_stub(
+        artifact_dir: impl AsRef<std::path::Path>,
+        quality: u8,
+    ) -> Runtime {
+        let dir = artifact_dir.as_ref();
+        if dir.join("manifest.json").exists() {
+            // the vendored offline build has no real PJRT client even
+            // with a manifest present: fall through to the stub
+            match Runtime::new(dir) {
+                Ok(rt) => return rt,
+                Err(e) => crate::log_info!(
+                    "runtime",
+                    "PJRT unavailable ({e:#}); using the stub backend"
+                ),
+            }
+        }
+        Runtime::stub(quality)
+    }
+
+    /// Is this the host-side stub backend (no PJRT underneath)?
+    pub fn is_stub(&self) -> bool {
+        matches!(self.backend, Backend::Stub(_))
+    }
+
+    /// The stub backend, when active (the executor's fast path).
+    pub(crate) fn stub_backend(&self) -> Option<&StubBackend> {
+        match &self.backend {
+            Backend::Stub(s) => Some(s),
+            Backend::Pjrt(_) => None,
+        }
+    }
+
+    /// The artifact manifest (PJRT backend only — the stub needs none).
+    pub fn manifest(&self) -> Option<&Manifest> {
+        match &self.backend {
+            Backend::Pjrt(p) => Some(&p.manifest),
+            Backend::Stub(_) => None,
+        }
+    }
+
+    /// IJG quality the backend's compress path quantizes at.
+    pub fn quality(&self) -> u8 {
+        match &self.backend {
+            Backend::Pjrt(p) => p.manifest.quality,
+            Backend::Stub(s) => s.quality,
+        }
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Pjrt(p) => p.client.platform_name(),
+            Backend::Stub(_) => "stub".to_string(),
+        }
     }
 
     pub fn device_count(&self) -> usize {
-        self.client.device_count()
+        match &self.backend {
+            Backend::Pjrt(p) => p.client.device_count(),
+            // the stub computes on the host: one "device"
+            Backend::Stub(_) => 1,
+        }
     }
 
-    /// Number of executables compiled so far.
+    /// Number of executables compiled (PJRT) or host pipelines built
+    /// (stub) so far.
     pub fn cached_count(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        match &self.backend {
+            Backend::Pjrt(p) => p.cache.lock().unwrap().len(),
+            Backend::Stub(s) => s.cached_count(),
+        }
     }
 
-    /// Get (compiling if needed) the executable for a named artifact.
+    /// Does the backend cover `kind`/`variant` at the padded shape? The
+    /// stub covers every kind it implements at any 8-aligned shape; the
+    /// PJRT backend requires an exact manifest hit.
+    pub fn supports(
+        &self,
+        kind: &str,
+        variant: Option<&str>,
+        height: usize,
+        width: usize,
+    ) -> bool {
+        match &self.backend {
+            Backend::Pjrt(p) => {
+                p.manifest.find(kind, variant, height, width).is_some()
+            }
+            Backend::Stub(_) => matches!(
+                kind,
+                "compress" | "compress_chroma" | "psnr" | "histeq" | "dct"
+            ),
+        }
+    }
+
+    /// Get (compiling if needed) the executable for a named artifact
+    /// (PJRT backend only).
     pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
+        let p = match &self.backend {
+            Backend::Pjrt(p) => p,
+            Backend::Stub(_) => {
+                bail!("stub backend has no compiled executables")
+            }
+        };
+        if let Some(e) = p.cache.lock().unwrap().get(name) {
             return Ok(Arc::clone(e));
         }
-        let artifact = self
+        let artifact = p
             .manifest
             .get(name)
             .with_context(|| format!("artifact '{name}' not in manifest"))?
@@ -108,7 +231,7 @@ impl Runtime {
         )
         .with_context(|| format!("parsing {}", artifact.path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
+        let exe = p
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {name}"))?;
@@ -121,7 +244,7 @@ impl Runtime {
         });
         // racing threads may have compiled concurrently; first in wins
         Ok(Arc::clone(
-            self.cache
+            p.cache
                 .lock()
                 .unwrap()
                 .entry(name.to_string())
@@ -129,7 +252,7 @@ impl Runtime {
         ))
     }
 
-    /// Find-and-compile by kind/variant/shape.
+    /// Find-and-compile by kind/variant/shape (PJRT backend only).
     pub fn executable_for(
         &self,
         kind: &str,
@@ -137,7 +260,13 @@ impl Runtime {
         height: usize,
         width: usize,
     ) -> Result<Arc<Executable>> {
-        let name = self
+        let p = match &self.backend {
+            Backend::Pjrt(p) => p,
+            Backend::Stub(_) => {
+                bail!("stub backend has no compiled executables")
+            }
+        };
+        let name = p
             .manifest
             .find(kind, variant, height, width)
             .map(|a| a.name.clone())
@@ -145,15 +274,56 @@ impl Runtime {
                 format!(
                     "no artifact kind={kind} variant={variant:?} \
                      shape={height}x{width}; available shapes: {:?}",
-                    self.manifest.shapes(kind)
+                    p.manifest.shapes(kind)
                 )
             })?;
         self.executable(&name)
     }
 
-    /// Warm the cache for a set of artifacts (serving cold-start control).
+    /// Run one artifact kind over rank-2 f32 inputs — the uniform
+    /// backend surface: PJRT resolves and executes the compiled
+    /// artifact for the first input's shape; the stub computes host-side
+    /// with the CPU lanes' exact arithmetic.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use cordic_dct::runtime::Runtime;
+    ///
+    /// let rt = Runtime::stub(50);
+    /// let a = vec![10.0f32; 64];
+    /// let b = vec![12.0f32; 64];
+    /// let outs = rt
+    ///     .run_f32("psnr", None, &[(&a, 8, 8), (&b, 8, 8)])
+    ///     .unwrap();
+    /// // PSNR of two flat fields differing by 2 everywhere
+    /// assert!((outs[0][0] - 42.11).abs() < 0.01);
+    /// ```
+    pub fn run_f32(
+        &self,
+        kind: &str,
+        variant: Option<&str>,
+        inputs: &[(&[f32], usize, usize)],
+    ) -> Result<Vec<Vec<f32>>> {
+        match &self.backend {
+            Backend::Pjrt(_) => {
+                let (_, h, w) = *inputs
+                    .first()
+                    .context("run_f32 needs at least one input")?;
+                self.executable_for(kind, variant, h, w)?.run_f32(inputs)
+            }
+            Backend::Stub(s) => s.run_f32(kind, variant, inputs),
+        }
+    }
+
+    /// Warm the cache for a set of artifacts (serving cold-start
+    /// control; a no-op on the stub backend, which has nothing to
+    /// compile).
     pub fn warmup(&self, names: &[&str]) -> Result<f64> {
         let t0 = Instant::now();
+        if self.is_stub() {
+            return Ok(t0.elapsed().as_secs_f64() * 1e3);
+        }
         for n in names {
             self.executable(n)?;
         }
@@ -161,7 +331,8 @@ impl Runtime {
     }
 }
 
-// PJRT clients and executables are internally synchronized.
+// PJRT clients and executables are internally synchronized (the stub
+// backend is ordinary Send + Sync Rust data).
 unsafe impl Send for Runtime {}
 unsafe impl Sync for Runtime {}
 unsafe impl Send for Executable {}
@@ -217,5 +388,50 @@ mod tests {
         let rt = Runtime::new(dir).unwrap();
         assert!(rt.executable("no_such_artifact").is_err());
         assert!(rt.executable_for("compress", Some("dct"), 7, 7).is_err());
+    }
+
+    #[test]
+    fn stub_runtime_surface() {
+        let rt = Runtime::stub(50);
+        assert!(rt.is_stub());
+        assert_eq!(rt.platform(), "stub");
+        assert_eq!(rt.device_count(), 1);
+        assert_eq!(rt.quality(), 50);
+        assert!(rt.manifest().is_none());
+        // the stub covers every implemented kind at any 8-aligned shape
+        assert!(rt.supports("compress", Some("cordic"), 8, 8));
+        assert!(rt.supports("compress", Some("cordic"), 3072, 3072));
+        assert!(rt.supports("psnr", None, 200, 200));
+        assert!(!rt.supports("unknown_kind", None, 8, 8));
+        // no compiled executables exist on the stub
+        assert!(rt.executable("compress_dct_200x200").is_err());
+        assert!(rt
+            .executable_for("compress", Some("dct"), 200, 200)
+            .is_err());
+        // warmup is a harmless no-op, never an error, on the stub
+        assert!(rt.warmup(&["compress_dct_200x200"]).is_ok());
+    }
+
+    #[test]
+    fn new_or_stub_falls_back_without_artifacts() {
+        let rt = Runtime::new_or_stub("no_such_artifact_dir", 42);
+        assert!(rt.is_stub());
+        assert_eq!(rt.quality(), 42);
+    }
+
+    #[test]
+    fn stub_run_f32_matches_cpu_lane() {
+        use crate::dct::pipeline::CpuPipeline;
+        use crate::dct::Variant;
+        use crate::image::synthetic;
+        let rt = Runtime::stub(50);
+        let img = synthetic::lena_like(24, 16, 3);
+        let outs = rt
+            .run_f32("compress", Some("dct"), &[(&img.to_f32(), 16, 24)])
+            .unwrap();
+        let cpu = CpuPipeline::new(Variant::Dct, 50).compress(&img);
+        assert_eq!(outs[0], cpu.recon.to_f32());
+        assert_eq!(outs[1], cpu.qcoef);
+        assert_eq!(rt.cached_count(), 1);
     }
 }

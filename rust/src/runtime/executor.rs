@@ -1,30 +1,113 @@
-//! Typed executor: the GrayImage-level API over the PJRT runtime.
+//! Typed executor: the image-level API over the runtime backends.
 //! Owns pad-to-artifact-shape / crop-back and literal marshaling; this is
 //! the boundary the coordinator's GPU lane talks to.
+//!
+//! Since the planar-batch rework every compression job — gray or color —
+//! is a [`PlanarBatch`] of 1 or 3 planes. [`Executor::compress_planar`]
+//! runs the planes (in parallel when there are three: Y/Cb/Cr are
+//! independent until reassembly), each through the backend's artifact
+//! surface: the PJRT backend resolves one executable per padded plane
+//! shape (`compress` for luma, `compress_chroma` for chroma); the stub
+//! backend computes each plane bit-identically to the CPU lanes.
+//! [`Executor::compress_color`] adds the RGB reassembly on top.
 
 use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::codec::encoder::ScanCoefs;
 use crate::dct::blocks::align8;
+use crate::dct::color::PlaneCoef;
+use crate::dct::planar::{Plane, PlanarBatch, PlaneRole};
+use crate::dct::Variant;
+use crate::image::color::ColorImage;
+use crate::image::ycbcr::Subsampling;
 use crate::image::GrayImage;
 use crate::metrics::PSNR_CAP_DB;
 
 use super::client::Runtime;
 
-/// Result of a GPU-lane compression.
+/// Artifact kind a plane role resolves to on the PJRT backend.
+fn kind_for(role: PlaneRole) -> &'static str {
+    match role {
+        PlaneRole::Luma => "compress",
+        PlaneRole::Chroma => "compress_chroma",
+    }
+}
+
+/// Result of compressing one plane of a planar batch.
+pub struct PlaneOutcome {
+    /// Reconstruction cropped to the plane's pre-padding size.
+    pub recon: GrayImage,
+    /// Planar quantized coefficients at the padded plane shape (the
+    /// f32 interchange layout).
+    pub qcoef: Vec<f32>,
+    /// The same coefficients in entropy-coding order — what the encoder
+    /// consumes directly.
+    pub scanned: ScanCoefs,
+    pub padded_width: usize,
+    pub padded_height: usize,
+    /// Pure execute wall time for this plane (ms).
+    pub execute_ms: f64,
+}
+
+impl PlaneOutcome {
+    /// Split into (reconstruction, planar-interchange coefficients,
+    /// scan-ordered coefficients) by move — no clone of the plane-sized
+    /// buffers on the serving path.
+    pub fn into_parts(self) -> (GrayImage, PlaneCoef, ScanCoefs) {
+        let coef = PlaneCoef {
+            qcoef: self.qcoef,
+            width: self.scanned.width,
+            height: self.scanned.height,
+            padded_width: self.padded_width,
+            padded_height: self.padded_height,
+        };
+        (self.recon, coef, self.scanned)
+    }
+}
+
+/// Result of a planar-batch compression: one outcome per plane, in batch
+/// order (Y or Y/Cb/Cr).
+pub struct PlanarOutcome {
+    pub planes: Vec<PlaneOutcome>,
+    /// Wall time of the whole (possibly plane-parallel) execute section.
+    pub execute_ms: f64,
+}
+
+/// Result of a GPU-lane grayscale compression.
 pub struct CompressOutcome {
     /// Reconstruction cropped to the input size.
     pub recon: GrayImage,
     /// Planar quantized coefficients at the padded artifact shape.
     pub qcoef: Vec<f32>,
+    /// Zigzag-ordered coefficients for the entropy encoder.
+    pub scanned: ScanCoefs,
     pub padded_width: usize,
     pub padded_height: usize,
     /// Pure execute wall time (excludes padding/marshaling), ms.
     pub execute_ms: f64,
 }
 
-/// GrayImage-level operations over the runtime.
+/// Result of a GPU-lane color compression — mirrors
+/// `dct::color::ColorCompressOutput` so the coordinator emits identical
+/// payloads regardless of lane.
+pub struct ColorCompressOutcome {
+    /// Reconstructed RGB image at the original size.
+    pub recon: ColorImage,
+    /// Full-resolution reconstructed luma plane.
+    pub recon_y: GrayImage,
+    /// Reconstructed chroma planes at their subsampled resolution.
+    pub recon_cb: GrayImage,
+    pub recon_cr: GrayImage,
+    /// Planar interchange coefficients per plane, Y/Cb/Cr order.
+    pub planes: [PlaneCoef; 3],
+    /// Zigzag-ordered coefficients per plane for the entropy encoder.
+    pub scanned: [ScanCoefs; 3],
+    pub execute_ms: f64,
+}
+
+/// Image-level operations over the runtime.
 pub struct Executor {
     pub rt: Arc<Runtime>,
 }
@@ -39,45 +122,194 @@ impl Executor {
         (align8(img.height), align8(img.width))
     }
 
-    /// Full compression pipeline on the PJRT lane.
-    pub fn compress(&self, img: &GrayImage, variant: &str)
-                    -> Result<CompressOutcome> {
-        let (ph, pw) = self.padded_shape(img);
-        let exe = self
-            .rt
-            .executable_for("compress", Some(variant), ph, pw)?;
-        let padded = if (pw, ph) != (img.width, img.height) {
-            img.pad_edge(pw, ph)?
-        } else {
-            img.clone()
-        };
-        let input = padded.to_f32();
+    /// Can this backend run a grayscale compress at the image's padded
+    /// shape?
+    pub fn supports_gray(&self, img_w: usize, img_h: usize,
+                         variant: &str) -> bool {
+        self.rt.supports(
+            "compress",
+            Some(variant),
+            align8(img_h),
+            align8(img_w),
+        )
+    }
+
+    /// Can this backend run a color compress for a `w x h` RGB image at
+    /// the given subsampling (all three padded plane shapes covered)?
+    pub fn supports_color(
+        &self,
+        img_w: usize,
+        img_h: usize,
+        variant: &str,
+        subsampling: Subsampling,
+    ) -> bool {
+        let shapes =
+            PlanarBatch::color_padded_shapes(img_w, img_h, subsampling);
+        let roles =
+            [PlaneRole::Luma, PlaneRole::Chroma, PlaneRole::Chroma];
+        shapes.iter().zip(roles).all(|(&(h, w), role)| {
+            self.rt.supports(kind_for(role), Some(variant), h, w)
+        })
+    }
+
+    /// Compress one plane on the backend (blocking; used by the
+    /// plane-parallel fan-out).
+    fn compress_plane(&self, plane: &Plane, variant: Variant)
+                      -> Result<PlaneOutcome> {
+        if let Some(stub) = self.rt.stub_backend() {
+            // host-side: the exact CPU-lane pipeline (pads internally)
+            let t0 = std::time::Instant::now();
+            let out = stub.compress_plane(
+                &plane.image,
+                variant,
+                plane.role,
+            );
+            let execute_ms = t0.elapsed().as_secs_f64() * 1e3;
+            return Ok(PlaneOutcome {
+                recon: out.recon,
+                qcoef: out.qcoef,
+                scanned: out.scanned,
+                padded_width: out.padded_width,
+                padded_height: out.padded_height,
+                execute_ms,
+            });
+        }
+        let (pw, ph) = plane.padded_dims();
+        let exe = self.rt.executable_for(
+            kind_for(plane.role),
+            Some(variant.as_str()),
+            ph,
+            pw,
+        )?;
+        let input = plane.padded().to_f32();
         let t0 = std::time::Instant::now();
         let mut outs = exe.run_f32(&[(&input, ph, pw)])?;
         let execute_ms = t0.elapsed().as_secs_f64() * 1e3;
         anyhow::ensure!(outs.len() == 2, "compress emits (recon, qcoef)");
         let qcoef = outs.pop().expect("qcoef output");
         let recon_padded = GrayImage::from_f32(pw, ph, &outs[0])?;
-        let recon = if (pw, ph) != (img.width, img.height) {
-            recon_padded.crop(img.width, img.height)?
+        let (w, h) = (plane.image.width, plane.image.height);
+        let recon = if (pw, ph) != (w, h) {
+            recon_padded.crop(w, h)?
         } else {
             recon_padded
         };
-        Ok(CompressOutcome {
+        let scanned = ScanCoefs::from_planar(&qcoef, pw, ph, w, h);
+        Ok(PlaneOutcome {
             recon,
             qcoef,
+            scanned,
             padded_width: pw,
             padded_height: ph,
             execute_ms,
         })
     }
 
-    /// PSNR between two same-sized images on the PJRT lane.
+    /// Compress a planar batch: every plane through the backend, planes
+    /// in parallel when there are several (Y/Cb/Cr are independent until
+    /// reassembly).
+    pub fn compress_planar(
+        &self,
+        batch: &PlanarBatch,
+        variant: Variant,
+    ) -> Result<PlanarOutcome> {
+        anyhow::ensure!(!batch.is_empty(), "empty planar batch");
+        let t0 = std::time::Instant::now();
+        let outcomes: Vec<Result<PlaneOutcome>> =
+            if batch.len() == 1 {
+                vec![self.compress_plane(&batch.planes()[0], variant)]
+            } else {
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = batch
+                        .planes()
+                        .iter()
+                        .map(|p| {
+                            scope.spawn(move || {
+                                self.compress_plane(p, variant)
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("plane worker panicked"))
+                        .collect()
+                })
+            };
+        let execute_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let planes: Vec<PlaneOutcome> =
+            outcomes.into_iter().collect::<Result<_>>()?;
+        Ok(PlanarOutcome { planes, execute_ms })
+    }
+
+    /// Full grayscale compression pipeline on the backend lane.
+    pub fn compress(&self, img: &GrayImage, variant: &str)
+                    -> Result<CompressOutcome> {
+        let variant = Variant::parse(variant)
+            .with_context(|| format!("unknown variant '{variant}'"))?;
+        let batch = PlanarBatch::from_gray(img);
+        let out = self.compress_planar(&batch, variant)?;
+        let execute_ms = out.execute_ms;
+        let p = out.planes.into_iter().next().expect("one plane");
+        Ok(CompressOutcome {
+            recon: p.recon,
+            qcoef: p.qcoef,
+            scanned: p.scanned,
+            padded_width: p.padded_width,
+            padded_height: p.padded_height,
+            execute_ms,
+        })
+    }
+
+    /// Full color (YCbCr) compression pipeline on the backend lane:
+    /// split/subsample exactly as the CPU color pipeline does, compress
+    /// the three planes in parallel, reassemble the RGB reconstruction.
+    pub fn compress_color(
+        &self,
+        img: &ColorImage,
+        variant: Variant,
+        subsampling: Subsampling,
+    ) -> Result<ColorCompressOutcome> {
+        let batch = PlanarBatch::from_color(img, subsampling);
+        let out = self.compress_planar(&batch, variant)?;
+        let execute_ms = out.execute_ms;
+        let mut planes = out.planes;
+        anyhow::ensure!(planes.len() == 3, "color batch has 3 planes");
+        let (recon_cr, coef_cr, scan_cr) =
+            planes.pop().expect("cr").into_parts();
+        let (recon_cb, coef_cb, scan_cb) =
+            planes.pop().expect("cb").into_parts();
+        let (recon_y, coef_y, scan_y) =
+            planes.pop().expect("y").into_parts();
+        let recon =
+            batch.reassemble_color(&recon_y, &recon_cb, &recon_cr)?;
+        Ok(ColorCompressOutcome {
+            recon,
+            recon_y,
+            recon_cb,
+            recon_cr,
+            planes: [coef_y, coef_cb, coef_cr],
+            scanned: [scan_y, scan_cb, scan_cr],
+            execute_ms,
+        })
+    }
+
+    /// PSNR between two same-sized images on the backend lane.
     pub fn psnr(&self, a: &GrayImage, b: &GrayImage) -> Result<f64> {
         anyhow::ensure!(
             (a.width, a.height) == (b.width, b.height),
             "psnr over mismatched sizes"
         );
+        if self.rt.is_stub() {
+            // the stub handles unaligned shapes: no pad distortion
+            let fa = a.to_f32();
+            let fb = b.to_f32();
+            let outs = self.rt.run_f32(
+                "psnr",
+                None,
+                &[(&fa, a.height, a.width), (&fb, b.height, b.width)],
+            )?;
+            return Ok((outs[0][0] as f64).min(PSNR_CAP_DB));
+        }
         let (ph, pw) = self.padded_shape(a);
         let exe = self.rt.executable_for("psnr", None, ph, pw)?;
         let (pa, pb) = if (pw, ph) != (a.width, a.height) {
@@ -95,10 +327,43 @@ impl Executor {
         Ok((v as f64).min(PSNR_CAP_DB))
     }
 
-    /// Histogram equalization on the PJRT lane.
+    /// Per-channel + luma color PSNR on the backend lane: every plane
+    /// figure (R/G/B channels and the BT.601 luma plane) runs through
+    /// the backend's `psnr` kind; the 6:1:1 Y/Cb/Cr-weighted figure is
+    /// combined host-side from plane MSEs, since the backend emits
+    /// PSNRs, not MSEs. This is what `cordic-dct psnr --color --lane
+    /// gpu` emits as its JSON artifact.
+    pub fn psnr_color(
+        &self,
+        a: &ColorImage,
+        b: &ColorImage,
+    ) -> Result<crate::metrics::color::ColorPsnr> {
+        use crate::image::ycbcr::rgb_to_ycbcr;
+        use crate::metrics::color::weighted_ycbcr_mse;
+        use crate::metrics::{mse, psnr_from_mse};
+        anyhow::ensure!(
+            (a.width, a.height) == (b.width, b.height),
+            "color psnr over mismatched sizes"
+        );
+        let (ya, cba, cra) = rgb_to_ycbcr(a);
+        let (yb, cbb, crb) = rgb_to_ycbcr(b);
+        let weighted_mse = weighted_ycbcr_mse(
+            mse(&ya, &yb),
+            mse(&cba, &cbb),
+            mse(&cra, &crb),
+        );
+        Ok(crate::metrics::color::ColorPsnr {
+            r: self.psnr(&a.channel(0), &b.channel(0))?,
+            g: self.psnr(&a.channel(1), &b.channel(1))?,
+            b: self.psnr(&a.channel(2), &b.channel(2))?,
+            y: self.psnr(&ya, &yb)?,
+            weighted: psnr_from_mse(weighted_mse, 255.0),
+        })
+    }
+
+    /// Histogram equalization on the backend lane.
     pub fn histeq(&self, img: &GrayImage) -> Result<(GrayImage, f64)> {
         let (ph, pw) = self.padded_shape(img);
-        let exe = self.rt.executable_for("histeq", None, ph, pw)?;
         let padded = if (pw, ph) != (img.width, img.height) {
             img.pad_edge(pw, ph)?
         } else {
@@ -106,7 +371,7 @@ impl Executor {
         };
         let input = padded.to_f32();
         let t0 = std::time::Instant::now();
-        let outs = exe.run_f32(&[(&input, ph, pw)])?;
+        let outs = self.rt.run_f32("histeq", None, &[(&input, ph, pw)])?;
         let execute_ms = t0.elapsed().as_secs_f64() * 1e3;
         let out_padded = GrayImage::from_f32(pw, ph, &outs[0])?;
         let out = if (pw, ph) != (img.width, img.height) {
@@ -117,13 +382,17 @@ impl Executor {
         Ok((out, execute_ms))
     }
 
-    /// Bare forward DCT (microbench entry; 512x512 artifacts only).
+    /// Bare forward DCT (microbench entry; 512x512 artifacts only on the
+    /// PJRT backend — the stub covers any 8-aligned shape).
     pub fn dct_only(&self, img: &GrayImage, variant: &str)
                     -> Result<Vec<f32>> {
         let (ph, pw) = self.padded_shape(img);
-        let exe = self.rt.executable_for("dct", Some(variant), ph, pw)?;
         let input = img.to_f32();
-        let outs = exe.run_f32(&[(&input, ph, pw)])?;
+        let outs = self.rt.run_f32(
+            "dct",
+            Some(variant),
+            &[(&input, ph, pw)],
+        )?;
         Ok(outs.into_iter().next().context("dct output")?)
     }
 }
@@ -142,6 +411,10 @@ mod tests {
             return None;
         }
         Some(Executor::new(Arc::new(Runtime::new(dir).unwrap())))
+    }
+
+    fn stub_executor(quality: u8) -> Executor {
+        Executor::new(Arc::new(Runtime::stub(quality)))
     }
 
     #[test]
@@ -216,5 +489,83 @@ mod tests {
         assert_eq!((out.recon.width, out.recon.height), (814, 1024));
         assert_eq!((out.padded_width, out.padded_height), (816, 1024));
         assert!(metrics::psnr(&img, &out.recon) > 28.0);
+    }
+
+    #[test]
+    fn stub_gray_compress_bit_identical_to_cpu_lane() {
+        let ex = stub_executor(50);
+        let img = synthetic::lena_like(30, 21, 6);
+        let gpu = ex.compress(&img, "cordic").unwrap();
+        let cpu = crate::dct::pipeline::CpuPipeline::new(
+            crate::dct::Variant::Cordic,
+            50,
+        )
+        .compress(&img);
+        assert_eq!(gpu.recon, cpu.recon);
+        assert_eq!(gpu.qcoef, cpu.qcoef);
+        assert_eq!(gpu.scanned, cpu.scanned);
+        assert_eq!(
+            (gpu.padded_width, gpu.padded_height),
+            (cpu.padded_width, cpu.padded_height)
+        );
+    }
+
+    #[test]
+    fn stub_color_compress_bit_identical_to_color_pipeline() {
+        use crate::dct::color::ColorPipeline;
+        use crate::dct::Variant;
+        let ex = stub_executor(50);
+        let img = synthetic::lena_like_rgb(30, 21, 7);
+        let gpu = ex
+            .compress_color(&img, Variant::Cordic, Subsampling::S420)
+            .unwrap();
+        let cpu =
+            ColorPipeline::new(Variant::Cordic, 50, Subsampling::S420)
+                .compress(&img);
+        assert_eq!(gpu.recon, cpu.recon);
+        assert_eq!(gpu.recon_y, cpu.recon_y);
+        assert_eq!(gpu.recon_cb, cpu.recon_cb);
+        assert_eq!(gpu.recon_cr, cpu.recon_cr);
+        assert_eq!(gpu.planes, cpu.planes);
+        assert_eq!(gpu.scanned, cpu.scanned);
+    }
+
+    #[test]
+    fn stub_psnr_color_matches_cpu_metric() {
+        use crate::metrics::color::psnr_color as cpu_psnr_color;
+        let ex = stub_executor(50);
+        let a = synthetic::lena_like_rgb(30, 21, 5);
+        let b = synthetic::cablecar_like_rgb(30, 21, 5);
+        let gpu = ex.psnr_color(&a, &b).unwrap();
+        let cpu = cpu_psnr_color(&a, &b);
+        // plane figures round-trip through the backend's f32 output
+        assert!((gpu.r - cpu.r).abs() < 1e-4);
+        assert!((gpu.g - cpu.g).abs() < 1e-4);
+        assert!((gpu.b - cpu.b).abs() < 1e-4);
+        assert!((gpu.y - cpu.y).abs() < 1e-4);
+        // the weighted figure is combined host-side: exact
+        assert_eq!(gpu.weighted, cpu.weighted);
+        let capped = ex.psnr_color(&a, &a).unwrap();
+        assert_eq!(capped.weighted, metrics::PSNR_CAP_DB);
+    }
+
+    #[test]
+    fn stub_supports_gray_and_color() {
+        let ex = stub_executor(50);
+        assert!(ex.supports_gray(30, 21, "cordic"));
+        assert!(ex.supports_color(30, 21, "dct", Subsampling::S420));
+        let (out, _ms) = ex
+            .histeq(&synthetic::cablecar_like(24, 24, 1))
+            .unwrap();
+        assert_eq!(
+            out,
+            cpu_histeq::histeq(&synthetic::cablecar_like(24, 24, 1))
+        );
+        // unaligned psnr runs without pad distortion on the stub
+        let a = synthetic::lena_like(30, 21, 2);
+        let b = synthetic::cablecar_like(30, 21, 2);
+        let p = ex.psnr(&a, &b).unwrap();
+        assert!((p - metrics::psnr(&a, &b)).abs() < 1e-4);
+        assert_eq!(ex.psnr(&a, &a).unwrap(), metrics::PSNR_CAP_DB);
     }
 }

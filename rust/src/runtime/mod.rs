@@ -1,19 +1,29 @@
-//! The PJRT runtime: loads AOT-compiled HLO-text artifacts (produced by
-//! `make artifacts` from the JAX/Pallas layers) and executes them on the
-//! XLA CPU client. This is the paper's "GPU lane" — the massively-parallel
-//! kernel path — adapted per DESIGN.md §Hardware-Adaptation.
+//! The runtime: the paper's "GPU lane" — the massively-parallel kernel
+//! path — adapted per DESIGN.md §Hardware-Adaptation, behind a backend
+//! switch.
 //!
 //! * [`manifest`] — parses `artifacts/manifest.json`, resolves artifacts
-//!   by kind/variant/shape.
-//! * [`client`] — PJRT client wrapper with a compiled-executable cache
-//!   (compilation is milliseconds-to-seconds; serving amortizes it).
-//! * [`executor`] — typed entry points: compress / psnr / histeq over
-//!   `GrayImage`s, including pad/crop and literal marshaling.
+//!   by kind/variant/shape (PJRT backend).
+//! * [`client`] — the [`Runtime`]: either the PJRT client wrapper with a
+//!   compiled-executable cache (compilation is milliseconds-to-seconds;
+//!   serving amortizes it), or the host-side stub backend.
+//! * [`stub`] — the stub backend: every artifact kind computed with the
+//!   CPU lanes' batched engine, bit-identical to the CPU pipelines, so
+//!   the GPU lane serves (and is tested) without artifacts.
+//! * [`executor`] — typed entry points over
+//!   [`PlanarBatch`](crate::dct::planar::PlanarBatch) jobs: gray and
+//!   color compress (plane-parallel), psnr, histeq — including
+//!   pad/crop and literal marshaling.
 
 pub mod client;
 pub mod executor;
 pub mod manifest;
+pub mod stub;
 
 pub use client::Runtime;
-pub use executor::{CompressOutcome, Executor};
+pub use executor::{
+    ColorCompressOutcome, CompressOutcome, Executor, PlanarOutcome,
+    PlaneOutcome,
+};
 pub use manifest::{Artifact, Manifest};
+pub use stub::StubBackend;

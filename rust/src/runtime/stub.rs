@@ -1,0 +1,235 @@
+//! The stub backend: a host-side, bit-exact stand-in for the PJRT
+//! executables, built directly on the CPU lanes' batched block engine.
+//!
+//! Two jobs:
+//!
+//! 1. **Offline serving/testing.** This build environment has no PJRT
+//!    runtime (the vendored `xla` crate is a compile-time stub), so the
+//!    GPU lane would otherwise be dead code. `Runtime::stub` swaps in
+//!    this backend: every artifact "kind" the manifest would offer
+//!    (`compress`, `psnr`, `histeq`, `dct`) is computed host-side with
+//!    the exact arithmetic of the CPU lanes, so the whole coordinator /
+//!    planar-batch / entropy path exercises end-to-end — and parity
+//!    against the CPU lanes is *bit-identical*, which the real PJRT
+//!    artifacts (XLA reduction-order ties) cannot promise.
+//! 2. **Uniform planar consumption.** The stub consumes the same
+//!    [`PlanarBatch`](crate::dct::planar::PlanarBatch) plane shape the
+//!    PJRT path marshals, walking every plane's block grid through
+//!    [`BlockBatch8`](crate::dct::batch::BlockBatch8) gathers via the
+//!    [`BatchEngine`](crate::dct::batch::BatchEngine)-backed
+//!    [`CpuPipeline`] — the CPU mirror of the GPU's thread-per-block
+//!    mapping.
+//!
+//! Pipelines are cached per `(variant, role)` the way the PJRT client
+//! caches compiled executables, and shared across worker threads.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::dct::pipeline::{CpuCompressOutput, CpuPipeline};
+use crate::dct::planar::PlaneRole;
+use crate::dct::quant::{effective_qtable, effective_qtable_chroma};
+use crate::dct::Variant;
+use crate::image::GrayImage;
+
+/// Host-side executable cache: the stub's analogue of the PJRT
+/// compiled-executable cache.
+pub struct StubBackend {
+    /// IJG quality every "artifact" of this backend quantizes at (the
+    /// manifest-level quality of the PJRT path).
+    pub quality: u8,
+    pipelines: Mutex<HashMap<(Variant, PlaneRole), Arc<CpuPipeline>>>,
+}
+
+impl StubBackend {
+    pub fn new(quality: u8) -> StubBackend {
+        StubBackend {
+            quality,
+            pipelines: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Number of cached host-side pipelines (mirrors
+    /// `Runtime::cached_count` for the PJRT backend).
+    pub fn cached_count(&self) -> usize {
+        self.pipelines.lock().unwrap().len()
+    }
+
+    /// Get (building if needed) the pipeline for a variant and plane
+    /// role. Luma planes quantize with the Annex K luma table, chroma
+    /// planes with the chroma table — exactly as
+    /// [`ColorPipeline`](crate::dct::color::ColorPipeline) wires its
+    /// per-plane pipelines, which is what makes stub GPU output
+    /// bit-identical to the CPU lanes.
+    pub fn pipeline(
+        &self,
+        variant: Variant,
+        role: PlaneRole,
+    ) -> Arc<CpuPipeline> {
+        Arc::clone(
+            self.pipelines
+                .lock()
+                .unwrap()
+                .entry((variant, role))
+                .or_insert_with(|| {
+                    let qtable = match role {
+                        PlaneRole::Luma => effective_qtable(self.quality),
+                        PlaneRole::Chroma => {
+                            effective_qtable_chroma(self.quality)
+                        }
+                    };
+                    Arc::new(CpuPipeline::with_qtable(
+                        variant,
+                        self.quality,
+                        qtable,
+                    ))
+                }),
+        )
+    }
+
+    /// Compress one plane (bit-identical to the serial CPU lane).
+    pub fn compress_plane(
+        &self,
+        img: &GrayImage,
+        variant: Variant,
+        role: PlaneRole,
+    ) -> CpuCompressOutput {
+        self.pipeline(variant, role).compress(img)
+    }
+
+    /// The raw `run_f32` artifact surface, host-side: dispatches on the
+    /// artifact kind the PJRT manifest would resolve. Inputs are rank-2
+    /// f32 planes `(buf, h, w)` with 8-aligned dims for block kinds.
+    pub fn run_f32(
+        &self,
+        kind: &str,
+        variant: Option<&str>,
+        inputs: &[(&[f32], usize, usize)],
+    ) -> Result<Vec<Vec<f32>>> {
+        let parse_variant = || -> Result<Variant> {
+            let v = variant.unwrap_or("dct");
+            Variant::parse(v)
+                .with_context(|| format!("unknown variant '{v}'"))
+        };
+        match kind {
+            "compress" | "compress_chroma" => {
+                let role = if kind == "compress" {
+                    PlaneRole::Luma
+                } else {
+                    PlaneRole::Chroma
+                };
+                let (buf, h, w) = single_input(kind, inputs)?;
+                let img = GrayImage::from_f32(w, h, buf)?;
+                let out =
+                    self.compress_plane(&img, parse_variant()?, role);
+                Ok(vec![out.recon.to_f32(), out.qcoef])
+            }
+            "psnr" => {
+                anyhow::ensure!(
+                    inputs.len() == 2,
+                    "psnr takes two inputs"
+                );
+                let (ba, ha, wa) = inputs[0];
+                let (bb, hb, wb) = inputs[1];
+                let a = GrayImage::from_f32(wa, ha, ba)?;
+                let b = GrayImage::from_f32(wb, hb, bb)?;
+                anyhow::ensure!(
+                    (wa, ha) == (wb, hb),
+                    "psnr over mismatched sizes"
+                );
+                Ok(vec![vec![crate::metrics::psnr(&a, &b) as f32]])
+            }
+            "histeq" => {
+                let (buf, h, w) = single_input(kind, inputs)?;
+                let img = GrayImage::from_f32(w, h, buf)?;
+                Ok(vec![crate::image::histeq::histeq(&img).to_f32()])
+            }
+            "dct" => {
+                let (buf, h, w) = single_input(kind, inputs)?;
+                let img = GrayImage::from_f32(w, h, buf)?;
+                let t = parse_variant()?.transform();
+                let mut out = vec![0.0f32; w * h];
+                let (gw, gh) = crate::dct::blocks::grid_dims(w, h);
+                let mut blk = [0.0f32; 64];
+                for by in 0..gh {
+                    for bx in 0..gw {
+                        crate::dct::blocks::extract_block(
+                            &img, bx, by, &mut blk,
+                        );
+                        t.forward(&mut blk);
+                        for r in 0..8 {
+                            let dst = (by * 8 + r) * w + bx * 8;
+                            out[dst..dst + 8].copy_from_slice(
+                                &blk[r * 8..r * 8 + 8],
+                            );
+                        }
+                    }
+                }
+                Ok(vec![out])
+            }
+            other => bail!("stub backend has no kind '{other}'"),
+        }
+    }
+}
+
+fn single_input<'a>(
+    kind: &str,
+    inputs: &[(&'a [f32], usize, usize)],
+) -> Result<(&'a [f32], usize, usize)> {
+    anyhow::ensure!(inputs.len() == 1, "{kind} takes one input");
+    let (buf, h, w) = inputs[0];
+    anyhow::ensure!(buf.len() == h * w, "input buffer {} != {h}x{w}",
+                    buf.len());
+    Ok((buf, h, w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synthetic;
+
+    #[test]
+    fn pipeline_cache_by_variant_and_role() {
+        let s = StubBackend::new(50);
+        assert_eq!(s.cached_count(), 0);
+        let a = s.pipeline(Variant::Dct, PlaneRole::Luma);
+        let b = s.pipeline(Variant::Dct, PlaneRole::Luma);
+        assert!(Arc::ptr_eq(&a, &b), "second lookup must hit cache");
+        s.pipeline(Variant::Dct, PlaneRole::Chroma);
+        s.pipeline(Variant::Cordic, PlaneRole::Luma);
+        assert_eq!(s.cached_count(), 3);
+    }
+
+    #[test]
+    fn compress_kind_matches_cpu_lane_bitwise() {
+        let s = StubBackend::new(50);
+        let img = synthetic::lena_like(32, 24, 1);
+        let outs = s
+            .run_f32("compress", Some("cordic"), &[(&img.to_f32(), 24, 32)])
+            .unwrap();
+        let cpu = CpuPipeline::new(Variant::Cordic, 50).compress(&img);
+        assert_eq!(outs[0], cpu.recon.to_f32());
+        assert_eq!(outs[1], cpu.qcoef);
+    }
+
+    #[test]
+    fn psnr_and_histeq_kinds() {
+        let s = StubBackend::new(50);
+        let a = synthetic::lena_like(16, 16, 2);
+        let b = synthetic::cablecar_like(16, 16, 2);
+        let (fa, fb) = (a.to_f32(), b.to_f32());
+        let p = s
+            .run_f32("psnr", None, &[(&fa, 16, 16), (&fb, 16, 16)])
+            .unwrap();
+        assert!((p[0][0] as f64 - crate::metrics::psnr(&a, &b)).abs()
+                < 1e-4);
+        let eq = s.run_f32("histeq", None, &[(&fa, 16, 16)]).unwrap();
+        assert_eq!(
+            eq[0],
+            crate::image::histeq::histeq(&a).to_f32()
+        );
+        assert!(s.run_f32("nope", None, &[(&fa, 16, 16)]).is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! GPU-lane color conformance: since the planar-batch rework,
+//! `Lane::Gpu` accepts `JobImage::Color` — this suite locks the GPU
+//! lane's color output bit-identical to the CPU lanes on the stub
+//! backend (which runs the exact CPU arithmetic host-side), across
+//! variants × qualities × odd/tail sizes, through the raw executor and
+//! through the coordinator; plus decode-only parity of the emitted
+//! container and the regression for the old color-on-GPU error path
+//! (reject → route).
+
+use std::sync::Arc;
+
+use cordic_dct::codec::{color as color_codec, variant_tag};
+use cordic_dct::coordinator::{Lane, Service, ServiceConfig};
+use cordic_dct::dct::color::ColorPipeline;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::synthetic;
+use cordic_dct::image::ycbcr::Subsampling;
+use cordic_dct::runtime::{Executor, Runtime};
+
+const VARIANTS: [Variant; 3] =
+    [Variant::Dct, Variant::Loeffler, Variant::Cordic];
+
+/// Odd / tail-heavy shapes: non-multiple-of-8 in both axes, a grid-tail
+/// width (9 blocks = one 8-wide batch + scalar tail), and aligned
+/// controls.
+const SIZES: [(usize, usize); 4] = [(30, 21), (17, 9), (72, 16), (64, 48)];
+
+fn stub_executor(quality: u8) -> Executor {
+    Executor::new(Arc::new(Runtime::stub(quality)))
+}
+
+#[test]
+fn gpu_color_bit_identical_to_serial_cpu() {
+    for variant in VARIANTS {
+        for quality in [10u8, 50, 90] {
+            for (w, h) in SIZES {
+                let rgb = synthetic::lena_like_rgb(w, h, 11);
+                let gpu = stub_executor(quality)
+                    .compress_color(&rgb, variant, Subsampling::S420)
+                    .unwrap();
+                let cpu = ColorPipeline::new(
+                    variant,
+                    quality,
+                    Subsampling::S420,
+                )
+                .compress(&rgb);
+                let tag =
+                    format!("{} q{quality} {w}x{h}", variant.as_str());
+                // qcoef parity per plane (planar interchange + fused)
+                assert_eq!(gpu.planes, cpu.planes, "{tag}");
+                assert_eq!(gpu.scanned, cpu.scanned, "{tag}");
+                // reconstruction parity: planes and reassembled RGB
+                assert_eq!(gpu.recon_y, cpu.recon_y, "{tag}");
+                assert_eq!(gpu.recon_cb, cpu.recon_cb, "{tag}");
+                assert_eq!(gpu.recon_cr, cpu.recon_cr, "{tag}");
+                assert_eq!(gpu.recon, cpu.recon, "{tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn gpu_color_bit_identical_to_parallel_cpu_all_modes() {
+    for mode in Subsampling::ALL {
+        let rgb = synthetic::cablecar_like_rgb(30, 21, 7);
+        let gpu = stub_executor(50)
+            .compress_color(&rgb, Variant::Cordic, mode)
+            .unwrap();
+        let cpu =
+            ColorPipeline::parallel(Variant::Cordic, 50, mode, 3)
+                .compress(&rgb);
+        assert_eq!(gpu.planes, cpu.planes, "{}", mode.as_str());
+        assert_eq!(gpu.scanned, cpu.scanned, "{}", mode.as_str());
+        assert_eq!(gpu.recon, cpu.recon, "{}", mode.as_str());
+    }
+}
+
+#[test]
+fn gpu_container_decodes_to_gpu_reconstruction() {
+    // decode-only parity: the container the GPU lane emits (fused
+    // zigzag planes -> encode_scanned) decodes on the CPU side to the
+    // exact reconstruction the GPU lane reported.
+    for (w, h) in [(40, 21), (17, 9)] {
+        let rgb = synthetic::lena_like_rgb(w, h, 5);
+        let gpu = stub_executor(50)
+            .compress_color(&rgb, Variant::Cordic, Subsampling::S420)
+            .unwrap();
+        let header = color_codec::ColorHeader {
+            width: w as u32,
+            height: h as u32,
+            quality: 50,
+            variant: variant_tag(Variant::Cordic),
+            subsampling: color_codec::subsampling_tag(Subsampling::S420),
+        };
+        let bytes =
+            color_codec::encode_scanned(&header, &gpu.scanned).unwrap();
+        // byte-identical to the planar-interchange encode path
+        assert_eq!(
+            bytes,
+            color_codec::encode(&header, &gpu.planes).unwrap()
+        );
+        let dec = color_codec::decode(&bytes).unwrap();
+        let pipe =
+            ColorPipeline::new(Variant::Cordic, 50, Subsampling::S420);
+        assert_eq!(dec.planes, gpu.planes, "{w}x{h}");
+        assert_eq!(pipe.decode_coefficients(&dec.planes), gpu.recon);
+    }
+}
+
+#[test]
+fn color_on_gpu_rejects_without_executor_routes_with_stub() {
+    // The old behavior — `Lane::Gpu` + color bails — must survive only
+    // when no GPU lane is configured at all; with the stub-backed GPU
+    // lane the same request now routes and succeeds, and `Auto` picks
+    // the GPU lane for color.
+    let rgb = synthetic::lena_like_rgb(24, 16, 2);
+
+    let no_gpu = Service::start(ServiceConfig {
+        workers: 1,
+        artifact_dir: None,
+        stub_gpu: false,
+        ..Default::default()
+    })
+    .unwrap();
+    let resp = no_gpu
+        .compress_color(
+            rgb.clone(),
+            Variant::Cordic,
+            Lane::Gpu,
+            Subsampling::S420,
+        )
+        .unwrap()
+        .wait();
+    assert!(resp.result.is_err(), "no GPU lane: color job must fail");
+    let auto = no_gpu
+        .compress_color(
+            rgb.clone(),
+            Variant::Cordic,
+            Lane::Auto,
+            Subsampling::S420,
+        )
+        .unwrap()
+        .wait();
+    assert_eq!(auto.lane, Lane::Cpu, "Auto falls back to CPU");
+    auto.result.unwrap();
+    no_gpu.shutdown();
+
+    let stubbed = Service::start(ServiceConfig {
+        workers: 1,
+        artifact_dir: None,
+        stub_gpu: true,
+        ..Default::default()
+    })
+    .unwrap();
+    let forced = stubbed
+        .compress_color(
+            rgb.clone(),
+            Variant::Cordic,
+            Lane::Gpu,
+            Subsampling::S420,
+        )
+        .unwrap()
+        .wait();
+    assert_eq!(forced.lane, Lane::Gpu);
+    let forced_out = forced.result.unwrap();
+    let routed = stubbed
+        .compress_color(
+            rgb.clone(),
+            Variant::Cordic,
+            Lane::Auto,
+            Subsampling::S420,
+        )
+        .unwrap()
+        .wait();
+    assert_eq!(routed.lane, Lane::Gpu, "Auto now picks the GPU lane");
+    let routed_out = routed.result.unwrap();
+    // and the GPU lane's payload matches the CPU lane's bit-for-bit
+    let cpu = stubbed
+        .compress_color(
+            rgb,
+            Variant::Cordic,
+            Lane::Cpu,
+            Subsampling::S420,
+        )
+        .unwrap()
+        .wait()
+        .result
+        .unwrap();
+    assert_eq!(forced_out.color_image, cpu.color_image);
+    assert_eq!(forced_out.compressed_bytes, cpu.compressed_bytes);
+    assert_eq!(forced_out.psnr_db, cpu.psnr_db);
+    assert_eq!(routed_out.color_image, cpu.color_image);
+    stubbed.shutdown();
+}
+
+#[test]
+fn gpu_gray_scanned_feed_matches_cpu_container() {
+    // gray jobs ride the same fused entropy feed: the coordinator's GPU
+    // and CPU lanes must report identical compressed sizes and images.
+    let svc = Service::start(ServiceConfig {
+        workers: 1,
+        artifact_dir: None,
+        stub_gpu: true,
+        ..Default::default()
+    })
+    .unwrap();
+    let img = synthetic::lena_like(30, 21, 9);
+    let gpu = svc
+        .compress(img.clone(), Variant::Cordic, Lane::Gpu)
+        .unwrap()
+        .wait();
+    assert_eq!(gpu.lane, Lane::Gpu);
+    let gpu = gpu.result.unwrap();
+    let cpu = svc
+        .compress(img, Variant::Cordic, Lane::Cpu)
+        .unwrap()
+        .wait()
+        .result
+        .unwrap();
+    assert_eq!(gpu.image, cpu.image);
+    assert_eq!(gpu.compressed_bytes, cpu.compressed_bytes);
+    assert_eq!(gpu.psnr_db, cpu.psnr_db);
+    svc.shutdown();
+}

@@ -18,6 +18,7 @@ fn config(workers: usize, gpu: bool) -> ServiceConfig {
         batch: BatchPolicy::default(),
         quality: 50,
         artifact_dir: gpu.then(|| "artifacts".into()),
+        stub_gpu: false,
     }
 }
 
