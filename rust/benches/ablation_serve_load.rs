@@ -1,0 +1,88 @@
+//! A6 ablation: the TCP front-end under concurrent load — throughput and
+//! exact p50/p95/p99 request latency over a real loopback socket,
+//! sweeping the number of concurrent clients.
+//!
+//! Everything in the measured path is real: framing, protocol
+//! encode/decode, the coordinator queue with Reject backpressure, and the
+//! worker lanes. The load generator is closed-loop (each client waits for
+//! its response before sending the next request), so throughput saturates
+//! at the worker pool, and overloaded replies count as backpressure
+//! rather than failures.
+
+use cordic_dct::bench::save_results;
+use cordic_dct::coordinator::{Lane, ServiceConfig};
+use cordic_dct::dct::Variant;
+use cordic_dct::serve::{run_load, LoadSpec, ServeConfig, TcpServer};
+use cordic_dct::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("CORDIC_DCT_BENCH_QUICK").is_ok();
+    let (size, requests) = if quick { (64, 8) } else { (128, 32) };
+    let client_sweep: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4, 8] };
+    let cfg = ServeConfig {
+        service: ServiceConfig {
+            workers: 4,
+            queue_capacity: 64,
+            artifact_dir: None,
+            ..Default::default()
+        },
+        max_connections: 16,
+        ..Default::default()
+    };
+    let server = TcpServer::bind("127.0.0.1:0", cfg)?;
+    let addr = server.local_addr();
+    println!(
+        "== serve load ablation: {size}x{size} cordic gray, \
+         {requests} req/client over {addr} =="
+    );
+    println!(
+        "{:>8} {:>10} {:>9} {:>9} {:>9} {:>9}",
+        "clients", "req/s", "p50 ms", "p95 ms", "p99 ms", "max ms"
+    );
+    let mut reports = Vec::new();
+    for &clients in client_sweep {
+        let spec = LoadSpec {
+            clients,
+            requests_per_client: requests,
+            size,
+            color: false,
+            variant: Variant::Cordic,
+            lane: Lane::Cpu,
+            want_psnr: false,
+            ..LoadSpec::new(addr)
+        };
+        let report = run_load(&spec)?;
+        println!(
+            "{:>8} {:>10.1} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+            clients,
+            report.throughput_rps,
+            report.p50_ms,
+            report.p95_ms,
+            report.p99_ms,
+            report.max_ms
+        );
+        anyhow::ensure!(
+            report.failed == 0,
+            "{} request(s) failed under load",
+            report.failed
+        );
+        reports.push(report);
+    }
+    server.shutdown();
+    let text: String = reports
+        .iter()
+        .map(|r| format!("{r}\n"))
+        .collect();
+    let json = Json::obj(vec![
+        ("table", Json::str("ablation_serve_load")),
+        ("size", size.into()),
+        ("requests_per_client", requests.into()),
+        (
+            "rows",
+            Json::Arr(reports.iter().map(|r| r.to_json()).collect()),
+        ),
+    ])
+    .to_string();
+    save_results("ablation_serve_load", &text, &json);
+    Ok(())
+}

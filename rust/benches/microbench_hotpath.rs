@@ -10,10 +10,18 @@
 //!   LUT decoder)
 //! * PJRT literal marshaling vs execute (GPU-lane overhead split)
 //!
+//! * steady-state allocation audit: with a cached pipeline and a reused
+//!   scan buffer, repeat analysis of an 8-aligned image through
+//!   `analyze_scanned_into` must be allocation-free (counted by a
+//!   wrapping global allocator)
+//!
 //! With `CORDIC_DCT_PERF_SANITY=1` the process exits non-zero if the
-//! batched engine is slower than the scalar path on the transform stage
-//! (the CI perf-sanity gate; gated on the paper's Cordic variant).
+//! batched engine is slower than the scalar path on the transform stage,
+//! or if the steady-state analysis path allocates (the CI perf-sanity
+//! gate; the transform check is gated on the paper's Cordic variant).
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use cordic_dct::bench::tables::try_runtime;
@@ -30,6 +38,43 @@ use cordic_dct::image::synthetic;
 
 const W: usize = 512;
 const H: usize = 512;
+
+/// Counts heap acquisitions (alloc / alloc_zeroed / realloc) so the
+/// steady-state stage can assert the hot path is allocation-free.
+/// Frees are deliberately not counted: reusing a buffer is the goal,
+/// shrinking one is fine.
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 fn main() -> anyhow::Result<()> {
     let bench = bench_config();
@@ -212,6 +257,35 @@ fn main() -> anyhow::Result<()> {
     let e = throughput(s.median_ms);
     report("full cpu pipeline", s, nblocks, "block", e);
 
+    // steady-state allocation audit: cached pipeline + reused scan
+    // buffer; 512x512 is 8-aligned so the image is borrowed, never
+    // padded-by-copy. After one warmup pass (scratch pool fill, buffer
+    // sizing) repeat analysis must not touch the heap at all.
+    let mut scan = encoder::ScanCoefs::zeroed(W, H, W, H);
+    pipe.analyze_scanned_into(&img, &mut scan);
+    let s = bench.run(|| {
+        pipe.analyze_scanned_into(&img, &mut scan);
+        std::hint::black_box(&scan);
+    });
+    const AUDIT_ITERS: u64 = 32;
+    let before = ALLOC_COUNT.load(Ordering::Relaxed);
+    for _ in 0..AUDIT_ITERS {
+        pipe.analyze_scanned_into(&img, &mut scan);
+        std::hint::black_box(&scan);
+    }
+    let steady_allocs = ALLOC_COUNT.load(Ordering::Relaxed) - before;
+    println!(
+        "steady-state analyze: {steady_allocs} heap allocation(s) over \
+         {AUDIT_ITERS} passes"
+    );
+    let e = vec![
+        ("allocs_per_pass".into(), {
+            format!("{:.2}", steady_allocs as f64 / AUDIT_ITERS as f64)
+        }),
+        ("audit_iters".into(), AUDIT_ITERS.to_string()),
+    ];
+    report("analyze steady-state", s, nblocks, "block", e);
+
     // PJRT overhead split
     if let Some(rt) = try_runtime() {
         let exe = rt.executable("compress_cordic_512x512")?;
@@ -258,6 +332,16 @@ fn main() -> anyhow::Result<()> {
             eprintln!(
                 "perf-sanity FAILED: batched cordic transform is slower \
                  than scalar ({batched_ms:.3} ms > {scalar_ms:.3} ms)"
+            );
+            std::process::exit(1);
+        }
+        // the fused analysis path must stay allocation-free in steady
+        // state — any hot-path Vec/Box that sneaks back in fails CI
+        if steady_allocs != 0 {
+            eprintln!(
+                "perf-sanity FAILED: steady-state analyze allocated \
+                 {steady_allocs} time(s) over {AUDIT_ITERS} passes \
+                 (expected 0)"
             );
             std::process::exit(1);
         }

@@ -19,7 +19,8 @@ use crate::dct::color::PlaneCoef;
 use crate::image::ycbcr::Subsampling;
 
 use super::encoder::ScanCoefs;
-use super::{decoder, encoder, Header};
+use super::{decode_bail, decoder, encoder, DecodeErrorKind, Header};
+use super::{MAX_DIM, MAX_PIXELS};
 
 /// Validate plane dimensions against the container geometry.
 fn check_plane_dims(
@@ -92,10 +93,17 @@ impl ColorHeader {
 
     pub fn read(bytes: &[u8]) -> Result<(ColorHeader, usize)> {
         if bytes.len() < Self::BYTES {
-            bail!("file too short for CDC3 header");
+            decode_bail!(
+                DecodeErrorKind::Truncated,
+                "file too short for CDC3 header: {} bytes",
+                bytes.len()
+            );
         }
         if &bytes[0..4] != COLOR_MAGIC {
-            bail!("bad magic: not a CDC3 color file");
+            decode_bail!(
+                DecodeErrorKind::BadMagic,
+                "bad magic: not a CDC3 color file"
+            );
         }
         let rd = |o: usize| {
             u32::from_le_bytes([
@@ -112,10 +120,30 @@ impl ColorHeader {
             variant: bytes[13],
             subsampling: bytes[14],
         };
-        if h.width == 0 || h.height == 0 {
-            bail!("inconsistent CDC3 header {h:?}");
+        if h.width > MAX_DIM
+            || h.height > MAX_DIM
+            || h.width as u64 * h.height as u64 > MAX_PIXELS
+        {
+            decode_bail!(
+                DecodeErrorKind::TooLarge,
+                "color image {}x{} exceeds caps",
+                h.width,
+                h.height
+            );
         }
-        tag_subsampling(h.subsampling)?;
+        if h.width == 0 || h.height == 0 {
+            decode_bail!(
+                DecodeErrorKind::BadHeader,
+                "inconsistent CDC3 header {h:?}"
+            );
+        }
+        if tag_subsampling(h.subsampling).is_err() {
+            decode_bail!(
+                DecodeErrorKind::BadHeader,
+                "unknown subsampling tag {}",
+                h.subsampling
+            );
+        }
         Ok((h, Self::BYTES))
     }
 }
@@ -199,7 +227,10 @@ pub fn decode(bytes: &[u8]) -> Result<ColorDecoded> {
     let mut planes = Vec::with_capacity(3);
     for (i, &(ew, eh)) in want.iter().enumerate() {
         if bytes.len() < off + 4 {
-            bail!("truncated plane {i} length");
+            decode_bail!(
+                DecodeErrorKind::Truncated,
+                "truncated plane {i} length"
+            );
         }
         let len = u32::from_le_bytes([
             bytes[off],
@@ -209,7 +240,8 @@ pub fn decode(bytes: &[u8]) -> Result<ColorDecoded> {
         ]) as usize;
         off += 4;
         if bytes.len() < off + len {
-            bail!(
+            decode_bail!(
+                DecodeErrorKind::Truncated,
                 "plane {i} truncated: header says {len}, {} available",
                 bytes.len() - off
             );
@@ -219,7 +251,8 @@ pub fn decode(bytes: &[u8]) -> Result<ColorDecoded> {
         off += len;
         let ph = &dec.header;
         if (ph.width as usize, ph.height as usize) != (ew, eh) {
-            bail!(
+            decode_bail!(
+                DecodeErrorKind::BadHeader,
                 "plane {i} is {}x{}, expected {ew}x{eh}",
                 ph.width,
                 ph.height
@@ -228,7 +261,8 @@ pub fn decode(bytes: &[u8]) -> Result<ColorDecoded> {
         if ph.quality != header.quality
             || ph.variant != header.variant
         {
-            bail!(
+            decode_bail!(
+                DecodeErrorKind::BadHeader,
                 "plane {i} quality/variant ({}, {}) disagrees with \
                  container ({}, {})",
                 ph.quality,

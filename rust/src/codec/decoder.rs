@@ -2,7 +2,7 @@
 //! to planar quantized coefficients. Strictly validating — corrupt input
 //! must produce an `Err`, never a panic or OOM.
 
-use anyhow::{bail, Result};
+use anyhow::{Context, Result};
 
 use crate::dct::blocks::{grid_dims, store_coef_planar};
 use crate::util::bitio::BitReader;
@@ -10,7 +10,7 @@ use crate::util::bitio::BitReader;
 use super::huffman::{HuffmanCode, HuffmanDecoder};
 use super::rle::read_block;
 use super::zigzag::unscan;
-use super::Header;
+use super::{decode_bail, DecodeErrorKind, Header, MAX_PIXELS};
 
 /// Decoded container: header + planar coefficients (padded layout).
 pub struct Decoded {
@@ -18,23 +18,26 @@ pub struct Decoded {
     pub qcoef_planar: Vec<f32>,
 }
 
-/// Maximum pixel count we will allocate for (DoS guard on corrupt
-/// headers): 64 MPixel covers the paper's 3072x3072 with a wide margin.
-const MAX_PIXELS: u64 = 64 * 1024 * 1024;
-
 pub fn decode(bytes: &[u8]) -> Result<Decoded> {
     let (header, mut off) = Header::read(bytes)?;
     let pw = header.padded_width as u64;
     let ph = header.padded_height as u64;
+    // Defense in depth: Header::read already caps this, but the
+    // allocation below must never trust anything it did not check.
     if pw * ph > MAX_PIXELS {
-        bail!("image too large: {pw}x{ph}");
+        decode_bail!(
+            DecodeErrorKind::TooLarge,
+            "image too large: {pw}x{ph}"
+        );
     }
-    let (dc_code, used) = HuffmanCode::read_table(&bytes[off..])?;
+    let (dc_code, used) = HuffmanCode::read_table(&bytes[off..])
+        .context("[decode:corrupt] DC Huffman table")?;
     off += used;
-    let (ac_code, used) = HuffmanCode::read_table(&bytes[off..])?;
+    let (ac_code, used) = HuffmanCode::read_table(&bytes[off..])
+        .context("[decode:corrupt] AC Huffman table")?;
     off += used;
     if bytes.len() < off + 4 {
-        bail!("truncated payload length");
+        decode_bail!(DecodeErrorKind::Truncated, "truncated payload length");
     }
     let payload_len = u32::from_le_bytes([
         bytes[off],
@@ -44,7 +47,8 @@ pub fn decode(bytes: &[u8]) -> Result<Decoded> {
     ]) as usize;
     off += 4;
     if bytes.len() < off + payload_len {
-        bail!(
+        decode_bail!(
+            DecodeErrorKind::Truncated,
             "payload truncated: header says {payload_len}, {} available",
             bytes.len() - off
         );
@@ -64,7 +68,10 @@ pub fn decode(bytes: &[u8]) -> Result<Decoded> {
                 prev_dc,
                 |r| dc_dec.get(r),
                 |r| ac_dec.get(r),
-            )?;
+            )
+            .with_context(|| {
+                format!("[decode:corrupt] entropy block ({bx},{by})")
+            })?;
             prev_dc = z[0];
             let block = unscan(&z);
             store_coef_planar(&mut qcoef, pw as usize, bx, by, &block);

@@ -53,6 +53,21 @@ impl ScanCoefs {
         }
     }
 
+    /// Re-shape an existing buffer for a new plane, reusing the
+    /// allocation whenever capacity allows — the zero-alloc steady-state
+    /// path [`crate::dct::pipeline::CpuPipeline::analyze_scanned_into`]
+    /// runs on.
+    pub fn reset(&mut self, width: usize, height: usize,
+                 pw: usize, ph: usize) {
+        debug_assert!(pw % BLOCK == 0 && ph % BLOCK == 0);
+        self.width = width;
+        self.height = height;
+        self.padded_width = pw;
+        self.padded_height = ph;
+        self.data.clear();
+        self.data.resize(pw * ph, 0);
+    }
+
     /// Number of 8x8 blocks.
     pub fn blocks(&self) -> usize {
         self.data.len() / 64

@@ -30,9 +30,108 @@ pub mod huffman;
 pub mod rle;
 pub mod zigzag;
 
+use std::fmt;
+
 use anyhow::{bail, Result};
 
 pub const MAGIC: &[u8; 4] = b"CDC1";
+
+/// Maximum pixel count a decoder will allocate for (DoS guard on corrupt
+/// headers): 64 MPixel covers the paper's 3072x3072 with a wide margin.
+pub const MAX_PIXELS: u64 = 64 * 1024 * 1024;
+
+/// Per-dimension cap. Anything larger than this is hostile or corrupt:
+/// even a 1-pixel-tall image this wide would exceed sane workloads.
+pub const MAX_DIM: u32 = 1 << 15;
+
+/// Why a container failed to decode. Carried as a machine-readable tag in
+/// the error chain so the serve layer can map failures to protocol error
+/// frames. (The vendored `anyhow` stand-in flattens errors to strings, so
+/// classification goes through [`classify_decode_error`] rather than
+/// downcasting.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeErrorKind {
+    /// Input ended before the declared structure did.
+    Truncated,
+    /// Not a CDC1/CDC3 container at all.
+    BadMagic,
+    /// Header fields are internally inconsistent (padding/dimensions).
+    BadHeader,
+    /// Header asks for more memory than the decoder will allocate.
+    TooLarge,
+    /// Entropy stream or table data is damaged.
+    Corrupt,
+}
+
+impl DecodeErrorKind {
+    pub const ALL: [DecodeErrorKind; 5] = [
+        DecodeErrorKind::Truncated,
+        DecodeErrorKind::BadMagic,
+        DecodeErrorKind::BadHeader,
+        DecodeErrorKind::TooLarge,
+        DecodeErrorKind::Corrupt,
+    ];
+
+    /// Stable wire/chain tag for this kind.
+    pub fn tag(self) -> &'static str {
+        match self {
+            DecodeErrorKind::Truncated => "truncated",
+            DecodeErrorKind::BadMagic => "bad-magic",
+            DecodeErrorKind::BadHeader => "bad-header",
+            DecodeErrorKind::TooLarge => "too-large",
+            DecodeErrorKind::Corrupt => "corrupt",
+        }
+    }
+
+    pub fn from_tag(tag: &str) -> Option<DecodeErrorKind> {
+        Self::ALL.iter().copied().find(|k| k.tag() == tag)
+    }
+}
+
+/// Structured decode failure: a kind plus a human-readable message.
+/// Implements `std::error::Error` so `?` converts it into `anyhow::Error`
+/// while keeping the `[decode:<tag>]` marker in the message chain.
+#[derive(Debug)]
+pub struct DecodeError {
+    pub kind: DecodeErrorKind,
+    msg: String,
+}
+
+impl DecodeError {
+    pub fn new(kind: DecodeErrorKind, msg: impl Into<String>) -> Self {
+        DecodeError {
+            kind,
+            msg: msg.into(),
+        }
+    }
+}
+
+impl fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[decode:{}] {}", self.kind.tag(), self.msg)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// Recover the [`DecodeErrorKind`] from an error chain, if any entry
+/// carries a `[decode:<tag>]` marker. Outermost marker wins.
+pub fn classify_decode_error(err: &anyhow::Error) -> Option<DecodeErrorKind> {
+    err.chain().find_map(|m| {
+        let rest = m.strip_prefix("[decode:")?;
+        let end = rest.find(']')?;
+        DecodeErrorKind::from_tag(&rest[..end])
+    })
+}
+
+/// Bail out of a decode path with a tagged [`DecodeError`].
+macro_rules! decode_bail {
+    ($kind:expr, $($arg:tt)*) => {
+        return Err(crate::codec::DecodeError::new($kind, format!($($arg)*))
+            .into())
+    };
+}
+pub(crate) use decode_bail;
 
 /// Compressed-image container header.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -64,10 +163,17 @@ impl Header {
 
     pub fn read(bytes: &[u8]) -> Result<(Header, usize)> {
         if bytes.len() < Self::BYTES {
-            bail!("file too short for CDC header");
+            decode_bail!(
+                DecodeErrorKind::Truncated,
+                "file too short for CDC header: {} bytes",
+                bytes.len()
+            );
         }
         if &bytes[0..4] != MAGIC {
-            bail!("bad magic: not a CDC file");
+            decode_bail!(
+                DecodeErrorKind::BadMagic,
+                "bad magic: not a CDC file"
+            );
         }
         let rd = |o: usize| {
             u32::from_le_bytes([
@@ -85,14 +191,38 @@ impl Header {
             quality: bytes[20],
             variant: bytes[21],
         };
+        if h.width > MAX_DIM || h.height > MAX_DIM {
+            decode_bail!(
+                DecodeErrorKind::TooLarge,
+                "image dimensions {}x{} exceed cap {MAX_DIM}",
+                h.width,
+                h.height
+            );
+        }
+        if h.padded_width as u64 * h.padded_height as u64 > MAX_PIXELS {
+            decode_bail!(
+                DecodeErrorKind::TooLarge,
+                "padded grid {}x{} exceeds {MAX_PIXELS} pixels",
+                h.padded_width,
+                h.padded_height
+            );
+        }
+        // The padded grid must be exactly the 8-alignment of the image
+        // size: anything else (including a huge padded grid over a tiny
+        // image) means the coefficient payload disagrees with the header.
         if h.width == 0
             || h.height == 0
             || h.padded_width % 8 != 0
             || h.padded_height % 8 != 0
             || h.padded_width < h.width
             || h.padded_height < h.height
+            || h.padded_width - h.width >= 8
+            || h.padded_height - h.height >= 8
         {
-            bail!("inconsistent CDC header {h:?}");
+            decode_bail!(
+                DecodeErrorKind::BadHeader,
+                "inconsistent CDC header {h:?}"
+            );
         }
         Ok((h, Self::BYTES))
     }
@@ -168,6 +298,80 @@ mod tests {
         }
         .write(&mut buf);
         assert!(Header::read(&buf).is_err());
+    }
+
+    #[test]
+    fn header_rejects_padded_dims_disagreeing_with_image() {
+        // hostile shape: tiny image, huge (but individually legal) padded
+        // grid — must be rejected before any decoder allocation happens
+        let mut buf = Vec::new();
+        Header {
+            width: 1,
+            height: 1,
+            padded_width: 4096,
+            padded_height: 4096,
+            quality: 50,
+            variant: 0,
+        }
+        .write(&mut buf);
+        let err = Header::read(&buf).unwrap_err();
+        assert_eq!(
+            classify_decode_error(&err),
+            Some(DecodeErrorKind::BadHeader),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn header_rejects_giant_dims_as_too_large() {
+        let mut buf = Vec::new();
+        Header {
+            width: u32::MAX - 7,
+            height: 8,
+            padded_width: u32::MAX - 7,
+            padded_height: 8,
+            quality: 50,
+            variant: 0,
+        }
+        .write(&mut buf);
+        let err = Header::read(&buf).unwrap_err();
+        assert_eq!(
+            classify_decode_error(&err),
+            Some(DecodeErrorKind::TooLarge),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn decode_errors_classify_through_anyhow_chain() {
+        use anyhow::Context;
+        for kind in DecodeErrorKind::ALL {
+            let err: anyhow::Error =
+                DecodeError::new(kind, "synthetic").into();
+            assert_eq!(classify_decode_error(&err), Some(kind));
+            // context layering must not hide the tag
+            let wrapped = Err::<(), _>(err)
+                .context("outer layer")
+                .unwrap_err();
+            assert_eq!(classify_decode_error(&wrapped), Some(kind));
+            assert_eq!(DecodeErrorKind::from_tag(kind.tag()), Some(kind));
+        }
+        let plain = anyhow::anyhow!("no tag here");
+        assert_eq!(classify_decode_error(&plain), None);
+    }
+
+    #[test]
+    fn truncated_and_bad_magic_classified() {
+        let err = Header::read(&[0u8; 3]).unwrap_err();
+        assert_eq!(
+            classify_decode_error(&err),
+            Some(DecodeErrorKind::Truncated)
+        );
+        let err = Header::read(&[b'X'; Header::BYTES]).unwrap_err();
+        assert_eq!(
+            classify_decode_error(&err),
+            Some(DecodeErrorKind::BadMagic)
+        );
     }
 
     #[test]

@@ -33,7 +33,7 @@ pub mod service;
 pub mod worker;
 
 pub use request::{
-    Backpressure, JobHandle, JobImage, Lane, Request, RequestKind,
-    RequestQueue, Response,
+    Backpressure, JobHandle, JobImage, JobOutput, Lane, Request,
+    RequestKind, RequestQueue, Response,
 };
 pub use service::{Service, ServiceConfig, ServiceStats};

@@ -52,14 +52,23 @@ pub enum RequestKind {
     Compress,
     /// Histogram equalization (the Tables 1-2 caption workload).
     Histeq,
+    /// Decode a CDC1/CDC3 container back to pixels (the serve path's
+    /// read side). Runs on the CPU lanes; header validation errors come
+    /// back as structured job failures, never worker panics.
+    Decode,
 }
 
-/// Pixel payload of a request: the grayscale paper workload or the color
-/// (YCbCr) extension.
+/// Pixel payload of a request: the grayscale paper workload, the color
+/// (YCbCr) extension, or — for [`RequestKind::Decode`] — an encoded
+/// container whose pixels do not exist yet.
 #[derive(Clone, Debug)]
 pub enum JobImage {
     Gray(GrayImage),
     Color(ColorImage),
+    /// An untrusted CDC1/CDC3 byte stream to decode. Dimensions report 0
+    /// (the header is not trusted before validation), so encoded jobs
+    /// never share a batch key with pixel jobs.
+    Encoded(Vec<u8>),
 }
 
 impl JobImage {
@@ -67,6 +76,7 @@ impl JobImage {
         match self {
             JobImage::Gray(g) => g.width,
             JobImage::Color(c) => c.width,
+            JobImage::Encoded(_) => 0,
         }
     }
 
@@ -74,11 +84,18 @@ impl JobImage {
         match self {
             JobImage::Gray(g) => g.height,
             JobImage::Color(c) => c.height,
+            JobImage::Encoded(_) => 0,
         }
     }
 
     pub fn is_color(&self) -> bool {
-        matches!(self, JobImage::Color(_))
+        match self {
+            JobImage::Color(_) => true,
+            JobImage::Gray(_) => false,
+            JobImage::Encoded(b) => {
+                crate::codec::color::is_color_container(b)
+            }
+        }
     }
 }
 
@@ -92,6 +109,10 @@ pub struct Request {
     pub lane: Lane,
     /// Chroma subsampling for color jobs (ignored for grayscale).
     pub subsampling: Subsampling,
+    /// Compute PSNR (and with it the reconstruction) for compress jobs.
+    /// `false` runs the recon-free fused path — serve traffic that only
+    /// wants the container bytes never pays for the decoder half.
+    pub want_psnr: bool,
 }
 
 impl Request {
@@ -104,6 +125,7 @@ impl Request {
             variant,
             lane,
             subsampling: Subsampling::S420,
+            want_psnr: true,
         }
     }
 
@@ -123,7 +145,30 @@ impl Request {
             variant,
             lane,
             subsampling,
+            want_psnr: true,
         }
+    }
+
+    /// A container-decode job. The variant recorded here is a
+    /// placeholder — the (validated) container header carries the real
+    /// one.
+    pub fn decode(id: u64, container: Vec<u8>, lane: Lane) -> Request {
+        Request {
+            id,
+            kind: RequestKind::Decode,
+            image: JobImage::Encoded(container),
+            variant: Variant::Dct,
+            lane,
+            subsampling: Subsampling::S420,
+            want_psnr: false,
+        }
+    }
+
+    /// Builder-style switch to the recon-free fast path (no PSNR, no
+    /// reconstructed image in the output).
+    pub fn no_psnr(mut self) -> Request {
+        self.want_psnr = false;
+        self
     }
 
     /// Batching key: jobs with equal keys share an executable.
@@ -160,12 +205,16 @@ pub struct Response {
 #[derive(Debug)]
 pub struct JobOutput {
     /// Grayscale result; for color jobs this is the reconstructed
-    /// full-resolution luma plane.
-    pub image: GrayImage,
-    /// Reconstructed RGB image (color Compress only).
+    /// full-resolution luma plane. `None` on the recon-free fast path
+    /// (`want_psnr: false`) and for color decode jobs.
+    pub image: Option<GrayImage>,
+    /// Reconstructed RGB image (color Compress/Decode only).
     pub color_image: Option<ColorImage>,
     /// Entropy-coded size in bytes (Compress only).
     pub compressed_bytes: Option<usize>,
+    /// The container bytes themselves (Compress jobs; what the serve
+    /// layer ships back to the client).
+    pub container: Option<Vec<u8>>,
     /// PSNR vs the input (Compress only; luma-weighted for color).
     pub psnr_db: Option<f64>,
 }
@@ -342,6 +391,12 @@ impl RequestQueue {
                 if now >= dl {
                     break;
                 }
+                // The pops above freed capacity: release blocked
+                // producers *before* sleeping, or a full `Block`-policy
+                // queue deadlocks the linger against the very producer
+                // whose job it is waiting for (it would only wake at the
+                // deadline).
+                self.not_full.notify_all();
                 let (next, timeout) = self
                     .not_empty
                     .wait_timeout(inner, dl - now)
@@ -352,8 +407,16 @@ impl RequestQueue {
                 }
             }
         }
+        // A linger woken by a non-matching job consumed that job's
+        // `not_empty` notification without taking the job. Hand the
+        // wakeup to an idle worker, or the job sits queued until the
+        // next unrelated pop.
+        let leftover = !inner.jobs.is_empty();
         drop(inner);
         self.not_full.notify_all();
+        if leftover {
+            self.not_empty.notify_one();
+        }
         Some(batch)
     }
 
@@ -535,6 +598,103 @@ mod tests {
         assert_eq!(Lane::parse("parallel"), Some(Lane::CpuParallel));
         assert_eq!(Lane::parse("cpu"), Some(Lane::Cpu));
         assert_eq!(Lane::parse("bogus"), None);
+    }
+
+    #[test]
+    fn blocked_producer_unblocks_during_linger() {
+        // Regression: a capacity-1 Block queue whose popper lingers for
+        // stragglers must release the blocked producer as soon as the
+        // head pops — the producer's job is the straggler being lingered
+        // for. Before the fix the producer slept until the deadline.
+        use std::sync::Arc;
+        let q = Arc::new(RequestQueue::new(1, Backpressure::Block));
+        let _h1 = q.submit(req(1, 16)).unwrap();
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || {
+            let t0 = std::time::Instant::now();
+            let h = q2.submit(req(2, 16)).unwrap();
+            std::mem::forget(h); // keep reply channel alive
+            t0.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let b = q.pop_batch(8, Duration::from_secs(3)).unwrap();
+        let blocked_for = t.join().unwrap();
+        assert_eq!(b.len(), 2, "freed producer's job joins the batch");
+        assert!(
+            blocked_for < Duration::from_secs(2),
+            "producer blocked through the whole linger: {blocked_for:?}"
+        );
+    }
+
+    #[test]
+    fn close_mid_linger_returns_partial_batch() {
+        use std::sync::Arc;
+        let q = Arc::new(RequestQueue::new(8, Backpressure::Reject));
+        let _h = q.submit(req(1, 16)).unwrap();
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            q2.close();
+        });
+        let t0 = std::time::Instant::now();
+        let b = q.pop_batch(8, Duration::from_secs(5)).unwrap();
+        t.join().unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "close must end the linger, waited {:?}",
+            t0.elapsed()
+        );
+        assert!(q.pop_batch(8, Duration::ZERO).is_none());
+    }
+
+    #[test]
+    fn linger_break_hands_wakeup_to_idle_worker() {
+        // Regression: submit() notifies exactly one waiter. If that
+        // wakeup lands on a lingering popper whose key does not match,
+        // the popper breaks out — and must re-notify so an idle worker
+        // picks the job up instead of it sitting queued.
+        use std::sync::Arc;
+        let q = Arc::new(RequestQueue::new(8, Backpressure::Reject));
+        let _h1 = q.submit(req(1, 16)).unwrap();
+        let qa = Arc::clone(&q);
+        let a = std::thread::spawn(move || {
+            qa.pop_batch(8, Duration::from_secs(2)).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let qb = Arc::clone(&q);
+        let b = std::thread::spawn(move || {
+            qb.pop_batch(8, Duration::from_secs(2)).unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        let h = q.submit(req(2, 24)).unwrap(); // different batch key
+        std::mem::forget(h);
+        let mut ids: Vec<u64> = a
+            .join()
+            .unwrap()
+            .iter()
+            .chain(b.join().unwrap().iter())
+            .map(|j| j.request.id)
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2], "both jobs served, neither stranded");
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn decode_requests_batch_apart_from_pixel_jobs() {
+        let gray = req(1, 16);
+        let dec = Request::decode(2, vec![1, 2, 3], Lane::Auto);
+        assert_ne!(gray.batch_key(), dec.batch_key());
+        assert_eq!(dec.image.width(), 0);
+        assert!(!dec.image.is_color());
+        assert!(!dec.want_psnr);
+        let mut cdc3 = b"CDC3".to_vec();
+        cdc3.extend_from_slice(&[0u8; 16]);
+        assert!(JobImage::Encoded(cdc3).is_color());
+        // want_psnr is not part of the batch key: fast-path and full
+        // jobs share executables
+        assert_eq!(gray.batch_key(), req(1, 16).no_psnr().batch_key());
     }
 
     #[test]

@@ -188,6 +188,48 @@ impl Service {
             .submit(Request::compress(id, image, variant, lane))
     }
 
+    /// Submit a grayscale compression job, optionally skipping the
+    /// reconstruction + PSNR work (`want_psnr: false` is the serve fast
+    /// path: the response then carries only the container bytes).
+    pub fn compress_opts(
+        &self,
+        image: GrayImage,
+        variant: Variant,
+        lane: Lane,
+        want_psnr: bool,
+    ) -> Result<JobHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request::compress(id, image, variant, lane);
+        self.queue
+            .submit(if want_psnr { req } else { req.no_psnr() })
+    }
+
+    /// Submit a color compression job with an explicit PSNR switch
+    /// (see [`Service::compress_opts`]).
+    pub fn compress_color_opts(
+        &self,
+        image: ColorImage,
+        variant: Variant,
+        lane: Lane,
+        subsampling: Subsampling,
+        want_psnr: bool,
+    ) -> Result<JobHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req =
+            Request::compress_color(id, image, variant, lane, subsampling);
+        self.queue
+            .submit(if want_psnr { req } else { req.no_psnr() })
+    }
+
+    /// Submit a decode job for a CDC1/CDC3 container. Decode always runs
+    /// on the CPU lanes; `Lane::Auto` and `Lane::Gpu` resolve to
+    /// [`Lane::Cpu`] / fail inside the worker respectively.
+    pub fn decode(&self, container: Vec<u8>, lane: Lane)
+                  -> Result<JobHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.queue.submit(Request::decode(id, container, lane))
+    }
+
     /// Submit a color (YCbCr) compression job — the `color: true`
     /// request shape, served by either CPU lane or (since the
     /// planar-batch rework) the GPU lane.
@@ -248,6 +290,7 @@ impl Service {
             variant: Variant::Dct,
             lane,
             subsampling: Subsampling::S420,
+            want_psnr: false,
         })
     }
 
@@ -454,6 +497,35 @@ mod tests {
         assert_eq!(oa.color_image, ob.color_image);
         assert_eq!(oa.compressed_bytes, ob.compressed_bytes);
         assert!(oa.psnr_db.unwrap() > 25.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn decode_and_fast_path_through_service() {
+        let svc = Service::start(cpu_only_config(2)).unwrap();
+        let img = synthetic::lena_like(40, 24, 7);
+        let full = svc
+            .compress(img.clone(), Variant::Dct, Lane::Cpu)
+            .unwrap()
+            .wait()
+            .result
+            .unwrap();
+        let fast = svc
+            .compress_opts(img, Variant::Dct, Lane::Cpu, false)
+            .unwrap()
+            .wait()
+            .result
+            .unwrap();
+        // the fast path skips recon/PSNR but ships identical bytes
+        assert!(fast.psnr_db.is_none() && fast.image.is_none());
+        assert_eq!(fast.container, full.container);
+        let dec = svc
+            .decode(full.container.clone().unwrap(), Lane::Auto)
+            .unwrap()
+            .wait();
+        assert_eq!(dec.lane, Lane::Cpu, "decode resolves Auto to Cpu");
+        let rec = dec.result.unwrap().image.unwrap();
+        assert_eq!((rec.width, rec.height), (40, 24));
         svc.shutdown();
     }
 }

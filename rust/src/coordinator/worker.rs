@@ -153,6 +153,9 @@ fn resolve_lane(ctx: &WorkerCtx, req: &Request) -> Lane {
         Lane::Cpu => Lane::Cpu,
         Lane::CpuParallel => Lane::CpuParallel,
         Lane::Gpu => Lane::Gpu,
+        // Decode is CPU-only work (entropy decode + IDCT); the GPU lane
+        // has no executable for it.
+        Lane::Auto if req.kind == RequestKind::Decode => Lane::Cpu,
         Lane::Auto if req.image.is_color() => match &ctx.executor {
             Some(ex)
                 if req.kind == RequestKind::Compress
@@ -174,10 +177,13 @@ fn resolve_lane(ctx: &WorkerCtx, req: &Request) -> Lane {
                 let kind = match req.kind {
                     RequestKind::Compress => "compress",
                     RequestKind::Histeq => "histeq",
+                    RequestKind::Decode => {
+                        unreachable!("decode routed to CPU above")
+                    }
                 };
                 let variant = match req.kind {
                     RequestKind::Compress => Some(req.variant.as_str()),
-                    RequestKind::Histeq => None,
+                    RequestKind::Histeq | RequestKind::Decode => None,
                 };
                 if ex.rt.supports(kind, variant, ph, pw) {
                     Lane::Gpu
@@ -192,19 +198,21 @@ fn resolve_lane(ctx: &WorkerCtx, req: &Request) -> Lane {
 
 /// Entropy-code + package the payload all gray compress lanes share —
 /// fed straight from the fused zigzag output, no planar round-trip.
+/// `recon: None` is the recon-free fast path: no PSNR, no image.
 fn compress_output(
     original: &GrayImage,
-    recon: GrayImage,
+    recon: Option<GrayImage>,
     scanned: &ScanCoefs,
     variant: Variant,
     quality: u8,
 ) -> Result<JobOutput> {
     let bytes = entropy_encode(original, scanned, variant, quality)?;
     Ok(JobOutput {
-        psnr_db: Some(psnr(original, &recon)),
+        psnr_db: recon.as_ref().map(|r| psnr(original, r)),
         image: recon,
         color_image: None,
         compressed_bytes: Some(bytes.len()),
+        container: Some(bytes),
     })
 }
 
@@ -217,7 +225,66 @@ fn run_job(
     match &req.image {
         JobImage::Gray(img) => run_gray_job(ctx, cache, req, img, lane),
         JobImage::Color(img) => run_color_job(ctx, cache, req, img, lane),
+        JobImage::Encoded(bytes) => {
+            run_decode_job(ctx, cache, bytes, lane)
+        }
     }
+}
+
+/// Decode a CDC1/CDC3 container back to pixels. Every header field is
+/// validated by the codec before any allocation; hostile input comes
+/// back as a tagged `Err` the serve layer maps to an error frame.
+fn run_decode_job(
+    ctx: &WorkerCtx,
+    cache: &mut PipelineCache,
+    bytes: &[u8],
+    lane: Lane,
+) -> Result<JobOutput> {
+    if lane == Lane::Gpu {
+        bail!("decode runs on the CPU lanes");
+    }
+    let parallel = lane == Lane::CpuParallel;
+    if color_codec::is_color_container(bytes) {
+        let dec = color_codec::decode(bytes)?;
+        let variant = crate::codec::tag_variant(dec.header.variant)?;
+        let sub = color_codec::tag_subsampling(dec.header.subsampling)?;
+        let pipe = cache.color(
+            variant,
+            dec.header.quality,
+            sub,
+            parallel,
+            ctx.parallel_workers,
+        );
+        let img = pipe.decode_coefficients(&dec.planes);
+        return Ok(JobOutput {
+            image: None,
+            color_image: Some(img),
+            compressed_bytes: None,
+            container: None,
+            psnr_db: None,
+        });
+    }
+    let dec = crate::codec::decoder::decode(bytes)?;
+    let h = &dec.header;
+    let variant = crate::codec::tag_variant(h.variant)?;
+    let (pw, ph) = (h.padded_width as usize, h.padded_height as usize);
+    let (w, hh) = (h.width as usize, h.height as usize);
+    let recon = if parallel {
+        cache
+            .parallel(variant, h.quality, ctx.parallel_workers)
+            .decode_coefficients(&dec.qcoef_planar, pw, ph, w, hh)
+    } else {
+        cache
+            .serial(variant, h.quality)
+            .decode_coefficients(&dec.qcoef_planar, pw, ph, w, hh)
+    };
+    Ok(JobOutput {
+        image: Some(recon),
+        color_image: None,
+        compressed_bytes: None,
+        container: None,
+        psnr_db: None,
+    })
 }
 
 /// Color jobs: the `color: true` request path. Both CPU lanes run the
@@ -231,7 +298,7 @@ fn run_color_job(
     lane: Lane,
 ) -> Result<JobOutput> {
     if req.kind != RequestKind::Compress {
-        bail!("histeq is a grayscale workload");
+        bail!("only compress serves color images");
     }
     // the container header must record the quality the lane actually
     // quantized at: the GPU backend's own quality (the PJRT manifest's;
@@ -257,34 +324,40 @@ fn run_color_job(
         let bytes = color_codec::encode_scanned(&header, &out.scanned)?;
         return Ok(JobOutput {
             psnr_db: Some(psnr_color(img, &out.recon).weighted),
-            image: out.recon_y,
+            image: Some(out.recon_y),
             color_image: Some(out.recon),
             compressed_bytes: Some(bytes.len()),
+            container: Some(bytes),
         });
     }
-    let pipe = match lane {
-        Lane::CpuParallel => cache.color(
-            req.variant,
-            ctx.quality,
-            req.subsampling,
-            true,
-            ctx.parallel_workers,
-        ),
-        _ => cache.color(
-            req.variant,
-            ctx.quality,
-            req.subsampling,
-            false,
-            ctx.parallel_workers,
-        ),
-    };
-    let out = pipe.compress(img);
+    let pipe = cache.color(
+        req.variant,
+        ctx.quality,
+        req.subsampling,
+        lane == Lane::CpuParallel,
+        ctx.parallel_workers,
+    );
+    if !req.want_psnr {
+        // recon-free fast path: zigzag coefficients straight to the
+        // entropy coder, no IDCT, no upsample/reassemble
+        let scanned = pipe.analyze_scanned(img);
+        let bytes = color_codec::encode_scanned(&header, &scanned)?;
+        return Ok(JobOutput {
+            psnr_db: None,
+            image: None,
+            color_image: None,
+            compressed_bytes: Some(bytes.len()),
+            container: Some(bytes),
+        });
+    }
+    let out = pipe.compress_fused(img);
     let bytes = color_codec::encode_scanned(&header, &out.scanned)?;
     Ok(JobOutput {
         psnr_db: Some(psnr_color(img, &out.recon).weighted),
-        image: out.recon_y,
+        image: Some(out.recon_y),
         color_image: Some(out.recon),
         compressed_bytes: Some(bytes.len()),
+        container: Some(bytes),
     })
 }
 
@@ -304,9 +377,11 @@ fn run_gray_job(
             let out = ex.compress(img, req.variant.as_str())?;
             // header records the backend's quantization quality, which
             // on PJRT is the manifest's, not necessarily ctx.quality
+            // (the backend computes the recon regardless, so want_psnr
+            // costs nothing to honor here)
             compress_output(
                 img,
-                out.recon,
+                Some(out.recon),
                 &out.scanned,
                 req.variant,
                 ex.rt.quality(),
@@ -318,25 +393,47 @@ fn run_gray_job(
                 ctx.quality,
                 ctx.parallel_workers,
             );
-            let out = pipe.compress(img);
-            compress_output(
-                img,
-                out.recon,
-                &out.scanned,
-                req.variant,
-                ctx.quality,
-            )
+            if req.want_psnr {
+                let out = pipe.compress_fused(img);
+                compress_output(
+                    img,
+                    Some(out.recon),
+                    &out.scanned,
+                    req.variant,
+                    ctx.quality,
+                )
+            } else {
+                let scanned = pipe.analyze_scanned(img);
+                compress_output(
+                    img,
+                    None,
+                    &scanned,
+                    req.variant,
+                    ctx.quality,
+                )
+            }
         }
         (RequestKind::Compress, _) => {
             let pipe = cache.serial(req.variant, ctx.quality);
-            let out = pipe.compress(img);
-            compress_output(
-                img,
-                out.recon,
-                &out.scanned,
-                req.variant,
-                ctx.quality,
-            )
+            if req.want_psnr {
+                let out = pipe.compress_fused(img);
+                compress_output(
+                    img,
+                    Some(out.recon),
+                    &out.scanned,
+                    req.variant,
+                    ctx.quality,
+                )
+            } else {
+                let scanned = pipe.analyze_scanned(img);
+                compress_output(
+                    img,
+                    None,
+                    &scanned,
+                    req.variant,
+                    ctx.quality,
+                )
+            }
         }
         (RequestKind::Histeq, Lane::Gpu) => {
             let ex = ctx
@@ -345,18 +442,23 @@ fn run_gray_job(
                 .ok_or_else(|| anyhow::anyhow!("no GPU lane configured"))?;
             let (out, _ms) = ex.histeq(img)?;
             Ok(JobOutput {
-                image: out,
+                image: Some(out),
                 color_image: None,
                 compressed_bytes: None,
+                container: None,
                 psnr_db: None,
             })
         }
         (RequestKind::Histeq, _) => Ok(JobOutput {
-            image: histeq::histeq(img),
+            image: Some(histeq::histeq(img)),
             color_image: None,
             compressed_bytes: None,
+            container: None,
             psnr_db: None,
         }),
+        (RequestKind::Decode, _) => {
+            bail!("decode jobs carry an encoded payload, not pixels")
+        }
     }
 }
 
@@ -436,9 +538,13 @@ mod tests {
         assert_eq!(resp.id, 7);
         assert_eq!(resp.lane, Lane::Cpu);
         let out = resp.result.unwrap();
-        assert_eq!(out.image.width, 32);
+        assert_eq!(out.image.as_ref().unwrap().width, 32);
         assert!(out.psnr_db.unwrap() > 28.0);
         assert!(out.compressed_bytes.unwrap() > 0);
+        assert_eq!(
+            out.container.unwrap().len(),
+            out.compressed_bytes.unwrap()
+        );
     }
 
     #[test]
@@ -502,6 +608,7 @@ mod tests {
                 variant: Variant::Dct,
                 lane: Lane::Cpu,
                 subsampling: crate::image::ycbcr::Subsampling::S420,
+                want_psnr: true,
             })
             .unwrap();
         let ctx2 = Arc::clone(&ctx);
@@ -510,7 +617,7 @@ mod tests {
         ctx.queue.close();
         t.join().unwrap();
         let out = resp.result.unwrap();
-        assert_eq!(out.image, histeq::histeq(&img));
+        assert_eq!(out.image.unwrap(), histeq::histeq(&img));
         assert!(out.compressed_bytes.is_none());
     }
 
@@ -555,6 +662,94 @@ mod tests {
         assert_eq!(o_ser.compressed_bytes, o_par.compressed_bytes);
         assert!(o_ser.psnr_db.unwrap() > 25.0);
         assert_eq!((ser_rgb.width, ser_rgb.height), (40, 32));
+    }
+
+    #[test]
+    fn decode_job_roundtrips_compress_output() {
+        let ctx = Arc::new(cpu_ctx(8));
+        let img = synthetic::lena_like(32, 32, 1);
+        let h = ctx
+            .queue
+            .submit(Request::compress(1, img.clone(), Variant::Dct,
+                                      Lane::Cpu))
+            .unwrap();
+        let ctx2 = Arc::clone(&ctx);
+        let t = std::thread::spawn(move || run(&ctx2));
+        let container = h.wait().result.unwrap().container.unwrap();
+        let h2 = ctx
+            .queue
+            .submit(Request::decode(2, container, Lane::Auto))
+            .unwrap();
+        let resp = h2.wait();
+        ctx.queue.close();
+        t.join().unwrap();
+        assert_eq!(resp.lane, Lane::Cpu, "decode auto-routes to CPU");
+        let out = resp.result.unwrap();
+        let recon = out.image.unwrap();
+        assert_eq!((recon.width, recon.height), (32, 32));
+        assert!(crate::metrics::psnr(&img, &recon) > 28.0);
+    }
+
+    #[test]
+    fn hostile_container_is_job_error_not_panic() {
+        use crate::codec::{classify_decode_error, DecodeErrorKind};
+        let ctx = Arc::new(cpu_ctx(4));
+        // real magic, hostile header: tiny image, huge padded grid
+        let mut evil = Vec::new();
+        Header {
+            width: 1,
+            height: 1,
+            padded_width: 4096,
+            padded_height: 4096,
+            quality: 50,
+            variant: 0,
+        }
+        .write(&mut evil);
+        evil.extend_from_slice(&[0u8; 64]);
+        let h = ctx
+            .queue
+            .submit(Request::decode(1, evil, Lane::Cpu))
+            .unwrap();
+        let ctx2 = Arc::clone(&ctx);
+        let t = std::thread::spawn(move || run(&ctx2));
+        let resp = h.wait();
+        ctx.queue.close();
+        t.join().unwrap();
+        let err = resp.result.unwrap_err();
+        assert_eq!(
+            classify_decode_error(&err),
+            Some(DecodeErrorKind::BadHeader),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn no_psnr_fast_path_skips_recon_same_container() {
+        let ctx = Arc::new(cpu_ctx(8));
+        let img = synthetic::lena_like(40, 24, 3);
+        let h_full = ctx
+            .queue
+            .submit(Request::compress(1, img.clone(), Variant::Cordic,
+                                      Lane::Cpu))
+            .unwrap();
+        let h_fast = ctx
+            .queue
+            .submit(
+                Request::compress(2, img, Variant::Cordic, Lane::Cpu)
+                    .no_psnr(),
+            )
+            .unwrap();
+        let ctx2 = Arc::clone(&ctx);
+        let t = std::thread::spawn(move || run(&ctx2));
+        let full = h_full.wait().result.unwrap();
+        let fast = h_fast.wait().result.unwrap();
+        ctx.queue.close();
+        t.join().unwrap();
+        assert!(fast.image.is_none());
+        assert!(fast.psnr_db.is_none());
+        assert!(full.image.is_some() && full.psnr_db.is_some());
+        // the fast path emits byte-identical container output
+        assert_eq!(fast.container, full.container);
     }
 
     #[test]

@@ -27,7 +27,7 @@ use crate::image::GrayImage;
 
 use super::parallel::ParallelCpuPipeline;
 use super::planar::split_ycbcr;
-use super::pipeline::{CpuCompressOutput, CpuPipeline};
+use super::pipeline::{CpuCompressOutput, CpuPipeline, FusedCompressOutput};
 use super::quant::{effective_qtable, effective_qtable_chroma};
 use super::Variant;
 
@@ -71,6 +71,19 @@ pub struct ColorCompressOutput {
     /// The same coefficients in entropy-coding order per plane (the
     /// fused `quantize_zigzag_batch` output the color encoder consumes
     /// directly), Y/Cb/Cr order.
+    pub scanned: [ScanCoefs; 3],
+}
+
+/// Output of a fused-only color run: RGB + luma reconstructions plus the
+/// per-plane zigzag coefficients, with no planar f32 buffers and no
+/// [`PlaneCoef`] clones — everything the coordinator's color lane
+/// consumes and nothing it drops.
+pub struct FusedColorOutput {
+    /// Reconstructed RGB image at the original size.
+    pub recon: ColorImage,
+    /// Full-resolution reconstructed luma plane.
+    pub recon_y: GrayImage,
+    /// Coefficients in entropy-coding order per plane, Y/Cb/Cr order.
     pub scanned: [ScanCoefs; 3],
 }
 
@@ -189,6 +202,33 @@ impl ColorPipeline {
         }
     }
 
+    fn compress_plane_fused(&self, plane: &GrayImage, chroma: bool)
+                            -> FusedCompressOutput {
+        match &self.pipes {
+            PlanePipes::Serial { luma, chroma: c } => {
+                let pipe = if chroma { c } else { luma };
+                pipe.compress_fused(plane)
+            }
+            PlanePipes::Parallel { luma, chroma: c } => {
+                let pipe = if chroma { c } else { luma };
+                pipe.compress_fused(plane)
+            }
+        }
+    }
+
+    fn scan_plane(&self, plane: &GrayImage, chroma: bool) -> ScanCoefs {
+        match &self.pipes {
+            PlanePipes::Serial { luma, chroma: c } => {
+                let pipe = if chroma { c } else { luma };
+                pipe.analyze_scanned(plane)
+            }
+            PlanePipes::Parallel { luma, chroma: c } => {
+                let pipe = if chroma { c } else { luma };
+                pipe.analyze_scanned(plane)
+            }
+        }
+    }
+
     fn analyze_plane(&self, plane: &GrayImage, chroma: bool)
                      -> (Vec<f32>, usize, usize) {
         match &self.pipes {
@@ -272,6 +312,48 @@ impl ColorPipeline {
             recon_cb: ocb.recon,
             recon_cr: ocr.recon,
         }
+    }
+
+    /// Full pipeline without any planar f32 coefficient buffers:
+    /// per-plane [`CpuPipeline::compress_fused`] plus the same upsample/
+    /// reassemble as [`ColorPipeline::compress`]. Identical recon and
+    /// scanned output; this is the coordinator's color hot path.
+    pub fn compress_fused(&self, img: &ColorImage) -> FusedColorOutput {
+        let (y, cb, cr) = self.split_planes(img);
+        let oy = self.compress_plane_fused(&y, false);
+        let ocb = self.compress_plane_fused(&cb, true);
+        let ocr = self.compress_plane_fused(&cr, true);
+        let cb_full = ycbcr::upsample(
+            &ocb.recon,
+            self.subsampling,
+            img.width,
+            img.height,
+        );
+        let cr_full = ycbcr::upsample(
+            &ocr.recon,
+            self.subsampling,
+            img.width,
+            img.height,
+        );
+        let recon = ycbcr::ycbcr_to_rgb(&oy.recon, &cb_full, &cr_full)
+            .expect("planes upsampled to matching size");
+        FusedColorOutput {
+            recon,
+            recon_y: oy.recon,
+            scanned: [oy.scanned, ocb.scanned, ocr.scanned],
+        }
+    }
+
+    /// Forward transform + quantization straight to entropy-coding order
+    /// per plane (Y/Cb/Cr) — no reconstruction, no planar buffers; the
+    /// recon-free serve path that never computes PSNR runs on this.
+    pub fn analyze_scanned(&self, img: &ColorImage) -> [ScanCoefs; 3] {
+        let (y, cb, cr) = self.split_planes(img);
+        [
+            self.scan_plane(&y, false),
+            self.scan_plane(&cb, true),
+            self.scan_plane(&cr, true),
+        ]
     }
 
     /// Forward transform + quantization only (what the entropy encoder
@@ -391,6 +473,29 @@ mod tests {
             assert_eq!(ser.scanned, par.scanned);
             assert_eq!(ser.recon, par.recon);
             assert_eq!(ser.recon_y, par.recon_y);
+        }
+    }
+
+    #[test]
+    fn fused_color_matches_full_compress() {
+        let img = synthetic::lena_like_rgb(40, 21, 8);
+        for parallel in [false, true] {
+            let pipe = if parallel {
+                ColorPipeline::parallel(
+                    Variant::Cordic,
+                    50,
+                    Subsampling::S420,
+                    2,
+                )
+            } else {
+                ColorPipeline::new(Variant::Cordic, 50, Subsampling::S420)
+            };
+            let full = pipe.compress(&img);
+            let fused = pipe.compress_fused(&img);
+            assert_eq!(fused.recon, full.recon, "parallel={parallel}");
+            assert_eq!(fused.recon_y, full.recon_y);
+            assert_eq!(fused.scanned, full.scanned);
+            assert_eq!(pipe.analyze_scanned(&img), full.scanned);
         }
     }
 }

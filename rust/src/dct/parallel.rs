@@ -25,7 +25,7 @@ use crate::image::GrayImage;
 
 use super::batch::BatchEngine;
 use super::blocks::{self, grid_dims, pad_to_blocks};
-use super::pipeline::CpuCompressOutput;
+use super::pipeline::{CpuCompressOutput, FusedCompressOutput};
 use super::quant::effective_qtable;
 use super::Variant;
 use crate::util::threadpool::{parallel_map, ThreadPool};
@@ -92,11 +92,12 @@ impl ParallelCpuPipeline {
         &self,
         padded: &GrayImage,
         by: usize,
+        planar: bool,
         scan: bool,
         decode: bool,
-    ) -> (Vec<f32>, Option<Vec<i16>>, Option<GrayImage>) {
+    ) -> (Option<Vec<f32>>, Option<Vec<i16>>, Option<GrayImage>) {
         let w = padded.width;
-        let mut qrow = vec![0.0f32; w * blocks::BLOCK];
+        let mut qrow = planar.then(|| vec![0.0f32; w * blocks::BLOCK]);
         let mut srow = scan.then(|| vec![0i16; w * blocks::BLOCK]);
         let mut band = decode.then(|| GrayImage::new(w, blocks::BLOCK));
         self.engine.with_scratch(|s| {
@@ -105,7 +106,7 @@ impl ParallelCpuPipeline {
                 s,
                 padded,
                 by,
-                Some(&mut qrow),
+                qrow.as_deref_mut(),
                 0,
                 srow.as_deref_mut(),
                 recon,
@@ -120,13 +121,13 @@ impl ParallelCpuPipeline {
         let padded = pad_to_blocks(img);
         let (_, gh) = grid_dims(padded.width, padded.height);
         let bands = parallel_map(gh, self.workers, |by| {
-            self.process_band(&padded, by, true, true)
+            self.process_band(&padded, by, true, true, true)
         });
         let mut qcoef = Vec::with_capacity(padded.pixels());
         let mut scanned = Vec::with_capacity(padded.pixels());
         let mut pixels = Vec::with_capacity(padded.pixels());
         for (qrow, srow, band) in bands {
-            qcoef.extend_from_slice(&qrow);
+            qcoef.extend_from_slice(&qrow.expect("planar band"));
             scanned.extend_from_slice(&srow.expect("scanned band"));
             pixels.extend_from_slice(&band.expect("decoded band").data);
         }
@@ -157,13 +158,77 @@ impl ParallelCpuPipeline {
         }
     }
 
+    /// Full pipeline without the planar f32 buffer; bit-identical
+    /// recon/scanned to
+    /// [`CpuPipeline::compress_fused`](super::pipeline::CpuPipeline::compress_fused).
+    pub fn compress_fused(&self, img: &GrayImage) -> FusedCompressOutput {
+        let padded = pad_to_blocks(img);
+        let (_, gh) = grid_dims(padded.width, padded.height);
+        let bands = parallel_map(gh, self.workers, |by| {
+            let (_, srow, band) =
+                self.process_band(&padded, by, false, true, true);
+            (srow, band)
+        });
+        let mut scanned = Vec::with_capacity(padded.pixels());
+        let mut pixels = Vec::with_capacity(padded.pixels());
+        for (srow, band) in bands {
+            scanned.extend_from_slice(&srow.expect("scanned band"));
+            pixels.extend_from_slice(&band.expect("decoded band").data);
+        }
+        let recon = GrayImage {
+            width: padded.width,
+            height: padded.height,
+            data: pixels,
+        };
+        let recon = if (padded.width, padded.height)
+            != (img.width, img.height)
+        {
+            recon.crop(img.width, img.height).expect("crop to original")
+        } else {
+            recon
+        };
+        FusedCompressOutput {
+            recon,
+            scanned: ScanCoefs {
+                width: img.width,
+                height: img.height,
+                padded_width: padded.width,
+                padded_height: padded.height,
+                data: scanned,
+            },
+        }
+    }
+
+    /// Forward transform + quantization straight to entropy-coding order,
+    /// band-parallel; no planar buffer and no reconstruction.
+    pub fn analyze_scanned(&self, img: &GrayImage) -> ScanCoefs {
+        let padded = pad_to_blocks(img);
+        let (_, gh) = grid_dims(padded.width, padded.height);
+        let bands = parallel_map(gh, self.workers, |by| {
+            self.process_band(&padded, by, false, true, false).1
+        });
+        let mut scanned = Vec::with_capacity(padded.pixels());
+        for srow in bands {
+            scanned.extend_from_slice(&srow.expect("scanned band"));
+        }
+        ScanCoefs {
+            width: img.width,
+            height: img.height,
+            padded_width: padded.width,
+            padded_height: padded.height,
+            data: scanned,
+        }
+    }
+
     /// Forward transform + quantization only; bit-identical to
     /// [`CpuPipeline::analyze`](super::pipeline::CpuPipeline::analyze).
     pub fn analyze(&self, img: &GrayImage) -> (Vec<f32>, usize, usize) {
         let padded = pad_to_blocks(img);
         let (_, gh) = grid_dims(padded.width, padded.height);
         let bands = parallel_map(gh, self.workers, |by| {
-            self.process_band(&padded, by, false, false).0
+            self.process_band(&padded, by, true, false, false)
+                .0
+                .expect("planar band")
         });
         let mut qcoef = Vec::with_capacity(padded.pixels());
         for qrow in bands {
@@ -267,6 +332,17 @@ mod tests {
                 .compress(&img);
         assert_eq!(par.qcoef, serial.qcoef);
         assert!(psnr(&img, &par.recon) > 28.0);
+    }
+
+    #[test]
+    fn fused_matches_serial_pipeline() {
+        let img = synthetic::lena_like(30, 21, 4);
+        let serial = CpuPipeline::new(Variant::Dct, 50).compress(&img);
+        let pipe = ParallelCpuPipeline::with_workers(Variant::Dct, 50, 3);
+        let fused = pipe.compress_fused(&img);
+        assert_eq!(fused.recon, serial.recon);
+        assert_eq!(fused.scanned, serial.scanned);
+        assert_eq!(pipe.analyze_scanned(&img), serial.scanned);
     }
 
     #[test]

@@ -37,6 +37,18 @@ pub struct CpuCompressOutput {
     pub padded_height: usize,
 }
 
+/// Output of a fused-only compression run: reconstruction plus the
+/// entropy-coding-order coefficients, with no planar f32 interchange
+/// buffer ever allocated. This is what the coordinator's workers consume —
+/// [`CpuCompressOutput::qcoef`] exists for interchange with planar
+/// backends and tooling, not for the serve hot path.
+pub struct FusedCompressOutput {
+    /// Reconstructed image at the original (uncropped) size.
+    pub recon: GrayImage,
+    /// Coefficients in entropy-coding order (zigzag per block).
+    pub scanned: ScanCoefs,
+}
+
 /// Serial compression pipeline with a pluggable forward transform.
 pub struct CpuPipeline {
     engine: BatchEngine,
@@ -108,6 +120,43 @@ impl CpuPipeline {
         }
     }
 
+    /// Full pipeline without the planar f32 coefficient buffer: recon +
+    /// zigzag-order coefficients only. Identical arithmetic to
+    /// [`CpuPipeline::compress`]; use this when `qcoef` would be dropped
+    /// unread (the coordinator's gray lane).
+    pub fn compress_fused(&self, img: &GrayImage) -> FusedCompressOutput {
+        let padded = pad_to_blocks(img);
+        let (_, gh) = grid_dims(padded.width, padded.height);
+        let mut recon = GrayImage::new(padded.width, padded.height);
+        let mut scanned = ScanCoefs::zeroed(
+            img.width,
+            img.height,
+            padded.width,
+            padded.height,
+        );
+        self.engine.with_scratch(|s| {
+            for by in 0..gh {
+                self.engine.forward_quant_row(
+                    s,
+                    &padded,
+                    by,
+                    None,
+                    by,
+                    Some(&mut scanned.data),
+                    Some((&mut recon, by)),
+                );
+            }
+        });
+        let recon = if (padded.width, padded.height)
+            != (img.width, img.height)
+        {
+            recon.crop(img.width, img.height).expect("crop to original")
+        } else {
+            recon
+        };
+        FusedCompressOutput { recon, scanned }
+    }
+
     /// Forward transform + quantization only (what the entropy encoder
     /// needs); returns planar coefficients at padded size.
     pub fn analyze(&self, img: &GrayImage) -> (Vec<f32>, usize, usize) {
@@ -156,6 +205,40 @@ impl CpuPipeline {
             }
         });
         scanned
+    }
+
+    /// [`CpuPipeline::analyze_scanned`] into a caller-owned buffer. For an
+    /// 8-aligned image whose buffer already has capacity this performs no
+    /// heap allocation at all (the image is borrowed, not padded-by-copy)
+    /// — the steady state `microbench_hotpath` CI-gates at zero allocs.
+    pub fn analyze_scanned_into(
+        &self,
+        img: &GrayImage,
+        out: &mut ScanCoefs,
+    ) {
+        let padded_owned;
+        let padded: &GrayImage =
+            if img.width % 8 == 0 && img.height % 8 == 0 {
+                img
+            } else {
+                padded_owned = pad_to_blocks(img);
+                &padded_owned
+            };
+        let (_, gh) = grid_dims(padded.width, padded.height);
+        out.reset(img.width, img.height, padded.width, padded.height);
+        self.engine.with_scratch(|s| {
+            for by in 0..gh {
+                self.engine.forward_quant_row(
+                    s,
+                    padded,
+                    by,
+                    None,
+                    by,
+                    Some(&mut out.data),
+                    None,
+                );
+            }
+        });
     }
 
     /// Decode planar quantized coefficients back to an image (the decoder
@@ -276,6 +359,23 @@ mod tests {
             );
             assert_eq!(full.scanned, want);
             assert_eq!(pipe.analyze_scanned(&img), want);
+        }
+    }
+
+    #[test]
+    fn fused_compress_matches_full_compress() {
+        for (w, h) in [(40, 32), (30, 21)] {
+            let img = synthetic::lena_like(w, h, 6);
+            let pipe = CpuPipeline::new(Variant::Dct, 50);
+            let full = pipe.compress(&img);
+            let fused = pipe.compress_fused(&img);
+            assert_eq!(fused.recon, full.recon);
+            assert_eq!(fused.scanned, full.scanned);
+            // the into-buffer variant matches even when the buffer is
+            // reused across differently-shaped runs
+            let mut buf = ScanCoefs::zeroed(8, 8, 8, 8);
+            pipe.analyze_scanned_into(&img, &mut buf);
+            assert_eq!(buf, full.scanned);
         }
     }
 

@@ -71,7 +71,12 @@
 //!   cache, the bit-exact stub backend, and the planar-batch executor
 //!   (gray + color, plane-parallel).
 //! * [`coordinator`] — router, per-lane batcher, worker pool, service
-//!   facade over all three lanes (gray and color compress requests).
+//!   facade over all three lanes (gray and color compress, decode,
+//!   histeq requests).
+//! * [`serve`] — the TCP front-end over the coordinator: length-prefixed
+//!   binary framing, admission control + structured overload replies,
+//!   per-connection timeouts, a blocking client, and the load generator
+//!   behind `ablation_serve_load`.
 //! * [`bench`] — the measurement harness and the paper-table formatters
 //!   used by `cargo bench` targets (now with serial/parallel/GPU columns).
 
@@ -82,6 +87,7 @@ pub mod dct;
 pub mod image;
 pub mod metrics;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Crate-wide result alias.

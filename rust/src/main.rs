@@ -6,6 +6,10 @@
 //! cordic-dct decompress --input out.cdc --output back.png
 //! cordic-dct serve      --requests 64 --scene lena --lane auto [--color]
 //!                       [--stub-gpu]
+//! cordic-dct serve      --listen 127.0.0.1:7070 [--max-conns 32]
+//!                       [--duration-s 0] [--stub-gpu]
+//! cordic-dct loadgen    --addr 127.0.0.1:7070 --clients 4 --requests 16
+//!                       [--size 128] [--color] [--json load.json]
 //! cordic-dct psnr       --a ref.png --b test.png [--color] [--lane gpu]
 //!                       [--json psnr.json]
 //! cordic-dct histeq     --input img.pgm --output eq.pgm [--lane gpu]
@@ -61,6 +65,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "compress" => cmd_compress(rest),
         "decompress" => cmd_decompress(rest),
         "serve" => cmd_serve(rest),
+        "loadgen" => cmd_loadgen(rest),
         "psnr" => cmd_psnr(rest),
         "histeq" => cmd_histeq(rest),
         "synth" => cmd_synth(rest),
@@ -81,7 +86,9 @@ fn print_usage() {
          SUBCOMMANDS:\n\
          \x20 compress     compress an image to .cdc (--color for RGB/YCbCr)\n\
          \x20 decompress   decode a .cdc (gray or color) back to an image\n\
-         \x20 serve        run the coordinator on a synthetic workload\n\
+         \x20 serve        run the coordinator on a synthetic workload, or\n\
+         \x20              with --listen ADDR as a TCP server\n\
+         \x20 loadgen      drive a running TCP server and report latency\n\
          \x20 psnr         PSNR between two images\n\
          \x20 histeq       histogram equalization\n\
          \x20 synth        generate a synthetic test image\n\
@@ -343,6 +350,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .flag("stub-gpu",
               "serve the GPU lane with the host-side stub backend when \
                no artifact manifest exists")
+        .opt("listen", "",
+             "bind a TCP front-end here (e.g. 127.0.0.1:7070) instead of \
+              running the in-process synthetic load")
+        .opt("max-conns", "32", "TCP mode: admission-control cap")
+        .opt("duration-s", "0",
+             "TCP mode: serve this long then shut down gracefully \
+              (0 = until killed)")
         .parse(args)?;
     let n = m.get_usize("requests")?;
     let size = m.get_usize("size")?;
@@ -365,6 +379,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     cfg.artifact_dir =
         (!adir.is_empty()).then(|| PathBuf::from(adir));
     cfg.stub_gpu = m.flag("stub-gpu");
+    if !m.get("listen").is_empty() {
+        return serve_tcp(&m, cfg);
+    }
     let svc = Service::start(cfg)?;
     println!(
         "serving {n} x {size}x{size} '{}' {} requests on lane {:?} \
@@ -427,6 +444,85 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         stats.compiled_executables
     );
     svc.shutdown();
+    Ok(())
+}
+
+/// `serve --listen ADDR`: the real TCP front-end over the coordinator.
+fn serve_tcp(
+    m: &cordic_dct::util::cli::Matches,
+    service: ServiceConfig,
+) -> Result<()> {
+    use cordic_dct::serve::{ServeConfig, TcpServer};
+    let cfg = ServeConfig {
+        service,
+        max_connections: m.get_usize("max-conns")?.max(1),
+        ..Default::default()
+    };
+    let server = TcpServer::bind(m.get("listen"), cfg)?;
+    let duration_s = m.get_usize("duration-s")?;
+    println!(
+        "listening on {} ({})",
+        server.local_addr(),
+        if duration_s == 0 {
+            "until killed".to_string()
+        } else {
+            format!("for {duration_s}s")
+        }
+    );
+    if duration_s == 0 {
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(std::time::Duration::from_secs(duration_s as u64));
+    println!(
+        "shutting down: {} active connection(s), {} overload reject(s)",
+        server.active_connections(),
+        server.overload_rejects()
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_loadgen(args: &[String]) -> Result<()> {
+    use cordic_dct::serve::{run_load, Client, LoadSpec};
+    let m = Command::new("loadgen", "drive a running TCP serve front-end")
+        .opt_req("addr", "server address, e.g. 127.0.0.1:7070")
+        .opt("clients", "4", "concurrent connections")
+        .opt("requests", "16", "requests per client")
+        .opt("size", "128", "square synthetic image size")
+        .opt("variant", "cordic", "transform variant")
+        .opt("lane", "cpu", "cpu|cpu-parallel|gpu|auto")
+        .flag("color", "send color jobs")
+        .flag("psnr", "ask the server for PSNR (disables the fast path)")
+        .opt("json", "", "write the report as JSON here")
+        .parse(args)?;
+    let addr: std::net::SocketAddr = m
+        .get("addr")
+        .parse()
+        .with_context(|| format!("bad address '{}'", m.get("addr")))?;
+    // fail fast with a clear message when nothing is listening
+    Client::connect(addr)
+        .and_then(|mut c| c.ping())
+        .with_context(|| format!("no serve front-end at {addr}"))?;
+    let spec = LoadSpec {
+        clients: m.get_usize("clients")?.max(1),
+        requests_per_client: m.get_usize("requests")?.max(1),
+        size: m.get_usize("size")?.max(8),
+        color: m.flag("color"),
+        variant: parse_variant(m.get("variant"))?,
+        lane: parse_lane(m.get("lane"))?,
+        want_psnr: m.flag("psnr"),
+        ..LoadSpec::new(addr)
+    };
+    let report = run_load(&spec)?;
+    println!("{report}");
+    let path = m.get("json");
+    if !path.is_empty() {
+        std::fs::write(path, report.to_json().to_string())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

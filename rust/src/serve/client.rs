@@ -1,0 +1,202 @@
+//! A small blocking client for the serve protocol — used by the load
+//! generator, the integration tests, and the `loadgen` CLI subcommand.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::Lane;
+use crate::dct::Variant;
+use crate::image::color::ColorImage;
+use crate::image::ycbcr::Subsampling;
+use crate::image::GrayImage;
+
+use super::framing::{self, FrameEvent, MAX_FRAME_LEN_DEFAULT};
+use super::protocol::{ImagePayload, RequestMsg, ResponseMsg};
+
+/// A successful compression reply.
+#[derive(Debug, Clone)]
+pub struct Compressed {
+    pub lane: Lane,
+    pub psnr_db: Option<f64>,
+    /// The CDC1/CDC3 container bytes.
+    pub container: Vec<u8>,
+}
+
+/// Blocking protocol client over one TCP connection.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    max_frame_len: usize,
+    /// Overall per-request response deadline (the socket read timeout is
+    /// just a poll tick under it).
+    response_deadline: Duration,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).context("connecting to server")?;
+        stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+        stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+            max_frame_len: MAX_FRAME_LEN_DEFAULT,
+            response_deadline: Duration::from_secs(60),
+        })
+    }
+
+    /// Override the per-request response deadline.
+    pub fn with_deadline(mut self, d: Duration) -> Client {
+        self.response_deadline = d;
+        self
+    }
+
+    /// Raw access to the underlying stream (test hook for simulating
+    /// abrupt client behavior).
+    pub fn stream(&self) -> &TcpStream {
+        self.reader.get_ref()
+    }
+
+    /// Send one request frame and wait for its response frame.
+    pub fn request(&mut self, msg: &RequestMsg) -> Result<ResponseMsg> {
+        let (kind, payload) = msg.encode();
+        framing::write_frame(&mut self.writer, kind, &payload)?;
+        let t0 = Instant::now();
+        loop {
+            match framing::read_frame(&mut self.reader, self.max_frame_len)?
+            {
+                FrameEvent::Frame { kind, payload } => {
+                    return ResponseMsg::decode(kind, &payload)
+                }
+                FrameEvent::Eof => {
+                    bail!("server closed the connection mid-request")
+                }
+                FrameEvent::Idle => {
+                    if t0.elapsed() > self.response_deadline {
+                        bail!(
+                            "no response within {:?}",
+                            self.response_deadline
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    fn expect_ok(resp: ResponseMsg) -> Result<ResponseMsg> {
+        match resp {
+            ResponseMsg::Error { code, message } => {
+                bail!("server error {code}: {message}")
+            }
+            ResponseMsg::Overloaded => bail!("server overloaded"),
+            other => Ok(other),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        match Self::expect_ok(self.request(&RequestMsg::Ping)?)? {
+            ResponseMsg::Pong => Ok(()),
+            other => bail!("expected Pong, got {other:?}"),
+        }
+    }
+
+    /// Server-side stats snapshot as a JSON string.
+    pub fn stats_json(&mut self) -> Result<String> {
+        match Self::expect_ok(self.request(&RequestMsg::Stats)?)? {
+            ResponseMsg::StatsJson(s) => Ok(s),
+            other => bail!("expected StatsJson, got {other:?}"),
+        }
+    }
+
+    pub fn compress_gray(
+        &mut self,
+        image: &GrayImage,
+        variant: Variant,
+        lane: Lane,
+        want_psnr: bool,
+    ) -> Result<Compressed> {
+        let msg = RequestMsg::CompressGray {
+            image: image.clone(),
+            variant,
+            lane,
+            want_psnr,
+        };
+        match Self::expect_ok(self.request(&msg)?)? {
+            ResponseMsg::Compressed {
+                lane,
+                psnr_db,
+                container,
+            } => Ok(Compressed {
+                lane,
+                psnr_db,
+                container,
+            }),
+            other => bail!("expected Compressed, got {other:?}"),
+        }
+    }
+
+    pub fn compress_color(
+        &mut self,
+        image: &ColorImage,
+        variant: Variant,
+        lane: Lane,
+        subsampling: Subsampling,
+        want_psnr: bool,
+    ) -> Result<Compressed> {
+        let msg = RequestMsg::CompressColor {
+            image: image.clone(),
+            variant,
+            lane,
+            subsampling,
+            want_psnr,
+        };
+        match Self::expect_ok(self.request(&msg)?)? {
+            ResponseMsg::Compressed {
+                lane,
+                psnr_db,
+                container,
+            } => Ok(Compressed {
+                lane,
+                psnr_db,
+                container,
+            }),
+            other => bail!("expected Compressed, got {other:?}"),
+        }
+    }
+
+    /// Decode a container server-side; returns the reconstructed pixels.
+    pub fn decode(
+        &mut self,
+        container: Vec<u8>,
+        lane: Lane,
+    ) -> Result<ImagePayload> {
+        let msg = RequestMsg::Decode { container, lane };
+        match Self::expect_ok(self.request(&msg)?)? {
+            ResponseMsg::Image { image, .. } => Ok(image),
+            other => bail!("expected Image, got {other:?}"),
+        }
+    }
+
+    pub fn histeq(
+        &mut self,
+        image: &GrayImage,
+        lane: Lane,
+    ) -> Result<GrayImage> {
+        let msg = RequestMsg::Histeq {
+            image: image.clone(),
+            lane,
+        };
+        match Self::expect_ok(self.request(&msg)?)? {
+            ResponseMsg::Image {
+                image: ImagePayload::Gray(g),
+                ..
+            } => Ok(g),
+            other => bail!("expected gray Image, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Per-connection frame loop: read a request frame, run it through the
+//! coordinator, answer exactly one response frame.
+//!
+//! Error containment is the whole design: malformed frames, hostile
+//! containers, queue overload, and job failures all come back as
+//! structured frames ([`ResponseMsg::Error`] / `Overloaded`) on a still-
+//! healthy connection, never as a panic or a silent drop. Only a
+//! desynchronized byte stream (bad length prefix, mid-frame stall or
+//! disconnect) closes the connection — after a best-effort error frame —
+//! because framing cannot resynchronize.
+
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+
+use anyhow::Result;
+
+use crate::codec::classify_decode_error;
+use crate::coordinator::{JobHandle, JobOutput, Lane, Service};
+use crate::log_debug;
+use crate::util::json::Json;
+
+use super::framing::{self, FrameEvent};
+use super::protocol::{
+    decode_error_code, ImagePayload, RequestMsg, ResponseMsg,
+    ERR_BAD_FRAME, ERR_JOB_FAILED, ERR_JOB_TIMEOUT,
+};
+use super::server::Shared;
+
+/// Entry point for the connection pool; errors end the connection and
+/// are logged, not propagated.
+pub(crate) fn handle(stream: TcpStream, sh: &Shared) {
+    let peer = stream
+        .peer_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| "<unknown>".into());
+    if let Err(e) = serve_conn(stream, sh) {
+        log_debug!("serve", "connection {peer} closed: {e:#}");
+    }
+}
+
+fn serve_conn(stream: TcpStream, sh: &Shared) -> Result<()> {
+    stream.set_read_timeout(Some(sh.read_timeout))?;
+    stream.set_write_timeout(Some(sh.write_timeout))?;
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        match framing::read_frame(&mut reader, sh.max_frame_len) {
+            Ok(FrameEvent::Eof) => return Ok(()),
+            Ok(FrameEvent::Idle) => {
+                if sh.shutdown.load(Ordering::SeqCst) {
+                    return Ok(());
+                }
+            }
+            Ok(FrameEvent::Frame { kind, payload }) => {
+                let resp = process(sh, kind, &payload);
+                let ctr = match resp {
+                    ResponseMsg::Error { .. }
+                    | ResponseMsg::Overloaded => &sh.counters.frames_error,
+                    _ => &sh.counters.frames_ok,
+                };
+                ctr.fetch_add(1, Ordering::SeqCst);
+                let (k, body) = resp.encode();
+                framing::write_frame(&mut writer, k, &body)?;
+            }
+            Err(e) => {
+                // the stream is desynchronized; tell the client why if
+                // the socket still accepts a write, then drop it
+                sh.counters.frames_error.fetch_add(1, Ordering::SeqCst);
+                let (k, body) = ResponseMsg::Error {
+                    code: ERR_BAD_FRAME,
+                    message: format!("{e:#}"),
+                }
+                .encode();
+                let _ = framing::write_frame(&mut writer, k, &body);
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// Turn one request frame into one response frame. Never panics: every
+/// failure path is a structured frame.
+fn process(sh: &Shared, kind: u8, payload: &[u8]) -> ResponseMsg {
+    let msg = match RequestMsg::decode(kind, payload) {
+        Ok(m) => m,
+        Err(e) => {
+            return ResponseMsg::Error {
+                code: ERR_BAD_FRAME,
+                message: format!("{e:#}"),
+            }
+        }
+    };
+    match msg {
+        RequestMsg::Ping => ResponseMsg::Pong,
+        RequestMsg::Stats => ResponseMsg::StatsJson(stats_json(sh)),
+        RequestMsg::CompressGray {
+            image,
+            variant,
+            lane,
+            want_psnr,
+        } => submit_and_wait(sh, |svc| {
+            svc.compress_opts(image, variant, lane, want_psnr)
+        }),
+        RequestMsg::CompressColor {
+            image,
+            variant,
+            lane,
+            subsampling,
+            want_psnr,
+        } => submit_and_wait(sh, |svc| {
+            svc.compress_color_opts(
+                image,
+                variant,
+                lane,
+                subsampling,
+                want_psnr,
+            )
+        }),
+        RequestMsg::Decode { container, lane } => {
+            submit_and_wait(sh, |svc| svc.decode(container, lane))
+        }
+        RequestMsg::Histeq { image, lane } => {
+            submit_and_wait(sh, |svc| svc.histeq(image, lane))
+        }
+    }
+}
+
+fn submit_and_wait(
+    sh: &Shared,
+    submit: impl FnOnce(&Service) -> Result<JobHandle>,
+) -> ResponseMsg {
+    let handle = match submit(&sh.service) {
+        Ok(h) => h,
+        Err(e) => {
+            let message = format!("{e:#}");
+            // the queue's Reject policy phrases exactly one error this
+            // way; it is backpressure, not failure
+            if message.contains("queue full") {
+                return ResponseMsg::Overloaded;
+            }
+            return ResponseMsg::Error {
+                code: ERR_JOB_FAILED,
+                message,
+            };
+        }
+    };
+    let Some(resp) = handle.wait_timeout(sh.job_timeout) else {
+        return ResponseMsg::Error {
+            code: ERR_JOB_TIMEOUT,
+            message: format!(
+                "job exceeded the {} ms serve timeout",
+                sh.job_timeout.as_millis()
+            ),
+        };
+    };
+    match resp.result {
+        Ok(out) => output_msg(resp.lane, out),
+        Err(e) => {
+            let code = classify_decode_error(&e)
+                .map(decode_error_code)
+                .unwrap_or(ERR_JOB_FAILED);
+            ResponseMsg::Error {
+                code,
+                message: format!("{e:#}"),
+            }
+        }
+    }
+}
+
+fn output_msg(lane: Lane, out: JobOutput) -> ResponseMsg {
+    if let Some(container) = out.container {
+        ResponseMsg::Compressed {
+            lane,
+            psnr_db: out.psnr_db,
+            container,
+        }
+    } else if let Some(c) = out.color_image {
+        ResponseMsg::Image {
+            lane,
+            image: ImagePayload::Color(c),
+        }
+    } else if let Some(g) = out.image {
+        ResponseMsg::Image {
+            lane,
+            image: ImagePayload::Gray(g),
+        }
+    } else {
+        ResponseMsg::Error {
+            code: ERR_JOB_FAILED,
+            message: "job produced no output".into(),
+        }
+    }
+}
+
+fn stats_json(sh: &Shared) -> String {
+    let s = sh.service.stats();
+    let c = &sh.counters;
+    Json::obj(vec![
+        ("submitted", Json::num(s.submitted as f64)),
+        ("queue_depth", s.queue_depth.into()),
+        ("queue_wait_ms_mean", Json::num(s.queue_wait.1)),
+        ("queue_wait_ms_p95", Json::num(s.queue_wait.2)),
+        ("process_ms_mean", Json::num(s.process.1)),
+        ("process_ms_p95", Json::num(s.process.2)),
+        ("compiled_executables", s.compiled_executables.into()),
+        (
+            "active_connections",
+            sh.active.load(Ordering::SeqCst).into(),
+        ),
+        (
+            "accepted",
+            Json::num(c.accepted.load(Ordering::SeqCst) as f64),
+        ),
+        (
+            "frames_ok",
+            Json::num(c.frames_ok.load(Ordering::SeqCst) as f64),
+        ),
+        (
+            "frames_error",
+            Json::num(c.frames_error.load(Ordering::SeqCst) as f64),
+        ),
+        (
+            "overload_rejects",
+            Json::num(c.overload_rejects.load(Ordering::SeqCst) as f64),
+        ),
+    ])
+    .to_string()
+}

@@ -1,0 +1,282 @@
+//! Length-prefixed binary framing over any `Read`/`Write` byte stream.
+//!
+//! Wire format of one frame:
+//!
+//! ```text
+//! u32 LE length | u8 kind | payload bytes
+//! ```
+//!
+//! `length` covers the kind byte plus the payload, so the smallest legal
+//! frame (an empty body) has length 1 and length 0 is a protocol error.
+//! The reader enforces a caller-supplied length cap *before* allocating,
+//! so a hostile 4-byte prefix cannot balloon server memory.
+//!
+//! Timeout semantics (the serve path sets a short `read_timeout` on the
+//! socket as its poll tick): a timeout with **zero** bytes of the next
+//! frame consumed is a benign [`FrameEvent::Idle`] — the connection loop
+//! uses it to poll the shutdown flag; a timeout **mid-frame** is a hard
+//! error, because a stalled client must not pin a connection slot
+//! forever. Likewise EOF is clean only on a frame boundary.
+
+use std::io::{self, Read, Write};
+
+use anyhow::{bail, ensure, Result};
+
+/// Default cap on a single frame's length field (64 MiB — comfortably
+/// above the largest legal image payload the protocol accepts).
+pub const MAX_FRAME_LEN_DEFAULT: usize = 64 * 1024 * 1024;
+
+/// One read attempt's outcome.
+#[derive(Debug)]
+pub enum FrameEvent {
+    /// A complete frame.
+    Frame { kind: u8, payload: Vec<u8> },
+    /// The peer closed the stream cleanly between frames.
+    Eof,
+    /// The read timed out with no bytes of a new frame consumed; the
+    /// caller should poll its shutdown flag and retry.
+    Idle,
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut
+    )
+}
+
+/// Fill `buf` completely once a frame has started: EOF and timeouts are
+/// hard errors here (`what` names the missing piece for the message).
+fn read_exact_started(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    what: &str,
+) -> Result<()> {
+    let mut got = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => bail!(
+                "connection closed mid-frame ({got}/{} {what} bytes)",
+                buf.len()
+            ),
+            Ok(n) => got += n,
+            Err(e) if is_timeout(&e) => {
+                bail!("read timed out mid-frame ({what})")
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame. `max_len` bounds the length field (see
+/// [`MAX_FRAME_LEN_DEFAULT`]).
+pub fn read_frame(r: &mut impl Read, max_len: usize) -> Result<FrameEvent> {
+    let mut header = [0u8; 4];
+    let mut got = 0usize;
+    while got < 4 {
+        match r.read(&mut header[got..]) {
+            Ok(0) if got == 0 => return Ok(FrameEvent::Eof),
+            Ok(0) => bail!(
+                "connection closed mid-frame ({got}/4 length bytes)"
+            ),
+            Ok(n) => got += n,
+            Err(e) if is_timeout(&e) && got == 0 => {
+                return Ok(FrameEvent::Idle)
+            }
+            Err(e) if is_timeout(&e) => {
+                bail!("read timed out mid-frame (length prefix)")
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let len = u32::from_le_bytes(header) as usize;
+    ensure!(len >= 1, "invalid frame: zero length");
+    ensure!(
+        len <= max_len,
+        "frame length {len} exceeds the {max_len}-byte cap"
+    );
+    let mut kind = [0u8; 1];
+    read_exact_started(r, &mut kind, "kind")?;
+    let mut payload = vec![0u8; len - 1];
+    read_exact_started(r, &mut payload, "payload")?;
+    Ok(FrameEvent::Frame {
+        kind: kind[0],
+        payload,
+    })
+}
+
+/// Write one frame and flush it.
+pub fn write_frame(
+    w: &mut impl Write,
+    kind: u8,
+    payload: &[u8],
+) -> Result<()> {
+    let len = u32::try_from(payload.len() + 1)
+        .map_err(|_| anyhow::anyhow!("frame payload too large"))?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&[kind])?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(kind: u8, payload: &[u8]) -> (u8, Vec<u8>) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, kind, payload).unwrap();
+        match read_frame(&mut Cursor::new(buf), MAX_FRAME_LEN_DEFAULT)
+            .unwrap()
+        {
+            FrameEvent::Frame { kind, payload } => (kind, payload),
+            other => panic!("expected frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let (k, p) = roundtrip(7, b"hello");
+        assert_eq!((k, p.as_slice()), (7, b"hello".as_slice()));
+        let (k, p) = roundtrip(0xE0, &[]);
+        assert_eq!((k, p.len()), (0xE0, 0));
+    }
+
+    #[test]
+    fn eof_on_boundary_is_clean() {
+        let mut empty = Cursor::new(Vec::new());
+        assert!(matches!(
+            read_frame(&mut empty, 1024).unwrap(),
+            FrameEvent::Eof
+        ));
+    }
+
+    #[test]
+    fn zero_length_rejected() {
+        let mut c = Cursor::new(vec![0, 0, 0, 0]);
+        let e = read_frame(&mut c, 1024).unwrap_err();
+        assert!(e.to_string().contains("zero length"), "{e:#}");
+    }
+
+    #[test]
+    fn oversized_length_rejected_before_alloc() {
+        // declares u32::MAX bytes; must fail on the cap, not try to
+        // allocate 4 GiB
+        let mut c = Cursor::new(vec![0xFF, 0xFF, 0xFF, 0xFF]);
+        let e = read_frame(&mut c, 1024).unwrap_err();
+        assert!(e.to_string().contains("exceeds"), "{e:#}");
+    }
+
+    #[test]
+    fn truncated_mid_frame_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 3, b"abcdef").unwrap();
+        for cut in 1..buf.len() {
+            let mut c = Cursor::new(buf[..cut].to_vec());
+            let r = read_frame(&mut c, 1024);
+            assert!(
+                r.is_err(),
+                "cut at {cut}/{} should error",
+                buf.len()
+            );
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 1, b"a").unwrap();
+        write_frame(&mut buf, 2, b"bb").unwrap();
+        let mut c = Cursor::new(buf);
+        match read_frame(&mut c, 1024).unwrap() {
+            FrameEvent::Frame { kind, payload } => {
+                assert_eq!((kind, payload.as_slice()), (1, b"a".as_slice()));
+            }
+            other => panic!("{other:?}"),
+        }
+        match read_frame(&mut c, 1024).unwrap() {
+            FrameEvent::Frame { kind, payload } => {
+                assert_eq!((kind, payload.as_slice()), (2, b"bb".as_slice()));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            read_frame(&mut c, 1024).unwrap(),
+            FrameEvent::Eof
+        ));
+    }
+
+    /// A reader that times out before yielding any bytes, then serves a
+    /// frame — models the serve loop's idle poll tick.
+    struct TimeoutThen {
+        timeouts: usize,
+        inner: Cursor<Vec<u8>>,
+    }
+
+    impl Read for TimeoutThen {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if self.timeouts > 0 {
+                self.timeouts -= 1;
+                return Err(io::Error::from(io::ErrorKind::WouldBlock));
+            }
+            self.inner.read(buf)
+        }
+    }
+
+    #[test]
+    fn timeout_between_frames_is_idle() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 9, b"zz").unwrap();
+        let mut r = TimeoutThen {
+            timeouts: 2,
+            inner: Cursor::new(buf),
+        };
+        assert!(matches!(
+            read_frame(&mut r, 1024).unwrap(),
+            FrameEvent::Idle
+        ));
+        assert!(matches!(
+            read_frame(&mut r, 1024).unwrap(),
+            FrameEvent::Idle
+        ));
+        assert!(matches!(
+            read_frame(&mut r, 1024).unwrap(),
+            FrameEvent::Frame { kind: 9, .. }
+        ));
+    }
+
+    /// A reader that yields some bytes, then times out forever.
+    struct StallAfter {
+        inner: Cursor<Vec<u8>>,
+        remaining: usize,
+    }
+
+    impl Read for StallAfter {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            if self.remaining == 0 {
+                return Err(io::Error::from(io::ErrorKind::TimedOut));
+            }
+            let n = buf.len().min(self.remaining);
+            self.remaining -= n;
+            self.inner.read(&mut buf[..n])
+        }
+    }
+
+    #[test]
+    fn timeout_mid_frame_is_fatal() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 9, b"payload").unwrap();
+        // stall after the length prefix + 2 payload bytes
+        let mut r = StallAfter {
+            inner: Cursor::new(buf),
+            remaining: 6,
+        };
+        let e = read_frame(&mut r, 1024).unwrap_err();
+        assert!(e.to_string().contains("mid-frame"), "{e:#}");
+    }
+}

@@ -1,0 +1,235 @@
+//! Closed-loop load generator for the TCP front-end: N concurrent
+//! clients, each issuing back-to-back requests over its own connection,
+//! with exact (sorted-sample) latency percentiles.
+//!
+//! Shared by the `ablation_serve_load` bench target and the `loadgen`
+//! CLI subcommand. Percentiles here are computed from the full sample
+//! vector rather than [`crate::metrics::stats::LatencyHistogram`]'s log
+//! buckets — a load report is small enough to keep every sample, and
+//! tail latency is the headline number, so approximation is the wrong
+//! trade.
+
+use std::net::SocketAddr;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Lane;
+use crate::dct::Variant;
+use crate::image::synthetic;
+use crate::util::json::Json;
+
+use super::client::Client;
+use super::protocol::{RequestMsg, ResponseMsg};
+
+/// One load run's shape.
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    pub addr: SocketAddr,
+    /// Concurrent connections.
+    pub clients: usize,
+    /// Requests each client issues back-to-back.
+    pub requests_per_client: usize,
+    /// Square synthetic image edge length.
+    pub size: usize,
+    /// Submit color (CDC3) jobs instead of grayscale.
+    pub color: bool,
+    pub variant: Variant,
+    pub lane: Lane,
+    /// `false` exercises the recon-free fast path.
+    pub want_psnr: bool,
+}
+
+impl LoadSpec {
+    pub fn new(addr: SocketAddr) -> LoadSpec {
+        LoadSpec {
+            addr,
+            clients: 4,
+            requests_per_client: 16,
+            size: 128,
+            color: false,
+            variant: Variant::Cordic,
+            lane: Lane::Cpu,
+            want_psnr: false,
+        }
+    }
+}
+
+/// Aggregate results of one load run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub clients: usize,
+    pub total: usize,
+    pub ok: usize,
+    /// Structured Overloaded replies (backpressure, not failure).
+    pub overloaded: usize,
+    /// Error frames.
+    pub failed: usize,
+    pub elapsed_s: f64,
+    /// Successful requests per wall-clock second.
+    pub throughput_rps: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("clients", self.clients.into()),
+            ("total", self.total.into()),
+            ("ok", self.ok.into()),
+            ("overloaded", self.overloaded.into()),
+            ("failed", self.failed.into()),
+            ("elapsed_s", Json::num(self.elapsed_s)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("mean_ms", Json::num(self.mean_ms)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p95_ms", Json::num(self.p95_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("max_ms", Json::num(self.max_ms)),
+        ])
+    }
+}
+
+impl std::fmt::Display for LoadReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} clients: {} ok / {} overloaded / {} failed in {:.2}s \
+             = {:.1} req/s; latency mean {:.2} p50 {:.2} p95 {:.2} \
+             p99 {:.2} max {:.2} ms",
+            self.clients,
+            self.ok,
+            self.overloaded,
+            self.failed,
+            self.elapsed_s,
+            self.throughput_rps,
+            self.mean_ms,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.max_ms
+        )
+    }
+}
+
+/// Exact percentile over an ascending-sorted sample (nearest-rank).
+pub fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * p).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+#[derive(Default)]
+struct ClientOut {
+    latencies_ms: Vec<f64>,
+    ok: usize,
+    overloaded: usize,
+    failed: usize,
+}
+
+fn client_loop(spec: &LoadSpec, ci: usize) -> Result<ClientOut> {
+    let mut client = Client::connect(spec.addr)
+        .with_context(|| format!("loadgen client {ci}"))?;
+    // build the request once outside the timed loop — the generator
+    // measures the server, not synthetic-image synthesis
+    let seed = ci as u64 + 1;
+    let msg = if spec.color {
+        RequestMsg::CompressColor {
+            image: synthetic::lena_like_rgb(spec.size, spec.size, seed),
+            variant: spec.variant,
+            lane: spec.lane,
+            subsampling: crate::image::ycbcr::Subsampling::S420,
+            want_psnr: spec.want_psnr,
+        }
+    } else {
+        RequestMsg::CompressGray {
+            image: synthetic::lena_like(spec.size, spec.size, seed),
+            variant: spec.variant,
+            lane: spec.lane,
+            want_psnr: spec.want_psnr,
+        }
+    };
+    let mut out = ClientOut::default();
+    for i in 0..spec.requests_per_client {
+        let t = Instant::now();
+        let resp = client
+            .request(&msg)
+            .with_context(|| format!("client {ci} request {i}"))?;
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        match resp {
+            ResponseMsg::Compressed { .. } => {
+                out.latencies_ms.push(ms);
+                out.ok += 1;
+            }
+            ResponseMsg::Overloaded => out.overloaded += 1,
+            _ => out.failed += 1,
+        }
+    }
+    Ok(out)
+}
+
+/// Run one closed-loop load test against a live server.
+pub fn run_load(spec: &LoadSpec) -> Result<LoadReport> {
+    let t0 = Instant::now();
+    let outs: Vec<Result<ClientOut>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..spec.clients)
+            .map(|ci| s.spawn(move || client_loop(spec, ci)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("loadgen client thread panicked"))
+            .collect()
+    });
+    let elapsed_s = t0.elapsed().as_secs_f64();
+    let mut all = Vec::new();
+    let (mut ok, mut overloaded, mut failed) = (0usize, 0usize, 0usize);
+    for out in outs {
+        let out = out?;
+        all.extend_from_slice(&out.latencies_ms);
+        ok += out.ok;
+        overloaded += out.overloaded;
+        failed += out.failed;
+    }
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean_ms = if all.is_empty() {
+        f64::NAN
+    } else {
+        all.iter().sum::<f64>() / all.len() as f64
+    };
+    Ok(LoadReport {
+        clients: spec.clients,
+        total: spec.clients * spec.requests_per_client,
+        ok,
+        overloaded,
+        failed,
+        elapsed_s,
+        throughput_rps: ok as f64 / elapsed_s.max(1e-9),
+        mean_ms,
+        p50_ms: percentile(&all, 0.50),
+        p95_ms: percentile(&all, 0.95),
+        p99_ms: percentile(&all, 0.99),
+        max_ms: all.last().copied().unwrap_or(f64::NAN),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_exact_on_small_samples() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert_eq!(percentile(&v, 0.50), 51.0); // nearest-rank on 0..=99
+        assert_eq!(percentile(&v, 0.95), 95.0);
+        assert!(percentile(&[], 0.5).is_nan());
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+}

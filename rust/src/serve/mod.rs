@@ -1,0 +1,39 @@
+//! The TCP front-end over the [`crate::coordinator`]: a length-prefixed
+//! binary protocol, connection handling on the crate's own thread pool,
+//! admission control with structured overload replies, per-connection
+//! read/write timeouts, and graceful shutdown that drains in-flight
+//! jobs.
+//!
+//! ```text
+//!  client ──frame──► TcpServer accept thread
+//!                       │  admission gate (max_connections)
+//!                       ▼
+//!                    ThreadPool ── conn frame loop
+//!                       │  RequestMsg::decode  (validates dims/lengths)
+//!                       ▼
+//!                    Service queue (Backpressure::Reject)
+//!                       │  full ──► Overloaded frame
+//!                       ▼
+//!                    worker lanes ──► JobOutput ──► ResponseMsg frame
+//! ```
+//!
+//! Every failure mode a client can trigger — garbage bytes, truncated
+//! frames, hostile container headers, oversized length prefixes, queue
+//! overload — answers with a structured frame (or a clean close when the
+//! byte stream itself desynchronizes); the hardened codec header
+//! validation ([`crate::codec::DecodeErrorKind`]) maps one-to-one onto
+//! wire error codes. The [`loadgen`] module is the measurement half:
+//! concurrent closed-loop clients with exact latency percentiles,
+//! driving the `ablation_serve_load` bench.
+
+pub mod client;
+mod conn;
+pub mod framing;
+pub mod loadgen;
+pub mod protocol;
+pub mod server;
+
+pub use client::{Client, Compressed};
+pub use loadgen::{run_load, LoadReport, LoadSpec};
+pub use protocol::{ImagePayload, RequestMsg, ResponseMsg};
+pub use server::{ServeConfig, TcpServer};

@@ -1,0 +1,600 @@
+//! The serve wire protocol: typed request/response messages and their
+//! binary encoding inside [`super::framing`] frames.
+//!
+//! Every payload is little-endian and self-describing enough to validate
+//! before any work happens: image dimensions are checked against the
+//! codec's [`crate::codec::MAX_PIXELS`] cap and against the actual byte
+//! count in the frame, so a hostile header cannot make the server
+//! allocate beyond the frame it already read.
+//!
+//! ```text
+//! requests                         responses
+//! 1 CompressGray                   0x81 Compressed
+//! 2 CompressColor                  0x82 Image (decode / histeq result)
+//! 3 Decode                         0x83 Pong
+//! 4 Histeq                         0x84 StatsJson
+//! 5 Ping                           0xE0 Error { code, message }
+//! 6 Stats                          0xE1 Overloaded
+//! ```
+//!
+//! Error codes 10..=14 mirror [`DecodeErrorKind`] one-to-one, so a
+//! client can tell a truncated upload from a corrupt entropy stream
+//! without parsing message text.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::codec::{self, DecodeErrorKind};
+use crate::coordinator::Lane;
+use crate::dct::Variant;
+use crate::image::color::ColorImage;
+use crate::image::ycbcr::Subsampling;
+use crate::image::GrayImage;
+
+// -- frame kinds -----------------------------------------------------------
+
+pub const REQ_COMPRESS_GRAY: u8 = 1;
+pub const REQ_COMPRESS_COLOR: u8 = 2;
+pub const REQ_DECODE: u8 = 3;
+pub const REQ_HISTEQ: u8 = 4;
+pub const REQ_PING: u8 = 5;
+pub const REQ_STATS: u8 = 6;
+
+pub const RESP_COMPRESSED: u8 = 0x81;
+pub const RESP_IMAGE: u8 = 0x82;
+pub const RESP_PONG: u8 = 0x83;
+pub const RESP_STATS: u8 = 0x84;
+pub const RESP_ERROR: u8 = 0xE0;
+pub const RESP_OVERLOADED: u8 = 0xE1;
+
+// -- error codes -----------------------------------------------------------
+
+/// The request frame itself did not parse.
+pub const ERR_BAD_FRAME: u16 = 1;
+/// Unknown request kind byte.
+pub const ERR_UNSUPPORTED: u16 = 2;
+pub const ERR_DECODE_TRUNCATED: u16 = 10;
+pub const ERR_DECODE_BAD_MAGIC: u16 = 11;
+pub const ERR_DECODE_BAD_HEADER: u16 = 12;
+pub const ERR_DECODE_TOO_LARGE: u16 = 13;
+pub const ERR_DECODE_CORRUPT: u16 = 14;
+/// The job ran and failed for a non-decode reason.
+pub const ERR_JOB_FAILED: u16 = 20;
+/// The job did not complete within the server's job timeout.
+pub const ERR_JOB_TIMEOUT: u16 = 21;
+
+/// Map a classified decode failure to its wire code.
+pub fn decode_error_code(kind: DecodeErrorKind) -> u16 {
+    match kind {
+        DecodeErrorKind::Truncated => ERR_DECODE_TRUNCATED,
+        DecodeErrorKind::BadMagic => ERR_DECODE_BAD_MAGIC,
+        DecodeErrorKind::BadHeader => ERR_DECODE_BAD_HEADER,
+        DecodeErrorKind::TooLarge => ERR_DECODE_TOO_LARGE,
+        DecodeErrorKind::Corrupt => ERR_DECODE_CORRUPT,
+    }
+}
+
+// -- enum tags -------------------------------------------------------------
+
+pub fn lane_tag(lane: Lane) -> u8 {
+    match lane {
+        Lane::Cpu => 0,
+        Lane::CpuParallel => 1,
+        Lane::Gpu => 2,
+        Lane::Auto => 3,
+    }
+}
+
+pub fn tag_lane(t: u8) -> Result<Lane> {
+    Ok(match t {
+        0 => Lane::Cpu,
+        1 => Lane::CpuParallel,
+        2 => Lane::Gpu,
+        3 => Lane::Auto,
+        _ => bail!("unknown lane tag {t}"),
+    })
+}
+
+// -- messages --------------------------------------------------------------
+
+/// A request frame, decoded.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RequestMsg {
+    CompressGray {
+        image: GrayImage,
+        variant: Variant,
+        lane: Lane,
+        want_psnr: bool,
+    },
+    CompressColor {
+        image: ColorImage,
+        variant: Variant,
+        lane: Lane,
+        subsampling: Subsampling,
+        want_psnr: bool,
+    },
+    /// Decode an (untrusted) CDC1/CDC3 container back to pixels.
+    Decode { container: Vec<u8>, lane: Lane },
+    Histeq { image: GrayImage, lane: Lane },
+    Ping,
+    Stats,
+}
+
+/// Pixels coming back from a decode or histeq job.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ImagePayload {
+    Gray(GrayImage),
+    Color(ColorImage),
+}
+
+/// A response frame, decoded.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ResponseMsg {
+    Compressed {
+        lane: Lane,
+        psnr_db: Option<f64>,
+        container: Vec<u8>,
+    },
+    Image { lane: Lane, image: ImagePayload },
+    Pong,
+    StatsJson(String),
+    Error { code: u16, message: String },
+    /// Structured backpressure: the admission gate or the request queue
+    /// is full. Retry later; the connection stays usable.
+    Overloaded,
+}
+
+// -- byte cursor -----------------------------------------------------------
+
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Cur<'a> {
+        Cur { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.i + n <= self.b.len(),
+            "payload truncated: need {n} bytes at offset {}, have {}",
+            self.i,
+            self.b.len() - self.i
+        );
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn rest(self) -> &'a [u8] {
+        &self.b[self.i..]
+    }
+}
+
+/// Validate wire dimensions: nonzero and under the codec pixel cap
+/// (which bounds the later `w * h * channels` allocation).
+fn checked_dims(w: u32, h: u32, channels: usize) -> Result<(usize, usize)> {
+    ensure!(w > 0 && h > 0, "image dimensions {w}x{h} must be nonzero");
+    let px = (w as u64).saturating_mul(h as u64);
+    ensure!(
+        px <= codec::MAX_PIXELS,
+        "image {w}x{h} exceeds the {}-pixel cap",
+        codec::MAX_PIXELS
+    );
+    let _ = channels;
+    Ok((w as usize, h as usize))
+}
+
+impl RequestMsg {
+    /// Encode to `(frame kind, payload)`.
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        match self {
+            RequestMsg::CompressGray {
+                image,
+                variant,
+                lane,
+                want_psnr,
+            } => {
+                let mut p = Vec::with_capacity(11 + image.data.len());
+                p.push(codec::variant_tag(*variant));
+                p.push(lane_tag(*lane));
+                p.push(u8::from(*want_psnr));
+                p.extend_from_slice(&(image.width as u32).to_le_bytes());
+                p.extend_from_slice(&(image.height as u32).to_le_bytes());
+                p.extend_from_slice(&image.data);
+                (REQ_COMPRESS_GRAY, p)
+            }
+            RequestMsg::CompressColor {
+                image,
+                variant,
+                lane,
+                subsampling,
+                want_psnr,
+            } => {
+                let mut p = Vec::with_capacity(12 + image.data.len());
+                p.push(codec::variant_tag(*variant));
+                p.push(lane_tag(*lane));
+                p.push(u8::from(*want_psnr));
+                p.push(codec::color::subsampling_tag(*subsampling));
+                p.extend_from_slice(&(image.width as u32).to_le_bytes());
+                p.extend_from_slice(&(image.height as u32).to_le_bytes());
+                p.extend_from_slice(&image.data);
+                (REQ_COMPRESS_COLOR, p)
+            }
+            RequestMsg::Decode { container, lane } => {
+                let mut p = Vec::with_capacity(1 + container.len());
+                p.push(lane_tag(*lane));
+                p.extend_from_slice(container);
+                (REQ_DECODE, p)
+            }
+            RequestMsg::Histeq { image, lane } => {
+                let mut p = Vec::with_capacity(9 + image.data.len());
+                p.push(lane_tag(*lane));
+                p.extend_from_slice(&(image.width as u32).to_le_bytes());
+                p.extend_from_slice(&(image.height as u32).to_le_bytes());
+                p.extend_from_slice(&image.data);
+                (REQ_HISTEQ, p)
+            }
+            RequestMsg::Ping => (REQ_PING, Vec::new()),
+            RequestMsg::Stats => (REQ_STATS, Vec::new()),
+        }
+    }
+
+    /// Decode a request frame. Every length/dimension claim is checked
+    /// against the bytes actually present.
+    pub fn decode(kind: u8, payload: &[u8]) -> Result<RequestMsg> {
+        let mut c = Cur::new(payload);
+        match kind {
+            REQ_COMPRESS_GRAY => {
+                let variant = codec::tag_variant(c.u8()?)?;
+                let lane = tag_lane(c.u8()?)?;
+                let want_psnr = c.u8()? != 0;
+                let (w, h) =
+                    checked_dims(c.u32()?, c.u32()?, 1)?;
+                let px = c.rest();
+                ensure!(
+                    px.len() == w * h,
+                    "gray payload {} bytes != {w}x{h}",
+                    px.len()
+                );
+                Ok(RequestMsg::CompressGray {
+                    image: GrayImage::from_vec(w, h, px.to_vec())?,
+                    variant,
+                    lane,
+                    want_psnr,
+                })
+            }
+            REQ_COMPRESS_COLOR => {
+                let variant = codec::tag_variant(c.u8()?)?;
+                let lane = tag_lane(c.u8()?)?;
+                let want_psnr = c.u8()? != 0;
+                let subsampling = codec::color::tag_subsampling(c.u8()?)?;
+                let (w, h) =
+                    checked_dims(c.u32()?, c.u32()?, 3)?;
+                let px = c.rest();
+                ensure!(
+                    px.len() == w * h * 3,
+                    "rgb payload {} bytes != {w}x{h}x3",
+                    px.len()
+                );
+                Ok(RequestMsg::CompressColor {
+                    image: ColorImage::from_vec(w, h, px.to_vec())?,
+                    variant,
+                    lane,
+                    subsampling,
+                    want_psnr,
+                })
+            }
+            REQ_DECODE => {
+                let lane = tag_lane(c.u8()?)?;
+                // no container validation here: the codec's hardened
+                // header reader is the single point of truth, and its
+                // structured error comes back as an error frame
+                Ok(RequestMsg::Decode {
+                    container: c.rest().to_vec(),
+                    lane,
+                })
+            }
+            REQ_HISTEQ => {
+                let lane = tag_lane(c.u8()?)?;
+                let (w, h) =
+                    checked_dims(c.u32()?, c.u32()?, 1)?;
+                let px = c.rest();
+                ensure!(
+                    px.len() == w * h,
+                    "gray payload {} bytes != {w}x{h}",
+                    px.len()
+                );
+                Ok(RequestMsg::Histeq {
+                    image: GrayImage::from_vec(w, h, px.to_vec())?,
+                    lane,
+                })
+            }
+            REQ_PING => Ok(RequestMsg::Ping),
+            REQ_STATS => Ok(RequestMsg::Stats),
+            other => bail!("unsupported request kind {other:#04x}"),
+        }
+    }
+}
+
+impl ResponseMsg {
+    /// Encode to `(frame kind, payload)`.
+    pub fn encode(&self) -> (u8, Vec<u8>) {
+        match self {
+            ResponseMsg::Compressed {
+                lane,
+                psnr_db,
+                container,
+            } => {
+                let mut p = Vec::with_capacity(10 + container.len());
+                p.push(lane_tag(*lane));
+                p.push(u8::from(psnr_db.is_some()));
+                p.extend_from_slice(
+                    &psnr_db.unwrap_or(0.0).to_le_bytes(),
+                );
+                p.extend_from_slice(container);
+                (RESP_COMPRESSED, p)
+            }
+            ResponseMsg::Image { lane, image } => {
+                let (color, w, h, data): (u8, usize, usize, &[u8]) =
+                    match image {
+                        ImagePayload::Gray(g) => {
+                            (0, g.width, g.height, &g.data)
+                        }
+                        ImagePayload::Color(c) => {
+                            (1, c.width, c.height, &c.data)
+                        }
+                    };
+                let mut p = Vec::with_capacity(10 + data.len());
+                p.push(lane_tag(*lane));
+                p.push(color);
+                p.extend_from_slice(&(w as u32).to_le_bytes());
+                p.extend_from_slice(&(h as u32).to_le_bytes());
+                p.extend_from_slice(data);
+                (RESP_IMAGE, p)
+            }
+            ResponseMsg::Pong => (RESP_PONG, Vec::new()),
+            ResponseMsg::StatsJson(s) => {
+                (RESP_STATS, s.as_bytes().to_vec())
+            }
+            ResponseMsg::Error { code, message } => {
+                let mut p = Vec::with_capacity(2 + message.len());
+                p.extend_from_slice(&code.to_le_bytes());
+                p.extend_from_slice(message.as_bytes());
+                (RESP_ERROR, p)
+            }
+            ResponseMsg::Overloaded => (RESP_OVERLOADED, Vec::new()),
+        }
+    }
+
+    /// Decode a response frame.
+    pub fn decode(kind: u8, payload: &[u8]) -> Result<ResponseMsg> {
+        let mut c = Cur::new(payload);
+        match kind {
+            RESP_COMPRESSED => {
+                let lane = tag_lane(c.u8()?)?;
+                let has_psnr = c.u8()? != 0;
+                let psnr = c.f64()?;
+                Ok(ResponseMsg::Compressed {
+                    lane,
+                    psnr_db: has_psnr.then_some(psnr),
+                    container: c.rest().to_vec(),
+                })
+            }
+            RESP_IMAGE => {
+                let lane = tag_lane(c.u8()?)?;
+                let color = c.u8()?;
+                ensure!(color <= 1, "bad color flag {color}");
+                let (w, h) = checked_dims(
+                    c.u32()?,
+                    c.u32()?,
+                    if color == 1 { 3 } else { 1 },
+                )?;
+                let px = c.rest();
+                let image = if color == 1 {
+                    ensure!(
+                        px.len() == w * h * 3,
+                        "rgb payload {} bytes != {w}x{h}x3",
+                        px.len()
+                    );
+                    ImagePayload::Color(ColorImage::from_vec(
+                        w,
+                        h,
+                        px.to_vec(),
+                    )?)
+                } else {
+                    ensure!(
+                        px.len() == w * h,
+                        "gray payload {} bytes != {w}x{h}",
+                        px.len()
+                    );
+                    ImagePayload::Gray(GrayImage::from_vec(
+                        w,
+                        h,
+                        px.to_vec(),
+                    )?)
+                };
+                Ok(ResponseMsg::Image { lane, image })
+            }
+            RESP_PONG => Ok(ResponseMsg::Pong),
+            RESP_STATS => Ok(ResponseMsg::StatsJson(
+                String::from_utf8(payload.to_vec())
+                    .map_err(|_| anyhow::anyhow!("stats not UTF-8"))?,
+            )),
+            RESP_ERROR => {
+                let code = c.u16()?;
+                let message =
+                    String::from_utf8_lossy(c.rest()).into_owned();
+                Ok(ResponseMsg::Error { code, message })
+            }
+            RESP_OVERLOADED => Ok(ResponseMsg::Overloaded),
+            other => bail!("unsupported response kind {other:#04x}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synthetic;
+
+    fn roundtrip_req(msg: RequestMsg) {
+        let (k, p) = msg.encode();
+        let back = RequestMsg::decode(k, &p).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    fn roundtrip_resp(msg: ResponseMsg) {
+        let (k, p) = msg.encode();
+        let back = ResponseMsg::decode(k, &p).unwrap();
+        assert_eq!(back, msg);
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        let gray = synthetic::lena_like(24, 16, 1);
+        let rgb = synthetic::lena_like_rgb(24, 16, 2);
+        roundtrip_req(RequestMsg::CompressGray {
+            image: gray.clone(),
+            variant: Variant::Cordic,
+            lane: Lane::Auto,
+            want_psnr: true,
+        });
+        roundtrip_req(RequestMsg::CompressColor {
+            image: rgb,
+            variant: Variant::Dct,
+            lane: Lane::CpuParallel,
+            subsampling: Subsampling::S422,
+            want_psnr: false,
+        });
+        roundtrip_req(RequestMsg::Decode {
+            container: vec![1, 2, 3, 4, 5],
+            lane: Lane::Cpu,
+        });
+        roundtrip_req(RequestMsg::Histeq {
+            image: gray,
+            lane: Lane::Gpu,
+        });
+        roundtrip_req(RequestMsg::Ping);
+        roundtrip_req(RequestMsg::Stats);
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        roundtrip_resp(ResponseMsg::Compressed {
+            lane: Lane::Cpu,
+            psnr_db: Some(31.25),
+            container: vec![9; 40],
+        });
+        roundtrip_resp(ResponseMsg::Compressed {
+            lane: Lane::Gpu,
+            psnr_db: None,
+            container: vec![],
+        });
+        roundtrip_resp(ResponseMsg::Image {
+            lane: Lane::CpuParallel,
+            image: ImagePayload::Gray(synthetic::lena_like(8, 8, 3)),
+        });
+        roundtrip_resp(ResponseMsg::Image {
+            lane: Lane::Cpu,
+            image: ImagePayload::Color(synthetic::lena_like_rgb(
+                8, 8, 4,
+            )),
+        });
+        roundtrip_resp(ResponseMsg::Pong);
+        roundtrip_resp(ResponseMsg::StatsJson("{\"a\":1}".into()));
+        roundtrip_resp(ResponseMsg::Error {
+            code: ERR_DECODE_CORRUPT,
+            message: "entropy stream died".into(),
+        });
+        roundtrip_resp(ResponseMsg::Overloaded);
+    }
+
+    #[test]
+    fn truncated_payloads_error() {
+        let gray = synthetic::lena_like(16, 16, 5);
+        let (k, p) = RequestMsg::CompressGray {
+            image: gray,
+            variant: Variant::Dct,
+            lane: Lane::Cpu,
+            want_psnr: true,
+        }
+        .encode();
+        // every strict prefix must fail to parse, never panic
+        for cut in 0..p.len() {
+            assert!(
+                RequestMsg::decode(k, &p[..cut]).is_err(),
+                "prefix {cut}/{} parsed",
+                p.len()
+            );
+        }
+    }
+
+    #[test]
+    fn hostile_dims_rejected_without_allocation() {
+        // claims a 65535x65535 gray image with a 1-byte body; the parser
+        // must reject on the pixel cap / length check, not allocate 4 GiB
+        let mut p = vec![0, 0, 1];
+        p.extend_from_slice(&0xFFFF_FFFFu32.to_le_bytes());
+        p.extend_from_slice(&0xFFFF_FFFFu32.to_le_bytes());
+        p.push(7);
+        assert!(RequestMsg::decode(REQ_COMPRESS_GRAY, &p).is_err());
+        // zero dims too
+        let mut p = vec![0, 0, 1];
+        p.extend_from_slice(&0u32.to_le_bytes());
+        p.extend_from_slice(&0u32.to_le_bytes());
+        assert!(RequestMsg::decode(REQ_COMPRESS_GRAY, &p).is_err());
+    }
+
+    #[test]
+    fn bad_tags_rejected() {
+        // variant 250
+        let p = vec![250, 0, 1, 8, 0, 0, 0, 8, 0, 0, 0];
+        assert!(RequestMsg::decode(REQ_COMPRESS_GRAY, &p).is_err());
+        // lane 9
+        let p = vec![0, 9, 1, 8, 0, 0, 0, 8, 0, 0, 0];
+        assert!(RequestMsg::decode(REQ_COMPRESS_GRAY, &p).is_err());
+        // unknown request kind
+        assert!(RequestMsg::decode(0x77, &[]).is_err());
+        // unknown response kind
+        assert!(ResponseMsg::decode(0x13, &[]).is_err());
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        // valid header claiming 8x8 but carrying 63 bytes
+        let mut p = vec![0, 0, 1];
+        p.extend_from_slice(&8u32.to_le_bytes());
+        p.extend_from_slice(&8u32.to_le_bytes());
+        p.extend_from_slice(&[0u8; 63]);
+        assert!(RequestMsg::decode(REQ_COMPRESS_GRAY, &p).is_err());
+    }
+
+    #[test]
+    fn decode_error_codes_cover_all_kinds() {
+        let mut seen = std::collections::BTreeSet::new();
+        for k in DecodeErrorKind::ALL {
+            assert!(
+                seen.insert(decode_error_code(k)),
+                "duplicate wire code for {k:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! The TCP front-end: listener, admission control, connection pool, and
+//! graceful shutdown over a [`Service`].
+//!
+//! Shape:
+//!
+//! ```text
+//!  TcpListener ──► accept thread ──► ThreadPool (max_connections slots)
+//!                     │                  │ one conn::handle per socket
+//!                     │ admission gate:  │ frame loop ──► Service queue
+//!                     │ at capacity ──►  │ (Backpressure::Reject)
+//!                     │ Overloaded frame │
+//! ```
+//!
+//! Two backpressure layers answer with the same structured
+//! [`super::protocol::ResponseMsg::Overloaded`] frame: the accept-time
+//! admission gate (too many connections) and the coordinator queue
+//! (Reject policy — the server forces it so a full queue can never block
+//! a connection thread). Shutdown is graceful: the flag flips, the
+//! accept loop is unblocked with a self-connection, and every
+//! connection handler finishes its in-flight request before the pool
+//! joins.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Backpressure, Service, ServiceConfig};
+use crate::log_info;
+use crate::util::threadpool::ThreadPool;
+
+use super::conn;
+use super::framing;
+use super::protocol::ResponseMsg;
+
+/// TCP front-end configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// The coordinator under the socket. `backpressure` is forced to
+    /// [`Backpressure::Reject`] at bind time — a full queue must answer
+    /// an Overloaded frame, never block a connection thread.
+    pub service: ServiceConfig,
+    /// Admission-control cap; also the connection pool size, so every
+    /// admitted connection owns a handler thread.
+    pub max_connections: usize,
+    /// Cap on a single request frame's length field.
+    pub max_frame_len: usize,
+    /// Socket read tick: an idle connection wakes this often to poll the
+    /// shutdown flag; a *mid-frame* stall of this long drops the client.
+    pub read_timeout: Duration,
+    /// A client that cannot absorb its response within this long is
+    /// dropped rather than allowed to pin a connection slot.
+    pub write_timeout: Duration,
+    /// Upper bound on one job's queue + processing time before the
+    /// server answers a timeout error frame.
+    pub job_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            service: ServiceConfig::default(),
+            max_connections: 32,
+            max_frame_len: framing::MAX_FRAME_LEN_DEFAULT,
+            read_timeout: Duration::from_millis(200),
+            write_timeout: Duration::from_secs(5),
+            job_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Monotonic server counters (exposed through the Stats frame).
+#[derive(Debug, Default)]
+pub struct Counters {
+    pub accepted: AtomicU64,
+    pub frames_ok: AtomicU64,
+    pub frames_error: AtomicU64,
+    pub overload_rejects: AtomicU64,
+}
+
+/// State shared between the accept loop and every connection handler.
+pub(crate) struct Shared {
+    pub service: Service,
+    pub max_frame_len: usize,
+    pub read_timeout: Duration,
+    pub write_timeout: Duration,
+    pub job_timeout: Duration,
+    pub shutdown: AtomicBool,
+    pub active: AtomicUsize,
+    pub counters: Counters,
+}
+
+/// Decrements the active-connection gauge when a handler exits — by any
+/// path, including a panic unwinding into the pool's catch.
+pub(crate) struct ActiveGuard<'a>(pub &'a AtomicUsize);
+
+impl Drop for ActiveGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A running TCP server. Dropping it (or calling
+/// [`TcpServer::shutdown`]) drains in-flight connections and stops the
+/// coordinator.
+pub struct TcpServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving.
+    pub fn bind(addr: &str, cfg: ServeConfig) -> Result<TcpServer> {
+        let mut svc_cfg = cfg.service.clone();
+        svc_cfg.backpressure = Backpressure::Reject;
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        let service = Service::start(svc_cfg)?;
+        let shared = Arc::new(Shared {
+            service,
+            max_frame_len: cfg.max_frame_len,
+            read_timeout: cfg.read_timeout,
+            write_timeout: cfg.write_timeout,
+            job_timeout: cfg.job_timeout,
+            shutdown: AtomicBool::new(false),
+            active: AtomicUsize::new(0),
+            counters: Counters::default(),
+        });
+        let max_conns = cfg.max_connections.max(1);
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || accept_loop(listener, accept_shared, max_conns))
+            .context("spawning accept thread")?;
+        log_info!(
+            "serve",
+            "listening on {local} ({} connection slots, {} ms read tick)",
+            max_conns,
+            cfg.read_timeout.as_millis()
+        );
+        Ok(TcpServer {
+            addr: local,
+            shared,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves the ephemeral port of `:0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Currently admitted connections.
+    pub fn active_connections(&self) -> usize {
+        self.shared.active.load(Ordering::SeqCst)
+    }
+
+    /// Accept-time overload rejections so far.
+    pub fn overload_rejects(&self) -> u64 {
+        self.shared.counters.overload_rejects.load(Ordering::SeqCst)
+    }
+
+    /// Graceful shutdown: stop accepting, let every connection finish
+    /// its in-flight request, drain the coordinator workers.
+    pub fn shutdown(mut self) {
+        self.stop();
+        // dropping the last Shared reference runs Service's Drop, which
+        // closes the queue and joins the workers
+    }
+
+    fn stop(&mut self) {
+        let Some(handle) = self.accept.take() else {
+            return;
+        };
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        // unblock the blocking accept() with a throwaway connection; the
+        // loop re-checks the flag before handling it
+        let _ = TcpStream::connect(self.addr);
+        let _ = handle.join();
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    max_conns: usize,
+) {
+    let pool = ThreadPool::new(max_conns);
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        shared.counters.accepted.fetch_add(1, Ordering::SeqCst);
+        // admission control: answer a structured Overloaded frame rather
+        // than queueing the socket behind a full pool
+        if shared.active.load(Ordering::SeqCst) >= max_conns {
+            shared
+                .counters
+                .overload_rejects
+                .fetch_add(1, Ordering::SeqCst);
+            let _ = stream.set_write_timeout(Some(shared.write_timeout));
+            let (kind, body) = ResponseMsg::Overloaded.encode();
+            let mut w = stream;
+            let _ = framing::write_frame(&mut w, kind, &body);
+            continue;
+        }
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        let sh = Arc::clone(&shared);
+        pool.execute(move || {
+            let _guard = ActiveGuard(&sh.active);
+            conn::handle(stream, &sh);
+        });
+    }
+    // drain: every admitted connection notices the shutdown flag at its
+    // next idle tick (or after its in-flight request) and returns
+    drop(pool);
+}

@@ -1,0 +1,226 @@
+//! Property-style tests of the serve wire protocol: randomized
+//! round-trips and a decode fuzz pass. The invariant under fuzz is the
+//! serve path's contract — `decode` may reject, it must never panic —
+//! using a tiny deterministic xorshift generator (no dev-dependencies).
+
+use cordic_dct::coordinator::Lane;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::ycbcr::Subsampling;
+use cordic_dct::image::GrayImage;
+use cordic_dct::image::color::ColorImage;
+use cordic_dct::serve::protocol::{
+    REQ_COMPRESS_COLOR, REQ_COMPRESS_GRAY, REQ_DECODE, REQ_HISTEQ,
+    REQ_PING, REQ_STATS,
+};
+use cordic_dct::serve::{RequestMsg, ResponseMsg, ImagePayload};
+
+/// Deterministic xorshift64* PRNG; good enough to spray bytes.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+
+    fn bytes(&mut self, len: usize) -> Vec<u8> {
+        (0..len).map(|_| self.next() as u8).collect()
+    }
+}
+
+fn rand_gray(rng: &mut Rng) -> GrayImage {
+    let w = 1 + rng.below(48) as usize;
+    let h = 1 + rng.below(48) as usize;
+    GrayImage::from_vec(w, h, rng.bytes(w * h)).unwrap()
+}
+
+fn rand_color(rng: &mut Rng) -> ColorImage {
+    let w = 1 + rng.below(24) as usize;
+    let h = 1 + rng.below(24) as usize;
+    ColorImage::from_vec(w, h, rng.bytes(w * h * 3)).unwrap()
+}
+
+const LANES: [Lane; 4] =
+    [Lane::Cpu, Lane::CpuParallel, Lane::Gpu, Lane::Auto];
+const VARIANTS: [Variant; 3] =
+    [Variant::Dct, Variant::Loeffler, Variant::Cordic];
+const SUBS: [Subsampling; 3] =
+    [Subsampling::S444, Subsampling::S422, Subsampling::S420];
+
+#[test]
+fn randomized_request_roundtrips() {
+    let mut rng = Rng(0x5eed_0001);
+    for i in 0..200 {
+        let lane = LANES[rng.below(4) as usize];
+        let variant = VARIANTS[rng.below(3) as usize];
+        let msg = match i % 5 {
+            0 => RequestMsg::CompressGray {
+                image: rand_gray(&mut rng),
+                variant,
+                lane,
+                want_psnr: rng.below(2) == 1,
+            },
+            1 => RequestMsg::CompressColor {
+                image: rand_color(&mut rng),
+                variant,
+                lane,
+                subsampling: SUBS[rng.below(3) as usize],
+                want_psnr: rng.below(2) == 1,
+            },
+            2 => RequestMsg::Decode {
+                container: rng.bytes(rng.below(256) as usize),
+                lane,
+            },
+            3 => RequestMsg::Histeq {
+                image: rand_gray(&mut rng),
+                lane,
+            },
+            _ => RequestMsg::Ping,
+        };
+        let (k, p) = msg.encode();
+        let back = RequestMsg::decode(k, &p)
+            .unwrap_or_else(|e| panic!("roundtrip {i} failed: {e:#}"));
+        assert_eq!(back, msg, "roundtrip {i} mutated the message");
+    }
+}
+
+#[test]
+fn randomized_response_roundtrips() {
+    let mut rng = Rng(0x5eed_0002);
+    for i in 0..200 {
+        let lane = LANES[rng.below(4) as usize];
+        let msg = match i % 4 {
+            0 => ResponseMsg::Compressed {
+                lane,
+                psnr_db: (rng.below(2) == 1)
+                    .then(|| rng.below(6000) as f64 / 100.0),
+                container: rng.bytes(rng.below(512) as usize),
+            },
+            1 => ResponseMsg::Image {
+                lane,
+                image: if rng.below(2) == 1 {
+                    ImagePayload::Gray(rand_gray(&mut rng))
+                } else {
+                    ImagePayload::Color(rand_color(&mut rng))
+                },
+            },
+            2 => ResponseMsg::Error {
+                code: rng.below(30) as u16,
+                message: format!("failure {}", rng.below(1000)),
+            },
+            _ => ResponseMsg::Overloaded,
+        };
+        let (k, p) = msg.encode();
+        let back = ResponseMsg::decode(k, &p)
+            .unwrap_or_else(|e| panic!("roundtrip {i} failed: {e:#}"));
+        assert_eq!(back, msg, "roundtrip {i} mutated the message");
+    }
+}
+
+#[test]
+fn random_payload_fuzz_never_panics() {
+    let mut rng = Rng(0x5eed_0003);
+    let kinds = [
+        REQ_COMPRESS_GRAY,
+        REQ_COMPRESS_COLOR,
+        REQ_DECODE,
+        REQ_HISTEQ,
+        REQ_PING,
+        REQ_STATS,
+    ];
+    for _ in 0..2000 {
+        let kind = if rng.below(4) == 0 {
+            rng.next() as u8 // arbitrary, mostly invalid kinds too
+        } else {
+            kinds[rng.below(kinds.len() as u64) as usize]
+        };
+        let payload = rng.bytes(rng.below(96) as usize);
+        // Ok or Err are both fine; panicking or aborting is the bug
+        let _ = RequestMsg::decode(kind, &payload);
+        let _ = ResponseMsg::decode(kind, &payload);
+    }
+}
+
+#[test]
+fn truncation_fuzz_of_every_message_shape() {
+    let mut rng = Rng(0x5eed_0004);
+    let gray = rand_gray(&mut rng);
+    let color = rand_color(&mut rng);
+    let msgs = vec![
+        RequestMsg::CompressGray {
+            image: gray.clone(),
+            variant: Variant::Cordic,
+            lane: Lane::Auto,
+            want_psnr: true,
+        },
+        RequestMsg::CompressColor {
+            image: color.clone(),
+            variant: Variant::Loeffler,
+            lane: Lane::Cpu,
+            subsampling: Subsampling::S420,
+            want_psnr: false,
+        },
+        RequestMsg::Histeq {
+            image: gray.clone(),
+            lane: Lane::Cpu,
+        },
+    ];
+    for msg in msgs {
+        let (k, p) = msg.encode();
+        for cut in 0..p.len() {
+            assert!(
+                RequestMsg::decode(k, &p[..cut]).is_err(),
+                "{msg:?} parsed from a {cut}-byte prefix"
+            );
+        }
+    }
+    // responses carrying pixels are length-checked the same way
+    let (k, p) = ResponseMsg::Image {
+        lane: Lane::Cpu,
+        image: ImagePayload::Color(color),
+    }
+    .encode();
+    for cut in 0..p.len() {
+        assert!(
+            ResponseMsg::decode(k, &p[..cut]).is_err(),
+            "image response parsed from a {cut}-byte prefix"
+        );
+    }
+}
+
+#[test]
+fn bit_flip_fuzz_decodes_or_rejects_consistently() {
+    // flipping any single bit of a valid frame must either produce a
+    // clean parse error or a still-well-formed message — never a panic,
+    // never an out-of-bounds read. A surviving parse may differ from the
+    // wire bytes (e.g. a non-canonical bool byte), but its canonical
+    // re-encoding must be stable: encode(decode(x)) is a fixed point.
+    let mut rng = Rng(0x5eed_0005);
+    let msg = RequestMsg::CompressGray {
+        image: rand_gray(&mut rng),
+        variant: Variant::Cordic,
+        lane: Lane::Cpu,
+        want_psnr: false,
+    };
+    let (k, p) = msg.encode();
+    for byte in 0..p.len().min(64) {
+        for bit in 0..8 {
+            let mut q = p.clone();
+            q[byte] ^= 1 << bit;
+            if let Ok(parsed) = RequestMsg::decode(k, &q) {
+                let (k2, p2) = parsed.encode();
+                let again = RequestMsg::decode(k2, &p2)
+                    .expect("canonical re-encoding must parse");
+                assert_eq!(again, parsed);
+            }
+        }
+    }
+}
