@@ -1,0 +1,105 @@
+//! Precision ablation for the fixed-point CORDIC-Loeffler lane: sweep
+//! `FxpPrecision` levels through the full compress pipeline and record,
+//! per level, the wall time plus the reconstruction PSNR next to the
+//! exact float DCT and the float CORDIC approximation at the same
+//! quality.
+//!
+//! Two result sets are written (both under `CORDIC_DCT_BENCH_OUT`, or
+//! `bench_results/`): `ablation_precision` with every row, and
+//! `precision_psnr` with the same rows under the name the CI bench-smoke
+//! job uploads as an artifact. `CORDIC_DCT_BENCH_QUICK=1` shrinks the
+//! image and iteration count for CI.
+
+use cordic_dct::bench::{bench_config, rows_to_json, save_results, Row};
+use cordic_dct::dct::batch::EngineConfig;
+use cordic_dct::dct::cordic_fxp::FxpPrecision;
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::synthetic;
+use cordic_dct::metrics;
+
+const QUALITY: u8 = 50;
+const LEVELS: [u32; 6] = [1, 2, 3, 4, 6, 8];
+
+fn main() {
+    let bench = bench_config();
+    let size = if std::env::var("CORDIC_DCT_BENCH_QUICK").is_ok() {
+        128
+    } else {
+        512
+    };
+    let img = synthetic::lena_like(size, size, 1);
+    let mut rows: Vec<Row> = Vec::new();
+
+    println!("== cordic-fxp precision ablation ({size}x{size}, q{QUALITY}) ==");
+
+    // float references: the exact DCT and the float CORDIC approximation
+    // the fixed-point lane is trying to track
+    let mut exact_psnr = 0.0f64;
+    for variant in [Variant::Dct, Variant::Cordic] {
+        let pipe = CpuPipeline::new(variant, QUALITY);
+        let psnr = metrics::psnr(&img, &pipe.compress(&img).recon);
+        let stats = bench.run(|| pipe.compress(&img));
+        if variant == Variant::Dct {
+            exact_psnr = psnr;
+        }
+        println!(
+            "{:<24} {:>10.3} ms   PSNR {psnr:.2} dB",
+            variant.as_str(),
+            stats.median_ms
+        );
+        rows.push(Row {
+            label: format!("{} (float ref)", variant.as_str()),
+            cpu: Some(stats),
+            cpu_par: None,
+            gpu: None,
+            extra: vec![("psnr_db".into(), format!("{psnr:.3}"))],
+        });
+    }
+
+    for level in LEVELS {
+        let precision = FxpPrecision::from_level(level);
+        let cfg = EngineConfig {
+            precision,
+            ..EngineConfig::default()
+        };
+        let pipe = CpuPipeline::with_config(Variant::CordicFxp, QUALITY, cfg);
+        let psnr = metrics::psnr(&img, &pipe.compress(&img).recon);
+        let stats = bench.run(|| pipe.compress(&img));
+        println!(
+            "cordic-fxp level {level} ({} iters, Q{:<2}) {:>10.3} ms   \
+             PSNR {psnr:.2} dB (exact {:+.2} dB)",
+            precision.iters,
+            precision.frac_bits,
+            stats.median_ms,
+            psnr - exact_psnr
+        );
+        rows.push(Row {
+            label: format!("cordic-fxp level {level}"),
+            cpu: Some(stats),
+            cpu_par: None,
+            gpu: None,
+            extra: vec![
+                ("psnr_db".into(), format!("{psnr:.3}")),
+                (
+                    "delta_vs_exact_db".into(),
+                    format!("{:.3}", psnr - exact_psnr),
+                ),
+                ("iters".into(), precision.iters.to_string()),
+                ("frac_bits".into(), precision.frac_bits.to_string()),
+            ],
+        });
+    }
+
+    let text = format!("{rows:#?}");
+    save_results(
+        "ablation_precision",
+        &text,
+        &rows_to_json("ablation_precision", &rows),
+    );
+    save_results(
+        "precision_psnr",
+        &text,
+        &rows_to_json("precision_psnr", &rows),
+    );
+}

@@ -2,9 +2,12 @@
 //! so the optimization loop knows where the time goes:
 //!
 //! * block extract/store (layout plumbing)
-//! * each 8x8 forward transform, scalar path vs the 8-wide batched
-//!   lane-major engine (`dct::batch`), with blocks/s + MB/s columns and
-//!   the batched/scalar speedup recorded per variant
+//! * each 8x8 forward transform (including the fixed-point cordic-fxp
+//!   lane), scalar path vs the 8-wide batched lane-major engine
+//!   (`dct::batch`), with blocks/s + MB/s columns and the
+//!   batched/scalar speedup recorded per variant; a 16-wide
+//!   `batched16` row per variant shows the wide-lane figure
+//!   (informational — the perf-sanity gate stays on the 8-wide path)
 //! * quantize: scalar, batched, and fused batched quantize→zigzag
 //! * Huffman: full entropy encode and decode (64-bit accumulator writer,
 //!   LUT decoder)
@@ -30,7 +33,7 @@ use cordic_dct::codec::zigzag;
 use cordic_dct::codec::{decoder, encoder, variant_tag, Header};
 use cordic_dct::dct::batch::{
     gather, quantize_batch, quantize_zigzag_batch, BatchTransform,
-    BlockBatch8, QBatch8, LANES,
+    BlockBatch16, BlockBatch8, QBatch8, LANES, LANES_WIDE,
 };
 use cordic_dct::dct::pipeline::CpuPipeline;
 use cordic_dct::dct::{blocks, quant, Variant};
@@ -135,7 +138,12 @@ fn main() -> anyhow::Result<()> {
     // transforms: scalar one-block-at-a-time vs the 8-wide batched
     // engine, whole-grid passes of the same 4096 blocks
     let mut sanity: Vec<(Variant, f64, f64)> = Vec::new();
-    for variant in [Variant::Dct, Variant::Loeffler, Variant::Cordic] {
+    for variant in [
+        Variant::Dct,
+        Variant::Loeffler,
+        Variant::Cordic,
+        Variant::CordicFxp,
+    ] {
         let t = variant.transform();
         let s_scalar = bench.run(|| {
             for by in 0..gh {
@@ -183,6 +191,43 @@ fn main() -> anyhow::Result<()> {
         report(
             &format!("fwd {} batched", bt.name()),
             s_batched.clone(),
+            nblocks,
+            "block",
+            e,
+        );
+
+        // 16-wide figure for the same grid: wide batches plus the
+        // scalar tail the engine would run on a non-multiple width
+        let mut wide = BlockBatch16::zeroed();
+        let s_wide = bench.run(|| {
+            for by in 0..gh {
+                let mut bx = 0;
+                while bx + LANES_WIDE <= gw {
+                    gather(&mut wide, &padded, bx, by, LANES_WIDE);
+                    bt.forward_batch(&mut wide);
+                    std::hint::black_box(&wide);
+                    bx += LANES_WIDE;
+                }
+                while bx < gw {
+                    blocks::extract_block(&padded, bx, by, &mut block);
+                    bt.forward_scalar(&mut block);
+                    std::hint::black_box(&block);
+                    bx += 1;
+                }
+            }
+        });
+        let mut e = throughput(s_wide.median_ms);
+        e.push((
+            "speedup_vs_scalar".into(),
+            format!("{:.2}", s_scalar.median_ms / s_wide.median_ms),
+        ));
+        e.push((
+            "speedup_vs_batched8".into(),
+            format!("{:.2}", s_batched.median_ms / s_wide.median_ms),
+        ));
+        report(
+            &format!("fwd {} batched16", bt.name()),
+            s_wide,
             nblocks,
             "block",
             e,

@@ -144,7 +144,8 @@ pub struct Header {
     pub padded_height: u32,
     /// IJG quality the quantizer used.
     pub quality: u8,
-    /// Transform variant tag (dct / loeffler / cordic / naive).
+    /// Transform variant tag (dct / loeffler / cordic / naive /
+    /// cordic-fxp).
     pub variant: u8,
 }
 
@@ -235,6 +236,7 @@ pub fn variant_tag(v: crate::dct::Variant) -> u8 {
         crate::dct::Variant::Loeffler => 1,
         crate::dct::Variant::Cordic => 2,
         crate::dct::Variant::Naive => 3,
+        crate::dct::Variant::CordicFxp => 4,
     }
 }
 
@@ -244,6 +246,7 @@ pub fn tag_variant(t: u8) -> Result<crate::dct::Variant> {
         1 => crate::dct::Variant::Loeffler,
         2 => crate::dct::Variant::Cordic,
         3 => crate::dct::Variant::Naive,
+        4 => crate::dct::Variant::CordicFxp,
         _ => bail!("unknown variant tag {t}"),
     })
 }
@@ -378,7 +381,7 @@ mod tests {
     fn variant_tags_roundtrip() {
         use crate::dct::Variant;
         for v in [Variant::Dct, Variant::Loeffler, Variant::Cordic,
-                  Variant::Naive] {
+                  Variant::Naive, Variant::CordicFxp] {
             assert_eq!(tag_variant(variant_tag(v)).unwrap(), v);
         }
         assert!(tag_variant(9).is_err());

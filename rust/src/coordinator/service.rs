@@ -7,6 +7,8 @@ use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
+use crate::dct::batch::{BatchWidth, EngineConfig};
+use crate::dct::cordic_fxp::FxpPrecision;
 use crate::dct::Variant;
 use crate::image::color::ColorImage;
 use crate::image::ycbcr::Subsampling;
@@ -45,6 +47,12 @@ pub struct ServiceConfig {
     /// the whole GPU-lane path (planar batches, plane-parallel color,
     /// fused entropy feed) exercises end-to-end in offline builds and CI.
     pub stub_gpu: bool,
+    /// Batch-engine lane width for the CPU lanes (`Auto` = env override
+    /// or hardware detection; outputs are bit-identical either way).
+    pub batch_width: BatchWidth,
+    /// Precision of the fixed-point CORDIC lane (`--variant cordic-fxp`
+    /// jobs); ignored by the f32 variants.
+    pub precision: FxpPrecision,
 }
 
 impl Default for ServiceConfig {
@@ -58,6 +66,8 @@ impl Default for ServiceConfig {
             quality: 50,
             artifact_dir: Some(std::path::PathBuf::from("artifacts")),
             stub_gpu: false,
+            batch_width: BatchWidth::default(),
+            precision: FxpPrecision::default(),
         }
     }
 }
@@ -140,6 +150,10 @@ impl Service {
                 policy: cfg.batch,
                 quality: cfg.quality,
                 parallel_workers,
+                engine: EngineConfig {
+                    width: cfg.batch_width,
+                    precision: cfg.precision,
+                },
                 queue_hist: Arc::clone(&queue_hist),
                 process_hist: Arc::clone(&process_hist),
             };

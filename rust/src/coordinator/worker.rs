@@ -14,6 +14,7 @@ use anyhow::{bail, Result};
 
 use crate::codec::encoder::ScanCoefs;
 use crate::codec::{color as color_codec, encoder, variant_tag, Header};
+use crate::dct::batch::EngineConfig;
 use crate::dct::color::ColorPipeline;
 use crate::dct::parallel::ParallelCpuPipeline;
 use crate::dct::pipeline::CpuPipeline;
@@ -40,6 +41,10 @@ pub struct WorkerCtx {
     /// Thread count for each `CpuParallel`-lane job (already resolved by
     /// the service: explicit config or machine-default / worker-count).
     pub parallel_workers: usize,
+    /// Batch-engine configuration (lane width + fxp precision) applied
+    /// to every CPU pipeline this worker builds. Fixed per service, so
+    /// it is not part of the cache keys.
+    pub engine: EngineConfig,
     pub queue_hist: Arc<SharedHistogram>,
     pub process_hist: Arc<SharedHistogram>,
 }
@@ -64,10 +69,15 @@ impl PipelineCache {
         PipelineCache::default()
     }
 
-    fn serial(&mut self, variant: Variant, quality: u8) -> &CpuPipeline {
+    fn serial(
+        &mut self,
+        variant: Variant,
+        quality: u8,
+        cfg: EngineConfig,
+    ) -> &CpuPipeline {
         self.serial
             .entry((variant, quality))
-            .or_insert_with(|| CpuPipeline::new(variant, quality))
+            .or_insert_with(|| CpuPipeline::with_config(variant, quality, cfg))
     }
 
     fn parallel(
@@ -75,9 +85,18 @@ impl PipelineCache {
         variant: Variant,
         quality: u8,
         workers: usize,
+        cfg: EngineConfig,
     ) -> &ParallelCpuPipeline {
         self.parallel.entry((variant, quality, workers)).or_insert_with(
-            || ParallelCpuPipeline::with_workers(variant, quality, workers),
+            || {
+                ParallelCpuPipeline::with_qtable_config(
+                    variant,
+                    quality,
+                    workers,
+                    crate::dct::quant::effective_qtable(quality),
+                    cfg,
+                )
+            },
         )
     }
 
@@ -88,19 +107,22 @@ impl PipelineCache {
         subsampling: Subsampling,
         parallel: bool,
         workers: usize,
+        cfg: EngineConfig,
     ) -> &ColorPipeline {
         self.color
             .entry((variant, subsampling, parallel, quality, workers))
             .or_insert_with(|| {
                 if parallel {
-                    ColorPipeline::parallel(
+                    ColorPipeline::parallel_with(
                         variant,
                         quality,
                         subsampling,
                         workers,
+                        cfg,
                     )
                 } else {
-                    ColorPipeline::new(variant, quality, subsampling)
+                    ColorPipeline::new_with(variant, quality, subsampling,
+                                            cfg)
                 }
             })
     }
@@ -254,6 +276,7 @@ fn run_decode_job(
             sub,
             parallel,
             ctx.parallel_workers,
+            ctx.engine,
         );
         let img = pipe.decode_coefficients(&dec.planes);
         return Ok(JobOutput {
@@ -271,11 +294,11 @@ fn run_decode_job(
     let (w, hh) = (h.width as usize, h.height as usize);
     let recon = if parallel {
         cache
-            .parallel(variant, h.quality, ctx.parallel_workers)
+            .parallel(variant, h.quality, ctx.parallel_workers, ctx.engine)
             .decode_coefficients(&dec.qcoef_planar, pw, ph, w, hh)
     } else {
         cache
-            .serial(variant, h.quality)
+            .serial(variant, h.quality, ctx.engine)
             .decode_coefficients(&dec.qcoef_planar, pw, ph, w, hh)
     };
     Ok(JobOutput {
@@ -336,6 +359,7 @@ fn run_color_job(
         req.subsampling,
         lane == Lane::CpuParallel,
         ctx.parallel_workers,
+        ctx.engine,
     );
     if !req.want_psnr {
         // recon-free fast path: zigzag coefficients straight to the
@@ -392,6 +416,7 @@ fn run_gray_job(
                 req.variant,
                 ctx.quality,
                 ctx.parallel_workers,
+                ctx.engine,
             );
             if req.want_psnr {
                 let out = pipe.compress_fused(img);
@@ -414,7 +439,7 @@ fn run_gray_job(
             }
         }
         (RequestKind::Compress, _) => {
-            let pipe = cache.serial(req.variant, ctx.quality);
+            let pipe = cache.serial(req.variant, ctx.quality, ctx.engine);
             if req.want_psnr {
                 let out = pipe.compress_fused(img);
                 compress_output(
@@ -495,6 +520,7 @@ mod tests {
             policy: BatchPolicy::default(),
             quality: 50,
             parallel_workers: 2,
+            engine: EngineConfig::default(),
             queue_hist: Arc::new(SharedHistogram::default()),
             process_hist: Arc::new(SharedHistogram::default()),
         }
@@ -503,22 +529,23 @@ mod tests {
     #[test]
     fn pipeline_cache_builds_one_pipeline_per_key() {
         let mut cache = PipelineCache::new();
-        cache.serial(Variant::Dct, 50);
-        cache.serial(Variant::Dct, 50);
-        cache.serial(Variant::Cordic, 50);
-        cache.parallel(Variant::Dct, 50, 2);
-        cache.parallel(Variant::Dct, 50, 2);
-        cache.color(Variant::Dct, 50, Subsampling::S420, false, 2);
-        cache.color(Variant::Dct, 50, Subsampling::S420, true, 2);
-        cache.color(Variant::Dct, 50, Subsampling::S420, true, 2);
+        let cfg = EngineConfig::default();
+        cache.serial(Variant::Dct, 50, cfg);
+        cache.serial(Variant::Dct, 50, cfg);
+        cache.serial(Variant::Cordic, 50, cfg);
+        cache.parallel(Variant::Dct, 50, 2, cfg);
+        cache.parallel(Variant::Dct, 50, 2, cfg);
+        cache.color(Variant::Dct, 50, Subsampling::S420, false, 2, cfg);
+        cache.color(Variant::Dct, 50, Subsampling::S420, true, 2, cfg);
+        cache.color(Variant::Dct, 50, Subsampling::S420, true, 2, cfg);
         assert_eq!(cache.serial.len(), 2);
         assert_eq!(cache.parallel.len(), 1);
         assert_eq!(cache.color.len(), 2);
         // construction parameters are part of the key: a different
         // quality must never reuse a cached pipeline
-        cache.serial(Variant::Dct, 90);
+        cache.serial(Variant::Dct, 90, cfg);
         assert_eq!(cache.serial.len(), 3);
-        assert_eq!(cache.serial(Variant::Dct, 90).quality, 90);
+        assert_eq!(cache.serial(Variant::Dct, 90, cfg).quality, 90);
     }
 
     #[test]

@@ -1,46 +1,58 @@
-//! Batched 8-wide SIMD-style block engine — the CPU lanes' answer to the
-//! GPU's thread-per-block mapping.
+//! Batched SIMD-style block engine — the CPU lanes' answer to the
+//! GPU's thread-per-block mapping, width-generic over the lane count.
 //!
 //! The scalar pipelines walk the block grid one 8x8 block at a time
 //! through a `Box<dyn Transform8x8>` virtual call, which stops the
 //! autovectorizer at the hottest loop in the crate. This module
 //! restructures the loop into a *lane-major structure-of-arrays* batch:
-//! eight neighbouring blocks ride together, one block per SIMD lane, and
-//! every transform step is expressed as an `[f32; 8]`-element operation
+//! `W` neighbouring blocks ride together, one block per SIMD lane, and
+//! every transform step is expressed as an `[f32; W]`-element operation
 //! the compiler can map directly onto vector instructions.
 //!
 //! ```text
-//!            scalar layout (AoS)              lane-major SoA (BlockBatch8)
-//!   block 0: [e0 e1 e2 ... e63]        data[0]  = [e0 of blocks 0..8]
-//!   block 1: [e0 e1 e2 ... e63]   ==>  data[1]  = [e1 of blocks 0..8]
+//!            scalar layout (AoS)              lane-major SoA (BlockBatch<W>)
+//!   block 0: [e0 e1 e2 ... e63]        data[0]  = [e0 of blocks 0..W]
+//!   block 1: [e0 e1 e2 ... e63]   ==>  data[1]  = [e1 of blocks 0..W]
 //!   ...                                ...
-//!   block 7: [e0 e1 e2 ... e63]        data[63] = [e63 of blocks 0..8]
+//!   block 7: [e0 e1 e2 ... e63]        data[63] = [e63 of blocks 0..W]
 //! ```
 //!
 //! (This layout diagram is promoted into `ARCHITECTURE.md` — keep the
 //! two copies in sync.)
 //!
 //! `data[i]` holds element `i` (row-major position within the 8x8 block)
-//! of all eight blocks, so one [`Lanes`] add/mul advances the same
-//! flow-graph edge of eight independent blocks at once.
+//! of all `W` blocks, so one [`LanesN`] add/mul advances the same
+//! flow-graph edge of `W` independent blocks at once.
+//!
+//! **Width dispatch.** The engine is compiled at two widths — 8 (one
+//! AVX2 ymm register of f32 per batch element) and 16 (one AVX-512 zmm
+//! register) — and picks one per [`BatchEngine`] from [`BatchWidth`]:
+//! an explicit `W8`/`W16` config, the `CORDIC_DCT_BATCH_WIDTH` env
+//! override, or `Auto` runtime detection (16 when `avx512f` is
+//! detected on x86-64, the portable 8-wide path everywhere else). Both
+//! widths run plain elementwise Rust, so non-AVX-512 hosts and CI can
+//! run the 16-wide path too — just on narrower registers.
 //!
 //! **Bit-exactness.** Every lane performs *exactly* the scalar op
 //! sequence of the serial pipeline — same IEEE f32 adds/muls/divides in
 //! the same order, per block — because (a) the Loeffler/matrix lane code
 //! is a line-for-line mirror of the scalar flow graph with each `f32`
-//! widened to [`Lanes`], (b) the exact rotators delegate per lane to the
-//! scalar [`Rotors`] methods, and (c) the CORDIC rotators run the same
-//! fixed-point grid (`fxp`) per lane. Elementwise IEEE arithmetic is
-//! deterministic, so `qcoef` and the reconstruction are bit-identical to
-//! the scalar path (locked by `tests/batch_parity.rs`).
+//! widened to [`LanesN`], (b) the exact rotators delegate per lane to the
+//! scalar [`Rotors`] methods, (c) the CORDIC rotators run the same
+//! fixed-point grid (`fxp`) per lane, and (d) the integer fixed-point
+//! lane's scalar path *is* the `W = 1` instantiation of its lane kernel.
+//! Elementwise arithmetic is deterministic and width-invariant, so
+//! `qcoef` and the reconstruction are bit-identical across scalar,
+//! 8-wide and 16-wide paths (locked by `tests/batch_parity.rs`).
 //!
 //! [`BatchEngine`] is the monomorphized pipeline core both
 //! [`CpuPipeline`](super::pipeline::CpuPipeline) and
 //! [`ParallelCpuPipeline`](super::parallel::ParallelCpuPipeline) (and
 //! through them the per-plane color pipeline) run on: it walks each block
-//! row in batches of [`LANES`], falls back to the scalar path for the
-//! `grid_width % 8` tail, and reuses [`BlockScratch`] buffers from a
-//! per-pipeline [`ScratchPool`] arena instead of allocating per call.
+//! row in batches of its resolved width, falls back to the scalar path
+//! for the `grid_width % W` tail, and reuses [`BlockScratch`] buffers
+//! from a per-pipeline [`ScratchPool`] arena instead of allocating per
+//! call.
 
 use std::sync::Mutex;
 
@@ -52,6 +64,7 @@ use super::blocks::{
     LEVEL_SHIFT,
 };
 use super::cordic::fxp;
+use super::cordic_fxp::{CordicFxpDct, FxpPrecision};
 use super::cordic_loeffler::{CordicLoefflerDct, CordicRotors};
 use super::loeffler::{
     ExactRotors, LoefflerDct, Rotors, INV_SQRT8, SQRT2, SQRT8,
@@ -61,75 +74,166 @@ use super::naive::NaiveDct;
 use super::quant::{dequantize_block, quantize_block};
 use super::{Transform8x8, Variant};
 
-/// Number of blocks per batch — one block per SIMD lane.
+/// Default number of blocks per batch — one block per AVX2-class SIMD
+/// lane. The engine also compiles a 16-wide instantiation; see
+/// [`BatchWidth`].
 pub const LANES: usize = 8;
 
-/// An 8-wide lane vector: one `f32` per block in the batch. All
+/// The wide lane count (AVX-512-class: one zmm register of f32).
+pub const LANES_WIDE: usize = 16;
+
+/// Env override consulted by [`BatchWidth::Auto`]: set to `8` or `16`
+/// to force a lane width per process.
+pub const BATCH_WIDTH_ENV: &str = "CORDIC_DCT_BATCH_WIDTH";
+
+/// Per-engine lane-width selection, resolved once at engine build.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum BatchWidth {
+    /// `CORDIC_DCT_BATCH_WIDTH` env override if set, else hardware
+    /// detection ([`detected_width`]).
+    #[default]
+    Auto,
+    /// Force the 8-wide engine.
+    W8,
+    /// Force the 16-wide engine.
+    W16,
+}
+
+impl BatchWidth {
+    /// Parse a CLI/config string (`auto`, `8`, `16`).
+    pub fn parse(s: &str) -> Option<BatchWidth> {
+        match s {
+            "auto" => Some(BatchWidth::Auto),
+            "8" | "w8" => Some(BatchWidth::W8),
+            "16" | "w16" => Some(BatchWidth::W16),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BatchWidth::Auto => "auto",
+            BatchWidth::W8 => "8",
+            BatchWidth::W16 => "16",
+        }
+    }
+
+    /// Resolve to a concrete lane count (8 or 16).
+    pub fn resolve(self) -> usize {
+        match self {
+            BatchWidth::W8 => LANES,
+            BatchWidth::W16 => LANES_WIDE,
+            BatchWidth::Auto => {
+                match std::env::var(BATCH_WIDTH_ENV).ok().as_deref() {
+                    Some("16") => LANES_WIDE,
+                    Some("8") => LANES,
+                    _ => detected_width(),
+                }
+            }
+        }
+    }
+}
+
+/// Hardware-detected default lane width: 16 on AVX-512-class x86-64
+/// (one f32 batch element per zmm register), 8 everywhere else — the
+/// portable fallback, so non-AVX-512 hosts and CI runners take the
+/// 8-wide path by default.
+pub fn detected_width() -> usize {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            return LANES_WIDE;
+        }
+    }
+    LANES
+}
+
+/// Engine-level configuration threaded from `ServiceConfig`/CLI down
+/// through both CPU pipelines into [`BatchEngine`]: the lane width and
+/// the fixed-point lane's precision. `Default` is the historical
+/// behaviour (auto width, calibrated fxp precision).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct EngineConfig {
+    pub width: BatchWidth,
+    /// Precision of the `Variant::CordicFxp` transform; ignored by the
+    /// f32 variants.
+    pub precision: FxpPrecision,
+}
+
+/// A `W`-wide lane vector: one `f32` per block in the batch. All
 /// arithmetic is elementwise, so lane `l` sees exactly the scalar op
 /// sequence of block `l`.
 #[derive(Clone, Copy, Debug, PartialEq)]
-pub struct Lanes(pub [f32; LANES]);
+pub struct LanesN<const W: usize>(pub [f32; W]);
 
-impl Lanes {
-    pub const ZERO: Lanes = Lanes([0.0; LANES]);
+/// The historical 8-wide lane vector.
+pub type Lanes = LanesN<LANES>;
+
+impl<const W: usize> LanesN<W> {
+    pub const ZERO: LanesN<W> = LanesN([0.0; W]);
 
     /// Broadcast a scalar constant to all lanes.
     #[inline]
-    pub fn splat(v: f32) -> Lanes {
-        Lanes([v; LANES])
+    pub fn splat(v: f32) -> LanesN<W> {
+        LanesN([v; W])
     }
 }
 
-impl std::ops::Add for Lanes {
-    type Output = Lanes;
+impl<const W: usize> std::ops::Add for LanesN<W> {
+    type Output = LanesN<W>;
     #[inline]
-    fn add(self, rhs: Lanes) -> Lanes {
-        let mut out = [0.0f32; LANES];
-        for l in 0..LANES {
+    fn add(self, rhs: LanesN<W>) -> LanesN<W> {
+        let mut out = [0.0f32; W];
+        for l in 0..W {
             out[l] = self.0[l] + rhs.0[l];
         }
-        Lanes(out)
+        LanesN(out)
     }
 }
 
-impl std::ops::Sub for Lanes {
-    type Output = Lanes;
+impl<const W: usize> std::ops::Sub for LanesN<W> {
+    type Output = LanesN<W>;
     #[inline]
-    fn sub(self, rhs: Lanes) -> Lanes {
-        let mut out = [0.0f32; LANES];
-        for l in 0..LANES {
+    fn sub(self, rhs: LanesN<W>) -> LanesN<W> {
+        let mut out = [0.0f32; W];
+        for l in 0..W {
             out[l] = self.0[l] - rhs.0[l];
         }
-        Lanes(out)
+        LanesN(out)
     }
 }
 
 /// Scale every lane by the same scalar (mirrors `x * c` in scalar code —
 /// the only multiply shape the lane kernels need; elementwise
-/// `Lanes * Lanes` is deliberately absent until a kernel requires it).
-impl std::ops::Mul<f32> for Lanes {
-    type Output = Lanes;
+/// `LanesN * LanesN` is deliberately absent until a kernel requires it).
+impl<const W: usize> std::ops::Mul<f32> for LanesN<W> {
+    type Output = LanesN<W>;
     #[inline]
-    fn mul(self, rhs: f32) -> Lanes {
-        let mut out = [0.0f32; LANES];
-        for l in 0..LANES {
+    fn mul(self, rhs: f32) -> LanesN<W> {
+        let mut out = [0.0f32; W];
+        for l in 0..W {
             out[l] = self.0[l] * rhs;
         }
-        Lanes(out)
+        LanesN(out)
     }
 }
 
-/// Lane-major SoA batch: element `i` of all [`LANES`] blocks lives in
+/// Lane-major SoA batch: element `i` of all `W` blocks lives in
 /// `data[i]` (see the module-level layout diagram).
 #[derive(Clone, Debug, PartialEq)]
-pub struct BlockBatch8 {
-    pub data: [Lanes; 64],
+pub struct BlockBatch<const W: usize> {
+    pub data: [LanesN<W>; 64],
 }
 
-impl BlockBatch8 {
-    pub fn zeroed() -> BlockBatch8 {
-        BlockBatch8 {
-            data: [Lanes::ZERO; 64],
+/// The historical 8-wide batch.
+pub type BlockBatch8 = BlockBatch<LANES>;
+/// The AVX-512-class 16-wide batch.
+pub type BlockBatch16 = BlockBatch<LANES_WIDE>;
+
+impl<const W: usize> BlockBatch<W> {
+    pub fn zeroed() -> BlockBatch<W> {
+        BlockBatch {
+            data: [LanesN::ZERO; 64],
         }
     }
 
@@ -148,7 +252,7 @@ impl BlockBatch8 {
     }
 }
 
-impl Default for BlockBatch8 {
+impl<const W: usize> Default for BlockBatch<W> {
     fn default() -> Self {
         Self::zeroed()
     }
@@ -157,19 +261,24 @@ impl Default for BlockBatch8 {
 /// Quantized-coefficient batch in the same lane-major layout
 /// (`data[i][l]` = coefficient `i` of block `l`).
 #[derive(Clone, Debug, PartialEq)]
-pub struct QBatch8 {
-    pub data: [[i16; LANES]; 64],
+pub struct QBatch<const W: usize> {
+    pub data: [[i16; W]; 64],
 }
 
-impl QBatch8 {
-    pub fn zeroed() -> QBatch8 {
-        QBatch8 {
-            data: [[0i16; LANES]; 64],
+/// The historical 8-wide quantized batch.
+pub type QBatch8 = QBatch<LANES>;
+/// The 16-wide quantized batch.
+pub type QBatch16 = QBatch<LANES_WIDE>;
+
+impl<const W: usize> QBatch<W> {
+    pub fn zeroed() -> QBatch<W> {
+        QBatch {
+            data: [[0i16; W]; 64],
         }
     }
 }
 
-impl Default for QBatch8 {
+impl<const W: usize> Default for QBatch<W> {
     fn default() -> Self {
         Self::zeroed()
     }
@@ -182,14 +291,14 @@ impl Default for QBatch8 {
 /// Gather blocks `(bx0..bx0+n, by)` of an 8-aligned image into the batch,
 /// applying the -128 level shift (lane `l` = block `bx0 + l`). Inactive
 /// lanes (`l >= n`) are zeroed so tail batches stay deterministic.
-pub fn gather(
-    batch: &mut BlockBatch8,
+pub fn gather<const W: usize>(
+    batch: &mut BlockBatch<W>,
     img: &GrayImage,
     bx0: usize,
     by: usize,
     n: usize,
 ) {
-    debug_assert!((1..=LANES).contains(&n));
+    debug_assert!((1..=W).contains(&n));
     let w = img.width;
     for l in 0..n {
         for r in 0..BLOCK {
@@ -209,14 +318,14 @@ pub fn gather(
 
 /// Scatter the first `n` lanes back into the image as reconstructed
 /// pixels (un-shift, clamp, round — the exact scalar `store_block` math).
-pub fn scatter_blocks(
-    batch: &BlockBatch8,
+pub fn scatter_blocks<const W: usize>(
+    batch: &BlockBatch<W>,
     img: &mut GrayImage,
     bx0: usize,
     by: usize,
     n: usize,
 ) {
-    debug_assert!((1..=LANES).contains(&n));
+    debug_assert!((1..=W).contains(&n));
     let w = img.width;
     for l in 0..n {
         for r in 0..BLOCK {
@@ -233,15 +342,15 @@ pub fn scatter_blocks(
 
 /// Scatter the first `n` quantized lanes into a planar f32 coefficient
 /// buffer (the PJRT interchange layout), blocks `(bx0..bx0+n, by)`.
-pub fn scatter_coef(
-    qb: &QBatch8,
+pub fn scatter_coef<const W: usize>(
+    qb: &QBatch<W>,
     buf: &mut [f32],
     width: usize,
     bx0: usize,
     by: usize,
     n: usize,
 ) {
-    debug_assert!((1..=LANES).contains(&n));
+    debug_assert!((1..=W).contains(&n));
     for l in 0..n {
         for r in 0..BLOCK {
             let dst = (by * BLOCK + r) * width + (bx0 + l) * BLOCK;
@@ -256,15 +365,15 @@ pub fn scatter_coef(
 /// [`quantize_zigzag_batch`] output) into a planar f32 coefficient
 /// buffer. Same values as [`scatter_coef`] over the row-major batch —
 /// only the source indexing differs.
-pub fn scatter_coef_scan(
-    qb: &QBatch8,
+pub fn scatter_coef_scan<const W: usize>(
+    qb: &QBatch<W>,
     buf: &mut [f32],
     width: usize,
     bx0: usize,
     by: usize,
     n: usize,
 ) {
-    debug_assert!((1..=LANES).contains(&n));
+    debug_assert!((1..=W).contains(&n));
     for l in 0..n {
         for r in 0..BLOCK {
             let dst = (by * BLOCK + r) * width + (bx0 + l) * BLOCK;
@@ -281,15 +390,15 @@ pub fn scatter_coef_scan(
 /// `((by * grid_w + bx0 + l) * 64)..+64`, already in zigzag order — the
 /// layout [`crate::codec::encoder::ScanCoefs`] carries straight into the
 /// entropy encoder.
-pub fn scatter_scan(
-    qb: &QBatch8,
+pub fn scatter_scan<const W: usize>(
+    qb: &QBatch<W>,
     scanned: &mut [i16],
     grid_w: usize,
     bx0: usize,
     by: usize,
     n: usize,
 ) {
-    debug_assert!((1..=LANES).contains(&n));
+    debug_assert!((1..=W).contains(&n));
     for l in 0..n {
         let base = (by * grid_w + bx0 + l) * 64;
         for k in 0..64 {
@@ -301,14 +410,14 @@ pub fn scatter_scan(
 /// Lane-wide dequantize of a *scan-ordered* quantized batch back to a
 /// row-major coefficient batch — the exact scalar [`dequantize_block`]
 /// multiplies (elementwise, so storage order cannot change the values).
-pub fn dequantize_scan_batch(
-    qb: &QBatch8,
+pub fn dequantize_scan_batch<const W: usize>(
+    qb: &QBatch<W>,
     q: &[f32; 64],
-    out: &mut BlockBatch8,
+    out: &mut BlockBatch<W>,
 ) {
     for (k, &i) in ZIGZAG.iter().enumerate() {
         let qi = q[i];
-        for l in 0..LANES {
+        for l in 0..W {
             out.data[i].0[l] = qb.data[k][l] as f32 * qi;
         }
     }
@@ -316,15 +425,15 @@ pub fn dequantize_scan_batch(
 
 /// Gather `n` blocks of a planar f32 coefficient buffer into the
 /// quantized batch (inverse of [`scatter_coef`]); inactive lanes zeroed.
-pub fn gather_coef(
+pub fn gather_coef<const W: usize>(
     buf: &[f32],
     width: usize,
     bx0: usize,
     by: usize,
     n: usize,
-    qb: &mut QBatch8,
+    qb: &mut QBatch<W>,
 ) {
-    debug_assert!((1..=LANES).contains(&n));
+    debug_assert!((1..=W).contains(&n));
     for l in 0..n {
         for r in 0..BLOCK {
             let src = (by * BLOCK + r) * width + (bx0 + l) * BLOCK;
@@ -346,12 +455,16 @@ pub fn gather_coef(
 // ---------------------------------------------------------------------------
 
 /// Lane-wide quantize: `round_half_even(coef / q)` per lane — the exact
-/// scalar [`quantize_block`] math, eight blocks at a time.
-pub fn quantize_batch(batch: &BlockBatch8, q: &[f32; 64], out: &mut QBatch8) {
+/// scalar [`quantize_block`] math, `W` blocks at a time.
+pub fn quantize_batch<const W: usize>(
+    batch: &BlockBatch<W>,
+    q: &[f32; 64],
+    out: &mut QBatch<W>,
+) {
     for i in 0..64 {
         let qi = q[i];
         let lanes = &batch.data[i].0;
-        for l in 0..LANES {
+        for l in 0..W {
             out.data[i][l] = (lanes[l] / qi).round_ties_even() as i16;
         }
     }
@@ -362,15 +475,15 @@ pub fn quantize_batch(batch: &BlockBatch8, q: &[f32; 64], out: &mut QBatch8) {
 /// position `k` of block `l`) — the symbolization front half without the
 /// intermediate row-major store. Values are bit-identical to
 /// `quantize_block` followed by `zigzag::scan` per block.
-pub fn quantize_zigzag_batch(
-    batch: &BlockBatch8,
+pub fn quantize_zigzag_batch<const W: usize>(
+    batch: &BlockBatch<W>,
     q: &[f32; 64],
-    out: &mut QBatch8,
+    out: &mut QBatch<W>,
 ) {
     for (k, &i) in ZIGZAG.iter().enumerate() {
         let qi = q[i];
         let lanes = &batch.data[i].0;
-        for l in 0..LANES {
+        for l in 0..W {
             out.data[k][l] = (lanes[l] / qi).round_ties_even() as i16;
         }
     }
@@ -378,10 +491,14 @@ pub fn quantize_zigzag_batch(
 
 /// Lane-wide dequantize back to coefficient space (exact scalar
 /// [`dequantize_block`] math).
-pub fn dequantize_batch(qb: &QBatch8, q: &[f32; 64], out: &mut BlockBatch8) {
+pub fn dequantize_batch<const W: usize>(
+    qb: &QBatch<W>,
+    q: &[f32; 64],
+    out: &mut BlockBatch<W>,
+) {
     for i in 0..64 {
         let qi = q[i];
-        for l in 0..LANES {
+        for l in 0..W {
             out.data[i].0[l] = qb.data[i][l] as f32 * qi;
         }
     }
@@ -391,15 +508,29 @@ pub fn dequantize_batch(qb: &QBatch8, q: &[f32; 64], out: &mut BlockBatch8) {
 // Lane-wide transforms
 // ---------------------------------------------------------------------------
 
-/// Lane-wide plane rotations of the Loeffler graph — the `[f32; 8]`
-/// counterpart of [`Rotors`], one block per lane.
-pub trait LaneRotors: Send + Sync {
-    fn odd_a8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes);
-    fn odd_b8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes);
-    fn even8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes);
-    fn odd_a_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes);
-    fn odd_b_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes);
-    fn even_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes);
+/// Lane-wide plane rotations of the Loeffler graph — the `[f32; W]`
+/// counterpart of [`Rotors`], one block per lane. (Method names keep
+/// their historical `8` suffix from the fixed-width engine; they are
+/// width-generic.)
+pub trait LaneRotors<const W: usize>: Send + Sync {
+    fn odd_a8(&self, x: LanesN<W>, y: LanesN<W>) -> (LanesN<W>, LanesN<W>);
+    fn odd_b8(&self, x: LanesN<W>, y: LanesN<W>) -> (LanesN<W>, LanesN<W>);
+    fn even8(&self, x: LanesN<W>, y: LanesN<W>) -> (LanesN<W>, LanesN<W>);
+    fn odd_a_inv8(
+        &self,
+        x: LanesN<W>,
+        y: LanesN<W>,
+    ) -> (LanesN<W>, LanesN<W>);
+    fn odd_b_inv8(
+        &self,
+        x: LanesN<W>,
+        y: LanesN<W>,
+    ) -> (LanesN<W>, LanesN<W>);
+    fn even_inv8(
+        &self,
+        x: LanesN<W>,
+        y: LanesN<W>,
+    ) -> (LanesN<W>, LanesN<W>);
     /// Quantize a scalar constant to the implementation's arithmetic grid
     /// (identity for exact float) — constants are per-graph, not per-lane.
     fn grid(&self, v: f32) -> f32 {
@@ -409,84 +540,108 @@ pub trait LaneRotors: Send + Sync {
 
 /// Apply a scalar rotator to each lane (bit-identical by construction).
 #[inline]
-fn lanewise(
+fn lanewise<const W: usize>(
     f: impl Fn(f32, f32) -> (f32, f32),
-    x: Lanes,
-    y: Lanes,
-) -> (Lanes, Lanes) {
-    let mut ox = [0.0f32; LANES];
-    let mut oy = [0.0f32; LANES];
-    for l in 0..LANES {
+    x: LanesN<W>,
+    y: LanesN<W>,
+) -> (LanesN<W>, LanesN<W>) {
+    let mut ox = [0.0f32; W];
+    let mut oy = [0.0f32; W];
+    for l in 0..W {
         let (a, b) = f(x.0[l], y.0[l]);
         ox[l] = a;
         oy[l] = b;
     }
-    (Lanes(ox), Lanes(oy))
+    (LanesN(ox), LanesN(oy))
 }
 
-impl LaneRotors for ExactRotors {
+impl<const W: usize> LaneRotors<W> for ExactRotors {
     #[inline]
-    fn odd_a8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+    fn odd_a8(&self, x: LanesN<W>, y: LanesN<W>) -> (LanesN<W>, LanesN<W>) {
         lanewise(|a, b| Rotors::odd_a(self, a, b), x, y)
     }
     #[inline]
-    fn odd_b8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+    fn odd_b8(&self, x: LanesN<W>, y: LanesN<W>) -> (LanesN<W>, LanesN<W>) {
         lanewise(|a, b| Rotors::odd_b(self, a, b), x, y)
     }
     #[inline]
-    fn even8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+    fn even8(&self, x: LanesN<W>, y: LanesN<W>) -> (LanesN<W>, LanesN<W>) {
         lanewise(|a, b| Rotors::even(self, a, b), x, y)
     }
     #[inline]
-    fn odd_a_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+    fn odd_a_inv8(
+        &self,
+        x: LanesN<W>,
+        y: LanesN<W>,
+    ) -> (LanesN<W>, LanesN<W>) {
         lanewise(|a, b| Rotors::odd_a_inv(self, a, b), x, y)
     }
     #[inline]
-    fn odd_b_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+    fn odd_b_inv8(
+        &self,
+        x: LanesN<W>,
+        y: LanesN<W>,
+    ) -> (LanesN<W>, LanesN<W>) {
         lanewise(|a, b| Rotors::odd_b_inv(self, a, b), x, y)
     }
     #[inline]
-    fn even_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+    fn even_inv8(
+        &self,
+        x: LanesN<W>,
+        y: LanesN<W>,
+    ) -> (LanesN<W>, LanesN<W>) {
         lanewise(|a, b| Rotors::even_inv(self, a, b), x, y)
     }
 }
 
-impl LaneRotors for CordicRotors {
+impl<const W: usize> LaneRotors<W> for CordicRotors {
     #[inline]
-    fn odd_a8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+    fn odd_a8(&self, x: LanesN<W>, y: LanesN<W>) -> (LanesN<W>, LanesN<W>) {
         let (mut a, mut b) = (x.0, y.0);
-        self.ra().rotate_cw8(&mut a, &mut b);
-        (Lanes(a), Lanes(b))
+        self.ra().rotate_cw_lanes(&mut a, &mut b);
+        (LanesN(a), LanesN(b))
     }
     #[inline]
-    fn odd_b8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+    fn odd_b8(&self, x: LanesN<W>, y: LanesN<W>) -> (LanesN<W>, LanesN<W>) {
         let (mut a, mut b) = (x.0, y.0);
-        self.rb().rotate_cw8(&mut a, &mut b);
-        (Lanes(a), Lanes(b))
+        self.rb().rotate_cw_lanes(&mut a, &mut b);
+        (LanesN(a), LanesN(b))
     }
     #[inline]
-    fn even8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+    fn even8(&self, x: LanesN<W>, y: LanesN<W>) -> (LanesN<W>, LanesN<W>) {
         let (mut a, mut b) = (x.0, y.0);
-        self.re().rotate_cw8(&mut a, &mut b);
-        (Lanes(a), Lanes(b))
+        self.re().rotate_cw_lanes(&mut a, &mut b);
+        (LanesN(a), LanesN(b))
     }
     #[inline]
-    fn odd_a_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+    fn odd_a_inv8(
+        &self,
+        x: LanesN<W>,
+        y: LanesN<W>,
+    ) -> (LanesN<W>, LanesN<W>) {
         let (mut a, mut b) = (x.0, y.0);
-        self.ra().rotate_ccw8(&mut a, &mut b);
-        (Lanes(a), Lanes(b))
+        self.ra().rotate_ccw_lanes(&mut a, &mut b);
+        (LanesN(a), LanesN(b))
     }
     #[inline]
-    fn odd_b_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+    fn odd_b_inv8(
+        &self,
+        x: LanesN<W>,
+        y: LanesN<W>,
+    ) -> (LanesN<W>, LanesN<W>) {
         let (mut a, mut b) = (x.0, y.0);
-        self.rb().rotate_ccw8(&mut a, &mut b);
-        (Lanes(a), Lanes(b))
+        self.rb().rotate_ccw_lanes(&mut a, &mut b);
+        (LanesN(a), LanesN(b))
     }
     #[inline]
-    fn even_inv8(&self, x: Lanes, y: Lanes) -> (Lanes, Lanes) {
+    fn even_inv8(
+        &self,
+        x: LanesN<W>,
+        y: LanesN<W>,
+    ) -> (LanesN<W>, LanesN<W>) {
         let (mut a, mut b) = (x.0, y.0);
-        self.re().rotate_ccw8(&mut a, &mut b);
-        (Lanes(a), Lanes(b))
+        self.re().rotate_ccw_lanes(&mut a, &mut b);
+        (LanesN(a), LanesN(b))
     }
     #[inline]
     fn grid(&self, v: f32) -> f32 {
@@ -496,8 +651,11 @@ impl LaneRotors for CordicRotors {
 
 /// Lane-wide forward 8-point DCT-II — a line-for-line mirror of
 /// `loeffler::fwd8` with every `f32` widened to
-/// [`Lanes`], so each lane runs the exact scalar flow graph.
-pub fn fwd8_lanes<R: LaneRotors>(r: &R, x: &[Lanes; 8]) -> [Lanes; 8] {
+/// [`LanesN`], so each lane runs the exact scalar flow graph.
+pub fn fwd8_lanes<const W: usize, R: LaneRotors<W>>(
+    r: &R,
+    x: &[LanesN<W>; 8],
+) -> [LanesN<W>; 8] {
     // stage 1
     let a0 = x[0] + x[7];
     let a1 = x[1] + x[6];
@@ -542,7 +700,10 @@ pub fn fwd8_lanes<R: LaneRotors>(r: &R, x: &[Lanes; 8]) -> [Lanes; 8] {
 }
 
 /// Lane-wide inverse of [`fwd8_lanes`] (mirror of `loeffler::inv8`).
-pub fn inv8_lanes<R: LaneRotors>(r: &R, y: &[Lanes; 8]) -> [Lanes; 8] {
+pub fn inv8_lanes<const W: usize, R: LaneRotors<W>>(
+    r: &R,
+    y: &[LanesN<W>; 8],
+) -> [LanesN<W>; 8] {
     let s8 = r.grid(SQRT8);
     let x0 = y[0] * s8;
     let x1 = y[1] * s8;
@@ -590,14 +751,15 @@ pub fn inv8_lanes<R: LaneRotors>(r: &R, y: &[Lanes; 8]) -> [Lanes; 8] {
 
 /// Apply a lane-wide 1-D transform separably over the batch (columns then
 /// rows within each lane's 8x8 block — mirror of `loeffler::separable_2d`).
-pub fn separable_2d_lanes<R: LaneRotors>(
+pub fn separable_2d_lanes<const W: usize, R: LaneRotors<W>>(
     r: &R,
-    batch: &mut BlockBatch8,
-    f: fn(&R, &[Lanes; 8]) -> [Lanes; 8],
+    batch: &mut BlockBatch<W>,
+    f: fn(&R, &[LanesN<W>; 8]) -> [LanesN<W>; 8],
 ) {
     // columns
     for j in 0..8 {
-        let col: [Lanes; 8] = std::array::from_fn(|i| batch.data[i * 8 + j]);
+        let col: [LanesN<W>; 8] =
+            std::array::from_fn(|i| batch.data[i * 8 + j]);
         let out = f(r, &col);
         for i in 0..8 {
             batch.data[i * 8 + j] = out[i];
@@ -605,7 +767,8 @@ pub fn separable_2d_lanes<R: LaneRotors>(
     }
     // rows
     for i in 0..8 {
-        let row: [Lanes; 8] = std::array::from_fn(|j| batch.data[i * 8 + j]);
+        let row: [LanesN<W>; 8] =
+            std::array::from_fn(|j| batch.data[i * 8 + j]);
         let out = f(r, &row);
         for j in 0..8 {
             batch.data[i * 8 + j] = out[j];
@@ -615,12 +778,15 @@ pub fn separable_2d_lanes<R: LaneRotors>(
 
 /// Lane-wide separable matrix DCT forward (`B <- D B D^T`), mirroring the
 /// scalar `MatrixDct::forward` accumulation order per lane.
-pub fn matrix_forward_lanes(d: &[[f32; 8]; 8], batch: &mut BlockBatch8) {
-    let mut tmp = [Lanes::ZERO; 64];
+pub fn matrix_forward_lanes<const W: usize>(
+    d: &[[f32; 8]; 8],
+    batch: &mut BlockBatch<W>,
+) {
+    let mut tmp = [LanesN::<W>::ZERO; 64];
     // columns: tmp = D * B
     for k in 0..8 {
         for j in 0..8 {
-            let mut acc = Lanes::ZERO;
+            let mut acc = LanesN::<W>::ZERO;
             for n in 0..8 {
                 acc = acc + batch.data[n * 8 + j] * d[k][n];
             }
@@ -630,7 +796,7 @@ pub fn matrix_forward_lanes(d: &[[f32; 8]; 8], batch: &mut BlockBatch8) {
     // rows: out = tmp * D^T
     for k in 0..8 {
         for l in 0..8 {
-            let mut acc = Lanes::ZERO;
+            let mut acc = LanesN::<W>::ZERO;
             for j in 0..8 {
                 acc = acc + tmp[k * 8 + j] * d[l][j];
             }
@@ -641,11 +807,14 @@ pub fn matrix_forward_lanes(d: &[[f32; 8]; 8], batch: &mut BlockBatch8) {
 
 /// Lane-wide matrix IDCT (`B <- D^T B D`), mirroring the scalar
 /// `MatrixDct::inverse` accumulation order per lane.
-pub fn matrix_inverse_lanes(d: &[[f32; 8]; 8], batch: &mut BlockBatch8) {
-    let mut tmp = [Lanes::ZERO; 64];
+pub fn matrix_inverse_lanes<const W: usize>(
+    d: &[[f32; 8]; 8],
+    batch: &mut BlockBatch<W>,
+) {
+    let mut tmp = [LanesN::<W>::ZERO; 64];
     for i in 0..8 {
         for j in 0..8 {
-            let mut acc = Lanes::ZERO;
+            let mut acc = LanesN::<W>::ZERO;
             for k in 0..8 {
                 acc = acc + batch.data[k * 8 + j] * d[k][i];
             }
@@ -654,7 +823,7 @@ pub fn matrix_inverse_lanes(d: &[[f32; 8]; 8], batch: &mut BlockBatch8) {
     }
     for i in 0..8 {
         for j in 0..8 {
-            let mut acc = Lanes::ZERO;
+            let mut acc = LanesN::<W>::ZERO;
             for l in 0..8 {
                 acc = acc + tmp[i * 8 + l] * d[l][j];
             }
@@ -670,13 +839,15 @@ pub fn matrix_inverse_lanes(d: &[[f32; 8]; 8], batch: &mut BlockBatch8) {
 /// Statically dispatched transform: the batched replacement for the
 /// `Box<dyn Transform8x8>` virtual call. Each arm owns the scalar
 /// implementation (used for tail blocks) and drives the matching
-/// lane-wide kernel for full batches.
+/// lane-wide kernel for full batches at either width.
 pub enum BatchTransform {
     /// Boxed: the 2x 8x8 f32 matrices would otherwise dominate the enum
     /// size carried by every engine.
     Matrix(Box<MatrixDct>),
     Loeffler(LoefflerDct),
     Cordic(CordicLoefflerDct),
+    /// Integer fixed-point CORDIC-Loeffler (precision-parameterized).
+    CordicFxp(CordicFxpDct),
     /// The textbook baseline has no lane kernel; full batches run the
     /// scalar transform once per lane (still bit-identical, never hot).
     Naive(NaiveDct),
@@ -684,6 +855,15 @@ pub enum BatchTransform {
 
 impl BatchTransform {
     pub fn new(variant: Variant) -> BatchTransform {
+        Self::with_precision(variant, FxpPrecision::default())
+    }
+
+    /// Build with an explicit fixed-point precision (only the
+    /// `CordicFxp` arm consumes it).
+    pub fn with_precision(
+        variant: Variant,
+        precision: FxpPrecision,
+    ) -> BatchTransform {
         match variant {
             Variant::Dct => {
                 BatchTransform::Matrix(Box::new(MatrixDct::new()))
@@ -694,6 +874,9 @@ impl BatchTransform {
             Variant::Cordic => {
                 BatchTransform::Cordic(CordicLoefflerDct::default())
             }
+            Variant::CordicFxp => {
+                BatchTransform::CordicFxp(CordicFxpDct::new(precision))
+            }
             Variant::Naive => BatchTransform::Naive(NaiveDct::new()),
         }
     }
@@ -703,6 +886,7 @@ impl BatchTransform {
             BatchTransform::Matrix(t) => t.name(),
             BatchTransform::Loeffler(t) => t.name(),
             BatchTransform::Cordic(t) => t.name(),
+            BatchTransform::CordicFxp(t) => t.name(),
             BatchTransform::Naive(t) => t.name(),
         }
     }
@@ -714,6 +898,7 @@ impl BatchTransform {
             BatchTransform::Matrix(t) => t.forward(block),
             BatchTransform::Loeffler(t) => t.forward(block),
             BatchTransform::Cordic(t) => t.forward(block),
+            BatchTransform::CordicFxp(t) => t.forward(block),
             BatchTransform::Naive(t) => t.forward(block),
         }
     }
@@ -725,24 +910,26 @@ impl BatchTransform {
             BatchTransform::Matrix(t) => t.inverse(block),
             BatchTransform::Loeffler(t) => t.inverse(block),
             BatchTransform::Cordic(t) => t.inverse(block),
+            BatchTransform::CordicFxp(t) => t.inverse(block),
             BatchTransform::Naive(t) => t.inverse(block),
         }
     }
 
-    /// Lane-wide forward over a full batch.
-    pub fn forward_batch(&self, batch: &mut BlockBatch8) {
+    /// Lane-wide forward over a full batch of either width.
+    pub fn forward_batch<const W: usize>(&self, batch: &mut BlockBatch<W>) {
         match self {
             BatchTransform::Matrix(t) => {
                 matrix_forward_lanes(t.coeffs(), batch)
             }
             BatchTransform::Loeffler(t) => {
-                separable_2d_lanes(t.rotors(), batch, fwd8_lanes)
+                separable_2d_lanes(t.rotors(), batch, fwd8_lanes::<W, _>)
             }
             BatchTransform::Cordic(t) => {
-                separable_2d_lanes(t.rotors(), batch, fwd8_lanes)
+                separable_2d_lanes(t.rotors(), batch, fwd8_lanes::<W, _>)
             }
+            BatchTransform::CordicFxp(t) => t.forward_lanes(batch),
             BatchTransform::Naive(t) => {
-                for l in 0..LANES {
+                for l in 0..W {
                     let mut blk = batch.extract_lane(l);
                     t.forward(&mut blk);
                     batch.insert_lane(l, &blk);
@@ -751,20 +938,21 @@ impl BatchTransform {
         }
     }
 
-    /// Lane-wide inverse over a full batch.
-    pub fn inverse_batch(&self, batch: &mut BlockBatch8) {
+    /// Lane-wide inverse over a full batch of either width.
+    pub fn inverse_batch<const W: usize>(&self, batch: &mut BlockBatch<W>) {
         match self {
             BatchTransform::Matrix(t) => {
                 matrix_inverse_lanes(t.coeffs(), batch)
             }
             BatchTransform::Loeffler(t) => {
-                separable_2d_lanes(t.rotors(), batch, inv8_lanes)
+                separable_2d_lanes(t.rotors(), batch, inv8_lanes::<W, _>)
             }
             BatchTransform::Cordic(t) => {
-                separable_2d_lanes(t.rotors(), batch, inv8_lanes)
+                separable_2d_lanes(t.rotors(), batch, inv8_lanes::<W, _>)
             }
+            BatchTransform::CordicFxp(t) => t.inverse_lanes(batch),
             BatchTransform::Naive(t) => {
-                for l in 0..LANES {
+                for l in 0..W {
                     let mut blk = batch.extract_lane(l);
                     t.inverse(&mut blk);
                     batch.insert_lane(l, &blk);
@@ -778,14 +966,20 @@ impl BatchTransform {
 // Scratch arena
 // ---------------------------------------------------------------------------
 
-/// Per-call working set of the batch engine (~5 KiB): two lane-major
-/// batches, a quantized batch and the scalar-tail buffers. Held in a
-/// [`ScratchPool`] so repeated compress/decode calls (and the coordinator
-/// worker across jobs) never re-allocate it.
+/// Per-call working set of the batch engine (~15 KiB): two lane-major
+/// batches plus a quantized batch at *each* compiled width, and the
+/// scalar-tail buffers. Holding both widths keeps the pool non-generic
+/// (pipelines and the coordinator cache don't care about the engine's
+/// resolved width); an engine only touches its own width's buffers.
+/// Held in a [`ScratchPool`] so repeated compress/decode calls (and the
+/// coordinator worker across jobs) never re-allocate it.
 pub struct BlockScratch {
-    coef: BlockBatch8,
-    recon: BlockBatch8,
-    qc: QBatch8,
+    coef8: BlockBatch<LANES>,
+    recon8: BlockBatch<LANES>,
+    qc8: QBatch<LANES>,
+    coef16: BlockBatch<LANES_WIDE>,
+    recon16: BlockBatch<LANES_WIDE>,
+    qc16: QBatch<LANES_WIDE>,
     block: [f32; 64],
     qblock: [i16; 64],
 }
@@ -793,9 +987,12 @@ pub struct BlockScratch {
 impl BlockScratch {
     pub fn new() -> BlockScratch {
         BlockScratch {
-            coef: BlockBatch8::zeroed(),
-            recon: BlockBatch8::zeroed(),
-            qc: QBatch8::zeroed(),
+            coef8: BlockBatch::zeroed(),
+            recon8: BlockBatch::zeroed(),
+            qc8: QBatch::zeroed(),
+            coef16: BlockBatch::zeroed(),
+            recon16: BlockBatch::zeroed(),
+            qc16: QBatch::zeroed(),
             block: [0.0; 64],
             qblock: [0; 64],
         }
@@ -805,6 +1002,38 @@ impl BlockScratch {
 impl Default for BlockScratch {
     fn default() -> Self {
         Self::new()
+    }
+}
+
+/// Width-indexed access to the scratch buffers: the engine's generic
+/// row kernels borrow the batch trio matching their `W`.
+trait ScratchLanes<const W: usize> {
+    fn lanes(
+        &mut self,
+    ) -> (&mut BlockBatch<W>, &mut BlockBatch<W>, &mut QBatch<W>);
+}
+
+impl ScratchLanes<LANES> for BlockScratch {
+    fn lanes(
+        &mut self,
+    ) -> (
+        &mut BlockBatch<LANES>,
+        &mut BlockBatch<LANES>,
+        &mut QBatch<LANES>,
+    ) {
+        (&mut self.coef8, &mut self.recon8, &mut self.qc8)
+    }
+}
+
+impl ScratchLanes<LANES_WIDE> for BlockScratch {
+    fn lanes(
+        &mut self,
+    ) -> (
+        &mut BlockBatch<LANES_WIDE>,
+        &mut BlockBatch<LANES_WIDE>,
+        &mut QBatch<LANES_WIDE>,
+    ) {
+        (&mut self.coef16, &mut self.recon16, &mut self.qc16)
     }
 }
 
@@ -846,11 +1075,13 @@ impl ScratchPool {
 // ---------------------------------------------------------------------------
 
 /// The batched pipeline core shared by both CPU lanes (and, through the
-/// stub backend, the GPU lane): walks each block row in batches of
-/// [`LANES`] (scalar tail for `grid_width % 8` remainders), quantizing
-/// with one table and decoding with the exact matrix IDCT — the same
-/// stages, in the same arithmetic order, as the scalar pipelines it
-/// replaced.
+/// stub backend, the GPU lane): walks each block row in batches of its
+/// resolved lane width (scalar tail for `grid_width % W` remainders),
+/// quantizing with one table and decoding with the exact matrix IDCT —
+/// the same stages, in the same arithmetic order, as the scalar
+/// pipelines it replaced. The width (8 or 16) is fixed per engine at
+/// construction ([`BatchWidth::resolve`]); outputs are bit-identical
+/// across widths.
 ///
 /// # Examples
 ///
@@ -882,15 +1113,30 @@ pub struct BatchEngine {
     transform: BatchTransform,
     decoder: MatrixDct,
     qtable: [f32; 64],
+    width: usize,
     scratch: ScratchPool,
 }
 
 impl BatchEngine {
     pub fn new(variant: Variant, qtable: [f32; 64]) -> BatchEngine {
+        Self::with_config(variant, qtable, EngineConfig::default())
+    }
+
+    /// Build with an explicit [`EngineConfig`] (lane width + fxp
+    /// precision).
+    pub fn with_config(
+        variant: Variant,
+        qtable: [f32; 64],
+        cfg: EngineConfig,
+    ) -> BatchEngine {
         BatchEngine {
-            transform: BatchTransform::new(variant),
+            transform: BatchTransform::with_precision(
+                variant,
+                cfg.precision,
+            ),
             decoder: MatrixDct::new(),
             qtable,
+            width: cfg.width.resolve(),
             scratch: ScratchPool::new(),
         }
     }
@@ -901,6 +1147,11 @@ impl BatchEngine {
 
     pub fn qtable(&self) -> &[f32; 64] {
         &self.qtable
+    }
+
+    /// The resolved lane width this engine batches at (8 or 16).
+    pub fn lane_width(&self) -> usize {
+        self.width
     }
 
     /// Run `f` with a scratch buffer from this engine's arena.
@@ -932,31 +1183,56 @@ impl BatchEngine {
         s: &mut BlockScratch,
         padded: &GrayImage,
         src_by: usize,
+        qcoef: Option<&mut [f32]>,
+        dst_by: usize,
+        scanned: Option<&mut [i16]>,
+        recon: Option<(&mut GrayImage, usize)>,
+    ) {
+        match self.width {
+            LANES_WIDE => self.forward_quant_row_w::<LANES_WIDE>(
+                s, padded, src_by, qcoef, dst_by, scanned, recon,
+            ),
+            _ => self.forward_quant_row_w::<LANES>(
+                s, padded, src_by, qcoef, dst_by, scanned, recon,
+            ),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn forward_quant_row_w<const W: usize>(
+        &self,
+        s: &mut BlockScratch,
+        padded: &GrayImage,
+        src_by: usize,
         mut qcoef: Option<&mut [f32]>,
         dst_by: usize,
         mut scanned: Option<&mut [i16]>,
         mut recon: Option<(&mut GrayImage, usize)>,
-    ) {
+    ) where
+        BlockScratch: ScratchLanes<W>,
+    {
         let w = padded.width;
         debug_assert!(w % BLOCK == 0);
         let gw = w / BLOCK;
         let mut bx = 0;
-        while bx + LANES <= gw {
-            gather(&mut s.coef, padded, bx, src_by, LANES);
-            self.transform.forward_batch(&mut s.coef);
-            quantize_zigzag_batch(&s.coef, &self.qtable, &mut s.qc);
+        while bx + W <= gw {
+            let (coef, recon_b, qc) =
+                <BlockScratch as ScratchLanes<W>>::lanes(s);
+            gather(coef, padded, bx, src_by, W);
+            self.transform.forward_batch(coef);
+            quantize_zigzag_batch(coef, &self.qtable, qc);
             if let Some(out) = qcoef.as_mut() {
-                scatter_coef_scan(&s.qc, out, w, bx, dst_by, LANES);
+                scatter_coef_scan(qc, out, w, bx, dst_by, W);
             }
             if let Some(out) = scanned.as_mut() {
-                scatter_scan(&s.qc, out, gw, bx, dst_by, LANES);
+                scatter_scan(qc, out, gw, bx, dst_by, W);
             }
             if let Some((img, rby)) = recon.as_mut() {
-                dequantize_scan_batch(&s.qc, &self.qtable, &mut s.recon);
-                matrix_inverse_lanes(self.decoder.coeffs(), &mut s.recon);
-                scatter_blocks(&s.recon, img, bx, *rby, LANES);
+                dequantize_scan_batch(qc, &self.qtable, recon_b);
+                matrix_inverse_lanes(self.decoder.coeffs(), recon_b);
+                scatter_blocks(recon_b, img, bx, *rby, W);
             }
-            bx += LANES;
+            bx += W;
         }
         // scalar tail: the exact seed-path per-block sequence
         while bx < gw {
@@ -991,15 +1267,38 @@ impl BatchEngine {
         img: &mut GrayImage,
         dst_by: usize,
     ) {
+        match self.width {
+            LANES_WIDE => self.decode_row_w::<LANES_WIDE>(
+                s, qcoef, width, src_by, img, dst_by,
+            ),
+            _ => self.decode_row_w::<LANES>(
+                s, qcoef, width, src_by, img, dst_by,
+            ),
+        }
+    }
+
+    fn decode_row_w<const W: usize>(
+        &self,
+        s: &mut BlockScratch,
+        qcoef: &[f32],
+        width: usize,
+        src_by: usize,
+        img: &mut GrayImage,
+        dst_by: usize,
+    ) where
+        BlockScratch: ScratchLanes<W>,
+    {
         debug_assert!(width % BLOCK == 0);
         let gw = width / BLOCK;
         let mut bx = 0;
-        while bx + LANES <= gw {
-            gather_coef(qcoef, width, bx, src_by, LANES, &mut s.qc);
-            dequantize_batch(&s.qc, &self.qtable, &mut s.recon);
-            matrix_inverse_lanes(self.decoder.coeffs(), &mut s.recon);
-            scatter_blocks(&s.recon, img, bx, dst_by, LANES);
-            bx += LANES;
+        while bx + W <= gw {
+            let (_, recon_b, qc) =
+                <BlockScratch as ScratchLanes<W>>::lanes(s);
+            gather_coef(qcoef, width, bx, src_by, W, qc);
+            dequantize_batch(qc, &self.qtable, recon_b);
+            matrix_inverse_lanes(self.decoder.coeffs(), recon_b);
+            scatter_blocks(recon_b, img, bx, dst_by, W);
+            bx += W;
         }
         while bx < gw {
             load_coef_planar(qcoef, width, bx, src_by, &mut s.qblock);
@@ -1019,9 +1318,9 @@ mod tests {
     use crate::image::synthetic;
     use crate::util::prng::Rng;
 
-    fn rand_batch(seed: u64) -> BlockBatch8 {
+    fn rand_batch_w<const W: usize>(seed: u64) -> BlockBatch<W> {
         let mut rng = Rng::new(seed);
-        let mut b = BlockBatch8::zeroed();
+        let mut b = BlockBatch::<W>::zeroed();
         for e in b.data.iter_mut() {
             for v in e.0.iter_mut() {
                 *v = rng.range_f64(-128.0, 128.0) as f32;
@@ -1029,6 +1328,18 @@ mod tests {
         }
         b
     }
+
+    fn rand_batch(seed: u64) -> BlockBatch8 {
+        rand_batch_w::<LANES>(seed)
+    }
+
+    const ALL_VARIANTS: [Variant; 5] = [
+        Variant::Dct,
+        Variant::Loeffler,
+        Variant::Cordic,
+        Variant::CordicFxp,
+        Variant::Naive,
+    ];
 
     #[test]
     fn lane_extract_insert_roundtrip() {
@@ -1043,12 +1354,7 @@ mod tests {
 
     #[test]
     fn forward_batch_matches_scalar_per_lane() {
-        for variant in [
-            Variant::Dct,
-            Variant::Loeffler,
-            Variant::Cordic,
-            Variant::Naive,
-        ] {
+        for variant in ALL_VARIANTS {
             let bt = BatchTransform::new(variant);
             let scalar = variant.transform();
             let mut batch = rand_batch(7);
@@ -1071,12 +1377,7 @@ mod tests {
 
     #[test]
     fn inverse_batch_matches_scalar_per_lane() {
-        for variant in [
-            Variant::Dct,
-            Variant::Loeffler,
-            Variant::Cordic,
-            Variant::Naive,
-        ] {
+        for variant in ALL_VARIANTS {
             let bt = BatchTransform::new(variant);
             let scalar = variant.transform();
             let mut batch = rand_batch(11);
@@ -1088,6 +1389,30 @@ mod tests {
                 scalar.inverse(&mut want);
                 let got = batch.extract_lane(l);
                 assert_eq!(got[..], want[..], "{} lane {l}", bt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn wide_batch_matches_scalar_per_lane() {
+        // the 16-wide instantiation runs the same per-lane op sequence
+        for variant in ALL_VARIANTS {
+            let bt = BatchTransform::new(variant);
+            let scalar = variant.transform();
+            let mut batch = rand_batch_w::<LANES_WIDE>(13);
+            let blocks: Vec<[f32; 64]> = (0..LANES_WIDE)
+                .map(|l| batch.extract_lane(l))
+                .collect();
+            bt.forward_batch(&mut batch);
+            for (l, blk) in blocks.iter().enumerate() {
+                let mut want = *blk;
+                scalar.forward(&mut want);
+                assert_eq!(
+                    batch.extract_lane(l)[..],
+                    want[..],
+                    "{} wide lane {l} diverged",
+                    bt.name()
+                );
             }
         }
     }
@@ -1219,6 +1544,18 @@ mod tests {
     }
 
     #[test]
+    fn batch_width_parse_and_resolve() {
+        assert_eq!(BatchWidth::parse("auto"), Some(BatchWidth::Auto));
+        assert_eq!(BatchWidth::parse("8"), Some(BatchWidth::W8));
+        assert_eq!(BatchWidth::parse("16"), Some(BatchWidth::W16));
+        assert_eq!(BatchWidth::parse("32"), None);
+        assert_eq!(BatchWidth::W8.resolve(), LANES);
+        assert_eq!(BatchWidth::W16.resolve(), LANES_WIDE);
+        let auto = BatchWidth::Auto.resolve();
+        assert!(auto == LANES || auto == LANES_WIDE);
+    }
+
+    #[test]
     fn engine_row_matches_seed_scalar_sequence() {
         let img = synthetic::cablecar_like(72, 8, 8); // 9 blocks: tail of 1
         let q = effective_qtable(50);
@@ -1265,5 +1602,52 @@ mod tests {
             engine.decode_row(s, &qcoef, 72, 0, &mut decoded, 0);
         });
         assert_eq!(decoded, want_r);
+    }
+
+    #[test]
+    fn wide_engine_rows_bit_identical_to_narrow() {
+        // 18 blocks: W16 runs one 16-batch + 2 scalar tail; W8 runs two
+        // 8-batches + 2 tail — outputs must match bit-for-bit anyway.
+        let img = synthetic::lena_like(144, 8, 3);
+        let q = effective_qtable(50);
+        for variant in ALL_VARIANTS {
+            let mk = |w: BatchWidth| {
+                BatchEngine::with_config(
+                    variant,
+                    q,
+                    EngineConfig {
+                        width: w,
+                        ..EngineConfig::default()
+                    },
+                )
+            };
+            let narrow = mk(BatchWidth::W8);
+            let wide = mk(BatchWidth::W16);
+            assert_eq!(narrow.lane_width(), LANES);
+            assert_eq!(wide.lane_width(), LANES_WIDE);
+            let mut out = Vec::new();
+            for engine in [&narrow, &wide] {
+                let mut qcoef = vec![0.0f32; 144 * 8];
+                let mut scanned = vec![0i16; 144 * 8];
+                let mut recon = GrayImage::new(144, 8);
+                engine.with_scratch(|s| {
+                    engine.forward_quant_row(
+                        s,
+                        &img,
+                        0,
+                        Some(&mut qcoef),
+                        0,
+                        Some(&mut scanned),
+                        Some((&mut recon, 0)),
+                    );
+                });
+                let mut decoded = GrayImage::new(144, 8);
+                engine.with_scratch(|s| {
+                    engine.decode_row(s, &qcoef, 144, 0, &mut decoded, 0);
+                });
+                out.push((qcoef, scanned, recon, decoded));
+            }
+            assert_eq!(out[0], out[1], "{variant:?} widths diverged");
+        }
     }
 }

@@ -25,6 +25,7 @@ use crate::image::color::ColorImage;
 use crate::image::ycbcr::{self, Subsampling};
 use crate::image::GrayImage;
 
+use super::batch::EngineConfig;
 use super::parallel::ParallelCpuPipeline;
 use super::planar::split_ycbcr;
 use super::pipeline::{CpuCompressOutput, CpuPipeline, FusedCompressOutput};
@@ -137,17 +138,31 @@ impl ColorPipeline {
         quality: u8,
         subsampling: Subsampling,
     ) -> Self {
+        Self::new_with(variant, quality, subsampling,
+                       EngineConfig::default())
+    }
+
+    /// Serial-lane color pipeline with an explicit [`EngineConfig`]
+    /// (lane width + fxp precision) applied to both plane pipelines.
+    pub fn new_with(
+        variant: Variant,
+        quality: u8,
+        subsampling: Subsampling,
+        cfg: EngineConfig,
+    ) -> Self {
         ColorPipeline {
             pipes: PlanePipes::Serial {
-                luma: CpuPipeline::with_qtable(
+                luma: CpuPipeline::with_qtable_config(
                     variant,
                     quality,
                     effective_qtable(quality),
+                    cfg,
                 ),
-                chroma: CpuPipeline::with_qtable(
+                chroma: CpuPipeline::with_qtable_config(
                     variant,
                     quality,
                     effective_qtable_chroma(quality),
+                    cfg,
                 ),
             },
             variant,
@@ -163,19 +178,33 @@ impl ColorPipeline {
         subsampling: Subsampling,
         workers: usize,
     ) -> Self {
+        Self::parallel_with(variant, quality, subsampling, workers,
+                            EngineConfig::default())
+    }
+
+    /// Parallel-lane color pipeline with an explicit [`EngineConfig`].
+    pub fn parallel_with(
+        variant: Variant,
+        quality: u8,
+        subsampling: Subsampling,
+        workers: usize,
+        cfg: EngineConfig,
+    ) -> Self {
         ColorPipeline {
             pipes: PlanePipes::Parallel {
-                luma: ParallelCpuPipeline::with_qtable(
+                luma: ParallelCpuPipeline::with_qtable_config(
                     variant,
                     quality,
                     workers,
                     effective_qtable(quality),
+                    cfg,
                 ),
-                chroma: ParallelCpuPipeline::with_qtable(
+                chroma: ParallelCpuPipeline::with_qtable_config(
                     variant,
                     quality,
                     workers,
                     effective_qtable_chroma(quality),
+                    cfg,
                 ),
             },
             variant,

@@ -55,14 +55,21 @@ pub fn fxp(v: f32, frac_bits: u32) -> f32 {
     ((v * s + MAGIC) - MAGIC) / s
 }
 
-/// [`fxp`] applied elementwise to an 8-lane vector — the grid step of the
-/// batched block engine. Pure adds/muls, so the autovectorizer maps it to
-/// vector instructions; per lane it is exactly the scalar `fxp`.
+/// [`fxp`] applied elementwise to a `W`-lane vector — the grid step of
+/// the batched block engine at any lane width. Pure adds/muls, so the
+/// autovectorizer maps it to vector instructions; per lane it is exactly
+/// the scalar `fxp`.
 #[inline]
-pub fn fxp8(v: &mut [f32; 8], frac_bits: u32) {
+pub fn fxp_lanes<const W: usize>(v: &mut [f32; W], frac_bits: u32) {
     for x in v.iter_mut() {
         *x = fxp(*x, frac_bits);
     }
+}
+
+/// [`fxp_lanes`] at the historical 8-lane width.
+#[inline]
+pub fn fxp8(v: &mut [f32; 8], frac_bits: u32) {
+    fxp_lanes(v, frac_bits);
 }
 
 /// One fixed-point CORDIC rotator with gain compensation folded in, in the
@@ -121,56 +128,76 @@ impl Rotator {
         (fxp(x * self.comp, fb), fxp(y * self.comp, fb))
     }
 
-    /// Lane-wide forward rotation: [`Rotator::rotate_cw`] applied to
-    /// eight independent (x, y) pairs at once, micro-rotation-outer /
-    /// lane-inner so every step is an 8-wide add/mul the compiler can
+    /// Lane-wide forward rotation: [`Rotator::rotate_cw`] applied to `W`
+    /// independent (x, y) pairs at once, micro-rotation-outer /
+    /// lane-inner so every step is a `W`-wide add/mul the compiler can
     /// vectorize. Each lane performs the exact scalar op sequence.
     #[inline]
-    pub fn rotate_cw8(&self, x: &mut [f32; 8], y: &mut [f32; 8]) {
+    pub fn rotate_cw_lanes<const W: usize>(
+        &self,
+        x: &mut [f32; W],
+        y: &mut [f32; W],
+    ) {
         let fb = self.frac_bits;
-        fxp8(x, fb);
-        fxp8(y, fb);
+        fxp_lanes(x, fb);
+        fxp_lanes(y, fb);
         for (i, &sigma) in self.plan.sigmas.iter().enumerate() {
             let shift = 2.0f32.powi(-(i as i32));
             let s = sigma as f32;
-            for l in 0..8 {
+            for l in 0..W {
                 let xn = x[l] + s * y[l] * shift;
                 let yn = y[l] - s * x[l] * shift;
                 x[l] = xn;
                 y[l] = yn;
             }
-            fxp8(x, fb);
-            fxp8(y, fb);
+            fxp_lanes(x, fb);
+            fxp_lanes(y, fb);
         }
-        for l in 0..8 {
+        for l in 0..W {
             x[l] = fxp(x[l] * self.comp, fb);
             y[l] = fxp(y[l] * self.comp, fb);
         }
     }
 
-    /// Lane-wide inverse rotation ([`Rotator::rotate_ccw`] across eight
-    /// lanes, same layout as [`Rotator::rotate_cw8`]).
+    /// [`Rotator::rotate_cw_lanes`] at the historical 8-lane width.
     #[inline]
-    pub fn rotate_ccw8(&self, x: &mut [f32; 8], y: &mut [f32; 8]) {
+    pub fn rotate_cw8(&self, x: &mut [f32; 8], y: &mut [f32; 8]) {
+        self.rotate_cw_lanes(x, y);
+    }
+
+    /// Lane-wide inverse rotation ([`Rotator::rotate_ccw`] across `W`
+    /// lanes, same layout as [`Rotator::rotate_cw_lanes`]).
+    #[inline]
+    pub fn rotate_ccw_lanes<const W: usize>(
+        &self,
+        x: &mut [f32; W],
+        y: &mut [f32; W],
+    ) {
         let fb = self.frac_bits;
-        fxp8(x, fb);
-        fxp8(y, fb);
+        fxp_lanes(x, fb);
+        fxp_lanes(y, fb);
         for (i, &sigma) in self.plan.sigmas.iter().enumerate() {
             let shift = 2.0f32.powi(-(i as i32));
             let s = sigma as f32;
-            for l in 0..8 {
+            for l in 0..W {
                 let xn = x[l] - s * y[l] * shift;
                 let yn = y[l] + s * x[l] * shift;
                 x[l] = xn;
                 y[l] = yn;
             }
-            fxp8(x, fb);
-            fxp8(y, fb);
+            fxp_lanes(x, fb);
+            fxp_lanes(y, fb);
         }
-        for l in 0..8 {
+        for l in 0..W {
             x[l] = fxp(x[l] * self.comp_inv, fb);
             y[l] = fxp(y[l] * self.comp_inv, fb);
         }
+    }
+
+    /// [`Rotator::rotate_ccw_lanes`] at the historical 8-lane width.
+    #[inline]
+    pub fn rotate_ccw8(&self, x: &mut [f32; 8], y: &mut [f32; 8]) {
+        self.rotate_ccw_lanes(x, y);
     }
 
     /// Inverse (counterclockwise) fixed-point rotation.

@@ -1,0 +1,608 @@
+//! Integer fixed-point CORDIC-Loeffler DCT — the hardware-oriented
+//! datapath of "Generic-Precision algorithm for DCT-Cordic
+//! architectures" (PAPERS.md), as a precision-parameterized lane.
+//!
+//! Where [`super::cordic_loeffler`] *simulates* fixed-point on f32 (so
+//! the CPU lane matches the Pallas GPU kernel bit-for-bit), this module
+//! runs the real integer datapath: signals live on a Q(`frac_bits`)
+//! grid, each CORDIC micro-rotation is a true shift-add
+//! (`x += s * (y >> i)`), and gain compensation / graph constants are
+//! Q15 multiplies — the multiplier-free rotator structure the
+//! Generic-Precision paper synthesizes, with the precision knob
+//! ([`FxpPrecision`]: micro-rotation count + fraction bits) exposed all
+//! the way up to the CLI (`--variant cordic-fxp --precision N`).
+//!
+//! Lanes are carried in `i32` (the accumulator width; intermediate
+//! butterfly sums exceed the i16 range at full pixel swing) while the
+//! post-normalization outputs and the quantized coefficients fit i16 —
+//! matching a 16-bit hardware datapath with wider adders. The kernel is
+//! width-generic: the scalar [`Transform8x8`] path is the `W = 1`
+//! instantiation of the same lane code, so the batched 8- and 16-wide
+//! paths are bit-identical to scalar by construction. Reconstruction
+//! quality is precision-bound (locked by `tests/fxp_psnr.rs`), not
+//! bit-parity-bound: the integer grid intentionally diverges from the
+//! f32 lanes.
+
+use super::batch::{BlockBatch, LanesN};
+use super::cordic::plan;
+use super::cordic_loeffler::{DEFAULT_FRAC_BITS, DEFAULT_ITERS};
+use super::loeffler::{ANGLE_EVEN, ANGLE_ODD_A, ANGLE_ODD_B};
+use super::Transform8x8;
+
+/// Precision knob of the fixed-point lane: CORDIC micro-rotation count
+/// and fractional bits of the Q grid (the two axes the Generic-Precision
+/// paper sweeps). Defaults match the f32 CORDIC lane calibration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct FxpPrecision {
+    /// CORDIC micro-rotations per rotator (angle accuracy).
+    pub iters: usize,
+    /// Fractional bits of the Q(frac_bits) value grid (magnitude
+    /// accuracy). Capped at 14 so ingest of ±2^11-range DCT signals
+    /// stays clear of the i32 accumulator headroom.
+    pub frac_bits: u32,
+}
+
+impl Default for FxpPrecision {
+    fn default() -> Self {
+        FxpPrecision {
+            iters: DEFAULT_ITERS,
+            frac_bits: DEFAULT_FRAC_BITS,
+        }
+    }
+}
+
+impl FxpPrecision {
+    /// Map the CLI's single `--precision N` level (1..=8) onto both
+    /// axes: N micro-rotations and `2N + 4` fraction bits (capped at
+    /// 14). Level 3 is the default calibration.
+    pub fn from_level(level: u32) -> FxpPrecision {
+        let level = level.clamp(1, 8);
+        FxpPrecision {
+            iters: level as usize,
+            frac_bits: (2 * level + 4).min(14),
+        }
+    }
+
+    /// Clamp to the supported range (used by constructors so a wild
+    /// config cannot overflow the integer datapath).
+    pub fn clamped(self) -> FxpPrecision {
+        FxpPrecision {
+            iters: self.iters.clamp(1, 16),
+            frac_bits: self.frac_bits.clamp(2, 14),
+        }
+    }
+}
+
+const Q15: f64 = 32768.0;
+
+#[inline]
+fn q15(v: f64) -> i32 {
+    (v * Q15).round() as i32
+}
+
+/// Q15 rounding multiply: `round(v * c / 2^15)` with a half-LSB bias
+/// add — the DSP `MPYR` shape.
+#[inline]
+fn mul_q15(v: i32, c: i32) -> i32 {
+    ((v as i64 * c as i64 + (1 << 14)) >> 15) as i32
+}
+
+// -- lane helpers on [i32; W] ------------------------------------------------
+
+#[inline]
+fn ladd<const W: usize>(a: &[i32; W], b: &[i32; W]) -> [i32; W] {
+    let mut out = [0i32; W];
+    for l in 0..W {
+        out[l] = a[l] + b[l];
+    }
+    out
+}
+
+#[inline]
+fn lsub<const W: usize>(a: &[i32; W], b: &[i32; W]) -> [i32; W] {
+    let mut out = [0i32; W];
+    for l in 0..W {
+        out[l] = a[l] - b[l];
+    }
+    out
+}
+
+#[inline]
+fn lmul_q15<const W: usize>(a: &[i32; W], c: i32) -> [i32; W] {
+    let mut out = [0i32; W];
+    for l in 0..W {
+        out[l] = mul_q15(a[l], c);
+    }
+    out
+}
+
+/// Halving on the integer grid (`>> 1`, the hardware wire shift).
+#[inline]
+fn lhalf<const W: usize>(a: &[i32; W]) -> [i32; W] {
+    let mut out = [0i32; W];
+    for l in 0..W {
+        out[l] = a[l] >> 1;
+    }
+    out
+}
+
+/// One integer CORDIC rotator: true shift-add micro-rotations on the Q
+/// grid plus a Q15 gain-compensation multiply per output.
+struct FxpRotator {
+    sigmas: Vec<i8>,
+    comp_q15: i32,
+    comp_inv_q15: i32,
+}
+
+impl FxpRotator {
+    fn new(theta: f64, scale: f64, iters: usize) -> FxpRotator {
+        let p = plan(theta, iters);
+        FxpRotator {
+            comp_q15: q15(scale / p.gain),
+            comp_inv_q15: q15(1.0 / (scale * p.gain)),
+            sigmas: p.sigmas,
+        }
+    }
+
+    /// Forward (clockwise) rotation across `W` lanes.
+    #[inline]
+    fn rotate_cw<const W: usize>(&self, x: &mut [i32; W], y: &mut [i32; W]) {
+        for (i, &sigma) in self.sigmas.iter().enumerate() {
+            let s = sigma as i32;
+            for l in 0..W {
+                let xs = x[l] >> i;
+                let ys = y[l] >> i;
+                x[l] += s * ys;
+                y[l] -= s * xs;
+            }
+        }
+        for l in 0..W {
+            x[l] = mul_q15(x[l], self.comp_q15);
+            y[l] = mul_q15(y[l], self.comp_q15);
+        }
+    }
+
+    /// Inverse (counterclockwise) rotation across `W` lanes.
+    #[inline]
+    fn rotate_ccw<const W: usize>(&self, x: &mut [i32; W], y: &mut [i32; W]) {
+        for (i, &sigma) in self.sigmas.iter().enumerate() {
+            let s = sigma as i32;
+            for l in 0..W {
+                let xs = x[l] >> i;
+                let ys = y[l] >> i;
+                x[l] -= s * ys;
+                y[l] += s * xs;
+            }
+        }
+        for l in 0..W {
+            x[l] = mul_q15(x[l], self.comp_inv_q15);
+            y[l] = mul_q15(y[l], self.comp_inv_q15);
+        }
+    }
+}
+
+/// The three Loeffler rotators plus the graph's Q15 scale constants.
+struct FxpRotors {
+    ra: FxpRotator,
+    rb: FxpRotator,
+    re: FxpRotator,
+    sqrt2_q15: i32,
+    inv_sqrt8_q15: i32,
+    sqrt8_q15: i32,
+    ir2_q15: i32,
+}
+
+impl FxpRotors {
+    fn new(iters: usize) -> FxpRotors {
+        let sqrt2 = std::f64::consts::SQRT_2;
+        FxpRotors {
+            ra: FxpRotator::new(ANGLE_ODD_A, 1.0, iters),
+            rb: FxpRotator::new(ANGLE_ODD_B, 1.0, iters),
+            re: FxpRotator::new(ANGLE_EVEN, sqrt2, iters),
+            sqrt2_q15: q15(sqrt2),
+            inv_sqrt8_q15: q15(1.0 / 8.0f64.sqrt()),
+            sqrt8_q15: q15(8.0f64.sqrt()),
+            ir2_q15: q15(1.0 / sqrt2),
+        }
+    }
+}
+
+#[inline]
+fn rot_cw<const W: usize>(
+    r: &FxpRotator,
+    x: [i32; W],
+    y: [i32; W],
+) -> ([i32; W], [i32; W]) {
+    let (mut a, mut b) = (x, y);
+    r.rotate_cw(&mut a, &mut b);
+    (a, b)
+}
+
+#[inline]
+fn rot_ccw<const W: usize>(
+    r: &FxpRotator,
+    x: [i32; W],
+    y: [i32; W],
+) -> ([i32; W], [i32; W]) {
+    let (mut a, mut b) = (x, y);
+    r.rotate_ccw(&mut a, &mut b);
+    (a, b)
+}
+
+/// Forward 8-point DCT-II on the integer grid — the Loeffler flow graph
+/// of `loeffler::fwd8` with shift-add rotators and Q15 constants.
+fn fwd8_fxp<const W: usize>(
+    r: &FxpRotors,
+    x: &[[i32; W]; 8],
+) -> [[i32; W]; 8] {
+    // stage 1
+    let a0 = ladd(&x[0], &x[7]);
+    let a1 = ladd(&x[1], &x[6]);
+    let a2 = ladd(&x[2], &x[5]);
+    let a3 = ladd(&x[3], &x[4]);
+    let a7 = lsub(&x[0], &x[7]);
+    let a6 = lsub(&x[1], &x[6]);
+    let a5 = lsub(&x[2], &x[5]);
+    let a4 = lsub(&x[3], &x[4]);
+    // stage 2
+    let b0 = ladd(&a0, &a3);
+    let b1 = ladd(&a1, &a2);
+    let b3 = lsub(&a0, &a3);
+    let b2 = lsub(&a1, &a2);
+    let (b4, b7) = rot_cw(&r.ra, a4, a7);
+    let (b5, b6) = rot_cw(&r.rb, a5, a6);
+    // stage 3
+    let x0 = ladd(&b0, &b1);
+    let x4 = lsub(&b0, &b1);
+    let (x2, x6) = rot_cw(&r.re, b2, b3);
+    let c4 = ladd(&b4, &b6);
+    let c6 = lsub(&b4, &b6);
+    let c7 = ladd(&b7, &b5);
+    let c5 = lsub(&b7, &b5);
+    // stage 4
+    let x1 = ladd(&c4, &c7);
+    let x7 = lsub(&c7, &c4);
+    let x3 = lmul_q15(&c5, r.sqrt2_q15);
+    let x5 = lmul_q15(&c6, r.sqrt2_q15);
+    let n = r.inv_sqrt8_q15;
+    [
+        lmul_q15(&x0, n),
+        lmul_q15(&x1, n),
+        lmul_q15(&x2, n),
+        lmul_q15(&x3, n),
+        lmul_q15(&x4, n),
+        lmul_q15(&x5, n),
+        lmul_q15(&x6, n),
+        lmul_q15(&x7, n),
+    ]
+}
+
+/// Inverse of [`fwd8_fxp`] (mirror of `loeffler::inv8` on the grid;
+/// halvings are hardware `>> 1` wire shifts).
+fn inv8_fxp<const W: usize>(
+    r: &FxpRotors,
+    y: &[[i32; W]; 8],
+) -> [[i32; W]; 8] {
+    let s8 = r.sqrt8_q15;
+    let x0 = lmul_q15(&y[0], s8);
+    let x1 = lmul_q15(&y[1], s8);
+    let x2 = lmul_q15(&y[2], s8);
+    let x3 = lmul_q15(&y[3], s8);
+    let x4 = lmul_q15(&y[4], s8);
+    let x5 = lmul_q15(&y[5], s8);
+    let x6 = lmul_q15(&y[6], s8);
+    let x7 = lmul_q15(&y[7], s8);
+    // stage 4 inverse
+    let c4 = lhalf(&lsub(&x1, &x7));
+    let c7 = lhalf(&ladd(&x1, &x7));
+    let c5 = lmul_q15(&x3, r.ir2_q15);
+    let c6 = lmul_q15(&x5, r.ir2_q15);
+    // stage 3 odd inverse
+    let b4 = lhalf(&ladd(&c4, &c6));
+    let b6 = lhalf(&lsub(&c4, &c6));
+    let b7 = lhalf(&ladd(&c7, &c5));
+    let b5 = lhalf(&lsub(&c7, &c5));
+    // stage 3 even inverse
+    let b0 = lhalf(&ladd(&x0, &x4));
+    let b1 = lhalf(&lsub(&x0, &x4));
+    let (b2, b3) = rot_ccw(&r.re, x2, x6);
+    // stage 2 odd inverse
+    let (a4, a7) = rot_ccw(&r.ra, b4, b7);
+    let (a5, a6) = rot_ccw(&r.rb, b5, b6);
+    // stage 2 even inverse
+    let a0 = lhalf(&ladd(&b0, &b3));
+    let a3 = lhalf(&lsub(&b0, &b3));
+    let a1 = lhalf(&ladd(&b1, &b2));
+    let a2 = lhalf(&lsub(&b1, &b2));
+    // stage 1 inverse
+    [
+        lhalf(&ladd(&a0, &a7)),
+        lhalf(&ladd(&a1, &a6)),
+        lhalf(&ladd(&a2, &a5)),
+        lhalf(&ladd(&a3, &a4)),
+        lhalf(&lsub(&a3, &a4)),
+        lhalf(&lsub(&a2, &a5)),
+        lhalf(&lsub(&a1, &a6)),
+        lhalf(&lsub(&a0, &a7)),
+    ]
+}
+
+/// Apply a 1-D integer transform separably (columns then rows), same
+/// shape as `batch::separable_2d_lanes`.
+fn separable_2d_fxp<const W: usize>(
+    r: &FxpRotors,
+    data: &mut [[i32; W]; 64],
+    f: fn(&FxpRotors, &[[i32; W]; 8]) -> [[i32; W]; 8],
+) {
+    // columns
+    for j in 0..8 {
+        let col: [[i32; W]; 8] = std::array::from_fn(|i| data[i * 8 + j]);
+        let out = f(r, &col);
+        for i in 0..8 {
+            data[i * 8 + j] = out[i];
+        }
+    }
+    // rows
+    for i in 0..8 {
+        let row: [[i32; W]; 8] = std::array::from_fn(|j| data[i * 8 + j]);
+        let out = f(r, &row);
+        for j in 0..8 {
+            data[i * 8 + j] = out[j];
+        }
+    }
+}
+
+/// The fixed-point CORDIC-Loeffler transform (`Variant::CordicFxp`):
+/// f32 signals enter/leave once per 2-D transform; both separable
+/// passes run entirely on the integer grid.
+pub struct CordicFxpDct {
+    rotors: FxpRotors,
+    precision: FxpPrecision,
+}
+
+impl CordicFxpDct {
+    pub fn new(precision: FxpPrecision) -> CordicFxpDct {
+        let precision = precision.clamped();
+        CordicFxpDct {
+            rotors: FxpRotors::new(precision.iters),
+            precision,
+        }
+    }
+
+    pub fn precision(&self) -> FxpPrecision {
+        self.precision
+    }
+
+    /// Run one 2-D integer transform over the batch: ingest each lane
+    /// onto the Q grid (round-half-even), run both separable passes in
+    /// i32, egress back to f32 (exact: division by a power of two).
+    #[inline]
+    fn run_lanes<const W: usize>(
+        &self,
+        batch: &mut BlockBatch<W>,
+        f: fn(&FxpRotors, &[[i32; W]; 8]) -> [[i32; W]; 8],
+    ) {
+        let scale = (1i64 << self.precision.frac_bits) as f32;
+        let mut data = [[0i32; W]; 64];
+        for i in 0..64 {
+            for l in 0..W {
+                data[i][l] =
+                    (batch.data[i].0[l] * scale).round_ties_even() as i32;
+            }
+        }
+        separable_2d_fxp(&self.rotors, &mut data, f);
+        let inv = 1.0 / scale;
+        for i in 0..64 {
+            for l in 0..W {
+                batch.data[i].0[l] = data[i][l] as f32 * inv;
+            }
+        }
+    }
+
+    /// Lane-wide forward over a `W`-wide batch (used by
+    /// `batch::BatchTransform`).
+    pub(crate) fn forward_lanes<const W: usize>(
+        &self,
+        batch: &mut BlockBatch<W>,
+    ) {
+        self.run_lanes(batch, fwd8_fxp);
+    }
+
+    /// Lane-wide inverse over a `W`-wide batch.
+    pub(crate) fn inverse_lanes<const W: usize>(
+        &self,
+        batch: &mut BlockBatch<W>,
+    ) {
+        self.run_lanes(batch, inv8_fxp);
+    }
+}
+
+impl Default for CordicFxpDct {
+    fn default() -> Self {
+        Self::new(FxpPrecision::default())
+    }
+}
+
+impl Transform8x8 for CordicFxpDct {
+    fn name(&self) -> &'static str {
+        "cordic-fxp"
+    }
+
+    /// Scalar forward = the `W = 1` instantiation of the lane kernel,
+    /// so batch tails are bit-identical to full batches at any width.
+    fn forward(&self, block: &mut [f32; 64]) {
+        let mut b = BlockBatch::<1>::zeroed();
+        for i in 0..64 {
+            b.data[i] = LanesN([block[i]]);
+        }
+        self.forward_lanes(&mut b);
+        for i in 0..64 {
+            block[i] = b.data[i].0[0];
+        }
+    }
+
+    fn inverse(&self, block: &mut [f32; 64]) {
+        let mut b = BlockBatch::<1>::zeroed();
+        for i in 0..64 {
+            b.data[i] = LanesN([block[i]]);
+        }
+        self.inverse_lanes(&mut b);
+        for i in 0..64 {
+            block[i] = b.data[i].0[0];
+        }
+    }
+
+    fn ops_per_block(&self) -> (usize, usize) {
+        // Same accounting shape as the f32 CORDIC lane: per 1-D pass,
+        // 29 butterfly adds + 2 shift-adds per micro-rotation per
+        // rotator; multiplies are the 8 normalization + 2 sqrt2 + 6
+        // gain-compensation Q15 products.
+        let shift_adds = 3 * self.precision.iters * 2;
+        (16 * 16, 16 * (29 + shift_adds))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dct::matrix::MatrixDct;
+    use crate::util::prng::Rng;
+
+    fn rand_block(seed: u64) -> [f32; 64] {
+        let mut rng = Rng::new(seed);
+        std::array::from_fn(|_| rng.range_f64(-128.0, 128.0) as f32)
+    }
+
+    #[test]
+    fn approximates_exact_dct_at_default_precision() {
+        let c = CordicFxpDct::default();
+        let m = MatrixDct::new();
+        let mut a = rand_block(1);
+        let mut b = a;
+        c.forward(&mut a);
+        m.forward(&mut b);
+        let norm: f32 = b.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let max_err = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 0.3 * norm, "max_err {max_err} norm {norm}");
+        // the approximation must be nonzero (it is an approximation)
+        assert!(max_err > 1e-4);
+    }
+
+    #[test]
+    fn dc_nearly_exact() {
+        // DC path is rotator-free: constant block -> DC = 8 * value
+        let c = CordicFxpDct::default();
+        let mut b = [50.0f32; 64];
+        c.forward(&mut b);
+        assert!((b[0] - 400.0).abs() < 1.0, "DC {}", b[0]);
+        for v in &b[1..] {
+            assert!(v.abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn lanes_match_scalar_bitwise() {
+        // W=8 and W=16 lane paths must equal the scalar (W=1) path
+        // exactly: same integer op sequence per lane.
+        let c = CordicFxpDct::default();
+        for fwd in [true, false] {
+            let mut batch = BlockBatch::<8>::zeroed();
+            let mut wide = BlockBatch::<16>::zeroed();
+            let mut rng = Rng::new(17);
+            let blocks: Vec<[f32; 64]> = (0..8)
+                .map(|_| {
+                    std::array::from_fn(|_| {
+                        rng.range_f64(-128.0, 128.0) as f32
+                    })
+                })
+                .collect();
+            for (l, blk) in blocks.iter().enumerate() {
+                batch.insert_lane(l, blk);
+                wide.insert_lane(l, blk);
+                wide.insert_lane(l + 8, blk);
+            }
+            if fwd {
+                c.forward_lanes(&mut batch);
+                c.forward_lanes(&mut wide);
+            } else {
+                c.inverse_lanes(&mut batch);
+                c.inverse_lanes(&mut wide);
+            }
+            for (l, blk) in blocks.iter().enumerate() {
+                let mut want = *blk;
+                if fwd {
+                    c.forward(&mut want);
+                } else {
+                    c.inverse(&mut want);
+                }
+                assert_eq!(batch.extract_lane(l)[..], want[..]);
+                assert_eq!(wide.extract_lane(l)[..], want[..]);
+                assert_eq!(wide.extract_lane(l + 8)[..], want[..]);
+            }
+        }
+    }
+
+    #[test]
+    fn self_roundtrip_small_error() {
+        let c = CordicFxpDct::default();
+        let orig = rand_block(2);
+        let mut b = orig;
+        c.forward(&mut b);
+        c.inverse(&mut b);
+        for i in 0..64 {
+            assert!(
+                (b[i] - orig[i]).abs() < 3.0,
+                "{i}: {} vs {}",
+                b[i],
+                orig[i]
+            );
+        }
+    }
+
+    #[test]
+    fn higher_precision_tightens_approximation() {
+        let m = MatrixDct::new();
+        let orig = rand_block(4);
+        let mut exact = orig;
+        m.forward(&mut exact);
+        let err = |level: u32| -> f32 {
+            let c = CordicFxpDct::new(FxpPrecision::from_level(level));
+            let mut b = orig;
+            c.forward(&mut b);
+            b.iter()
+                .zip(&exact)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f32>()
+                .sqrt()
+        };
+        assert!(err(6) < err(3));
+        assert!(err(3) < err(1));
+    }
+
+    #[test]
+    fn precision_levels_clamped_and_ordered() {
+        assert_eq!(FxpPrecision::from_level(3), FxpPrecision::default());
+        assert_eq!(
+            FxpPrecision::from_level(0),
+            FxpPrecision::from_level(1)
+        );
+        assert_eq!(
+            FxpPrecision::from_level(99),
+            FxpPrecision::from_level(8)
+        );
+        let lo = FxpPrecision::from_level(1);
+        let hi = FxpPrecision::from_level(8);
+        assert!(lo.iters < hi.iters);
+        assert!(lo.frac_bits < hi.frac_bits);
+        let wild = FxpPrecision {
+            iters: 99,
+            frac_bits: 31,
+        }
+        .clamped();
+        assert!(wild.iters <= 16 && wild.frac_bits <= 14);
+    }
+}

@@ -11,6 +11,9 @@
 //! * [`loeffler`] — Loeffler flow graph, exact rotations (11 mult/1-D)
 //! * [`cordic_loeffler`] — the paper's subject: Loeffler with fixed-point
 //!   CORDIC shift-add rotators (paper Fig. 1)
+//! * [`cordic_fxp`] — integer fixed-point CORDIC-Loeffler: i32 shift-add
+//!   datapath with a runtime precision knob (micro-rotations + fraction
+//!   bits, after the Generic-Precision DCT-CORDIC design)
 //!
 //! [`pipeline`] is the serial one-thread lane exactly as the paper ran it;
 //! [`parallel`] fans the same arithmetic over row-band tiles and worker
@@ -18,9 +21,9 @@
 //! [`color`] orchestrates either lane once per YCbCr plane (luma/chroma
 //! quantization tables, 4:4:4/4:2:2/4:2:0 chroma subsampling) for the
 //! color workload. Both CPU lanes execute their block loops on
-//! [`batch`] — the 8-wide lane-major SoA engine (one block per SIMD
-//! lane, bit-identical to the scalar sequence; the CPU mirror of the
-//! GPU's thread-per-block mapping).
+//! [`batch`] — the width-generic lane-major SoA engine (8- or 16-wide,
+//! one block per SIMD lane, bit-identical to the scalar sequence at
+//! either width; the CPU mirror of the GPU's thread-per-block mapping).
 //!
 //! All implementations produce *orthonormally scaled* coefficients so they
 //! are interchangeable in front of [`quant`] and bit-compatible with the
@@ -31,6 +34,7 @@ pub mod batch;
 pub mod blocks;
 pub mod color;
 pub mod cordic;
+pub mod cordic_fxp;
 pub mod cordic_loeffler;
 pub mod loeffler;
 pub mod matrix;
@@ -63,6 +67,9 @@ pub enum Variant {
     Loeffler,
     /// Cordic-based Loeffler (the paper's proposed algorithm).
     Cordic,
+    /// Integer fixed-point CORDIC-Loeffler (shift-add i32 datapath,
+    /// precision-parameterized; approximate — PSNR-bound, not bit-exact).
+    CordicFxp,
     /// Textbook direct 2-D DCT (only used as a baseline/ablation).
     Naive,
 }
@@ -75,6 +82,9 @@ impl Variant {
             "cordic" | "cordic-loeffler" | "cordic_loeffler" => {
                 Some(Variant::Cordic)
             }
+            "cordic-fxp" | "cordic_fxp" | "fxp" => {
+                Some(Variant::CordicFxp)
+            }
             "naive" | "direct" => Some(Variant::Naive),
             _ => None,
         }
@@ -85,6 +95,7 @@ impl Variant {
             Variant::Dct => "dct",
             Variant::Loeffler => "loeffler",
             Variant::Cordic => "cordic",
+            Variant::CordicFxp => "cordic-fxp",
             Variant::Naive => "naive",
         }
     }
@@ -96,6 +107,9 @@ impl Variant {
             Variant::Loeffler => Box::new(loeffler::LoefflerDct::new()),
             Variant::Cordic => {
                 Box::new(cordic_loeffler::CordicLoefflerDct::default())
+            }
+            Variant::CordicFxp => {
+                Box::new(cordic_fxp::CordicFxpDct::default())
             }
             Variant::Naive => Box::new(naive::NaiveDct::new()),
         }
@@ -143,14 +157,17 @@ mod tests {
     fn variant_parse() {
         assert_eq!(Variant::parse("DCT"), Some(Variant::Dct));
         assert_eq!(Variant::parse("cordic-loeffler"), Some(Variant::Cordic));
+        assert_eq!(Variant::parse("cordic-fxp"), Some(Variant::CordicFxp));
+        assert_eq!(Variant::parse("fxp"), Some(Variant::CordicFxp));
         assert_eq!(Variant::parse("x"), None);
         assert_eq!(Variant::Cordic.as_str(), "cordic");
+        assert_eq!(Variant::CordicFxp.as_str(), "cordic-fxp");
     }
 
     #[test]
     fn all_variants_instantiate() {
         for v in [Variant::Dct, Variant::Loeffler, Variant::Cordic,
-                  Variant::Naive] {
+                  Variant::CordicFxp, Variant::Naive] {
             let t = v.transform();
             assert!(!t.name().is_empty());
         }

@@ -23,7 +23,7 @@
 use crate::codec::encoder::ScanCoefs;
 use crate::image::GrayImage;
 
-use super::batch::BatchEngine;
+use super::batch::{BatchEngine, EngineConfig};
 use super::blocks::{self, grid_dims, pad_to_blocks};
 use super::pipeline::{CpuCompressOutput, FusedCompressOutput};
 use super::quant::effective_qtable;
@@ -54,6 +54,22 @@ impl ParallelCpuPipeline {
         )
     }
 
+    /// Pipeline with an explicit [`EngineConfig`] (lane width + fxp
+    /// precision) and the machine-default worker count.
+    pub fn with_config(
+        variant: Variant,
+        quality: u8,
+        cfg: EngineConfig,
+    ) -> Self {
+        Self::with_qtable_config(
+            variant,
+            quality,
+            0,
+            effective_qtable(quality),
+            cfg,
+        )
+    }
+
     /// Pipeline with an explicit worker count and effective quantization
     /// table (the color path passes the chroma table for Cb/Cr planes).
     pub fn with_qtable(
@@ -62,13 +78,31 @@ impl ParallelCpuPipeline {
         workers: usize,
         qtable: [f32; 64],
     ) -> Self {
+        Self::with_qtable_config(
+            variant,
+            quality,
+            workers,
+            qtable,
+            EngineConfig::default(),
+        )
+    }
+
+    /// Explicit worker count, table *and* engine config — the fully
+    /// general ctor all the others delegate to.
+    pub fn with_qtable_config(
+        variant: Variant,
+        quality: u8,
+        workers: usize,
+        qtable: [f32; 64],
+        cfg: EngineConfig,
+    ) -> Self {
         let workers = if workers == 0 {
             ThreadPool::default_size()
         } else {
             workers
         };
         ParallelCpuPipeline {
-            engine: BatchEngine::new(variant, qtable),
+            engine: BatchEngine::with_config(variant, qtable, cfg),
             variant,
             quality,
             workers,

@@ -16,7 +16,7 @@
 use crate::codec::encoder::ScanCoefs;
 use crate::image::GrayImage;
 
-use super::batch::BatchEngine;
+use super::batch::{BatchEngine, EngineConfig};
 use super::blocks::{grid_dims, pad_to_blocks};
 use super::quant::effective_qtable;
 use super::Variant;
@@ -61,6 +61,21 @@ impl CpuPipeline {
         Self::with_qtable(variant, quality, effective_qtable(quality))
     }
 
+    /// Pipeline with an explicit [`EngineConfig`] (lane width + fxp
+    /// precision); [`CpuPipeline::new`] uses the defaults.
+    pub fn with_config(
+        variant: Variant,
+        quality: u8,
+        cfg: EngineConfig,
+    ) -> Self {
+        Self::with_qtable_config(
+            variant,
+            quality,
+            effective_qtable(quality),
+            cfg,
+        )
+    }
+
     /// Pipeline dividing by an explicit effective table — the color path
     /// passes the chroma table here; [`CpuPipeline::new`] uses luma.
     pub fn with_qtable(
@@ -68,8 +83,24 @@ impl CpuPipeline {
         quality: u8,
         qtable: [f32; 64],
     ) -> Self {
+        Self::with_qtable_config(
+            variant,
+            quality,
+            qtable,
+            EngineConfig::default(),
+        )
+    }
+
+    /// Explicit table *and* engine config — the fully general ctor all
+    /// the others delegate to.
+    pub fn with_qtable_config(
+        variant: Variant,
+        quality: u8,
+        qtable: [f32; 64],
+        cfg: EngineConfig,
+    ) -> Self {
         CpuPipeline {
-            engine: BatchEngine::new(variant, qtable),
+            engine: BatchEngine::with_config(variant, qtable, cfg),
             variant,
             quality,
         }

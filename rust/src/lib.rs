@@ -56,11 +56,16 @@
 //!   subsampling, synthetic test-image generators (the Lena / Cable-car
 //!   stand-ins, gray and colorized), resize, histogram equalization.
 //! * [`dct`] — the transform substrate: naive / matrix / Loeffler /
-//!   Cordic-based-Loeffler 8x8 DCTs, JPEG quantization (luma + chroma
-//!   tables), block management, the serial + block-parallel CPU pipelines
-//!   and the per-plane color pipeline. Both CPU lanes run their block
-//!   loops on [`dct::batch`], the 8-wide lane-major SoA engine
-//!   (bit-identical to the scalar sequence, one block per SIMD lane).
+//!   Cordic-based-Loeffler / fixed-point `cordic-fxp` 8x8 DCTs, JPEG
+//!   quantization (luma + chroma tables), block management, the serial +
+//!   block-parallel CPU pipelines and the per-plane color pipeline. Both
+//!   CPU lanes run their block loops on [`dct::batch`], the
+//!   width-generic lane-major SoA engine (8- or 16-wide, dispatched per
+//!   engine via [`dct::batch::BatchWidth`]; bit-identical to the scalar
+//!   sequence at either width, one block per SIMD lane). The
+//!   [`dct::cordic_fxp`] variant is the one approximate lane: an i32
+//!   shift-add CORDIC datapath with configurable precision, PSNR-bound
+//!   rather than bit-parity-bound.
 //! * [`codec`] — a complete entropy codec (zigzag, DC-DPCM + AC-RLE,
 //!   canonical Huffman, bitstream container) turning quantized
 //!   coefficients into a real compressed file format; `CDC1` grayscale

@@ -3,6 +3,7 @@
 //! ```text
 //! cordic-dct compress   --input img.png --output out.cdc [--variant cordic]
 //!                       [--color --chroma 420] [--lane gpu]
+//!                       [--batch-width auto|8|16] [--precision N]
 //! cordic-dct decompress --input out.cdc --output back.png
 //! cordic-dct serve      --requests 64 --scene lena --lane auto [--color]
 //!                       [--stub-gpu]
@@ -31,7 +32,9 @@ use anyhow::{bail, Context, Result};
 
 use cordic_dct::codec::{self, color as color_codec, decoder, encoder};
 use cordic_dct::coordinator::{Backpressure, Lane, Service, ServiceConfig};
+use cordic_dct::dct::batch::{BatchWidth, EngineConfig};
 use cordic_dct::dct::color::ColorPipeline;
+use cordic_dct::dct::cordic_fxp::FxpPrecision;
 use cordic_dct::dct::pipeline::CpuPipeline;
 use cordic_dct::dct::Variant;
 use cordic_dct::image::ycbcr::Subsampling;
@@ -100,8 +103,34 @@ fn print_usage() {
 }
 
 fn parse_variant(s: &str) -> Result<Variant> {
-    Variant::parse(s)
-        .with_context(|| format!("unknown variant '{s}' (dct | loeffler | cordic | naive)"))
+    Variant::parse(s).with_context(|| {
+        format!(
+            "unknown variant '{s}' \
+             (dct | loeffler | cordic | cordic-fxp | naive)"
+        )
+    })
+}
+
+fn parse_batch_width(s: &str) -> Result<BatchWidth> {
+    BatchWidth::parse(s).with_context(|| {
+        format!("unknown batch width '{s}' (auto | 8 | 16)")
+    })
+}
+
+/// Build the batch-engine configuration from the shared
+/// `--batch-width` / `--precision` options. `--precision 0` keeps the
+/// fixed-point default; levels 1..=8 map through
+/// [`FxpPrecision::from_level`].
+fn engine_config(m: &cordic_dct::util::cli::Matches) -> Result<EngineConfig> {
+    let width = parse_batch_width(m.get("batch-width"))?;
+    let level = m.get_usize("precision")?;
+    anyhow::ensure!(level <= 8, "--precision takes a level 0..=8");
+    let precision = if level == 0 {
+        FxpPrecision::default()
+    } else {
+        FxpPrecision::from_level(level as u32)
+    };
+    Ok(EngineConfig { width, precision })
 }
 
 fn parse_lane(s: &str) -> Result<Lane> {
@@ -151,10 +180,16 @@ fn cmd_compress(args: &[String]) -> Result<()> {
     let m = Command::new("compress", "compress an image to .cdc")
         .opt_req("input", "input image (.pgm/.ppm/.bmp/.png)")
         .opt_req("output", "output .cdc path")
-        .opt("variant", "cordic", "transform: dct|loeffler|cordic|naive")
+        .opt("variant", "cordic",
+             "transform: dct|loeffler|cordic|cordic-fxp|naive")
         .opt("quality", "50", "IJG quality 1..100")
         .opt("lane", "cpu", "cpu|gpu (gpu falls back to the stub backend \
                              without artifacts)")
+        .opt("batch-width", "auto",
+             "CPU batch lane width: auto|8|16 (auto honours \
+              CORDIC_DCT_BATCH_WIDTH, else detects)")
+        .opt("precision", "0",
+             "cordic-fxp precision level 1..8 (0 = library default)")
         .opt("recon", "", "also write the reconstruction here")
         .flag("color", "keep RGB and write a CDC3 color container")
         .opt("chroma", "420", "chroma subsampling for --color: 444|422|420")
@@ -163,13 +198,14 @@ fn cmd_compress(args: &[String]) -> Result<()> {
     let variant = parse_variant(m.get("variant"))?;
     let quality = m.get_usize("quality")? as u8;
     let lane = parse_lane(m.get("lane"))?;
+    let engine = engine_config(&m)?;
     anyhow::ensure!(
         matches!(lane, Lane::Cpu | Lane::Gpu),
         "compress supports --lane cpu|gpu; use `serve` for the \
          cpu-parallel and auto lanes"
     );
     if m.flag("color") {
-        return compress_color_file(&m, variant, quality, lane);
+        return compress_color_file(&m, variant, quality, lane, engine);
     }
     let img = GrayImage::load(m.get("input"))?;
     let t0 = Instant::now();
@@ -182,7 +218,8 @@ fn cmd_compress(args: &[String]) -> Result<()> {
             (out.recon, out.scanned, quality)
         }
         _ => {
-            let out = CpuPipeline::new(variant, quality).compress(&img);
+            let out = CpuPipeline::with_config(variant, quality, engine)
+                .compress(&img);
             (out.recon, out.scanned, quality)
         }
     };
@@ -225,6 +262,7 @@ fn compress_color_file(
     variant: Variant,
     quality: u8,
     lane: Lane,
+    engine: EngineConfig,
 ) -> Result<()> {
     let img = ColorImage::load(m.get("input"))?;
     let chroma = parse_chroma(m.get("chroma"))?;
@@ -238,8 +276,8 @@ fn compress_color_file(
             (out.recon, out.scanned, quality)
         }
         _ => {
-            let out =
-                ColorPipeline::new(variant, quality, chroma).compress(&img);
+            let out = ColorPipeline::new_with(variant, quality, chroma, engine)
+                .compress(&img);
             (out.recon, out.scanned, quality)
         }
     };
@@ -344,6 +382,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("workers", "0", "worker threads (0 = machine default)")
         .opt("par-workers", "0",
              "threads per cpu-parallel job (0 = machine default)")
+        .opt("batch-width", "auto",
+             "CPU batch lane width: auto|8|16 (auto honours \
+              CORDIC_DCT_BATCH_WIDTH, else detects)")
+        .opt("precision", "0",
+             "cordic-fxp precision level 1..8 (0 = library default)")
         .opt("queue", "256", "queue capacity")
         .opt("batch", "8", "gpu max batch")
         .opt("artifacts", "artifacts", "artifact dir ('' disables GPU lane)")
@@ -374,6 +417,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         cfg.workers = workers;
     }
     cfg.cpu_parallel_workers = m.get_usize("par-workers")?;
+    let engine = engine_config(&m)?;
+    cfg.batch_width = engine.width;
+    cfg.precision = engine.precision;
     cfg.batch.gpu_max_batch = m.get_usize("batch")?;
     let adir = m.get("artifacts");
     cfg.artifact_dir =

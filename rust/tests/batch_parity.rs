@@ -1,7 +1,10 @@
-//! Batched-engine parity suite: the 8-wide lane-major SoA engine behind
-//! both CPU lanes must be *bit-identical* — `qcoef` and reconstruction —
-//! to the seed one-block-at-a-time scalar path, for every transform
-//! variant, quality, odd/non-multiple-of-8 size, gray and color.
+//! Batched-engine parity suite: the width-generic lane-major SoA engine
+//! behind both CPU lanes must be *bit-identical* — `qcoef` and
+//! reconstruction — to the seed one-block-at-a-time scalar path, for
+//! every transform variant (including the integer cordic-fxp lane,
+//! whose scalar path is the W=1 instantiation of the same kernel),
+//! quality, odd/non-multiple-of-8 size, gray and color — at both the
+//! 8-wide and the 16-wide lane width.
 //!
 //! The reference below is a transliteration of the pre-batch pipeline:
 //! `extract_block -> Box<dyn Transform8x8>::forward -> quantize_block ->
@@ -9,8 +12,8 @@
 //! store_block`, one block at a time.
 
 use cordic_dct::dct::batch::{
-    gather, gather_coef, scatter_blocks, scatter_coef, BlockBatch8, QBatch8,
-    LANES,
+    gather, gather_coef, scatter_blocks, scatter_coef, BatchWidth,
+    BlockBatch8, EngineConfig, QBatch8, LANES,
 };
 use cordic_dct::dct::blocks::{
     extract_block, grid_dims, pad_to_blocks, store_block, store_coef_planar,
@@ -28,9 +31,22 @@ use cordic_dct::image::ycbcr::{self, Subsampling};
 use cordic_dct::image::{synthetic, GrayImage};
 use cordic_dct::util::proptest::{check, gen};
 
-const VARIANTS: [Variant; 3] =
-    [Variant::Dct, Variant::Loeffler, Variant::Cordic];
+const VARIANTS: [Variant; 4] = [
+    Variant::Dct,
+    Variant::Loeffler,
+    Variant::Cordic,
+    Variant::CordicFxp,
+];
 const QUALITIES: [u8; 3] = [10, 50, 90];
+
+/// Explicit per-width engine configs for the cross-width tests (never
+/// `Auto`, which could resolve to either width on a given runner).
+fn width_cfg(width: BatchWidth) -> EngineConfig {
+    EngineConfig {
+        width,
+        ..EngineConfig::default()
+    }
+}
 
 /// Sizes exercising aligned, odd, tiny and tail-heavy block grids
 /// (grid widths 8, 4, 3, 1, 9, 13 — full batches, pure tails, and
@@ -305,4 +321,112 @@ fn naive_variant_also_bit_identical() {
     let out = CpuPipeline::new(Variant::Naive, 50).compress(&img);
     assert_eq!(out.qcoef, ref_q);
     assert_eq!(out.recon, ref_r);
+}
+
+#[test]
+fn wide_gray_bit_identical_to_reference_and_narrow() {
+    // 16-wide engine vs the seed scalar reference AND the 8-wide engine,
+    // on grids exercising full 16-batches, pure tails (gw < 16), and
+    // full-batch + tail mixes: gw 17, 13, 4, 32.
+    for variant in VARIANTS {
+        for (i, &(w, h)) in
+            [(136, 16), (100, 24), (30, 21), (256, 8)].iter().enumerate()
+        {
+            let img = synthetic::cablecar_like(w, h, i as u64 + 7);
+            let qt = effective_qtable(50);
+            let (ref_q, ref_r, pw, ph) =
+                reference_compress(variant, &qt, &img);
+            let label = format!("{} {w}x{h}", variant.as_str());
+
+            let narrow =
+                CpuPipeline::with_config(variant, 50, width_cfg(BatchWidth::W8))
+                    .compress(&img);
+            assert_eq!(narrow.qcoef, ref_q, "w8 qcoef {label}");
+            assert_eq!(narrow.recon, ref_r, "w8 recon {label}");
+
+            let wide = CpuPipeline::with_config(
+                variant,
+                50,
+                width_cfg(BatchWidth::W16),
+            )
+            .compress(&img);
+            assert_eq!(wide.qcoef, ref_q, "w16 qcoef {label}");
+            assert_eq!(wide.recon, ref_r, "w16 recon {label}");
+            assert_eq!(
+                (wide.padded_width, wide.padded_height),
+                (pw, ph),
+                "w16 dims {label}"
+            );
+
+            let par = ParallelCpuPipeline::with_qtable_config(
+                variant,
+                50,
+                3,
+                effective_qtable(50),
+                width_cfg(BatchWidth::W16),
+            )
+            .compress(&img);
+            assert_eq!(par.qcoef, ref_q, "w16 parallel qcoef {label}");
+            assert_eq!(par.recon, ref_r, "w16 parallel recon {label}");
+
+            // decode half alone through the wide engine
+            let dec = CpuPipeline::with_config(
+                variant,
+                50,
+                width_cfg(BatchWidth::W16),
+            )
+            .decode_coefficients(&ref_q, pw, ph, w, h);
+            assert_eq!(dec, ref_r, "w16 decode {label}");
+        }
+    }
+}
+
+#[test]
+fn wide_color_bit_identical_to_narrow() {
+    // color path (luma + subsampled chroma planes) through explicit
+    // 8-wide and 16-wide engines on both CPU lanes: everything the
+    // compress output carries must agree bit-for-bit
+    for variant in VARIANTS {
+        let img = synthetic::lena_like_rgb(100, 42, 11);
+        let narrow = ColorPipeline::new_with(
+            variant,
+            50,
+            Subsampling::S420,
+            width_cfg(BatchWidth::W8),
+        )
+        .compress(&img);
+        for (lane, pipe) in [
+            (
+                "serial",
+                ColorPipeline::new_with(
+                    variant,
+                    50,
+                    Subsampling::S420,
+                    width_cfg(BatchWidth::W16),
+                ),
+            ),
+            (
+                "parallel",
+                ColorPipeline::parallel_with(
+                    variant,
+                    50,
+                    Subsampling::S420,
+                    3,
+                    width_cfg(BatchWidth::W16),
+                ),
+            ),
+        ] {
+            let wide = pipe.compress(&img);
+            let label = format!("{lane} {}", variant.as_str());
+            for (p, (wp, np)) in
+                wide.planes.iter().zip(narrow.planes.iter()).enumerate()
+            {
+                assert_eq!(wp.qcoef, np.qcoef, "plane {p} qcoef {label}");
+            }
+            assert_eq!(wide.recon_y, narrow.recon_y, "recon Y {label}");
+            assert_eq!(wide.recon_cb, narrow.recon_cb, "recon Cb {label}");
+            assert_eq!(wide.recon_cr, narrow.recon_cr, "recon Cr {label}");
+            assert_eq!(wide.recon, narrow.recon, "recon RGB {label}");
+        }
+    }
 }

@@ -1,0 +1,142 @@
+//! Quality acceptance for the integer fixed-point CORDIC-Loeffler lane
+//! (`Variant::CordicFxp`). Unlike the f32 lanes, the fxp transform is
+//! *not* bit-parity-bound to an exact reference — its accuracy is a
+//! function of `FxpPrecision` — so this suite locks behaviour with
+//! PSNR floors instead:
+//!
+//! * at the default precision the lane must track the float CORDIC
+//!   pipeline it is calibrated against (relative floor), and clear a
+//!   conservative absolute floor;
+//! * across the `--precision` sweep, quality must be monotone in the
+//!   level up to a small slack, and high levels must stay close to the
+//!   default-level figure;
+//! * a CordicFxp-tagged CDC1 container must round-trip through the
+//!   entropy codec and decode back to the pipeline's exact recon.
+//!
+//! Floors are deliberately loose (several dB of headroom) — they exist
+//! to catch structural breakage (wrong shift, lost compensation step,
+//! overflow), not to pin the third decimal of a PSNR figure.
+
+use cordic_dct::codec::{decoder, encoder, tag_variant, variant_tag, Header};
+use cordic_dct::dct::batch::EngineConfig;
+use cordic_dct::dct::cordic_fxp::FxpPrecision;
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::synthetic;
+use cordic_dct::metrics;
+
+const QUALITY: u8 = 50;
+
+fn fxp_pipeline(precision: FxpPrecision) -> CpuPipeline {
+    CpuPipeline::with_config(
+        Variant::CordicFxp,
+        QUALITY,
+        EngineConfig {
+            precision,
+            ..EngineConfig::default()
+        },
+    )
+}
+
+fn psnr_at(precision: FxpPrecision) -> f64 {
+    let img = synthetic::lena_like(64, 64, 1);
+    let out = fxp_pipeline(precision).compress(&img);
+    metrics::psnr(&img, &out.recon)
+}
+
+#[test]
+fn default_precision_tracks_float_cordic() {
+    let img = synthetic::lena_like(64, 64, 1);
+    let float_cordic = CpuPipeline::new(Variant::Cordic, QUALITY);
+    let p_float = metrics::psnr(&img, &float_cordic.compress(&img).recon);
+    let p_fxp = psnr_at(FxpPrecision::default());
+    // the default fxp calibration mirrors the float CORDIC lane's
+    // (same micro-rotation count and grid), so it must land within a
+    // couple of dB of it — and stay usable in absolute terms
+    assert!(
+        p_fxp >= p_float - 2.0,
+        "fxp default {p_fxp:.2} dB vs float cordic {p_float:.2} dB"
+    );
+    assert!(p_fxp >= 20.0, "fxp default PSNR too low: {p_fxp:.2} dB");
+}
+
+#[test]
+fn precision_sweep_is_monotone_with_slack() {
+    let levels = [1u32, 2, 3, 4, 6, 8];
+    let psnrs: Vec<f64> = levels
+        .iter()
+        .map(|&l| psnr_at(FxpPrecision::from_level(l)))
+        .collect();
+    for (i, &p) in psnrs.iter().enumerate() {
+        assert!(
+            p.is_finite() && p > 5.0,
+            "level {} PSNR degenerate: {p:.2} dB",
+            levels[i]
+        );
+    }
+    // more iterations + fraction bits must not make things much worse:
+    // allow a small slack for plateau noise once the curve saturates
+    for w in psnrs.windows(2) {
+        assert!(
+            w[1] >= w[0] - 2.5,
+            "precision sweep not monotone: {psnrs:.2?}"
+        );
+    }
+    // the top of the sweep must be at least as good (minus slack) as
+    // the default calibration — extra precision can't cost quality
+    let p_default = psnr_at(FxpPrecision::default());
+    let p_top = *psnrs.last().unwrap();
+    assert!(
+        p_top >= p_default - 1.0,
+        "level 8 {p_top:.2} dB far below default {p_default:.2} dB"
+    );
+}
+
+#[test]
+fn per_level_floors() {
+    // conservative structural floors per CLI level: even the coarsest
+    // usable settings must beat these on the 64x64 synthetic scene
+    for (level, floor) in [(2u32, 8.0f64), (3, 18.0), (6, 18.0), (8, 18.0)]
+    {
+        let p = psnr_at(FxpPrecision::from_level(level));
+        assert!(
+            p >= floor,
+            "level {level}: {p:.2} dB below floor {floor} dB"
+        );
+    }
+}
+
+#[test]
+fn fxp_container_roundtrip_is_bit_exact() {
+    // a CordicFxp-tagged CDC1 container must survive the entropy codec
+    // and decode to the pipeline's exact reconstruction — the fxp lane
+    // is approximate at the transform, never at the container
+    let img = synthetic::cablecar_like(72, 40, 3);
+    let pipe = fxp_pipeline(FxpPrecision::default());
+    let (qcoef, pw, ph) = pipe.analyze(&img);
+    let header = Header {
+        width: img.width as u32,
+        height: img.height as u32,
+        padded_width: pw as u32,
+        padded_height: ph as u32,
+        quality: QUALITY,
+        variant: variant_tag(Variant::CordicFxp),
+    };
+    let bytes = encoder::encode(&header, &qcoef).unwrap();
+    let dec = decoder::decode(&bytes).unwrap();
+    assert_eq!(
+        tag_variant(dec.header.variant).unwrap(),
+        Variant::CordicFxp,
+        "variant tag must round-trip"
+    );
+    assert_eq!(dec.qcoef_planar, qcoef, "coefficients must round-trip");
+    let decoded = pipe.decode_coefficients(
+        &dec.qcoef_planar,
+        dec.header.padded_width as usize,
+        dec.header.padded_height as usize,
+        dec.header.width as usize,
+        dec.header.height as usize,
+    );
+    let direct = pipe.compress(&img).recon;
+    assert_eq!(decoded, direct, "container decode must match direct recon");
+}

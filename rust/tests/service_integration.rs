@@ -19,6 +19,7 @@ fn config(workers: usize, gpu: bool) -> ServiceConfig {
         quality: 50,
         artifact_dir: gpu.then(|| "artifacts".into()),
         stub_gpu: false,
+        ..ServiceConfig::default()
     }
 }
 

@@ -10,6 +10,12 @@
 //!   purely line-based extraction — so CI can diff it.
 //! * `doc-md --check` — regenerate in memory and fail (exit 1) if any
 //!   committed `docs/api/*.md` is stale. CI runs this on every PR.
+//! * `bench-compare --baseline a.json --current b.json
+//!   [--max-regress 15]` — compare the key hot-path rows of two
+//!   `microbench_hotpath` JSON documents and fail (exit 1) when any
+//!   key row's `cpu_ms` median regressed by more than the threshold,
+//!   or when a key row is missing from either side. CI's perf-trend
+//!   job runs this against the committed `bench-baselines/` snapshot.
 //!
 //! The extractor is deliberately line-based, not a parser: it takes the
 //! leading `//!` paragraph of each file as the module summary and every
@@ -43,12 +49,17 @@ fn main() {
             let check = args.iter().any(|a| a == "--check");
             doc_md(check)
         }
+        Some("bench-compare") => bench_compare_cli(&args[1..]),
         _ => {
             eprintln!(
                 "usage: cargo xtask doc-md [--check]\n\
+                 \x20      cargo xtask bench-compare --baseline a.json \
+                 --current b.json [--max-regress 15]\n\
                  \n\
                  doc-md          render docs/api/*.md from rust/src\n\
-                 doc-md --check  fail if the rendered docs are stale"
+                 doc-md --check  fail if the rendered docs are stale\n\
+                 bench-compare   fail if a key hot-path bench row \
+                 regressed past the threshold"
             );
             2
         }
@@ -107,6 +118,199 @@ fn doc_md(check: bool) -> i32 {
         println!("doc-md --check: docs/api is up to date");
     }
     0
+}
+
+// -- bench-compare -----------------------------------------------------------
+
+/// The `microbench_hotpath` rows the perf-trend gate watches: the
+/// paper's batched cordic transform, the fused quantize→zigzag stage,
+/// and the entropy decoder. Informational rows (16-wide figures, PJRT
+/// splits) are deliberately not gated.
+const KEY_LABELS: [&str; 3] = [
+    "fwd cordic-loeffler batched",
+    "quantize+zigzag batched",
+    "entropy decode image",
+];
+
+/// One gated row after comparison.
+struct Comparison {
+    label: String,
+    baseline_ms: f64,
+    current_ms: f64,
+}
+
+impl Comparison {
+    fn ratio(&self) -> f64 {
+        self.current_ms / self.baseline_ms
+    }
+
+    fn regressed(&self, max_regress_pct: f64) -> bool {
+        self.ratio() > 1.0 + max_regress_pct / 100.0
+    }
+}
+
+fn bench_compare_cli(args: &[String]) -> i32 {
+    let mut baseline: Option<String> = None;
+    let mut current: Option<String> = None;
+    let mut max_regress = 15.0f64;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let mut take = |name: &str| {
+            it.next()
+                .cloned()
+                .ok_or_else(|| format!("--{name} needs a value"))
+        };
+        let r = match a.as_str() {
+            "--baseline" => take("baseline").map(|v| baseline = Some(v)),
+            "--current" => take("current").map(|v| current = Some(v)),
+            "--max-regress" => take("max-regress").and_then(|v| {
+                v.parse::<f64>()
+                    .map(|p| max_regress = p)
+                    .map_err(|_| format!("bad --max-regress '{v}'"))
+            }),
+            other => Err(format!("unknown argument '{other}'")),
+        };
+        if let Err(e) = r {
+            eprintln!("bench-compare: {e}");
+            return 2;
+        }
+    }
+    let (Some(baseline), Some(current)) = (baseline, current) else {
+        eprintln!("bench-compare: --baseline and --current are required");
+        return 2;
+    };
+    let read = |path: &str| {
+        std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {path}: {e}"))
+    };
+    let (base_doc, cur_doc) = match (read(&baseline), read(&current)) {
+        (Ok(b), Ok(c)) => (b, c),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("bench-compare: {e}");
+            return 1;
+        }
+    };
+    match compare_docs(&base_doc, &cur_doc, max_regress) {
+        Err(e) => {
+            eprintln!("bench-compare: {e}");
+            1
+        }
+        Ok(rows) => {
+            let mut failed = false;
+            for c in &rows {
+                let pct = (c.ratio() - 1.0) * 100.0;
+                let regressed = c.regressed(max_regress);
+                println!(
+                    "{:<28} baseline {:>9.3} ms  current {:>9.3} ms  \
+                     {pct:+6.1}%{}",
+                    c.label,
+                    c.baseline_ms,
+                    c.current_ms,
+                    if regressed { "  REGRESSED" } else { "" }
+                );
+                failed |= regressed;
+            }
+            if failed {
+                eprintln!(
+                    "bench-compare: key row(s) regressed more than \
+                     {max_regress}% vs the committed baseline; if the \
+                     slowdown is intentional, regenerate the baseline \
+                     (see bench-baselines/microbench_hotpath.json)"
+                );
+                1
+            } else {
+                println!(
+                    "bench-compare: all {} key rows within {max_regress}%",
+                    rows.len()
+                );
+                0
+            }
+        }
+    }
+}
+
+/// Compare every key label of two bench JSON documents. Errors when a
+/// key row (or its `cpu_ms`) is missing from either side — a silently
+/// vanished row must fail the gate, not pass it.
+fn compare_docs(
+    baseline: &str,
+    current: &str,
+    _max_regress: f64,
+) -> Result<Vec<Comparison>, String> {
+    let base = bench_rows(baseline);
+    let cur = bench_rows(current);
+    let find = |rows: &[(String, f64)], label: &str, side: &str| {
+        rows.iter()
+            .find(|(l, _)| l == label)
+            .map(|&(_, ms)| ms)
+            .ok_or_else(|| {
+                format!("key row '{label}' missing from {side} document")
+            })
+    };
+    KEY_LABELS
+        .iter()
+        .map(|&label| {
+            let baseline_ms = find(&base, label, "baseline")?;
+            let current_ms = find(&cur, label, "current")?;
+            if baseline_ms <= 0.0 {
+                return Err(format!(
+                    "key row '{label}' has non-positive baseline \
+                     ({baseline_ms} ms)"
+                ));
+            }
+            Ok(Comparison {
+                label: label.to_string(),
+                baseline_ms,
+                current_ms,
+            })
+        })
+        .collect()
+}
+
+/// Extract `(label, cpu_ms)` pairs from a bench JSON document in the
+/// `rows_to_json` shape. Deliberately a scanner, not a JSON parser
+/// (xtask stays dependency-free): each `"label"` string opens a row,
+/// and the first `"cpu_ms"` number before the next `"label"` belongs
+/// to it. Labels produced by the benches contain no escapes.
+fn bench_rows(json: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    let mut rest = json;
+    while let Some(pos) = rest.find("\"label\"") {
+        let after = &rest[pos + "\"label\"".len()..];
+        let label = match json_string_value(after) {
+            Some(l) => l,
+            None => break,
+        };
+        let scope_end = after.find("\"label\"").unwrap_or(after.len());
+        let scope = &after[..scope_end];
+        if let Some(cpos) = scope.find("\"cpu_ms\"") {
+            if let Some(ms) =
+                json_number_value(&scope[cpos + "\"cpu_ms\"".len()..])
+            {
+                out.push((label, ms));
+            }
+        }
+        rest = &after[scope_end..];
+    }
+    out
+}
+
+/// `: "value"` after a key — skip the colon/whitespace, read to the
+/// closing quote.
+fn json_string_value(s: &str) -> Option<String> {
+    let s = s.trim_start().strip_prefix(':')?.trim_start();
+    let s = s.strip_prefix('"')?;
+    s.find('"').map(|end| s[..end].to_string())
+}
+
+/// `: 12.5` after a key — skip the colon/whitespace, parse the number
+/// token.
+fn json_number_value(s: &str) -> Option<f64> {
+    let s = s.trim_start().strip_prefix(':')?.trim_start();
+    let end = s
+        .find(|c: char| !(c.is_ascii_digit() || "+-.eE".contains(c)))
+        .unwrap_or(s.len());
+    s[..end].parse().ok()
 }
 
 /// Render one module directory to its markdown document.
@@ -200,4 +404,95 @@ fn pub_items(text: &str) -> Vec<String> {
         pending_doc = None;
     }
     out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A minimal doc in the `rows_to_json` shape with all key rows at
+    /// the given medians (ms).
+    fn doc(cordic: f64, quant: f64, decode: f64) -> String {
+        format!(
+            r#"{{"table":"microbench_hotpath","rows":[
+  {{"label":"extract all blocks","cpu_ms":0.5,"cpu_mean_ms":0.6}},
+  {{"label":"fwd cordic-loeffler batched","cpu_ms":{cordic},"unit":"block"}},
+  {{"label":"quantize+zigzag batched","cpu_ms":{quant}}},
+  {{"label":"entropy decode image","cpu_ms":{decode},"mb_per_s":100}}
+]}}"#
+        )
+    }
+
+    #[test]
+    fn scanner_extracts_labels_and_medians() {
+        let rows = bench_rows(&doc(1.25, 0.08, 2.5));
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[1].0, "fwd cordic-loeffler batched");
+        assert!((rows[1].1 - 1.25).abs() < 1e-12);
+        assert_eq!(rows[3].0, "entropy decode image");
+        assert!((rows[3].1 - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scanner_skips_rows_without_cpu_ms() {
+        let json = r#"{"rows":[{"label":"a"},{"label":"b","cpu_ms":2}]}"#;
+        let rows = bench_rows(json);
+        assert_eq!(rows, vec![("b".to_string(), 2.0)]);
+    }
+
+    #[test]
+    fn identical_docs_pass_the_gate() {
+        let d = doc(1.0, 0.1, 2.0);
+        let rows = compare_docs(&d, &d, 15.0).unwrap();
+        assert_eq!(rows.len(), KEY_LABELS.len());
+        assert!(rows.iter().all(|c| !c.regressed(15.0)));
+    }
+
+    #[test]
+    fn regression_within_threshold_passes() {
+        let rows =
+            compare_docs(&doc(1.0, 0.1, 2.0), &doc(1.1, 0.11, 2.2), 15.0)
+                .unwrap();
+        assert!(rows.iter().all(|c| !c.regressed(15.0)));
+    }
+
+    #[test]
+    fn slowed_key_row_fails_the_gate() {
+        // entropy decode 30% slower than baseline: over a 15% threshold
+        let rows =
+            compare_docs(&doc(1.0, 0.1, 2.0), &doc(1.0, 0.1, 2.6), 15.0)
+                .unwrap();
+        let slow: Vec<&str> = rows
+            .iter()
+            .filter(|c| c.regressed(15.0))
+            .map(|c| c.label.as_str())
+            .collect();
+        assert_eq!(slow, vec!["entropy decode image"]);
+    }
+
+    #[test]
+    fn faster_current_never_fails() {
+        let rows =
+            compare_docs(&doc(1.0, 0.1, 2.0), &doc(0.2, 0.02, 0.4), 15.0)
+                .unwrap();
+        assert!(rows.iter().all(|c| !c.regressed(15.0)));
+    }
+
+    #[test]
+    fn missing_key_row_is_an_error() {
+        let partial = r#"{"rows":[
+            {"label":"fwd cordic-loeffler batched","cpu_ms":1.0},
+            {"label":"quantize+zigzag batched","cpu_ms":0.1}]}"#;
+        let err = compare_docs(&doc(1.0, 0.1, 2.0), partial, 15.0)
+            .unwrap_err();
+        assert!(err.contains("entropy decode image"), "{err}");
+        assert!(err.contains("current"), "{err}");
+    }
+
+    #[test]
+    fn non_positive_baseline_is_an_error() {
+        let err = compare_docs(&doc(0.0, 0.1, 2.0), &doc(1.0, 0.1, 2.0), 15.0)
+            .unwrap_err();
+        assert!(err.contains("non-positive"), "{err}");
+    }
 }
