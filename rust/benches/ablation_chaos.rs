@@ -1,0 +1,115 @@
+//! A7 ablation: chaos soak — the TCP front-end under seeded fault
+//! injection, with retrying circuit-breaking clients asserting the
+//! resilience invariants.
+//!
+//! The server runs with a deliberately hostile (but reproducible) fault
+//! plan: slow and short socket reads/writes, mid-frame disconnects,
+//! worker panics, artificial job latency, and outbound payload
+//! bit-flips. Degraded-mode load shedding is on. The chaos-mode load
+//! generator then checks, per request:
+//!
+//! 1. no request outlives the retry policy's worst-case budget
+//!    (client hang = violation),
+//! 2. every success carries a container that decodes and is bit-exact
+//!    against the client's reference reply (a surviving bit-flip =
+//!    violation via the decode-error bucket — it must never count as
+//!    success),
+//!
+//! and, run-wide: the error rate stays bounded, some requests still
+//! succeed, and the server drains cleanly on shutdown. The whole soak
+//! is deterministic from the two seeds below.
+
+use std::time::Duration;
+
+use cordic_dct::bench::save_results;
+use cordic_dct::coordinator::{Lane, ServiceConfig};
+use cordic_dct::dct::Variant;
+use cordic_dct::faults::FaultPlan;
+use cordic_dct::serve::{run_load, LoadSpec, ServeConfig, TcpServer};
+use cordic_dct::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("CORDIC_DCT_BENCH_QUICK").is_ok();
+    let (size, requests, clients) =
+        if quick { (48, 12, 3) } else { (96, 32, 6) };
+    let plan = FaultPlan::parse(
+        "seed=7,slow-read=0.05,slow-write=0.05,short-read=0.1,\
+         short-write=0.1,disconnect=0.02,bitflip=0.02,panic=0.03,\
+         latency=0.1,latency-ms=3,slow-ms=2",
+    )?;
+    let cfg = ServeConfig {
+        service: ServiceConfig {
+            workers: 2,
+            queue_capacity: 16,
+            artifact_dir: None,
+            ..Default::default()
+        },
+        max_connections: 16,
+        faults: Some(plan.clone()),
+        degrade: true,
+        ..Default::default()
+    };
+    let server = TcpServer::bind("127.0.0.1:0", cfg)?;
+    let addr = server.local_addr();
+    println!(
+        "== chaos soak: {clients} clients x {requests} req, \
+         {size}x{size} cordic gray over {addr} =="
+    );
+    println!("fault plan: {plan:?}");
+    let spec = LoadSpec {
+        clients,
+        requests_per_client: requests,
+        size,
+        color: false,
+        variant: Variant::Cordic,
+        lane: Lane::Cpu,
+        want_psnr: false,
+        faults: true,
+        deadline: Duration::from_secs(10),
+        seed: 11,
+        ..LoadSpec::new(addr)
+    };
+    let report = run_load(&spec)?;
+    println!("{report}");
+    println!(
+        "errors: {} timeout / {} connect / {} decode / {} panic / \
+         {} server",
+        report.errors.timeouts,
+        report.errors.connect,
+        report.errors.decode,
+        report.errors.panics,
+        report.errors.server
+    );
+    // invariants: violations are resilience bugs, not load noise
+    anyhow::ensure!(
+        report.invariant_violations == 0,
+        "{} invariant violation(s) under injected faults",
+        report.invariant_violations
+    );
+    anyhow::ensure!(
+        report.ok >= 1,
+        "no request survived the fault plan — the soak proves nothing"
+    );
+    anyhow::ensure!(
+        report.error_rate <= 0.75,
+        "error rate {:.2} exceeds the 0.75 chaos bound",
+        report.error_rate
+    );
+    // clean drain: shutdown() joins the accept thread, the connection
+    // pool, and the (possibly respawned) workers — a hang here fails
+    // the bench via the CI job timeout
+    server.shutdown();
+    println!("server drained cleanly");
+    let json = Json::obj(vec![
+        ("table", Json::str("ablation_chaos")),
+        ("size", size.into()),
+        ("clients", clients.into()),
+        ("requests_per_client", requests.into()),
+        ("fault_seed", Json::num(7.0)),
+        ("jitter_seed", Json::num(11.0)),
+        ("report", report.to_json()),
+    ])
+    .to_string();
+    save_results("ablation_chaos", &format!("{report}\n"), &json);
+    Ok(())
+}

@@ -36,8 +36,9 @@ fn main() -> anyhow::Result<()> {
          {requests} req/client over {addr} =="
     );
     println!(
-        "{:>8} {:>10} {:>9} {:>9} {:>9} {:>9}",
-        "clients", "req/s", "p50 ms", "p95 ms", "p99 ms", "max ms"
+        "{:>8} {:>10} {:>9} {:>9} {:>9} {:>9} {:>9}",
+        "clients", "req/s", "p50 ms", "p95 ms", "p99 ms", "max ms",
+        "err rate"
     );
     let mut reports = Vec::new();
     for &clients in client_sweep {
@@ -53,13 +54,14 @@ fn main() -> anyhow::Result<()> {
         };
         let report = run_load(&spec)?;
         println!(
-            "{:>8} {:>10.1} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+            "{:>8} {:>10.1} {:>9.2} {:>9.2} {:>9.2} {:>9.2} {:>9.3}",
             clients,
             report.throughput_rps,
             report.p50_ms,
             report.p95_ms,
             report.p99_ms,
-            report.max_ms
+            report.max_ms,
+            report.error_rate
         );
         anyhow::ensure!(
             report.failed == 0,

@@ -26,6 +26,12 @@
 //! paper's CUDA setting: per-dispatch overhead (executable lookup, literal
 //! marshaling) is amortized across same-shape jobs that reuse one cached
 //! executable; the ablation bench (`ablation_batching`) measures it.
+//!
+//! Workers run every job under a panic guard: a panicked job answers
+//! its waiter with a structured [`JobError::WorkerPanic`] instead of
+//! poisoning the queue, and the supervisor loop in [`service`] respawns
+//! the worker (fresh pipeline cache), counting the restart into
+//! [`ServiceStats::worker_restarts`].
 
 pub mod batcher;
 pub mod request;
@@ -33,7 +39,7 @@ pub mod service;
 pub mod worker;
 
 pub use request::{
-    Backpressure, JobHandle, JobImage, JobOutput, Lane, Request,
-    RequestKind, RequestQueue, Response,
+    Backpressure, JobError, JobHandle, JobImage, JobOutput, Lane, Request,
+    RequestKind, RequestQueue, Response, JOB_PANIC_TAG,
 };
 pub use service::{Service, ServiceConfig, ServiceStats};

@@ -2,6 +2,7 @@
 //! backpressure boundary of the service).
 
 use std::collections::VecDeque;
+use std::fmt;
 use std::sync::mpsc;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -200,6 +201,37 @@ pub struct Response {
     /// Which lane actually ran it (Auto resolves here).
     pub lane: Lane,
 }
+
+/// Tag prefix [`JobError::WorkerPanic`] renders into error chains so
+/// the serve layer can classify panics without downcasting (the
+/// vendored `anyhow` flattens errors to a message chain; this mirrors
+/// the codec's `[decode:*]` tagging idiom).
+pub const JOB_PANIC_TAG: &str = "[job:panic]";
+
+/// Structured job-failure classes that cross the worker boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobError {
+    /// The job panicked inside a worker. The supervisor respawns the
+    /// worker loop (with a fresh pipeline cache) and the reply still
+    /// arrives — a panicking job never poisons the queue or strands
+    /// its waiter.
+    WorkerPanic {
+        /// The panic payload's message, when it carried one.
+        detail: String,
+    },
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JobError::WorkerPanic { detail } => {
+                write!(f, "{JOB_PANIC_TAG} worker panicked: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
 
 /// Successful output payload.
 #[derive(Debug)]

@@ -1,6 +1,7 @@
 //! The service facade: owns the queue, worker threads, optional PJRT
 //! runtime, and metrics; this is what the launcher and examples talk to.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -10,6 +11,7 @@ use anyhow::{Context, Result};
 use crate::dct::batch::{BatchWidth, EngineConfig};
 use crate::dct::cordic_fxp::FxpPrecision;
 use crate::dct::Variant;
+use crate::faults::{FaultInjector, FaultPlan};
 use crate::image::color::ColorImage;
 use crate::image::ycbcr::Subsampling;
 use crate::image::GrayImage;
@@ -21,7 +23,7 @@ use super::batcher::BatchPolicy;
 use super::request::{
     Backpressure, JobHandle, Lane, Request, RequestKind, RequestQueue,
 };
-use super::worker::{self, WorkerCtx};
+use super::worker::{self, RunExit, WorkerCtx};
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -53,6 +55,10 @@ pub struct ServiceConfig {
     /// Precision of the fixed-point CORDIC lane (`--variant cordic-fxp`
     /// jobs); ignored by the f32 variants.
     pub precision: FxpPrecision,
+    /// Worker-side fault-injection plan (chaos testing: seeded panics +
+    /// artificial job latency). `None` — the default — keeps the worker
+    /// hot path at a single skipped `Option` check.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ServiceConfig {
@@ -68,6 +74,7 @@ impl Default for ServiceConfig {
             stub_gpu: false,
             batch_width: BatchWidth::default(),
             precision: FxpPrecision::default(),
+            faults: None,
         }
     }
 }
@@ -80,6 +87,9 @@ pub struct ServiceStats {
     pub queue_wait: (u64, f64, f64, f64), // count, mean, p95, max (ms)
     pub process: (u64, f64, f64, f64),
     pub compiled_executables: usize,
+    /// Times a worker loop was re-entered after a panicked job (or an
+    /// escaped panic) — the supervision signal of the resilience layer.
+    pub worker_restarts: u64,
 }
 
 /// The running service.
@@ -91,6 +101,7 @@ pub struct Service {
     quality: u8,
     queue_hist: Arc<SharedHistogram>,
     process_hist: Arc<SharedHistogram>,
+    restarts: Arc<AtomicU64>,
 }
 
 impl Service {
@@ -140,6 +151,11 @@ impl Service {
                 / cfg.workers.max(1))
             .max(1)
         };
+        // one root injector per service; each worker forks its own
+        // deterministic stream keyed by its index
+        let faults_root =
+            cfg.faults.as_ref().map(|p| FaultInjector::new(p.clone()));
+        let restarts = Arc::new(AtomicU64::new(0));
         let mut workers = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers.max(1) {
             let ctx = WorkerCtx {
@@ -156,11 +172,32 @@ impl Service {
                 },
                 queue_hist: Arc::clone(&queue_hist),
                 process_hist: Arc::clone(&process_hist),
+                faults: faults_root
+                    .as_ref()
+                    .map(|r| Arc::new(r.fork(i as u64))),
             };
+            let restarts = Arc::clone(&restarts);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("coordinator-worker-{i}"))
-                    .spawn(move || worker::run(&ctx))
+                    // supervisor trampoline: re-enter the worker loop
+                    // after a panicked job (the reply was already sent
+                    // structured) instead of bleeding pool capacity
+                    .spawn(move || loop {
+                        match catch_unwind(AssertUnwindSafe(|| {
+                            worker::run(&ctx)
+                        })) {
+                            Ok(RunExit::QueueClosed) => break,
+                            Ok(RunExit::JobPanicked) => {
+                                restarts.fetch_add(1, Ordering::Relaxed);
+                            }
+                            // a panic escaped the per-job guard (a bug
+                            // in the loop itself): still recover
+                            Err(_) => {
+                                restarts.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    })
                     .context("spawning worker")?,
             );
         }
@@ -179,6 +216,7 @@ impl Service {
             quality: cfg.quality,
             queue_hist,
             process_hist,
+            restarts,
         })
     }
 
@@ -319,6 +357,7 @@ impl Service {
                 .as_ref()
                 .map(|r| r.cached_count())
                 .unwrap_or(0),
+            worker_restarts: self.restarts.load(Ordering::Relaxed),
         }
     }
 
@@ -475,6 +514,47 @@ mod tests {
     fn shutdown_is_idempotent_via_drop() {
         let svc = Service::start(cpu_only_config(1)).unwrap();
         drop(svc); // close + join without panic
+    }
+
+    #[test]
+    fn supervised_pool_survives_injected_panics() {
+        use crate::coordinator::JOB_PANIC_TAG;
+        // seed 3 mixes panics and successes over 16 draws at p=0.5
+        let svc = Service::start(ServiceConfig {
+            workers: 1,
+            artifact_dir: None,
+            faults: Some(FaultPlan::parse("seed=3,panic=0.5").unwrap()),
+            ..Default::default()
+        })
+        .unwrap();
+        let img = synthetic::lena_like(24, 24, 1);
+        let (mut ok, mut panicked) = (0u64, 0u64);
+        for _ in 0..16 {
+            let resp = svc
+                .compress(img.clone(), Variant::Dct, Lane::Cpu)
+                .unwrap()
+                .wait();
+            match resp.result {
+                Ok(out) => {
+                    assert!(out.container.is_some());
+                    ok += 1;
+                }
+                Err(e) => {
+                    let chain = format!("{e:#}");
+                    assert!(
+                        chain.contains(JOB_PANIC_TAG),
+                        "untagged job failure: {chain}"
+                    );
+                    panicked += 1;
+                }
+            }
+        }
+        assert!(ok > 0, "pool must keep serving between panics");
+        assert!(panicked > 0, "seeded plan must fire");
+        // sequential submit+wait on one worker: every panicked job is
+        // exactly one supervised respawn
+        assert_eq!(svc.stats().worker_restarts, panicked);
+        svc.shutdown();
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! construction key and reused for every subsequent request, instead of
 //! re-allocating transform tables and block scratch per job.
 
+use std::any::Any;
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -27,9 +29,10 @@ use crate::runtime::Executor;
 
 use super::batcher::BatchPolicy;
 use super::request::{
-    JobImage, JobOutput, Lane, QueuedJob, Request, RequestKind,
+    JobError, JobImage, JobOutput, Lane, QueuedJob, Request, RequestKind,
     RequestQueue, Response,
 };
+use crate::faults::FaultInjector;
 
 /// Shared worker context.
 pub struct WorkerCtx {
@@ -47,6 +50,10 @@ pub struct WorkerCtx {
     pub engine: EngineConfig,
     pub queue_hist: Arc<SharedHistogram>,
     pub process_hist: Arc<SharedHistogram>,
+    /// Worker-side fault injection (chaos testing): seeded panics and
+    /// artificial job latency, applied inside the per-job panic guard.
+    /// `None` in production — one `Option` check per job.
+    pub faults: Option<Arc<FaultInjector>>,
 }
 
 /// Per-worker cache of CPU-lane pipelines, keyed by everything that
@@ -128,8 +135,22 @@ impl PipelineCache {
     }
 }
 
-/// Run the worker loop until the queue closes.
-pub fn run(ctx: &WorkerCtx) {
+/// Why the worker loop returned — the supervisor in
+/// [`super::service`] keys its respawn decision on this.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunExit {
+    /// The queue closed: normal shutdown, do not respawn.
+    QueueClosed,
+    /// A job panicked. Its waiter was already answered with a
+    /// structured [`JobError::WorkerPanic`] and the rest of the batch
+    /// was processed; the loop exits so the supervisor can re-enter it
+    /// with a fresh [`PipelineCache`] (the old one may have been
+    /// mid-mutation when the panic unwound through it).
+    JobPanicked,
+}
+
+/// Run the worker loop until the queue closes or a job panics.
+pub fn run(ctx: &WorkerCtx) -> RunExit {
     let mut cache = PipelineCache::new();
     loop {
         // the head job's lane picks the batch cap, so a max-1 lane (serial
@@ -138,22 +159,51 @@ pub fn run(ctx: &WorkerCtx) {
             |r| ctx.policy.max_for(r.lane),
             ctx.policy.linger,
         ) else {
-            return;
+            return RunExit::QueueClosed;
         };
         // One cached-executable resolve serves the whole same-key batch —
         // the batching win the ablation measures.
+        let mut panicked = false;
         for job in batch {
-            process_job(ctx, &mut cache, job);
+            panicked |= process_job(ctx, &mut cache, job);
+        }
+        // finish the whole batch first — every popped job must be
+        // answered — then hand control back to the supervisor
+        if panicked {
+            return RunExit::JobPanicked;
         }
     }
 }
 
-fn process_job(ctx: &WorkerCtx, cache: &mut PipelineCache, job: QueuedJob) {
+/// Process one job, always answering its reply channel. Returns `true`
+/// when the job panicked (the reply then carries
+/// [`JobError::WorkerPanic`]).
+fn process_job(
+    ctx: &WorkerCtx,
+    cache: &mut PipelineCache,
+    job: QueuedJob,
+) -> bool {
     let queue_ms = job.enqueued.elapsed().as_secs_f64() * 1e3;
     ctx.queue_hist.record_us(queue_ms * 1e3);
     let t0 = Instant::now();
     let lane = resolve_lane(ctx, &job.request);
-    let result = run_job(ctx, cache, &job.request, lane);
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        if let Some(f) = &ctx.faults {
+            if let Some(d) = f.job_latency() {
+                std::thread::sleep(d);
+            }
+            if f.worker_panic() {
+                panic!("injected worker fault");
+            }
+        }
+        run_job(ctx, cache, &job.request, lane)
+    }));
+    let panicked = caught.is_err();
+    let result = caught.unwrap_or_else(|payload| {
+        Err(anyhow::Error::from(JobError::WorkerPanic {
+            detail: panic_message(payload.as_ref()),
+        }))
+    });
     let process_ms = t0.elapsed().as_secs_f64() * 1e3;
     ctx.process_hist.record_us(process_ms * 1e3);
     // receiver may have given up (dropped handle): ignore send failure
@@ -164,6 +214,19 @@ fn process_job(ctx: &WorkerCtx, cache: &mut PipelineCache, job: QueuedJob) {
         process_ms,
         lane,
     });
+    panicked
+}
+
+/// Best-effort extraction of a panic payload's message (`&str` and
+/// `String` cover `panic!` in practice).
+fn panic_message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
 }
 
 /// Auto routing: GPU when the executor exists and its backend covers the
@@ -523,6 +586,7 @@ mod tests {
             engine: EngineConfig::default(),
             queue_hist: Arc::new(SharedHistogram::default()),
             process_hist: Arc::new(SharedHistogram::default()),
+            faults: None,
         }
     }
 
@@ -801,5 +865,39 @@ mod tests {
         );
         let mut cache = PipelineCache::new();
         assert!(run_job(&ctx, &mut cache, &gpu, Lane::Gpu).is_err());
+    }
+
+    #[test]
+    fn queue_close_exits_with_queue_closed() {
+        let ctx = cpu_ctx(2);
+        ctx.queue.close();
+        assert_eq!(run(&ctx), RunExit::QueueClosed);
+    }
+
+    #[test]
+    fn injected_panic_answers_structured_error_and_exits() {
+        use crate::coordinator::JOB_PANIC_TAG;
+        use crate::faults::{FaultInjector, FaultPlan};
+
+        let plan = FaultPlan::parse("seed=1,panic=1.0").unwrap();
+        let mut ctx = cpu_ctx(4);
+        ctx.faults = Some(Arc::new(FaultInjector::new(plan)));
+        let ctx = Arc::new(ctx);
+        let img = synthetic::lena_like(16, 16, 1);
+        let handle = ctx
+            .queue
+            .submit(Request::compress(1, img, Variant::Dct, Lane::Cpu))
+            .unwrap();
+        let ctx2 = Arc::clone(&ctx);
+        let t = std::thread::spawn(move || run(&ctx2));
+        // the panicked job still answers its waiter, structured
+        let resp = handle.wait();
+        let err = resp.result.unwrap_err();
+        let chain = format!("{err:#}");
+        assert!(chain.contains(JOB_PANIC_TAG), "untagged: {chain}");
+        assert!(chain.contains("injected worker fault"), "{chain}");
+        // and the loop hands control back for a supervised respawn
+        assert_eq!(t.join().unwrap(), RunExit::JobPanicked);
+        ctx.queue.close();
     }
 }

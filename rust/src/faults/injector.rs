@@ -1,0 +1,332 @@
+//! The fault *injector*: the runtime half of the chaos layer. One root
+//! [`FaultInjector`] is built per server (or service) from a
+//! [`FaultPlan`]; each connection and each worker then [`fork`]s its
+//! own child so every injection site draws from an independent,
+//! deterministic random stream — the fault sequence seen by connection
+//! N does not depend on how the scheduler interleaves connection M.
+//!
+//! [`fork`]: FaultInjector::fork
+
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::spec::FaultPlan;
+use crate::util::prng::Rng;
+
+/// Snapshot of how many faults an injector has actually fired, by
+/// class. Forked children keep their own counts.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    /// Reads delayed by `slow_ms`.
+    pub slow_reads: u64,
+    /// Reads truncated to a single byte.
+    pub short_reads: u64,
+    /// Writes delayed by `slow_ms`.
+    pub slow_writes: u64,
+    /// Writes that accepted only a prefix of the buffer.
+    pub short_writes: u64,
+    /// Writes aborted mid-frame.
+    pub disconnects: u64,
+    /// Outbound payloads with one bit flipped.
+    pub bit_flips: u64,
+    /// Jobs that were made to panic.
+    pub panics: u64,
+    /// Jobs delayed by `latency_ms`.
+    pub latencies: u64,
+}
+
+/// A seeded fault source. Decision helpers are plain function calls
+/// that first test the configured probability against zero, so an
+/// injector built from a no-op plan (and, one level up, a `None`
+/// injector) adds nothing to the hot path: no lock, no RNG draw.
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    rng: Mutex<Rng>,
+    slow_reads: AtomicU64,
+    short_reads: AtomicU64,
+    slow_writes: AtomicU64,
+    short_writes: AtomicU64,
+    disconnects: AtomicU64,
+    bit_flips: AtomicU64,
+    panics: AtomicU64,
+    latencies: AtomicU64,
+}
+
+impl FaultInjector {
+    /// Build a root injector seeded from the plan.
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let rng = Rng::new(plan.seed);
+        Self::with_rng(plan, rng)
+    }
+
+    fn with_rng(plan: FaultPlan, rng: Rng) -> FaultInjector {
+        FaultInjector {
+            plan,
+            rng: Mutex::new(rng),
+            slow_reads: AtomicU64::new(0),
+            short_reads: AtomicU64::new(0),
+            slow_writes: AtomicU64::new(0),
+            short_writes: AtomicU64::new(0),
+            disconnects: AtomicU64::new(0),
+            bit_flips: AtomicU64::new(0),
+            panics: AtomicU64::new(0),
+            latencies: AtomicU64::new(0),
+        }
+    }
+
+    /// Derive a child injector with an independent random stream (same
+    /// plan, fresh counts). `tag` should be unique per child — the
+    /// connection or worker index — so runs are reproducible no matter
+    /// how threads interleave.
+    pub fn fork(&self, tag: u64) -> FaultInjector {
+        let rng = self.rng.lock().unwrap().fork(tag);
+        Self::with_rng(self.plan.clone(), rng)
+    }
+
+    /// The plan this injector was built from.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Snapshot the per-class fired-fault counters.
+    pub fn counts(&self) -> FaultCounts {
+        FaultCounts {
+            slow_reads: self.slow_reads.load(Ordering::Relaxed),
+            short_reads: self.short_reads.load(Ordering::Relaxed),
+            slow_writes: self.slow_writes.load(Ordering::Relaxed),
+            short_writes: self.short_writes.load(Ordering::Relaxed),
+            disconnects: self.disconnects.load(Ordering::Relaxed),
+            bit_flips: self.bit_flips.load(Ordering::Relaxed),
+            panics: self.panics.load(Ordering::Relaxed),
+            latencies: self.latencies.load(Ordering::Relaxed),
+        }
+    }
+
+    fn roll(&self, p: f64, counter: &AtomicU64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        let hit = self.rng.lock().unwrap().chance(p);
+        if hit {
+            counter.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Should the current job panic? (Worker-side injection point.)
+    pub fn worker_panic(&self) -> bool {
+        self.roll(self.plan.panic, &self.panics)
+    }
+
+    /// Artificial latency to apply before running the current job.
+    pub fn job_latency(&self) -> Option<Duration> {
+        if self.roll(self.plan.latency, &self.latencies) {
+            Some(Duration::from_millis(self.plan.latency_ms))
+        } else {
+            None
+        }
+    }
+
+    /// Maybe flip one random bit of an outbound payload in place;
+    /// returns whether a bit was flipped. Empty payloads are left
+    /// alone.
+    pub fn flip_bit(&self, bytes: &mut [u8]) -> bool {
+        if bytes.is_empty() || self.plan.bitflip <= 0.0 {
+            return false;
+        }
+        let mut rng = self.rng.lock().unwrap();
+        if !rng.chance(self.plan.bitflip) {
+            return false;
+        }
+        let bit = rng.below(bytes.len() as u64 * 8);
+        drop(rng);
+        bytes[(bit / 8) as usize] ^= 1 << (bit % 8);
+        self.bit_flips.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    fn slow_duration(&self) -> Duration {
+        Duration::from_millis(self.plan.slow_ms)
+    }
+}
+
+/// A `Read`/`Write` adapter that injects socket-level faults around an
+/// inner stream. Short reads and writes always make progress (at least
+/// one byte), so correct callers that loop — like
+/// [`crate::serve::framing::read_frame`] — survive them; an injected
+/// disconnect surfaces as `ConnectionAborted` after transferring half
+/// the buffer, modelling a peer dying mid-frame.
+#[derive(Debug)]
+pub struct FaultStream<S> {
+    inner: S,
+    injector: Arc<FaultInjector>,
+}
+
+impl<S> FaultStream<S> {
+    /// Wrap `inner`, drawing fault decisions from `injector`.
+    pub fn new(inner: S, injector: Arc<FaultInjector>) -> FaultStream<S> {
+        FaultStream { inner, injector }
+    }
+
+    /// Unwrap back to the inner stream.
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: Read> Read for FaultStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let inj = &self.injector;
+        if inj.roll(inj.plan.slow_read, &inj.slow_reads) {
+            std::thread::sleep(inj.slow_duration());
+        }
+        if buf.len() > 1 && inj.roll(inj.plan.short_read, &inj.short_reads) {
+            return self.inner.read(&mut buf[..1]);
+        }
+        self.inner.read(buf)
+    }
+}
+
+impl<S: Write> Write for FaultStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let inj = &self.injector;
+        if inj.roll(inj.plan.slow_write, &inj.slow_writes) {
+            std::thread::sleep(inj.slow_duration());
+        }
+        if !buf.is_empty() && inj.roll(inj.plan.disconnect, &inj.disconnects) {
+            // model a peer dying mid-frame: half the bytes land, then
+            // the connection is gone
+            let _ = self.inner.write(&buf[..buf.len() / 2]);
+            return Err(io::Error::new(
+                io::ErrorKind::ConnectionAborted,
+                "injected disconnect",
+            ));
+        }
+        if buf.len() > 1 && inj.roll(inj.plan.short_write, &inj.short_writes) {
+            return self.inner.write(&buf[..buf.len().div_ceil(2)]);
+        }
+        self.inner.write(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn plan(spec: &str) -> FaultPlan {
+        FaultPlan::parse(spec).unwrap()
+    }
+
+    #[test]
+    fn noop_plan_never_fires() {
+        let inj = FaultInjector::new(FaultPlan::default());
+        for _ in 0..256 {
+            assert!(!inj.worker_panic());
+            assert!(inj.job_latency().is_none());
+        }
+        let mut bytes = vec![0xAAu8; 32];
+        assert!(!inj.flip_bit(&mut bytes));
+        assert_eq!(bytes, vec![0xAAu8; 32]);
+        assert_eq!(inj.counts(), FaultCounts::default());
+    }
+
+    #[test]
+    fn decisions_are_deterministic_from_seed() {
+        let a = FaultInjector::new(plan("seed=42,panic=0.3,latency=0.3"));
+        let b = FaultInjector::new(plan("seed=42,panic=0.3,latency=0.3"));
+        for _ in 0..128 {
+            assert_eq!(a.worker_panic(), b.worker_panic());
+            assert_eq!(a.job_latency(), b.job_latency());
+        }
+        assert_eq!(a.counts(), b.counts());
+        assert!(a.counts().panics > 0, "p=0.3 over 128 draws must fire");
+    }
+
+    #[test]
+    fn forks_are_deterministic_and_independent() {
+        let root_a = FaultInjector::new(plan("seed=9,panic=0.5"));
+        let root_b = FaultInjector::new(plan("seed=9,panic=0.5"));
+        // same tag -> same stream, even when the other root burned
+        // draws in between
+        for _ in 0..7 {
+            root_b.worker_panic();
+        }
+        let fa = root_a.fork(3);
+        let fb = root_b.fork(3);
+        let seq_a: Vec<bool> = (0..64).map(|_| fa.worker_panic()).collect();
+        let seq_b: Vec<bool> = (0..64).map(|_| fb.worker_panic()).collect();
+        assert_eq!(seq_a, seq_b);
+        // fork counts are the child's own, not the root's
+        assert_eq!(root_a.counts().panics, 0);
+    }
+
+    #[test]
+    fn flip_bit_changes_exactly_one_bit() {
+        let inj = FaultInjector::new(plan("seed=5,bitflip=1.0"));
+        let original = vec![0x00u8, 0xFF, 0x5A, 0xA5];
+        let mut bytes = original.clone();
+        assert!(inj.flip_bit(&mut bytes));
+        let diff: u32 = original
+            .iter()
+            .zip(&bytes)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum();
+        assert_eq!(diff, 1, "exactly one bit must differ");
+        assert_eq!(inj.counts().bit_flips, 1);
+    }
+
+    #[test]
+    fn short_read_still_makes_progress() {
+        let inj = Arc::new(FaultInjector::new(plan("seed=2,short-read=1.0")));
+        let data: Vec<u8> = (0u8..64).collect();
+        let mut fs = FaultStream::new(Cursor::new(data.clone()), inj);
+        let mut out = Vec::new();
+        let mut buf = [0u8; 16];
+        loop {
+            let n = fs.read(&mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            assert!(n >= 1);
+            out.extend_from_slice(&buf[..n]);
+        }
+        assert_eq!(out, data, "looping reader must still see every byte");
+    }
+
+    #[test]
+    fn short_write_still_makes_progress() {
+        let inj =
+            Arc::new(FaultInjector::new(plan("seed=2,short-write=1.0")));
+        let data: Vec<u8> = (0u8..64).collect();
+        let mut fs = FaultStream::new(Vec::new(), inj.clone());
+        let mut rest: &[u8] = &data;
+        while !rest.is_empty() {
+            let n = fs.write(rest).unwrap();
+            assert!(n >= 1);
+            rest = &rest[n..];
+        }
+        fs.flush().unwrap();
+        assert_eq!(fs.into_inner(), data);
+        assert!(inj.counts().short_writes > 0);
+    }
+
+    #[test]
+    fn disconnect_surfaces_as_connection_aborted() {
+        let inj =
+            Arc::new(FaultInjector::new(plan("seed=3,disconnect=1.0")));
+        let mut fs = FaultStream::new(Vec::new(), inj.clone());
+        let err = fs.write(&[1, 2, 3, 4]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::ConnectionAborted);
+        assert_eq!(inj.counts().disconnects, 1);
+        // half the bytes landed before the abort
+        assert_eq!(fs.into_inner(), vec![1, 2]);
+    }
+}

@@ -1,0 +1,34 @@
+//! Deterministic fault injection for chaos-testing the serving stack.
+//!
+//! The ROADMAP's north star is a service that survives "heavy traffic
+//! from millions of users"; nothing earns that claim until failure is
+//! *injectable, survivable, and measurable*. This module is the
+//! injectable third: a seeded [`FaultPlan`] (parsed from
+//! `serve --faults <spec>` or the [`FAULTS_ENV`] environment variable)
+//! drives a [`FaultInjector`] whose decision points are threaded
+//! through the serve and coordinator layers:
+//!
+//! ```text
+//!              client ──frame──▶ serve::conn ──job──▶ coordinator worker
+//! socket:  slow-read  short-read │                │  panic      (caught,
+//!          slow-write short-write│                │  latency     answered
+//!          disconnect (mid-frame)│                │              + respawn)
+//! payload: bitflip (outbound) ───┘                └─▶ structured reply
+//! ```
+//!
+//! Everything is deterministic: one root injector per server, one
+//! [`FaultInjector::fork`] per connection and per worker, so the fault
+//! sequence each actor sees depends only on the plan's seed and the
+//! actor's index — never on thread interleaving. A run is reproducible
+//! from its spec string.
+//!
+//! When no plan is configured the serving stack holds `None` instead
+//! of an injector and every site reduces to one `Option` check; the
+//! `microbench_hotpath` perf gates run with faults off and hold the
+//! layer to "free when disabled".
+
+pub mod injector;
+pub mod spec;
+
+pub use injector::{FaultCounts, FaultInjector, FaultStream};
+pub use spec::{FaultPlan, FAULTS_ENV};

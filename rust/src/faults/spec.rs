@@ -1,0 +1,216 @@
+//! The fault *plan*: a seeded, declarative description of which faults
+//! to inject and how often, parsed from `serve --faults <spec>` or the
+//! `CORDIC_DCT_FAULTS` environment variable.
+//!
+//! A spec is a comma-separated `key=value` list, e.g.
+//!
+//! ```text
+//! seed=7,slow-read=0.05,short-write=0.1,disconnect=0.02,panic=0.03
+//! ```
+//!
+//! Probabilities are per *injection site visit* (per socket read, per
+//! write, per job), not per request, so a single request crossing many
+//! sites sees a correspondingly higher compound fault rate. All
+//! randomness derives from `seed` through [`crate::util::prng::Rng`]
+//! forks, so a run is reproducible from its spec string alone.
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Environment variable consulted by [`FaultPlan::from_env`]. The CLI
+/// flag `serve --faults <spec>` takes precedence when both are set.
+pub const FAULTS_ENV: &str = "CORDIC_DCT_FAULTS";
+
+/// A parsed, validated fault-injection plan.
+///
+/// The default plan injects nothing (all probabilities zero); a
+/// [`crate::faults::FaultInjector`] built from it draws no randomness
+/// on the hot path because every decision helper first checks the
+/// probability against zero.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Root seed for all injection randomness (`seed=`; default 1).
+    pub seed: u64,
+    /// Probability a socket read is delayed by `slow_ms` (`slow-read=`).
+    pub slow_read: f64,
+    /// Probability a socket write is delayed by `slow_ms`
+    /// (`slow-write=`).
+    pub slow_write: f64,
+    /// Probability a socket read returns fewer bytes than asked for
+    /// (`short-read=`). Progress is still guaranteed: at least one
+    /// byte is transferred, so correct callers that loop survive.
+    pub short_read: f64,
+    /// Probability a socket write accepts only a prefix of the buffer
+    /// (`short-write=`).
+    pub short_write: f64,
+    /// Probability a socket write aborts mid-frame after transferring
+    /// half the buffer (`disconnect=`).
+    pub disconnect: f64,
+    /// Probability one bit of an outbound response payload is flipped
+    /// before framing (`bitflip=`).
+    pub bitflip: f64,
+    /// Probability a worker panics while running a job (`panic=`).
+    pub panic: f64,
+    /// Probability a job is delayed by `latency_ms` before running
+    /// (`latency=`).
+    pub latency: f64,
+    /// Delay applied by slow reads/writes, in milliseconds
+    /// (`slow-ms=`; default 5).
+    pub slow_ms: u64,
+    /// Delay applied by the job-latency fault, in milliseconds
+    /// (`latency-ms=`; default 20).
+    pub latency_ms: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 1,
+            slow_read: 0.0,
+            slow_write: 0.0,
+            short_read: 0.0,
+            short_write: 0.0,
+            disconnect: 0.0,
+            bitflip: 0.0,
+            panic: 0.0,
+            latency: 0.0,
+            slow_ms: 5,
+            latency_ms: 20,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated `key=value` spec string. Unknown keys
+    /// and out-of-range probabilities are hard errors — a chaos run
+    /// with a silently dropped fault key would report false health.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((key, value)) = part.split_once('=') else {
+                bail!("fault spec entry {part:?} is not key=value");
+            };
+            let (key, value) = (key.trim(), value.trim());
+            match key {
+                "seed" => plan.seed = parse_u64(key, value)?,
+                "slow-read" => plan.slow_read = parse_prob(key, value)?,
+                "slow-write" => plan.slow_write = parse_prob(key, value)?,
+                "short-read" => plan.short_read = parse_prob(key, value)?,
+                "short-write" => {
+                    plan.short_write = parse_prob(key, value)?;
+                }
+                "disconnect" => plan.disconnect = parse_prob(key, value)?,
+                "bitflip" => plan.bitflip = parse_prob(key, value)?,
+                "panic" => plan.panic = parse_prob(key, value)?,
+                "latency" => plan.latency = parse_prob(key, value)?,
+                "slow-ms" => plan.slow_ms = parse_u64(key, value)?,
+                "latency-ms" => plan.latency_ms = parse_u64(key, value)?,
+                other => bail!(
+                    "unknown fault key {other:?} (valid: seed, slow-read, \
+                     slow-write, short-read, short-write, disconnect, \
+                     bitflip, panic, latency, slow-ms, latency-ms)"
+                ),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Read a plan from [`FAULTS_ENV`]. Returns `Ok(None)` when the
+    /// variable is unset or empty; a set-but-invalid spec is an error
+    /// (never silently ignored).
+    pub fn from_env() -> Result<Option<FaultPlan>> {
+        match std::env::var(FAULTS_ENV) {
+            Ok(spec) if !spec.trim().is_empty() => {
+                let plan = Self::parse(&spec).with_context(|| {
+                    format!("parsing {FAULTS_ENV}={spec:?}")
+                })?;
+                Ok(Some(plan))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// True when the plan can never fire (all probabilities zero).
+    pub fn is_noop(&self) -> bool {
+        self.slow_read == 0.0
+            && self.slow_write == 0.0
+            && self.short_read == 0.0
+            && self.short_write == 0.0
+            && self.disconnect == 0.0
+            && self.bitflip == 0.0
+            && self.panic == 0.0
+            && self.latency == 0.0
+    }
+}
+
+fn parse_u64(key: &str, value: &str) -> Result<u64> {
+    value
+        .parse::<u64>()
+        .map_err(|e| anyhow::anyhow!("fault key {key}={value:?}: {e}"))
+}
+
+fn parse_prob(key: &str, value: &str) -> Result<f64> {
+    let p: f64 = value
+        .parse()
+        .map_err(|e| anyhow::anyhow!("fault key {key}={value:?}: {e}"))?;
+    ensure!(
+        (0.0..=1.0).contains(&p),
+        "fault key {key}={value}: probability must be in [0, 1]"
+    );
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_noop() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_noop());
+        assert_eq!(plan.seed, 1);
+        assert_eq!(plan.slow_ms, 5);
+        assert_eq!(plan.latency_ms, 20);
+    }
+
+    #[test]
+    fn parses_full_spec() {
+        let plan = FaultPlan::parse(
+            "seed=7, slow-read=0.05, slow-write=0.1, short-read=0.2, \
+             short-write=0.3, disconnect=0.02, bitflip=0.01, panic=0.03, \
+             latency=0.5, slow-ms=9, latency-ms=33",
+        )
+        .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.slow_read, 0.05);
+        assert_eq!(plan.slow_write, 0.1);
+        assert_eq!(plan.short_read, 0.2);
+        assert_eq!(plan.short_write, 0.3);
+        assert_eq!(plan.disconnect, 0.02);
+        assert_eq!(plan.bitflip, 0.01);
+        assert_eq!(plan.panic, 0.03);
+        assert_eq!(plan.latency, 0.5);
+        assert_eq!(plan.slow_ms, 9);
+        assert_eq!(plan.latency_ms, 33);
+        assert!(!plan.is_noop());
+    }
+
+    #[test]
+    fn empty_spec_is_default() {
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        assert_eq!(FaultPlan::parse(" , ").unwrap(), FaultPlan::default());
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(FaultPlan::parse("warp=0.5").is_err());
+        assert!(FaultPlan::parse("panic").is_err());
+        assert!(FaultPlan::parse("panic=1.5").is_err());
+        assert!(FaultPlan::parse("panic=-0.1").is_err());
+        assert!(FaultPlan::parse("seed=abc").is_err());
+        assert!(FaultPlan::parse("slow-ms=-3").is_err());
+    }
+}

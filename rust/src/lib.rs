@@ -72,6 +72,11 @@
 //!   and `CDC3` color containers.
 //! * [`metrics`] — MSE / PSNR / SSIM, per-channel + luma-weighted color
 //!   metrics, and latency statistics.
+//! * [`faults`] — deterministic, seeded fault injection for chaos
+//!   testing: socket-level slow/short reads and writes, mid-frame
+//!   disconnects, outbound bit-flips, worker panics and artificial job
+//!   latency — all behind an `Option` so production paths pay nothing
+//!   when no plan is configured.
 //! * [`runtime`] — the GPU lane: artifact manifest, PJRT executable
 //!   cache, the bit-exact stub backend, and the planar-batch executor
 //!   (gray + color, plane-parallel).
@@ -80,8 +85,10 @@
 //!   histeq requests).
 //! * [`serve`] — the TCP front-end over the coordinator: length-prefixed
 //!   binary framing, admission control + structured overload replies,
-//!   per-connection timeouts, a blocking client, and the load generator
-//!   behind `ablation_serve_load`.
+//!   per-connection timeouts, a blocking client plus a retrying,
+//!   circuit-breaking variant, load-shedding `Degraded` replies, and
+//!   the load generator behind `ablation_serve_load` and
+//!   `ablation_chaos`.
 //! * [`bench`] — the measurement harness and the paper-table formatters
 //!   used by `cargo bench` targets (now with serial/parallel/GPU columns).
 
@@ -89,6 +96,7 @@ pub mod bench;
 pub mod codec;
 pub mod coordinator;
 pub mod dct;
+pub mod faults;
 pub mod image;
 pub mod metrics;
 pub mod runtime;

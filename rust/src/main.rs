@@ -9,8 +9,10 @@
 //!                       [--stub-gpu]
 //! cordic-dct serve      --listen 127.0.0.1:7070 [--max-conns 32]
 //!                       [--duration-s 0] [--stub-gpu]
+//!                       [--faults seed=1,panic=0.01,...] [--degrade]
 //! cordic-dct loadgen    --addr 127.0.0.1:7070 --clients 4 --requests 16
 //!                       [--size 128] [--color] [--json load.json]
+//!                       [--faults] [--seed 1]
 //! cordic-dct psnr       --a ref.png --b test.png [--color] [--lane gpu]
 //!                       [--json psnr.json]
 //! cordic-dct histeq     --input img.pgm --output eq.pgm [--lane gpu]
@@ -400,6 +402,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("duration-s", "0",
              "TCP mode: serve this long then shut down gracefully \
               (0 = until killed)")
+        .opt("faults", "",
+             "TCP mode: seeded fault-injection spec, e.g. \
+              seed=7,slow-read=0.05,panic=0.01 (default: the \
+              CORDIC_DCT_FAULTS env var)")
+        .flag("degrade",
+              "TCP mode: answer queue-rejected compress requests with a \
+               reduced-quality Degraded result instead of Overloaded")
         .parse(args)?;
     let n = m.get_usize("requests")?;
     let size = m.get_usize("size")?;
@@ -498,10 +507,22 @@ fn serve_tcp(
     m: &cordic_dct::util::cli::Matches,
     service: ServiceConfig,
 ) -> Result<()> {
+    use cordic_dct::faults::FaultPlan;
     use cordic_dct::serve::{ServeConfig, TcpServer};
+    let spec = m.get("faults");
+    let faults = if spec.is_empty() {
+        FaultPlan::from_env()?
+    } else {
+        Some(FaultPlan::parse(spec)?)
+    };
+    if let Some(plan) = &faults {
+        println!("fault injection armed: {plan:?}");
+    }
     let cfg = ServeConfig {
         service,
         max_connections: m.get_usize("max-conns")?.max(1),
+        faults,
+        degrade: m.flag("degrade"),
         ..Default::default()
     };
     let server = TcpServer::bind(m.get("listen"), cfg)?;
@@ -541,6 +562,10 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
         .opt("lane", "cpu", "cpu|cpu-parallel|gpu|auto")
         .flag("color", "send color jobs")
         .flag("psnr", "ask the server for PSNR (disables the fast path)")
+        .flag("faults",
+              "chaos mode: retrying clients, per-cause error counts, and \
+               resilience invariant checks (non-zero exit on violation)")
+        .opt("seed", "1", "chaos mode: retry-jitter seed")
         .opt("json", "", "write the report as JSON here")
         .parse(args)?;
     let addr: std::net::SocketAddr = m
@@ -559,6 +584,8 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
         variant: parse_variant(m.get("variant"))?,
         lane: parse_lane(m.get("lane"))?,
         want_psnr: m.flag("psnr"),
+        faults: m.flag("faults"),
+        seed: m.get_u64("seed")?,
         ..LoadSpec::new(addr)
     };
     let report = run_load(&spec)?;
@@ -569,6 +596,13 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
             .with_context(|| format!("writing {path}"))?;
         println!("wrote {path}");
     }
+    // a chaos soak fails loudly: any invariant violation is a bug in
+    // the resilience layer, not load noise
+    anyhow::ensure!(
+        report.invariant_violations == 0,
+        "{} resilience invariant violation(s)",
+        report.invariant_violations
+    );
     Ok(())
 }
 

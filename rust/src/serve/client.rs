@@ -1,8 +1,22 @@
-//! A small blocking client for the serve protocol — used by the load
+//! Blocking clients for the serve protocol — used by the load
 //! generator, the integration tests, and the `loadgen` CLI subcommand.
+//!
+//! Two tiers:
+//!
+//! - [`Client`]: one TCP connection, one request frame in, one response
+//!   frame out. Transport failures come back as a typed
+//!   [`RequestError`] through [`Client::try_request`] (the `anyhow`
+//!   surface of [`Client::request`] wraps the same value).
+//! - [`RetryClient`]: reconnecting wrapper with exponential backoff +
+//!   deterministic jitter, a per-attempt deadline, and a
+//!   [`CircuitBreaker`]. It retries **only** transient failures —
+//!   connect errors, Overloaded frames, response timeouts — and never
+//!   a decode/server error, which would fail identically on every
+//!   attempt.
 
+use std::fmt;
 use std::io::{BufReader, BufWriter};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
@@ -12,9 +26,67 @@ use crate::dct::Variant;
 use crate::image::color::ColorImage;
 use crate::image::ycbcr::Subsampling;
 use crate::image::GrayImage;
+use crate::util::prng::Rng;
 
 use super::framing::{self, FrameEvent, MAX_FRAME_LEN_DEFAULT};
 use super::protocol::{ImagePayload, RequestMsg, ResponseMsg};
+
+/// A request failure, classified for retry decisions.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RequestError {
+    /// Could not connect, or the connection died mid-request; the
+    /// string carries the transport detail.
+    Connect(String),
+    /// The server answered an Overloaded frame (queue or admission
+    /// backpressure) — the request never ran.
+    Overloaded,
+    /// No response within the per-request deadline.
+    Timeout(String),
+    /// The response frame failed to decode; the connection is suspect.
+    Malformed(String),
+    /// A structured server error frame, typed for callers that convert
+    /// frames into errors. Deterministic — never retried.
+    Server { code: u16, message: String },
+    /// The circuit breaker is open; the request was not attempted.
+    CircuitOpen,
+}
+
+impl RequestError {
+    /// Transient failures worth another attempt. Everything else would
+    /// fail the same way again.
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            RequestError::Connect(_)
+                | RequestError::Overloaded
+                | RequestError::Timeout(_)
+        )
+    }
+}
+
+impl fmt::Display for RequestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            // Connect/Timeout print their detail verbatim so the
+            // long-standing message contracts ("server closed the
+            // connection mid-request", "no response within ...") hold
+            RequestError::Connect(s) => f.write_str(s),
+            RequestError::Timeout(s) => f.write_str(s),
+            RequestError::Malformed(s) => {
+                write!(f, "malformed response frame: {s}")
+            }
+            RequestError::Overloaded => f.write_str("server overloaded"),
+            RequestError::Server { code, message } => {
+                write!(f, "server error {code}: {message}")
+            }
+            RequestError::CircuitOpen => {
+                f.write_str("circuit breaker open: request not attempted")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
 
 /// A successful compression reply.
 #[derive(Debug, Clone)]
@@ -23,6 +95,9 @@ pub struct Compressed {
     pub psnr_db: Option<f64>,
     /// The CDC1/CDC3 container bytes.
     pub container: Vec<u8>,
+    /// True when the server shed load and answered a reduced-quality
+    /// `Degraded` frame instead of a normal result.
+    pub degraded: bool,
 }
 
 /// Blocking protocol client over one TCP connection.
@@ -39,6 +114,21 @@ impl Client {
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Client> {
         let stream =
             TcpStream::connect(addr).context("connecting to server")?;
+        Self::from_stream(stream)
+    }
+
+    /// Like [`Client::connect`] but bounded: a dead or blackholed
+    /// address fails within `timeout` instead of the OS default.
+    pub fn connect_timeout(
+        addr: &SocketAddr,
+        timeout: Duration,
+    ) -> Result<Client> {
+        let stream = TcpStream::connect_timeout(addr, timeout)
+            .context("connecting to server")?;
+        Self::from_stream(stream)
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<Client> {
         stream.set_read_timeout(Some(Duration::from_millis(200)))?;
         stream.set_write_timeout(Some(Duration::from_secs(10)))?;
         let _ = stream.set_nodelay(true);
@@ -64,25 +154,43 @@ impl Client {
 
     /// Send one request frame and wait for its response frame.
     pub fn request(&mut self, msg: &RequestMsg) -> Result<ResponseMsg> {
+        self.try_request(msg).map_err(anyhow::Error::from)
+    }
+
+    /// [`Client::request`] with the failure classified for retry logic.
+    pub fn try_request(
+        &mut self,
+        msg: &RequestMsg,
+    ) -> Result<ResponseMsg, RequestError> {
         let (kind, payload) = msg.encode();
-        framing::write_frame(&mut self.writer, kind, &payload)?;
+        framing::write_frame(&mut self.writer, kind, &payload)
+            .map_err(|e| RequestError::Connect(format!("{e:#}")))?;
         let t0 = Instant::now();
         loop {
-            match framing::read_frame(&mut self.reader, self.max_frame_len)?
+            match framing::read_frame(&mut self.reader, self.max_frame_len)
             {
-                FrameEvent::Frame { kind, payload } => {
-                    return ResponseMsg::decode(kind, &payload)
+                Ok(FrameEvent::Frame { kind, payload }) => {
+                    return ResponseMsg::decode(kind, &payload).map_err(
+                        |e| RequestError::Malformed(format!("{e:#}")),
+                    )
                 }
-                FrameEvent::Eof => {
-                    bail!("server closed the connection mid-request")
+                Ok(FrameEvent::Eof) => {
+                    return Err(RequestError::Connect(
+                        "server closed the connection mid-request".into(),
+                    ))
                 }
-                FrameEvent::Idle => {
+                Ok(FrameEvent::Idle) => {
                     if t0.elapsed() > self.response_deadline {
-                        bail!(
+                        return Err(RequestError::Timeout(format!(
                             "no response within {:?}",
                             self.response_deadline
-                        );
+                        )));
                     }
+                }
+                // a mid-frame stall or desync: the connection cannot be
+                // reused, which is exactly what Connect signals
+                Err(e) => {
+                    return Err(RequestError::Connect(format!("{e:#}")))
                 }
             }
         }
@@ -126,18 +234,7 @@ impl Client {
             lane,
             want_psnr,
         };
-        match Self::expect_ok(self.request(&msg)?)? {
-            ResponseMsg::Compressed {
-                lane,
-                psnr_db,
-                container,
-            } => Ok(Compressed {
-                lane,
-                psnr_db,
-                container,
-            }),
-            other => bail!("expected Compressed, got {other:?}"),
-        }
+        compressed_reply(Self::expect_ok(self.request(&msg)?)?)
     }
 
     pub fn compress_color(
@@ -155,18 +252,7 @@ impl Client {
             subsampling,
             want_psnr,
         };
-        match Self::expect_ok(self.request(&msg)?)? {
-            ResponseMsg::Compressed {
-                lane,
-                psnr_db,
-                container,
-            } => Ok(Compressed {
-                lane,
-                psnr_db,
-                container,
-            }),
-            other => bail!("expected Compressed, got {other:?}"),
-        }
+        compressed_reply(Self::expect_ok(self.request(&msg)?)?)
     }
 
     /// Decode a container server-side; returns the reconstructed pixels.
@@ -198,5 +284,353 @@ impl Client {
             } => Ok(g),
             other => bail!("expected gray Image, got {other:?}"),
         }
+    }
+}
+
+/// Accept either a normal `Compressed` frame or a load-shed `Degraded`
+/// one — both carry a valid container.
+fn compressed_reply(resp: ResponseMsg) -> Result<Compressed> {
+    match resp {
+        ResponseMsg::Compressed {
+            lane,
+            psnr_db,
+            container,
+        } => Ok(Compressed {
+            lane,
+            psnr_db,
+            container,
+            degraded: false,
+        }),
+        ResponseMsg::Degraded {
+            lane,
+            psnr_db,
+            container,
+        } => Ok(Compressed {
+            lane,
+            psnr_db,
+            container,
+            degraded: true,
+        }),
+        other => bail!("expected Compressed, got {other:?}"),
+    }
+}
+
+/// Retry/backoff knobs for [`RetryClient`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts (first try + retries).
+    pub max_attempts: u32,
+    /// Backoff before retry `n` is `base_backoff * 2^n`, capped at
+    /// `max_backoff`, then jittered down to at least half.
+    pub base_backoff: Duration,
+    pub max_backoff: Duration,
+    /// Bound on each attempt's TCP connect.
+    pub connect_timeout: Duration,
+    /// Per-attempt response deadline (passed to the underlying
+    /// [`Client::with_deadline`]).
+    pub attempt_deadline: Duration,
+    /// Seed for the deterministic jitter stream — same seed, same
+    /// backoff schedule.
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(500),
+            connect_timeout: Duration::from_secs(2),
+            attempt_deadline: Duration::from_secs(10),
+            jitter_seed: 1,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before the retry following attempt `attempt` (0-based):
+    /// exponential, capped, jittered into `[cap/2, cap]` so synchronized
+    /// clients spread out instead of stampeding in lockstep.
+    pub fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let cap = self
+            .base_backoff
+            .saturating_mul(1u32 << attempt.min(16))
+            .min(self.max_backoff);
+        let nanos = cap.as_nanos() as u64;
+        if nanos == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(nanos / 2 + rng.below(nanos / 2 + 1))
+    }
+
+    /// Worst-case wall clock one [`RetryClient::request`] can consume:
+    /// every attempt burns its connect timeout, its full deadline, and a
+    /// maximal backoff. The chaos harness asserts no request exceeds it.
+    pub fn total_budget(&self) -> Duration {
+        let per = self.connect_timeout + self.attempt_deadline
+            + self.max_backoff;
+        per * self.max_attempts.max(1)
+    }
+}
+
+/// Consecutive-failure circuit breaker.
+///
+/// Closed → (threshold consecutive failures) → Open for `cooldown` →
+/// Half-open: the next request is allowed through as a probe; its
+/// success closes the breaker, its failure re-opens it. Time is passed
+/// in explicitly so the state machine is testable without sleeping.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    cooldown: Duration,
+    consecutive: u32,
+    open_until: Option<Instant>,
+    half_open: bool,
+}
+
+impl CircuitBreaker {
+    pub fn new(threshold: u32, cooldown: Duration) -> CircuitBreaker {
+        CircuitBreaker {
+            threshold: threshold.max(1),
+            cooldown,
+            consecutive: 0,
+            open_until: None,
+            half_open: false,
+        }
+    }
+
+    /// May a request be attempted at `now`? Transitions Open →
+    /// Half-open once the cooldown has elapsed.
+    pub fn allow(&mut self, now: Instant) -> bool {
+        if let Some(until) = self.open_until {
+            if now < until {
+                return false;
+            }
+            self.open_until = None;
+            self.half_open = true;
+        }
+        true
+    }
+
+    /// Currently refusing requests (cooldown not yet elapsed)?
+    pub fn is_open(&self, now: Instant) -> bool {
+        matches!(self.open_until, Some(until) if now < until)
+    }
+
+    pub fn record_success(&mut self) {
+        self.consecutive = 0;
+        self.half_open = false;
+    }
+
+    pub fn record_failure(&mut self, now: Instant) {
+        if self.half_open {
+            // the probe failed: straight back to Open
+            self.trip(now);
+            return;
+        }
+        self.consecutive += 1;
+        if self.consecutive >= self.threshold {
+            self.trip(now);
+        }
+    }
+
+    fn trip(&mut self, now: Instant) {
+        self.open_until = Some(now + self.cooldown);
+        self.half_open = false;
+        self.consecutive = 0;
+    }
+}
+
+impl Default for CircuitBreaker {
+    fn default() -> Self {
+        CircuitBreaker::new(5, Duration::from_millis(250))
+    }
+}
+
+/// Reconnecting client with retries, backoff, and a circuit breaker.
+///
+/// Retries only [`RequestError::retryable`] failures (connect,
+/// Overloaded, timeout); decode and server errors surface immediately.
+/// `Degraded` and `Error` frames pass through as `Ok` responses — they
+/// are answers, not transport failures.
+pub struct RetryClient {
+    addr: SocketAddr,
+    policy: RetryPolicy,
+    breaker: CircuitBreaker,
+    rng: Rng,
+    conn: Option<Client>,
+    retries: u64,
+}
+
+impl RetryClient {
+    pub fn new(addr: SocketAddr, policy: RetryPolicy) -> RetryClient {
+        let rng = Rng::new(policy.jitter_seed);
+        RetryClient {
+            addr,
+            policy,
+            breaker: CircuitBreaker::default(),
+            rng,
+            conn: None,
+            retries: 0,
+        }
+    }
+
+    /// Replace the default breaker (5 failures, 250 ms cooldown).
+    pub fn with_breaker(mut self, breaker: CircuitBreaker) -> RetryClient {
+        self.breaker = breaker;
+        self
+    }
+
+    /// Retries performed so far (attempts beyond each first try).
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    pub fn policy(&self) -> &RetryPolicy {
+        &self.policy
+    }
+
+    /// Send one request with retries. Connections are lazy: the first
+    /// request (and the first after any transport failure) reconnects.
+    pub fn request(
+        &mut self,
+        msg: &RequestMsg,
+    ) -> Result<ResponseMsg, RequestError> {
+        let mut last: Option<RequestError> = None;
+        for attempt in 0..self.policy.max_attempts {
+            if attempt > 0 {
+                let pause = self.policy.backoff(attempt - 1, &mut self.rng);
+                std::thread::sleep(pause);
+                self.retries += 1;
+            }
+            if !self.breaker.allow(Instant::now()) {
+                return Err(RequestError::CircuitOpen);
+            }
+            let outcome = match self.ensure_conn() {
+                Ok(c) => c.try_request(msg),
+                Err(e) => Err(e),
+            };
+            match outcome {
+                Ok(ResponseMsg::Overloaded) => {
+                    // the connection is healthy, the queue is not:
+                    // count it toward the breaker and back off
+                    self.breaker.record_failure(Instant::now());
+                    last = Some(RequestError::Overloaded);
+                }
+                Ok(resp) => {
+                    self.breaker.record_success();
+                    return Ok(resp);
+                }
+                Err(e) if e.retryable() => {
+                    self.breaker.record_failure(Instant::now());
+                    self.conn = None;
+                    last = Some(e);
+                }
+                // deterministic failures (decode errors, server errors,
+                // malformed frames) never improve with retries
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last.unwrap_or(RequestError::CircuitOpen))
+    }
+
+    fn ensure_conn(&mut self) -> Result<&mut Client, RequestError> {
+        if self.conn.is_none() {
+            let c = Client::connect_timeout(
+                &self.addr,
+                self.policy.connect_timeout,
+            )
+            .map_err(|e| RequestError::Connect(format!("{e:#}")))?
+            .with_deadline(self.policy.attempt_deadline);
+            self.conn = Some(c);
+        }
+        Ok(self.conn.as_mut().expect("connection just ensured"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_jittered() {
+        let policy = RetryPolicy::default();
+        let mut a = Rng::new(policy.jitter_seed);
+        let mut b = Rng::new(policy.jitter_seed);
+        for attempt in 0..10 {
+            let cap = policy
+                .base_backoff
+                .saturating_mul(1u32 << attempt.min(16))
+                .min(policy.max_backoff);
+            let d = policy.backoff(attempt, &mut a);
+            assert_eq!(d, policy.backoff(attempt, &mut b));
+            assert!(d <= cap, "attempt {attempt}: {d:?} > {cap:?}");
+            assert!(
+                d >= cap / 2,
+                "attempt {attempt}: {d:?} < half of {cap:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn breaker_trips_half_opens_and_recovers() {
+        let cooldown = Duration::from_millis(100);
+        let mut br = CircuitBreaker::new(3, cooldown);
+        let t0 = Instant::now();
+        assert!(br.allow(t0));
+        br.record_failure(t0);
+        br.record_failure(t0);
+        assert!(br.allow(t0), "below threshold stays closed");
+        br.record_failure(t0);
+        assert!(br.is_open(t0));
+        assert!(!br.allow(t0), "tripped breaker refuses requests");
+        // cooldown elapses: the next request goes through as a probe
+        let t1 = t0 + cooldown;
+        assert!(br.allow(t1));
+        // a failed probe re-opens immediately, not after 3 failures
+        br.record_failure(t1);
+        assert!(!br.allow(t1));
+        let t2 = t1 + cooldown;
+        assert!(br.allow(t2));
+        br.record_success();
+        assert!(!br.is_open(t2));
+        // closed again: failures below the threshold are tolerated
+        br.record_failure(t2);
+        br.record_failure(t2);
+        assert!(br.allow(t2));
+    }
+
+    #[test]
+    fn retryable_classification() {
+        assert!(RequestError::Connect("x".into()).retryable());
+        assert!(RequestError::Overloaded.retryable());
+        assert!(RequestError::Timeout("x".into()).retryable());
+        assert!(!RequestError::Malformed("x".into()).retryable());
+        assert!(!RequestError::CircuitOpen.retryable());
+        let server = RequestError::Server {
+            code: 20,
+            message: "boom".into(),
+        };
+        assert!(!server.retryable());
+    }
+
+    #[test]
+    fn display_preserves_message_contracts() {
+        let e = RequestError::Connect(
+            "server closed the connection mid-request".into(),
+        );
+        assert_eq!(
+            e.to_string(),
+            "server closed the connection mid-request"
+        );
+        assert_eq!(
+            RequestError::Overloaded.to_string(),
+            "server overloaded"
+        );
+        let e = RequestError::Server {
+            code: 22,
+            message: "worker panicked".into(),
+        };
+        assert_eq!(e.to_string(), "server error 22: worker panicked");
     }
 }

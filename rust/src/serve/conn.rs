@@ -8,22 +8,46 @@
 //! desynchronized byte stream (bad length prefix, mid-frame stall or
 //! disconnect) closes the connection — after a best-effort error frame —
 //! because framing cannot resynchronize.
+//!
+//! Two optional layers sit on top:
+//!
+//! - **Fault injection** (chaos testing): when the server carries a
+//!   [`FaultInjector`], each connection forks its own deterministic
+//!   stream and wraps both socket halves in a [`FaultStream`] (slow and
+//!   short reads/writes, mid-frame disconnects), plus outbound payload
+//!   bit-flips applied after encoding. Disabled, the whole layer is one
+//!   `Option` check per connection.
+//! - **Graceful degradation** (`--degrade`): a compress request the
+//!   queue rejected is answered with a reduced-quality
+//!   [`ResponseMsg::Degraded`] result computed inline on the serial
+//!   lane, instead of a bare Overloaded refusal.
 
-use std::io::{BufReader, BufWriter};
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::codec::classify_decode_error;
-use crate::coordinator::{JobHandle, JobOutput, Lane, Service};
+use crate::codec::{
+    classify_decode_error, color as color_codec, encoder, variant_tag,
+    Header,
+};
+use crate::coordinator::{
+    JobHandle, JobOutput, Lane, Service, JOB_PANIC_TAG,
+};
+use crate::dct::batch::EngineConfig;
+use crate::dct::color::ColorPipeline;
+use crate::dct::pipeline::CpuPipeline;
+use crate::faults::{FaultInjector, FaultStream};
 use crate::log_debug;
+use crate::metrics::{color::psnr_color, psnr};
 use crate::util::json::Json;
 
 use super::framing::{self, FrameEvent};
 use super::protocol::{
     decode_error_code, ImagePayload, RequestMsg, ResponseMsg,
-    ERR_BAD_FRAME, ERR_JOB_FAILED, ERR_JOB_TIMEOUT,
+    ERR_BAD_FRAME, ERR_JOB_FAILED, ERR_JOB_TIMEOUT, ERR_WORKER_PANIC,
 };
 use super::server::Shared;
 
@@ -43,8 +67,35 @@ fn serve_conn(stream: TcpStream, sh: &Shared) -> Result<()> {
     stream.set_read_timeout(Some(sh.read_timeout))?;
     stream.set_write_timeout(Some(sh.write_timeout))?;
     let _ = stream.set_nodelay(true);
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
+    let read_half = stream.try_clone()?;
+    match &sh.faults {
+        Some(root) => {
+            // each connection gets its own fork so decisions stay
+            // deterministic per stream regardless of accept order
+            let seq = sh.fault_seq.fetch_add(1, Ordering::SeqCst);
+            let inj = Arc::new(root.fork(seq));
+            let reader = BufReader::new(FaultStream::new(
+                read_half,
+                Arc::clone(&inj),
+            ));
+            let writer =
+                BufWriter::new(FaultStream::new(stream, Arc::clone(&inj)));
+            frame_loop(reader, writer, sh, Some(&inj))
+        }
+        None => {
+            let reader = BufReader::new(read_half);
+            let writer = BufWriter::new(stream);
+            frame_loop(reader, writer, sh, None)
+        }
+    }
+}
+
+fn frame_loop(
+    mut reader: impl Read,
+    mut writer: impl Write,
+    sh: &Shared,
+    inj: Option<&FaultInjector>,
+) -> Result<()> {
     loop {
         match framing::read_frame(&mut reader, sh.max_frame_len) {
             Ok(FrameEvent::Eof) => return Ok(()),
@@ -58,10 +109,20 @@ fn serve_conn(stream: TcpStream, sh: &Shared) -> Result<()> {
                 let ctr = match resp {
                     ResponseMsg::Error { .. }
                     | ResponseMsg::Overloaded => &sh.counters.frames_error,
+                    ResponseMsg::Degraded { .. } => {
+                        sh.counters.degraded.fetch_add(1, Ordering::SeqCst);
+                        &sh.counters.frames_ok
+                    }
                     _ => &sh.counters.frames_ok,
                 };
                 ctr.fetch_add(1, Ordering::SeqCst);
-                let (k, body) = resp.encode();
+                let (k, mut body) = resp.encode();
+                if let Some(f) = inj {
+                    // corrupt the encoded payload, not the framing, so
+                    // the client sees a well-formed frame carrying a
+                    // damaged container — the hardest case to detect
+                    f.flip_bit(&mut body);
+                }
                 framing::write_frame(&mut writer, k, &body)?;
             }
             Err(e) => {
@@ -100,30 +161,138 @@ fn process(sh: &Shared, kind: u8, payload: &[u8]) -> ResponseMsg {
             variant,
             lane,
             want_psnr,
-        } => submit_and_wait(sh, |svc| {
-            svc.compress_opts(image, variant, lane, want_psnr)
-        }),
+        } => {
+            let resp = submit_and_wait(sh, |svc| {
+                svc.compress_opts(image, variant, lane, want_psnr)
+            });
+            degrade_if_overloaded(sh, kind, payload, resp)
+        }
         RequestMsg::CompressColor {
             image,
             variant,
             lane,
             subsampling,
             want_psnr,
-        } => submit_and_wait(sh, |svc| {
-            svc.compress_color_opts(
-                image,
-                variant,
-                lane,
-                subsampling,
-                want_psnr,
-            )
-        }),
+        } => {
+            let resp = submit_and_wait(sh, |svc| {
+                svc.compress_color_opts(
+                    image,
+                    variant,
+                    lane,
+                    subsampling,
+                    want_psnr,
+                )
+            });
+            degrade_if_overloaded(sh, kind, payload, resp)
+        }
         RequestMsg::Decode { container, lane } => {
             submit_and_wait(sh, |svc| svc.decode(container, lane))
         }
         RequestMsg::Histeq { image, lane } => {
             submit_and_wait(sh, |svc| svc.histeq(image, lane))
         }
+    }
+}
+
+/// Load shedding: an Overloaded answer to a compress request becomes a
+/// reduced-quality [`ResponseMsg::Degraded`] reply when the server was
+/// started with `--degrade`. Non-compress requests (and every other
+/// response) pass through untouched.
+fn degrade_if_overloaded(
+    sh: &Shared,
+    kind: u8,
+    payload: &[u8],
+    resp: ResponseMsg,
+) -> ResponseMsg {
+    if !sh.degrade || !matches!(resp, ResponseMsg::Overloaded) {
+        return resp;
+    }
+    // re-decode the request: the frame already parsed once, so the only
+    // way this fails is a logic bug — fall back to the plain refusal
+    // rather than risking a panic on the degrade path
+    match RequestMsg::decode(kind, payload) {
+        Ok(msg) => {
+            degraded_reply(sh, msg).unwrap_or(ResponseMsg::Overloaded)
+        }
+        Err(_) => ResponseMsg::Overloaded,
+    }
+}
+
+/// Compute the reduced-quality result inline on the connection thread:
+/// serial CPU lane at half the service quality (floor 10). The work
+/// deliberately bypasses the saturated queue — shedding trades fidelity
+/// and this one thread's latency for availability, which beats making
+/// the client retry against a queue that is already full.
+fn degraded_reply(sh: &Shared, msg: RequestMsg) -> Option<ResponseMsg> {
+    let dq = (sh.service.quality() / 2).max(10);
+    match msg {
+        RequestMsg::CompressGray {
+            image,
+            variant,
+            want_psnr,
+            ..
+        } => {
+            let pipe = CpuPipeline::new(variant, dq);
+            let (psnr_db, scanned) = if want_psnr {
+                let out = pipe.compress_fused(&image);
+                (Some(psnr(&image, &out.recon)), out.scanned)
+            } else {
+                (None, pipe.analyze_scanned(&image))
+            };
+            let header = Header {
+                width: image.width as u32,
+                height: image.height as u32,
+                padded_width: scanned.padded_width as u32,
+                padded_height: scanned.padded_height as u32,
+                quality: dq,
+                variant: variant_tag(variant),
+            };
+            let container =
+                encoder::encode_scanned(&header, &scanned).ok()?;
+            Some(ResponseMsg::Degraded {
+                lane: Lane::Cpu,
+                psnr_db,
+                container,
+            })
+        }
+        RequestMsg::CompressColor {
+            image,
+            variant,
+            subsampling,
+            want_psnr,
+            ..
+        } => {
+            let pipe = ColorPipeline::new_with(
+                variant,
+                dq,
+                subsampling,
+                EngineConfig::default(),
+            );
+            let (psnr_db, planes) = if want_psnr {
+                let out = pipe.compress_fused(&image);
+                (
+                    Some(psnr_color(&image, &out.recon).weighted),
+                    out.scanned,
+                )
+            } else {
+                (None, pipe.analyze_scanned(&image))
+            };
+            let header = color_codec::ColorHeader {
+                width: image.width as u32,
+                height: image.height as u32,
+                quality: dq,
+                variant: variant_tag(variant),
+                subsampling: color_codec::subsampling_tag(subsampling),
+            };
+            let container =
+                color_codec::encode_scanned(&header, &planes).ok()?;
+            Some(ResponseMsg::Degraded {
+                lane: Lane::Cpu,
+                psnr_db,
+                container,
+            })
+        }
+        _ => None,
     }
 }
 
@@ -158,13 +327,20 @@ fn submit_and_wait(
     match resp.result {
         Ok(out) => output_msg(resp.lane, out),
         Err(e) => {
+            let message = format!("{e:#}");
+            // a panicked job already cost a worker respawn; answer the
+            // dedicated code so clients can distinguish it from a
+            // deterministic job failure (and avoid retrying it blindly)
+            if message.contains(JOB_PANIC_TAG) {
+                return ResponseMsg::Error {
+                    code: ERR_WORKER_PANIC,
+                    message,
+                };
+            }
             let code = classify_decode_error(&e)
                 .map(decode_error_code)
                 .unwrap_or(ERR_JOB_FAILED);
-            ResponseMsg::Error {
-                code,
-                message: format!("{e:#}"),
-            }
+            ResponseMsg::Error { code, message }
         }
     }
 }
@@ -206,6 +382,10 @@ fn stats_json(sh: &Shared) -> String {
         ("process_ms_p95", Json::num(s.process.2)),
         ("compiled_executables", s.compiled_executables.into()),
         (
+            "worker_restarts",
+            Json::num(s.worker_restarts as f64),
+        ),
+        (
             "active_connections",
             sh.active.load(Ordering::SeqCst).into(),
         ),
@@ -224,6 +404,10 @@ fn stats_json(sh: &Shared) -> String {
         (
             "overload_rejects",
             Json::num(c.overload_rejects.load(Ordering::SeqCst) as f64),
+        ),
+        (
+            "degraded_replies",
+            Json::num(c.degraded.load(Ordering::SeqCst) as f64),
         ),
     ])
     .to_string()

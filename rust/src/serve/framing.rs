@@ -108,6 +108,15 @@ pub fn read_frame(r: &mut impl Read, max_len: usize) -> Result<FrameEvent> {
     })
 }
 
+/// Encode one frame to bytes — exactly what [`write_frame`] would put
+/// on the wire. Used by tests and tools that need to dribble a frame
+/// onto a socket in deliberate fragments (mid-frame fault coverage).
+pub fn encode_frame(kind: u8, payload: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(payload.len() + 5);
+    write_frame(&mut out, kind, payload)?;
+    Ok(out)
+}
+
 /// Write one frame and flush it.
 pub fn write_frame(
     w: &mut impl Write,
@@ -145,6 +154,19 @@ mod tests {
         assert_eq!((k, p.as_slice()), (7, b"hello".as_slice()));
         let (k, p) = roundtrip(0xE0, &[]);
         assert_eq!((k, p.len()), (0xE0, 0));
+    }
+
+    #[test]
+    fn encode_frame_matches_write_frame() {
+        let mut written = Vec::new();
+        write_frame(&mut written, 5, b"abc").unwrap();
+        assert_eq!(encode_frame(5, b"abc").unwrap(), written);
+        match read_frame(&mut Cursor::new(written), 1024).unwrap() {
+            FrameEvent::Frame { kind, payload } => {
+                assert_eq!((kind, payload.as_slice()), (5, b"abc".as_slice()));
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

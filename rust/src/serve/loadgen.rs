@@ -2,15 +2,30 @@
 //! clients, each issuing back-to-back requests over its own connection,
 //! with exact (sorted-sample) latency percentiles.
 //!
-//! Shared by the `ablation_serve_load` bench target and the `loadgen`
-//! CLI subcommand. Percentiles here are computed from the full sample
-//! vector rather than [`crate::metrics::stats::LatencyHistogram`]'s log
-//! buckets — a load report is small enough to keep every sample, and
-//! tail latency is the headline number, so approximation is the wrong
-//! trade.
+//! Shared by the `ablation_serve_load` / `ablation_chaos` bench targets
+//! and the `loadgen` CLI subcommand. Percentiles here are computed from
+//! the full sample vector rather than
+//! [`crate::metrics::stats::LatencyHistogram`]'s log buckets — a load
+//! report is small enough to keep every sample, and tail latency is the
+//! headline number, so approximation is the wrong trade.
+//!
+//! With [`LoadSpec::faults`] set, the generator becomes the chaos-soak
+//! harness: each client switches to a [`RetryClient`] (backoff + circuit
+//! breaker, per-attempt deadline) and the loop verifies the resilience
+//! invariants instead of bailing on the first transport error —
+//!
+//! 1. no request may outlive the retry policy's worst-case budget
+//!    ([`RetryPolicy::total_budget`]), and
+//! 2. every success must carry a decodable container that is bit-exact
+//!    against the client's first intact reply (the protocol has no
+//!    checksum, so an injected bit-flip must be *caught here* as a
+//!    decode error, never silently counted as a success).
+//!
+//! Violations are tallied in [`LoadReport::invariant_violations`]; the
+//! CI chaos job fails when the count is nonzero.
 
 use std::net::SocketAddr;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -19,8 +34,11 @@ use crate::dct::Variant;
 use crate::image::synthetic;
 use crate::util::json::Json;
 
-use super::client::Client;
-use super::protocol::{RequestMsg, ResponseMsg};
+use super::client::{Client, RequestError, RetryClient, RetryPolicy};
+use super::protocol::{
+    RequestMsg, ResponseMsg, ERR_DECODE_CORRUPT, ERR_DECODE_TRUNCATED,
+    ERR_JOB_TIMEOUT, ERR_WORKER_PANIC,
+};
 
 /// One load run's shape.
 #[derive(Clone, Debug)]
@@ -38,6 +56,14 @@ pub struct LoadSpec {
     pub lane: Lane,
     /// `false` exercises the recon-free fast path.
     pub want_psnr: bool,
+    /// Chaos mode: retrying clients, invariant checks, and per-frame
+    /// error classification instead of fail-fast transport errors.
+    pub faults: bool,
+    /// Per-attempt response deadline for chaos-mode clients.
+    pub deadline: Duration,
+    /// Seeds the per-client retry jitter streams (client `i` uses
+    /// `seed + i`), so a chaos run's schedule reproduces exactly.
+    pub seed: u64,
 }
 
 impl LoadSpec {
@@ -51,7 +77,32 @@ impl LoadSpec {
             variant: Variant::Cordic,
             lane: Lane::Cpu,
             want_psnr: false,
+            faults: false,
+            deadline: Duration::from_secs(10),
+            seed: 1,
         }
+    }
+}
+
+/// Failed requests broken down by cause.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ErrorCounts {
+    /// Job or response deadline expiries.
+    pub timeouts: usize,
+    /// Connect failures, dropped connections, open circuit breakers.
+    pub connect: usize,
+    /// Undecodable or corrupted (non-bit-exact) payloads.
+    pub decode: usize,
+    /// Structured worker-panic replies.
+    pub panics: usize,
+    /// Every other server error frame.
+    pub server: usize,
+}
+
+impl ErrorCounts {
+    pub fn total(&self) -> usize {
+        self.timeouts + self.connect + self.decode + self.panics
+            + self.server
     }
 }
 
@@ -65,6 +116,17 @@ pub struct LoadReport {
     pub overloaded: usize,
     /// Error frames.
     pub failed: usize,
+    /// Failures by cause (sums to `failed` in chaos mode).
+    pub errors: ErrorCounts,
+    /// Load-shed `Degraded` replies (verified, but not counted as ok).
+    pub degraded: usize,
+    /// Chaos-mode retry attempts beyond each request's first try.
+    pub retries: u64,
+    /// Resilience invariant violations — must be zero for a passing
+    /// chaos soak.
+    pub invariant_violations: usize,
+    /// `(overloaded + failed) / total`.
+    pub error_rate: f64,
     pub elapsed_s: f64,
     /// Successful requests per wall-clock second.
     pub throughput_rps: f64,
@@ -83,6 +145,18 @@ impl LoadReport {
             ("ok", self.ok.into()),
             ("overloaded", self.overloaded.into()),
             ("failed", self.failed.into()),
+            ("timeouts", self.errors.timeouts.into()),
+            ("connect_errors", self.errors.connect.into()),
+            ("decode_errors", self.errors.decode.into()),
+            ("panics", self.errors.panics.into()),
+            ("server_errors", self.errors.server.into()),
+            ("degraded", self.degraded.into()),
+            ("retries", Json::num(self.retries as f64)),
+            (
+                "invariant_violations",
+                self.invariant_violations.into(),
+            ),
+            ("error_rate", Json::num(self.error_rate)),
             ("elapsed_s", Json::num(self.elapsed_s)),
             ("throughput_rps", Json::num(self.throughput_rps)),
             ("mean_ms", Json::num(self.mean_ms)),
@@ -98,20 +172,24 @@ impl std::fmt::Display for LoadReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{} clients: {} ok / {} overloaded / {} failed in {:.2}s \
-             = {:.1} req/s; latency mean {:.2} p50 {:.2} p95 {:.2} \
-             p99 {:.2} max {:.2} ms",
+            "{} clients: {} ok / {} overloaded / {} failed / {} degraded \
+             in {:.2}s = {:.1} req/s; latency mean {:.2} p50 {:.2} \
+             p95 {:.2} p99 {:.2} max {:.2} ms; {} retries, \
+             {} invariant violations",
             self.clients,
             self.ok,
             self.overloaded,
             self.failed,
+            self.degraded,
             self.elapsed_s,
             self.throughput_rps,
             self.mean_ms,
             self.p50_ms,
             self.p95_ms,
             self.p99_ms,
-            self.max_ms
+            self.max_ms,
+            self.retries,
+            self.invariant_violations
         )
     }
 }
@@ -131,15 +209,26 @@ struct ClientOut {
     ok: usize,
     overloaded: usize,
     failed: usize,
+    errors: ErrorCounts,
+    degraded: usize,
+    retries: u64,
+    violations: usize,
 }
 
-fn client_loop(spec: &LoadSpec, ci: usize) -> Result<ClientOut> {
-    let mut client = Client::connect(spec.addr)
-        .with_context(|| format!("loadgen client {ci}"))?;
-    // build the request once outside the timed loop — the generator
-    // measures the server, not synthetic-image synthesis
+/// Bucket a server error frame's code.
+fn classify_code(code: u16, errors: &mut ErrorCounts) {
+    match code {
+        ERR_WORKER_PANIC => errors.panics += 1,
+        ERR_JOB_TIMEOUT => errors.timeouts += 1,
+        ERR_DECODE_TRUNCATED..=ERR_DECODE_CORRUPT => errors.decode += 1,
+        _ => errors.server += 1,
+    }
+}
+
+/// Build the one request a client repeats for the whole run.
+fn build_request(spec: &LoadSpec, ci: usize) -> RequestMsg {
     let seed = ci as u64 + 1;
-    let msg = if spec.color {
+    if spec.color {
         RequestMsg::CompressColor {
             image: synthetic::lena_like_rgb(spec.size, spec.size, seed),
             variant: spec.variant,
@@ -154,7 +243,34 @@ fn client_loop(spec: &LoadSpec, ci: usize) -> Result<ClientOut> {
             lane: spec.lane,
             want_psnr: spec.want_psnr,
         }
-    };
+    }
+}
+
+/// Does the container decode, with the dimensions the client asked for?
+fn verify_container(spec: &LoadSpec, bytes: &[u8]) -> bool {
+    if spec.color {
+        crate::codec::color::decode(bytes)
+            .map(|d| {
+                d.header.width as usize == spec.size
+                    && d.header.height as usize == spec.size
+            })
+            .unwrap_or(false)
+    } else {
+        crate::codec::decoder::decode(bytes)
+            .map(|d| {
+                d.header.width as usize == spec.size
+                    && d.header.height as usize == spec.size
+            })
+            .unwrap_or(false)
+    }
+}
+
+fn client_loop(spec: &LoadSpec, ci: usize) -> Result<ClientOut> {
+    let mut client = Client::connect(spec.addr)
+        .with_context(|| format!("loadgen client {ci}"))?;
+    // build the request once outside the timed loop — the generator
+    // measures the server, not synthetic-image synthesis
+    let msg = build_request(spec, ci);
     let mut out = ClientOut::default();
     for i in 0..spec.requests_per_client {
         let t = Instant::now();
@@ -167,11 +283,96 @@ fn client_loop(spec: &LoadSpec, ci: usize) -> Result<ClientOut> {
                 out.latencies_ms.push(ms);
                 out.ok += 1;
             }
+            ResponseMsg::Degraded { .. } => out.degraded += 1,
             ResponseMsg::Overloaded => out.overloaded += 1,
+            ResponseMsg::Error { code, .. } => {
+                out.failed += 1;
+                classify_code(code, &mut out.errors);
+            }
             _ => out.failed += 1,
         }
     }
     Ok(out)
+}
+
+/// Chaos-mode client: never bails — every outcome is classified, and
+/// the two soak invariants are checked per request.
+fn chaos_client_loop(spec: &LoadSpec, ci: usize) -> ClientOut {
+    let policy = RetryPolicy {
+        attempt_deadline: spec.deadline,
+        jitter_seed: spec.seed.wrapping_add(ci as u64),
+        ..RetryPolicy::default()
+    };
+    let budget = policy.total_budget();
+    let mut client = RetryClient::new(spec.addr, policy);
+    let msg = build_request(spec, ci);
+    let mut out = ClientOut::default();
+    // first intact container; later successes must match it bit-exactly
+    // (same request, deterministic pipeline), or a bit-flip got through
+    let mut reference: Option<Vec<u8>> = None;
+    for _ in 0..spec.requests_per_client {
+        let t = Instant::now();
+        let resp = client.request(&msg);
+        let elapsed = t.elapsed();
+        if elapsed > budget {
+            out.violations += 1;
+        }
+        match resp {
+            Ok(ResponseMsg::Compressed { container, .. }) => {
+                let intact = verify_container(spec, &container)
+                    && reference
+                        .as_deref()
+                        .map_or(true, |r| r == container.as_slice());
+                if intact {
+                    if reference.is_none() {
+                        reference = Some(container);
+                    }
+                    out.latencies_ms
+                        .push(elapsed.as_secs_f64() * 1e3);
+                    out.ok += 1;
+                } else {
+                    out.failed += 1;
+                    out.errors.decode += 1;
+                }
+            }
+            // degraded containers use a different quality, so they are
+            // checked for decodability but not against the reference
+            Ok(ResponseMsg::Degraded { container, .. }) => {
+                if verify_container(spec, &container) {
+                    out.degraded += 1;
+                } else {
+                    out.failed += 1;
+                    out.errors.decode += 1;
+                }
+            }
+            Ok(ResponseMsg::Overloaded) => out.overloaded += 1,
+            Ok(ResponseMsg::Error { code, .. }) => {
+                out.failed += 1;
+                classify_code(code, &mut out.errors);
+            }
+            Ok(_) => out.failed += 1,
+            Err(RequestError::Overloaded) => out.overloaded += 1,
+            Err(RequestError::Timeout(_)) => {
+                out.failed += 1;
+                out.errors.timeouts += 1;
+            }
+            Err(RequestError::Connect(_))
+            | Err(RequestError::CircuitOpen) => {
+                out.failed += 1;
+                out.errors.connect += 1;
+            }
+            Err(RequestError::Malformed(_)) => {
+                out.failed += 1;
+                out.errors.decode += 1;
+            }
+            Err(RequestError::Server { code, .. }) => {
+                out.failed += 1;
+                classify_code(code, &mut out.errors);
+            }
+        }
+    }
+    out.retries = client.retries();
+    out
 }
 
 /// Run one closed-loop load test against a live server.
@@ -179,7 +380,15 @@ pub fn run_load(spec: &LoadSpec) -> Result<LoadReport> {
     let t0 = Instant::now();
     let outs: Vec<Result<ClientOut>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..spec.clients)
-            .map(|ci| s.spawn(move || client_loop(spec, ci)))
+            .map(|ci| {
+                s.spawn(move || {
+                    if spec.faults {
+                        Ok(chaos_client_loop(spec, ci))
+                    } else {
+                        client_loop(spec, ci)
+                    }
+                })
+            })
             .collect();
         handles
             .into_iter()
@@ -189,12 +398,23 @@ pub fn run_load(spec: &LoadSpec) -> Result<LoadReport> {
     let elapsed_s = t0.elapsed().as_secs_f64();
     let mut all = Vec::new();
     let (mut ok, mut overloaded, mut failed) = (0usize, 0usize, 0usize);
+    let mut errors = ErrorCounts::default();
+    let (mut degraded, mut retries) = (0usize, 0u64);
+    let mut violations = 0usize;
     for out in outs {
         let out = out?;
         all.extend_from_slice(&out.latencies_ms);
         ok += out.ok;
         overloaded += out.overloaded;
         failed += out.failed;
+        errors.timeouts += out.errors.timeouts;
+        errors.connect += out.errors.connect;
+        errors.decode += out.errors.decode;
+        errors.panics += out.errors.panics;
+        errors.server += out.errors.server;
+        degraded += out.degraded;
+        retries += out.retries;
+        violations += out.violations;
     }
     all.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let mean_ms = if all.is_empty() {
@@ -202,12 +422,18 @@ pub fn run_load(spec: &LoadSpec) -> Result<LoadReport> {
     } else {
         all.iter().sum::<f64>() / all.len() as f64
     };
+    let total = spec.clients * spec.requests_per_client;
     Ok(LoadReport {
         clients: spec.clients,
-        total: spec.clients * spec.requests_per_client,
+        total,
         ok,
         overloaded,
         failed,
+        errors,
+        degraded,
+        retries,
+        invariant_violations: violations,
+        error_rate: (overloaded + failed) as f64 / total.max(1) as f64,
         elapsed_s,
         throughput_rps: ok as f64 / elapsed_s.max(1e-9),
         mean_ms,
@@ -231,5 +457,20 @@ mod tests {
         assert_eq!(percentile(&v, 0.95), 95.0);
         assert!(percentile(&[], 0.5).is_nan());
         assert_eq!(percentile(&[7.0], 0.99), 7.0);
+    }
+
+    #[test]
+    fn error_codes_bucket_into_counts() {
+        let mut e = ErrorCounts::default();
+        classify_code(ERR_WORKER_PANIC, &mut e);
+        classify_code(ERR_JOB_TIMEOUT, &mut e);
+        classify_code(ERR_DECODE_TRUNCATED, &mut e);
+        classify_code(ERR_DECODE_CORRUPT, &mut e);
+        classify_code(1, &mut e); // bad frame → generic server bucket
+        assert_eq!(
+            (e.panics, e.timeouts, e.decode, e.server),
+            (1, 1, 2, 1)
+        );
+        assert_eq!(e.total(), 5);
     }
 }

@@ -22,9 +22,22 @@
 //! overload — answers with a structured frame (or a clean close when the
 //! byte stream itself desynchronizes); the hardened codec header
 //! validation ([`crate::codec::DecodeErrorKind`]) maps one-to-one onto
-//! wire error codes. The [`loadgen`] module is the measurement half:
-//! concurrent closed-loop clients with exact latency percentiles,
-//! driving the `ablation_serve_load` bench.
+//! wire error codes. A panicked worker job answers a structured
+//! `ERR_WORKER_PANIC` frame while the pool respawns the worker, and
+//! with `--degrade` a queue-rejected compress request is served a
+//! reduced-quality `Degraded` reply instead of a bare refusal.
+//!
+//! The client side matches the failure model: [`Client`] is the plain
+//! one-connection client, [`RetryClient`] adds reconnects, exponential
+//! backoff with deterministic jitter, and a [`CircuitBreaker`] —
+//! retrying only transient failures ([`RequestError::retryable`]).
+//! The [`loadgen`] module is the measurement half: concurrent
+//! closed-loop clients with exact latency percentiles driving the
+//! `ablation_serve_load` bench, and — with [`LoadSpec::faults`] — the
+//! chaos-soak harness behind `ablation_chaos`. Seeded fault injection
+//! itself (slow/short socket I/O, disconnects, bit-flips) lives in
+//! [`crate::faults`] and is wired in through
+//! [`server::ServeConfig::faults`].
 
 pub mod client;
 mod conn;
@@ -33,7 +46,10 @@ pub mod loadgen;
 pub mod protocol;
 pub mod server;
 
-pub use client::{Client, Compressed};
-pub use loadgen::{run_load, LoadReport, LoadSpec};
+pub use client::{
+    CircuitBreaker, Client, Compressed, RequestError, RetryClient,
+    RetryPolicy,
+};
+pub use loadgen::{run_load, ErrorCounts, LoadReport, LoadSpec};
 pub use protocol::{ImagePayload, RequestMsg, ResponseMsg};
 pub use server::{ServeConfig, TcpServer};

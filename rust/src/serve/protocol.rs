@@ -13,8 +13,9 @@
 //! 2 CompressColor                  0x82 Image (decode / histeq result)
 //! 3 Decode                         0x83 Pong
 //! 4 Histeq                         0x84 StatsJson
-//! 5 Ping                           0xE0 Error { code, message }
-//! 6 Stats                          0xE1 Overloaded
+//! 5 Ping                           0x85 Degraded (load-shed compress)
+//! 6 Stats                          0xE0 Error { code, message }
+//!                                  0xE1 Overloaded
 //! ```
 //!
 //! Error codes 10..=14 mirror [`DecodeErrorKind`] one-to-one, so a
@@ -43,6 +44,7 @@ pub const RESP_COMPRESSED: u8 = 0x81;
 pub const RESP_IMAGE: u8 = 0x82;
 pub const RESP_PONG: u8 = 0x83;
 pub const RESP_STATS: u8 = 0x84;
+pub const RESP_DEGRADED: u8 = 0x85;
 pub const RESP_ERROR: u8 = 0xE0;
 pub const RESP_OVERLOADED: u8 = 0xE1;
 
@@ -61,6 +63,11 @@ pub const ERR_DECODE_CORRUPT: u16 = 14;
 pub const ERR_JOB_FAILED: u16 = 20;
 /// The job did not complete within the server's job timeout.
 pub const ERR_JOB_TIMEOUT: u16 = 21;
+/// The job panicked inside a worker. The pool already recovered (the
+/// supervisor respawned the worker loop), so the request may simply be
+/// retried — but clients should treat it as non-retryable by default
+/// since the same input may deterministically re-panic.
+pub const ERR_WORKER_PANIC: u16 = 22;
 
 /// Map a classified decode failure to its wire code.
 pub fn decode_error_code(kind: DecodeErrorKind) -> u16 {
@@ -137,6 +144,15 @@ pub enum ResponseMsg {
     Image { lane: Lane, image: ImagePayload },
     Pong,
     StatsJson(String),
+    /// A reduced-quality compress result from the load-shedding path
+    /// (`serve --degrade`): same payload layout as `Compressed`, but a
+    /// distinct kind so clients can tell a shed reply from a
+    /// full-quality one.
+    Degraded {
+        lane: Lane,
+        psnr_db: Option<f64>,
+        container: Vec<u8>,
+    },
     Error { code: u16, message: String },
     /// Structured backpressure: the admission gate or the request queue
     /// is full. Retry later; the connection stays usable.
@@ -374,6 +390,20 @@ impl ResponseMsg {
             ResponseMsg::StatsJson(s) => {
                 (RESP_STATS, s.as_bytes().to_vec())
             }
+            ResponseMsg::Degraded {
+                lane,
+                psnr_db,
+                container,
+            } => {
+                let mut p = Vec::with_capacity(10 + container.len());
+                p.push(lane_tag(*lane));
+                p.push(u8::from(psnr_db.is_some()));
+                p.extend_from_slice(
+                    &psnr_db.unwrap_or(0.0).to_le_bytes(),
+                );
+                p.extend_from_slice(container);
+                (RESP_DEGRADED, p)
+            }
             ResponseMsg::Error { code, message } => {
                 let mut p = Vec::with_capacity(2 + message.len());
                 p.extend_from_slice(&code.to_le_bytes());
@@ -432,6 +462,16 @@ impl ResponseMsg {
                     )?)
                 };
                 Ok(ResponseMsg::Image { lane, image })
+            }
+            RESP_DEGRADED => {
+                let lane = tag_lane(c.u8()?)?;
+                let has_psnr = c.u8()? != 0;
+                let psnr = c.f64()?;
+                Ok(ResponseMsg::Degraded {
+                    lane,
+                    psnr_db: has_psnr.then_some(psnr),
+                    container: c.rest().to_vec(),
+                })
             }
             RESP_PONG => Ok(ResponseMsg::Pong),
             RESP_STATS => Ok(ResponseMsg::StatsJson(
@@ -518,6 +558,16 @@ mod tests {
                 8, 8, 4,
             )),
         });
+        roundtrip_resp(ResponseMsg::Degraded {
+            lane: Lane::Cpu,
+            psnr_db: Some(27.5),
+            container: vec![3; 17],
+        });
+        roundtrip_resp(ResponseMsg::Degraded {
+            lane: Lane::Cpu,
+            psnr_db: None,
+            container: vec![],
+        });
         roundtrip_resp(ResponseMsg::Pong);
         roundtrip_resp(ResponseMsg::StatsJson("{\"a\":1}".into()));
         roundtrip_resp(ResponseMsg::Error {
@@ -575,6 +625,8 @@ mod tests {
         assert!(RequestMsg::decode(0x77, &[]).is_err());
         // unknown response kind
         assert!(ResponseMsg::decode(0x13, &[]).is_err());
+        // a Degraded frame shorter than its 10-byte prelude
+        assert!(ResponseMsg::decode(RESP_DEGRADED, &[0, 1]).is_err());
     }
 
     #[test]

@@ -15,10 +15,12 @@
 //! [`super::protocol::ResponseMsg::Overloaded`] frame: the accept-time
 //! admission gate (too many connections) and the coordinator queue
 //! (Reject policy — the server forces it so a full queue can never block
-//! a connection thread). Shutdown is graceful: the flag flips, the
-//! accept loop is unblocked with a self-connection, and every
-//! connection handler finishes its in-flight request before the pool
-//! joins.
+//! a connection thread). With [`ServeConfig::degrade`] set, queue-level
+//! rejections of compress requests are served a reduced-quality
+//! `Degraded` result inline instead of a bare refusal. Shutdown is
+//! graceful: the flag flips, the accept loop is unblocked with a
+//! best-effort self-connection, and every connection handler finishes
+//! its in-flight request before the pool joins.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -29,6 +31,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::coordinator::{Backpressure, Service, ServiceConfig};
+use crate::faults::{FaultInjector, FaultPlan};
 use crate::log_info;
 use crate::util::threadpool::ThreadPool;
 
@@ -57,6 +60,16 @@ pub struct ServeConfig {
     /// Upper bound on one job's queue + processing time before the
     /// server answers a timeout error frame.
     pub job_timeout: Duration,
+    /// Fault-injection plan for chaos testing (socket faults + outbound
+    /// bit-flips here; worker faults propagate into the service config
+    /// at bind time unless it already has its own plan). `None` — the
+    /// default — keeps every injection site at one `Option` check.
+    pub faults: Option<FaultPlan>,
+    /// Shed load instead of refusing it: when the job queue rejects a
+    /// compress request, answer a reduced-quality
+    /// [`super::protocol::ResponseMsg::Degraded`] result computed
+    /// inline on the serial lane, rather than a bare Overloaded frame.
+    pub degrade: bool,
 }
 
 impl Default for ServeConfig {
@@ -68,6 +81,8 @@ impl Default for ServeConfig {
             read_timeout: Duration::from_millis(200),
             write_timeout: Duration::from_secs(5),
             job_timeout: Duration::from_secs(30),
+            faults: None,
+            degrade: false,
         }
     }
 }
@@ -79,6 +94,8 @@ pub struct Counters {
     pub frames_ok: AtomicU64,
     pub frames_error: AtomicU64,
     pub overload_rejects: AtomicU64,
+    /// Load-shed replies served by the `--degrade` path.
+    pub degraded: AtomicU64,
 }
 
 /// State shared between the accept loop and every connection handler.
@@ -91,6 +108,11 @@ pub(crate) struct Shared {
     pub shutdown: AtomicBool,
     pub active: AtomicUsize,
     pub counters: Counters,
+    /// Root fault injector; each connection forks its own stream keyed
+    /// by `fault_seq`.
+    pub faults: Option<Arc<FaultInjector>>,
+    pub fault_seq: AtomicU64,
+    pub degrade: bool,
 }
 
 /// Decrements the active-connection gauge when a handler exits — by any
@@ -118,6 +140,12 @@ impl TcpServer {
     pub fn bind(addr: &str, cfg: ServeConfig) -> Result<TcpServer> {
         let mut svc_cfg = cfg.service.clone();
         svc_cfg.backpressure = Backpressure::Reject;
+        // one --faults knob drives both layers: unless the service was
+        // given its own plan, the worker-side faults (panic, latency)
+        // come from the serve plan too
+        if svc_cfg.faults.is_none() {
+            svc_cfg.faults = cfg.faults.clone();
+        }
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
@@ -131,6 +159,16 @@ impl TcpServer {
             shutdown: AtomicBool::new(false),
             active: AtomicUsize::new(0),
             counters: Counters::default(),
+            faults: cfg.faults.as_ref().map(|p| {
+                // decorrelate the socket-level stream from the
+                // worker-level one (the service builds its own root
+                // from the same plan and forks it by worker index)
+                let mut plan = p.clone();
+                plan.seed = plan.seed.wrapping_add(0x9E37_79B9);
+                Arc::new(FaultInjector::new(plan))
+            }),
+            fault_seq: AtomicU64::new(0),
+            degrade: cfg.degrade,
         });
         let max_conns = cfg.max_connections.max(1);
         let accept_shared = Arc::clone(&shared);
@@ -175,13 +213,19 @@ impl TcpServer {
     }
 
     fn stop(&mut self) {
+        // taking the handle makes repeated stops (shutdown() followed by
+        // Drop, or a double Drop path) a no-op instead of a second join
         let Some(handle) = self.accept.take() else {
             return;
         };
         self.shared.shutdown.store(true, Ordering::SeqCst);
-        // unblock the blocking accept() with a throwaway connection; the
-        // loop re-checks the flag before handling it
-        let _ = TcpStream::connect(self.addr);
+        // unblock the blocking accept() with a throwaway self-connect.
+        // Strictly best-effort with a bounded timeout: if the listener
+        // is already gone (raced shutdown, torn-down netns), a failed or
+        // hanging connect must not turn a graceful stop into a panic or
+        // a wedge — the accept thread also exits on listener errors.
+        let _ =
+            TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
         let _ = handle.join();
     }
 }
@@ -227,4 +271,42 @@ fn accept_loop(
     // drain: every admitted connection notices the shutdown flag at its
     // next idle tick (or after its in-flight request) and returns
     drop(pool);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> ServeConfig {
+        ServeConfig {
+            service: ServiceConfig {
+                workers: 1,
+                artifact_dir: None,
+                ..Default::default()
+            },
+            max_connections: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn double_shutdown_is_idempotent() {
+        let mut srv = TcpServer::bind("127.0.0.1:0", tiny_cfg()).unwrap();
+        srv.stop();
+        // the second stop models shutdown() followed by Drop (or any
+        // re-entry after the listener is gone): it must be a no-op,
+        // never a panic or a second blocking join
+        srv.stop();
+        drop(srv); // Drop's stop() is the third call
+    }
+
+    #[test]
+    fn bind_propagates_faults_into_the_service() {
+        let mut cfg = tiny_cfg();
+        cfg.faults =
+            Some(FaultPlan::parse("seed=4,short-read=0.5").unwrap());
+        let srv = TcpServer::bind("127.0.0.1:0", cfg).unwrap();
+        assert!(srv.shared.faults.is_some());
+        srv.shutdown();
+    }
 }

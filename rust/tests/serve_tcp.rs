@@ -11,12 +11,13 @@ use std::time::{Duration, Instant};
 
 use cordic_dct::coordinator::{Lane, ServiceConfig};
 use cordic_dct::dct::Variant;
+use cordic_dct::faults::FaultPlan;
 use cordic_dct::image::synthetic;
 use cordic_dct::image::ycbcr::Subsampling;
 use cordic_dct::serve::framing::{self, FrameEvent};
 use cordic_dct::serve::protocol::{
     RequestMsg, ResponseMsg, ERR_BAD_FRAME, ERR_DECODE_BAD_MAGIC,
-    ERR_DECODE_TRUNCATED,
+    ERR_DECODE_TRUNCATED, ERR_WORKER_PANIC,
 };
 use cordic_dct::serve::{Client, ImagePayload, ServeConfig, TcpServer};
 
@@ -312,6 +313,207 @@ fn graceful_shutdown_drains_and_stops() {
             .ping()
             .is_err()),
     }
+}
+
+/// A server whose every socket read and write is injected with a fault
+/// (p = 1.0, so the test is deterministic regardless of PRNG stream
+/// assignment) must still complete full round trips: short reads and
+/// writes only slow the framing layer down, they never corrupt it.
+#[test]
+fn injected_socket_faults_do_not_break_round_trips() {
+    let cfg = ServeConfig {
+        service: ServiceConfig {
+            workers: 2,
+            queue_capacity: 32,
+            artifact_dir: None,
+            ..Default::default()
+        },
+        max_connections: 8,
+        faults: Some(
+            FaultPlan::parse(
+                "seed=5,slow-read=1.0,slow-write=1.0,short-read=1.0,\
+                 short-write=1.0,slow-ms=1",
+            )
+            .unwrap(),
+        ),
+        ..Default::default()
+    };
+    let server = TcpServer::bind("127.0.0.1:0", cfg).unwrap();
+    let img = synthetic::lena_like(48, 32, 7);
+    let mut a = Client::connect(server.local_addr()).unwrap();
+    let mut b = Client::connect(server.local_addr()).unwrap();
+    a.ping().unwrap();
+    let ca = a
+        .compress_gray(&img, Variant::Cordic, Lane::Cpu, true)
+        .unwrap();
+    // a concurrent connection is independently faulted yet unaffected
+    let cb = b
+        .compress_gray(&img, Variant::Cordic, Lane::Cpu, false)
+        .unwrap();
+    assert!(!ca.container.is_empty());
+    assert_eq!(
+        ca.container, cb.container,
+        "socket faults must never change the payload"
+    );
+    assert!(ca.psnr_db.is_some());
+    a.ping().unwrap();
+    server.shutdown();
+}
+
+/// A client dribbling its request a few bytes at a time (the mirror
+/// image of server-side short writes) keeps its connection: partial
+/// frames are legal as long as progress continues under the mid-frame
+/// stall timeout. A second connection round-trips while the first is
+/// still mid-frame.
+#[test]
+fn dribbled_request_frame_survives_and_others_proceed() {
+    let server = test_server(8);
+    let stream = TcpStream::connect(server.local_addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let img = synthetic::lena_like(16, 8, 3);
+    let (kind, payload) = RequestMsg::Histeq {
+        image: img,
+        lane: Lane::Cpu,
+    }
+    .encode();
+    let frame = framing::encode_frame(kind, &payload).unwrap();
+    let chunks: Vec<_> = frame.chunks(3).collect();
+    let halfway = chunks.len() / 2;
+    for (i, chunk) in chunks.into_iter().enumerate() {
+        w.write_all(chunk).unwrap();
+        w.flush().unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        // halfway through, prove the server still serves other peers
+        if i == halfway {
+            let mut other = Client::connect(server.local_addr()).unwrap();
+            other.ping().unwrap();
+        }
+    }
+    match read_one_frame(&stream) {
+        ResponseMsg::Image {
+            image: ImagePayload::Gray(g),
+            ..
+        } => assert_eq!((g.width, g.height), (16, 8)),
+        other => panic!("expected gray Image, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+/// Injected worker panics answer a structured `ERR_WORKER_PANIC` frame,
+/// the pool respawns the worker (visible in the stats), and the
+/// connection keeps serving.
+#[test]
+fn injected_worker_panics_answer_structured_frames() {
+    let cfg = ServeConfig {
+        service: ServiceConfig {
+            workers: 1,
+            queue_capacity: 8,
+            artifact_dir: None,
+            faults: Some(FaultPlan::parse("seed=1,panic=1.0").unwrap()),
+            ..Default::default()
+        },
+        max_connections: 4,
+        ..Default::default()
+    };
+    let server = TcpServer::bind("127.0.0.1:0", cfg).unwrap();
+    let mut client = Client::connect(server.local_addr()).unwrap();
+    let img = synthetic::lena_like(24, 24, 1);
+    for _ in 0..2 {
+        let resp = client
+            .request(&RequestMsg::CompressGray {
+                image: img.clone(),
+                variant: Variant::Cordic,
+                lane: Lane::Cpu,
+                want_psnr: false,
+            })
+            .unwrap();
+        match resp {
+            ResponseMsg::Error { code, message } => {
+                assert_eq!(code, ERR_WORKER_PANIC, "{message}");
+                assert!(
+                    message.contains("worker panicked"),
+                    "unexpected message: {message}"
+                );
+            }
+            other => panic!("expected a panic Error frame, got {other:?}"),
+        }
+    }
+    // the connection survived both panics and the stats frame counts
+    // the respawns
+    client.ping().unwrap();
+    let stats = client.stats_json().unwrap();
+    assert!(
+        stats.contains("\"worker_restarts\""),
+        "stats missing restart counter: {stats}"
+    );
+    assert!(
+        !stats.contains("\"worker_restarts\":0,"),
+        "restarts never counted: {stats}"
+    );
+    server.shutdown();
+}
+
+/// With `--degrade`, queue-rejected compress requests come back as
+/// reduced-quality Degraded replies (flagged on the client), and every
+/// shed container still decodes.
+#[test]
+fn degrade_mode_sheds_load_with_reduced_quality_replies() {
+    let cfg = ServeConfig {
+        service: ServiceConfig {
+            workers: 1,
+            queue_capacity: 1,
+            artifact_dir: None,
+            // every job sleeps, so concurrent clients overrun the
+            // one-deep queue deterministically
+            faults: Some(
+                FaultPlan::parse("seed=2,latency=1.0,latency-ms=200")
+                    .unwrap(),
+            ),
+            ..Default::default()
+        },
+        max_connections: 8,
+        degrade: true,
+        ..Default::default()
+    };
+    let server = TcpServer::bind("127.0.0.1:0", cfg).unwrap();
+    let addr = server.local_addr();
+    let outs: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    let img = synthetic::lena_like(32, 32, 9);
+                    (0..3)
+                        .map(|_| {
+                            c.compress_gray(
+                                &img,
+                                Variant::Cordic,
+                                Lane::Cpu,
+                                false,
+                            )
+                            .unwrap()
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let degraded: Vec<_> = outs.iter().filter(|c| c.degraded).collect();
+    assert!(
+        !degraded.is_empty(),
+        "no request was shed despite a one-deep queue and slow jobs"
+    );
+    for c in &outs {
+        let dec = cordic_dct::codec::decoder::decode(&c.container)
+            .expect("every container decodes");
+        assert_eq!((dec.header.width, dec.header.height), (32, 32));
+        if c.degraded {
+            // half the default service quality (50), floor 10
+            assert_eq!(dec.header.quality, 25);
+        }
+    }
+    server.shutdown();
 }
 
 #[test]

@@ -4,8 +4,9 @@
 //! Subcommands:
 //!
 //! * `doc-md` — render the public API of the core modules (`dct`,
-//!   `codec`, `coordinator`, `runtime`, `serve`) to `docs/api/*.md` so the docs
-//!   are greppable offline (in the spirit of `cargo-doc-md`). The
+//!   `codec`, `coordinator`, `faults`, `runtime`, `serve`) to
+//!   `docs/api/*.md` so the docs are greppable offline (in the spirit
+//!   of `cargo-doc-md`). The
 //!   output is deterministic: fixed module order, files sorted by name,
 //!   purely line-based extraction — so CI can diff it.
 //! * `doc-md --check` — regenerate in memory and fail (exit 1) if any
@@ -27,8 +28,8 @@ use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
 
 /// The modules rendered to docs/api/, in output order.
-const MODULES: [&str; 5] =
-    ["codec", "coordinator", "dct", "runtime", "serve"];
+const MODULES: [&str; 6] =
+    ["codec", "coordinator", "dct", "faults", "runtime", "serve"];
 
 /// Signature prefixes that count as public API.
 const PUB_PREFIXES: [&str; 8] = [
