@@ -1,0 +1,226 @@
+//! A8 ablation: error resilience of the CDC2 container — restart
+//! interval vs size overhead vs salvage quality under seeded payload
+//! bit-flips.
+//!
+//! For each fixture (lena-like, cablecar-like) and restart interval the
+//! bench encodes one v2 container, measures its size overhead against
+//! the v1 encoding of the same coefficients, then runs a pinned chaos
+//! sweep: seeded bit-flips confined to the segment region (the codec's
+//! failure model — a damaged *head* is a lost file, a damaged *segment*
+//! is a lost band). Every corrupted stream must:
+//!
+//! 1. salvage-decode at the original geometry (recovery fraction
+//!    >= 0.99 across the whole sweep),
+//! 2. report non-zero damage (a flip the CRC misses would be a silent
+//!    corruption), and
+//! 3. reconstruct with a finite PSNR against the clean reconstruction.
+//!
+//! The default-interval overhead must stay under 3% — the headline cost
+//! of turning every compressed reply into a salvageable stream.
+
+use anyhow::ensure;
+use cordic_dct::bench::save_results;
+use cordic_dct::codec::{
+    self, decoder, encoder, variant_tag, Header, DEFAULT_RESTART_INTERVAL,
+};
+use cordic_dct::dct::pipeline::CpuPipeline;
+use cordic_dct::dct::Variant;
+use cordic_dct::image::synthetic;
+use cordic_dct::metrics::psnr;
+use cordic_dct::util::json::Json;
+use cordic_dct::util::prng::Rng;
+
+const INTERVALS: [u16; 5] = [0, 1, 2, 4, 8];
+const FLIP_COUNTS: [usize; 3] = [1, 4, 16];
+
+struct SweepRow {
+    scene: &'static str,
+    interval: u16,
+    v1_bytes: usize,
+    v2_bytes: usize,
+    overhead_pct: f64,
+    trials: usize,
+    recovered: usize,
+    mean_damaged: f64,
+    mean_psnr_db: f64,
+    min_psnr_db: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("CORDIC_DCT_BENCH_QUICK").is_ok();
+    let (size, trials_per_count) = if quick { (64, 4) } else { (128, 12) };
+    let pipe = CpuPipeline::new(Variant::Cordic, 50);
+    let mut rows: Vec<SweepRow> = Vec::new();
+    let mut total_trials = 0usize;
+    let mut total_recovered = 0usize;
+    println!(
+        "== resilience sweep: {size}x{size} cordic q50, intervals \
+         {INTERVALS:?}, flips {FLIP_COUNTS:?} =="
+    );
+    for (scene, img) in [
+        ("lena", synthetic::lena_like(size, size, 5)),
+        ("cablecar", synthetic::cablecar_like(size, size, 5)),
+    ] {
+        let scanned = pipe.analyze_scanned(&img);
+        let header = Header {
+            width: img.width as u32,
+            height: img.height as u32,
+            padded_width: scanned.padded_width as u32,
+            padded_height: scanned.padded_height as u32,
+            quality: 50,
+            variant: variant_tag(Variant::Cordic),
+        };
+        let v1 = encoder::encode_scanned(&header, &scanned)?;
+        for interval in INTERVALS {
+            let v2 =
+                encoder::encode_scanned_v2(&header, &scanned, interval)?;
+            let overhead_pct = (v2.len() as f64 - v1.len() as f64)
+                / v1.len() as f64
+                * 100.0;
+            // the clean reconstruction every salvage is scored against
+            let clean = decoder::decode(&v2)?;
+            let recon = pipe.decode_coefficients(
+                &clean.qcoef_planar,
+                header.padded_width as usize,
+                header.padded_height as usize,
+                img.width,
+                img.height,
+            );
+            // flips land beyond the first 40% of the container — the
+            // head is ~3% of it, so this pins corruption to segments
+            let lo = v2.len() * 2 / 5;
+            let mut rng = Rng::new(0xC2C2 + interval as u64);
+            let (mut recovered, mut damaged_sum) = (0usize, 0u64);
+            let (mut psnr_sum, mut psnr_min, mut trials) =
+                (0.0f64, f64::INFINITY, 0usize);
+            for flips in FLIP_COUNTS {
+                for _ in 0..trials_per_count {
+                    trials += 1;
+                    let mut bad = v2.clone();
+                    for _ in 0..flips {
+                        let at = lo
+                            + rng.below((bad.len() - lo) as u64) as usize;
+                        bad[at] ^= 1 << rng.below(8);
+                    }
+                    let Ok((dec, report)) = decoder::decode_salvage(&bad)
+                    else {
+                        continue;
+                    };
+                    if dec.header != header {
+                        continue;
+                    }
+                    ensure!(
+                        !report.is_clean(),
+                        "{scene} interval {interval}: corrupted stream \
+                         reported clean"
+                    );
+                    recovered += 1;
+                    damaged_sum += report.segments_damaged as u64;
+                    let salvaged = pipe.decode_coefficients(
+                        &dec.qcoef_planar,
+                        header.padded_width as usize,
+                        header.padded_height as usize,
+                        img.width,
+                        img.height,
+                    );
+                    // cap: identical images give +inf, which JSON
+                    // cannot carry
+                    let p = psnr(&recon, &salvaged).min(99.0);
+                    psnr_sum += p;
+                    psnr_min = psnr_min.min(p);
+                }
+            }
+            total_trials += trials;
+            total_recovered += recovered;
+            let row = SweepRow {
+                scene,
+                interval,
+                v1_bytes: v1.len(),
+                v2_bytes: v2.len(),
+                overhead_pct,
+                trials,
+                recovered,
+                mean_damaged: damaged_sum as f64 / recovered.max(1) as f64,
+                mean_psnr_db: psnr_sum / recovered.max(1) as f64,
+                min_psnr_db: psnr_min,
+            };
+            println!(
+                "{:<9} interval {:>2}: {:>6} B (v1 {:>6} B, {:+.2}%), \
+                 {}/{} recovered, mean {:.1} seg damaged, salvage PSNR \
+                 mean {:.1} min {:.1} dB",
+                row.scene,
+                row.interval,
+                row.v2_bytes,
+                row.v1_bytes,
+                row.overhead_pct,
+                row.recovered,
+                row.trials,
+                row.mean_damaged,
+                row.mean_psnr_db,
+                row.min_psnr_db
+            );
+            if interval == DEFAULT_RESTART_INTERVAL {
+                ensure!(
+                    row.overhead_pct < 3.0,
+                    "{scene}: default-interval overhead {:.2}% \
+                     breaks the 3% budget",
+                    row.overhead_pct
+                );
+            }
+            rows.push(row);
+        }
+    }
+    let recovery = total_recovered as f64 / total_trials.max(1) as f64;
+    println!(
+        "recovery: {total_recovered}/{total_trials} = {:.4}",
+        recovery
+    );
+    ensure!(
+        recovery >= 0.99,
+        "salvage recovery {recovery:.4} below the 0.99 floor"
+    );
+    let json_rows: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("scene", Json::str(r.scene)),
+                ("interval", (r.interval as usize).into()),
+                ("v1_bytes", r.v1_bytes.into()),
+                ("v2_bytes", r.v2_bytes.into()),
+                ("overhead_pct", Json::num(r.overhead_pct)),
+                ("trials", r.trials.into()),
+                ("recovered", r.recovered.into()),
+                ("mean_damaged_segments", Json::num(r.mean_damaged)),
+                ("salvage_psnr_mean_db", Json::num(r.mean_psnr_db)),
+                ("salvage_psnr_min_db", Json::num(r.min_psnr_db)),
+            ])
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("table", Json::str("resilience")),
+        ("size", size.into()),
+        (
+            "default_interval",
+            (codec::DEFAULT_RESTART_INTERVAL as usize).into(),
+        ),
+        ("recovery_fraction", Json::num(recovery)),
+        ("rows", Json::Arr(json_rows)),
+    ])
+    .to_string();
+    let text = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{} interval {}: {} B ({:+.2}%), {}/{} recovered\n",
+                r.scene,
+                r.interval,
+                r.v2_bytes,
+                r.overhead_pct,
+                r.recovered,
+                r.trials
+            )
+        })
+        .collect::<String>();
+    save_results("resilience", &text, &json);
+    Ok(())
+}

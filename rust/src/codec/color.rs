@@ -12,6 +12,12 @@
 //! the existing grayscale decoder plus consistency checks. Chroma planes
 //! carry their subsampled dimensions; the color header's `subsampling`
 //! tag tells the decoder how to upsample.
+//!
+//! The v2 front doors ([`encode_v2`], [`encode_scanned_v2`]) keep the
+//! same `CDC3` wrapper but embed `CDC2` restart-segment plane streams,
+//! and [`decode_salvage`] tolerates damage: per-plane salvage decoding,
+//! magic-scan recovery when a plane length field is corrupted, and
+//! whole-plane concealment (mid-gray) when a plane head is unusable.
 
 use anyhow::{bail, Context, Result};
 
@@ -20,7 +26,8 @@ use crate::image::ycbcr::Subsampling;
 
 use super::encoder::ScanCoefs;
 use super::{decode_bail, decoder, encoder, DecodeErrorKind, Header};
-use super::{MAX_DIM, MAX_PIXELS};
+use super::{PlaneSalvage, SalvageReport};
+use super::{MAGIC, MAGIC_V2, MAX_DIM, MAX_PIXELS};
 
 /// Validate plane dimensions against the container geometry.
 fn check_plane_dims(
@@ -209,6 +216,64 @@ pub fn encode_scanned(
     Ok(out)
 }
 
+/// Like [`encode`], but each plane is a `CDC2` restart-segment stream
+/// with the given restart interval (block rows per segment; 0 = one
+/// segment per plane).
+pub fn encode_v2(
+    header: &ColorHeader,
+    planes: &[PlaneCoef; 3],
+    restart_interval: u16,
+) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    header.write(&mut out);
+    for (i, plane) in planes.iter().enumerate() {
+        check_plane_dims(header, i, (plane.width, plane.height))?;
+        let ph = Header {
+            width: plane.width as u32,
+            height: plane.height as u32,
+            padded_width: plane.padded_width as u32,
+            padded_height: plane.padded_height as u32,
+            quality: header.quality,
+            variant: header.variant,
+        };
+        let stream =
+            encoder::encode_v2(&ph, &plane.qcoef, restart_interval)
+                .with_context(|| format!("encoding plane {i}"))?;
+        out.extend_from_slice(&(stream.len() as u32).to_le_bytes());
+        out.extend_from_slice(&stream);
+    }
+    Ok(out)
+}
+
+/// Like [`encode_scanned`], but each plane is a `CDC2` restart-segment
+/// stream. Byte-identical to [`encode_v2`] over equivalent planar
+/// buffers.
+pub fn encode_scanned_v2(
+    header: &ColorHeader,
+    planes: &[ScanCoefs; 3],
+    restart_interval: u16,
+) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    header.write(&mut out);
+    for (i, plane) in planes.iter().enumerate() {
+        check_plane_dims(header, i, (plane.width, plane.height))?;
+        let ph = Header {
+            width: plane.width as u32,
+            height: plane.height as u32,
+            padded_width: plane.padded_width as u32,
+            padded_height: plane.padded_height as u32,
+            quality: header.quality,
+            variant: header.variant,
+        };
+        let stream =
+            encoder::encode_scanned_v2(&ph, plane, restart_interval)
+                .with_context(|| format!("encoding plane {i}"))?;
+        out.extend_from_slice(&(stream.len() as u32).to_le_bytes());
+        out.extend_from_slice(&stream);
+    }
+    Ok(out)
+}
+
 /// Decoded color container: header + per-plane coefficients.
 pub struct ColorDecoded {
     pub header: ColorHeader,
@@ -284,6 +349,131 @@ pub fn decode(bytes: &[u8]) -> Result<ColorDecoded> {
         Err(_) => unreachable!("exactly three planes pushed"),
     };
     Ok(ColorDecoded { header, planes })
+}
+
+/// Scan for the magic of the next embedded plane stream (`CDC1` or
+/// `CDC2`), starting at `from`. Used to re-anchor after a corrupted
+/// plane length field.
+fn scan_next_plane_magic(bytes: &[u8], from: usize) -> Option<usize> {
+    let mut q = from;
+    while q + 4 <= bytes.len() {
+        if &bytes[q..q + 4] == MAGIC || &bytes[q..q + 4] == MAGIC_V2 {
+            return Some(q);
+        }
+        q += 1;
+    }
+    None
+}
+
+/// A fully concealed plane: mid-gray (all-zero coefficients) at the
+/// expected geometry, reported as one damaged, unconcealable segment.
+fn concealed_plane(
+    ew: usize,
+    eh: usize,
+    skipped: usize,
+) -> (PlaneCoef, PlaneSalvage) {
+    let pw = ew.next_multiple_of(8);
+    let ph = eh.next_multiple_of(8);
+    (
+        PlaneCoef {
+            qcoef: vec![0.0; pw * ph],
+            width: ew,
+            height: eh,
+            padded_width: pw,
+            padded_height: ph,
+        },
+        PlaneSalvage {
+            segments_total: 1,
+            segments_damaged: 1,
+            segments_concealed: 0,
+            bytes_skipped: skipped as u64,
+        },
+    )
+}
+
+/// Damage-tolerant decode of a `CDC3` container. The color header must
+/// be intact; everything after it is salvageable. Per plane:
+///
+/// * the embedded stream goes through the grayscale salvage decoder
+///   (per-segment crc + concealment for `CDC2` planes);
+/// * a corrupted plane length field triggers a scan for the next
+///   plane's magic so later planes are not lost;
+/// * a plane whose head is unusable (or whose geometry disagrees with
+///   the color header) is concealed whole as mid-gray.
+pub fn decode_salvage(
+    bytes: &[u8],
+) -> Result<(ColorDecoded, SalvageReport)> {
+    let (header, mut off) = ColorHeader::read(bytes)?;
+    let sub = tag_subsampling(header.subsampling)?;
+    let (w, h) = (header.width as usize, header.height as usize);
+    let (cw, ch) = sub.chroma_dims(w, h);
+    let want = [(w, h), (cw, ch), (cw, ch)];
+    let mut planes = Vec::with_capacity(3);
+    let mut reports = Vec::with_capacity(3);
+    for &(ew, eh) in want.iter() {
+        if bytes.len() < off + 4 {
+            // ran off the end: conceal this and all remaining planes
+            let (p, r) = concealed_plane(ew, eh, bytes.len() - off);
+            planes.push(p);
+            reports.push(r);
+            off = bytes.len();
+            continue;
+        }
+        let len = u32::from_le_bytes([
+            bytes[off],
+            bytes[off + 1],
+            bytes[off + 2],
+            bytes[off + 3],
+        ]) as usize;
+        let (slice, next_off) = if bytes.len() >= off + 4 + len {
+            (&bytes[off + 4..off + 4 + len], off + 4 + len)
+        } else {
+            // implausible length: re-anchor on the next plane magic
+            // (its u32 length field sits right before it)
+            match scan_next_plane_magic(bytes, off + 8) {
+                Some(q) if q >= off + 8 => {
+                    (&bytes[off + 4..q - 4], q - 4)
+                }
+                _ => (&bytes[off + 4..], bytes.len()),
+            }
+        };
+        let (plane, report) =
+            match decoder::decode_salvage_plane(slice) {
+                Ok((dec, ps))
+                    if (dec.header.width as usize,
+                        dec.header.height as usize)
+                        == (ew, eh)
+                        && dec.header.quality == header.quality
+                        && dec.header.variant == header.variant =>
+                {
+                    (
+                        PlaneCoef {
+                            qcoef: dec.qcoef_planar,
+                            width: ew,
+                            height: eh,
+                            padded_width: dec.header.padded_width
+                                as usize,
+                            padded_height: dec.header.padded_height
+                                as usize,
+                        },
+                        ps,
+                    )
+                }
+                // geometry mismatch or unusable plane head
+                _ => concealed_plane(ew, eh, slice.len()),
+            };
+        planes.push(plane);
+        reports.push(report);
+        off = next_off;
+    }
+    let planes: [PlaneCoef; 3] = match planes.try_into() {
+        Ok(p) => p,
+        Err(_) => unreachable!("exactly three planes pushed"),
+    };
+    Ok((
+        ColorDecoded { header, planes },
+        SalvageReport::from_planes(reports),
+    ))
 }
 
 #[cfg(test)]
@@ -431,6 +621,91 @@ mod tests {
             }
             let _ = decode(&corrupt); // Ok or Err, never panic
         }
+    }
+
+    #[test]
+    fn v2_roundtrip_and_clean_salvage() {
+        for interval in [0u16, 2, 4] {
+            let (header, planes, _) =
+                make(64, 48, Subsampling::S420, 50);
+            let bytes = encode_v2(&header, &planes, interval).unwrap();
+            let dec = decode(&bytes).unwrap();
+            assert_eq!(dec.planes, planes, "interval {interval}");
+            let (sdec, report) = decode_salvage(&bytes).unwrap();
+            assert_eq!(sdec.planes, planes);
+            assert!(report.is_clean(), "{report:?}");
+            assert_eq!(report.per_plane.len(), 3);
+        }
+    }
+
+    #[test]
+    fn v1_salvage_is_strict_roundtrip() {
+        let (header, planes, _) = make(48, 32, Subsampling::S444, 75);
+        let bytes = encode(&header, &planes).unwrap();
+        let (dec, report) = decode_salvage(&bytes).unwrap();
+        assert_eq!(dec.planes, planes);
+        assert!(report.is_clean());
+        assert_eq!(report.segments_total, 3);
+    }
+
+    #[test]
+    fn v2_salvage_conceals_flipped_plane_payload() {
+        let (header, planes, _) = make(64, 64, Subsampling::S420, 50);
+        let bytes = encode_v2(&header, &planes, 1).unwrap();
+        // flip a bit near the end of the luma plane's segment data
+        let y_len = u32::from_le_bytes(
+            bytes[ColorHeader::BYTES..ColorHeader::BYTES + 4]
+                .try_into()
+                .unwrap(),
+        ) as usize;
+        let mut corrupt = bytes.clone();
+        let pos = ColorHeader::BYTES + 4 + y_len - y_len / 8;
+        corrupt[pos] ^= 0x40;
+        assert!(decode(&corrupt).is_err());
+        let (dec, report) = decode_salvage(&corrupt).unwrap();
+        assert!(report.segments_damaged >= 1, "{report:?}");
+        assert!(!report.is_clean());
+        // chroma planes untouched
+        assert_eq!(dec.planes[1], planes[1]);
+        assert_eq!(dec.planes[2], planes[2]);
+    }
+
+    #[test]
+    fn salvage_recovers_later_planes_after_bad_length_field() {
+        let (header, planes, _) = make(48, 48, Subsampling::S420, 50);
+        let bytes = encode_v2(&header, &planes, 2).unwrap();
+        let mut corrupt = bytes.clone();
+        // blow up the luma plane's u32 length field
+        corrupt[ColorHeader::BYTES + 3] = 0xFF;
+        assert!(decode(&corrupt).is_err());
+        let (dec, report) = decode_salvage(&corrupt).unwrap();
+        // luma still decodes (its bytes are intact, only the outer
+        // length lied); chroma re-anchored via magic scan
+        assert_eq!(dec.planes[0], planes[0], "{report:?}");
+        assert_eq!(dec.planes[1], planes[1]);
+        assert_eq!(dec.planes[2], planes[2]);
+    }
+
+    #[test]
+    fn salvage_conceals_destroyed_plane_head() {
+        let (header, planes, _) = make(32, 32, Subsampling::S444, 50);
+        let bytes = encode_v2(&header, &planes, 2).unwrap();
+        let mut corrupt = bytes.clone();
+        // wreck the chroma-1 plane magic so its head is unusable
+        let y_len = u32::from_le_bytes(
+            bytes[ColorHeader::BYTES..ColorHeader::BYTES + 4]
+                .try_into()
+                .unwrap(),
+        ) as usize;
+        let cb_magic = ColorHeader::BYTES + 4 + y_len + 4;
+        corrupt[cb_magic] = b'X';
+        let (dec, report) = decode_salvage(&corrupt).unwrap();
+        assert!(report.segments_damaged >= 1);
+        assert_eq!(dec.planes[0], planes[0]);
+        // concealed plane keeps the expected geometry
+        assert_eq!(dec.planes[1].width, planes[1].width);
+        assert_eq!(dec.planes[1].padded_width, planes[1].padded_width);
+        assert!(dec.planes[1].qcoef.iter().all(|&c| c == 0.0));
     }
 
     #[test]

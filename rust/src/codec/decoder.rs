@@ -1,16 +1,31 @@
 //! Container decoder: header + Huffman tables + entropy-coded blocks back
 //! to planar quantized coefficients. Strictly validating — corrupt input
 //! must produce an `Err`, never a panic or OOM.
+//!
+//! Two entry points:
+//!
+//! * [`decode`] — fail-fast over either container version (`CDC1` or
+//!   `CDC2`): any checksum, marker, or entropy failure is an `Err`.
+//! * [`decode_salvage`] — damage-tolerant over `CDC2`: verifies each
+//!   restart segment's crc32, re-syncs at the next segment marker after
+//!   a failure, conceals damaged segments (DC-midpoint fill plus
+//!   replication of the nearest intact block row), and reports what it
+//!   did in a [`SalvageReport`]. Hard-fails only when the head (header,
+//!   Huffman tables, segment index) is unusable.
 
 use anyhow::{Context, Result};
 
-use crate::dct::blocks::{grid_dims, store_coef_planar};
+use crate::dct::blocks::{grid_dims, store_coef_planar, BLOCK};
 use crate::util::bitio::BitReader;
 
+use super::encoder::{rows_per_segment, segment_count};
 use super::huffman::{HuffmanCode, HuffmanDecoder};
 use super::rle::read_block;
 use super::zigzag::unscan;
-use super::{decode_bail, DecodeErrorKind, Header, MAX_PIXELS};
+use super::{
+    decode_bail, DecodeErrorKind, Header, PlaneSalvage, SalvageReport,
+    MAX_PIXELS, SEG_MARKER, SEG_MARKER_BASE,
+};
 
 /// Decoded container: header + planar coefficients (padded layout).
 pub struct Decoded {
@@ -18,7 +33,18 @@ pub struct Decoded {
     pub qcoef_planar: Vec<f32>,
 }
 
+/// Bytes of a v2 segment header: marker pair + u32 length + u32 crc32.
+const SEG_HEAD_BYTES: usize = 2 + 4 + 4;
+
 pub fn decode(bytes: &[u8]) -> Result<Decoded> {
+    if super::is_v2_container(bytes) {
+        decode_v2(bytes)
+    } else {
+        decode_v1(bytes)
+    }
+}
+
+fn decode_v1(bytes: &[u8]) -> Result<Decoded> {
     let (header, mut off) = Header::read(bytes)?;
     let pw = header.padded_width as u64;
     let ph = header.padded_height as u64;
@@ -31,10 +57,10 @@ pub fn decode(bytes: &[u8]) -> Result<Decoded> {
         );
     }
     let (dc_code, used) = HuffmanCode::read_table(&bytes[off..])
-        .context("[decode:corrupt] DC Huffman table")?;
+        .context("DC Huffman table")?;
     off += used;
     let (ac_code, used) = HuffmanCode::read_table(&bytes[off..])
-        .context("[decode:corrupt] AC Huffman table")?;
+        .context("AC Huffman table")?;
     off += used;
     if bytes.len() < off + 4 {
         decode_bail!(DecodeErrorKind::Truncated, "truncated payload length");
@@ -59,9 +85,35 @@ pub fn decode(bytes: &[u8]) -> Result<Decoded> {
     let ac_dec = HuffmanDecoder::new(&ac_code);
     let (gw, gh) = grid_dims(pw as usize, ph as usize);
     let mut qcoef = vec![0.0f32; (pw * ph) as usize];
+    decode_rows(
+        payload,
+        0..gh,
+        gw,
+        pw as usize,
+        &dc_dec,
+        &ac_dec,
+        &mut qcoef,
+    )?;
+    Ok(Decoded {
+        header,
+        qcoef_planar: qcoef,
+    })
+}
+
+/// Entropy-decode one byte-aligned bitstream covering block rows
+/// `rows` (DC predictor starts at 0) into the planar buffer.
+fn decode_rows(
+    payload: &[u8],
+    rows: std::ops::Range<usize>,
+    gw: usize,
+    pw: usize,
+    dc_dec: &HuffmanDecoder,
+    ac_dec: &HuffmanDecoder,
+    qcoef: &mut [f32],
+) -> Result<()> {
     let mut r = BitReader::new(payload);
     let mut prev_dc: i16 = 0;
-    for by in 0..gh {
+    for by in rows {
         for bx in 0..gw {
             let z = read_block(
                 &mut r,
@@ -74,13 +126,331 @@ pub fn decode(bytes: &[u8]) -> Result<Decoded> {
             })?;
             prev_dc = z[0];
             let block = unscan(&z);
-            store_coef_planar(&mut qcoef, pw as usize, bx, by, &block);
+            store_coef_planar(qcoef, pw, bx, by, &block);
         }
     }
-    Ok(Decoded {
+    Ok(())
+}
+
+/// Parsed, crc-verified head of a v2 container: everything before the
+/// first segment. A salvage decode can trust all of it — the head crc32
+/// covers the header fields, both Huffman tables, and the length index.
+struct V2Head {
+    header: Header,
+    rows_per_seg: usize,
+    seg_count: usize,
+    dc: HuffmanCode,
+    ac: HuffmanCode,
+    seg_lens: Vec<u32>,
+    /// Offset of the first segment marker.
+    head_len: usize,
+}
+
+fn read_v2_head(bytes: &[u8]) -> Result<V2Head> {
+    let (header, mut off) = Header::read_v2(bytes)?;
+    let pw = header.padded_width as u64;
+    let ph = header.padded_height as u64;
+    if pw * ph > MAX_PIXELS {
+        decode_bail!(
+            DecodeErrorKind::TooLarge,
+            "image too large: {pw}x{ph}"
+        );
+    }
+    if bytes.len() < off + 6 {
+        decode_bail!(
+            DecodeErrorKind::Truncated,
+            "truncated v2 segment fields"
+        );
+    }
+    let restart_interval =
+        u16::from_le_bytes([bytes[off], bytes[off + 1]]);
+    let seg_count = u32::from_le_bytes([
+        bytes[off + 2],
+        bytes[off + 3],
+        bytes[off + 4],
+        bytes[off + 5],
+    ]) as usize;
+    off += 6;
+    let (_gw, gh) = grid_dims(pw as usize, ph as usize);
+    let rows_per_seg = rows_per_segment(restart_interval, gh);
+    // the DoS guard for the index allocation below: the count must
+    // agree with the grid geometry, which MAX_PIXELS already bounds
+    if seg_count != segment_count(restart_interval, gh) {
+        decode_bail!(
+            DecodeErrorKind::BadHeader,
+            "segment count {seg_count} disagrees with {gh} block rows \
+             at interval {restart_interval}"
+        );
+    }
+    let (dc, used) = HuffmanCode::read_table(&bytes[off..])
+        .context("DC Huffman table")?;
+    off += used;
+    let (ac, used) = HuffmanCode::read_table(&bytes[off..])
+        .context("AC Huffman table")?;
+    off += used;
+    if bytes.len() < off + seg_count * 4 + 4 {
+        decode_bail!(
+            DecodeErrorKind::Truncated,
+            "truncated v2 segment index ({seg_count} segments)"
+        );
+    }
+    let mut seg_lens = Vec::with_capacity(seg_count);
+    for i in 0..seg_count {
+        let o = off + i * 4;
+        seg_lens.push(u32::from_le_bytes([
+            bytes[o],
+            bytes[o + 1],
+            bytes[o + 2],
+            bytes[o + 3],
+        ]));
+    }
+    off += seg_count * 4;
+    let stored = u32::from_le_bytes([
+        bytes[off],
+        bytes[off + 1],
+        bytes[off + 2],
+        bytes[off + 3],
+    ]);
+    if crc32fast::hash(&bytes[..off]) != stored {
+        decode_bail!(
+            DecodeErrorKind::Corrupt,
+            "v2 head checksum mismatch"
+        );
+    }
+    off += 4;
+    Ok(V2Head {
         header,
+        rows_per_seg,
+        seg_count,
+        dc,
+        ac,
+        seg_lens,
+        head_len: off,
+    })
+}
+
+/// Is a well-formed segment header for segment `s` (marker pair, inline
+/// length matching the index, crc32 matching the payload) at `pos`?
+fn segment_valid_at(
+    bytes: &[u8],
+    pos: usize,
+    s: usize,
+    len: usize,
+) -> bool {
+    if bytes.len() < pos + SEG_HEAD_BYTES + len {
+        return false;
+    }
+    if bytes[pos] != SEG_MARKER
+        || bytes[pos + 1] != SEG_MARKER_BASE + (s as u8 & 7)
+    {
+        return false;
+    }
+    let inline_len = u32::from_le_bytes([
+        bytes[pos + 2],
+        bytes[pos + 3],
+        bytes[pos + 4],
+        bytes[pos + 5],
+    ]) as usize;
+    if inline_len != len {
+        return false;
+    }
+    let crc = u32::from_le_bytes([
+        bytes[pos + 6],
+        bytes[pos + 7],
+        bytes[pos + 8],
+        bytes[pos + 9],
+    ]);
+    crc32fast::hash(&bytes[pos + SEG_HEAD_BYTES..pos + SEG_HEAD_BYTES + len])
+        == crc
+}
+
+fn decode_v2(bytes: &[u8]) -> Result<Decoded> {
+    let head = read_v2_head(bytes)?;
+    let pw = head.header.padded_width as usize;
+    let ph = head.header.padded_height as usize;
+    let (gw, gh) = grid_dims(pw, ph);
+    let dc_dec = HuffmanDecoder::new(&head.dc);
+    let ac_dec = HuffmanDecoder::new(&head.ac);
+    let mut qcoef = vec![0.0f32; pw * ph];
+    let mut off = head.head_len;
+    for s in 0..head.seg_count {
+        let len = head.seg_lens[s] as usize;
+        if bytes.len() < off + SEG_HEAD_BYTES + len {
+            decode_bail!(
+                DecodeErrorKind::Truncated,
+                "segment {s} truncated: {} bytes needed, {} available",
+                SEG_HEAD_BYTES + len,
+                bytes.len() - off
+            );
+        }
+        if !segment_valid_at(bytes, off, s, len) {
+            decode_bail!(
+                DecodeErrorKind::Corrupt,
+                "segment {s} marker or checksum mismatch"
+            );
+        }
+        let payload = &bytes[off + SEG_HEAD_BYTES..off + SEG_HEAD_BYTES + len];
+        let r0 = s * head.rows_per_seg;
+        let r1 = (r0 + head.rows_per_seg).min(gh);
+        decode_rows(payload, r0..r1, gw, pw, &dc_dec, &ac_dec, &mut qcoef)
+            .with_context(|| format!("segment {s}"))?;
+        off += SEG_HEAD_BYTES + len;
+    }
+    Ok(Decoded {
+        header: head.header,
         qcoef_planar: qcoef,
     })
+}
+
+/// Scan forward from `from` for a valid header of segment `s` — the
+/// re-sync step after damage. The triple check (marker pair, index
+/// length, payload crc32) makes a false anchor on entropy bytes
+/// vanishingly unlikely.
+fn scan_segment(
+    bytes: &[u8],
+    from: usize,
+    s: usize,
+    len: usize,
+) -> Option<usize> {
+    let mut pos = from;
+    while pos + SEG_HEAD_BYTES + len <= bytes.len() {
+        if bytes[pos] == SEG_MARKER
+            && bytes[pos + 1] == SEG_MARKER_BASE + (s as u8 & 7)
+            && segment_valid_at(bytes, pos, s, len)
+        {
+            return Some(pos);
+        }
+        pos += 1;
+    }
+    None
+}
+
+/// Salvage-decode one grayscale stream (either version), reporting
+/// per-plane damage. v1 streams have no segments to salvage: they decode
+/// strictly and report a single clean segment, or propagate the error.
+pub(crate) fn decode_salvage_plane(
+    bytes: &[u8],
+) -> Result<(Decoded, PlaneSalvage)> {
+    if !super::is_v2_container(bytes) {
+        let dec = decode(bytes)?;
+        return Ok((
+            dec,
+            PlaneSalvage {
+                segments_total: 1,
+                ..PlaneSalvage::default()
+            },
+        ));
+    }
+    let head = read_v2_head(bytes)?;
+    let pw = head.header.padded_width as usize;
+    let ph = head.header.padded_height as usize;
+    let (gw, gh) = grid_dims(pw, ph);
+    let dc_dec = HuffmanDecoder::new(&head.dc);
+    let ac_dec = HuffmanDecoder::new(&head.ac);
+    let mut qcoef = vec![0.0f32; pw * ph];
+    let mut ps = PlaneSalvage {
+        segments_total: head.seg_count as u32,
+        ..PlaneSalvage::default()
+    };
+    let mut row_ok = vec![false; gh];
+    let mut damaged: Vec<usize> = Vec::new();
+    // `cursor` is where the next segment should start; `resync_from` is
+    // the end of the last intact segment (never past real data, so a
+    // splice that removed bytes is still covered by the scan)
+    let mut cursor = head.head_len;
+    let mut resync_from = head.head_len;
+    for s in 0..head.seg_count {
+        let len = head.seg_lens[s] as usize;
+        let r0 = s * head.rows_per_seg;
+        let r1 = (r0 + head.rows_per_seg).min(gh);
+        let found = if segment_valid_at(bytes, cursor, s, len) {
+            Some(cursor)
+        } else {
+            scan_segment(bytes, resync_from, s, len)
+        };
+        let decoded = found.is_some_and(|pos| {
+            let payload =
+                &bytes[pos + SEG_HEAD_BYTES..pos + SEG_HEAD_BYTES + len];
+            let ok = decode_rows(
+                payload,
+                r0..r1,
+                gw,
+                pw,
+                &dc_dec,
+                &ac_dec,
+                &mut qcoef,
+            )
+            .is_ok();
+            if ok {
+                if pos > cursor {
+                    ps.bytes_skipped += (pos - cursor) as u64;
+                }
+                cursor = pos + SEG_HEAD_BYTES + len;
+                resync_from = cursor;
+            }
+            ok
+        });
+        if decoded {
+            for by in r0..r1 {
+                row_ok[by] = true;
+            }
+        } else {
+            ps.segments_damaged += 1;
+            damaged.push(s);
+            ps.bytes_skipped += (SEG_HEAD_BYTES + len) as u64;
+            // nominal advance: a pure bit-flip leaves later segments at
+            // their indexed offsets; a splice is caught by the scan
+            cursor += SEG_HEAD_BYTES + len;
+        }
+    }
+    // concealment: damaged bands reset to zero coefficients (DC
+    // midpoint — mid-gray after the level shift), then patched with the
+    // nearest intact block row when one exists
+    let any_ok = row_ok.iter().any(|&b| b);
+    for &s in &damaged {
+        let r0 = s * head.rows_per_seg;
+        let r1 = (r0 + head.rows_per_seg).min(gh);
+        for by in r0..r1 {
+            let band = by * BLOCK * pw;
+            qcoef[band..band + BLOCK * pw].fill(0.0);
+            if let Some(src) = nearest_ok_row(&row_ok, by) {
+                let sband = src * BLOCK * pw;
+                qcoef.copy_within(sband..sband + BLOCK * pw, band);
+            }
+        }
+        if any_ok {
+            ps.segments_concealed += 1;
+        }
+    }
+    Ok((
+        Decoded {
+            header: head.header,
+            qcoef_planar: qcoef,
+        },
+        ps,
+    ))
+}
+
+/// Nearest block row flagged intact, searching outward from `by`.
+fn nearest_ok_row(row_ok: &[bool], by: usize) -> Option<usize> {
+    for d in 1..row_ok.len() {
+        if by >= d && row_ok[by - d] {
+            return Some(by - d);
+        }
+        if by + d < row_ok.len() && row_ok[by + d] {
+            return Some(by + d);
+        }
+    }
+    None
+}
+
+/// Damage-tolerant decode of a grayscale container. Strict semantics
+/// for v1 input; for v2, per-segment crc verification, marker re-sync,
+/// and concealment as described in the module docs. Errors only when
+/// the head (header, tables, index) is unusable.
+pub fn decode_salvage(bytes: &[u8]) -> Result<(Decoded, SalvageReport)> {
+    let (dec, ps) = decode_salvage_plane(bytes)?;
+    Ok((dec, SalvageReport::from_planes(vec![ps])))
 }
 
 #[cfg(test)]
@@ -203,6 +573,119 @@ mod tests {
         match decode(&buf) {
             Ok(_) => panic!("oversized header must be rejected"),
             Err(err) => assert!(!err.to_string().is_empty()),
+        }
+    }
+
+    fn encode_image_v2(
+        w: usize,
+        h: usize,
+        interval: u16,
+    ) -> (Vec<u8>, Vec<f32>) {
+        let img = synthetic::lena_like(w, h, 7);
+        let pipe = CpuPipeline::new(Variant::Cordic, 50);
+        let (qcoef, pw, ph) = pipe.analyze(&img);
+        let header = Header {
+            width: w as u32,
+            height: h as u32,
+            padded_width: pw as u32,
+            padded_height: ph as u32,
+            quality: 50,
+            variant: variant_tag(Variant::Cordic),
+        };
+        let bytes =
+            encoder::encode_v2(&header, &qcoef, interval).unwrap();
+        (bytes, qcoef)
+    }
+
+    #[test]
+    fn v2_strict_roundtrip_across_intervals() {
+        for interval in [0u16, 1, 2, 4, 7, 100] {
+            let (bytes, qcoef) = encode_image_v2(64, 48, interval);
+            let dec = decode(&bytes).unwrap();
+            assert_eq!(dec.qcoef_planar, qcoef, "interval {interval}");
+            let (dec2, report) = decode_salvage(&bytes).unwrap();
+            assert_eq!(dec2.qcoef_planar, qcoef);
+            assert!(report.is_clean(), "{report:?}");
+        }
+    }
+
+    #[test]
+    fn v2_interval_zero_single_segment() {
+        let (bytes, _) = encode_image_v2(64, 64, 0);
+        let (_, report) = decode_salvage(&bytes).unwrap();
+        assert_eq!(report.segments_total, 1);
+    }
+
+    #[test]
+    fn v2_strict_rejects_payload_flip_salvage_conceals() {
+        let (bytes, qcoef) = encode_image_v2(64, 64, 1);
+        // flip one bit well inside the last quarter (segment region)
+        let mut corrupt = bytes.clone();
+        let pos = corrupt.len() - corrupt.len() / 4;
+        corrupt[pos] ^= 0x10;
+        assert!(decode(&corrupt).is_err(), "strict must reject the flip");
+        let (dec, report) = decode_salvage(&corrupt).unwrap();
+        assert_eq!(report.segments_damaged, 1, "{report:?}");
+        assert_eq!(report.segments_concealed, 1);
+        assert!(report.bytes_skipped > 0);
+        // intact rows decode bit-identically
+        assert_eq!(dec.qcoef_planar.len(), qcoef.len());
+        let pw = 64;
+        let damaged_rows: Vec<usize> = (0..8)
+            .filter(|&by| {
+                dec.qcoef_planar[by * 8 * pw..(by + 1) * 8 * pw]
+                    != qcoef[by * 8 * pw..(by + 1) * 8 * pw]
+            })
+            .collect();
+        assert!(
+            damaged_rows.len() <= 1,
+            "one damaged segment must cost at most one band: \
+             {damaged_rows:?}"
+        );
+    }
+
+    #[test]
+    fn v1_salvage_reports_single_clean_segment() {
+        let (bytes, qcoef, ..) = encode_image(48, 48, Variant::Dct, 50);
+        let (dec, report) = decode_salvage(&bytes).unwrap();
+        assert_eq!(dec.qcoef_planar, qcoef);
+        assert_eq!(report.segments_total, 1);
+        assert!(report.is_clean());
+        assert_eq!(report.per_plane.len(), 1);
+    }
+
+    #[test]
+    fn v2_salvage_survives_any_single_payload_flip() {
+        let (bytes, _) = encode_image_v2(48, 48, 1);
+        // parse the head structure to find where the segments begin
+        let seg_count = u32::from_le_bytes(
+            bytes[Header::BYTES + 2..Header::BYTES + 6]
+                .try_into()
+                .unwrap(),
+        ) as usize;
+        let mut head_end = Header::BYTES + 6;
+        for _ in 0..2 {
+            let (_, used) =
+                HuffmanCode::read_table(&bytes[head_end..]).unwrap();
+            head_end += used;
+        }
+        head_end += seg_count * 4 + 4;
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            let mut corrupt = bytes.clone();
+            let i = head_end
+                + rng.below((corrupt.len() - head_end) as u64) as usize;
+            corrupt[i] ^= 1 << rng.below(8);
+            let (_, report) = decode_salvage(&corrupt)
+                .expect("payload flip must salvage");
+            assert!(
+                report.segments_damaged >= 1,
+                "flip at {i} reported clean"
+            );
+            assert_eq!(
+                report.segments_concealed, report.segments_damaged,
+                "with intact neighbours every damaged segment conceals"
+            );
         }
     }
 }

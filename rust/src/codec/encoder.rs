@@ -20,7 +20,7 @@ use crate::util::bitio::BitWriter;
 use super::huffman::HuffmanCode;
 use super::rle::{encode_block, write_block, BlockSymbols};
 use super::zigzag::scan;
-use super::Header;
+use super::{Header, SEG_MARKER, SEG_MARKER_BASE};
 
 /// Quantized coefficients in entropy-coding order: one 64-entry zigzag
 /// scan per 8x8 block, blocks in raster order over the padded grid —
@@ -198,6 +198,155 @@ fn encode_scans<T>(
     let payload = w.finish();
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
     out.extend_from_slice(&payload);
+    Ok(out)
+}
+
+/// Block rows per segment for a grid of `gh` block rows: interval 0
+/// degenerates to one segment covering the whole image.
+pub(super) fn rows_per_segment(interval: u16, gh: usize) -> usize {
+    if interval == 0 {
+        gh.max(1)
+    } else {
+        interval as usize
+    }
+}
+
+/// Segment count for a grid of `gh` block rows at `interval`.
+pub(super) fn segment_count(interval: u16, gh: usize) -> usize {
+    gh.max(1).div_ceil(rows_per_segment(interval, gh))
+}
+
+/// Encode planar quantized coefficients into a v2 (`CDC2`) container
+/// with restart segments of `restart_interval` block rows (0 = one
+/// segment for the whole image).
+pub fn encode_v2(
+    header: &Header,
+    qcoef_planar: &[f32],
+    restart_interval: u16,
+) -> Result<Vec<u8>> {
+    let (pw, ph) = (
+        header.padded_width as usize,
+        header.padded_height as usize,
+    );
+    assert_eq!(qcoef_planar.len(), pw * ph, "coefficient buffer size");
+    let (gw, gh) = grid_dims(pw, ph);
+    let mut qc = [0i16; 64];
+    encode_scans_v2(
+        header,
+        (gw, gh),
+        restart_interval,
+        (0..gh).flat_map(|by| (0..gw).map(move |bx| (bx, by))),
+        |(bx, by)| {
+            load_coef_planar(qcoef_planar, pw, bx, by, &mut qc);
+            scan(&qc)
+        },
+    )
+}
+
+/// Encode already-zigzag-ordered coefficients into a v2 (`CDC2`)
+/// container. Byte-identical to [`encode_v2`] over the equivalent
+/// planar buffer.
+pub fn encode_scanned_v2(
+    header: &Header,
+    scans: &ScanCoefs,
+    restart_interval: u16,
+) -> Result<Vec<u8>> {
+    let (pw, ph) = (
+        header.padded_width as usize,
+        header.padded_height as usize,
+    );
+    assert_eq!(
+        (scans.padded_width, scans.padded_height),
+        (pw, ph),
+        "scanned buffer padded size disagrees with header"
+    );
+    assert_eq!(scans.data.len(), pw * ph, "scanned buffer size");
+    let (gw, gh) = grid_dims(pw, ph);
+    encode_scans_v2(
+        header,
+        (gw, gh),
+        restart_interval,
+        0..scans.blocks(),
+        |b| scans.block(b).try_into().expect("64-coefficient block"),
+    )
+}
+
+/// The v2 coding core: global statistics (DC predictor reset at every
+/// segment start, so the symbol stream matches what each segment's
+/// independent decode will see), shared per-image Huffman tables in a
+/// crc32-protected head with a segment-length index, then one
+/// byte-aligned, individually checksummed bitstream per segment.
+fn encode_scans_v2<T>(
+    header: &Header,
+    (gw, gh): (usize, usize),
+    restart_interval: u16,
+    order: impl Iterator<Item = T>,
+    mut scan_of: impl FnMut(T) -> [i16; 64],
+) -> Result<Vec<u8>> {
+    let rows_per_seg = rows_per_segment(restart_interval, gh);
+    let seg_count = segment_count(restart_interval, gh);
+    // pass 1: symbols + statistics, DC DPCM restarting per segment
+    let mut dc_freq = [0u64; 256];
+    let mut ac_freq = [0u64; 256];
+    let mut blocks: Vec<BlockSymbols> = Vec::with_capacity(gw * gh);
+    let mut prev_dc: i16 = 0;
+    for (idx, item) in order.enumerate() {
+        if idx % gw == 0 && (idx / gw) % rows_per_seg == 0 {
+            prev_dc = 0;
+        }
+        let z = scan_of(item);
+        let sym = encode_block(&z, prev_dc);
+        prev_dc = z[0];
+        dc_freq[sym.dc.0 as usize] += 1;
+        for &(s, _) in &sym.ac {
+            ac_freq[s as usize] += 1;
+        }
+        blocks.push(sym);
+    }
+    if ac_freq.iter().all(|&f| f == 0) {
+        ac_freq[super::rle::EOB as usize] = 1;
+    }
+    let dc_code = HuffmanCode::build(&dc_freq)?;
+    let ac_code = HuffmanCode::build(&ac_freq)?;
+
+    // pass 2: one independent, byte-aligned bitstream per segment
+    let mut payloads: Vec<Vec<u8>> = Vec::with_capacity(seg_count);
+    for s in 0..seg_count {
+        let r0 = s * rows_per_seg;
+        let r1 = (r0 + rows_per_seg).min(gh);
+        let mut w = BitWriter::new();
+        for sym in &blocks[r0 * gw..r1 * gw] {
+            write_block(
+                &mut w,
+                sym,
+                |w, s| dc_code.put(w, s),
+                |w, s| ac_code.put(w, s),
+            );
+        }
+        payloads.push(w.finish());
+    }
+
+    // head: header fields + interval + count + tables + length index,
+    // sealed by a crc32 so salvage can trust the index
+    let mut out = Vec::new();
+    header.write_v2(&mut out);
+    out.extend_from_slice(&restart_interval.to_le_bytes());
+    out.extend_from_slice(&(seg_count as u32).to_le_bytes());
+    dc_code.write_table(&mut out);
+    ac_code.write_table(&mut out);
+    for p in &payloads {
+        out.extend_from_slice(&(p.len() as u32).to_le_bytes());
+    }
+    let head_crc = crc32fast::hash(&out);
+    out.extend_from_slice(&head_crc.to_le_bytes());
+    // segments: marker | coded length | payload crc | payload
+    for (i, p) in payloads.iter().enumerate() {
+        out.push(SEG_MARKER);
+        out.push(SEG_MARKER_BASE + (i as u8 & 7));
+        out.extend_from_slice(&(p.len() as u32).to_le_bytes());
+        out.extend_from_slice(&crc32fast::hash(p).to_le_bytes());
+        out.extend_from_slice(p);
+    }
     Ok(out)
 }
 

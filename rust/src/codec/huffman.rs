@@ -7,6 +7,7 @@
 
 use anyhow::{bail, Result};
 
+use super::{decode_bail, DecodeErrorKind};
 use crate::util::bitio::{BitReader, BitWriter};
 
 pub const MAX_LEN: usize = 16;
@@ -107,15 +108,30 @@ impl HuffmanCode {
     }
 
     /// Parse a canonical descriptor; returns (code, bytes consumed).
+    /// Failures carry a `[decode:*]` tag: a table cut short classifies
+    /// as `Truncated`, an internally invalid one as `Corrupt` — the
+    /// distinction the serve layer's error frames rely on.
     pub fn read_table(bytes: &[u8]) -> Result<(HuffmanCode, usize)> {
         if bytes.len() < MAX_LEN {
-            bail!("truncated Huffman table");
+            decode_bail!(
+                DecodeErrorKind::Truncated,
+                "truncated Huffman table"
+            );
         }
         let mut counts = [0u8; MAX_LEN];
         counts.copy_from_slice(&bytes[..MAX_LEN]);
         let nsym: usize = counts.iter().map(|&c| c as usize).sum();
-        if nsym == 0 || bytes.len() < MAX_LEN + nsym {
-            bail!("truncated Huffman symbol list ({nsym} symbols)");
+        if nsym == 0 {
+            decode_bail!(
+                DecodeErrorKind::Corrupt,
+                "empty Huffman table"
+            );
+        }
+        if bytes.len() < MAX_LEN + nsym {
+            decode_bail!(
+                DecodeErrorKind::Truncated,
+                "truncated Huffman symbol list ({nsym} symbols)"
+            );
         }
         let symbols = bytes[MAX_LEN..MAX_LEN + nsym].to_vec();
         let mut lens = [0u8; 256];
@@ -124,13 +140,22 @@ impl HuffmanCode {
             for _ in 0..c {
                 let s = symbols[idx] as usize;
                 if lens[s] != 0 {
-                    bail!("duplicate symbol {s} in Huffman table");
+                    decode_bail!(
+                        DecodeErrorKind::Corrupt,
+                        "duplicate symbol {s} in Huffman table"
+                    );
                 }
                 lens[s] = (li + 1) as u8;
                 idx += 1;
             }
         }
-        Ok((Self::from_lengths(&lens)?, MAX_LEN + nsym))
+        let code = Self::from_lengths(&lens).map_err(|e| {
+            super::DecodeError::new(
+                DecodeErrorKind::Corrupt,
+                format!("invalid Huffman table: {e}"),
+            )
+        })?;
+        Ok((code, MAX_LEN + nsym))
     }
 }
 

@@ -22,6 +22,17 @@
 //!
 //! Color images use the [`color`] container (`CDC3`): a color header
 //! followed by three of these grayscale streams, one per YCbCr plane.
+//!
+//! The v2 container (`CDC2`, [`MAGIC_V2`]) splits the entropy-coded
+//! payload into independently decodable *restart segments* of
+//! `restart_interval` block rows: each segment is byte-aligned, resets
+//! the DC predictor, and carries a `FF D0+(i&7)` marker, its coded
+//! length, and a crc32 of its payload; a crc32-protected head holds the
+//! shared Huffman tables and a segment-length index. Strict decode
+//! ([`decoder::decode`]) stays fail-fast on either version;
+//! [`decoder::decode_salvage`] re-syncs past damaged v2 segments and
+//! conceals them (DC-midpoint fill + nearest-intact-row replication),
+//! returning a [`SalvageReport`].
 
 pub mod color;
 pub mod decoder;
@@ -35,6 +46,31 @@ use std::fmt;
 use anyhow::{bail, Result};
 
 pub const MAGIC: &[u8; 4] = b"CDC1";
+
+/// Magic of the v2 (restart-segment) grayscale container. The fourth
+/// byte is the format version: v2 streams carry independently decodable
+/// segments with per-segment CRCs so a damaged region costs a few block
+/// rows, not the image.
+pub const MAGIC_V2: &[u8; 4] = b"CDC2";
+
+/// First byte of a v2 restart-segment marker.
+pub const SEG_MARKER: u8 = 0xFF;
+
+/// Second marker byte base: segment `i` is tagged `SEG_MARKER_BASE +
+/// (i & 7)` (JPEG RSTn convention), which lets a salvage decoder
+/// re-anchor mid-stream without confusing adjacent segments.
+pub const SEG_MARKER_BASE: u8 = 0xD0;
+
+/// Default v2 restart interval: block rows per segment. Four block rows
+/// (a 32-pixel band) keeps the per-segment header + index overhead
+/// under the 3% budget on the fixture images while still confining a
+/// bit-flip to a narrow band.
+pub const DEFAULT_RESTART_INTERVAL: u16 = 4;
+
+/// Is this byte stream a v2 (`CDC2`) grayscale container?
+pub fn is_v2_container(bytes: &[u8]) -> bool {
+    bytes.len() >= 4 && &bytes[0..4] == MAGIC_V2
+}
 
 /// Maximum pixel count a decoder will allocate for (DoS guard on corrupt
 /// headers): 64 MPixel covers the paper's 3072x3072 with a wide margin.
@@ -133,6 +169,61 @@ macro_rules! decode_bail {
 }
 pub(crate) use decode_bail;
 
+/// Salvage accounting for one plane's v2 stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlaneSalvage {
+    /// Restart segments the head declared (1 for a v1 stream).
+    pub segments_total: u32,
+    /// Segments that failed CRC/entropy validation.
+    pub segments_damaged: u32,
+    /// Damaged segments patched by replicating the nearest intact block
+    /// row (always <= `segments_damaged`; the rest stay DC-midpoint).
+    pub segments_concealed: u32,
+    /// Bytes of damaged or unparseable stream skipped over.
+    pub bytes_skipped: u64,
+}
+
+impl PlaneSalvage {
+    /// No damage was found in this plane.
+    pub fn is_clean(&self) -> bool {
+        self.segments_damaged == 0
+    }
+}
+
+/// What [`decoder::decode_salvage`] / [`color::decode_salvage`]
+/// recovered: aggregate counts plus the per-plane breakdown (one entry
+/// for gray, three for color).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SalvageReport {
+    pub segments_total: u32,
+    pub segments_damaged: u32,
+    pub segments_concealed: u32,
+    pub bytes_skipped: u64,
+    pub per_plane: Vec<PlaneSalvage>,
+}
+
+impl SalvageReport {
+    /// Aggregate per-plane accounts into one report.
+    pub fn from_planes(per_plane: Vec<PlaneSalvage>) -> SalvageReport {
+        let mut r = SalvageReport {
+            per_plane,
+            ..SalvageReport::default()
+        };
+        for p in &r.per_plane {
+            r.segments_total += p.segments_total;
+            r.segments_damaged += p.segments_damaged;
+            r.segments_concealed += p.segments_concealed;
+            r.bytes_skipped += p.bytes_skipped;
+        }
+        r
+    }
+
+    /// The whole container decoded without damage.
+    pub fn is_clean(&self) -> bool {
+        self.segments_damaged == 0
+    }
+}
+
 /// Compressed-image container header.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Header {
@@ -152,8 +243,7 @@ pub struct Header {
 impl Header {
     pub const BYTES: usize = 4 + 4 * 4 + 2;
 
-    pub fn write(&self, out: &mut Vec<u8>) {
-        out.extend_from_slice(MAGIC);
+    fn write_fields(&self, out: &mut Vec<u8>) {
         out.extend_from_slice(&self.width.to_le_bytes());
         out.extend_from_slice(&self.height.to_le_bytes());
         out.extend_from_slice(&self.padded_width.to_le_bytes());
@@ -162,7 +252,32 @@ impl Header {
         out.push(self.variant);
     }
 
+    pub fn write(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(MAGIC);
+        self.write_fields(out);
+    }
+
+    /// Write the header under the v2 (`CDC2`) magic. The caller appends
+    /// the v2-only fields (restart interval, segment count) after it.
+    pub fn write_v2(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(MAGIC_V2);
+        self.write_fields(out);
+    }
+
     pub fn read(bytes: &[u8]) -> Result<(Header, usize)> {
+        Self::read_with_magic(bytes, MAGIC)
+    }
+
+    /// Parse a v2 (`CDC2`) header. Same fixed fields and validation as
+    /// [`Header::read`]; only the magic differs.
+    pub fn read_v2(bytes: &[u8]) -> Result<(Header, usize)> {
+        Self::read_with_magic(bytes, MAGIC_V2)
+    }
+
+    fn read_with_magic(
+        bytes: &[u8],
+        magic: &[u8; 4],
+    ) -> Result<(Header, usize)> {
         if bytes.len() < Self::BYTES {
             decode_bail!(
                 DecodeErrorKind::Truncated,
@@ -170,7 +285,7 @@ impl Header {
                 bytes.len()
             );
         }
-        if &bytes[0..4] != MAGIC {
+        if &bytes[0..4] != magic {
             decode_bail!(
                 DecodeErrorKind::BadMagic,
                 "bad magic: not a CDC file"

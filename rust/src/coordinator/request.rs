@@ -9,6 +9,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::codec::SalvageReport;
 use crate::dct::Variant;
 use crate::image::color::ColorImage;
 use crate::image::ycbcr::Subsampling;
@@ -114,6 +115,11 @@ pub struct Request {
     /// `false` runs the recon-free fused path — serve traffic that only
     /// wants the container bytes never pays for the decoder half.
     pub want_psnr: bool,
+    /// For [`RequestKind::Decode`]: tolerate damage via the salvage
+    /// decoder (per-segment CRC re-sync + concealment on v2 streams)
+    /// instead of failing fast. The response's [`JobOutput::salvage`]
+    /// then carries the damage report.
+    pub salvage: bool,
 }
 
 impl Request {
@@ -127,6 +133,7 @@ impl Request {
             lane,
             subsampling: Subsampling::S420,
             want_psnr: true,
+            salvage: false,
         }
     }
 
@@ -147,6 +154,7 @@ impl Request {
             lane,
             subsampling,
             want_psnr: true,
+            salvage: false,
         }
     }
 
@@ -162,7 +170,25 @@ impl Request {
             lane,
             subsampling: Subsampling::S420,
             want_psnr: false,
+            salvage: false,
         }
+    }
+
+    /// Builder-style switch to damage-tolerant decoding: strict-decode
+    /// failures on v2 containers become concealed regions plus a
+    /// [`SalvageReport`] instead of errors.
+    pub fn with_salvage(mut self) -> Request {
+        self.salvage = true;
+        self
+    }
+
+    /// A damage-tolerant container-decode job (see [`Request::decode`]).
+    pub fn decode_salvage(
+        id: u64,
+        container: Vec<u8>,
+        lane: Lane,
+    ) -> Request {
+        Request::decode(id, container, lane).with_salvage()
     }
 
     /// Builder-style switch to the recon-free fast path (no PSNR, no
@@ -249,6 +275,9 @@ pub struct JobOutput {
     pub container: Option<Vec<u8>>,
     /// PSNR vs the input (Compress only; luma-weighted for color).
     pub psnr_db: Option<f64>,
+    /// Damage report for salvage-decode jobs (`None` for everything
+    /// else, including strict decodes).
+    pub salvage: Option<SalvageReport>,
 }
 
 /// In-flight job: wait for its response.

@@ -23,7 +23,7 @@ use super::batcher::BatchPolicy;
 use super::request::{
     Backpressure, JobHandle, Lane, Request, RequestKind, RequestQueue,
 };
-use super::worker::{self, RunExit, WorkerCtx};
+use super::worker::{self, DecodeCounters, RunExit, WorkerCtx};
 
 /// Service configuration.
 #[derive(Clone, Debug)]
@@ -59,6 +59,11 @@ pub struct ServiceConfig {
     /// artificial job latency). `None` — the default — keeps the worker
     /// hot path at a single skipped `Option` check.
     pub faults: Option<FaultPlan>,
+    /// Restart interval of the CDC2 containers the compress lanes emit:
+    /// block rows per independently decodable segment. `0` collapses
+    /// each plane to a single segment (minimal overhead, no partial
+    /// recovery).
+    pub restart_interval: u16,
 }
 
 impl Default for ServiceConfig {
@@ -75,6 +80,7 @@ impl Default for ServiceConfig {
             batch_width: BatchWidth::default(),
             precision: FxpPrecision::default(),
             faults: None,
+            restart_interval: crate::codec::DEFAULT_RESTART_INTERVAL,
         }
     }
 }
@@ -90,6 +96,12 @@ pub struct ServiceStats {
     /// Times a worker loop was re-entered after a panicked job (or an
     /// escaped panic) — the supervision signal of the resilience layer.
     pub worker_restarts: u64,
+    /// Strict decode jobs that failed on damaged or hostile input.
+    pub decode_strict_failures: u64,
+    /// Salvage decode jobs that found (and tolerated) damage.
+    pub decode_salvaged: u64,
+    /// Segments concealed across all salvage decodes.
+    pub segments_concealed_total: u64,
 }
 
 /// The running service.
@@ -102,6 +114,7 @@ pub struct Service {
     queue_hist: Arc<SharedHistogram>,
     process_hist: Arc<SharedHistogram>,
     restarts: Arc<AtomicU64>,
+    decode_counters: Arc<DecodeCounters>,
 }
 
 impl Service {
@@ -156,6 +169,7 @@ impl Service {
         let faults_root =
             cfg.faults.as_ref().map(|p| FaultInjector::new(p.clone()));
         let restarts = Arc::new(AtomicU64::new(0));
+        let decode_counters = Arc::new(DecodeCounters::default());
         let mut workers = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers.max(1) {
             let ctx = WorkerCtx {
@@ -175,6 +189,8 @@ impl Service {
                 faults: faults_root
                     .as_ref()
                     .map(|r| Arc::new(r.fork(i as u64))),
+                restart_interval: cfg.restart_interval,
+                decode_counters: Arc::clone(&decode_counters),
             };
             let restarts = Arc::clone(&restarts);
             workers.push(
@@ -217,6 +233,7 @@ impl Service {
             queue_hist,
             process_hist,
             restarts,
+            decode_counters,
         })
     }
 
@@ -282,6 +299,18 @@ impl Service {
         self.queue.submit(Request::decode(id, container, lane))
     }
 
+    /// Submit a salvage decode job: damaged CDC2 segments are concealed
+    /// instead of failing the job, and the response's
+    /// [`JobOutput::salvage`](super::request::JobOutput::salvage) report
+    /// says exactly how much was lost. Undamaged input decodes
+    /// bit-identically to [`Service::decode`].
+    pub fn decode_salvage(&self, container: Vec<u8>, lane: Lane)
+                          -> Result<JobHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.queue
+            .submit(Request::decode_salvage(id, container, lane))
+    }
+
     /// Submit a color (YCbCr) compression job — the `color: true`
     /// request shape, served by either CPU lane or (since the
     /// planar-batch rework) the GPU lane.
@@ -343,6 +372,7 @@ impl Service {
             lane,
             subsampling: Subsampling::S420,
             want_psnr: false,
+            salvage: false,
         })
     }
 
@@ -358,6 +388,18 @@ impl Service {
                 .map(|r| r.cached_count())
                 .unwrap_or(0),
             worker_restarts: self.restarts.load(Ordering::Relaxed),
+            decode_strict_failures: self
+                .decode_counters
+                .strict_failures
+                .load(Ordering::Relaxed),
+            decode_salvaged: self
+                .decode_counters
+                .salvaged
+                .load(Ordering::Relaxed),
+            segments_concealed_total: self
+                .decode_counters
+                .segments_concealed
+                .load(Ordering::Relaxed),
         }
     }
 
@@ -620,6 +662,58 @@ mod tests {
         assert_eq!(dec.lane, Lane::Cpu, "decode resolves Auto to Cpu");
         let rec = dec.result.unwrap().image.unwrap();
         assert_eq!((rec.width, rec.height), (40, 24));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn salvage_decode_through_service_updates_stats() {
+        let svc = Service::start(cpu_only_config(1)).unwrap();
+        let img = synthetic::cablecar_like(48, 48, 11);
+        let container = svc
+            .compress(img, Variant::Dct, Lane::Cpu)
+            .unwrap()
+            .wait()
+            .result
+            .unwrap()
+            .container
+            .unwrap();
+        let mut bad = container.clone();
+        let n = bad.len();
+        bad[n - n / 6] ^= 0x40;
+        assert!(svc
+            .decode(bad.clone(), Lane::Cpu)
+            .unwrap()
+            .wait()
+            .result
+            .is_err());
+        let out = svc
+            .decode_salvage(bad, Lane::Cpu)
+            .unwrap()
+            .wait()
+            .result
+            .unwrap();
+        let report = out.salvage.unwrap();
+        assert_eq!(report.segments_damaged, 1);
+        assert!(out.image.is_some());
+        // the clean container salvage-decodes bit-identically to strict
+        let strict = svc
+            .decode(container.clone(), Lane::Cpu)
+            .unwrap()
+            .wait()
+            .result
+            .unwrap();
+        let clean = svc
+            .decode_salvage(container, Lane::Cpu)
+            .unwrap()
+            .wait()
+            .result
+            .unwrap();
+        assert_eq!(strict.image, clean.image);
+        assert!(clean.salvage.unwrap().is_clean());
+        let stats = svc.stats();
+        assert_eq!(stats.decode_strict_failures, 1);
+        assert_eq!(stats.decode_salvaged, 1);
+        assert_eq!(stats.segments_concealed_total, 1);
         svc.shutdown();
     }
 }

@@ -9,6 +9,7 @@
 use std::any::Any;
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -54,6 +55,23 @@ pub struct WorkerCtx {
     /// artificial job latency, applied inside the per-job panic guard.
     /// `None` in production — one `Option` check per job.
     pub faults: Option<Arc<FaultInjector>>,
+    /// Restart interval (block rows per segment) of the v2 containers
+    /// every compress lane emits; 0 = a single segment per plane.
+    pub restart_interval: u16,
+    /// Shared decode-resilience counters, surfaced through
+    /// `ServiceStats` and the serve stats frame.
+    pub decode_counters: Arc<DecodeCounters>,
+}
+
+/// Decode-resilience counters shared by all workers of a service.
+#[derive(Debug, Default)]
+pub struct DecodeCounters {
+    /// Strict decode jobs that failed with any `DecodeErrorKind`.
+    pub strict_failures: AtomicU64,
+    /// Salvage decode jobs that found — and tolerated — damage.
+    pub salvaged: AtomicU64,
+    /// Segments concealed across all salvage decodes.
+    pub segments_concealed: AtomicU64,
 }
 
 /// Per-worker cache of CPU-lane pipelines, keyed by everything that
@@ -290,14 +308,17 @@ fn compress_output(
     scanned: &ScanCoefs,
     variant: Variant,
     quality: u8,
+    restart_interval: u16,
 ) -> Result<JobOutput> {
-    let bytes = entropy_encode(original, scanned, variant, quality)?;
+    let bytes = entropy_encode(original, scanned, variant, quality,
+                               restart_interval)?;
     Ok(JobOutput {
         psnr_db: recon.as_ref().map(|r| psnr(original, r)),
         image: recon,
         color_image: None,
         compressed_bytes: Some(bytes.len()),
         container: Some(bytes),
+        salvage: None,
     })
 }
 
@@ -311,7 +332,7 @@ fn run_job(
         JobImage::Gray(img) => run_gray_job(ctx, cache, req, img, lane),
         JobImage::Color(img) => run_color_job(ctx, cache, req, img, lane),
         JobImage::Encoded(bytes) => {
-            run_decode_job(ctx, cache, bytes, lane)
+            run_decode_job(ctx, cache, req, bytes, lane)
         }
     }
 }
@@ -322,6 +343,7 @@ fn run_job(
 fn run_decode_job(
     ctx: &WorkerCtx,
     cache: &mut PipelineCache,
+    req: &Request,
     bytes: &[u8],
     lane: Lane,
 ) -> Result<JobOutput> {
@@ -330,7 +352,21 @@ fn run_decode_job(
     }
     let parallel = lane == Lane::CpuParallel;
     if color_codec::is_color_container(bytes) {
-        let dec = color_codec::decode(bytes)?;
+        let (dec, report) = if req.salvage {
+            let (dec, report) = color_codec::decode_salvage(bytes)?;
+            account_salvage(ctx, &report);
+            (dec, Some(report))
+        } else {
+            match color_codec::decode(bytes) {
+                Ok(dec) => (dec, None),
+                Err(e) => {
+                    ctx.decode_counters
+                        .strict_failures
+                        .fetch_add(1, Ordering::Relaxed);
+                    return Err(e);
+                }
+            }
+        };
         let variant = crate::codec::tag_variant(dec.header.variant)?;
         let sub = color_codec::tag_subsampling(dec.header.subsampling)?;
         let pipe = cache.color(
@@ -348,9 +384,24 @@ fn run_decode_job(
             compressed_bytes: None,
             container: None,
             psnr_db: None,
+            salvage: report,
         });
     }
-    let dec = crate::codec::decoder::decode(bytes)?;
+    let (dec, report) = if req.salvage {
+        let (dec, report) = crate::codec::decoder::decode_salvage(bytes)?;
+        account_salvage(ctx, &report);
+        (dec, Some(report))
+    } else {
+        match crate::codec::decoder::decode(bytes) {
+            Ok(dec) => (dec, None),
+            Err(e) => {
+                ctx.decode_counters
+                    .strict_failures
+                    .fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
+        }
+    };
     let h = &dec.header;
     let variant = crate::codec::tag_variant(h.variant)?;
     let (pw, ph) = (h.padded_width as usize, h.padded_height as usize);
@@ -370,7 +421,18 @@ fn run_decode_job(
         compressed_bytes: None,
         container: None,
         psnr_db: None,
+        salvage: report,
     })
+}
+
+/// Bump the shared salvage counters for one completed salvage decode.
+fn account_salvage(ctx: &WorkerCtx, report: &crate::codec::SalvageReport) {
+    if !report.is_clean() {
+        ctx.decode_counters.salvaged.fetch_add(1, Ordering::Relaxed);
+        ctx.decode_counters
+            .segments_concealed
+            .fetch_add(report.segments_concealed as u64, Ordering::Relaxed);
+    }
 }
 
 /// Color jobs: the `color: true` request path. Both CPU lanes run the
@@ -407,13 +469,18 @@ fn run_color_job(
             .ok_or_else(|| anyhow::anyhow!("no GPU lane configured"))?;
         let out =
             ex.compress_color(img, req.variant, req.subsampling)?;
-        let bytes = color_codec::encode_scanned(&header, &out.scanned)?;
+        let bytes = color_codec::encode_scanned_v2(
+            &header,
+            &out.scanned,
+            ctx.restart_interval,
+        )?;
         return Ok(JobOutput {
             psnr_db: Some(psnr_color(img, &out.recon).weighted),
             image: Some(out.recon_y),
             color_image: Some(out.recon),
             compressed_bytes: Some(bytes.len()),
             container: Some(bytes),
+            salvage: None,
         });
     }
     let pipe = cache.color(
@@ -428,23 +495,33 @@ fn run_color_job(
         // recon-free fast path: zigzag coefficients straight to the
         // entropy coder, no IDCT, no upsample/reassemble
         let scanned = pipe.analyze_scanned(img);
-        let bytes = color_codec::encode_scanned(&header, &scanned)?;
+        let bytes = color_codec::encode_scanned_v2(
+            &header,
+            &scanned,
+            ctx.restart_interval,
+        )?;
         return Ok(JobOutput {
             psnr_db: None,
             image: None,
             color_image: None,
             compressed_bytes: Some(bytes.len()),
             container: Some(bytes),
+            salvage: None,
         });
     }
     let out = pipe.compress_fused(img);
-    let bytes = color_codec::encode_scanned(&header, &out.scanned)?;
+    let bytes = color_codec::encode_scanned_v2(
+        &header,
+        &out.scanned,
+        ctx.restart_interval,
+    )?;
     Ok(JobOutput {
         psnr_db: Some(psnr_color(img, &out.recon).weighted),
         image: Some(out.recon_y),
         color_image: Some(out.recon),
         compressed_bytes: Some(bytes.len()),
         container: Some(bytes),
+        salvage: None,
     })
 }
 
@@ -472,6 +549,7 @@ fn run_gray_job(
                 &out.scanned,
                 req.variant,
                 ex.rt.quality(),
+                ctx.restart_interval,
             )
         }
         (RequestKind::Compress, Lane::CpuParallel) => {
@@ -489,6 +567,7 @@ fn run_gray_job(
                     &out.scanned,
                     req.variant,
                     ctx.quality,
+                    ctx.restart_interval,
                 )
             } else {
                 let scanned = pipe.analyze_scanned(img);
@@ -498,6 +577,7 @@ fn run_gray_job(
                     &scanned,
                     req.variant,
                     ctx.quality,
+                    ctx.restart_interval,
                 )
             }
         }
@@ -511,6 +591,7 @@ fn run_gray_job(
                     &out.scanned,
                     req.variant,
                     ctx.quality,
+                    ctx.restart_interval,
                 )
             } else {
                 let scanned = pipe.analyze_scanned(img);
@@ -520,6 +601,7 @@ fn run_gray_job(
                     &scanned,
                     req.variant,
                     ctx.quality,
+                    ctx.restart_interval,
                 )
             }
         }
@@ -535,6 +617,7 @@ fn run_gray_job(
                 compressed_bytes: None,
                 container: None,
                 psnr_db: None,
+                salvage: None,
             })
         }
         (RequestKind::Histeq, _) => Ok(JobOutput {
@@ -543,6 +626,7 @@ fn run_gray_job(
             compressed_bytes: None,
             container: None,
             psnr_db: None,
+            salvage: None,
         }),
         (RequestKind::Decode, _) => {
             bail!("decode jobs carry an encoded payload, not pixels")
@@ -555,6 +639,7 @@ fn entropy_encode(
     scanned: &ScanCoefs,
     variant: Variant,
     quality: u8,
+    restart_interval: u16,
 ) -> Result<Vec<u8>> {
     let header = Header {
         width: original.width as u32,
@@ -564,7 +649,7 @@ fn entropy_encode(
         quality,
         variant: variant_tag(variant),
     };
-    encoder::encode_scanned(&header, scanned)
+    encoder::encode_scanned_v2(&header, scanned, restart_interval)
 }
 
 #[cfg(test)]
@@ -587,6 +672,8 @@ mod tests {
             queue_hist: Arc::new(SharedHistogram::default()),
             process_hist: Arc::new(SharedHistogram::default()),
             faults: None,
+            restart_interval: crate::codec::DEFAULT_RESTART_INTERVAL,
+            decode_counters: Arc::new(DecodeCounters::default()),
         }
     }
 
@@ -700,6 +787,7 @@ mod tests {
                 lane: Lane::Cpu,
                 subsampling: crate::image::ycbcr::Subsampling::S420,
                 want_psnr: true,
+                salvage: false,
             })
             .unwrap();
         let ctx2 = Arc::clone(&ctx);
@@ -779,6 +867,55 @@ mod tests {
         let recon = out.image.unwrap();
         assert_eq!((recon.width, recon.height), (32, 32));
         assert!(crate::metrics::psnr(&img, &recon) > 28.0);
+    }
+
+    #[test]
+    fn salvage_decode_job_conceals_damage_and_counts_it() {
+        let ctx = Arc::new(cpu_ctx(8));
+        let img = synthetic::lena_like(48, 48, 9);
+        let h = ctx
+            .queue
+            .submit(Request::compress(1, img, Variant::Dct, Lane::Cpu))
+            .unwrap();
+        let ctx2 = Arc::clone(&ctx);
+        let t = std::thread::spawn(move || run(&ctx2));
+        let container = h.wait().result.unwrap().container.unwrap();
+        assert!(crate::codec::is_v2_container(&container));
+        // flip a bit deep in the segment payloads
+        let mut bad = container.clone();
+        let n = bad.len();
+        bad[n - n / 8] ^= 0x10;
+        let h_strict = ctx
+            .queue
+            .submit(Request::decode(2, bad.clone(), Lane::Cpu))
+            .unwrap();
+        let h_salv = ctx
+            .queue
+            .submit(Request::decode_salvage(3, bad, Lane::Cpu))
+            .unwrap();
+        let h_clean = ctx
+            .queue
+            .submit(Request::decode_salvage(4, container, Lane::Cpu))
+            .unwrap();
+        let strict = h_strict.wait();
+        let salv = h_salv.wait();
+        let clean = h_clean.wait();
+        ctx.queue.close();
+        t.join().unwrap();
+        assert!(strict.result.is_err(), "strict decode must fail fast");
+        let out = salv.result.unwrap();
+        let report = out.salvage.unwrap();
+        assert_eq!(report.segments_damaged, 1);
+        assert_eq!(report.segments_concealed, 1);
+        assert!(out.image.is_some());
+        // undamaged container: clean report, no salvaged counter bump
+        let clean_report = clean.result.unwrap().salvage.unwrap();
+        assert!(clean_report.is_clean());
+        assert!(clean_report.segments_total > 1);
+        let c = &ctx.decode_counters;
+        assert_eq!(c.strict_failures.load(Ordering::Relaxed), 1);
+        assert_eq!(c.salvaged.load(Ordering::Relaxed), 1);
+        assert_eq!(c.segments_concealed.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! cordic-dct compress   --input img.png --output out.cdc [--variant cordic]
 //!                       [--color --chroma 420] [--lane gpu]
 //!                       [--batch-width auto|8|16] [--precision N]
-//! cordic-dct decompress --input out.cdc --output back.png
+//!                       [--restart-interval 4]
+//! cordic-dct decompress --input out.cdc --output back.png [--salvage]
 //! cordic-dct serve      --requests 64 --scene lena --lane auto [--color]
 //!                       [--stub-gpu]
 //! cordic-dct serve      --listen 127.0.0.1:7070 [--max-conns 32]
@@ -195,19 +196,30 @@ fn cmd_compress(args: &[String]) -> Result<()> {
         .opt("recon", "", "also write the reconstruction here")
         .flag("color", "keep RGB and write a CDC3 color container")
         .opt("chroma", "420", "chroma subsampling for --color: 444|422|420")
+        .opt("restart-interval", "4",
+             "block rows per CDC2 restart segment (0 = one segment per \
+              plane, minimal overhead, no partial recovery)")
         .flag("verbose", "print timings")
         .parse(args)?;
     let variant = parse_variant(m.get("variant"))?;
     let quality = m.get_usize("quality")? as u8;
     let lane = parse_lane(m.get("lane"))?;
     let engine = engine_config(&m)?;
+    let restart_interval = parse_restart_interval(&m)?;
     anyhow::ensure!(
         matches!(lane, Lane::Cpu | Lane::Gpu),
         "compress supports --lane cpu|gpu; use `serve` for the \
          cpu-parallel and auto lanes"
     );
     if m.flag("color") {
-        return compress_color_file(&m, variant, quality, lane, engine);
+        return compress_color_file(
+            &m,
+            variant,
+            quality,
+            lane,
+            engine,
+            restart_interval,
+        );
     }
     let img = GrayImage::load(m.get("input"))?;
     let t0 = Instant::now();
@@ -233,7 +245,8 @@ fn cmd_compress(args: &[String]) -> Result<()> {
         quality,
         variant: codec::variant_tag(variant),
     };
-    let bytes = encoder::encode_scanned(&header, &scanned)?;
+    let bytes =
+        encoder::encode_scanned_v2(&header, &scanned, restart_interval)?;
     let elapsed = t0.elapsed().as_secs_f64() * 1e3;
     std::fs::write(m.get("output"), &bytes)
         .with_context(|| format!("writing {}", m.get("output")))?;
@@ -259,12 +272,24 @@ fn cmd_compress(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn parse_restart_interval(
+    m: &cordic_dct::util::cli::Matches,
+) -> Result<u16> {
+    let v = m.get_usize("restart-interval")?;
+    anyhow::ensure!(
+        v <= u16::MAX as usize,
+        "--restart-interval must fit in 16 bits"
+    );
+    Ok(v as u16)
+}
+
 fn compress_color_file(
     m: &cordic_dct::util::cli::Matches,
     variant: Variant,
     quality: u8,
     lane: Lane,
     engine: EngineConfig,
+    restart_interval: u16,
 ) -> Result<()> {
     let img = ColorImage::load(m.get("input"))?;
     let chroma = parse_chroma(m.get("chroma"))?;
@@ -290,7 +315,11 @@ fn compress_color_file(
         variant: codec::variant_tag(variant),
         subsampling: color_codec::subsampling_tag(chroma),
     };
-    let bytes = color_codec::encode_scanned(&header, &scanned)?;
+    let bytes = color_codec::encode_scanned_v2(
+        &header,
+        &scanned,
+        restart_interval,
+    )?;
     let elapsed = t0.elapsed().as_secs_f64() * 1e3;
     std::fs::write(m.get("output"), &bytes)
         .with_context(|| format!("writing {}", m.get("output")))?;
@@ -324,12 +353,21 @@ fn compress_color_file(
 
 fn cmd_decompress(args: &[String]) -> Result<()> {
     let m = Command::new("decompress", "decode a .cdc to an image")
-        .opt_req("input", "input .cdc (gray CDC1 or color CDC3)")
+        .opt_req("input", "input .cdc (gray CDC1/CDC2 or color CDC3)")
         .opt_req("output", "output image (.pgm/.ppm/.bmp/.png)")
+        .flag("salvage",
+              "tolerate damage: conceal broken CDC2 segments and print \
+               the damage report instead of failing")
         .parse(args)?;
     let bytes = std::fs::read(m.get("input"))?;
+    let salvage = m.flag("salvage");
     if color_codec::is_color_container(&bytes) {
-        let dec = color_codec::decode(&bytes)?;
+        let (dec, report) = if salvage {
+            let (dec, report) = color_codec::decode_salvage(&bytes)?;
+            (dec, Some(report))
+        } else {
+            (color_codec::decode(&bytes)?, None)
+        };
         let variant = codec::tag_variant(dec.header.variant)?;
         let chroma =
             color_codec::tag_subsampling(dec.header.subsampling)?;
@@ -347,9 +385,15 @@ fn cmd_decompress(args: &[String]) -> Result<()> {
             dec.header.quality,
             variant.as_str()
         );
+        print_salvage_report(report.as_ref());
         return Ok(());
     }
-    let dec = decoder::decode(&bytes)?;
+    let (dec, report) = if salvage {
+        let (dec, report) = decoder::decode_salvage(&bytes)?;
+        (dec, Some(report))
+    } else {
+        (decoder::decode(&bytes)?, None)
+    };
     let variant = codec::tag_variant(dec.header.variant)?;
     let pipe = CpuPipeline::new(variant, dec.header.quality);
     let img = pipe.decode_coefficients(
@@ -369,7 +413,28 @@ fn cmd_decompress(args: &[String]) -> Result<()> {
         dec.header.quality,
         variant.as_str()
     );
+    print_salvage_report(report.as_ref());
     Ok(())
+}
+
+/// Print the `--salvage` damage report (clean decodes say so).
+fn print_salvage_report(report: Option<&codec::SalvageReport>) {
+    let Some(r) = report else { return };
+    if r.is_clean() {
+        println!(
+            "salvage: container intact ({} segment(s), no damage)",
+            r.segments_total
+        );
+    } else {
+        println!(
+            "salvage: {} of {} segment(s) damaged, {} concealed, \
+             {} byte(s) skipped",
+            r.segments_damaged,
+            r.segments_total,
+            r.segments_concealed,
+            r.bytes_skipped
+        );
+    }
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
@@ -390,6 +455,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         .opt("precision", "0",
              "cordic-fxp precision level 1..8 (0 = library default)")
         .opt("queue", "256", "queue capacity")
+        .opt("restart-interval", "4",
+             "block rows per CDC2 restart segment in compressed replies \
+              (0 = one segment per plane)")
         .opt("batch", "8", "gpu max batch")
         .opt("artifacts", "artifacts", "artifact dir ('' disables GPU lane)")
         .flag("stub-gpu",
@@ -426,6 +494,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         cfg.workers = workers;
     }
     cfg.cpu_parallel_workers = m.get_usize("par-workers")?;
+    cfg.restart_interval = parse_restart_interval(&m)?;
     let engine = engine_config(&m)?;
     cfg.batch_width = engine.width;
     cfg.precision = engine.precision;

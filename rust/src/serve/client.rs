@@ -29,7 +29,9 @@ use crate::image::GrayImage;
 use crate::util::prng::Rng;
 
 use super::framing::{self, FrameEvent, MAX_FRAME_LEN_DEFAULT};
-use super::protocol::{ImagePayload, RequestMsg, ResponseMsg};
+use super::protocol::{
+    ImagePayload, RequestMsg, ResponseMsg, ERR_DECODE_CORRUPT,
+};
 
 /// A request failure, classified for retry decisions.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -98,6 +100,22 @@ pub struct Compressed {
     /// True when the server shed load and answered a reduced-quality
     /// `Degraded` frame instead of a normal result.
     pub degraded: bool,
+}
+
+/// The damage report carried by a `Salvaged` frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SalvageSummary {
+    pub segments_total: u32,
+    pub segments_damaged: u32,
+    pub segments_concealed: u32,
+    pub bytes_skipped: u64,
+}
+
+impl SalvageSummary {
+    /// No damage: the pixels are bit-identical to a strict decode.
+    pub fn is_clean(&self) -> bool {
+        self.segments_damaged == 0 && self.bytes_skipped == 0
+    }
 }
 
 /// Blocking protocol client over one TCP connection.
@@ -265,6 +283,35 @@ impl Client {
         match Self::expect_ok(self.request(&msg)?)? {
             ResponseMsg::Image { image, .. } => Ok(image),
             other => bail!("expected Image, got {other:?}"),
+        }
+    }
+
+    /// Salvage-decode a (possibly damaged) container server-side;
+    /// returns the reconstructed pixels plus the damage report.
+    pub fn decode_salvage(
+        &mut self,
+        container: Vec<u8>,
+        lane: Lane,
+    ) -> Result<(ImagePayload, SalvageSummary)> {
+        let msg = RequestMsg::DecodeSalvage { container, lane };
+        match Self::expect_ok(self.request(&msg)?)? {
+            ResponseMsg::Salvaged {
+                segments_total,
+                segments_damaged,
+                segments_concealed,
+                bytes_skipped,
+                image,
+                ..
+            } => Ok((
+                image,
+                SalvageSummary {
+                    segments_total,
+                    segments_damaged,
+                    segments_concealed,
+                    bytes_skipped,
+                },
+            )),
+            other => bail!("expected Salvaged, got {other:?}"),
         }
     }
 
@@ -460,6 +507,8 @@ pub struct RetryClient {
     rng: Rng,
     conn: Option<Client>,
     retries: u64,
+    salvage_fallback: bool,
+    salvage_fallbacks: u64,
 }
 
 impl RetryClient {
@@ -472,6 +521,8 @@ impl RetryClient {
             rng,
             conn: None,
             retries: 0,
+            salvage_fallback: false,
+            salvage_fallbacks: 0,
         }
     }
 
@@ -481,9 +532,24 @@ impl RetryClient {
         self
     }
 
+    /// Opt in to the salvage fallback: a `Decode` request answered with
+    /// a corrupt-container error frame is re-sent once as
+    /// `DecodeSalvage`, trading bit-exactness for availability. Off by
+    /// default — strict callers see the error unchanged.
+    pub fn with_salvage_fallback(mut self) -> RetryClient {
+        self.salvage_fallback = true;
+        self
+    }
+
     /// Retries performed so far (attempts beyond each first try).
     pub fn retries(&self) -> u64 {
         self.retries
+    }
+
+    /// Times the salvage fallback fired (corrupt strict decode re-sent
+    /// as a salvage decode).
+    pub fn salvage_fallbacks(&self) -> u64 {
+        self.salvage_fallbacks
     }
 
     pub fn policy(&self) -> &RetryPolicy {
@@ -492,7 +558,33 @@ impl RetryClient {
 
     /// Send one request with retries. Connections are lazy: the first
     /// request (and the first after any transport failure) reconnects.
+    /// With [`RetryClient::with_salvage_fallback`], a `Decode` answered
+    /// by a corrupt-container error frame is re-sent once as a
+    /// `DecodeSalvage`.
     pub fn request(
+        &mut self,
+        msg: &RequestMsg,
+    ) -> Result<ResponseMsg, RequestError> {
+        let resp = self.request_raw(msg)?;
+        if self.salvage_fallback {
+            if let (
+                RequestMsg::Decode { container, lane },
+                ResponseMsg::Error { code, .. },
+            ) = (msg, &resp)
+            {
+                if *code == ERR_DECODE_CORRUPT {
+                    self.salvage_fallbacks += 1;
+                    return self.request_raw(&RequestMsg::DecodeSalvage {
+                        container: container.clone(),
+                        lane: *lane,
+                    });
+                }
+            }
+        }
+        Ok(resp)
+    }
+
+    fn request_raw(
         &mut self,
         msg: &RequestMsg,
     ) -> Result<ResponseMsg, RequestError> {

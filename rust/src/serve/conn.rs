@@ -188,6 +188,9 @@ fn process(sh: &Shared, kind: u8, payload: &[u8]) -> ResponseMsg {
         RequestMsg::Decode { container, lane } => {
             submit_and_wait(sh, |svc| svc.decode(container, lane))
         }
+        RequestMsg::DecodeSalvage { container, lane } => {
+            submit_and_wait(sh, |svc| svc.decode_salvage(container, lane))
+        }
         RequestMsg::Histeq { image, lane } => {
             submit_and_wait(sh, |svc| svc.histeq(image, lane))
         }
@@ -346,6 +349,28 @@ fn submit_and_wait(
 }
 
 fn output_msg(lane: Lane, out: JobOutput) -> ResponseMsg {
+    // a salvage decode always answers a Salvaged frame, damaged or not,
+    // so the client can tell an honest clean report from a strict decode
+    if let Some(report) = out.salvage {
+        let image = if let Some(c) = out.color_image {
+            ImagePayload::Color(c)
+        } else if let Some(g) = out.image {
+            ImagePayload::Gray(g)
+        } else {
+            return ResponseMsg::Error {
+                code: ERR_JOB_FAILED,
+                message: "salvage decode produced no pixels".into(),
+            };
+        };
+        return ResponseMsg::Salvaged {
+            lane,
+            segments_total: report.segments_total,
+            segments_damaged: report.segments_damaged,
+            segments_concealed: report.segments_concealed,
+            bytes_skipped: report.bytes_skipped,
+            image,
+        };
+    }
     if let Some(container) = out.container {
         ResponseMsg::Compressed {
             lane,
@@ -408,6 +433,18 @@ fn stats_json(sh: &Shared) -> String {
         (
             "degraded_replies",
             Json::num(c.degraded.load(Ordering::SeqCst) as f64),
+        ),
+        (
+            "decode_strict_failures",
+            Json::num(s.decode_strict_failures as f64),
+        ),
+        (
+            "decode_salvaged",
+            Json::num(s.decode_salvaged as f64),
+        ),
+        (
+            "segments_concealed_total",
+            Json::num(s.segments_concealed_total as f64),
         ),
     ])
     .to_string()

@@ -19,7 +19,11 @@
 //! 2. every success must carry a decodable container that is bit-exact
 //!    against the client's first intact reply (the protocol has no
 //!    checksum, so an injected bit-flip must be *caught here* as a
-//!    decode error, never silently counted as a success).
+//!    decode error, never silently counted as a success), and
+//! 3. a corrupted container must be *detectably* corrupted: the salvage
+//!    decoder may recover it (counted in [`ErrorCounts::salvaged`],
+//!    never as a bit-exact success), but if it reports the damaged
+//!    bytes as clean the detection contract is broken.
 //!
 //! Violations are tallied in [`LoadReport::invariant_violations`]; the
 //! CI chaos job fails when the count is nonzero.
@@ -97,9 +101,16 @@ pub struct ErrorCounts {
     pub panics: usize,
     /// Every other server error frame.
     pub server: usize,
+    /// Corrupted containers the salvage decoder recovered with an
+    /// honest (non-zero) damage report. A distinct outcome: neither a
+    /// bit-exact success nor a failure, so [`ErrorCounts::total`]
+    /// excludes it.
+    pub salvaged: usize,
 }
 
 impl ErrorCounts {
+    /// Failed requests. `salvaged` is excluded: a recovered-with-damage
+    /// decode is an outcome of its own, not a failure.
     pub fn total(&self) -> usize {
         self.timeouts + self.connect + self.decode + self.panics
             + self.server
@@ -150,6 +161,7 @@ impl LoadReport {
             ("decode_errors", self.errors.decode.into()),
             ("panics", self.errors.panics.into()),
             ("server_errors", self.errors.server.into()),
+            ("salvaged", self.errors.salvaged.into()),
             ("degraded", self.degraded.into()),
             ("retries", Json::num(self.retries as f64)),
             (
@@ -173,14 +185,15 @@ impl std::fmt::Display for LoadReport {
         write!(
             f,
             "{} clients: {} ok / {} overloaded / {} failed / {} degraded \
-             in {:.2}s = {:.1} req/s; latency mean {:.2} p50 {:.2} \
-             p95 {:.2} p99 {:.2} max {:.2} ms; {} retries, \
+             / {} salvaged in {:.2}s = {:.1} req/s; latency mean {:.2} \
+             p50 {:.2} p95 {:.2} p99 {:.2} max {:.2} ms; {} retries, \
              {} invariant violations",
             self.clients,
             self.ok,
             self.overloaded,
             self.failed,
             self.degraded,
+            self.errors.salvaged,
             self.elapsed_s,
             self.throughput_rps,
             self.mean_ms,
@@ -243,6 +256,48 @@ fn build_request(spec: &LoadSpec, ci: usize) -> RequestMsg {
             lane: spec.lane,
             want_psnr: spec.want_psnr,
         }
+    }
+}
+
+/// How a corrupted (non-bit-exact) container fared under the salvage
+/// decoder.
+enum SalvageVerdict {
+    /// Recovered at the requested geometry with a non-zero damage
+    /// report — the honest outcome for a detectable bit-flip.
+    Recovered,
+    /// The salvage decoder called the damaged bytes clean: the
+    /// detection contract is broken.
+    ClaimedClean,
+    /// Salvage failed outright (destroyed head) or came back at the
+    /// wrong geometry.
+    Unrecoverable,
+}
+
+/// Classify a container that failed the bit-exactness check.
+fn salvage_check(spec: &LoadSpec, bytes: &[u8]) -> SalvageVerdict {
+    let (dims_ok, clean) = if spec.color {
+        match crate::codec::color::decode_salvage(bytes) {
+            Ok((d, r)) => (
+                d.header.width as usize == spec.size
+                    && d.header.height as usize == spec.size,
+                r.is_clean(),
+            ),
+            Err(_) => return SalvageVerdict::Unrecoverable,
+        }
+    } else {
+        match crate::codec::decoder::decode_salvage(bytes) {
+            Ok((d, r)) => (
+                d.header.width as usize == spec.size
+                    && d.header.height as usize == spec.size,
+                r.is_clean(),
+            ),
+            Err(_) => return SalvageVerdict::Unrecoverable,
+        }
+    };
+    match (dims_ok, clean) {
+        (true, false) => SalvageVerdict::Recovered,
+        (true, true) => SalvageVerdict::ClaimedClean,
+        (false, _) => SalvageVerdict::Unrecoverable,
     }
 }
 
@@ -331,8 +386,22 @@ fn chaos_client_loop(spec: &LoadSpec, ci: usize) -> ClientOut {
                         .push(elapsed.as_secs_f64() * 1e3);
                     out.ok += 1;
                 } else {
-                    out.failed += 1;
-                    out.errors.decode += 1;
+                    match salvage_check(spec, &container) {
+                        SalvageVerdict::Recovered => {
+                            out.errors.salvaged += 1;
+                        }
+                        SalvageVerdict::ClaimedClean => {
+                            // corrupted bytes reported clean — the
+                            // damage-detection invariant is broken
+                            out.violations += 1;
+                            out.failed += 1;
+                            out.errors.decode += 1;
+                        }
+                        SalvageVerdict::Unrecoverable => {
+                            out.failed += 1;
+                            out.errors.decode += 1;
+                        }
+                    }
                 }
             }
             // degraded containers use a different quality, so they are
@@ -412,6 +481,7 @@ pub fn run_load(spec: &LoadSpec) -> Result<LoadReport> {
         errors.decode += out.errors.decode;
         errors.panics += out.errors.panics;
         errors.server += out.errors.server;
+        errors.salvaged += out.errors.salvaged;
         degraded += out.degraded;
         retries += out.retries;
         violations += out.violations;
@@ -471,6 +541,9 @@ mod tests {
             (e.panics, e.timeouts, e.decode, e.server),
             (1, 1, 2, 1)
         );
+        assert_eq!(e.total(), 5);
+        // salvaged is a distinct outcome, never folded into failures
+        e.salvaged = 3;
         assert_eq!(e.total(), 5);
     }
 }

@@ -48,7 +48,7 @@ pub mod server;
 
 pub use client::{
     CircuitBreaker, Client, Compressed, RequestError, RetryClient,
-    RetryPolicy,
+    RetryPolicy, SalvageSummary,
 };
 pub use loadgen::{run_load, ErrorCounts, LoadReport, LoadSpec};
 pub use protocol::{ImagePayload, RequestMsg, ResponseMsg};

@@ -14,7 +14,8 @@
 //! 3 Decode                         0x83 Pong
 //! 4 Histeq                         0x84 StatsJson
 //! 5 Ping                           0x85 Degraded (load-shed compress)
-//! 6 Stats                          0xE0 Error { code, message }
+//! 6 Stats                          0x86 Salvaged (salvage decode result)
+//! 7 DecodeSalvage                  0xE0 Error { code, message }
 //!                                  0xE1 Overloaded
 //! ```
 //!
@@ -39,12 +40,14 @@ pub const REQ_DECODE: u8 = 3;
 pub const REQ_HISTEQ: u8 = 4;
 pub const REQ_PING: u8 = 5;
 pub const REQ_STATS: u8 = 6;
+pub const REQ_DECODE_SALVAGE: u8 = 7;
 
 pub const RESP_COMPRESSED: u8 = 0x81;
 pub const RESP_IMAGE: u8 = 0x82;
 pub const RESP_PONG: u8 = 0x83;
 pub const RESP_STATS: u8 = 0x84;
 pub const RESP_DEGRADED: u8 = 0x85;
+pub const RESP_SALVAGED: u8 = 0x86;
 pub const RESP_ERROR: u8 = 0xE0;
 pub const RESP_OVERLOADED: u8 = 0xE1;
 
@@ -119,8 +122,12 @@ pub enum RequestMsg {
         subsampling: Subsampling,
         want_psnr: bool,
     },
-    /// Decode an (untrusted) CDC1/CDC3 container back to pixels.
+    /// Decode an (untrusted) CDC1/CDC2/CDC3 container back to pixels.
     Decode { container: Vec<u8>, lane: Lane },
+    /// Like `Decode`, but damaged CDC2 segments are concealed instead of
+    /// failing the request; the reply is a `Salvaged` frame carrying an
+    /// honest damage report.
+    DecodeSalvage { container: Vec<u8>, lane: Lane },
     Histeq { image: GrayImage, lane: Lane },
     Ping,
     Stats,
@@ -142,6 +149,17 @@ pub enum ResponseMsg {
         container: Vec<u8>,
     },
     Image { lane: Lane, image: ImagePayload },
+    /// A salvage-decode result: pixels plus the damage report. All-zero
+    /// damage fields mean the container was intact and the pixels are
+    /// bit-identical to a strict decode.
+    Salvaged {
+        lane: Lane,
+        segments_total: u32,
+        segments_damaged: u32,
+        segments_concealed: u32,
+        bytes_skipped: u64,
+        image: ImagePayload,
+    },
     Pong,
     StatsJson(String),
     /// A reduced-quality compress result from the load-shedding path
@@ -193,6 +211,10 @@ impl<'a> Cur<'a> {
 
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     fn f64(&mut self) -> Result<f64> {
@@ -259,6 +281,12 @@ impl RequestMsg {
                 p.push(lane_tag(*lane));
                 p.extend_from_slice(container);
                 (REQ_DECODE, p)
+            }
+            RequestMsg::DecodeSalvage { container, lane } => {
+                let mut p = Vec::with_capacity(1 + container.len());
+                p.push(lane_tag(*lane));
+                p.extend_from_slice(container);
+                (REQ_DECODE_SALVAGE, p)
             }
             RequestMsg::Histeq { image, lane } => {
                 let mut p = Vec::with_capacity(9 + image.data.len());
@@ -328,6 +356,13 @@ impl RequestMsg {
                     lane,
                 })
             }
+            REQ_DECODE_SALVAGE => {
+                let lane = tag_lane(c.u8()?)?;
+                Ok(RequestMsg::DecodeSalvage {
+                    container: c.rest().to_vec(),
+                    lane,
+                })
+            }
             REQ_HISTEQ => {
                 let lane = tag_lane(c.u8()?)?;
                 let (w, h) =
@@ -385,6 +420,35 @@ impl ResponseMsg {
                 p.extend_from_slice(&(h as u32).to_le_bytes());
                 p.extend_from_slice(data);
                 (RESP_IMAGE, p)
+            }
+            ResponseMsg::Salvaged {
+                lane,
+                segments_total,
+                segments_damaged,
+                segments_concealed,
+                bytes_skipped,
+                image,
+            } => {
+                let (color, w, h, data): (u8, usize, usize, &[u8]) =
+                    match image {
+                        ImagePayload::Gray(g) => {
+                            (0, g.width, g.height, &g.data)
+                        }
+                        ImagePayload::Color(c) => {
+                            (1, c.width, c.height, &c.data)
+                        }
+                    };
+                let mut p = Vec::with_capacity(30 + data.len());
+                p.push(lane_tag(*lane));
+                p.extend_from_slice(&segments_total.to_le_bytes());
+                p.extend_from_slice(&segments_damaged.to_le_bytes());
+                p.extend_from_slice(&segments_concealed.to_le_bytes());
+                p.extend_from_slice(&bytes_skipped.to_le_bytes());
+                p.push(color);
+                p.extend_from_slice(&(w as u32).to_le_bytes());
+                p.extend_from_slice(&(h as u32).to_le_bytes());
+                p.extend_from_slice(data);
+                (RESP_SALVAGED, p)
             }
             ResponseMsg::Pong => (RESP_PONG, Vec::new()),
             ResponseMsg::StatsJson(s) => {
@@ -463,6 +527,52 @@ impl ResponseMsg {
                 };
                 Ok(ResponseMsg::Image { lane, image })
             }
+            RESP_SALVAGED => {
+                let lane = tag_lane(c.u8()?)?;
+                let segments_total = c.u32()?;
+                let segments_damaged = c.u32()?;
+                let segments_concealed = c.u32()?;
+                let bytes_skipped = c.u64()?;
+                let color = c.u8()?;
+                ensure!(color <= 1, "bad color flag {color}");
+                let (w, h) = checked_dims(
+                    c.u32()?,
+                    c.u32()?,
+                    if color == 1 { 3 } else { 1 },
+                )?;
+                let px = c.rest();
+                let image = if color == 1 {
+                    ensure!(
+                        px.len() == w * h * 3,
+                        "rgb payload {} bytes != {w}x{h}x3",
+                        px.len()
+                    );
+                    ImagePayload::Color(ColorImage::from_vec(
+                        w,
+                        h,
+                        px.to_vec(),
+                    )?)
+                } else {
+                    ensure!(
+                        px.len() == w * h,
+                        "gray payload {} bytes != {w}x{h}",
+                        px.len()
+                    );
+                    ImagePayload::Gray(GrayImage::from_vec(
+                        w,
+                        h,
+                        px.to_vec(),
+                    )?)
+                };
+                Ok(ResponseMsg::Salvaged {
+                    lane,
+                    segments_total,
+                    segments_damaged,
+                    segments_concealed,
+                    bytes_skipped,
+                    image,
+                })
+            }
             RESP_DEGRADED => {
                 let lane = tag_lane(c.u8()?)?;
                 let has_psnr = c.u8()? != 0;
@@ -528,6 +638,10 @@ mod tests {
             container: vec![1, 2, 3, 4, 5],
             lane: Lane::Cpu,
         });
+        roundtrip_req(RequestMsg::DecodeSalvage {
+            container: vec![6, 7, 8],
+            lane: Lane::Auto,
+        });
         roundtrip_req(RequestMsg::Histeq {
             image: gray,
             lane: Lane::Gpu,
@@ -556,6 +670,24 @@ mod tests {
             lane: Lane::Cpu,
             image: ImagePayload::Color(synthetic::lena_like_rgb(
                 8, 8, 4,
+            )),
+        });
+        roundtrip_resp(ResponseMsg::Salvaged {
+            lane: Lane::Cpu,
+            segments_total: 12,
+            segments_damaged: 2,
+            segments_concealed: 2,
+            bytes_skipped: 310,
+            image: ImagePayload::Gray(synthetic::lena_like(8, 8, 5)),
+        });
+        roundtrip_resp(ResponseMsg::Salvaged {
+            lane: Lane::CpuParallel,
+            segments_total: 3,
+            segments_damaged: 0,
+            segments_concealed: 0,
+            bytes_skipped: 0,
+            image: ImagePayload::Color(synthetic::lena_like_rgb(
+                8, 8, 6,
             )),
         });
         roundtrip_resp(ResponseMsg::Degraded {
@@ -627,6 +759,8 @@ mod tests {
         assert!(ResponseMsg::decode(0x13, &[]).is_err());
         // a Degraded frame shorter than its 10-byte prelude
         assert!(ResponseMsg::decode(RESP_DEGRADED, &[0, 1]).is_err());
+        // a Salvaged frame shorter than its 30-byte prelude
+        assert!(ResponseMsg::decode(RESP_SALVAGED, &[0; 12]).is_err());
     }
 
     #[test]

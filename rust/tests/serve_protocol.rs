@@ -9,8 +9,8 @@ use cordic_dct::image::ycbcr::Subsampling;
 use cordic_dct::image::GrayImage;
 use cordic_dct::image::color::ColorImage;
 use cordic_dct::serve::protocol::{
-    REQ_COMPRESS_COLOR, REQ_COMPRESS_GRAY, REQ_DECODE, REQ_HISTEQ,
-    REQ_PING, REQ_STATS,
+    REQ_COMPRESS_COLOR, REQ_COMPRESS_GRAY, REQ_DECODE,
+    REQ_DECODE_SALVAGE, REQ_HISTEQ, REQ_PING, REQ_STATS,
 };
 use cordic_dct::serve::{RequestMsg, ResponseMsg, ImagePayload};
 
@@ -61,7 +61,7 @@ fn randomized_request_roundtrips() {
     for i in 0..200 {
         let lane = LANES[rng.below(4) as usize];
         let variant = VARIANTS[rng.below(3) as usize];
-        let msg = match i % 5 {
+        let msg = match i % 6 {
             0 => RequestMsg::CompressGray {
                 image: rand_gray(&mut rng),
                 variant,
@@ -83,6 +83,10 @@ fn randomized_request_roundtrips() {
                 image: rand_gray(&mut rng),
                 lane,
             },
+            4 => RequestMsg::DecodeSalvage {
+                container: rng.bytes(rng.below(256) as usize),
+                lane,
+            },
             _ => RequestMsg::Ping,
         };
         let (k, p) = msg.encode();
@@ -97,7 +101,7 @@ fn randomized_response_roundtrips() {
     let mut rng = Rng(0x5eed_0002);
     for i in 0..200 {
         let lane = LANES[rng.below(4) as usize];
-        let msg = match i % 4 {
+        let msg = match i % 5 {
             0 => ResponseMsg::Compressed {
                 lane,
                 psnr_db: (rng.below(2) == 1)
@@ -115,6 +119,18 @@ fn randomized_response_roundtrips() {
             2 => ResponseMsg::Error {
                 code: rng.below(30) as u16,
                 message: format!("failure {}", rng.below(1000)),
+            },
+            3 => ResponseMsg::Salvaged {
+                lane,
+                segments_total: rng.below(64) as u32,
+                segments_damaged: rng.below(8) as u32,
+                segments_concealed: rng.below(8) as u32,
+                bytes_skipped: rng.below(1 << 20),
+                image: if rng.below(2) == 1 {
+                    ImagePayload::Gray(rand_gray(&mut rng))
+                } else {
+                    ImagePayload::Color(rand_color(&mut rng))
+                },
             },
             _ => ResponseMsg::Overloaded,
         };
@@ -135,6 +151,7 @@ fn random_payload_fuzz_never_panics() {
         REQ_HISTEQ,
         REQ_PING,
         REQ_STATS,
+        REQ_DECODE_SALVAGE,
     ];
     for _ in 0..2000 {
         let kind = if rng.below(4) == 0 {
@@ -222,5 +239,133 @@ fn bit_flip_fuzz_decodes_or_rejects_consistently() {
                 assert_eq!(again, parsed);
             }
         }
+    }
+}
+
+mod decode_classification {
+    //! Regression tests for the decode-error taxonomy the serve path
+    //! maps onto wire error codes: truncation anywhere in a container —
+    //! including inside an embedded CDC3 plane's Huffman tables — must
+    //! classify as `Truncated`, never as `Corrupt`.
+
+    use cordic_dct::codec::color::{
+        self, subsampling_tag, ColorHeader,
+    };
+    use cordic_dct::codec::{
+        classify_decode_error, decoder, encoder, variant_tag,
+        DecodeErrorKind, Header,
+    };
+    use cordic_dct::dct::color::ColorPipeline;
+    use cordic_dct::dct::pipeline::CpuPipeline;
+    use cordic_dct::dct::Variant;
+    use cordic_dct::image::synthetic;
+    use cordic_dct::image::ycbcr::Subsampling;
+
+    /// 4-byte magic + w/h/pw/ph (u32 each) + quality + variant.
+    const GRAY_HEAD: usize = 22;
+    /// 4-byte magic + w/h (u32 each) + quality + variant + subsampling.
+    const COLOR_HEAD: usize = 15;
+
+    fn gray_v1() -> Vec<u8> {
+        let img = synthetic::lena_like(40, 32, 7);
+        let pipe = CpuPipeline::new(Variant::Cordic, 50);
+        let scanned = pipe.analyze_scanned(&img);
+        let header = Header {
+            width: img.width as u32,
+            height: img.height as u32,
+            padded_width: scanned.padded_width as u32,
+            padded_height: scanned.padded_height as u32,
+            quality: 50,
+            variant: variant_tag(Variant::Cordic),
+        };
+        encoder::encode_scanned(&header, &scanned).unwrap()
+    }
+
+    fn color_container() -> Vec<u8> {
+        let img = synthetic::lena_like_rgb(40, 32, 7);
+        let pipe = ColorPipeline::new(
+            Variant::Cordic,
+            50,
+            Subsampling::S444,
+        );
+        let planes = pipe.analyze(&img);
+        let header = ColorHeader {
+            width: img.width as u32,
+            height: img.height as u32,
+            quality: 50,
+            variant: variant_tag(Variant::Cordic),
+            subsampling: subsampling_tag(Subsampling::S444),
+        };
+        color::encode(&header, &planes).unwrap()
+    }
+
+    /// Byte offset where plane `n`'s u32 length prefix starts.
+    fn plane_offset(container: &[u8], n: usize) -> usize {
+        let mut off = COLOR_HEAD;
+        for _ in 0..n {
+            let len = u32::from_le_bytes(
+                container[off..off + 4].try_into().unwrap(),
+            ) as usize;
+            off += 4 + len;
+        }
+        off
+    }
+
+    #[test]
+    fn gray_truncation_inside_huffman_table_is_truncated() {
+        let v1 = gray_v1();
+        // every cut from mid-header through mid-table is a truncation
+        for cut in [4, GRAY_HEAD - 1, GRAY_HEAD + 3, GRAY_HEAD + 9] {
+            let err = decoder::decode(&v1[..cut]).unwrap_err();
+            assert_eq!(
+                classify_decode_error(&err),
+                Some(DecodeErrorKind::Truncated),
+                "cut at {cut}: {err:#}"
+            );
+        }
+    }
+
+    #[test]
+    fn cdc3_truncated_mid_plane_is_truncated_not_corrupt() {
+        let container = color_container();
+        // cut inside plane 2's embedded stream, past its length prefix
+        let p2 = plane_offset(&container, 2);
+        let cut = p2 + 4 + GRAY_HEAD + 5;
+        assert!(cut < container.len());
+        let err = color::decode(&container[..cut]).unwrap_err();
+        assert_eq!(
+            classify_decode_error(&err),
+            Some(DecodeErrorKind::Truncated),
+            "{err:#}"
+        );
+        assert!(
+            format!("{err:#}").contains("plane"),
+            "error should name the damaged plane: {err:#}"
+        );
+    }
+
+    #[test]
+    fn cdc3_plane_cut_mid_huffman_table_is_truncated() {
+        // shrink plane 2's declared length so its embedded stream ends
+        // inside the DC Huffman table while the outer container stays
+        // self-consistent — the misclassification the old code hit
+        let container = color_container();
+        let p2 = plane_offset(&container, 2);
+        let inner_len = GRAY_HEAD + 5;
+        let mut cut = container[..p2].to_vec();
+        cut.extend_from_slice(&(inner_len as u32).to_le_bytes());
+        cut.extend_from_slice(
+            &container[p2 + 4..p2 + 4 + inner_len],
+        );
+        let err = color::decode(&cut).unwrap_err();
+        assert_eq!(
+            classify_decode_error(&err),
+            Some(DecodeErrorKind::Truncated),
+            "{err:#}"
+        );
+        assert!(
+            format!("{err:#}").contains("plane"),
+            "error should name the damaged plane: {err:#}"
+        );
     }
 }
