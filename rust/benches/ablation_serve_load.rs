@@ -8,11 +8,21 @@
 //! its response before sending the next request), so throughput saturates
 //! at the worker pool, and overloaded replies count as backpressure
 //! rather than failures.
+//!
+//! The second artifact (`serve_mux_load`) sweeps the v2 pipelined path:
+//! shard count × {closed-loop, depth-8 cache-cold, depth-8 cache-hot}
+//! over servers with the response cache enabled. It self-gates on the
+//! two properties the protocol exists for — pipelining must beat the
+//! closed loop on throughput at equal client count, and a ≥90% cache-hit
+//! workload must beat the cold path on p50 latency.
 
 use cordic_dct::bench::save_results;
 use cordic_dct::coordinator::{Lane, ServiceConfig};
 use cordic_dct::dct::Variant;
-use cordic_dct::serve::{run_load, LoadSpec, ServeConfig, TcpServer};
+use cordic_dct::serve::{
+    run_load, ImageMix, LoadReport, LoadSpec, ServeConfig, ShardGroup,
+    TcpServer,
+};
 use cordic_dct::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
@@ -86,5 +96,157 @@ fn main() -> anyhow::Result<()> {
     ])
     .to_string();
     save_results("ablation_serve_load", &text, &json);
+    mux_sweep(quick)?;
+    Ok(())
+}
+
+/// One measured row of the pipelined sweep.
+struct MuxRow {
+    shards: usize,
+    mode: &'static str,
+    pipeline: usize,
+    report: LoadReport,
+}
+
+/// Pipelined (v2) sweep: shard count × {closed, depth-8 cold, depth-8
+/// hot} against cache-enabled servers, self-gating on the pipelining
+/// and caching wins.
+fn mux_sweep(quick: bool) -> anyhow::Result<()> {
+    let (size, requests) = if quick { (64, 16) } else { (128, 48) };
+    let depth = 8;
+    let clients = 2;
+    let shard_sweep: &[usize] = &[1, 2];
+    let mut rows: Vec<MuxRow> = Vec::new();
+    println!(
+        "== serve mux ablation: {size}x{size} cordic gray, {clients} \
+         clients x {requests} req, pipeline depth {depth} =="
+    );
+    println!(
+        "{:>7} {:>15} {:>6} {:>10} {:>9} {:>9} {:>9}",
+        "shards", "mode", "depth", "req/s", "p50 ms", "p95 ms", "err rate"
+    );
+    for &shards in shard_sweep {
+        let cfg = ServeConfig {
+            service: ServiceConfig {
+                workers: 4,
+                queue_capacity: 64,
+                artifact_dir: None,
+                ..Default::default()
+            },
+            max_connections: 16,
+            cache_bytes: 32 * 1024 * 1024,
+            ..Default::default()
+        };
+        let group = ShardGroup::bind("127.0.0.1:0", shards, cfg)?;
+        let addrs = group.addrs();
+        let base = LoadSpec {
+            clients,
+            requests_per_client: requests,
+            size,
+            color: false,
+            variant: Variant::Cordic,
+            lane: Lane::Cpu,
+            want_psnr: false,
+            addrs: if shards > 1 { addrs.clone() } else { Vec::new() },
+            ..LoadSpec::new(addrs[0])
+        };
+        // unique images keep both cold modes honest: the cache is live
+        // on the server but never hits
+        let modes: [(&'static str, usize, ImageMix); 3] = [
+            ("closed", 0, ImageMix::Unique),
+            ("pipelined-cold", depth, ImageMix::Unique),
+            ("pipelined-hot", depth, ImageMix::Shared(1)),
+        ];
+        for (mode, pipeline, mix) in modes {
+            let spec = LoadSpec {
+                pipeline,
+                mix,
+                ..base.clone()
+            };
+            let report = run_load(&spec)?;
+            println!(
+                "{:>7} {:>15} {:>6} {:>10.1} {:>9.2} {:>9.2} {:>9.3}",
+                shards,
+                mode,
+                pipeline,
+                report.throughput_rps,
+                report.p50_ms,
+                report.p95_ms,
+                report.error_rate
+            );
+            anyhow::ensure!(
+                report.failed == 0,
+                "{} request(s) failed in mux sweep ({mode}, {shards} \
+                 shard(s))",
+                report.failed
+            );
+            rows.push(MuxRow {
+                shards,
+                mode,
+                pipeline,
+                report,
+            });
+        }
+        group.shutdown();
+    }
+    // the sweep gates itself: each property below is the reason the
+    // corresponding subsystem exists
+    for &shards in shard_sweep {
+        let find = |mode: &str| {
+            rows.iter()
+                .find(|r| r.shards == shards && r.mode == mode)
+                .expect("sweep row")
+        };
+        let closed = find("closed");
+        let cold = find("pipelined-cold");
+        let hot = find("pipelined-hot");
+        anyhow::ensure!(
+            cold.report.throughput_rps > closed.report.throughput_rps,
+            "pipelining lost to the closed loop at {shards} shard(s): \
+             {:.1} <= {:.1} req/s",
+            cold.report.throughput_rps,
+            closed.report.throughput_rps
+        );
+        anyhow::ensure!(
+            hot.report.p50_ms < cold.report.p50_ms,
+            "cache-hot p50 not below cold p50 at {shards} shard(s): \
+             {:.2} >= {:.2} ms",
+            hot.report.p50_ms,
+            cold.report.p50_ms
+        );
+    }
+    let text: String = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "{} shard(s) {} depth {}: {}\n",
+                r.shards, r.mode, r.pipeline, r.report
+            )
+        })
+        .collect();
+    let json = Json::obj(vec![
+        ("table", Json::str("serve_mux_load")),
+        ("size", size.into()),
+        ("requests_per_client", requests.into()),
+        ("clients", clients.into()),
+        ("pipeline_depth", depth.into()),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("shards", r.shards.into()),
+                            ("mode", Json::str(r.mode)),
+                            ("pipeline", r.pipeline.into()),
+                            ("report", r.report.to_json()),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+    .to_string();
+    save_results("serve_mux_load", &text, &json);
     Ok(())
 }

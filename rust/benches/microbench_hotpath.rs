@@ -302,6 +302,37 @@ fn main() -> anyhow::Result<()> {
     let e = throughput(s.median_ms);
     report("full cpu pipeline", s, nblocks, "block", e);
 
+    // serve cache hit: everything a warm hit costs the server instead
+    // of the compress above — key derivation (FNV over the pixels),
+    // sharded lookup, and cloning the container bytes out
+    {
+        use cordic_dct::serve::cache::CachedReply;
+        use cordic_dct::serve::{CacheKey, RequestMsg, ResponseCache};
+        let cache = ResponseCache::new(32 * 1024 * 1024, 8);
+        let msg = RequestMsg::CompressGray {
+            image: img.clone(),
+            variant: Variant::Cordic,
+            lane: cordic_dct::coordinator::Lane::Cpu,
+            want_psnr: false,
+        };
+        let key = CacheKey::for_request(&msg, 50, 4)
+            .expect("compress requests are cacheable");
+        cache.insert(
+            key,
+            CachedReply {
+                lane: cordic_dct::coordinator::Lane::Cpu,
+                psnr_db: None,
+                container: std::sync::Arc::new(bytes.clone()),
+            },
+        );
+        let s = bench.run(|| {
+            let k = CacheKey::for_request(&msg, 50, 4).unwrap();
+            let hit = cache.get(&k).expect("warm hit");
+            std::hint::black_box((*hit.container).clone());
+        });
+        report("serve cache hit", s, 1.0, "req", vec![]);
+    }
+
     // steady-state allocation audit: cached pipeline + reused scan
     // buffer; 512x512 is 8-aligned so the image is borrowed, never
     // padded-by-copy. After one warmup pass (scratch pool fill, buffer

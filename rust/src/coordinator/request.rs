@@ -191,6 +191,20 @@ impl Request {
         Request::decode(id, container, lane).with_salvage()
     }
 
+    /// A histogram-equalization job (the Tables 1-2 caption workload).
+    pub fn histeq(id: u64, image: GrayImage, lane: Lane) -> Request {
+        Request {
+            id,
+            kind: RequestKind::Histeq,
+            image: JobImage::Gray(image),
+            variant: Variant::Dct,
+            lane,
+            subsampling: Subsampling::S420,
+            want_psnr: false,
+            salvage: false,
+        }
+    }
+
     /// Builder-style switch to the recon-free fast path (no PSNR, no
     /// reconstructed image in the output).
     pub fn no_psnr(mut self) -> Request {
@@ -354,10 +368,23 @@ impl RequestQueue {
     pub fn submit(&self, request: Request) -> Result<JobHandle> {
         let (tx, rx) = mpsc::channel();
         let id = request.id;
+        self.submit_with_reply(request, tx)?;
+        Ok(JobHandle { id, rx })
+    }
+
+    /// Submit a request whose response goes to a caller-supplied sender.
+    /// Many in-flight jobs can share one channel, so a single consumer
+    /// observes completions in completion order — the primitive under
+    /// the serve layer's pipelined (v2) connections.
+    pub fn submit_with_reply(
+        &self,
+        request: Request,
+        reply: mpsc::Sender<Response>,
+    ) -> Result<()> {
         let job = QueuedJob {
             request,
             enqueued: Instant::now(),
-            reply: tx,
+            reply,
         };
         let mut inner = self.inner.lock().unwrap();
         if inner.closed {
@@ -382,7 +409,7 @@ impl RequestQueue {
         inner.jobs.push_back(job);
         drop(inner);
         self.not_empty.notify_one();
-        Ok(JobHandle { id, rx })
+        Ok(())
     }
 
     /// Blocking pop of up to `max` same-key jobs (FIFO head defines the

@@ -376,6 +376,22 @@ impl Service {
         })
     }
 
+    /// Submit a job whose response is delivered to a caller-supplied
+    /// channel instead of a per-job [`JobHandle`]. The closure receives
+    /// the allocated job id and builds the request; many jobs can share
+    /// one sender, so a single consumer sees completions in completion
+    /// order — this is what the serve layer's pipelined (v2) connections
+    /// fan out through. Returns the job id on successful enqueue.
+    pub fn submit_with_reply(
+        &self,
+        build: impl FnOnce(u64) -> Request,
+        reply: std::sync::mpsc::Sender<super::request::Response>,
+    ) -> Result<u64> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.queue.submit_with_reply(build(id), reply)?;
+        Ok(id)
+    }
+
     pub fn stats(&self) -> ServiceStats {
         ServiceStats {
             submitted: self.next_id.load(Ordering::Relaxed) - 1,

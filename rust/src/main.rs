@@ -9,9 +9,12 @@
 //! cordic-dct serve      --requests 64 --scene lena --lane auto [--color]
 //!                       [--stub-gpu]
 //! cordic-dct serve      --listen 127.0.0.1:7070 [--max-conns 32]
+//!                       [--shards 1] [--max-inflight 32] [--cache-mb 64]
 //!                       [--duration-s 0] [--stub-gpu]
 //!                       [--faults seed=1,panic=0.01,...] [--degrade]
-//! cordic-dct loadgen    --addr 127.0.0.1:7070 --clients 4 --requests 16
+//! cordic-dct loadgen    --addr 127.0.0.1:7070[,127.0.0.1:7071,...]
+//!                       --clients 4 --requests 16
+//!                       [--pipeline 8] [--mix per-client|unique|shared:K]
 //!                       [--size 128] [--color] [--json load.json]
 //!                       [--faults] [--seed 1]
 //! cordic-dct psnr       --a ref.png --b test.png [--color] [--lane gpu]
@@ -112,6 +115,23 @@ fn parse_variant(s: &str) -> Result<Variant> {
              (dct | loeffler | cordic | cordic-fxp | naive)"
         )
     })
+}
+
+fn parse_mix(s: &str) -> Result<cordic_dct::serve::ImageMix> {
+    use cordic_dct::serve::ImageMix;
+    if s == "per-client" {
+        return Ok(ImageMix::PerClient);
+    }
+    if s == "unique" {
+        return Ok(ImageMix::Unique);
+    }
+    if let Some(k) = s.strip_prefix("shared:") {
+        let k: usize = k
+            .parse()
+            .with_context(|| format!("bad shared pool size in mix '{s}'"))?;
+        return Ok(ImageMix::Shared(k.max(1)));
+    }
+    bail!("unknown mix '{s}' (per-client | unique | shared:K)")
 }
 
 fn parse_batch_width(s: &str) -> Result<BatchWidth> {
@@ -467,6 +487,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
              "bind a TCP front-end here (e.g. 127.0.0.1:7070) instead of \
               running the in-process synthetic load")
         .opt("max-conns", "32", "TCP mode: admission-control cap")
+        .opt("shards", "1",
+             "TCP mode: shared-nothing listeners on consecutive ports \
+              starting at --listen (each with its own workers and cache)")
+        .opt("max-inflight", "32",
+             "TCP mode: per-connection pipelined (v2) request cap; \
+              excess answers a structured Busy frame")
+        .opt("cache-mb", "64",
+             "TCP mode: content-addressed response cache budget per \
+              shard, in MiB (0 disables caching)")
         .opt("duration-s", "0",
              "TCP mode: serve this long then shut down gracefully \
               (0 = until killed)")
@@ -577,7 +606,7 @@ fn serve_tcp(
     service: ServiceConfig,
 ) -> Result<()> {
     use cordic_dct::faults::FaultPlan;
-    use cordic_dct::serve::{ServeConfig, TcpServer};
+    use cordic_dct::serve::{ServeConfig, ShardGroup, TcpServer};
     let spec = m.get("faults");
     let faults = if spec.is_empty() {
         FaultPlan::from_env()?
@@ -592,19 +621,34 @@ fn serve_tcp(
         max_connections: m.get_usize("max-conns")?.max(1),
         faults,
         degrade: m.flag("degrade"),
+        max_inflight: m.get_usize("max-inflight")?.max(1),
+        cache_bytes: m.get_usize("cache-mb")? * 1024 * 1024,
         ..Default::default()
     };
-    let server = TcpServer::bind(m.get("listen"), cfg)?;
+    let shards = m.get_usize("shards")?.max(1);
     let duration_s = m.get_usize("duration-s")?;
-    println!(
-        "listening on {} ({})",
-        server.local_addr(),
-        if duration_s == 0 {
-            "until killed".to_string()
-        } else {
-            format!("for {duration_s}s")
+    let lifetime = if duration_s == 0 {
+        "until killed".to_string()
+    } else {
+        format!("for {duration_s}s")
+    };
+    if shards > 1 {
+        let group = ShardGroup::bind(m.get("listen"), shards, cfg)?;
+        for (i, addr) in group.addrs().iter().enumerate() {
+            println!("shard {i} listening on {addr} ({lifetime})");
         }
-    );
+        if duration_s == 0 {
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_secs(duration_s as u64));
+        println!("shutting down {} shard(s)", group.len());
+        group.shutdown();
+        return Ok(());
+    }
+    let server = TcpServer::bind(m.get("listen"), cfg)?;
+    println!("listening on {} ({lifetime})", server.local_addr());
     if duration_s == 0 {
         loop {
             std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -621,11 +665,19 @@ fn serve_tcp(
 }
 
 fn cmd_loadgen(args: &[String]) -> Result<()> {
-    use cordic_dct::serve::{run_load, Client, LoadSpec};
+    use cordic_dct::serve::{run_load, Client, ImageMix, LoadSpec};
     let m = Command::new("loadgen", "drive a running TCP serve front-end")
-        .opt_req("addr", "server address, e.g. 127.0.0.1:7070")
+        .opt_req("addr",
+                 "server address(es), comma-separated for shard mode, \
+                  e.g. 127.0.0.1:7070,127.0.0.1:7071")
         .opt("clients", "4", "concurrent connections")
         .opt("requests", "16", "requests per client")
+        .opt("pipeline", "0",
+             "in-flight window per connection over the v2 protocol \
+              (0 or 1 = closed-loop v1)")
+        .opt("mix", "per-client",
+             "request image mix: per-client | unique | shared:K \
+              (shared:1 makes every request cache-identical)")
         .opt("size", "128", "square synthetic image size")
         .opt("variant", "cordic", "transform variant")
         .opt("lane", "cpu", "cpu|cpu-parallel|gpu|auto")
@@ -637,17 +689,28 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
         .opt("seed", "1", "chaos mode: retry-jitter seed")
         .opt("json", "", "write the report as JSON here")
         .parse(args)?;
-    let addr: std::net::SocketAddr = m
+    let addrs: Vec<std::net::SocketAddr> = m
         .get("addr")
-        .parse()
-        .with_context(|| format!("bad address '{}'", m.get("addr")))?;
-    // fail fast with a clear message when nothing is listening
-    Client::connect(addr)
-        .and_then(|mut c| c.ping())
-        .with_context(|| format!("no serve front-end at {addr}"))?;
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse()
+                .with_context(|| format!("bad address '{}'", s.trim()))
+        })
+        .collect::<Result<_>>()?;
+    // fail fast with a clear message when any target isn't listening
+    for addr in &addrs {
+        Client::connect(*addr)
+            .and_then(|mut c| c.ping())
+            .with_context(|| format!("no serve front-end at {addr}"))?;
+    }
+    let mix = parse_mix(m.get("mix"))?;
     let spec = LoadSpec {
         clients: m.get_usize("clients")?.max(1),
         requests_per_client: m.get_usize("requests")?.max(1),
+        pipeline: m.get_usize("pipeline")?,
+        mix,
+        addrs: if addrs.len() > 1 { addrs.clone() } else { Vec::new() },
         size: m.get_usize("size")?.max(8),
         color: m.flag("color"),
         variant: parse_variant(m.get("variant"))?,
@@ -655,7 +718,7 @@ fn cmd_loadgen(args: &[String]) -> Result<()> {
         want_psnr: m.flag("psnr"),
         faults: m.flag("faults"),
         seed: m.get_u64("seed")?,
-        ..LoadSpec::new(addr)
+        ..LoadSpec::new(addrs[0])
     };
     let report = run_load(&spec)?;
     println!("{report}");

@@ -1,0 +1,431 @@
+//! Content-addressed response cache for the serve tier.
+//!
+//! Repeated compressions of the same image redo identical work — the
+//! pipelines are deterministic, so the container bytes for a given
+//! (pixels, variant, quality, chroma, restart interval, lane) tuple
+//! never change for the lifetime of a server. The cache stores the
+//! **exact encoded container bytes** (plus the PSNR figure when the
+//! request asked for one), which is what makes a hit trivially correct:
+//! the client receives the same bytes a cold compress would have
+//! produced, bit for bit.
+//!
+//! ```text
+//!  CacheKey = ( fnv1a64(dims ‖ pixels), w, h, color,
+//!               variant, lane, chroma, want_psnr,
+//!               quality, restart_interval )
+//!                 │ digest % shards
+//!                 ▼
+//!  Shard { HashMap<CacheKey, Entry>, LRU ticks, byte gauge }
+//! ```
+//!
+//! Design points:
+//!
+//! * **Sharded locking** — the key digest picks one of N mutexed
+//!   shards, so concurrent connections rarely contend on one lock.
+//! * **Byte budget, not entry count** — each shard owns
+//!   `budget / shards` bytes; inserting past it evicts
+//!   least-recently-used entries until the new entry fits. An entry
+//!   larger than a whole shard's budget is simply not cached.
+//! * **Only full-quality compress results are cached.** Degraded
+//!   (load-shed) replies use a different quality, errors are cheap to
+//!   recompute, and decode/histeq payloads are client-supplied bytes
+//!   with no reuse signal.
+//! * Hit/miss/eviction counters are exported through the server's
+//!   stats frame.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::Lane;
+
+use super::protocol::{lane_tag, RequestMsg};
+
+/// 64-bit FNV-1a over the image dimensions and pixel bytes — the
+/// content-address half of a [`CacheKey`]. Dimensions are mixed in so
+/// two images with identical bytes at different geometry never share a
+/// digest.
+pub fn fnv1a64(dims: (u32, u32, u8), bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let (w, hgt, ch) = dims;
+    for b in w
+        .to_le_bytes()
+        .iter()
+        .chain(hgt.to_le_bytes().iter())
+        .chain(std::iter::once(&ch))
+    {
+        h = (h ^ u64::from(*b)).wrapping_mul(PRIME);
+    }
+    for &b in bytes {
+        h = (h ^ u64::from(b)).wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Everything that determines a compress result's bytes. Two requests
+/// with equal keys are guaranteed (deterministic pipelines + fixed
+/// server quality) to produce identical containers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// FNV-1a of dims + pixels (the content address).
+    pub digest: u64,
+    /// Dimensions and color flag, kept explicit so a digest collision
+    /// across different geometries cannot alias.
+    pub width: u32,
+    pub height: u32,
+    pub color: bool,
+    pub variant: u8,
+    pub lane: u8,
+    /// Chroma subsampling tag for color jobs; `0xFF` for grayscale.
+    pub chroma: u8,
+    pub want_psnr: bool,
+    /// Server-side quality the container was encoded at.
+    pub quality: u8,
+    /// Restart interval of the emitted CDC2 segments.
+    pub restart_interval: u16,
+}
+
+impl CacheKey {
+    /// Derive the key for a request, or `None` when the request shape
+    /// is not cacheable (anything but a compress).
+    pub fn for_request(
+        msg: &RequestMsg,
+        quality: u8,
+        restart_interval: u16,
+    ) -> Option<CacheKey> {
+        match msg {
+            RequestMsg::CompressGray {
+                image,
+                variant,
+                lane,
+                want_psnr,
+            } => Some(CacheKey {
+                digest: fnv1a64(
+                    (image.width as u32, image.height as u32, 1),
+                    &image.data,
+                ),
+                width: image.width as u32,
+                height: image.height as u32,
+                color: false,
+                variant: crate::codec::variant_tag(*variant),
+                lane: lane_tag(*lane),
+                chroma: 0xFF,
+                want_psnr: *want_psnr,
+                quality,
+                restart_interval,
+            }),
+            RequestMsg::CompressColor {
+                image,
+                variant,
+                lane,
+                subsampling,
+                want_psnr,
+            } => Some(CacheKey {
+                digest: fnv1a64(
+                    (image.width as u32, image.height as u32, 3),
+                    &image.data,
+                ),
+                width: image.width as u32,
+                height: image.height as u32,
+                color: true,
+                variant: crate::codec::variant_tag(*variant),
+                lane: lane_tag(*lane),
+                chroma: crate::codec::color::subsampling_tag(
+                    *subsampling,
+                ),
+                want_psnr: *want_psnr,
+                quality,
+                restart_interval,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// A cached compress reply: the exact container bytes (shared, not
+/// copied, between the cache and in-flight responses) plus the lane
+/// that produced them and the PSNR figure when one was computed.
+#[derive(Clone, Debug)]
+pub struct CachedReply {
+    pub lane: Lane,
+    pub psnr_db: Option<f64>,
+    pub container: Arc<Vec<u8>>,
+}
+
+struct Entry {
+    reply: CachedReply,
+    /// Shard-local LRU clock value at last touch.
+    tick: u64,
+}
+
+struct Shard {
+    map: HashMap<CacheKey, Entry>,
+    clock: u64,
+    bytes: usize,
+}
+
+/// Fixed accounting overhead charged per entry on top of the container
+/// bytes (key + entry bookkeeping, hash-map slot).
+const ENTRY_OVERHEAD: usize = 96;
+
+fn entry_cost(container: &[u8]) -> usize {
+    container.len() + ENTRY_OVERHEAD
+}
+
+/// Monotonic cache counters (exported via the stats frame).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub bytes: usize,
+    pub budget_bytes: usize,
+}
+
+/// Sharded LRU response cache with a byte-size budget.
+pub struct ResponseCache {
+    shards: Vec<Mutex<Shard>>,
+    shard_budget: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ResponseCache {
+    /// `budget_bytes` is split evenly across `shards` mutexed shards
+    /// (both floored at 1). The budget bounds container bytes plus a
+    /// fixed per-entry overhead.
+    pub fn new(budget_bytes: usize, shards: usize) -> ResponseCache {
+        let shards = shards.max(1);
+        let shard_budget = (budget_bytes / shards).max(1);
+        ResponseCache {
+            shards: (0..shards)
+                .map(|_| {
+                    Mutex::new(Shard {
+                        map: HashMap::new(),
+                        clock: 0,
+                        bytes: 0,
+                    })
+                })
+                .collect(),
+            shard_budget,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &CacheKey) -> &Mutex<Shard> {
+        &self.shards[(key.digest as usize) % self.shards.len()]
+    }
+
+    /// Look up a key, refreshing its LRU position on a hit.
+    pub fn get(&self, key: &CacheKey) -> Option<CachedReply> {
+        let mut shard = self.shard(key).lock().unwrap();
+        shard.clock += 1;
+        let tick = shard.clock;
+        match shard.map.get_mut(key) {
+            Some(e) => {
+                e.tick = tick;
+                let reply = e.reply.clone();
+                drop(shard);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(reply)
+            }
+            None => {
+                drop(shard);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a reply, evicting least-recently-used entries until it
+    /// fits the shard's byte budget. A reply larger than the whole
+    /// shard budget is not cached at all.
+    pub fn insert(&self, key: CacheKey, reply: CachedReply) {
+        let cost = entry_cost(&reply.container);
+        if cost > self.shard_budget {
+            return;
+        }
+        let mut evicted = 0u64;
+        let mut shard = self.shard(&key).lock().unwrap();
+        // replacing an existing entry releases its bytes first
+        if let Some(old) = shard.map.remove(&key) {
+            shard.bytes -= entry_cost(&old.reply.container);
+        }
+        while shard.bytes + cost > self.shard_budget {
+            // O(n) LRU scan: entry counts stay small (a shard holds at
+            // most budget/overhead entries) and eviction is off the
+            // hit path, so a heap buys nothing here
+            let Some(oldest) = shard
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(k, _)| *k)
+            else {
+                break;
+            };
+            let old = shard.map.remove(&oldest).expect("key just seen");
+            shard.bytes -= entry_cost(&old.reply.container);
+            evicted += 1;
+        }
+        shard.clock += 1;
+        let tick = shard.clock;
+        shard.bytes += cost;
+        shard.map.insert(key, Entry { reply, tick });
+        drop(shard);
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+
+    /// Counter + occupancy snapshot.
+    pub fn stats(&self) -> CacheStats {
+        let (mut entries, mut bytes) = (0usize, 0usize);
+        for s in &self.shards {
+            let s = s.lock().unwrap();
+            entries += s.map.len();
+            bytes += s.bytes;
+        }
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries,
+            bytes,
+            budget_bytes: self.shard_budget * self.shards.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dct::Variant;
+    use crate::image::synthetic;
+
+    fn key_for(seed: u64, quality: u8) -> CacheKey {
+        let msg = RequestMsg::CompressGray {
+            image: synthetic::lena_like(16, 16, seed),
+            variant: Variant::Cordic,
+            lane: Lane::Cpu,
+            want_psnr: false,
+        };
+        CacheKey::for_request(&msg, quality, 4).unwrap()
+    }
+
+    fn reply(n: usize) -> CachedReply {
+        CachedReply {
+            lane: Lane::Cpu,
+            psnr_db: None,
+            container: Arc::new(vec![7u8; n]),
+        }
+    }
+
+    #[test]
+    fn hit_returns_inserted_bytes_and_counts() {
+        let cache = ResponseCache::new(1 << 20, 4);
+        let k = key_for(1, 50);
+        assert!(cache.get(&k).is_none());
+        cache.insert(k, reply(100));
+        let hit = cache.get(&k).expect("hit");
+        assert_eq!(hit.container.as_slice(), &[7u8; 100][..]);
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn distinct_request_shapes_get_distinct_keys() {
+        // same pixels, different knobs: every knob must split the key
+        let img = synthetic::lena_like(16, 16, 3);
+        let base = RequestMsg::CompressGray {
+            image: img.clone(),
+            variant: Variant::Cordic,
+            lane: Lane::Cpu,
+            want_psnr: false,
+        };
+        let k0 = CacheKey::for_request(&base, 50, 4).unwrap();
+        assert_ne!(k0, CacheKey::for_request(&base, 70, 4).unwrap());
+        assert_ne!(k0, CacheKey::for_request(&base, 50, 8).unwrap());
+        let psnr = RequestMsg::CompressGray {
+            image: img.clone(),
+            variant: Variant::Cordic,
+            lane: Lane::Cpu,
+            want_psnr: true,
+        };
+        assert_ne!(k0, CacheKey::for_request(&psnr, 50, 4).unwrap());
+        let dct = RequestMsg::CompressGray {
+            image: img,
+            variant: Variant::Dct,
+            lane: Lane::Cpu,
+            want_psnr: false,
+        };
+        assert_ne!(k0, CacheKey::for_request(&dct, 50, 4).unwrap());
+        // different pixels: different digest
+        assert_ne!(k0, key_for(2, 50));
+        // non-compress requests are never cacheable
+        assert!(CacheKey::for_request(&RequestMsg::Ping, 50, 4)
+            .is_none());
+        assert!(CacheKey::for_request(
+            &RequestMsg::Decode {
+                container: vec![1, 2, 3],
+                lane: Lane::Cpu
+            },
+            50,
+            4
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn budget_evicts_lru_and_never_overflows() {
+        // budget fits two 100-byte entries per shard, not three
+        let per_entry = entry_cost(&[0u8; 100]);
+        let cache = ResponseCache::new(2 * per_entry + 50, 1);
+        let (a, b, c) = (key_for(1, 50), key_for(2, 50), key_for(3, 50));
+        cache.insert(a, reply(100));
+        cache.insert(b, reply(100));
+        // touch `a` so `b` is the LRU victim
+        assert!(cache.get(&a).is_some());
+        cache.insert(c, reply(100));
+        assert!(cache.get(&a).is_some(), "recently used survives");
+        assert!(cache.get(&b).is_none(), "LRU entry evicted");
+        assert!(cache.get(&c).is_some());
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        assert!(s.bytes <= s.budget_bytes, "{s:?}");
+    }
+
+    #[test]
+    fn oversized_entries_are_not_cached() {
+        let cache = ResponseCache::new(256, 1);
+        let k = key_for(1, 50);
+        cache.insert(k, reply(10_000));
+        assert!(cache.get(&k).is_none());
+        assert_eq!(cache.stats().entries, 0);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_double_counting() {
+        let cache = ResponseCache::new(1 << 16, 1);
+        let k = key_for(1, 50);
+        cache.insert(k, reply(100));
+        let before = cache.stats().bytes;
+        cache.insert(k, reply(100));
+        assert_eq!(cache.stats().bytes, before);
+        assert_eq!(cache.stats().entries, 1);
+    }
+
+    #[test]
+    fn digest_mixes_dims_and_bytes() {
+        let a = fnv1a64((8, 8, 1), &[1, 2, 3]);
+        assert_ne!(a, fnv1a64((8, 4, 1), &[1, 2, 3]));
+        assert_ne!(a, fnv1a64((8, 8, 3), &[1, 2, 3]));
+        assert_ne!(a, fnv1a64((8, 8, 1), &[1, 2, 4]));
+        assert_eq!(a, fnv1a64((8, 8, 1), &[1, 2, 3]));
+    }
+}

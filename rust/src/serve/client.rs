@@ -1,7 +1,7 @@
 //! Blocking clients for the serve protocol — used by the load
 //! generator, the integration tests, and the `loadgen` CLI subcommand.
 //!
-//! Two tiers:
+//! Four tiers:
 //!
 //! - [`Client`]: one TCP connection, one request frame in, one response
 //!   frame out. Transport failures come back as a typed
@@ -13,6 +13,13 @@
 //!   connect errors, Overloaded frames, response timeouts — and never
 //!   a decode/server error, which would fail identically on every
 //!   attempt.
+//! - [`MuxClient`]: the pipelined (protocol v2) client — `send` assigns
+//!   a request id and returns immediately, `recv` yields the next
+//!   completed response (any order); the caller keeps the window.
+//! - [`ShardedClient`]: round-robin over a [`ShardGroup`]'s addresses
+//!   with one lazily-connected [`Client`] per shard.
+//!
+//! [`ShardGroup`]: super::server::ShardGroup
 
 use std::fmt;
 use std::io::{BufReader, BufWriter};
@@ -30,7 +37,8 @@ use crate::util::prng::Rng;
 
 use super::framing::{self, FrameEvent, MAX_FRAME_LEN_DEFAULT};
 use super::protocol::{
-    ImagePayload, RequestMsg, ResponseMsg, ERR_DECODE_CORRUPT,
+    self, ImagePayload, RequestMsg, ResponseMsg, ERR_DECODE_CORRUPT,
+    RESP_V2, RESP_V2_BUSY,
 };
 
 /// A request failure, classified for retry decisions.
@@ -509,6 +517,10 @@ pub struct RetryClient {
     retries: u64,
     salvage_fallback: bool,
     salvage_fallbacks: u64,
+    /// Wire time of the attempt that produced the last returned
+    /// response — excludes connects, backoff sleeps, and failed
+    /// attempts, unlike the caller's total elapsed time.
+    last_service: Option<Duration>,
 }
 
 impl RetryClient {
@@ -523,6 +535,7 @@ impl RetryClient {
             retries: 0,
             salvage_fallback: false,
             salvage_fallbacks: 0,
+            last_service: None,
         }
     }
 
@@ -554,6 +567,17 @@ impl RetryClient {
 
     pub fn policy(&self) -> &RetryPolicy {
         &self.policy
+    }
+
+    /// Service time of the attempt behind the last successful
+    /// [`RetryClient::request`]: one request frame out, its response
+    /// frame in. Connect time, backoff sleeps, and earlier failed
+    /// attempts are excluded — this is the honest latency sample for
+    /// percentile reporting, where the total elapsed time (which the
+    /// retry budget check uses) conflates server latency with the
+    /// client's own recovery behavior. `None` until a request succeeds.
+    pub fn last_service_time(&self) -> Option<Duration> {
+        self.last_service
     }
 
     /// Send one request with retries. Connections are lazy: the first
@@ -599,7 +623,17 @@ impl RetryClient {
                 return Err(RequestError::CircuitOpen);
             }
             let outcome = match self.ensure_conn() {
-                Ok(c) => c.try_request(msg),
+                Ok(c) => {
+                    // time only the wire round-trip, after the
+                    // connection exists — the satellite fix for
+                    // percentiles that used to absorb connect+backoff
+                    let t = Instant::now();
+                    let r = c.try_request(msg);
+                    if r.is_ok() {
+                        self.last_service = Some(t.elapsed());
+                    }
+                    r
+                }
                 Err(e) => Err(e),
             };
             match outcome {
@@ -637,6 +671,221 @@ impl RetryClient {
             self.conn = Some(c);
         }
         Ok(self.conn.as_mut().expect("connection just ensured"))
+    }
+}
+
+/// One completed event from a pipelined connection.
+#[derive(Debug, Clone)]
+pub enum MuxEvent {
+    /// A response wrapped with the request id it answers.
+    Response { request_id: u64, msg: ResponseMsg },
+    /// The server refused to admit the request — the window was full at
+    /// `max_inflight`. Nothing ran; resend after a completion frees a
+    /// slot.
+    Busy { request_id: u64, max_inflight: u32 },
+}
+
+/// Pipelined (protocol v2) client: fire-and-forget sends, completion-
+/// order receives. The caller owns the windowing policy — typically
+/// `send` until `pipeline` requests are outstanding, then one `recv`
+/// per further `send`.
+pub struct MuxClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    max_frame_len: usize,
+    /// Deadline for one [`MuxClient::recv`] call.
+    recv_deadline: Duration,
+    next_id: u64,
+}
+
+impl MuxClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<MuxClient> {
+        let stream =
+            TcpStream::connect(addr).context("connecting to server")?;
+        Self::from_stream(stream)
+    }
+
+    /// Like [`MuxClient::connect`] but bounded by `timeout`.
+    pub fn connect_timeout(
+        addr: &SocketAddr,
+        timeout: Duration,
+    ) -> Result<MuxClient> {
+        let stream = TcpStream::connect_timeout(addr, timeout)
+            .context("connecting to server")?;
+        Self::from_stream(stream)
+    }
+
+    fn from_stream(stream: TcpStream) -> Result<MuxClient> {
+        stream.set_read_timeout(Some(Duration::from_millis(200)))?;
+        stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+        let _ = stream.set_nodelay(true);
+        Ok(MuxClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+            max_frame_len: MAX_FRAME_LEN_DEFAULT,
+            recv_deadline: Duration::from_secs(60),
+            next_id: 1,
+        })
+    }
+
+    /// Override the per-`recv` deadline.
+    pub fn with_deadline(mut self, d: Duration) -> MuxClient {
+        self.recv_deadline = d;
+        self
+    }
+
+    /// Raw access to the underlying stream (test hook).
+    pub fn stream(&self) -> &TcpStream {
+        self.reader.get_ref()
+    }
+
+    /// Send one request, auto-assigning the next request id; returns
+    /// the id to match against [`MuxEvent::Response`].
+    pub fn send(
+        &mut self,
+        msg: &RequestMsg,
+    ) -> Result<u64, RequestError> {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.send_with_id(id, msg)?;
+        Ok(id)
+    }
+
+    /// Send under an explicit request id (test hook: duplicate-id and
+    /// id-space probes need ids the auto-assign would never produce).
+    pub fn send_with_id(
+        &mut self,
+        request_id: u64,
+        msg: &RequestMsg,
+    ) -> Result<(), RequestError> {
+        let (kind, payload) = protocol::encode_v2_request(request_id, msg);
+        framing::write_frame(&mut self.writer, kind, &payload)
+            .map_err(|e| RequestError::Connect(format!("{e:#}")))
+    }
+
+    /// Receive the next completed event, whatever request it answers.
+    /// Responses arrive in server completion order, not send order.
+    pub fn recv(&mut self) -> Result<MuxEvent, RequestError> {
+        let t0 = Instant::now();
+        loop {
+            match framing::read_frame(&mut self.reader, self.max_frame_len)
+            {
+                Ok(FrameEvent::Frame { kind, payload })
+                    if kind == RESP_V2 =>
+                {
+                    let (request_id, msg) =
+                        protocol::decode_v2_response(&payload).map_err(
+                            |e| RequestError::Malformed(format!("{e:#}")),
+                        )?;
+                    return Ok(MuxEvent::Response { request_id, msg });
+                }
+                Ok(FrameEvent::Frame { kind, payload })
+                    if kind == RESP_V2_BUSY =>
+                {
+                    let (request_id, max_inflight) =
+                        protocol::decode_v2_busy(&payload).map_err(
+                            |e| RequestError::Malformed(format!("{e:#}")),
+                        )?;
+                    return Ok(MuxEvent::Busy {
+                        request_id,
+                        max_inflight,
+                    });
+                }
+                Ok(FrameEvent::Frame { kind, .. }) => {
+                    // a v1 frame on a pipelined stream has no id to
+                    // correlate — the connection is unusable
+                    return Err(RequestError::Malformed(format!(
+                        "unwrapped v1 frame (kind {kind:#04x}) on a \
+                         pipelined connection"
+                    )));
+                }
+                Ok(FrameEvent::Eof) => {
+                    return Err(RequestError::Connect(
+                        "server closed the connection mid-request".into(),
+                    ))
+                }
+                Ok(FrameEvent::Idle) => {
+                    if t0.elapsed() > self.recv_deadline {
+                        return Err(RequestError::Timeout(format!(
+                            "no response within {:?}",
+                            self.recv_deadline
+                        )));
+                    }
+                }
+                Err(e) => {
+                    return Err(RequestError::Connect(format!("{e:#}")))
+                }
+            }
+        }
+    }
+}
+
+/// Round-robin front-tier over a shard group: one lazily-connected
+/// [`Client`] per shard address, requests dealt to shards in turn. A
+/// transport failure drops that shard's connection (reconnected on its
+/// next turn) and surfaces the error — retry policy stays the caller's
+/// concern.
+pub struct ShardedClient {
+    addrs: Vec<SocketAddr>,
+    conns: Vec<Option<Client>>,
+    next: usize,
+    connect_timeout: Duration,
+    deadline: Duration,
+}
+
+impl ShardedClient {
+    /// `addrs` must be non-empty (one entry degenerates to a plain
+    /// reconnecting client).
+    pub fn new(addrs: Vec<SocketAddr>) -> ShardedClient {
+        assert!(!addrs.is_empty(), "ShardedClient needs >= 1 address");
+        let conns = addrs.iter().map(|_| None).collect();
+        ShardedClient {
+            addrs,
+            conns,
+            next: 0,
+            connect_timeout: Duration::from_secs(2),
+            deadline: Duration::from_secs(60),
+        }
+    }
+
+    /// Override the per-request response deadline.
+    pub fn with_deadline(mut self, d: Duration) -> ShardedClient {
+        self.deadline = d;
+        self
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.addrs.len()
+    }
+
+    /// Send one request to the next shard in rotation.
+    pub fn request(
+        &mut self,
+        msg: &RequestMsg,
+    ) -> Result<ResponseMsg, RequestError> {
+        let i = self.next % self.addrs.len();
+        self.next = self.next.wrapping_add(1);
+        if self.conns[i].is_none() {
+            let c = Client::connect_timeout(
+                &self.addrs[i],
+                self.connect_timeout,
+            )
+            .map_err(|e| RequestError::Connect(format!("{e:#}")))?
+            .with_deadline(self.deadline);
+            self.conns[i] = Some(c);
+        }
+        let out = self.conns[i]
+            .as_mut()
+            .expect("connection just ensured")
+            .try_request(msg);
+        if matches!(
+            out,
+            Err(RequestError::Connect(_)) | Err(RequestError::Timeout(_))
+        ) {
+            // the stream may hold a half-read frame; never reuse it
+            self.conns[i] = None;
+        }
+        out
     }
 }
 

@@ -1,15 +1,47 @@
-//! Per-connection frame loop: read a request frame, run it through the
-//! coordinator, answer exactly one response frame.
+//! Per-connection frame loop: v1 requests answer one response frame
+//! each, in order; v2 frames multiplex many in-flight requests over the
+//! same socket.
 //!
 //! Error containment is the whole design: malformed frames, hostile
 //! containers, queue overload, and job failures all come back as
-//! structured frames ([`ResponseMsg::Error`] / `Overloaded`) on a still-
-//! healthy connection, never as a panic or a silent drop. Only a
-//! desynchronized byte stream (bad length prefix, mid-frame stall or
+//! structured frames ([`ResponseMsg::Error`] / `Overloaded` / Busy) on
+//! a still-healthy connection, never as a panic or a silent drop. Only
+//! a desynchronized byte stream (bad length prefix, mid-frame stall or
 //! disconnect) closes the connection — after a best-effort error frame —
 //! because framing cannot resynchronize.
 //!
-//! Two optional layers sit on top:
+//! ## Pipelining (v2)
+//!
+//! ```text
+//!  socket ──► reader thread ──► coordinator queue (submit_with_reply)
+//!     ▲            │ v1 frames answered inline, in order
+//!     │            │ v2 dup-id / Busy / Ping / Stats / cache hits
+//!     │            ▼            answered inline too
+//!  Mutex<writer> ◄── drainer thread ◄── shared mpsc: completions
+//!                    (completion order)   arrive as workers finish
+//! ```
+//!
+//! A v2 frame wraps a v1 request with a client-assigned `request_id`;
+//! the reader submits the job with a reply sender shared by the whole
+//! connection and moves on, so up to [`Shared::max_inflight`] jobs run
+//! concurrently. The drainer receives completions in completion order
+//! and writes each response wrapped with its request id — the id, not
+//! arrival order, is the correlation. v1 frames on the same connection
+//! still run closed-loop on the reader thread (bit-compatible with v1
+//! servers by construction); both threads share the writer through a
+//! mutex, and `write_frame` emits one whole frame per call, so frames
+//! never interleave.
+//!
+//! ## Response cache
+//!
+//! With a [`ResponseCache`] configured, compress requests are looked up
+//! by content-addressed [`CacheKey`] before touching the queue; a hit
+//! answers the exact container bytes a cold compress would have
+//! produced. Fresh full-quality compress results are inserted at
+//! response-build time — *before* the chaos layer's outbound bit-flips,
+//! so a corrupted wire frame can never poison the cache.
+//!
+//! Two more optional layers:
 //!
 //! - **Fault injection** (chaos testing): when the server carries a
 //!   [`FaultInjector`], each connection forks its own deterministic
@@ -20,12 +52,14 @@
 //! - **Graceful degradation** (`--degrade`): a compress request the
 //!   queue rejected is answered with a reduced-quality
 //!   [`ResponseMsg::Degraded`] result computed inline on the serial
-//!   lane, instead of a bare Overloaded refusal.
+//!   lane, instead of a bare Overloaded refusal (v1 and v2 alike).
 
+use std::collections::{HashMap, HashSet};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -34,7 +68,7 @@ use crate::codec::{
     Header,
 };
 use crate::coordinator::{
-    JobHandle, JobOutput, Lane, Service, JOB_PANIC_TAG,
+    JobHandle, JobOutput, Lane, Request, Response, Service, JOB_PANIC_TAG,
 };
 use crate::dct::batch::EngineConfig;
 use crate::dct::color::ColorPipeline;
@@ -44,10 +78,12 @@ use crate::log_debug;
 use crate::metrics::{color::psnr_color, psnr};
 use crate::util::json::Json;
 
+use super::cache::{CacheKey, CachedReply};
 use super::framing::{self, FrameEvent};
 use super::protocol::{
-    decode_error_code, ImagePayload, RequestMsg, ResponseMsg,
-    ERR_BAD_FRAME, ERR_JOB_FAILED, ERR_JOB_TIMEOUT, ERR_WORKER_PANIC,
+    self, decode_error_code, ImagePayload, RequestMsg, ResponseMsg,
+    ERR_BAD_FRAME, ERR_DUPLICATE_ID, ERR_JOB_FAILED, ERR_JOB_TIMEOUT,
+    ERR_WORKER_PANIC, REQ_V2,
 };
 use super::server::Shared;
 
@@ -90,40 +126,90 @@ fn serve_conn(stream: TcpStream, sh: &Shared) -> Result<()> {
     }
 }
 
-fn frame_loop(
+/// One v2 request in flight: everything the drainer needs to write (and
+/// cache) the response when the coordinator completes the job.
+struct Pending {
+    request_id: u64,
+    cache_key: Option<CacheKey>,
+    deadline: Instant,
+}
+
+/// In-flight v2 requests, shared between the reader (inserts) and the
+/// drainer (removes on completion or deadline).
+#[derive(Default)]
+struct PendingState {
+    /// Keyed by coordinator job id — what a completion carries.
+    by_job: HashMap<u64, Pending>,
+    /// Client-assigned ids currently in flight (duplicate detection).
+    ids: HashSet<u64>,
+}
+
+impl PendingState {
+    fn take_job(&mut self, job_id: u64) -> Option<Pending> {
+        let p = self.by_job.remove(&job_id)?;
+        self.ids.remove(&p.request_id);
+        Some(p)
+    }
+
+    fn take_expired(&mut self, now: Instant) -> Vec<Pending> {
+        let expired: Vec<u64> = self
+            .by_job
+            .iter()
+            .filter(|(_, p)| p.deadline <= now)
+            .map(|(job, _)| *job)
+            .collect();
+        expired.into_iter().filter_map(|j| self.take_job(j)).collect()
+    }
+}
+
+fn frame_loop<W: Write + Send>(
     mut reader: impl Read,
-    mut writer: impl Write,
+    writer: W,
+    sh: &Shared,
+    inj: Option<&FaultInjector>,
+) -> Result<()> {
+    let writer = Mutex::new(writer);
+    let pending = Mutex::new(PendingState::default());
+    // completions from every in-flight job on this connection funnel
+    // into one channel, so the drainer sees them in completion order
+    let (tx, rx) = mpsc::channel::<Response>();
+    std::thread::scope(|s| {
+        let drainer =
+            s.spawn(|| drain_loop(&writer, &pending, rx, sh, inj));
+        let out = read_loop(&mut reader, &writer, &pending, &tx, sh, inj);
+        // reader is done: dropping its sender lets the drainer exit once
+        // the last in-flight job has replied (workers hold the only
+        // remaining clones), draining outstanding responses gracefully
+        drop(tx);
+        let _ = drainer.join();
+        out
+    })
+}
+
+fn read_loop(
+    reader: &mut impl Read,
+    writer: &Mutex<impl Write>,
+    pending: &Mutex<PendingState>,
+    tx: &mpsc::Sender<Response>,
     sh: &Shared,
     inj: Option<&FaultInjector>,
 ) -> Result<()> {
     loop {
-        match framing::read_frame(&mut reader, sh.max_frame_len) {
+        match framing::read_frame(reader, sh.max_frame_len) {
             Ok(FrameEvent::Eof) => return Ok(()),
             Ok(FrameEvent::Idle) => {
                 if sh.shutdown.load(Ordering::SeqCst) {
                     return Ok(());
                 }
             }
+            Ok(FrameEvent::Frame { kind, payload }) if kind == REQ_V2 => {
+                handle_v2(writer, pending, tx, sh, inj, &payload)?;
+            }
             Ok(FrameEvent::Frame { kind, payload }) => {
                 let resp = process(sh, kind, &payload);
-                let ctr = match resp {
-                    ResponseMsg::Error { .. }
-                    | ResponseMsg::Overloaded => &sh.counters.frames_error,
-                    ResponseMsg::Degraded { .. } => {
-                        sh.counters.degraded.fetch_add(1, Ordering::SeqCst);
-                        &sh.counters.frames_ok
-                    }
-                    _ => &sh.counters.frames_ok,
-                };
-                ctr.fetch_add(1, Ordering::SeqCst);
-                let (k, mut body) = resp.encode();
-                if let Some(f) = inj {
-                    // corrupt the encoded payload, not the framing, so
-                    // the client sees a well-formed frame carrying a
-                    // damaged container — the hardest case to detect
-                    f.flip_bit(&mut body);
-                }
-                framing::write_frame(&mut writer, k, &body)?;
+                count_response(sh, &resp);
+                let (k, body) = resp.encode();
+                send_frame(writer, inj, k, body)?;
             }
             Err(e) => {
                 // the stream is desynchronized; tell the client why if
@@ -134,15 +220,307 @@ fn frame_loop(
                     message: format!("{e:#}"),
                 }
                 .encode();
-                let _ = framing::write_frame(&mut writer, k, &body);
+                let _ = send_frame(writer, inj, k, body);
                 return Err(e);
             }
         }
     }
 }
 
-/// Turn one request frame into one response frame. Never panics: every
-/// failure path is a structured frame.
+/// Dispatch one v2 frame from the reader thread. Admission problems
+/// (duplicate id, full window), inline requests (Ping/Stats), cache
+/// hits, and submit failures answer immediately; everything else lands
+/// in the coordinator queue with the response left to the drainer.
+fn handle_v2(
+    writer: &Mutex<impl Write>,
+    pending: &Mutex<PendingState>,
+    tx: &mpsc::Sender<Response>,
+    sh: &Shared,
+    inj: Option<&FaultInjector>,
+    payload: &[u8],
+) -> Result<()> {
+    // an unparseable prefix has no id to echo — the one v2 error that
+    // must answer unwrapped
+    let Ok((request_id, inner_kind, inner)) = protocol::v2_prefix(payload)
+    else {
+        let resp = ResponseMsg::Error {
+            code: ERR_BAD_FRAME,
+            message: "v2 frame shorter than its 9-byte prefix".into(),
+        };
+        count_response(sh, &resp);
+        let (k, body) = resp.encode();
+        return send_frame(writer, inj, k, body);
+    };
+    {
+        let st = pending.lock().unwrap();
+        if st.ids.contains(&request_id) {
+            drop(st);
+            let resp = ResponseMsg::Error {
+                code: ERR_DUPLICATE_ID,
+                message: format!(
+                    "request id {request_id} is already in flight"
+                ),
+            };
+            return send_v2(writer, sh, inj, request_id, &resp);
+        }
+        if st.by_job.len() >= sh.max_inflight {
+            drop(st);
+            // structured backpressure: the window is full, nothing was
+            // admitted, and every other in-flight request is unharmed
+            sh.counters.frames_error.fetch_add(1, Ordering::SeqCst);
+            let (k, body) = protocol::encode_v2_busy(
+                request_id,
+                sh.max_inflight as u32,
+            );
+            return send_frame(writer, inj, k, body);
+        }
+    }
+    let msg = match RequestMsg::decode(inner_kind, inner) {
+        Ok(m) => m,
+        Err(e) => {
+            let resp = ResponseMsg::Error {
+                code: ERR_BAD_FRAME,
+                message: format!("{e:#}"),
+            };
+            return send_v2(writer, sh, inj, request_id, &resp);
+        }
+    };
+    // Ping/Stats never queue — answer on the reader thread, as v1 does
+    match &msg {
+        RequestMsg::Ping => {
+            return send_v2(writer, sh, inj, request_id, &ResponseMsg::Pong)
+        }
+        RequestMsg::Stats => {
+            let resp = ResponseMsg::StatsJson(stats_json(sh));
+            return send_v2(writer, sh, inj, request_id, &resp);
+        }
+        _ => {}
+    }
+    let cache_key = sh.cache.as_ref().and_then(|_| {
+        CacheKey::for_request(&msg, sh.quality, sh.restart_interval)
+    });
+    if let (Some(cache), Some(key)) = (&sh.cache, cache_key) {
+        if let Some(hit) = cache.get(&key) {
+            let resp = ResponseMsg::Compressed {
+                lane: hit.lane,
+                psnr_db: hit.psnr_db,
+                container: (*hit.container).clone(),
+            };
+            return send_v2(writer, sh, inj, request_id, &resp);
+        }
+    }
+    // reserve the pending slot inside the build closure — the job id
+    // only exists there, and the entry must be visible before the queue
+    // can hand the job to a worker (a fast completion would otherwise
+    // race the insert and get dropped as a stale reply)
+    let mut reserved = None;
+    let submitted = sh.service.submit_with_reply(
+        |id| {
+            let mut st = pending.lock().unwrap();
+            st.ids.insert(request_id);
+            st.by_job.insert(
+                id,
+                Pending {
+                    request_id,
+                    cache_key,
+                    deadline: Instant::now() + sh.job_timeout,
+                },
+            );
+            reserved = Some(id);
+            request_for(id, msg)
+        },
+        tx.clone(),
+    );
+    if let Err(e) = submitted {
+        if let Some(id) = reserved {
+            pending.lock().unwrap().take_job(id);
+        }
+        let message = format!("{e:#}");
+        let resp = if message.contains("queue full") {
+            // same shedding policy as v1: a rejected compress becomes a
+            // reduced-quality inline result when --degrade is on
+            degrade_if_overloaded(
+                sh,
+                inner_kind,
+                inner,
+                ResponseMsg::Overloaded,
+            )
+        } else {
+            ResponseMsg::Error {
+                code: ERR_JOB_FAILED,
+                message,
+            }
+        };
+        return send_v2(writer, sh, inj, request_id, &resp);
+    }
+    Ok(())
+}
+
+/// Build the coordinator request for an admitted (non-inline) v2
+/// message.
+fn request_for(id: u64, msg: RequestMsg) -> Request {
+    match msg {
+        RequestMsg::CompressGray {
+            image,
+            variant,
+            lane,
+            want_psnr,
+        } => {
+            let req = Request::compress(id, image, variant, lane);
+            if want_psnr {
+                req
+            } else {
+                req.no_psnr()
+            }
+        }
+        RequestMsg::CompressColor {
+            image,
+            variant,
+            lane,
+            subsampling,
+            want_psnr,
+        } => {
+            let req = Request::compress_color(
+                id,
+                image,
+                variant,
+                lane,
+                subsampling,
+            );
+            if want_psnr {
+                req
+            } else {
+                req.no_psnr()
+            }
+        }
+        RequestMsg::Decode { container, lane } => {
+            Request::decode(id, container, lane)
+        }
+        RequestMsg::DecodeSalvage { container, lane } => {
+            Request::decode_salvage(id, container, lane)
+        }
+        RequestMsg::Histeq { image, lane } => {
+            Request::histeq(id, image, lane)
+        }
+        RequestMsg::Ping | RequestMsg::Stats => {
+            unreachable!("inline kinds are answered before submission")
+        }
+    }
+}
+
+/// Drain coordinator completions for one connection, in completion
+/// order, until the reader has exited *and* the last in-flight job has
+/// replied (channel disconnect). Also enforces per-job deadlines on the
+/// recv tick: an expired entry answers a timeout error, and its late
+/// reply — the worker finishes regardless — is dropped on arrival.
+fn drain_loop(
+    writer: &Mutex<impl Write>,
+    pending: &Mutex<PendingState>,
+    rx: mpsc::Receiver<Response>,
+    sh: &Shared,
+    inj: Option<&FaultInjector>,
+) {
+    loop {
+        match rx.recv_timeout(sh.read_timeout) {
+            Ok(resp) => {
+                let Some(p) = pending.lock().unwrap().take_job(resp.id)
+                else {
+                    // deadline fired first; the timeout error frame
+                    // already went out under this request id
+                    continue;
+                };
+                let msg = job_response_msg(resp);
+                if let (Some(cache), Some(key)) = (&sh.cache, p.cache_key)
+                {
+                    if let ResponseMsg::Compressed {
+                        lane,
+                        psnr_db,
+                        container,
+                    } = &msg
+                    {
+                        cache.insert(
+                            key,
+                            CachedReply {
+                                lane: *lane,
+                                psnr_db: *psnr_db,
+                                container: Arc::new(container.clone()),
+                            },
+                        );
+                    }
+                }
+                // a dead socket is the reader's problem to notice; the
+                // drainer keeps consuming so workers never block
+                let _ = send_v2(writer, sh, inj, p.request_id, &msg);
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                let expired =
+                    pending.lock().unwrap().take_expired(Instant::now());
+                for p in expired {
+                    let resp = ResponseMsg::Error {
+                        code: ERR_JOB_TIMEOUT,
+                        message: format!(
+                            "job exceeded the {} ms serve timeout",
+                            sh.job_timeout.as_millis()
+                        ),
+                    };
+                    let _ =
+                        send_v2(writer, sh, inj, p.request_id, &resp);
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => return,
+        }
+    }
+}
+
+/// Count, wrap, and write one v2 response under the shared writer.
+fn send_v2(
+    writer: &Mutex<impl Write>,
+    sh: &Shared,
+    inj: Option<&FaultInjector>,
+    request_id: u64,
+    msg: &ResponseMsg,
+) -> Result<()> {
+    count_response(sh, msg);
+    let (kind, body) = protocol::encode_v2_response(request_id, msg);
+    send_frame(writer, inj, kind, body)
+}
+
+/// Apply outbound chaos (bit-flips happen after encoding — and after
+/// any cache insert, so stored bytes stay pristine) and write one frame
+/// atomically under the writer mutex.
+fn send_frame(
+    writer: &Mutex<impl Write>,
+    inj: Option<&FaultInjector>,
+    kind: u8,
+    mut body: Vec<u8>,
+) -> Result<()> {
+    if let Some(f) = inj {
+        // corrupt the encoded payload, not the framing, so the client
+        // sees a well-formed frame carrying a damaged container — the
+        // hardest case to detect
+        f.flip_bit(&mut body);
+    }
+    let mut w = writer.lock().unwrap();
+    framing::write_frame(&mut *w, kind, &body)
+}
+
+/// Response-frame counter accounting, shared by the v1 and v2 paths.
+fn count_response(sh: &Shared, resp: &ResponseMsg) {
+    let ctr = match resp {
+        ResponseMsg::Error { .. } | ResponseMsg::Overloaded => {
+            &sh.counters.frames_error
+        }
+        ResponseMsg::Degraded { .. } => {
+            sh.counters.degraded.fetch_add(1, Ordering::SeqCst);
+            &sh.counters.frames_ok
+        }
+        _ => &sh.counters.frames_ok,
+    };
+    ctr.fetch_add(1, Ordering::SeqCst);
+}
+
+/// Turn one v1 request frame into one response frame. Never panics:
+/// every failure path is a structured frame.
 fn process(sh: &Shared, kind: u8, payload: &[u8]) -> ResponseMsg {
     let msg = match RequestMsg::decode(kind, payload) {
         Ok(m) => m,
@@ -153,7 +531,19 @@ fn process(sh: &Shared, kind: u8, payload: &[u8]) -> ResponseMsg {
             }
         }
     };
-    match msg {
+    let cache_key = sh.cache.as_ref().and_then(|_| {
+        CacheKey::for_request(&msg, sh.quality, sh.restart_interval)
+    });
+    if let (Some(cache), Some(key)) = (&sh.cache, cache_key) {
+        if let Some(hit) = cache.get(&key) {
+            return ResponseMsg::Compressed {
+                lane: hit.lane,
+                psnr_db: hit.psnr_db,
+                container: (*hit.container).clone(),
+            };
+        }
+    }
+    let resp = match msg {
         RequestMsg::Ping => ResponseMsg::Pong,
         RequestMsg::Stats => ResponseMsg::StatsJson(stats_json(sh)),
         RequestMsg::CompressGray {
@@ -194,7 +584,27 @@ fn process(sh: &Shared, kind: u8, payload: &[u8]) -> ResponseMsg {
         RequestMsg::Histeq { image, lane } => {
             submit_and_wait(sh, |svc| svc.histeq(image, lane))
         }
+    };
+    // only fresh full-quality results are cached; Degraded replies used
+    // a different quality and must never shadow the real bytes
+    if let (Some(cache), Some(key)) = (&sh.cache, cache_key) {
+        if let ResponseMsg::Compressed {
+            lane,
+            psnr_db,
+            container,
+        } = &resp
+        {
+            cache.insert(
+                key,
+                CachedReply {
+                    lane: *lane,
+                    psnr_db: *psnr_db,
+                    container: Arc::new(container.clone()),
+                },
+            );
+        }
     }
+    resp
 }
 
 /// Load shedding: an Overloaded answer to a compress request becomes a
@@ -327,6 +737,12 @@ fn submit_and_wait(
             ),
         };
     };
+    job_response_msg(resp)
+}
+
+/// Map a completed coordinator response to its wire shape — shared by
+/// the closed-loop (v1) and drainer (v2) paths.
+fn job_response_msg(resp: Response) -> ResponseMsg {
     match resp.result {
         Ok(out) => output_msg(resp.lane, out),
         Err(e) => {
@@ -398,7 +814,7 @@ fn output_msg(lane: Lane, out: JobOutput) -> ResponseMsg {
 fn stats_json(sh: &Shared) -> String {
     let s = sh.service.stats();
     let c = &sh.counters;
-    Json::obj(vec![
+    let mut fields = vec![
         ("submitted", Json::num(s.submitted as f64)),
         ("queue_depth", s.queue_depth.into()),
         ("queue_wait_ms_mean", Json::num(s.queue_wait.1)),
@@ -446,6 +862,14 @@ fn stats_json(sh: &Shared) -> String {
             "segments_concealed_total",
             Json::num(s.segments_concealed_total as f64),
         ),
-    ])
-    .to_string()
+    ];
+    if let Some(cache) = &sh.cache {
+        let cs = cache.stats();
+        fields.push(("cache_hits", Json::num(cs.hits as f64)));
+        fields.push(("cache_misses", Json::num(cs.misses as f64)));
+        fields.push(("cache_evictions", Json::num(cs.evictions as f64)));
+        fields.push(("cache_entries", cs.entries.into()));
+        fields.push(("cache_bytes", cs.bytes.into()));
+    }
+    Json::obj(fields).to_string()
 }

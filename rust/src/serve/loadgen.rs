@@ -1,13 +1,24 @@
-//! Closed-loop load generator for the TCP front-end: N concurrent
-//! clients, each issuing back-to-back requests over its own connection,
-//! with exact (sorted-sample) latency percentiles.
+//! Load generator for the TCP front-end: N concurrent clients, each
+//! over its own connection, with exact (sorted-sample) latency
+//! percentiles. Closed-loop by default; [`LoadSpec::pipeline`] ≥ 2
+//! switches each client to a [`MuxClient`] keeping that many requests
+//! in flight (protocol v2), which is what actually measures server
+//! throughput instead of round-trip latency. [`LoadSpec::addrs`]
+//! spreads clients round-robin over a shard group, and
+//! [`LoadSpec::mix`] picks the image workload — one image per client
+//! (the historical shape), unique per request (cache-cold), or a small
+//! shared pool (cache-hot).
 //!
 //! Shared by the `ablation_serve_load` / `ablation_chaos` bench targets
 //! and the `loadgen` CLI subcommand. Percentiles here are computed from
 //! the full sample vector rather than
 //! [`crate::metrics::stats::LatencyHistogram`]'s log buckets — a load
 //! report is small enough to keep every sample, and tail latency is the
-//! headline number, so approximation is the wrong trade.
+//! headline number, so approximation is the wrong trade. In chaos mode
+//! the percentile samples use [`RetryClient::last_service_time`] — the
+//! wire time of the attempt that answered — not the caller's total
+//! elapsed time, which would conflate server latency with connect,
+//! backoff, and failed-attempt recovery.
 //!
 //! With [`LoadSpec::faults`] set, the generator becomes the chaos-soak
 //! harness: each client switches to a [`RetryClient`] (backoff + circuit
@@ -28,26 +39,56 @@
 //! Violations are tallied in [`LoadReport::invariant_violations`]; the
 //! CI chaos job fails when the count is nonzero.
 
+use std::collections::HashMap;
 use std::net::SocketAddr;
 use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::coordinator::Lane;
 use crate::dct::Variant;
 use crate::image::synthetic;
 use crate::util::json::Json;
 
-use super::client::{Client, RequestError, RetryClient, RetryPolicy};
+use super::client::{
+    Client, MuxClient, MuxEvent, RequestError, RetryClient, RetryPolicy,
+};
 use super::protocol::{
     RequestMsg, ResponseMsg, ERR_DECODE_CORRUPT, ERR_DECODE_TRUNCATED,
     ERR_JOB_TIMEOUT, ERR_WORKER_PANIC,
 };
 
+/// Which image(s) the clients compress — the cache-hit-ratio knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ImageMix {
+    /// One image per client (seed = client index + 1) — the historical
+    /// closed-loop shape; repeat requests hit the cache after each
+    /// client's first.
+    PerClient,
+    /// A fresh image for every request: every compress is cold, the
+    /// cache never hits.
+    Unique,
+    /// All clients draw round-robin from a shared pool of `k` images:
+    /// after at most `k` cold compressions per shard the steady state
+    /// is (nearly) all hits — `Shared(1)` gives a ≥90% hit ratio on
+    /// any run of ≥10 requests.
+    Shared(usize),
+}
+
 /// One load run's shape.
 #[derive(Clone, Debug)]
 pub struct LoadSpec {
     pub addr: SocketAddr,
+    /// Shard addresses; empty means "just [`LoadSpec::addr`]". Client
+    /// `i` connects to `addrs[i % addrs.len()]`, spreading a multi-
+    /// client run over every shard.
+    pub addrs: Vec<SocketAddr>,
+    /// In-flight requests each client keeps pipelined over its one
+    /// connection (protocol v2). `0` or `1` is the classic closed
+    /// loop on the v1 protocol.
+    pub pipeline: usize,
+    /// Image workload shape (cache-hit-ratio knob).
+    pub mix: ImageMix,
     /// Concurrent connections.
     pub clients: usize,
     /// Requests each client issues back-to-back.
@@ -74,6 +115,9 @@ impl LoadSpec {
     pub fn new(addr: SocketAddr) -> LoadSpec {
         LoadSpec {
             addr,
+            addrs: Vec::new(),
+            pipeline: 0,
+            mix: ImageMix::PerClient,
             clients: 4,
             requests_per_client: 16,
             size: 128,
@@ -84,6 +128,15 @@ impl LoadSpec {
             faults: false,
             deadline: Duration::from_secs(10),
             seed: 1,
+        }
+    }
+
+    /// The shard a given client connects to.
+    pub fn addr_for(&self, ci: usize) -> SocketAddr {
+        if self.addrs.is_empty() {
+            self.addr
+        } else {
+            self.addrs[ci % self.addrs.len()]
         }
     }
 }
@@ -238,9 +291,27 @@ fn classify_code(code: u16, errors: &mut ErrorCounts) {
     }
 }
 
+/// The image seed for client `ci`'s `ri`-th request under the spec's
+/// [`ImageMix`].
+fn mix_seed(spec: &LoadSpec, ci: usize, ri: usize) -> u64 {
+    match spec.mix {
+        ImageMix::PerClient => ci as u64 + 1,
+        // offset keeps unique draws disjoint from the per-client and
+        // shared-pool seed ranges
+        ImageMix::Unique => {
+            0x5EED_0000 + (ci * spec.requests_per_client + ri) as u64
+        }
+        ImageMix::Shared(k) => (ri % k.max(1)) as u64 + 1,
+    }
+}
+
 /// Build the one request a client repeats for the whole run.
 fn build_request(spec: &LoadSpec, ci: usize) -> RequestMsg {
-    let seed = ci as u64 + 1;
+    build_request_seeded(spec, ci as u64 + 1)
+}
+
+/// Build a request around the synthetic image drawn from `seed`.
+fn build_request_seeded(spec: &LoadSpec, seed: u64) -> RequestMsg {
     if spec.color {
         RequestMsg::CompressColor {
             image: synthetic::lena_like_rgb(spec.size, spec.size, seed),
@@ -321,16 +392,27 @@ fn verify_container(spec: &LoadSpec, bytes: &[u8]) -> bool {
 }
 
 fn client_loop(spec: &LoadSpec, ci: usize) -> Result<ClientOut> {
-    let mut client = Client::connect(spec.addr)
+    let mut client = Client::connect(spec.addr_for(ci))
         .with_context(|| format!("loadgen client {ci}"))?;
     // build the request once outside the timed loop — the generator
     // measures the server, not synthetic-image synthesis
-    let msg = build_request(spec, ci);
+    let base = build_request(spec, ci);
     let mut out = ClientOut::default();
     for i in 0..spec.requests_per_client {
+        let built;
+        let msg: &RequestMsg = match spec.mix {
+            ImageMix::PerClient => &base,
+            _ => {
+                // varying mixes synthesize per request — still outside
+                // the timed section
+                built =
+                    build_request_seeded(spec, mix_seed(spec, ci, i));
+                &built
+            }
+        };
         let t = Instant::now();
         let resp = client
-            .request(&msg)
+            .request(msg)
             .with_context(|| format!("client {ci} request {i}"))?;
         let ms = t.elapsed().as_secs_f64() * 1e3;
         match resp {
@@ -359,31 +441,46 @@ fn chaos_client_loop(spec: &LoadSpec, ci: usize) -> ClientOut {
         ..RetryPolicy::default()
     };
     let budget = policy.total_budget();
-    let mut client = RetryClient::new(spec.addr, policy);
-    let msg = build_request(spec, ci);
+    let mut client = RetryClient::new(spec.addr_for(ci), policy);
+    let base = build_request(spec, ci);
     let mut out = ClientOut::default();
-    // first intact container; later successes must match it bit-exactly
-    // (same request, deterministic pipeline), or a bit-flip got through
-    let mut reference: Option<Vec<u8>> = None;
-    for _ in 0..spec.requests_per_client {
+    // first intact container per image seed; later successes for the
+    // same seed must match it bit-exactly (same request, deterministic
+    // pipeline — cached or not), or a bit-flip got through
+    let mut references: HashMap<u64, Vec<u8>> = HashMap::new();
+    for i in 0..spec.requests_per_client {
+        let seed = mix_seed(spec, ci, i);
+        let built;
+        let msg: &RequestMsg = match spec.mix {
+            ImageMix::PerClient => &base,
+            _ => {
+                built = build_request_seeded(spec, seed);
+                &built
+            }
+        };
         let t = Instant::now();
-        let resp = client.request(&msg);
+        let resp = client.request(msg);
         let elapsed = t.elapsed();
         if elapsed > budget {
             out.violations += 1;
         }
         match resp {
             Ok(ResponseMsg::Compressed { container, .. }) => {
+                let reference = references.get(&seed);
                 let intact = verify_container(spec, &container)
                     && reference
-                        .as_deref()
-                        .map_or(true, |r| r == container.as_slice());
+                        .map_or(true, |r| *r == container);
                 if intact {
+                    // sample the answering attempt's wire time, not the
+                    // total elapsed (which absorbs connects + backoff)
+                    let service = client
+                        .last_service_time()
+                        .unwrap_or(elapsed);
                     if reference.is_none() {
-                        reference = Some(container);
+                        references.insert(seed, container);
                     }
                     out.latencies_ms
-                        .push(elapsed.as_secs_f64() * 1e3);
+                        .push(service.as_secs_f64() * 1e3);
                     out.ok += 1;
                 } else {
                     match salvage_check(spec, &container) {
@@ -444,18 +541,265 @@ fn chaos_client_loop(spec: &LoadSpec, ci: usize) -> ClientOut {
     out
 }
 
-/// Run one closed-loop load test against a live server.
+/// Pipelined (protocol v2) client: keep `spec.pipeline` requests in
+/// flight, match completions by request id, fail fast on transport
+/// errors (the chaos-tolerant variant is [`chaos_mux_loop`]).
+///
+/// Latency samples span send → completion, so under a deep window they
+/// include server-side queueing — that is the point: the closed-loop
+/// sweep measures round trips, this one measures the server's ability
+/// to overlap work.
+fn mux_client_loop(spec: &LoadSpec, ci: usize) -> Result<ClientOut> {
+    let depth = spec.pipeline.max(2);
+    let mut client = MuxClient::connect(spec.addr_for(ci))
+        .with_context(|| format!("loadgen mux client {ci}"))?
+        .with_deadline(spec.deadline);
+    let mut out = ClientOut::default();
+    let mut inflight: HashMap<u64, Instant> = HashMap::new();
+    let total = spec.requests_per_client;
+    let mut sent = 0usize;
+    while sent < total || !inflight.is_empty() {
+        while sent < total && inflight.len() < depth {
+            let msg =
+                build_request_seeded(spec, mix_seed(spec, ci, sent));
+            let id = client
+                .send(&msg)
+                .with_context(|| format!("client {ci} send {sent}"))?;
+            inflight.insert(id, Instant::now());
+            sent += 1;
+        }
+        let event = client
+            .recv()
+            .with_context(|| format!("client {ci} recv"))?;
+        match event {
+            MuxEvent::Response { request_id, msg } => {
+                let Some(t) = inflight.remove(&request_id) else {
+                    bail!(
+                        "client {ci}: response for unknown request id \
+                         {request_id}"
+                    );
+                };
+                let ms = t.elapsed().as_secs_f64() * 1e3;
+                match msg {
+                    ResponseMsg::Compressed { .. } => {
+                        out.latencies_ms.push(ms);
+                        out.ok += 1;
+                    }
+                    ResponseMsg::Degraded { .. } => out.degraded += 1,
+                    ResponseMsg::Overloaded => out.overloaded += 1,
+                    ResponseMsg::Error { code, .. } => {
+                        out.failed += 1;
+                        classify_code(code, &mut out.errors);
+                    }
+                    _ => out.failed += 1,
+                }
+            }
+            MuxEvent::Busy { request_id, .. } => {
+                // nothing ran; the slot is free again immediately
+                inflight.remove(&request_id);
+                out.overloaded += 1;
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Write off every in-flight request on a dead connection.
+fn write_off_pending(
+    pending: &mut HashMap<u64, (u64, Instant)>,
+    out: &mut ClientOut,
+    done: &mut usize,
+    timeouts: bool,
+) {
+    for _ in pending.drain() {
+        out.failed += 1;
+        if timeouts {
+            out.errors.timeouts += 1;
+        } else {
+            out.errors.connect += 1;
+        }
+        *done += 1;
+    }
+}
+
+/// Chaos-tolerant pipelined client: reconnects on transport errors
+/// (writing off in-flight requests), classifies every completion, and
+/// checks the bit-exactness/salvage invariants per image seed — a
+/// cached reply that survived corruption must still never count as
+/// success.
+fn chaos_mux_loop(spec: &LoadSpec, ci: usize) -> ClientOut {
+    let addr = spec.addr_for(ci);
+    let depth = spec.pipeline.max(2);
+    let total = spec.requests_per_client;
+    let mut out = ClientOut::default();
+    let mut references: HashMap<u64, Vec<u8>> = HashMap::new();
+    // request id -> (image seed, send time)
+    let mut pending: HashMap<u64, (u64, Instant)> = HashMap::new();
+    let mut client: Option<MuxClient> = None;
+    let mut connected_once = false;
+    let mut sent = 0usize;
+    let mut done = 0usize;
+    'outer: while done < total {
+        let c = match client.as_mut() {
+            Some(c) => c,
+            None => {
+                match MuxClient::connect_timeout(
+                    &addr,
+                    Duration::from_secs(2),
+                ) {
+                    Ok(c) => {
+                        // reconnects (not the first connect) count as
+                        // retries in the report
+                        if connected_once {
+                            out.retries += 1;
+                        }
+                        connected_once = true;
+                        client = Some(c.with_deadline(spec.deadline));
+                        client.as_mut().expect("just connected")
+                    }
+                    Err(_) => {
+                        // a dead shard consumes one request slot per
+                        // failed connect so the soak always terminates
+                        if sent < total {
+                            sent += 1;
+                        }
+                        out.failed += 1;
+                        out.errors.connect += 1;
+                        done += 1;
+                        std::thread::sleep(Duration::from_millis(50));
+                        continue;
+                    }
+                }
+            }
+        };
+        while sent < total && pending.len() < depth {
+            let seed = mix_seed(spec, ci, sent);
+            let msg = build_request_seeded(spec, seed);
+            match c.send(&msg) {
+                Ok(id) => {
+                    pending.insert(id, (seed, Instant::now()));
+                    sent += 1;
+                }
+                Err(_) => {
+                    write_off_pending(
+                        &mut pending,
+                        &mut out,
+                        &mut done,
+                        false,
+                    );
+                    client = None;
+                    continue 'outer;
+                }
+            }
+        }
+        if pending.is_empty() {
+            continue;
+        }
+        match c.recv() {
+            Ok(MuxEvent::Response { request_id, msg }) => {
+                let Some((seed, t0)) = pending.remove(&request_id)
+                else {
+                    // an id this client never sent (or already wrote
+                    // off): a correlation bug on the server
+                    out.violations += 1;
+                    continue;
+                };
+                done += 1;
+                let ms = t0.elapsed().as_secs_f64() * 1e3;
+                match msg {
+                    ResponseMsg::Compressed { container, .. } => {
+                        let reference = references.get(&seed);
+                        let intact = verify_container(spec, &container)
+                            && reference
+                                .map_or(true, |r| *r == container);
+                        if intact {
+                            if reference.is_none() {
+                                references.insert(seed, container);
+                            }
+                            out.latencies_ms.push(ms);
+                            out.ok += 1;
+                        } else {
+                            match salvage_check(spec, &container) {
+                                SalvageVerdict::Recovered => {
+                                    out.errors.salvaged += 1;
+                                }
+                                SalvageVerdict::ClaimedClean => {
+                                    out.violations += 1;
+                                    out.failed += 1;
+                                    out.errors.decode += 1;
+                                }
+                                SalvageVerdict::Unrecoverable => {
+                                    out.failed += 1;
+                                    out.errors.decode += 1;
+                                }
+                            }
+                        }
+                    }
+                    ResponseMsg::Degraded { container, .. } => {
+                        if verify_container(spec, &container) {
+                            out.degraded += 1;
+                        } else {
+                            out.failed += 1;
+                            out.errors.decode += 1;
+                        }
+                    }
+                    ResponseMsg::Overloaded => out.overloaded += 1,
+                    ResponseMsg::Error { code, .. } => {
+                        out.failed += 1;
+                        classify_code(code, &mut out.errors);
+                    }
+                    _ => out.failed += 1,
+                }
+            }
+            Ok(MuxEvent::Busy { request_id, .. }) => {
+                if pending.remove(&request_id).is_some() {
+                    out.overloaded += 1;
+                    done += 1;
+                }
+            }
+            Err(RequestError::Timeout(_)) => {
+                // no frame at all within the deadline: everything in
+                // flight is written off as timed out
+                write_off_pending(&mut pending, &mut out, &mut done, true);
+                client = None;
+            }
+            Err(RequestError::Malformed(_)) => {
+                // an undecodable frame has no id to correlate; the
+                // stream is unusable and in-flight attribution is lost
+                for _ in pending.drain() {
+                    out.failed += 1;
+                    out.errors.decode += 1;
+                    done += 1;
+                }
+                client = None;
+            }
+            Err(_) => {
+                write_off_pending(
+                    &mut pending,
+                    &mut out,
+                    &mut done,
+                    false,
+                );
+                client = None;
+            }
+        }
+    }
+    out
+}
+
+/// Run one load test against a live server (closed-loop, or pipelined
+/// when [`LoadSpec::pipeline`] ≥ 2).
 pub fn run_load(spec: &LoadSpec) -> Result<LoadReport> {
+    let pipelined = spec.pipeline >= 2;
     let t0 = Instant::now();
     let outs: Vec<Result<ClientOut>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..spec.clients)
             .map(|ci| {
-                s.spawn(move || {
-                    if spec.faults {
-                        Ok(chaos_client_loop(spec, ci))
-                    } else {
-                        client_loop(spec, ci)
-                    }
+                s.spawn(move || match (spec.faults, pipelined) {
+                    (true, true) => Ok(chaos_mux_loop(spec, ci)),
+                    (true, false) => Ok(chaos_client_loop(spec, ci)),
+                    (false, true) => mux_client_loop(spec, ci),
+                    (false, false) => client_loop(spec, ci),
                 })
             })
             .collect();

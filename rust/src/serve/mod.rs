@@ -27,18 +27,33 @@
 //! with `--degrade` a queue-rejected compress request is served a
 //! reduced-quality `Degraded` reply instead of a bare refusal.
 //!
+//! Since protocol v2 the same socket can also pipeline: a v2 frame
+//! wraps any v1 request with a client-assigned `request_id`, the server
+//! fans admitted jobs out to the coordinator, and a per-connection
+//! drainer writes responses back in *completion order*, each echoing
+//! its id ([`client::MuxClient`] is the matching window-keeping
+//! client). Admission past [`ServeConfig::max_inflight`] answers a
+//! structured Busy frame; v1 clients keep working bit-for-bit because
+//! negotiation is per frame via the kind byte. Two scaling layers ride
+//! on top: a content-addressed response [`cache`] (sharded LRU over the
+//! exact encoded container bytes, keyed on pixels digest + every encode
+//! knob) and [`server::ShardGroup`] — `--shards N` shared-nothing
+//! listeners on consecutive ports, spread over by
+//! [`client::ShardedClient`].
+//!
 //! The client side matches the failure model: [`Client`] is the plain
 //! one-connection client, [`RetryClient`] adds reconnects, exponential
 //! backoff with deterministic jitter, and a [`CircuitBreaker`] —
 //! retrying only transient failures ([`RequestError::retryable`]).
 //! The [`loadgen`] module is the measurement half: concurrent
-//! closed-loop clients with exact latency percentiles driving the
-//! `ablation_serve_load` bench, and — with [`LoadSpec::faults`] — the
-//! chaos-soak harness behind `ablation_chaos`. Seeded fault injection
-//! itself (slow/short socket I/O, disconnects, bit-flips) lives in
-//! [`crate::faults`] and is wired in through
-//! [`server::ServeConfig::faults`].
+//! closed-loop or pipelined ([`LoadSpec::pipeline`]) clients with exact
+//! latency percentiles driving the `ablation_serve_load` bench, and —
+//! with [`LoadSpec::faults`] — the chaos-soak harness behind
+//! `ablation_chaos`. Seeded fault injection itself (slow/short socket
+//! I/O, disconnects, bit-flips) lives in [`crate::faults`] and is wired
+//! in through [`server::ServeConfig::faults`].
 
+pub mod cache;
 pub mod client;
 mod conn;
 pub mod framing;
@@ -46,10 +61,12 @@ pub mod loadgen;
 pub mod protocol;
 pub mod server;
 
+pub use cache::{CacheKey, CacheStats, ResponseCache};
 pub use client::{
-    CircuitBreaker, Client, Compressed, RequestError, RetryClient,
-    RetryPolicy, SalvageSummary,
+    CircuitBreaker, Client, Compressed, MuxClient, MuxEvent,
+    RequestError, RetryClient, RetryPolicy, SalvageSummary,
+    ShardedClient,
 };
-pub use loadgen::{run_load, ErrorCounts, LoadReport, LoadSpec};
+pub use loadgen::{run_load, ErrorCounts, ImageMix, LoadReport, LoadSpec};
 pub use protocol::{ImagePayload, RequestMsg, ResponseMsg};
-pub use server::{ServeConfig, TcpServer};
+pub use server::{ServeConfig, ShardGroup, TcpServer};

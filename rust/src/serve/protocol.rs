@@ -42,6 +42,24 @@ pub const REQ_PING: u8 = 5;
 pub const REQ_STATS: u8 = 6;
 pub const REQ_DECODE_SALVAGE: u8 = 7;
 
+// v2 (multiplexed) wrapper kinds: the payload carries a client-assigned
+// u64 request id followed by a whole v1 message (kind byte + payload).
+// Negotiation is per-frame via the kind byte, so v1 and v2 traffic can
+// share one connection and a pure-v1 client never sees a v2 byte.
+
+/// A v2 request: `u64 request_id LE | u8 inner kind | inner payload`.
+pub const REQ_V2: u8 = 0x20;
+/// A v2 response echoing the request id, same layout as [`REQ_V2`].
+pub const RESP_V2: u8 = 0x90;
+/// Structured per-connection admission refusal for a v2 request:
+/// `u64 request_id LE | u32 max_inflight LE`. The request was not
+/// admitted; the connection (and every other in-flight request on it)
+/// stays healthy.
+pub const RESP_V2_BUSY: u8 = 0x91;
+
+/// Bytes of the v2 wrapper prefix (request id + inner kind).
+pub const V2_PREFIX_LEN: usize = 9;
+
 pub const RESP_COMPRESSED: u8 = 0x81;
 pub const RESP_IMAGE: u8 = 0x82;
 pub const RESP_PONG: u8 = 0x83;
@@ -57,6 +75,9 @@ pub const RESP_OVERLOADED: u8 = 0xE1;
 pub const ERR_BAD_FRAME: u16 = 1;
 /// Unknown request kind byte.
 pub const ERR_UNSUPPORTED: u16 = 2;
+/// A v2 request reused a request id that is still in flight on the
+/// same connection. The original request is unaffected.
+pub const ERR_DUPLICATE_ID: u16 = 3;
 pub const ERR_DECODE_TRUNCATED: u16 = 10;
 pub const ERR_DECODE_BAD_MAGIC: u16 = 11;
 pub const ERR_DECODE_BAD_HEADER: u16 = 12;
@@ -600,6 +621,76 @@ impl ResponseMsg {
     }
 }
 
+// -- v2 (multiplexed) wrappers ---------------------------------------------
+
+/// Encode a v2 request frame: the inner v1 encoding prefixed with the
+/// client-assigned request id and the inner kind byte.
+pub fn encode_v2_request(
+    request_id: u64,
+    msg: &RequestMsg,
+) -> (u8, Vec<u8>) {
+    let (inner_kind, inner) = msg.encode();
+    let mut p = Vec::with_capacity(V2_PREFIX_LEN + inner.len());
+    p.extend_from_slice(&request_id.to_le_bytes());
+    p.push(inner_kind);
+    p.extend_from_slice(&inner);
+    (REQ_V2, p)
+}
+
+/// Split a v2 payload into `(request_id, inner kind, inner payload)`
+/// without decoding the inner message — the server uses this to learn
+/// the id to echo even when the inner decode later fails.
+pub fn v2_prefix(payload: &[u8]) -> Result<(u64, u8, &[u8])> {
+    let mut c = Cur::new(payload);
+    let request_id = c.u64()?;
+    let inner_kind = c.u8()?;
+    Ok((request_id, inner_kind, c.rest()))
+}
+
+/// Decode a v2 request frame to `(request_id, inner message)`.
+pub fn decode_v2_request(payload: &[u8]) -> Result<(u64, RequestMsg)> {
+    let (request_id, inner_kind, inner) = v2_prefix(payload)?;
+    Ok((request_id, RequestMsg::decode(inner_kind, inner)?))
+}
+
+/// Encode a v2 response frame echoing `request_id`.
+pub fn encode_v2_response(
+    request_id: u64,
+    msg: &ResponseMsg,
+) -> (u8, Vec<u8>) {
+    let (inner_kind, inner) = msg.encode();
+    let mut p = Vec::with_capacity(V2_PREFIX_LEN + inner.len());
+    p.extend_from_slice(&request_id.to_le_bytes());
+    p.push(inner_kind);
+    p.extend_from_slice(&inner);
+    (RESP_V2, p)
+}
+
+/// Decode a v2 response frame to `(request_id, inner message)`.
+pub fn decode_v2_response(payload: &[u8]) -> Result<(u64, ResponseMsg)> {
+    let (request_id, inner_kind, inner) = v2_prefix(payload)?;
+    Ok((request_id, ResponseMsg::decode(inner_kind, inner)?))
+}
+
+/// Encode a [`RESP_V2_BUSY`] frame: the refused request id plus the
+/// connection's `max_inflight` cap so the client can right-size its
+/// window.
+pub fn encode_v2_busy(request_id: u64, max_inflight: u32) -> (u8, Vec<u8>) {
+    let mut p = Vec::with_capacity(12);
+    p.extend_from_slice(&request_id.to_le_bytes());
+    p.extend_from_slice(&max_inflight.to_le_bytes());
+    (RESP_V2_BUSY, p)
+}
+
+/// Decode a [`RESP_V2_BUSY`] payload to `(request_id, max_inflight)`.
+pub fn decode_v2_busy(payload: &[u8]) -> Result<(u64, u32)> {
+    let mut c = Cur::new(payload);
+    let request_id = c.u64()?;
+    let max_inflight = c.u32()?;
+    ensure!(c.rest().is_empty(), "trailing bytes after Busy payload");
+    Ok((request_id, max_inflight))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -771,6 +862,39 @@ mod tests {
         p.extend_from_slice(&8u32.to_le_bytes());
         p.extend_from_slice(&[0u8; 63]);
         assert!(RequestMsg::decode(REQ_COMPRESS_GRAY, &p).is_err());
+    }
+
+    #[test]
+    fn v2_wrappers_roundtrip() {
+        let req = RequestMsg::CompressGray {
+            image: synthetic::lena_like(16, 12, 1),
+            variant: Variant::Cordic,
+            lane: Lane::Auto,
+            want_psnr: false,
+        };
+        for id in [0u64, 1, 7, u64::MAX] {
+            let (k, p) = encode_v2_request(id, &req);
+            assert_eq!(k, REQ_V2);
+            let (back_id, back) = decode_v2_request(&p).unwrap();
+            assert_eq!((back_id, back), (id, req.clone()));
+        }
+        let resp = ResponseMsg::Compressed {
+            lane: Lane::Cpu,
+            psnr_db: None,
+            container: vec![5; 20],
+        };
+        let (k, p) = encode_v2_response(u64::MAX, &resp);
+        assert_eq!(k, RESP_V2);
+        let (id, back) = decode_v2_response(&p).unwrap();
+        assert_eq!((id, back), (u64::MAX, resp));
+        let (k, p) = encode_v2_busy(42, 8);
+        assert_eq!(k, RESP_V2_BUSY);
+        assert_eq!(decode_v2_busy(&p).unwrap(), (42, 8));
+        // a short prefix must fail cleanly, never panic
+        for cut in 0..V2_PREFIX_LEN {
+            assert!(v2_prefix(&vec![0u8; cut]).is_err());
+        }
+        assert!(decode_v2_busy(&[1, 2, 3]).is_err());
     }
 
     #[test]

@@ -35,9 +35,13 @@ use crate::faults::{FaultInjector, FaultPlan};
 use crate::log_info;
 use crate::util::threadpool::ThreadPool;
 
+use super::cache::ResponseCache;
 use super::conn;
 use super::framing;
 use super::protocol::ResponseMsg;
+
+/// How many cache shards a [`ResponseCache`] is split into.
+const CACHE_SHARDS: usize = 8;
 
 /// TCP front-end configuration.
 #[derive(Clone, Debug)]
@@ -70,6 +74,15 @@ pub struct ServeConfig {
     /// [`super::protocol::ResponseMsg::Degraded`] result computed
     /// inline on the serial lane, rather than a bare Overloaded frame.
     pub degrade: bool,
+    /// Per-connection cap on in-flight v2 (pipelined) requests. A v2
+    /// frame arriving with the window full is answered with a
+    /// structured Busy frame carrying this cap. v1 traffic is
+    /// unaffected (closed-loop by construction).
+    pub max_inflight: usize,
+    /// Byte budget for the content-addressed response cache; `0` (the
+    /// default) disables caching entirely, keeping library behavior
+    /// bit-identical to previous versions unless opted in.
+    pub cache_bytes: usize,
 }
 
 impl Default for ServeConfig {
@@ -83,6 +96,8 @@ impl Default for ServeConfig {
             job_timeout: Duration::from_secs(30),
             faults: None,
             degrade: false,
+            max_inflight: 32,
+            cache_bytes: 0,
         }
     }
 }
@@ -113,6 +128,12 @@ pub(crate) struct Shared {
     pub faults: Option<Arc<FaultInjector>>,
     pub fault_seq: AtomicU64,
     pub degrade: bool,
+    pub max_inflight: usize,
+    /// Content-addressed response cache; `None` when `cache_bytes` is 0.
+    pub cache: Option<Arc<ResponseCache>>,
+    /// Copies of the service-side encode knobs that go into cache keys.
+    pub quality: u8,
+    pub restart_interval: u16,
 }
 
 /// Decrements the active-connection gauge when a handler exits — by any
@@ -149,6 +170,8 @@ impl TcpServer {
         let listener = TcpListener::bind(addr)
             .with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
+        let (quality, restart_interval) =
+            (svc_cfg.quality, svc_cfg.restart_interval);
         let service = Service::start(svc_cfg)?;
         let shared = Arc::new(Shared {
             service,
@@ -169,6 +192,12 @@ impl TcpServer {
             }),
             fault_seq: AtomicU64::new(0),
             degrade: cfg.degrade,
+            max_inflight: cfg.max_inflight.max(1),
+            cache: (cfg.cache_bytes > 0).then(|| {
+                Arc::new(ResponseCache::new(cfg.cache_bytes, CACHE_SHARDS))
+            }),
+            quality,
+            restart_interval,
         });
         let max_conns = cfg.max_connections.max(1);
         let accept_shared = Arc::clone(&shared);
@@ -273,6 +302,77 @@ fn accept_loop(
     drop(pool);
 }
 
+/// N shared-nothing [`TcpServer`]s, one listener (port-per-shard) each,
+/// every shard owning its own coordinator, workers, and response cache.
+///
+/// std has no portable `SO_REUSEPORT`, so sharding is port-per-shard:
+/// shard `i` binds `base_port + i` (an explicit `:0` base gives every
+/// shard its own ephemeral port instead). Clients spread load with
+/// [`super::client::ShardedClient`]'s round-robin, so there is no
+/// shared accept queue — and no shared anything — between shards.
+pub struct ShardGroup {
+    servers: Vec<TcpServer>,
+}
+
+impl ShardGroup {
+    /// Bind `shards` servers starting at `addr`. Each shard gets its
+    /// own clone of `cfg` with the fault seed decorrelated (shard `i`
+    /// adds `i` odd-constant steps) so chaos runs don't fire identical
+    /// fault schedules in lockstep across shards.
+    pub fn bind(addr: &str, shards: usize, cfg: ServeConfig) -> Result<ShardGroup> {
+        let shards = shards.max(1);
+        let (host, base_port) = split_host_port(addr)?;
+        let mut servers = Vec::with_capacity(shards);
+        for i in 0..shards {
+            let mut shard_cfg = cfg.clone();
+            if let Some(plan) = shard_cfg.faults.as_mut() {
+                plan.seed =
+                    plan.seed.wrapping_add(i as u64 * 0x6C62_272E_07BB_0143);
+            }
+            let shard_addr = if base_port == 0 {
+                format!("{host}:0")
+            } else {
+                let port = base_port
+                    .checked_add(i as u16)
+                    .context("shard port range overflows u16")?;
+                format!("{host}:{port}")
+            };
+            servers.push(TcpServer::bind(&shard_addr, shard_cfg)?);
+        }
+        Ok(ShardGroup { servers })
+    }
+
+    /// Bound address of every shard, in shard order.
+    pub fn addrs(&self) -> Vec<SocketAddr> {
+        self.servers.iter().map(|s| s.local_addr()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.servers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.servers.is_empty()
+    }
+
+    /// Graceful shutdown of every shard, in order.
+    pub fn shutdown(self) {
+        for srv in self.servers {
+            srv.shutdown();
+        }
+    }
+}
+
+fn split_host_port(addr: &str) -> Result<(&str, u16)> {
+    let (host, port) = addr
+        .rsplit_once(':')
+        .with_context(|| format!("address {addr:?} has no port"))?;
+    let port: u16 = port
+        .parse()
+        .with_context(|| format!("bad port in address {addr:?}"))?;
+    Ok((host, port))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,6 +398,27 @@ mod tests {
         // never a panic or a second blocking join
         srv.stop();
         drop(srv); // Drop's stop() is the third call
+    }
+
+    #[test]
+    fn shard_group_binds_distinct_ports() {
+        let group = ShardGroup::bind("127.0.0.1:0", 3, tiny_cfg()).unwrap();
+        let addrs = group.addrs();
+        assert_eq!(addrs.len(), 3);
+        for (i, a) in addrs.iter().enumerate() {
+            for b in &addrs[i + 1..] {
+                assert_ne!(a, b, "shards must not share a listener");
+            }
+        }
+        group.shutdown();
+    }
+
+    #[test]
+    fn split_host_port_parses_and_rejects() {
+        assert_eq!(split_host_port("127.0.0.1:7070").unwrap(), ("127.0.0.1", 7070));
+        assert_eq!(split_host_port("0.0.0.0:0").unwrap(), ("0.0.0.0", 0));
+        assert!(split_host_port("no-port-here").is_err());
+        assert!(split_host_port("host:notaport").is_err());
     }
 
     #[test]

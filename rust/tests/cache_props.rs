@@ -1,0 +1,302 @@
+//! Property tests for the content-addressed response cache: a hit must
+//! return bytes identical to a cold compress for random request draws,
+//! distinct request shapes must never alias, and the byte budget must
+//! hold under a seeded insert/evict fuzz.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cordic_dct::coordinator::{Lane, ServiceConfig};
+use cordic_dct::dct::Variant;
+use cordic_dct::image::synthetic;
+use cordic_dct::image::ycbcr::Subsampling;
+use cordic_dct::serve::cache::CachedReply;
+use cordic_dct::serve::{
+    CacheKey, Client, RequestMsg, ResponseCache, ResponseMsg,
+    ServeConfig, TcpServer,
+};
+
+/// Deterministic xorshift64* PRNG (no dev-dependencies).
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+fn cached_server() -> TcpServer {
+    let cfg = ServeConfig {
+        service: ServiceConfig {
+            workers: 2,
+            queue_capacity: 32,
+            artifact_dir: None,
+            ..Default::default()
+        },
+        max_connections: 4,
+        cache_bytes: 16 * 1024 * 1024,
+        ..Default::default()
+    };
+    TcpServer::bind("127.0.0.1:0", cfg).expect("bind test server")
+}
+
+fn stat_field(stats: &str, key: &str) -> f64 {
+    // the stats frame is flat JSON; a string search keeps the test free
+    // of a JSON parser dependency
+    let needle = format!("\"{key}\":");
+    let at = stats
+        .find(&needle)
+        .unwrap_or_else(|| panic!("no {key} in {stats}"));
+    let rest = &stats[at + needle.len()..];
+    let end = rest
+        .find([',', '}'])
+        .unwrap_or_else(|| panic!("unterminated {key} in {stats}"));
+    rest[..end].trim().parse().expect("numeric stats field")
+}
+
+#[test]
+fn hits_return_bytes_identical_to_the_cold_compress() {
+    let server = cached_server();
+    let mut client = Client::connect(server.local_addr())
+        .unwrap()
+        .with_deadline(Duration::from_secs(30));
+    let mut rng = Rng(0xCAC4E_01);
+    let variants = [Variant::Dct, Variant::Loeffler, Variant::Cordic];
+    let subs =
+        [Subsampling::S444, Subsampling::S422, Subsampling::S420];
+    let mut draws = Vec::new();
+    for _ in 0..6 {
+        let w = 16 + rng.below(32) as usize;
+        let h = 16 + rng.below(32) as usize;
+        let seed = rng.next();
+        let color = rng.below(2) == 1;
+        let variant = variants[rng.below(3) as usize];
+        let msg = if color {
+            RequestMsg::CompressColor {
+                image: synthetic::lena_like_rgb(w, h, seed),
+                variant,
+                lane: Lane::Cpu,
+                subsampling: subs[rng.below(3) as usize],
+                want_psnr: false,
+            }
+        } else {
+            RequestMsg::CompressGray {
+                image: synthetic::lena_like(w, h, seed),
+                variant,
+                lane: Lane::Cpu,
+                want_psnr: false,
+            }
+        };
+        let cold = match client.request(&msg).unwrap() {
+            ResponseMsg::Compressed { container, .. } => container,
+            other => panic!("expected Compressed, got {other:?}"),
+        };
+        assert!(!cold.is_empty());
+        draws.push((msg, cold));
+    }
+    // distinct draws must have produced distinct containers (distinct
+    // keys never alias onto one cached entry)
+    for i in 0..draws.len() {
+        for j in i + 1..draws.len() {
+            assert_ne!(
+                draws[i].1, draws[j].1,
+                "draws {i} and {j} aliased to one container"
+            );
+        }
+    }
+    // replays in shuffled order: every hit bit-identical to its cold run
+    for k in (0..draws.len()).rev() {
+        let (msg, cold) = &draws[k];
+        let hit = match client.request(msg).unwrap() {
+            ResponseMsg::Compressed { container, .. } => container,
+            other => panic!("expected Compressed, got {other:?}"),
+        };
+        assert_eq!(
+            &hit, cold,
+            "draw {k}: cache hit diverged from the cold compress"
+        );
+    }
+    // the stats frame proves these were hits, not recomputes
+    let stats = client.stats_json().unwrap();
+    let hits = stat_field(&stats, "cache_hits");
+    let misses = stat_field(&stats, "cache_misses");
+    assert!(hits >= draws.len() as f64, "{stats}");
+    assert!(misses >= draws.len() as f64, "{stats}");
+    server.shutdown();
+}
+
+#[test]
+fn want_psnr_variants_are_cached_separately() {
+    // the PSNR flag changes the reply (a figure is attached) but not the
+    // container; the key must split on it so a no-psnr hit never
+    // shadows a with-psnr request
+    let server = cached_server();
+    let mut client = Client::connect(server.local_addr())
+        .unwrap()
+        .with_deadline(Duration::from_secs(30));
+    let img = synthetic::lena_like(32, 32, 77);
+    let no_psnr = RequestMsg::CompressGray {
+        image: img.clone(),
+        variant: Variant::Cordic,
+        lane: Lane::Cpu,
+        want_psnr: false,
+    };
+    let with_psnr = RequestMsg::CompressGray {
+        image: img,
+        variant: Variant::Cordic,
+        lane: Lane::Cpu,
+        want_psnr: true,
+    };
+    let (a, b) = match (
+        client.request(&no_psnr).unwrap(),
+        client.request(&with_psnr).unwrap(),
+    ) {
+        (
+            ResponseMsg::Compressed {
+                psnr_db: pa,
+                container: ca,
+                ..
+            },
+            ResponseMsg::Compressed {
+                psnr_db: pb,
+                container: cb,
+                ..
+            },
+        ) => {
+            assert!(pa.is_none());
+            assert!(pb.is_some(), "psnr lost to a cache alias");
+            (ca, cb)
+        }
+        other => panic!("expected two Compressed, got {other:?}"),
+    };
+    assert_eq!(a, b, "the container itself is psnr-independent");
+    // replay the psnr request: the hit must still carry the figure
+    match client.request(&with_psnr).unwrap() {
+        ResponseMsg::Compressed { psnr_db, .. } => {
+            assert!(psnr_db.is_some(), "cached reply dropped the psnr");
+        }
+        other => panic!("expected Compressed, got {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn budget_holds_under_seeded_insert_evict_fuzz() {
+    let mut rng = Rng(0xCAC4E_02);
+    for round in 0..8 {
+        let shards = 1 + rng.below(8) as usize;
+        let budget = 4096 + rng.below(64 * 1024) as usize;
+        let cache = ResponseCache::new(budget, shards);
+        let effective_budget = cache.stats().budget_bytes;
+        // last-written length per key: reinserting a key must replace
+        // its bytes, and a hit must always return the latest insert
+        let mut expected =
+            std::collections::HashMap::<CacheKey, usize>::new();
+        let mut keys = Vec::new();
+        for i in 0..400u64 {
+            let msg = RequestMsg::CompressGray {
+                image: synthetic::lena_like(
+                    8 + (i % 16) as usize,
+                    8,
+                    rng.below(64),
+                ),
+                variant: Variant::Cordic,
+                lane: Lane::Cpu,
+                want_psnr: false,
+            };
+            let key = CacheKey::for_request(&msg, 50, 4).unwrap();
+            // like a real compress, the key fixes the bytes: size is a
+            // pure function of the key, spanning tiny to
+            // oversized-for-a-shard
+            let len =
+                (key.digest % (budget as u64 / 2 + 64)) as usize;
+            cache.insert(
+                key,
+                CachedReply {
+                    lane: Lane::Cpu,
+                    psnr_db: None,
+                    container: Arc::new(vec![key.digest as u8; len]),
+                },
+            );
+            if expected.insert(key, len).is_none() {
+                keys.push(key);
+            }
+            // interleave hits so LRU order churns
+            if rng.below(3) == 0 {
+                let k = keys[rng.below(keys.len() as u64) as usize];
+                if let Some(hit) = cache.get(&k) {
+                    assert_eq!(
+                        hit.container.len(),
+                        expected[&k],
+                        "round {round}: hit returned stale bytes"
+                    );
+                }
+            }
+            let s = cache.stats();
+            assert!(
+                s.bytes <= effective_budget,
+                "round {round} step {i}: {} bytes exceeds the {} \
+                 budget ({s:?})",
+                s.bytes,
+                effective_budget
+            );
+        }
+        let s = cache.stats();
+        assert!(
+            s.hits + s.misses > 0 && s.bytes <= effective_budget,
+            "round {round}: {s:?}"
+        );
+    }
+}
+
+#[test]
+fn same_pixels_different_knobs_never_alias() {
+    // in-process key-level variant of the e2e aliasing test: sweep every
+    // knob dimension with identical pixel content
+    let img = synthetic::lena_like(24, 24, 9);
+    let base = RequestMsg::CompressGray {
+        image: img.clone(),
+        variant: Variant::Cordic,
+        lane: Lane::Cpu,
+        want_psnr: false,
+    };
+    let k = |msg: &RequestMsg, q: u8, ri: u16| {
+        CacheKey::for_request(msg, q, ri).unwrap()
+    };
+    let base_key = k(&base, 50, 4);
+    let mut seen = std::collections::HashSet::new();
+    assert!(seen.insert(base_key));
+    for q in [10u8, 30, 70, 90] {
+        assert!(seen.insert(k(&base, q, 4)), "quality {q} aliased");
+    }
+    for ri in [0u16, 1, 8, 64] {
+        assert!(seen.insert(k(&base, 50, ri)), "restart {ri} aliased");
+    }
+    for variant in [Variant::Dct, Variant::Loeffler, Variant::CordicFxp]
+    {
+        let msg = RequestMsg::CompressGray {
+            image: img.clone(),
+            variant,
+            lane: Lane::Cpu,
+            want_psnr: false,
+        };
+        assert!(seen.insert(k(&msg, 50, 4)), "{variant:?} aliased");
+    }
+    let color = RequestMsg::CompressColor {
+        image: synthetic::lena_like_rgb(24, 24, 9),
+        variant: Variant::Cordic,
+        lane: Lane::Cpu,
+        subsampling: Subsampling::S420,
+        want_psnr: false,
+    };
+    assert!(seen.insert(k(&color, 50, 4)), "color aliased gray");
+}

@@ -1,0 +1,314 @@
+//! End-to-end tests of the pipelined (protocol v2) serve path over real
+//! loopback sockets: many requests in flight on one connection matched
+//! back by request id under fault-randomized completion order, the
+//! duplicate-id and truncated-prefix error paths, window admission
+//! (Busy frames) with slot recycling, and the v1-client-vs-v2-server
+//! byte-compatibility regression.
+
+use std::time::{Duration, Instant};
+
+use cordic_dct::codec::decoder;
+use cordic_dct::coordinator::{Lane, ServiceConfig};
+use cordic_dct::dct::Variant;
+use cordic_dct::faults::FaultPlan;
+use cordic_dct::image::synthetic;
+use cordic_dct::serve::framing::{self, FrameEvent};
+use cordic_dct::serve::protocol::{
+    ERR_BAD_FRAME, ERR_DUPLICATE_ID, REQ_V2, RESP_COMPRESSED,
+    V2_PREFIX_LEN,
+};
+use cordic_dct::serve::{
+    MuxClient, MuxEvent, RequestMsg, ResponseMsg, ServeConfig, TcpServer,
+};
+
+/// A v2-capable test server. `job_faults` arms *worker-side* fault
+/// injection only (latency, panics) — the socket path stays clean so
+/// frames are never corrupted in these tests.
+fn mux_server(
+    workers: usize,
+    max_inflight: usize,
+    cache_bytes: usize,
+    job_faults: Option<&str>,
+) -> TcpServer {
+    let cfg = ServeConfig {
+        service: ServiceConfig {
+            workers,
+            queue_capacity: 32,
+            artifact_dir: None,
+            faults: job_faults
+                .map(|s| FaultPlan::parse(s).expect("fault spec")),
+            ..Default::default()
+        },
+        max_connections: 8,
+        max_inflight,
+        cache_bytes,
+        ..Default::default()
+    };
+    TcpServer::bind("127.0.0.1:0", cfg).expect("bind test server")
+}
+
+fn compress_req(width: usize, height: usize, seed: u64) -> RequestMsg {
+    RequestMsg::CompressGray {
+        image: synthetic::lena_like(width, height, seed),
+        variant: Variant::Cordic,
+        lane: Lane::Cpu,
+        want_psnr: false,
+    }
+}
+
+#[test]
+fn pipelined_responses_match_their_request_ids() {
+    // ~half the jobs take a fault-injected latency hit, so completion
+    // order is decoupled from send order; each response must still land
+    // on its own request id — proven by the decoded geometry, which is
+    // unique per request
+    let server = mux_server(
+        4,
+        32,
+        0,
+        Some("seed=9,latency=0.5,latency-ms=40"),
+    );
+    let mut client = MuxClient::connect(server.local_addr()).unwrap();
+    let n = 8usize;
+    let mut expected = std::collections::HashMap::new();
+    for i in 0..n {
+        let width = 8 * (i + 2); // unique per request
+        let id = client
+            .send(&compress_req(width, 16, i as u64 + 1))
+            .unwrap();
+        expected.insert(id, width);
+    }
+    let mut arrival = Vec::new();
+    for _ in 0..n {
+        match client.recv().unwrap() {
+            MuxEvent::Response { request_id, msg } => {
+                let width = expected
+                    .remove(&request_id)
+                    .unwrap_or_else(|| {
+                        panic!("unknown or repeated id {request_id}")
+                    });
+                let ResponseMsg::Compressed { container, .. } = msg
+                else {
+                    panic!("expected Compressed, got {msg:?}");
+                };
+                let decoded = decoder::decode(&container)
+                    .expect("container decodes");
+                assert_eq!(
+                    decoded.header.width as usize, width,
+                    "response correlated to the wrong request"
+                );
+                arrival.push(request_id);
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert!(expected.is_empty(), "not every request was answered");
+    assert_eq!(arrival.len(), n);
+    server.shutdown();
+}
+
+#[test]
+fn duplicate_inflight_id_answers_structured_error() {
+    // every job sleeps 200 ms, so id 7 is still in flight when its
+    // duplicate arrives; the duplicate answers an inline error frame
+    // under the same id and the original completes normally afterwards
+    let server =
+        mux_server(2, 32, 0, Some("seed=3,latency=1,latency-ms=200"));
+    let mut client = MuxClient::connect(server.local_addr()).unwrap();
+    let msg = compress_req(32, 32, 5);
+    client.send_with_id(7, &msg).unwrap();
+    client.send_with_id(7, &msg).unwrap();
+    match client.recv().unwrap() {
+        MuxEvent::Response { request_id, msg } => {
+            assert_eq!(request_id, 7);
+            let ResponseMsg::Error { code, message } = msg else {
+                panic!("expected the duplicate-id error, got {msg:?}");
+            };
+            assert_eq!(code, ERR_DUPLICATE_ID);
+            assert!(message.contains('7'), "{message}");
+        }
+        other => panic!("unexpected event {other:?}"),
+    }
+    match client.recv().unwrap() {
+        MuxEvent::Response { request_id, msg } => {
+            assert_eq!(request_id, 7);
+            assert!(
+                matches!(msg, ResponseMsg::Compressed { .. }),
+                "original request must still complete, got {msg:?}"
+            );
+        }
+        other => panic!("unexpected event {other:?}"),
+    }
+    // the id is free again once the original completed
+    let id = client.send_with_id(7, &msg);
+    assert!(id.is_ok());
+    match client.recv().unwrap() {
+        MuxEvent::Response { request_id, msg } => {
+            assert_eq!(request_id, 7);
+            assert!(matches!(msg, ResponseMsg::Compressed { .. }));
+        }
+        other => panic!("unexpected event {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn truncated_v2_prefix_answers_unwrapped_bad_frame() {
+    // a v2 frame too short to carry a request id cannot be answered
+    // under one — the error comes back as a plain (unwrapped) v1 error
+    // frame, and the connection survives it
+    let server = mux_server(1, 32, 0, None);
+    let mut client = MuxClient::connect(server.local_addr()).unwrap();
+    {
+        let mut raw = client.stream().try_clone().unwrap();
+        framing::write_frame(&mut raw, REQ_V2, &[0u8; 4]).unwrap();
+    }
+    // read raw: the reply must be a bare v1 error frame, not RESP_V2
+    let mut reader =
+        std::io::BufReader::new(client.stream().try_clone().unwrap());
+    let t0 = Instant::now();
+    let (kind, payload) = loop {
+        match framing::read_frame(&mut reader, 1 << 20).unwrap() {
+            FrameEvent::Frame { kind, payload } => break (kind, payload),
+            FrameEvent::Eof => panic!("EOF before the error frame"),
+            FrameEvent::Idle => assert!(
+                t0.elapsed() < Duration::from_secs(10),
+                "no frame within 10s"
+            ),
+        }
+    };
+    let msg = ResponseMsg::decode(kind, &payload).unwrap();
+    let ResponseMsg::Error { code, .. } = msg else {
+        panic!("expected a bad-frame error, got {msg:?}");
+    };
+    assert_eq!(code, ERR_BAD_FRAME);
+    // the same connection still serves well-formed v2 traffic
+    let id = client.send(&RequestMsg::Ping).unwrap();
+    match client.recv().unwrap() {
+        MuxEvent::Response { request_id, msg } => {
+            assert_eq!(request_id, id);
+            assert!(matches!(msg, ResponseMsg::Pong));
+        }
+        other => panic!("unexpected event {other:?}"),
+    }
+    server.shutdown();
+}
+
+#[test]
+fn full_window_answers_busy_and_recycles_slots() {
+    // window of 2, every job sleeps 150 ms: the third send must bounce
+    // with a structured Busy frame carrying the cap, and once a slot
+    // frees the same id is admitted and completes
+    let server =
+        mux_server(2, 2, 0, Some("seed=5,latency=1,latency-ms=150"));
+    let mut client = MuxClient::connect(server.local_addr()).unwrap();
+    let msg = compress_req(24, 24, 1);
+    let a = client.send(&msg).unwrap();
+    let b = client.send(&msg).unwrap();
+    let c = client.send(&msg).unwrap();
+    match client.recv().unwrap() {
+        MuxEvent::Busy {
+            request_id,
+            max_inflight,
+        } => {
+            assert_eq!(request_id, c);
+            assert_eq!(max_inflight, 2);
+        }
+        other => panic!("expected Busy first, got {other:?}"),
+    }
+    // drain one completion, freeing a slot
+    let first_done = match client.recv().unwrap() {
+        MuxEvent::Response { request_id, msg } => {
+            assert!(matches!(msg, ResponseMsg::Compressed { .. }));
+            request_id
+        }
+        other => panic!("unexpected event {other:?}"),
+    };
+    assert!(first_done == a || first_done == b);
+    client.send_with_id(c, &msg).unwrap();
+    let mut remaining = vec![
+        if first_done == a { b } else { a },
+        c,
+    ];
+    while !remaining.is_empty() {
+        match client.recv().unwrap() {
+            MuxEvent::Response { request_id, msg } => {
+                assert!(
+                    matches!(msg, ResponseMsg::Compressed { .. }),
+                    "{msg:?}"
+                );
+                let pos = remaining
+                    .iter()
+                    .position(|&id| id == request_id)
+                    .expect("known id");
+                remaining.remove(pos);
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn v1_client_and_v2_wrapper_answer_byte_identical_payloads() {
+    // the bit-compat regression: a v1 frame on a v2-capable server (with
+    // the cache on) must answer the plain v1 frame shape, and the same
+    // request wrapped in v2 must carry the identical payload bytes
+    // behind its 9-byte prefix — cold, cached, v1, or v2
+    let server = mux_server(2, 32, 8 * 1024 * 1024, None);
+    let addr = server.local_addr();
+    let req = compress_req(48, 32, 11);
+    let (req_kind, req_payload) = req.encode();
+
+    let raw_v1_exchange = || {
+        let stream = std::net::TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(Duration::from_millis(100)))
+            .unwrap();
+        let mut w = stream.try_clone().unwrap();
+        framing::write_frame(&mut w, req_kind, &req_payload).unwrap();
+        let mut reader = std::io::BufReader::new(stream);
+        let t0 = Instant::now();
+        loop {
+            match framing::read_frame(&mut reader, 1 << 24).unwrap() {
+                FrameEvent::Frame { kind, payload } => {
+                    return (kind, payload)
+                }
+                FrameEvent::Eof => panic!("EOF before a frame"),
+                FrameEvent::Idle => assert!(
+                    t0.elapsed() < Duration::from_secs(10),
+                    "no frame within 10s"
+                ),
+            }
+        }
+    };
+
+    // cold v1 request: plain kind byte, no v2 prefix
+    let (k_cold, p_cold) = raw_v1_exchange();
+    assert_eq!(k_cold, RESP_COMPRESSED, "v1 client saw a v2 frame kind");
+    // same request through the v2 wrapper (a cache hit now): identical
+    // inner bytes behind the prefix
+    let mut mux = MuxClient::connect(addr).unwrap();
+    let id = mux.send(&req).unwrap();
+    let inner = match mux.recv().unwrap() {
+        MuxEvent::Response { request_id, msg } => {
+            assert_eq!(request_id, id);
+            let (inner_kind, inner_payload) = msg.encode();
+            assert_eq!(inner_kind, RESP_COMPRESSED);
+            inner_payload
+        }
+        other => panic!("unexpected event {other:?}"),
+    };
+    assert_eq!(
+        inner, p_cold,
+        "v2-wrapped response bytes diverge from the v1 frame"
+    );
+    // and a second v1 exchange (served from the cache) is bit-identical
+    // to the cold one
+    let (k_hit, p_hit) = raw_v1_exchange();
+    assert_eq!(k_hit, k_cold);
+    assert_eq!(p_hit, p_cold, "cache hit changed the v1 wire bytes");
+    // sanity: the v2 payload really is prefix + v1 payload
+    assert_eq!(V2_PREFIX_LEN, 9);
+    server.shutdown();
+}

@@ -9,8 +9,11 @@ use cordic_dct::image::ycbcr::Subsampling;
 use cordic_dct::image::GrayImage;
 use cordic_dct::image::color::ColorImage;
 use cordic_dct::serve::protocol::{
+    decode_v2_busy, decode_v2_request, decode_v2_response,
+    encode_v2_busy, encode_v2_request, encode_v2_response, v2_prefix,
     REQ_COMPRESS_COLOR, REQ_COMPRESS_GRAY, REQ_DECODE,
-    REQ_DECODE_SALVAGE, REQ_HISTEQ, REQ_PING, REQ_STATS,
+    REQ_DECODE_SALVAGE, REQ_HISTEQ, REQ_PING, REQ_STATS, REQ_V2,
+    RESP_V2, RESP_V2_BUSY, V2_PREFIX_LEN,
 };
 use cordic_dct::serve::{RequestMsg, ResponseMsg, ImagePayload};
 
@@ -238,6 +241,174 @@ fn bit_flip_fuzz_decodes_or_rejects_consistently() {
                     .expect("canonical re-encoding must parse");
                 assert_eq!(again, parsed);
             }
+        }
+    }
+}
+
+#[test]
+fn v2_request_id_roundtrips_across_the_id_space() {
+    // the id is opaque to the server — every u64 must survive the wire,
+    // including the extremes and random draws
+    let mut rng = Rng(0x5eed_0006);
+    let mut ids = vec![0u64, 1, u64::MAX, u64::MAX - 1, 1 << 63];
+    ids.extend((0..100).map(|_| rng.next()));
+    for (i, id) in ids.into_iter().enumerate() {
+        let lane = LANES[rng.below(4) as usize];
+        let msg = match i % 4 {
+            0 => RequestMsg::CompressGray {
+                image: rand_gray(&mut rng),
+                variant: VARIANTS[rng.below(3) as usize],
+                lane,
+                want_psnr: rng.below(2) == 1,
+            },
+            1 => RequestMsg::Decode {
+                container: rng.bytes(rng.below(128) as usize),
+                lane,
+            },
+            2 => RequestMsg::Stats,
+            _ => RequestMsg::Ping,
+        };
+        let (k, p) = encode_v2_request(id, &msg);
+        assert_eq!(k, REQ_V2);
+        let (back_id, back) = decode_v2_request(&p)
+            .unwrap_or_else(|e| panic!("id {id:#x} roundtrip: {e:#}"));
+        assert_eq!(back_id, id);
+        assert_eq!(back, msg);
+    }
+}
+
+#[test]
+fn v2_response_and_busy_roundtrip() {
+    let mut rng = Rng(0x5eed_0007);
+    for i in 0..100 {
+        let id = rng.next();
+        let msg = match i % 3 {
+            0 => ResponseMsg::Compressed {
+                lane: LANES[rng.below(4) as usize],
+                psnr_db: (rng.below(2) == 1).then(|| 41.5),
+                container: rng.bytes(rng.below(256) as usize),
+            },
+            1 => ResponseMsg::Error {
+                code: rng.below(30) as u16,
+                message: format!("e{}", rng.below(100)),
+            },
+            _ => ResponseMsg::Overloaded,
+        };
+        let (k, p) = encode_v2_response(id, &msg);
+        assert_eq!(k, RESP_V2);
+        let (back_id, back) = decode_v2_response(&p).unwrap();
+        assert_eq!((back_id, back), (id, msg));
+
+        let cap = rng.below(1 << 16) as u32;
+        let (k, p) = encode_v2_busy(id, cap);
+        assert_eq!(k, RESP_V2_BUSY);
+        assert_eq!(decode_v2_busy(&p).unwrap(), (id, cap));
+    }
+}
+
+#[test]
+fn v2_truncation_sweep_over_the_prefix_and_beyond() {
+    // every cut inside the 9-byte prefix must fail at the prefix stage;
+    // every cut inside the inner payload must fail the inner decode —
+    // both as clean errors, never a panic or an out-of-bounds read
+    let mut rng = Rng(0x5eed_0008);
+    let msg = RequestMsg::CompressGray {
+        image: rand_gray(&mut rng),
+        variant: Variant::Cordic,
+        lane: Lane::Cpu,
+        want_psnr: true,
+    };
+    let (_, p) = encode_v2_request(0xDEAD_BEEF_CAFE_F00D, &msg);
+    for cut in 0..V2_PREFIX_LEN {
+        assert!(
+            v2_prefix(&p[..cut]).is_err(),
+            "{cut}-byte prefix parsed"
+        );
+    }
+    for cut in V2_PREFIX_LEN..p.len() {
+        // the prefix itself is intact at these cuts...
+        let (id, kind, inner) = v2_prefix(&p[..cut]).unwrap();
+        assert_eq!(id, 0xDEAD_BEEF_CAFE_F00D);
+        assert_eq!(kind, REQ_COMPRESS_GRAY);
+        assert_eq!(inner.len(), cut - V2_PREFIX_LEN);
+        // ...but the truncated inner request must not parse
+        assert!(
+            decode_v2_request(&p[..cut]).is_err(),
+            "inner request parsed from a {cut}-byte v2 frame"
+        );
+    }
+    assert!(decode_v2_request(&p).is_ok());
+}
+
+#[test]
+fn v2_header_bit_flip_fuzz_never_panics() {
+    // flip every bit of the prefix (and the first inner bytes): decode
+    // must answer Ok or Err, never panic. A flipped id byte still
+    // parses — with a different id, which is fine: the id is opaque.
+    let mut rng = Rng(0x5eed_0009);
+    let msg = RequestMsg::CompressGray {
+        image: rand_gray(&mut rng),
+        variant: Variant::Cordic,
+        lane: Lane::Cpu,
+        want_psnr: false,
+    };
+    let (_, p) = encode_v2_request(7, &msg);
+    for byte in 0..p.len().min(V2_PREFIX_LEN + 32) {
+        for bit in 0..8 {
+            let mut q = p.clone();
+            q[byte] ^= 1 << bit;
+            if let Ok((id, parsed)) = decode_v2_request(&q) {
+                // surviving parses must re-encode to a fixed point
+                let (_, p2) = encode_v2_request(id, &parsed);
+                let (id2, again) = decode_v2_request(&p2)
+                    .expect("canonical re-encoding must parse");
+                assert_eq!((id2, again), (id, parsed));
+            }
+        }
+    }
+    // busy payloads too: 12 bytes, all flips
+    let (_, busy) = encode_v2_busy(99, 32);
+    for byte in 0..busy.len() {
+        for bit in 0..8 {
+            let mut q = busy.clone();
+            q[byte] ^= 1 << bit;
+            let _ = decode_v2_busy(&q);
+        }
+    }
+}
+
+#[test]
+fn mixed_v1_v2_frames_do_not_desync_the_decoders() {
+    // a v1 payload handed to the v2 decoder (and a v2 payload handed to
+    // the v1 decoder) must fail or parse cleanly — the mixed-protocol
+    // case a confused client can always produce
+    let mut rng = Rng(0x5eed_000a);
+    for _ in 0..500 {
+        let msg = RequestMsg::CompressGray {
+            image: rand_gray(&mut rng),
+            variant: VARIANTS[rng.below(3) as usize],
+            lane: LANES[rng.below(4) as usize],
+            want_psnr: rng.below(2) == 1,
+        };
+        // v1 payload through the v2 parser: the first 9 bytes become a
+        // bogus id + inner kind; must never panic
+        let (v1_kind, v1_payload) = msg.encode();
+        let _ = decode_v2_request(&v1_payload);
+        let _ = decode_v2_response(&v1_payload);
+        let _ = decode_v2_busy(&v1_payload);
+        // v2 payload through the v1 parsers, under every v1 kind byte
+        let (_, v2_payload) = encode_v2_request(rng.next(), &msg);
+        for kind in [
+            v1_kind,
+            REQ_COMPRESS_COLOR,
+            REQ_DECODE,
+            REQ_HISTEQ,
+            REQ_DECODE_SALVAGE,
+            REQ_PING,
+            REQ_STATS,
+        ] {
+            let _ = RequestMsg::decode(kind, &v2_payload);
+            let _ = ResponseMsg::decode(kind, &v2_payload);
         }
     }
 }

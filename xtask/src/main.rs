@@ -125,12 +125,14 @@ fn doc_md(check: bool) -> i32 {
 
 /// The `microbench_hotpath` rows the perf-trend gate watches: the
 /// paper's batched cordic transform, the fused quantize→zigzag stage,
-/// and the entropy decoder. Informational rows (16-wide figures, PJRT
-/// splits) are deliberately not gated.
-const KEY_LABELS: [&str; 3] = [
+/// the entropy decoder, and the serve tier's response-cache hit path.
+/// Informational rows (16-wide figures, PJRT splits) are deliberately
+/// not gated.
+const KEY_LABELS: [&str; 4] = [
     "fwd cordic-loeffler batched",
     "quantize+zigzag batched",
     "entropy decode image",
+    "serve cache hit",
 ];
 
 /// One gated row after comparison.
@@ -419,7 +421,8 @@ mod tests {
   {{"label":"extract all blocks","cpu_ms":0.5,"cpu_mean_ms":0.6}},
   {{"label":"fwd cordic-loeffler batched","cpu_ms":{cordic},"unit":"block"}},
   {{"label":"quantize+zigzag batched","cpu_ms":{quant}}},
-  {{"label":"entropy decode image","cpu_ms":{decode},"mb_per_s":100}}
+  {{"label":"entropy decode image","cpu_ms":{decode},"mb_per_s":100}},
+  {{"label":"serve cache hit","cpu_ms":0.2,"unit":"req"}}
 ]}}"#
         )
     }
@@ -427,7 +430,7 @@ mod tests {
     #[test]
     fn scanner_extracts_labels_and_medians() {
         let rows = bench_rows(&doc(1.25, 0.08, 2.5));
-        assert_eq!(rows.len(), 4);
+        assert_eq!(rows.len(), 5);
         assert_eq!(rows[1].0, "fwd cordic-loeffler batched");
         assert!((rows[1].1 - 1.25).abs() < 1e-12);
         assert_eq!(rows[3].0, "entropy decode image");
